@@ -1,0 +1,62 @@
+//! Accuracy-vs-width sweep (a miniature Fig. 6): for one model/dataset,
+//! print accuracy for every strategy at every compiled W, next to the
+//! exact ideal and the sampling rate.
+//!
+//! ```bash
+//! cargo run --release --example accuracy_sweep -- [model] [dataset]
+//! ```
+
+use anyhow::Result;
+
+use aes_spmm::quant::Precision;
+use aes_spmm::runtime::{accuracy, run_forward, Dataset, Engine, ForwardRequest, Weights};
+use aes_spmm::sampling::{sampling_rate, Strategy};
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "gcn".into());
+    let dataset = std::env::args().nth(2).unwrap_or_else(|| "proteins".into());
+    let artifacts = "artifacts";
+
+    let engine = Engine::new(artifacts)?;
+    let ds = Dataset::load(artifacts, &dataset)?;
+    let weights = Weights::load(artifacts, &model, &dataset)?;
+    println!(
+        "{model} on {dataset}: ideal accuracy {:.4} (exact aggregation)",
+        weights.ideal_acc
+    );
+    println!(
+        "\n{:>6} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "W", "afs", "sfs", "aes", "aes+int8", "aes rate"
+    );
+
+    for &w in &engine.manifest().widths.clone() {
+        let mut cells = Vec::new();
+        for (strategy, precision) in [
+            (Strategy::Afs, Precision::F32),
+            (Strategy::Sfs, Precision::F32),
+            (Strategy::Aes, Precision::F32),
+            (Strategy::Aes, Precision::U8Device),
+        ] {
+            let r = run_forward(
+                &engine,
+                &ds,
+                &weights,
+                &ForwardRequest {
+                    model: model.clone(),
+                    dataset: dataset.clone(),
+                    width: Some(w),
+                    strategy,
+                    precision,
+                },
+                None,
+            )?;
+            cells.push(accuracy(&ds, &r.logits)?);
+        }
+        let rate = sampling_rate(&ds.csr_gcn, w, Strategy::Aes);
+        println!(
+            "{:>6} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>11.1}%",
+            w, cells[0], cells[1], cells[2], cells[3], rate * 100.0
+        );
+    }
+    Ok(())
+}

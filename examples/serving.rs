@@ -1,0 +1,131 @@
+//! End-to-end serving driver (the repo's required E2E validation): start
+//! the coordinator over every dataset/model, replay a mixed request
+//! stream against it, and report latency/throughput/batching metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving [-- <requests>]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use aes_spmm::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, RouteKey, SubmitError,
+};
+use aes_spmm::quant::Precision;
+use aes_spmm::rng::Pcg32;
+use aes_spmm::runtime::Engine;
+use aes_spmm::sampling::Strategy;
+
+fn main() -> Result<()> {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let artifacts = "artifacts";
+
+    let engine = Arc::new(Engine::new(artifacts)?);
+    // Serve the small datasets (low-latency tier) plus one large graph.
+    let datasets: Vec<String> =
+        ["cora", "pubmed", "arxiv", "proteins"].iter().map(|s| s.to_string()).collect();
+    let models = vec!["gcn".to_string(), "sage".to_string()];
+    let store = Arc::new(ModelStore::load(artifacts, &datasets, &models)?);
+
+    let coord = Coordinator::start(
+        engine.clone(),
+        store.clone(),
+        CoordinatorConfig {
+            workers: 3,
+            queue_depth: 512,
+            batcher: BatcherConfig { max_batch: 32, max_delay: Duration::from_millis(2) },
+        },
+    );
+
+    // Warm the executable cache so steady-state latency is measured: one
+    // compile per (model, dataset, width, precision) — strategies share
+    // the compiled artifact (runtime scalar input).
+    println!("warming artifact cache (12 artifacts)...");
+    let widths = [64usize];
+    for ds in &datasets {
+        for m in &models {
+            for &w in &widths {
+                for precision in [Precision::F32, Precision::U8Device] {
+                    let key = RouteKey {
+                        model: m.clone(),
+                        dataset: ds.clone(),
+                        width: Some(w),
+                        strategy: Strategy::Aes,
+                        precision,
+                    };
+                    coord.infer(key, vec![0])?;
+                }
+            }
+        }
+    }
+
+    println!("replaying {n_requests} mixed requests...");
+    let mut rng = Pcg32::new(99);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut busy_retries = 0usize;
+    for _ in 0..n_requests {
+        let ds = datasets[rng.usize_below(datasets.len())].clone();
+        let n = store.dataset(&ds)?.n;
+        let key = RouteKey {
+            model: models[rng.usize_below(models.len())].clone(),
+            dataset: ds,
+            width: Some(widths[rng.usize_below(widths.len())]),
+            strategy: [Strategy::Afs, Strategy::Sfs, Strategy::Aes][rng.usize_below(3)],
+            precision: if rng.f32() < 0.5 { Precision::U8Device } else { Precision::F32 },
+        };
+        let nodes: Vec<usize> = (0..4).map(|_| rng.usize_below(n)).collect();
+        loop {
+            match coord.submit(key.clone(), nodes.clone()) {
+                Ok((_, rx)) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(SubmitError::Busy) => {
+                    busy_retries += 1;
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                Err(e) => anyhow::bail!("submit: {e}"),
+            }
+        }
+    }
+
+    let mut ok = 0usize;
+    for rx in pending {
+        let resp = rx.recv()?;
+        match resp.error {
+            None => ok += 1,
+            Some(e) => eprintln!("request {} failed: {e}", resp.id),
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    println!("\n== serving results ==");
+    println!("requests: {ok}/{n_requests} ok, {} rejected transiently", busy_retries);
+    println!(
+        "wall {:?} | throughput {:.1} req/s | {} forward passes (amortization {:.1} req/exec)",
+        wall,
+        ok as f64 / wall.as_secs_f64(),
+        snap.batches,
+        coord.metrics().amortization(),
+    );
+    println!(
+        "latency p50 {:?} p99 {:?} mean {:?}",
+        snap.latency_p50, snap.latency_p99, snap.latency_mean
+    );
+    println!(
+        "stage p50: queue {:?} | feature load {:?} | execute {:?}",
+        snap.queue_wait_p50, snap.load_p50, snap.exec_p50
+    );
+    println!("\ntop routes:");
+    let mut routes: Vec<_> = snap.per_route.iter().collect();
+    routes.sort_by_key(|(_, c)| std::cmp::Reverse(**c));
+    for (route, count) in routes.iter().take(10) {
+        println!("  {route}: {count} executions");
+    }
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT pipeline: datasets → trained weights → HLO-text artifacts.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Python never runs again after this: the rust
+coordinator loads the HLO text through PJRT and the .nbt tensors directly.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+pinned xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifact matrix (DESIGN.md §2):
+    model_{m}_{d}_w{W}.hlo.txt    sampled forward, strategy runtime scalar
+    qmodel_{m}_{d}_w{W}.hlo.txt   INT8-feature variant (on-device dequant)
+    baseline_{m}_{d}.hlo.txt      exact segment-sum forward (cuSPARSE role)
+    data_{d}.nbt                  graph + features (+ quantized) + labels
+    weights_{m}_{d}.nbt           trained parameters
+    manifest.json                 input signatures + ideal accuracies
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, model as M, train as T
+from .kernels import ref
+from .nbt import read_nbt, write_nbt
+
+WIDTHS = [16, 32, 64, 128, 256]
+MODELS = ["gcn", "sage"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(entries):
+    """Manifest input signature: list of {name, shape, dtype}."""
+    return [
+        {"name": n, "shape": list(map(int, s.shape)), "dtype": str(s.dtype)}
+        for n, s in entries
+    ]
+
+
+def lower_artifacts_for(model_name, ds_name, data, out_dir, widths=WIDTHS):
+    """Lower baseline + sampled + quantized artifacts for one (model, dataset)."""
+    n, nnz, feats, classes = (int(t) for t in data["meta"])
+    val_key = "val_gcn" if model_name == "gcn" else "val_ones"
+    porder = M.param_order(model_name)
+    # Parameter shapes from a throwaway init (values irrelevant to lowering).
+    p0 = (M.init_gcn if model_name == "gcn" else M.init_sage)(
+        jax.random.PRNGKey(0), feats, M.HIDDEN, classes
+    )
+    pspecs = [(k, _spec(p0[k].shape, jnp.float32)) for k in porder]
+
+    csr = [
+        ("row_ptr", _spec((n + 1,), jnp.int32)),
+        ("col_ind", _spec((nnz,), jnp.int32)),
+        (val_key, _spec((nnz,), jnp.float32)),
+    ]
+    entries = {}
+
+    # --- baseline (exact, segment-sum; plays cuSPARSE) -----------------
+    # No row_ptr input: its values are dead in the GCN graph and XLA would
+    # prune the parameter (see model.forward_exact_nrows docstring).
+    def fwd_exact(col_ind, val, row_ids, x, *ps):
+        params = dict(zip(porder, ps))
+        return (M.forward_exact_nrows(model_name, params, n, col_ind, val, row_ids, x),)
+
+    base_in = csr[1:] + [
+        ("row_ids", _spec((nnz,), jnp.int32)),
+        ("feat", _spec((n, feats), jnp.float32)),
+    ] + pspecs
+    lowered = jax.jit(fwd_exact).lower(*[s for _, s in base_in])
+    name = f"baseline_{model_name}_{ds_name}"
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries[name] = {"inputs": _sig(base_in), "kind": "baseline"}
+
+    for w in widths:
+        # --- sampled (AES/AFS/SFS via runtime strategy scalar) ---------
+        def fwd_sampled(row_ptr, col_ind, val, x, strategy, *ps, _w=w):
+            params = dict(zip(porder, ps))
+            return (
+                M.forward_sampled(
+                    model_name, params, row_ptr, col_ind, val, x, strategy, width=_w
+                ),
+            )
+
+        samp_in = csr + [
+            ("feat", _spec((n, feats), jnp.float32)),
+            ("strategy", _spec((1,), jnp.int32)),
+        ] + pspecs
+        lowered = jax.jit(fwd_sampled).lower(*[s for _, s in samp_in])
+        name = f"model_{model_name}_{ds_name}_w{w}"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries[name] = {"inputs": _sig(samp_in), "kind": "sampled", "width": w}
+
+        # --- quantized input variant ------------------------------------
+        def fwd_q(row_ptr, col_ind, val, xq, qmin, qmax, strategy, *ps, _w=w):
+            params = dict(zip(porder, ps))
+            return (
+                M.forward_sampled_quant(
+                    model_name, params, row_ptr, col_ind, val, xq, qmin, qmax,
+                    strategy, width=_w,
+                ),
+            )
+
+        q_in = csr + [
+            ("featq", _spec((n, feats), jnp.uint8)),
+            ("qmin", _spec((1,), jnp.float32)),
+            ("qmax", _spec((1,), jnp.float32)),
+            ("strategy", _spec((1,), jnp.int32)),
+        ] + pspecs
+        lowered = jax.jit(fwd_q).lower(*[s for _, s in q_in])
+        name = f"qmodel_{model_name}_{ds_name}_w{w}"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries[name] = {"inputs": _sig(q_in), "kind": "quantized", "width": w}
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--datasets", nargs="*", default=list(datagen.SPECS))
+    ap.add_argument("--models", nargs="*", default=MODELS)
+    ap.add_argument("--widths", nargs="*", type=int, default=WIDTHS)
+    ap.add_argument("--epochs", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"datasets": {}, "artifacts": {}, "widths": args.widths}
+    t0 = time.time()
+    for ds_name in args.datasets:
+        spec = datagen.SPECS[ds_name]
+        data_path = os.path.join(args.out_dir, f"data_{ds_name}.nbt")
+        if os.path.exists(data_path):
+            data = read_nbt(data_path)
+            print(f"[{time.time()-t0:6.1f}s] {ds_name}: reusing {data_path}")
+        else:
+            data = datagen.generate(spec, seed=args.seed)
+            q, qmin, qmax = ref.quantize(data["feat"])
+            data["featq"] = q
+            data["qrange"] = np.array([qmin, qmax], dtype=np.float32)
+            write_nbt(data_path, data)
+            print(
+                f"[{time.time()-t0:6.1f}s] {ds_name}: generated "
+                f"n={spec.n} nnz={int(data['meta'][1])}"
+            )
+        manifest["datasets"][ds_name] = {
+            "n": int(data["meta"][0]),
+            "nnz": int(data["meta"][1]),
+            "feats": int(data["meta"][2]),
+            "classes": int(data["meta"][3]),
+            "scale": spec.scale,
+            "paper_nodes": spec.paper_nodes,
+            "paper_avg_deg": spec.paper_avg_deg,
+            "ideal_acc": {},
+        }
+
+        for model_name in args.models:
+            wpath = os.path.join(args.out_dir, f"weights_{model_name}_{ds_name}.nbt")
+            if os.path.exists(wpath):
+                stored = read_nbt(wpath)
+                params = {k: v for k, v in stored.items() if k != "ideal_acc"}
+                acc = float(stored["ideal_acc"][0])
+                print(f"[{time.time()-t0:6.1f}s]   {model_name}: reusing weights (acc={acc:.4f})")
+            else:
+                params, acc = T.train(
+                    model_name, data, epochs=args.epochs, seed=args.seed
+                )
+                stored = dict(params)
+                stored["ideal_acc"] = np.array([acc], dtype=np.float32)
+                write_nbt(wpath, stored)
+                print(f"[{time.time()-t0:6.1f}s]   {model_name}: trained, test acc={acc:.4f}")
+            manifest["datasets"][ds_name]["ideal_acc"][model_name] = acc
+
+            entries = lower_artifacts_for(
+                model_name, ds_name, data, args.out_dir, widths=args.widths
+            )
+            manifest["artifacts"].update(entries)
+            print(f"[{time.time()-t0:6.1f}s]   {model_name}: lowered {len(entries)} artifacts")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[{time.time()-t0:6.1f}s] manifest written — done")
+
+
+if __name__ == "__main__":
+    main()

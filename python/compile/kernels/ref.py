@@ -1,0 +1,167 @@
+"""Pure-numpy/jnp oracles for the AES-SpMM kernels.
+
+This module pins the *exact* semantics of the paper's adaptive edge
+sampling (Table 1 + Eq. 3 + Algorithm 1) in slow, obviously-correct code.
+The Pallas kernels (``aes_spmm.py``) and the rust planner
+(``rust/src/sampling``) must match these bit-for-bit on integer outputs and
+to float tolerance on products.
+
+Strategy encoding (runtime scalar in the compiled artifacts):
+    0 = AFS  (ES-SpMM accuracy-first: N=1, cnt=W)
+    1 = SFS  (ES-SpMM speed-first:   N=W, cnt=1 -> first W elements)
+    2 = AES  (the paper's adaptive Table 1)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PRIME = 1429  # Eq. 3's prime_num
+
+AFS, SFS, AES = 0, 1, 2
+STRATEGY_NAMES = {AFS: "afs", SFS: "sfs", AES: "aes"}
+
+
+def strategy_params(row_nnz: int, width: int, strategy: int) -> tuple[int, int]:
+    """Return (N, sample_cnt) for one row.
+
+    ``N`` is the number of consecutive elements per sample, ``sample_cnt``
+    the number of samples. Table 1 of the paper, plus the implementation
+    clamps it calls out (N >= 1, sample_cnt <= W), plus the universal
+    row_nnz <= W fast path ("all elements in the row are selected").
+    """
+    if row_nnz <= width:
+        return row_nnz, 1
+    if strategy == AFS:
+        return 1, width
+    if strategy == SFS:
+        return width, 1
+    if strategy != AES:
+        raise ValueError(f"unknown strategy {strategy}")
+    # Table 1: thresholds on R = row_nnz / W, expressed integrally.
+    if row_nnz <= 2 * width:
+        n, cnt = width // 4, 4
+    elif row_nnz <= 36 * width:
+        n, cnt = width // 8, 8
+    elif row_nnz <= 54 * width:
+        n, cnt = width // 16, 16
+    else:
+        n, cnt = width // 32, 32
+    return max(n, 1), min(cnt, width)
+
+
+def start_index(sample_idx: int, row_nnz: int, n: int) -> int:
+    """Eq. 3: start_ind = (i * prime) mod (row_nnz - N + 1)."""
+    return (sample_idx * PRIME) % (row_nnz - n + 1)
+
+
+def sample_row(row_nnz: int, width: int, strategy: int) -> np.ndarray:
+    """Return the within-row source offsets for every ELL slot of one row.
+
+    Output shape ``(width,)``; invalid (padding) slots hold -1. Slot layout
+    follows Algorithm 1: sample ``s`` writes its ``j``-th consecutive
+    element into slot ``s + j * sample_cnt``.
+    """
+    n, cnt = strategy_params(row_nnz, width, strategy)
+    slots = min(n * cnt, width)
+    out = np.full(width, -1, dtype=np.int64)
+    for k in range(slots):
+        s = k % cnt
+        j = k // cnt
+        out[k] = start_index(s, row_nnz, n) + j
+    return out
+
+
+def sample_ell(
+    row_ptr: np.ndarray,
+    col_ind: np.ndarray,
+    val: np.ndarray,
+    width: int,
+    strategy: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build the sampled ELL form of a CSR matrix.
+
+    Returns ``(ell_val [n,W] f32, ell_col [n,W] i32, slots [n] i32)`` where
+    padding slots have val 0 / col 0, and ``slots[i]`` counts valid slots.
+    """
+    n_rows = row_ptr.shape[0] - 1
+    ell_val = np.zeros((n_rows, width), dtype=np.float32)
+    ell_col = np.zeros((n_rows, width), dtype=np.int32)
+    slots = np.zeros(n_rows, dtype=np.int32)
+    for i in range(n_rows):
+        base = int(row_ptr[i])
+        nnz = int(row_ptr[i + 1]) - base
+        offs = sample_row(nnz, width, strategy)
+        valid = offs >= 0
+        slots[i] = int(valid.sum())
+        src = base + offs[valid]
+        ell_val[i, : slots[i]] = val[src]
+        ell_col[i, : slots[i]] = col_ind[src]
+    return ell_val, ell_col, slots
+
+
+def spmm_ell(ell_val: np.ndarray, ell_col: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Dense output C[i,:] = sum_k ell_val[i,k] * B[ell_col[i,k],:]."""
+    n, width = ell_val.shape
+    out = np.zeros((n, b.shape[1]), dtype=np.float32)
+    for k in range(width):
+        out += ell_val[:, k : k + 1] * b[ell_col[:, k], :]
+    return out
+
+
+def aes_spmm(row_ptr, col_ind, val, b, width, strategy, mean=False):
+    """Fused oracle: sample then multiply (Algorithm 1 end to end).
+
+    ``mean=True`` divides each row by its valid slot count (GraphSAGE's
+    mean aggregator over the sampled neighborhood).
+    """
+    ell_val, ell_col, slots = sample_ell(row_ptr, col_ind, val, width, strategy)
+    out = spmm_ell(ell_val, ell_col, b)
+    if mean:
+        out /= np.maximum(slots, 1)[:, None].astype(np.float32)
+    return out
+
+
+def csr_spmm(row_ptr, col_ind, val, b):
+    """Exact (non-sampled) CSR SpMM — the cuSPARSE-role oracle."""
+    n = row_ptr.shape[0] - 1
+    out = np.zeros((n, b.shape[1]), dtype=np.float32)
+    for i in range(n):
+        lo, hi = int(row_ptr[i]), int(row_ptr[i + 1])
+        for e in range(lo, hi):
+            out[i] += val[e] * b[col_ind[e]]
+    return out
+
+
+def quantize(x: np.ndarray, bits: int = 8) -> tuple[np.ndarray, float, float]:
+    """Eq. 1: scalar quantization of a feature tensor to ``bits`` levels."""
+    x_min = float(x.min())
+    x_max = float(x.max())
+    levels = (1 << bits) - 1
+    scale = (x_max - x_min) or 1.0
+    q = np.floor((x - x_min) / scale * levels)
+    q = np.clip(q, 0, levels)
+    return q.astype(np.uint8 if bits <= 8 else np.uint16), x_min, x_max
+
+
+def dequantize(q: np.ndarray, x_min: float, x_max: float, bits: int = 8) -> np.ndarray:
+    """Eq. 2: recover approximate features from quantized values."""
+    levels = (1 << bits) - 1
+    return (q.astype(np.float32) * ((x_max - x_min) / levels) + x_min).astype(
+        np.float32
+    )
+
+
+def sampling_rate(row_ptr: np.ndarray, width: int, strategy: int) -> float:
+    """Fraction of edges kept by sampling (Fig. 5's per-graph statistic).
+
+    Counts *slots* (draws), capped at row_nnz per row so overlapping draws
+    never report a rate above 1.
+    """
+    deg = np.diff(row_ptr).astype(np.int64)
+    kept = 0
+    for nnz in deg:
+        n, cnt = strategy_params(int(nnz), width, strategy)
+        kept += min(min(n * cnt, width), int(nnz))
+    total = int(deg.sum())
+    return kept / total if total else 1.0

@@ -1,0 +1,182 @@
+"""Layer-2: GCN and GraphSAGE forward passes in JAX, calling the L1 kernels.
+
+Three aggregation backends share one model body:
+
+* ``sampled``  — the AES-SpMM path: ``aes_sample`` once, ``spmm_ell`` per
+  layer. The Eq. 3 hash is deterministic, so re-sampling inside each layer
+  (as the fused GPU kernel does per launch) would select the identical
+  edge set; sampling once is semantically equal and cheaper (DESIGN.md
+  §Perf L2).
+* ``exact``    — segment-sum CSR SpMM; the cuSPARSE-role baseline and the
+  aggregation used for build-time training.
+* ``fused``    — the single-launch ``aes_spmm`` kernel, used by kernel
+  micro-benches and the fidelity tests.
+
+Models mirror the paper's setup (2-layer GCN [21], 2-layer mean-aggregator
+GraphSAGE [22]); weights are pytrees of plain jnp arrays so they can be
+shipped to rust as .nbt tensors and passed to the AOT artifact as runtime
+parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.aes_spmm import aes_sample, aes_spmm, spmm_ell
+from .kernels.dequant import dequant
+
+HIDDEN = 64
+
+
+# --------------------------------------------------------------------------
+# Aggregation backends
+# --------------------------------------------------------------------------
+
+
+def agg_exact(row_ptr, col_ind, val, row_ids, x):
+    """Exact CSR SpMM via segment-sum: out[i] = sum_e val[e] * x[col[e]]."""
+    n = row_ptr.shape[0] - 1
+    contrib = val[:, None] * jnp.take(x, col_ind, axis=0)
+    return jax.ops.segment_sum(contrib, row_ids, num_segments=n)
+
+
+def agg_exact_mean(row_ptr, col_ind, row_ids, x):
+    """Exact neighbor mean (GraphSAGE aggregator, training path)."""
+    n = row_ptr.shape[0] - 1
+    deg = (row_ptr[1:] - row_ptr[:-1]).astype(x.dtype)
+    s = jax.ops.segment_sum(jnp.take(x, col_ind, axis=0), row_ids, num_segments=n)
+    return s / jnp.maximum(deg, 1.0)[:, None]
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+
+def init_gcn(key, in_dim, hidden, classes):
+    k0, k1 = jax.random.split(key)
+    s0 = jnp.sqrt(2.0 / in_dim)
+    s1 = jnp.sqrt(2.0 / hidden)
+    return {
+        "w0": jax.random.normal(k0, (in_dim, hidden), jnp.float32) * s0,
+        "b0": jnp.zeros((hidden,), jnp.float32),
+        "w1": jax.random.normal(k1, (hidden, classes), jnp.float32) * s1,
+        "b1": jnp.zeros((classes,), jnp.float32),
+    }
+
+
+def init_sage(key, in_dim, hidden, classes):
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    s0 = jnp.sqrt(2.0 / in_dim)
+    s1 = jnp.sqrt(2.0 / hidden)
+    return {
+        "w0_self": jax.random.normal(k0, (in_dim, hidden), jnp.float32) * s0,
+        "w0_neigh": jax.random.normal(k1, (in_dim, hidden), jnp.float32) * s0,
+        "b0": jnp.zeros((hidden,), jnp.float32),
+        "w1_self": jax.random.normal(k2, (hidden, classes), jnp.float32) * s1,
+        "w1_neigh": jax.random.normal(k3, (hidden, classes), jnp.float32) * s1,
+        "b1": jnp.zeros((classes,), jnp.float32),
+    }
+
+
+# Deterministic parameter order for the AOT artifact input signature.
+GCN_PARAM_ORDER = ["w0", "b0", "w1", "b1"]
+SAGE_PARAM_ORDER = ["w0_self", "w0_neigh", "b0", "w1_self", "w1_neigh", "b1"]
+
+
+def param_order(model: str):
+    return GCN_PARAM_ORDER if model == "gcn" else SAGE_PARAM_ORDER
+
+
+# --------------------------------------------------------------------------
+# Model bodies, generic over the aggregation closure
+# --------------------------------------------------------------------------
+
+
+def gcn_forward(params, x, agg):
+    """2-layer GCN: logits = Â relu(Â X W0 + b0) W1 + b1 (Kipf & Welling)."""
+    h = jax.nn.relu(agg(x @ params["w0"]) + params["b0"])
+    return agg(h @ params["w1"]) + params["b1"]
+
+
+def sage_forward(params, x, agg_mean):
+    """2-layer mean-aggregator GraphSAGE: h' = relu(W_s h + W_n mean(N(h)))."""
+    m = agg_mean(x)
+    h = jax.nn.relu(x @ params["w0_self"] + m @ params["w0_neigh"] + params["b0"])
+    m = agg_mean(h)
+    return h @ params["w1_self"] + m @ params["w1_neigh"] + params["b1"]
+
+
+# --------------------------------------------------------------------------
+# Entry points used by training and AOT lowering
+# --------------------------------------------------------------------------
+
+
+def forward_exact(model, params, row_ptr, col_ind, val, row_ids, x):
+    """Exact-aggregation forward; the training path and cuSPARSE-role artifact."""
+    if model == "gcn":
+        return gcn_forward(params, x, lambda h: agg_exact(row_ptr, col_ind, val, row_ids, h))
+    return sage_forward(params, x, lambda h: agg_exact_mean(row_ptr, col_ind, row_ids, h))
+
+
+def forward_exact_nrows(model, params, n, col_ind, val, row_ids, x):
+    """Exact forward without `row_ptr` in the signature.
+
+    The AOT baseline artifact uses this variant: for GCN, `row_ptr`'s
+    *values* are never read (only its length), so XLA prunes the parameter
+    from the compiled module and the rust-side positional inputs would
+    misalign. Degrees come from a segment-sum over `row_ids` instead.
+    """
+    agg = lambda h: jax.ops.segment_sum(
+        val[:, None] * jnp.take(h, col_ind, axis=0), row_ids, num_segments=n
+    )
+    if model == "gcn":
+        return gcn_forward(params, x, agg)
+    # SAGE receives val_ones, so segment_sum(val) IS the degree — this
+    # keeps `val` value-used (XLA would prune an ones_like-only operand).
+    deg = jax.ops.segment_sum(val, row_ids, num_segments=n)
+
+    def agg_mean(h):
+        return agg(h) / jnp.maximum(deg, 1.0)[:, None]
+
+    return sage_forward(params, x, agg_mean)
+
+
+def forward_sampled(model, params, row_ptr, col_ind, val, x, strategy, *, width):
+    """AES/AFS/SFS-sampled forward — the artifact behind `model_*.hlo.txt`.
+
+    Samples the graph once with the L1 Pallas kernel, then runs both GNN
+    layers over the resulting ELL tile.
+    """
+    ell_val, ell_col, slots = aes_sample(row_ptr, col_ind, val, strategy, width=width)
+    if model == "gcn":
+        return gcn_forward(params, x, lambda h: spmm_ell(ell_val, ell_col, h))
+    inv = 1.0 / jnp.maximum(slots, 1).astype(jnp.float32)
+
+    def agg_mean(h):
+        return spmm_ell(ell_val, ell_col, h) * inv[:, None]
+
+    return sage_forward(params, x, agg_mean)
+
+
+def forward_sampled_quant(
+    model, params, row_ptr, col_ind, val, xq, x_min, x_max, strategy, *, width
+):
+    """Quantized-input variant: dequantize on device (Eq. 2), then forward."""
+    x = dequant(xq, x_min, x_max)
+    return forward_sampled(model, params, row_ptr, col_ind, val, x, strategy, width=width)
+
+
+def forward_fused(model, params, row_ptr, col_ind, val, x, strategy, *, width):
+    """Forward through the fused single-launch aes_spmm kernel (per layer).
+
+    Mirrors the paper's GPU execution exactly (sampling re-runs in every
+    kernel launch); used by fidelity tests to confirm it equals
+    ``forward_sampled``.
+    """
+    if model == "gcn":
+        agg = lambda h: aes_spmm(row_ptr, col_ind, val, h, strategy, width=width)
+        return gcn_forward(params, x, agg)
+    agg = lambda h: aes_spmm(row_ptr, col_ind, val, h, strategy, width=width, mean=True)
+    return sage_forward(params, x, agg)

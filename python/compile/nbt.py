@@ -1,0 +1,83 @@
+"""NBT — a tiny named-binary-tensor container shared with the rust side.
+
+One file holds an ordered set of named tensors. Layout (little endian):
+
+    magic   b"NBTC"
+    u32     tensor count
+    per tensor:
+        u16     name length, then name bytes (utf-8)
+        u32     dtype code (0=f32, 1=i32, 2=u8, 3=i64, 4=f64, 5=i8)
+        u32     ndim, then ndim * u64 dims
+        u64     payload byte length, then raw row-major LE payload
+
+The rust mirror lives in ``rust/src/tensor/nbt.rs``; both sides are covered
+by round-trip tests against golden files.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"NBTC"
+
+_DTYPES: list[tuple[int, np.dtype]] = [
+    (0, np.dtype("<f4")),
+    (1, np.dtype("<i4")),
+    (2, np.dtype("u1")),
+    (3, np.dtype("<i8")),
+    (4, np.dtype("<f8")),
+    (5, np.dtype("i1")),
+]
+_CODE_OF = {dt: code for code, dt in _DTYPES}
+_DTYPE_OF = {code: dt for code, dt in _DTYPES}
+
+
+def write_nbt(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write ``tensors`` (name -> array) to ``path``; insertion order kept."""
+    parts = [MAGIC, struct.pack("<I", len(tensors))]
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        dt = arr.dtype.newbyteorder("<") if arr.dtype.byteorder == ">" else arr.dtype
+        code = _CODE_OF.get(np.dtype(dt))
+        if code is None:
+            raise ValueError(f"unsupported dtype {arr.dtype} for tensor {name!r}")
+        nb = name.encode("utf-8")
+        parts.append(struct.pack("<H", len(nb)))
+        parts.append(nb)
+        parts.append(struct.pack("<II", code, arr.ndim))
+        parts.append(struct.pack(f"<{arr.ndim}Q", *arr.shape))
+        payload = arr.tobytes()
+        parts.append(struct.pack("<Q", len(payload)))
+        parts.append(payload)
+    with open(path, "wb") as f:
+        f.write(b"".join(parts))
+
+
+def read_nbt(path: str) -> dict[str, np.ndarray]:
+    """Read a .nbt container back into name -> array (insertion order)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    if buf[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {buf[:4]!r}")
+    off = 4
+    (count,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        name = buf[off : off + nlen].decode("utf-8")
+        off += nlen
+        code, ndim = struct.unpack_from("<II", buf, off)
+        off += 8
+        dims = struct.unpack_from(f"<{ndim}Q", buf, off)
+        off += 8 * ndim
+        (plen,) = struct.unpack_from("<Q", buf, off)
+        off += 8
+        dt = _DTYPE_OF[code]
+        arr = np.frombuffer(buf, dtype=dt, count=plen // dt.itemsize, offset=off)
+        out[name] = arr.reshape(dims)
+        off += plen
+    return out

@@ -1,0 +1,180 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-numpy oracle.
+
+This is the core correctness signal of the repo: the sampling kernel must
+match ref.py bit-for-bit on integer outputs (column indices, slot counts)
+and to float tolerance on products, for every strategy, across randomized
+shapes (hypothesis drives the sweep).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.aes_spmm import aes_sample, aes_spmm, spmm_ell
+from compile.kernels.dequant import dequant
+
+STRATEGIES = [ref.AFS, ref.SFS, ref.AES]
+
+
+def random_csr(rng, n, max_deg):
+    deg = rng.integers(0, max_deg, n)
+    row_ptr = np.zeros(n + 1, np.int32)
+    row_ptr[1:] = np.cumsum(deg)
+    e = int(row_ptr[-1])
+    col = rng.integers(0, n, e).astype(np.int32)
+    val = rng.standard_normal(e).astype(np.float32)
+    return row_ptr, col, val
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("width", [16, 32, 64])
+def test_sample_matches_ref(strategy, width):
+    rng = np.random.default_rng(width * 10 + strategy)
+    row_ptr, col, val = random_csr(rng, 80, width * 6)
+    ev_r, ec_r, sl_r = ref.sample_ell(row_ptr, col, val, width, strategy)
+    s = jnp.array([strategy], jnp.int32)
+    ev, ec, sl = aes_sample(jnp.array(row_ptr), jnp.array(col), jnp.array(val), s, width=width)
+    np.testing.assert_array_equal(np.asarray(ec), ec_r)
+    np.testing.assert_array_equal(np.asarray(sl), sl_r)
+    np.testing.assert_allclose(np.asarray(ev), ev_r, rtol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("mean", [False, True])
+def test_fused_matches_ref(strategy, mean):
+    rng = np.random.default_rng(7 + strategy)
+    n, width, f = 60, 16, 9
+    row_ptr, col, val = random_csr(rng, n, 120)
+    b = rng.standard_normal((n, f)).astype(np.float32)
+    want = ref.aes_spmm(row_ptr, col, val, b, width, strategy, mean=mean)
+    got = aes_spmm(
+        jnp.array(row_ptr), jnp.array(col), jnp.array(val), jnp.array(b),
+        jnp.array([strategy], jnp.int32), width=width, mean=mean,
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_equals_two_stage():
+    """The fused kernel must equal sample + spmm_ell composition."""
+    rng = np.random.default_rng(3)
+    n, width, f = 50, 32, 8
+    row_ptr, col, val = random_csr(rng, n, 200)
+    b = rng.standard_normal((n, f)).astype(np.float32)
+    s = jnp.array([ref.AES], jnp.int32)
+    ev, ec, _ = aes_sample(jnp.array(row_ptr), jnp.array(col), jnp.array(val), s, width=width)
+    two_stage = spmm_ell(ev, ec, jnp.array(b))
+    fused = aes_spmm(
+        jnp.array(row_ptr), jnp.array(col), jnp.array(val), jnp.array(b), s, width=width
+    )
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two_stage), rtol=1e-5, atol=1e-5)
+
+
+def test_width_at_least_max_degree_is_exact():
+    """With W >= max row_nnz, sampling keeps everything => exact SpMM."""
+    rng = np.random.default_rng(11)
+    n, f = 40, 5
+    row_ptr, col, val = random_csr(rng, n, 20)
+    width = int(np.diff(row_ptr).max())
+    b = rng.standard_normal((n, f)).astype(np.float32)
+    exact = ref.csr_spmm(row_ptr, col, val, b)
+    for strategy in STRATEGIES:
+        got = aes_spmm(
+            jnp.array(row_ptr), jnp.array(col), jnp.array(val), jnp.array(b),
+            jnp.array([strategy], jnp.int32), width=width,
+        )
+        np.testing.assert_allclose(np.asarray(got), exact, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 60),
+    max_deg=st.integers(1, 300),
+    width=st.sampled_from([16, 32, 64, 128]),
+    strategy=st.sampled_from(STRATEGIES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sample_property_sweep(n, max_deg, width, strategy, seed):
+    """Hypothesis sweep: kernel == oracle for arbitrary CSR shapes."""
+    rng = np.random.default_rng(seed)
+    row_ptr, col, val = random_csr(rng, n, max_deg)
+    ev_r, ec_r, sl_r = ref.sample_ell(row_ptr, col, val, width, strategy)
+    s = jnp.array([strategy], jnp.int32)
+    ev, ec, sl = aes_sample(jnp.array(row_ptr), jnp.array(col), jnp.array(val), s, width=width)
+    np.testing.assert_array_equal(np.asarray(ec), ec_r)
+    np.testing.assert_array_equal(np.asarray(sl), sl_r)
+    np.testing.assert_allclose(np.asarray(ev), ev_r, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nnz=st.integers(0, 5000),
+    width=st.sampled_from([16, 32, 64, 128, 256]),
+    strategy=st.sampled_from(STRATEGIES),
+)
+def test_plan_invariants(nnz, width, strategy):
+    """Eq. 3 + Table 1 invariants: offsets in range, slot layout correct."""
+    offs = ref.sample_row(nnz, width, strategy)
+    n_, cnt = ref.strategy_params(nnz, width, strategy)
+    slots = min(n_ * cnt, width)
+    assert (offs[:slots] >= 0).all()
+    if nnz:
+        assert (offs[:slots] < nnz).all()
+    assert (offs[slots:] == -1).all()
+    # Slot layout: slot k = sample (k % cnt), run offset (k // cnt).
+    for k in range(slots):
+        s, j = k % cnt, k // cnt
+        assert offs[k] == ref.start_index(s, nnz, n_) + j
+
+
+def test_strategy_table_boundaries():
+    """Table 1 thresholds at exact boundaries."""
+    w = 64
+    assert ref.strategy_params(w, w, ref.AES) == (w, 1)
+    assert ref.strategy_params(w + 1, w, ref.AES) == (w // 4, 4)
+    assert ref.strategy_params(2 * w, w, ref.AES) == (w // 4, 4)
+    assert ref.strategy_params(2 * w + 1, w, ref.AES) == (w // 8, 8)
+    assert ref.strategy_params(36 * w, w, ref.AES) == (w // 8, 8)
+    assert ref.strategy_params(36 * w + 1, w, ref.AES) == (w // 16, 16)
+    assert ref.strategy_params(54 * w, w, ref.AES) == (w // 16, 16)
+    assert ref.strategy_params(54 * w + 1, w, ref.AES) == (w // 32, 32)
+    # Small-W clamps (N >= 1, cnt <= W).
+    assert ref.strategy_params(16 * 55, 16, ref.AES) == (1, 16)
+
+
+def test_dequant_kernel_matches_ref_and_bounds():
+    rng = np.random.default_rng(5)
+    x = (rng.standard_normal((30, 12)) * 4).astype(np.float32)
+    q, lo, hi = ref.quantize(x)
+    got = dequant(jnp.array(q), jnp.array([lo], jnp.float32), jnp.array([hi], jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), ref.dequantize(q, lo, hi), atol=1e-5)
+    assert np.abs(np.asarray(got) - x).max() <= (hi - lo) / 255 + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    lo=st.floats(-100, 99, allow_nan=False),
+    span=st.floats(0.001, 200, allow_nan=False),
+    seed=st.integers(0, 1000),
+)
+def test_quant_roundtrip_property(lo, span, seed):
+    rng = np.random.default_rng(seed)
+    x = (lo + span * rng.random((20, 7))).astype(np.float32)
+    q, qlo, qhi = ref.quantize(x)
+    back = ref.dequantize(q, qlo, qhi)
+    step = (qhi - qlo) / 255
+    assert np.abs(back - x).max() <= step + 1e-4 * max(abs(qlo), abs(qhi), 1.0)
+
+
+def test_sampling_rate_monotone_and_exact_at_max_degree():
+    rng = np.random.default_rng(9)
+    row_ptr, _, _ = random_csr(rng, 100, 500)
+    last = 0.0
+    for w in [16, 32, 64, 128, 256, 512]:
+        r = ref.sampling_rate(row_ptr, w, ref.AES)
+        assert r >= last - 1e-12
+        last = r
+    wmax = int(np.diff(row_ptr).max())
+    assert ref.sampling_rate(row_ptr, wmax, ref.AES) == 1.0

@@ -1,0 +1,127 @@
+"""L2 model tests: shapes, sampled-vs-exact convergence, fused-path
+equivalence, and the quantized input path."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import datagen, model as M
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """A miniature dataset (fast to trace) shared across tests."""
+    spec = datagen.DatasetSpec(
+        name="tiny", n=120, avg_deg=12.0, feats=16, classes=4, gamma=1.8,
+        homophily=0.8, noise=1.0, scale="small", paper_nodes=0, paper_avg_deg=0.0,
+    )
+    return datagen.generate(spec, seed=1)
+
+
+def _inputs(data, model):
+    n = int(data["meta"][0])
+    row_ptr = jnp.asarray(data["row_ptr"])
+    col_ind = jnp.asarray(data["col_ind"])
+    val = jnp.asarray(data["val_gcn"] if model == "gcn" else data["val_ones"])
+    row_ids = jnp.asarray(
+        np.repeat(np.arange(n, dtype=np.int32), np.diff(data["row_ptr"]))
+    )
+    x = jnp.asarray(data["feat"])
+    return row_ptr, col_ind, val, row_ids, x
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage"])
+def test_forward_shapes(tiny, model):
+    n, nnz, feats, classes = (int(t) for t in tiny["meta"])
+    init = M.init_gcn if model == "gcn" else M.init_sage
+    params = init(jax.random.PRNGKey(0), feats, M.HIDDEN, classes)
+    row_ptr, col_ind, val, row_ids, x = _inputs(tiny, model)
+    logits = M.forward_exact(model, params, row_ptr, col_ind, val, row_ids, x)
+    assert logits.shape == (n, classes)
+    s = jnp.array([ref.AES], jnp.int32)
+    logits2 = M.forward_sampled(model, params, row_ptr, col_ind, val, x, s, width=16)
+    assert logits2.shape == (n, classes)
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage"])
+def test_sampled_converges_to_exact_at_full_width(tiny, model):
+    """W >= max degree => the sampled forward equals the exact forward."""
+    _, _, feats, classes = (int(t) for t in tiny["meta"])
+    init = M.init_gcn if model == "gcn" else M.init_sage
+    params = init(jax.random.PRNGKey(1), feats, M.HIDDEN, classes)
+    row_ptr, col_ind, val, row_ids, x = _inputs(tiny, model)
+    wmax = int(np.diff(tiny["row_ptr"]).max())
+    exact = M.forward_exact(model, params, row_ptr, col_ind, val, row_ids, x)
+    for strategy in [ref.AFS, ref.SFS, ref.AES]:
+        s = jnp.array([strategy], jnp.int32)
+        sampled = M.forward_sampled(
+            model, params, row_ptr, col_ind, val, x, s, width=wmax
+        )
+        np.testing.assert_allclose(
+            np.asarray(sampled), np.asarray(exact), rtol=2e-3, atol=2e-3
+        )
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage"])
+def test_fused_path_equals_sampled_path(tiny, model):
+    """forward_fused (per-layer in-kernel sampling, the GPU shape) must
+    equal forward_sampled (sample-once) — the hash is deterministic."""
+    _, _, feats, classes = (int(t) for t in tiny["meta"])
+    init = M.init_gcn if model == "gcn" else M.init_sage
+    params = init(jax.random.PRNGKey(2), feats, M.HIDDEN, classes)
+    row_ptr, col_ind, val, _, x = _inputs(tiny, model)
+    s = jnp.array([ref.AES], jnp.int32)
+    a = M.forward_sampled(model, params, row_ptr, col_ind, val, x, s, width=16)
+    b = M.forward_fused(model, params, row_ptr, col_ind, val, x, s, width=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_forward_close_to_f32(tiny):
+    """INT8-input forward stays close to the f32 forward (Eq. 1/2 bound)."""
+    _, _, feats, classes = (int(t) for t in tiny["meta"])
+    params = M.init_gcn(jax.random.PRNGKey(3), feats, M.HIDDEN, classes)
+    row_ptr, col_ind, val, _, x = _inputs(tiny, "gcn")
+    q, lo, hi = ref.quantize(np.asarray(x))
+    s = jnp.array([ref.AES], jnp.int32)
+    f32_logits = M.forward_sampled("gcn", params, row_ptr, col_ind, val, x, s, width=16)
+    q_logits = M.forward_sampled_quant(
+        "gcn", params, row_ptr, col_ind, val, jnp.asarray(q),
+        jnp.array([lo], jnp.float32), jnp.array([hi], jnp.float32), s, width=16,
+    )
+    # Same argmax for the overwhelming majority of nodes.
+    agree = (
+        np.argmax(np.asarray(f32_logits), 1) == np.argmax(np.asarray(q_logits), 1)
+    ).mean()
+    assert agree > 0.95, f"quantized argmax agreement {agree}"
+
+
+def test_datagen_structure(tiny):
+    n, nnz, feats, classes = (int(t) for t in tiny["meta"])
+    row_ptr = tiny["row_ptr"]
+    assert row_ptr[0] == 0 and row_ptr[-1] == nnz
+    assert (np.diff(row_ptr) >= 1).all(), "every node has at least its self loop"
+    col = tiny["col_ind"]
+    assert col.min() >= 0 and col.max() < n
+    # Self loops present: row i contains col i.
+    for i in [0, n // 2, n - 1]:
+        assert i in col[row_ptr[i]:row_ptr[i + 1]]
+    # GCN normalization: val = 1/sqrt(d_i d_j) <= 1, > 0.
+    assert (tiny["val_gcn"] > 0).all() and (tiny["val_gcn"] <= 1.0 + 1e-6).all()
+    assert (tiny["val_ones"] == 1.0).all()
+    # Features class-correlated: same-class mean distance < cross-class.
+    feats_arr, labels = tiny["feat"], tiny["labels"]
+    mus = np.stack([feats_arr[labels == c].mean(0) for c in range(classes)])
+    d_same = np.linalg.norm(feats_arr - mus[labels], axis=1).mean()
+    d_other = np.linalg.norm(feats_arr - mus[(labels + 1) % classes], axis=1).mean()
+    assert d_same < d_other
+
+
+def test_training_learns(tiny):
+    from compile import train as T
+
+    params, acc = T.train("gcn", tiny, epochs=40, seed=0)
+    n_classes = int(tiny["meta"][3])
+    assert acc > 2.0 / n_classes, f"accuracy {acc} no better than chance"

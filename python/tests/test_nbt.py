@@ -1,0 +1,66 @@
+"""NBT container round-trip + cross-language golden file.
+
+The rust reader is tested against a golden file with the same layout in
+rust/tests/; here we pin the python side and the byte-level format.
+"""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile.nbt import MAGIC, read_nbt, write_nbt
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.nbt")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([-1, 5, 9], dtype=np.int32),
+        "q": np.array([[0, 255], [7, 128]], dtype=np.uint8),
+        "m": np.array([1, 2, 3], dtype=np.int64),
+    }
+    write_nbt(path, tensors)
+    back = read_nbt(path)
+    assert list(back) == list(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_header_layout(tmp_path):
+    """Byte-level layout must match the documented format (rust relies on it)."""
+    path = str(tmp_path / "h.nbt")
+    write_nbt(path, {"x": np.array([1.5], dtype=np.float32)})
+    raw = open(path, "rb").read()
+    assert raw[:4] == MAGIC
+    (count,) = struct.unpack_from("<I", raw, 4)
+    assert count == 1
+    (nlen,) = struct.unpack_from("<H", raw, 8)
+    assert nlen == 1 and raw[10:11] == b"x"
+    code, ndim = struct.unpack_from("<II", raw, 11)
+    assert code == 0 and ndim == 1  # f32, rank 1
+    (dim0,) = struct.unpack_from("<Q", raw, 19)
+    assert dim0 == 1
+    (plen,) = struct.unpack_from("<Q", raw, 27)
+    assert plen == 4
+    assert struct.unpack_from("<f", raw, 35)[0] == 1.5
+
+
+def test_rejects_unknown_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        write_nbt(str(tmp_path / "bad.nbt"), {"c": np.array([1 + 2j])})
+
+
+def test_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.nbt"
+    p.write_bytes(b"XXXX\x00\x00\x00\x00")
+    with pytest.raises(ValueError):
+        read_nbt(str(p))
+
+
+def test_order_preserved(tmp_path):
+    path = str(tmp_path / "o.nbt")
+    tensors = {k: np.zeros(1, np.float32) for k in ["z", "a", "m"]}
+    write_nbt(path, tensors)
+    assert list(read_nbt(path)) == ["z", "a", "m"]

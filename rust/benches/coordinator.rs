@@ -1,0 +1,84 @@
+//! Bench: coordinator overhead — batcher grouping latency, submit→reply
+//! round trip with a no-op-sized workload, and amortization behavior as
+//! the offered load grows. L3 must not be the bottleneck (DESIGN.md §Perf
+//! target: batching adds well under a millisecond of overhead).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use aes_spmm::bench::{print_header, print_result, Bencher};
+use aes_spmm::coordinator::{Batch, BatcherConfig, InferRequest, RouteKey};
+use aes_spmm::quant::Precision;
+use aes_spmm::sampling::Strategy;
+
+fn key(w: usize) -> RouteKey {
+    RouteKey {
+        model: "gcn".into(),
+        dataset: "cora".into(),
+        width: Some(w),
+        strategy: Strategy::Aes,
+        precision: Precision::F32,
+    }
+}
+
+/// Drive the batcher loop directly with a synthetic sink (no PJRT), so the
+/// measured number is pure coordination overhead.
+fn batcher_round_trip(n_requests: usize, max_batch: usize) -> Duration {
+    let (in_tx, in_rx) = mpsc::channel::<InferRequest>();
+    let (out_tx, out_rx) = mpsc::channel::<Batch>();
+    let cfg = BatcherConfig { max_batch, max_delay: Duration::from_micros(500) };
+    let h = std::thread::spawn(move || aes_spmm::coordinator::run_batcher(cfg, in_rx, out_tx));
+
+    let sink = std::thread::spawn(move || {
+        let mut served = 0usize;
+        while let Ok(batch) = out_rx.recv() {
+            for req in batch.requests {
+                let _ = req.reply.send(aes_spmm::coordinator::InferResponse {
+                    id: req.id,
+                    predictions: Vec::new(),
+                    latency: req.enqueued.elapsed(),
+                    batch_size: 1,
+                    error: None,
+                });
+                served += 1;
+            }
+            if served >= 1 {} // keep draining until channel closes
+        }
+    });
+
+    let t0 = Instant::now();
+    let mut replies = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let (tx, rx) = mpsc::channel();
+        in_tx
+            .send(InferRequest {
+                id: i as u64,
+                key: key(16 + (i % 3) * 16),
+                nodes: vec![i % 100],
+                enqueued: Instant::now(),
+                reply: tx,
+            })
+            .unwrap();
+        replies.push(rx);
+    }
+    for rx in replies {
+        rx.recv().unwrap();
+    }
+    let d = t0.elapsed();
+    drop(in_tx);
+    h.join().unwrap();
+    sink.join().unwrap();
+    d
+}
+
+fn main() {
+    let b = Bencher::default();
+
+    print_header("batcher round trip (no PJRT, pure coordination)");
+    for (n, mb) in [(100usize, 16usize), (1000, 16), (1000, 64)] {
+        let r = b.run(format!("{n} reqs, max_batch {mb}"), || batcher_round_trip(n, mb));
+        print_result(&r, Some(("req/s", n as f64 / r.median.as_secs_f64())));
+    }
+}

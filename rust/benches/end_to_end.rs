@@ -1,0 +1,70 @@
+//! Bench: end-to-end inference latency through the AOT PJRT artifacts —
+//! exact baseline vs sampled vs quantized, per dataset. Requires
+//! `make artifacts` (skips gracefully when artifacts are missing).
+//!
+//! Run: `cargo bench --bench end_to_end`
+
+use aes_spmm::bench::{print_header, print_result, Bencher};
+use aes_spmm::quant::Precision;
+use aes_spmm::runtime::{run_forward, Dataset, Engine, ForwardRequest, Weights};
+use aes_spmm::sampling::Strategy;
+
+fn main() {
+    let artifacts = "artifacts";
+    let engine = match Engine::new(artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping end_to_end bench (run `make artifacts` first): {e:#}");
+            return;
+        }
+    };
+    let b = Bencher::heavy();
+
+    for ds_name in ["cora", "proteins", "products"] {
+        let Ok(ds) = Dataset::load(artifacts, ds_name) else { continue };
+        let weights = Weights::load(artifacts, "gcn", ds_name).unwrap();
+        print_header(&format!("gcn on {ds_name} (n={}, nnz={})", ds.n, ds.nnz));
+
+        let mut go = |label: &str, req: ForwardRequest| {
+            // Warm the executable cache outside the timed region.
+            run_forward(&engine, &ds, &weights, &req, None).unwrap();
+            let r = b.run(label, || {
+                run_forward(&engine, &ds, &weights, &req, None).unwrap()
+            });
+            print_result(&r, None);
+        };
+
+        go(
+            "exact baseline (segment-sum)",
+            ForwardRequest {
+                model: "gcn".into(),
+                dataset: ds_name.into(),
+                width: None,
+                strategy: Strategy::Aes,
+                precision: Precision::F32,
+            },
+        );
+        for w in [16usize, 64, 256] {
+            go(
+                &format!("aes w{w} (fused sample+spmm)"),
+                ForwardRequest {
+                    model: "gcn".into(),
+                    dataset: ds_name.into(),
+                    width: Some(w),
+                    strategy: Strategy::Aes,
+                    precision: Precision::F32,
+                },
+            );
+        }
+        go(
+            "aes w64 + int8 (device dequant)",
+            ForwardRequest {
+                model: "gcn".into(),
+                dataset: ds_name.into(),
+                width: Some(64),
+                strategy: Strategy::Aes,
+                precision: Precision::U8Device,
+            },
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! Bench: quantization/dequantization throughput and the feature-store
+//! loading paths — the mechanism behind Table 3 (INT8 loading moves 4x
+//! fewer bytes; host dequant must be cheap enough not to eat the win).
+//!
+//! Run: `cargo bench --bench quantization`
+
+use aes_spmm::bench::{black_box, print_header, print_result, Bencher};
+use aes_spmm::quant::{dequantize_into, quantize, QuantParams};
+use aes_spmm::rng::Pcg32;
+use aes_spmm::tensor::{write_nbt, NbtFile, Tensor};
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Pcg32::new(1);
+
+    for (n, f) in [(2048usize, 64usize), (8192, 64), (8192, 256)] {
+        let data: Vec<f32> = (0..n * f).map(|_| rng.f32() * 8.0 - 4.0).collect();
+        let p = QuantParams::of(&data);
+        let bytes = n * f * 4;
+
+        print_header(&format!("feature tensor {n}x{f} ({} MB f32)", bytes / 1_000_000));
+
+        let r = b.run("quantize (offline, Eq. 1)", || black_box(quantize(&data, p)));
+        print_result(&r, Some(("GB/s", r.throughput(bytes) / 1e9)));
+
+        let q = quantize(&data, p);
+        let mut out = vec![0.0f32; q.len()];
+        let r = b.run("dequantize_into (host, Eq. 2)", || {
+            dequantize_into(&q, p, &mut out);
+        });
+        print_result(&r, Some(("GB/s", r.throughput(bytes) / 1e9)));
+    }
+
+    // Disk loading: fp32 vs u8 via the nbt container (the Table 3 stage).
+    let dir = std::env::temp_dir().join("aes_spmm_quant_bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (n, f) = (8192usize, 64usize);
+    let data: Vec<f32> = (0..n * f).map(|_| rng.f32()).collect();
+    let p = QuantParams::of(&data);
+    let q = quantize(&data, p);
+    let mut nbt = NbtFile::new();
+    nbt.insert("feat", Tensor::from_f32(&[n, f], &data));
+    nbt.insert("featq", Tensor::from_u8(&[n, f], &q));
+    nbt.insert("qrange", Tensor::from_f32(&[2], &[p.x_min, p.x_max]));
+    let path = dir.join("bench.nbt");
+    write_nbt(&path, &nbt).unwrap();
+
+    print_header("feature loading from storage (.nbt, 8192x64)");
+    let r = b.run("load f32 tensor", || {
+        let f = aes_spmm::tensor::read_nbt(&path).unwrap();
+        black_box(f.get("feat").unwrap().byte_len())
+    });
+    print_result(&r, Some(("GB/s", r.throughput(n * f * 4) / 1e9)));
+    let r = b.run("load u8 tensor (quantized path)", || {
+        let f = aes_spmm::tensor::read_nbt(&path).unwrap();
+        black_box(f.get("featq").unwrap().byte_len())
+    });
+    print_result(&r, Some(("GB/s", r.throughput(n * f) / 1e9)));
+}

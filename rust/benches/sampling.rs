@@ -1,0 +1,48 @@
+//! Bench: the sampling planner itself — the index-computation cost that
+//! separates AFS (one hash per slot) from SFS (no hashing) from AES
+//! (one hash per sample). This is the paper's §3.3 overhead argument:
+//! AES's speedup over AFS comes from fewer start-index computations.
+//!
+//! Run: `cargo bench --bench sampling`
+
+use aes_spmm::bench::{black_box, print_header, print_result, Bencher};
+use aes_spmm::gen;
+use aes_spmm::rng::Pcg32;
+use aes_spmm::sampling::{plan_row, sample_ell, sampling_rate_cdf, Strategy};
+
+fn main() {
+    let b = Bencher::default();
+
+    // Pure index math per row, degree regimes from Table 1.
+    print_header("plan_row: per-row index computation (1000 rows)");
+    for deg in [8usize, 100, 1000, 10_000, 60_000] {
+        for strat in Strategy::ALL {
+            for w in [16usize, 128] {
+                let r = b.run(format!("deg={deg} {} w{w}", strat.name()), || {
+                    for _ in 0..1000 {
+                        black_box(plan_row(black_box(deg), w, strat));
+                    }
+                });
+                print_result(&r, None);
+            }
+        }
+    }
+
+    // Whole-graph ELL planning (the kernel's lines 5–14 on the host).
+    let mut rng = Pcg32::new(3);
+    let g = gen::with_self_loops(&gen::chung_lu(4096, 60.0, 2.0, &mut rng));
+    print_header(&format!("sample_ell on n={} nnz={}", g.n_rows, g.nnz()));
+    for w in [16usize, 64, 256] {
+        for strat in Strategy::ALL {
+            let r = b.run(format!("{} w{w}", strat.name()), || black_box(sample_ell(&g, w, strat)));
+            print_result(&r, Some(("Medges/s", r.throughput(g.nnz()) / 1e6)));
+        }
+    }
+
+    // Fig. 5 statistic cost.
+    print_header("sampling_rate_cdf (Fig. 5 series)");
+    for w in [16usize, 256] {
+        let r = b.run(format!("aes w{w}"), || black_box(sampling_rate_cdf(&g, w, Strategy::Aes)));
+        print_result(&r, None);
+    }
+}

@@ -1,0 +1,60 @@
+//! Bench: CPU SpMM kernel zoo across the dataset-analog graph family —
+//! regenerates the Fig. 7 kernel-time comparison (exact/cuSPARSE role vs
+//! GE-SpMM-analog vs sampled AFS/SFS/AES at several W).
+//!
+//! Run: `cargo bench --bench spmm_kernels`
+
+use aes_spmm::bench::{print_header, print_result, Bencher};
+use aes_spmm::gen;
+use aes_spmm::rng::Pcg32;
+use aes_spmm::sampling::{sample_ell, Strategy};
+use aes_spmm::spmm::{csr_naive, csr_naive_par, csr_rowcache, ell_spmm_par, spmm_flops};
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let f = 64;
+    let b = Bencher::default();
+
+    // (name, nodes, avg_deg, gamma) — mirrors the small/large split.
+    let workloads = [
+        ("cora-like", 2708usize, 4.0, 2.5),
+        ("arxiv-like", 4096, 14.0, 2.2),
+        ("reddit-like", 2048, 160.0, 2.0),
+        ("products-like", 8192, 50.0, 2.1),
+    ];
+
+    for (name, n, deg, gamma) in workloads {
+        let mut rng = Pcg32::new(42);
+        let g = gen::with_self_loops(&gen::chung_lu(n, deg, gamma, &mut rng));
+        let feats: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        let mut out = vec![0.0f32; n * f];
+        let flops = spmm_flops(g.nnz(), f);
+
+        print_header(&format!("{name}: n={n} nnz={} f={f}", g.nnz()));
+
+        let r = b.run("exact csr (cuSPARSE role, 1 thread)", || {
+            csr_naive(&g, &feats, f, &mut out)
+        });
+        print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+
+        let r = b.run(format!("exact csr ({threads} threads)"), || {
+            csr_naive_par(&g, &feats, f, &mut out, threads)
+        });
+        print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+
+        let r = b.run("rowcache csr (GE-SpMM analog)", || {
+            csr_rowcache(&g, &feats, f, &mut out)
+        });
+        print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+
+        for w in [16usize, 64, 256] {
+            for strat in Strategy::ALL {
+                let r = b.run(format!("sampled {} w{w} (plan+spmm)", strat.name()), || {
+                    let ell = sample_ell(&g, w, strat);
+                    ell_spmm_par(&ell, &feats, f, &mut out, threads);
+                });
+                print_result(&r, None);
+            }
+        }
+    }
+}

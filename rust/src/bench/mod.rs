@@ -1,0 +1,146 @@
+//! Micro-benchmark harness — criterion is not in the offline registry, so
+//! this provides the same core loop: warmup, timed iterations, and robust
+//! statistics (median / p10 / p90), plus throughput helpers and a
+//! markdown-ish report printer used by `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+use crate::util::{fmt_duration, percentile};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    /// Items (e.g. nnz, bytes) per second at the median.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.median.as_secs_f64()
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop early once this much time has been spent measuring.
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            budget: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for expensive end-to-end cases.
+    pub fn heavy() -> Self {
+        Self { warmup_iters: 1, min_iters: 5, max_iters: 50, budget: Duration::from_secs(5) }
+    }
+
+    /// Run `f` repeatedly; the closure's return value is black-boxed so
+    /// the optimizer cannot delete the work.
+    pub fn run<T>(&self, name: impl Into<String>, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.min_iters);
+        let started = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < self.min_iters || started.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        BenchResult {
+            name: name.into(),
+            iters: samples.len(),
+            median: percentile(&samples, 50.0),
+            p10: percentile(&samples, 10.0),
+            p90: percentile(&samples, 90.0),
+            mean,
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint on stable).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a result table header.
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        "case", "iters", "p10", "median", "p90"
+    );
+}
+
+/// Print one result row (optionally with a throughput annotation).
+pub fn print_result(r: &BenchResult, throughput: Option<(&str, f64)>) {
+    let tp = throughput
+        .map(|(unit, v)| format!("  {:.3} {unit}", v))
+        .unwrap_or_default();
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}{tp}",
+        r.name,
+        r.iters,
+        fmt_duration(r.p10),
+        fmt_duration(r.median),
+        fmt_duration(r.p90),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let b = Bencher { warmup_iters: 1, min_iters: 5, max_iters: 20, budget: Duration::from_millis(200) };
+        let r = b.run("sleep", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.median >= Duration::from_millis(2));
+        assert!(r.iters >= 5);
+        assert!(r.p90 >= r.p10);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let b = Bencher { warmup_iters: 0, min_iters: 2, max_iters: 100_000, budget: Duration::from_millis(50) };
+        let t0 = Instant::now();
+        let r = b.run("spin", || (0..1000).sum::<u64>());
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(r.iters >= 2);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "t".into(),
+            iters: 1,
+            median: Duration::from_secs(2),
+            p10: Duration::ZERO,
+            p90: Duration::ZERO,
+            mean: Duration::from_secs(2),
+        };
+        assert!((r.throughput(4_000_000) - 2_000_000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Dynamic batcher: groups queued requests by [`RouteKey`] and flushes a
+//! group when it reaches `max_batch` or its oldest member has waited
+//! `max_delay` — the standard serving trade-off (vLLM/Orca-style), applied
+//! to full-graph GNN inference where a batch of N same-route requests
+//! costs exactly one forward pass.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::request::{InferRequest, RouteKey};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush a group at this many requests.
+    pub max_batch: usize,
+    /// Flush a group when its oldest request has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// A flushed group destined for one forward pass.
+#[derive(Debug)]
+pub struct Batch {
+    pub key: RouteKey,
+    pub requests: Vec<InferRequest>,
+}
+
+struct Group {
+    requests: Vec<InferRequest>,
+    oldest: Instant,
+}
+
+/// The batcher loop: drains `rx`, emits [`Batch`]es to `tx`. Returns when
+/// `rx` disconnects, flushing everything still queued.
+pub fn run_batcher(
+    cfg: BatcherConfig,
+    rx: mpsc::Receiver<InferRequest>,
+    tx: mpsc::Sender<Batch>,
+) {
+    let mut groups: HashMap<RouteKey, Group> = HashMap::new();
+    loop {
+        // Wait bounded by the nearest group deadline.
+        let timeout = groups
+            .values()
+            .map(|g| cfg.max_delay.saturating_sub(g.oldest.elapsed()))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                let key = req.key.clone();
+                let group = groups.entry(key.clone()).or_insert_with(|| Group {
+                    requests: Vec::new(),
+                    oldest: req.enqueued,
+                });
+                group.oldest = group.oldest.min(req.enqueued);
+                group.requests.push(req);
+                if group.requests.len() >= cfg.max_batch {
+                    let group = groups.remove(&key).unwrap();
+                    if tx.send(Batch { key, requests: group.requests }).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for (key, group) in groups.drain() {
+                    let _ = tx.send(Batch { key, requests: group.requests });
+                }
+                return;
+            }
+        }
+        // Deadline flushes.
+        let expired: Vec<RouteKey> = groups
+            .iter()
+            .filter(|(_, g)| g.oldest.elapsed() >= cfg.max_delay)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for key in expired {
+            let group = groups.remove(&key).unwrap();
+            if tx.send(Batch { key, requests: group.requests }).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Precision;
+    use crate::sampling::Strategy;
+
+    fn key(w: usize) -> RouteKey {
+        RouteKey {
+            model: "gcn".into(),
+            dataset: "cora".into(),
+            width: Some(w),
+            strategy: Strategy::Aes,
+            precision: Precision::F32,
+        }
+    }
+
+    fn req(id: u64, k: RouteKey) -> (InferRequest, mpsc::Receiver<super::super::InferResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferRequest { id, key: k, nodes: vec![0], enqueued: Instant::now(), reply: tx },
+            rx,
+        )
+    }
+
+    fn spawn_batcher(
+        cfg: BatcherConfig,
+    ) -> (mpsc::Sender<InferRequest>, mpsc::Receiver<Batch>, std::thread::JoinHandle<()>) {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        let h = std::thread::spawn(move || run_batcher(cfg, in_rx, out_tx));
+        (in_tx, out_rx, h)
+    }
+
+    #[test]
+    fn size_flush() {
+        let (tx, rx, h) = spawn_batcher(BatcherConfig {
+            max_batch: 3,
+            max_delay: Duration::from_secs(10),
+        });
+        let mut replies = Vec::new();
+        for i in 0..3 {
+            let (r, reply) = req(i, key(16));
+            replies.push(reply);
+            tx.send(r).unwrap();
+        }
+        let batch = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let (tx, rx, h) = spawn_batcher(BatcherConfig {
+            max_batch: 1000,
+            max_delay: Duration::from_millis(5),
+        });
+        let (r, _reply) = req(0, key(16));
+        tx.send(r).unwrap();
+        let batch = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn groups_by_key() {
+        let (tx, rx, h) = spawn_batcher(BatcherConfig {
+            max_batch: 2,
+            max_delay: Duration::from_secs(10),
+        });
+        let mut replies = Vec::new();
+        for (i, w) in [(0, 16), (1, 32), (2, 16), (3, 32)] {
+            let (r, reply) = req(i, key(w));
+            replies.push(reply);
+            tx.send(r).unwrap();
+        }
+        let a = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let b = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        for batch in [a, b] {
+            assert_eq!(batch.requests.len(), 2);
+            assert!(batch.requests.iter().all(|r| r.key == batch.key));
+        }
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drains_on_shutdown() {
+        let (tx, rx, h) = spawn_batcher(BatcherConfig {
+            max_batch: 1000,
+            max_delay: Duration::from_secs(10),
+        });
+        let (r, _reply) = req(7, key(64));
+        tx.send(r).unwrap();
+        drop(tx); // disconnect before any flush condition fires
+        let batch = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests[0].id, 7);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,190 @@
+//! Lock-cheap service metrics: counters + log-bucketed latency histograms.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log2-bucketed duration histogram: bucket i covers [2^i, 2^(i+1)) µs.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const NUM_BUCKETS: usize = 40; // up to ~2^40 µs ≈ 12 days
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(NUM_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Upper-bound estimate of percentile `p` from the bucket boundaries.
+    pub fn percentile(&self, p: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Service-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+    pub exec_time: Histogram,
+    pub load_time: Histogram,
+    /// Per-route execution counts.
+    per_route: Mutex<BTreeMap<String, u64>>,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub latency_p50: Duration,
+    pub latency_p99: Duration,
+    pub latency_mean: Duration,
+    pub queue_wait_p50: Duration,
+    pub exec_p50: Duration,
+    pub load_p50: Duration,
+    pub per_route: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_route(&self, label: &str) {
+        *self.per_route.lock().unwrap().entry(label.to_string()).or_insert(0) += 1;
+    }
+
+    /// Mean requests answered per forward pass (the batching win).
+    pub fn amortization(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.completed.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            latency_p50: self.latency.percentile(50.0),
+            latency_p99: self.latency.percentile(99.0),
+            latency_mean: self.latency.mean(),
+            queue_wait_p50: self.queue_wait.percentile(50.0),
+            exec_p50: self.exec_time.percentile(50.0),
+            load_p50: self.load_time.percentile(50.0),
+            per_route: self.per_route.lock().unwrap().clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.max() >= Duration::from_millis(100));
+        assert!(h.mean() >= Duration::from_millis(20));
+        // p50 upper bound must cover the median value (4ms).
+        assert!(h.percentile(50.0) >= Duration::from_millis(4));
+        assert!(h.percentile(100.0) >= Duration::from_millis(64));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn amortization() {
+        let m = Metrics::new();
+        m.completed.store(100, Ordering::Relaxed);
+        m.batches.store(10, Ordering::Relaxed);
+        assert!((m.amortization() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_route_counts() {
+        let m = Metrics::new();
+        m.record_route("a");
+        m.record_route("a");
+        m.record_route("b");
+        let snap = m.snapshot();
+        assert_eq!(snap.per_route["a"], 2);
+        assert_eq!(snap.per_route["b"], 1);
+    }
+}

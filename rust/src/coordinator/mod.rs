@@ -1,0 +1,31 @@
+//! Layer-3 coordinator — the GNN inference serving system (the "modified
+//! DGL framework" role in the paper's evaluation, §4.1, rebuilt as a
+//! production-style service).
+//!
+//! Request path (all rust, no python):
+//!
+//! ```text
+//! client → submit (bounded queue, backpressure)
+//!        → dynamic batcher (group by RouteKey, flush on size/deadline)
+//!        → worker pool (std threads)
+//!            → feature store load (fp32 or INT8; Table 3's stage)
+//!            → PJRT execute of the AOT artifact (sample→SpMM→MLP)
+//!            → per-node argmax answers
+//!        → per-request reply channels + metrics
+//! ```
+//!
+//! Batching exploits the paper's full-graph inference shape: every request
+//! for the same (model, dataset, W, strategy, precision) key is answered
+//! by a single forward pass, so batch size N costs one execution.
+
+mod batcher;
+mod metrics;
+mod request;
+mod server;
+mod store;
+
+pub use batcher::{run_batcher, Batch, BatcherConfig};
+pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use request::{InferRequest, InferResponse, Prediction, RouteKey, SubmitError};
+pub use server::{oneshot_accuracy, Coordinator, CoordinatorConfig};
+pub use store::ModelStore;

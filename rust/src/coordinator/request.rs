@@ -1,0 +1,130 @@
+//! Request/response types and the routing key.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::quant::Precision;
+use crate::runtime::ForwardRequest;
+use crate::sampling::Strategy;
+
+/// Routing key: everything that determines which compiled artifact (and
+/// which feature representation) serves a request. Requests with equal
+/// keys are batched into one forward pass.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct RouteKey {
+    pub model: String,
+    pub dataset: String,
+    /// None → exact baseline; Some(w) → sampled with shared-memory width w.
+    pub width: Option<usize>,
+    pub strategy: Strategy,
+    pub precision: Precision,
+}
+
+impl RouteKey {
+    pub fn to_forward(&self) -> ForwardRequest {
+        ForwardRequest {
+            model: self.model.clone(),
+            dataset: self.dataset.clone(),
+            width: self.width,
+            strategy: self.strategy,
+            precision: self.precision,
+        }
+    }
+
+    /// Human-readable key, also the metrics label.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/{}",
+            self.model,
+            self.dataset,
+            self.width.map(|w| format!("w{w}")).unwrap_or_else(|| "exact".into()),
+            self.strategy.name(),
+            self.precision.name(),
+        )
+    }
+}
+
+/// Predicted class for one queried node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Prediction {
+    pub node: usize,
+    pub class: i32,
+}
+
+/// A node-classification query: which nodes to classify under which route.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    pub key: RouteKey,
+    pub nodes: Vec<usize>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<InferResponse>,
+}
+
+/// The answer to one [`InferRequest`].
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    pub predictions: Vec<Prediction>,
+    /// End-to-end latency (enqueue → reply).
+    pub latency: Duration,
+    /// How many requests shared the forward pass that served this one.
+    pub batch_size: usize,
+    /// Error message if the execution failed.
+    pub error: Option<String>,
+}
+
+/// Why a submit was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue is full — backpressure; caller should retry later.
+    Busy,
+    /// Coordinator is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "coordinator closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_is_stable() {
+        let k = RouteKey {
+            model: "gcn".into(),
+            dataset: "cora".into(),
+            width: Some(64),
+            strategy: Strategy::Aes,
+            precision: Precision::U8Device,
+        };
+        assert_eq!(k.label(), "gcn/cora/w64/aes/u8-device");
+        let k2 = RouteKey { width: None, ..k.clone() };
+        assert_eq!(k2.label(), "gcn/cora/exact/aes/u8-device");
+    }
+
+    #[test]
+    fn equal_keys_hash_equal() {
+        use std::collections::HashSet;
+        let k = RouteKey {
+            model: "gcn".into(),
+            dataset: "cora".into(),
+            width: Some(16),
+            strategy: Strategy::Afs,
+            precision: Precision::F32,
+        };
+        let mut set = HashSet::new();
+        set.insert(k.clone());
+        assert!(set.contains(&k));
+        assert!(!set.contains(&RouteKey { width: Some(32), ..k }));
+    }
+}

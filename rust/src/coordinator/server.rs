@@ -1,0 +1,247 @@
+//! The coordinator itself: bounded intake queue → batcher thread → worker
+//! pool executing batches through the PJRT engine.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{accuracy, run_forward, Engine};
+use crate::tensor::Tensor;
+
+use super::batcher::{run_batcher, Batch, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse, Prediction, RouteKey, SubmitError};
+use super::store::ModelStore;
+
+/// Coordinator construction knobs.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Bounded intake queue length (backpressure beyond this).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { batcher: BatcherConfig::default(), workers: 2, queue_depth: 1024 }
+    }
+}
+
+/// Handle to a running coordinator. Dropping it (or calling
+/// [`Coordinator::shutdown`]) drains the pipeline and joins all threads.
+pub struct Coordinator {
+    intake: Option<mpsc::SyncSender<InferRequest>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the batcher + worker pool over a shared engine and store.
+    pub fn start(
+        engine: Arc<Engine>,
+        store: Arc<ModelStore>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        let metrics = Arc::new(Metrics::new());
+        let (intake_tx, intake_rx) = mpsc::sync_channel::<InferRequest>(cfg.queue_depth);
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let mut threads = Vec::new();
+        let bcfg = cfg.batcher;
+        threads.push(std::thread::spawn(move || run_batcher(bcfg, intake_rx, batch_tx)));
+
+        for _ in 0..cfg.workers.max(1) {
+            let rx = batch_rx.clone();
+            let engine = engine.clone();
+            let store = store.clone();
+            let metrics = metrics.clone();
+            threads.push(std::thread::spawn(move || {
+                loop {
+                    let batch = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match batch {
+                        Ok(b) => run_batch(&engine, &store, &metrics, b),
+                        Err(_) => return,
+                    }
+                }
+            }));
+        }
+
+        Coordinator {
+            intake: Some(intake_tx),
+            metrics,
+            next_id: AtomicU64::new(1),
+            threads,
+        }
+    }
+
+    /// Submit a query; returns the request id and the reply receiver.
+    /// Fails fast with [`SubmitError::Busy`] when the queue is full.
+    pub fn submit(
+        &self,
+        key: RouteKey,
+        nodes: Vec<usize>,
+    ) -> Result<(u64, mpsc::Receiver<InferResponse>), SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = InferRequest { id, key, nodes, enqueued: Instant::now(), reply: reply_tx };
+        let intake = self.intake.as_ref().ok_or(SubmitError::Closed)?;
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match intake.try_send(req) {
+            Ok(()) => Ok((id, reply_rx)),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Busy)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Blocking submit-and-wait convenience.
+    pub fn infer(&self, key: RouteKey, nodes: Vec<usize>) -> Result<InferResponse> {
+        let (_, rx) = self.submit(key, nodes).map_err(anyhow::Error::from)?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Drain the pipeline and join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.intake.take(); // disconnect → batcher drains → workers exit
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Execute one batch: load features per the route's precision, run the
+/// artifact once, answer every member request.
+fn run_batch(engine: &Engine, store: &ModelStore, metrics: &Metrics, batch: Batch) {
+    let size = batch.requests.len();
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.record_route(&batch.key.label());
+    for r in &batch.requests {
+        metrics.queue_wait.record(r.enqueued.elapsed());
+    }
+
+    match execute_route(engine, store, &batch.key) {
+        Ok((logits, classes, load_time, exec_time)) => {
+            metrics.load_time.record(load_time);
+            metrics.exec_time.record(exec_time);
+            let vals = match logits.as_f32() {
+                Ok(v) => v,
+                Err(e) => return fail_batch(metrics, batch, &e.to_string()),
+            };
+            for req in batch.requests {
+                let predictions = req
+                    .nodes
+                    .iter()
+                    .map(|&node| Prediction { node, class: argmax_row(vals, node, classes) })
+                    .collect();
+                let latency = req.enqueued.elapsed();
+                metrics.latency.record(latency);
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(InferResponse {
+                    id: req.id,
+                    predictions,
+                    latency,
+                    batch_size: size,
+                    error: None,
+                });
+            }
+        }
+        Err(e) => fail_batch(metrics, batch, &format!("{e:#}")),
+    }
+}
+
+fn fail_batch(metrics: &Metrics, batch: Batch, msg: &str) {
+    for req in batch.requests {
+        metrics.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.reply.send(InferResponse {
+            id: req.id,
+            predictions: Vec::new(),
+            latency: req.enqueued.elapsed(),
+            batch_size: 0,
+            error: Some(msg.to_string()),
+        });
+    }
+}
+
+/// Forward pass for one route. Returns (logits, classes, load, exec).
+fn execute_route(
+    engine: &Engine,
+    store: &ModelStore,
+    key: &RouteKey,
+) -> Result<(Tensor, usize, std::time::Duration, std::time::Duration)> {
+    let ds = store.dataset(&key.dataset)?;
+    let weights = store.weights(&key.model, &key.dataset)?;
+    let fstore = store.feature_store(&key.dataset)?;
+
+    // Feature loading — the stage the paper's Table 3 measures. The store
+    // re-reads from disk per batch (per-inference loading model).
+    let (features, load_stats) = fstore.load(key.precision)?;
+    let feat_tensor = match features {
+        crate::quant::Features::Dense(t) => t,
+        crate::quant::Features::Quantized { q, .. } => q,
+    };
+
+    let fwd = key.to_forward();
+    let result = run_forward(engine, &ds, &weights, &fwd, Some(&feat_tensor))?;
+    Ok((
+        result.logits,
+        ds.classes,
+        load_stats.total(),
+        result.stats.total(),
+    ))
+}
+
+fn argmax_row(vals: &[f32], row: usize, classes: usize) -> i32 {
+    let r = &vals[row * classes..(row + 1) * classes];
+    r.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(k, _)| k as i32)
+        .unwrap_or(0)
+}
+
+/// Convenience used by examples: run a route once outside the service and
+/// report its test accuracy.
+pub fn oneshot_accuracy(engine: &Engine, store: &ModelStore, key: &RouteKey) -> Result<f64> {
+    let ds = store.dataset(&key.dataset)?;
+    let weights = store.weights(&key.model, &key.dataset)?;
+    let result = run_forward(engine, &ds, &weights, &key.to_forward(), None)?;
+    accuracy(&ds, &result.logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        let vals = [0.1f32, 0.9, -1.0, 3.0, 2.0, 1.0];
+        assert_eq!(argmax_row(&vals, 0, 3), 1);
+        assert_eq!(argmax_row(&vals, 1, 3), 0);
+    }
+}

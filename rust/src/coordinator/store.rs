@@ -1,0 +1,81 @@
+//! Model store: preloaded datasets, weights, and feature stores shared by
+//! the worker pool. Everything here is immutable after startup, so
+//! workers read lock-free through `Arc`s.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::quant::FeatureStore;
+use crate::runtime::{Dataset, Weights};
+
+/// Immutable registry of loaded datasets + weights for serving.
+pub struct ModelStore {
+    artifacts_dir: PathBuf,
+    datasets: HashMap<String, Arc<Dataset>>,
+    weights: HashMap<(String, String), Arc<Weights>>,
+    features: HashMap<String, Arc<FeatureStore>>,
+}
+
+impl ModelStore {
+    /// Load the given datasets and both models' weights for each.
+    pub fn load(
+        artifacts_dir: impl AsRef<Path>,
+        datasets: &[String],
+        models: &[String],
+    ) -> Result<ModelStore> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let mut store = ModelStore {
+            artifacts_dir: dir.clone(),
+            datasets: HashMap::new(),
+            weights: HashMap::new(),
+            features: HashMap::new(),
+        };
+        for ds in datasets {
+            let data = Dataset::load(&dir, ds).with_context(|| format!("dataset {ds}"))?;
+            store.datasets.insert(ds.clone(), Arc::new(data));
+            store.features.insert(
+                ds.clone(),
+                Arc::new(FeatureStore::open(dir.join(format!("data_{ds}.nbt")))?),
+            );
+            for m in models {
+                let w = Weights::load(&dir, m, ds).with_context(|| format!("weights {m}/{ds}"))?;
+                store.weights.insert((m.clone(), ds.clone()), Arc::new(w));
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<Arc<Dataset>> {
+        self.datasets
+            .get(name)
+            .cloned()
+            .with_context(|| format!("dataset {name:?} not loaded"))
+    }
+
+    pub fn weights(&self, model: &str, dataset: &str) -> Result<Arc<Weights>> {
+        self.weights
+            .get(&(model.to_string(), dataset.to_string()))
+            .cloned()
+            .with_context(|| format!("weights {model}/{dataset} not loaded"))
+    }
+
+    pub fn feature_store(&self, dataset: &str) -> Result<Arc<FeatureStore>> {
+        self.features
+            .get(dataset)
+            .cloned()
+            .with_context(|| format!("feature store {dataset:?} not loaded"))
+    }
+
+    pub fn dataset_names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.datasets.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

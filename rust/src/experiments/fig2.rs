@@ -1,0 +1,60 @@
+//! Fig. 2 — the motivation experiment: GCN on ogbn-proteins under the two
+//! ES-SpMM extremes (AFS vs SFS). Shows the accuracy/speed imbalance:
+//! AFS is accurate but slow (per-slot hashing), SFS fast but lossy
+//! (prefix-concentrated edges). Accuracy comes from the AOT artifacts,
+//! kernel speedup from the isolated CPU SpMM kernels (vs the cuSPARSE-role
+//! exact kernel), mirroring the paper's kernel-time methodology.
+
+use anyhow::Result;
+
+use crate::quant::Precision;
+use crate::runtime::{accuracy, run_forward, Dataset, ForwardRequest, Weights};
+use crate::sampling::Strategy;
+
+use super::kerntime::{random_features, time_exact, time_sampled};
+use super::report::Table;
+use super::ExpContext;
+
+pub fn run_fig2(ctx: &ExpContext) -> Result<Table> {
+    let ds_name = if ctx.quick { "cora" } else { "proteins" };
+    let model = "gcn";
+    let mut table = Table::new(
+        "fig2",
+        format!("AFS vs SFS on {ds_name} ({model}): accuracy and kernel speedup vs exact"),
+        &["W", "scheme", "accuracy", "acc loss (pp)", "kernel speedup"],
+    );
+
+    let manifest = ctx.engine.manifest();
+    let ds = Dataset::load(&manifest.dir, ds_name)?;
+    let weights = Weights::load(&manifest.dir, model, ds_name)?;
+    let ideal = weights.ideal_acc as f64;
+
+    let f = ds.feats;
+    let b = random_features(ds.n, f, 42);
+    let exact = time_exact(&ds.csr_gcn, &b, f, ctx.quick);
+
+    for &w in &ctx.widths() {
+        for strategy in [Strategy::Afs, Strategy::Sfs] {
+            let req = ForwardRequest {
+                model: model.into(),
+                dataset: ds_name.into(),
+                width: Some(w),
+                strategy,
+                precision: Precision::F32,
+            };
+            let result = run_forward(&ctx.engine, &ds, &weights, &req, None)?;
+            let acc = accuracy(&ds, &result.logits)?;
+            let sampled = time_sampled(&ds.csr_gcn, w, strategy, &b, f, ctx.quick);
+            table.push(vec![
+                w.to_string(),
+                strategy.name().to_string(),
+                format!("{:.4}", acc),
+                format!("{:+.2}", (ideal - acc) * 100.0),
+                format!("{:.2}x", exact.as_secs_f64() / sampled.as_secs_f64()),
+            ]);
+        }
+    }
+    table.print();
+    super::report::write_report(&ctx.out_dir, &table)?;
+    Ok(table)
+}

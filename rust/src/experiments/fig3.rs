@@ -1,0 +1,69 @@
+//! Fig. 3 — GCN inference time breakdown on reddit: feature loading vs
+//! computing across W, for AFS and SFS. The paper's point: loading
+//! dominates (70.78–92.07 %), motivating the quantization path.
+
+use anyhow::Result;
+
+use crate::quant::Precision;
+use crate::runtime::{run_forward, Dataset, ForwardRequest, Weights};
+use crate::sampling::Strategy;
+
+use super::report::Table;
+use super::ExpContext;
+
+pub fn run_fig3(ctx: &ExpContext) -> Result<Table> {
+    let ds_name = if ctx.quick { "cora" } else { "reddit" };
+    let model = "gcn";
+    let mut table = Table::new(
+        "fig3",
+        format!("{model} inference breakdown on {ds_name}: loading vs compute per W"),
+        &["W", "scheme", "load (ms)", "compute (ms)", "compute %", "load %"],
+    );
+    let manifest = ctx.engine.manifest();
+    let ds = Dataset::load(&manifest.dir, ds_name)?;
+    let weights = Weights::load(&manifest.dir, model, ds_name)?;
+    let fstore = crate::quant::FeatureStore::open(
+        manifest.dir.join(format!("data_{ds_name}.nbt")),
+    )?;
+
+    for &w in &ctx.widths() {
+        for strategy in [Strategy::Afs, Strategy::Sfs] {
+            // Median of a few end-to-end (load + execute) repetitions.
+            let reps = if ctx.quick { 2 } else { 5 };
+            let mut loads = Vec::new();
+            let mut computes = Vec::new();
+            for _ in 0..reps {
+                let (feats, lstats) = fstore.load(Precision::F32)?;
+                let crate::quant::Features::Dense(feat) = feats else { unreachable!() };
+                let req = ForwardRequest {
+                    model: model.into(),
+                    dataset: ds_name.into(),
+                    width: Some(w),
+                    strategy,
+                    precision: Precision::F32,
+                };
+                let result = run_forward(&ctx.engine, &ds, &weights, &req, Some(&feat))?;
+                loads.push(lstats.total());
+                // Transfer is part of the loading story (host→device), as
+                // in the paper's PCIe accounting.
+                loads.push(result.stats.transfer);
+                computes.push(result.stats.execute + result.stats.fetch);
+            }
+            let load: std::time::Duration = loads.iter().sum::<std::time::Duration>() / reps;
+            let compute: std::time::Duration =
+                computes.iter().sum::<std::time::Duration>() / reps;
+            let total = (load + compute).as_secs_f64();
+            table.push(vec![
+                w.to_string(),
+                strategy.name().to_string(),
+                format!("{:.2}", load.as_secs_f64() * 1e3),
+                format!("{:.2}", compute.as_secs_f64() * 1e3),
+                format!("{:.1}%", 100.0 * compute.as_secs_f64() / total),
+                format!("{:.1}%", 100.0 * load.as_secs_f64() / total),
+            ]);
+        }
+    }
+    table.print();
+    super::report::write_report(&ctx.out_dir, &table)?;
+    Ok(table)
+}

@@ -1,0 +1,41 @@
+//! Fig. 5 — CDF of the sampling rate for AES-SpMM at different W values
+//! across datasets: the paper's evidence that small W suffices for small
+//! graphs (rate > 80 % at W=16) while large graphs sample < 10 %.
+
+use anyhow::Result;
+
+use crate::runtime::Dataset;
+use crate::sampling::{sampling_rate, sampling_rate_cdf, Strategy};
+
+use super::report::Table;
+use super::ExpContext;
+
+pub fn run_fig5(ctx: &ExpContext) -> Result<Table> {
+    let mut table = Table::new(
+        "fig5",
+        "Sampling rate of AES at each W: overall rate + per-row CDF deciles",
+        &["dataset", "scale", "W", "overall rate", "p10", "p50", "p90"],
+    );
+    let manifest = ctx.engine.manifest();
+    for ds_name in manifest.dataset_names() {
+        let meta = manifest.dataset(&ds_name)?.clone();
+        let ds = Dataset::load(&manifest.dir, &ds_name)?;
+        for &w in &ctx.widths() {
+            let rate = sampling_rate(&ds.csr_gcn, w, Strategy::Aes);
+            let cdf = sampling_rate_cdf(&ds.csr_gcn, w, Strategy::Aes);
+            let q = |p: f64| cdf[((p * (cdf.len() - 1) as f64) as usize).min(cdf.len() - 1)];
+            table.push(vec![
+                ds_name.clone(),
+                meta.scale.clone(),
+                w.to_string(),
+                format!("{:.3}", rate),
+                format!("{:.3}", q(0.1)),
+                format!("{:.3}", q(0.5)),
+                format!("{:.3}", q(0.9)),
+            ]);
+        }
+    }
+    table.print();
+    super::report::write_report(&ctx.out_dir, &table)?;
+    Ok(table)
+}

@@ -1,0 +1,87 @@
+//! Fig. 6 — inference accuracy of AES-SpMM vs AFS / SFS / the exact
+//! baseline across models, datasets, and W — plus the quantized-AES
+//! series (Fig. 6's "benefits of quantization" overlay). The paper's
+//! claims to reproduce in shape: AES loss < 1 % by W=128 on large graphs,
+//! AES ≥ SFS there, everything ≈ ideal on small graphs, quantization
+//! delta ≤ 0.3 pp.
+
+use anyhow::Result;
+
+use crate::quant::Precision;
+use crate::runtime::{accuracy, run_forward, Dataset, ForwardRequest, Weights};
+use crate::sampling::Strategy;
+
+use super::report::Table;
+use super::ExpContext;
+
+pub fn run_fig6(ctx: &ExpContext) -> Result<Table> {
+    let mut table = Table::new(
+        "fig6",
+        "Inference accuracy by model/dataset/scheme/W (delta vs exact ideal, pp)",
+        &["model", "dataset", "scheme", "W", "accuracy", "delta (pp)"],
+    );
+    let manifest = ctx.engine.manifest();
+    let models: &[&str] = if ctx.quick { &["gcn"] } else { &["gcn", "sage"] };
+    let datasets = if ctx.quick {
+        vec!["cora".to_string()]
+    } else {
+        manifest.dataset_names()
+    };
+
+    for &model in models {
+        for ds_name in &datasets {
+            let ds = Dataset::load(&manifest.dir, ds_name)?;
+            let weights = Weights::load(&manifest.dir, model, ds_name)?;
+
+            // Exact baseline through the PJRT artifact (cuSPARSE role) —
+            // confirms the ideal accuracy recorded at training time.
+            let req = ForwardRequest {
+                model: model.into(),
+                dataset: ds_name.clone(),
+                width: None,
+                strategy: Strategy::Aes,
+                precision: Precision::F32,
+            };
+            let result = run_forward(&ctx.engine, &ds, &weights, &req, None)?;
+            let ideal = accuracy(&ds, &result.logits)?;
+            table.push(vec![
+                model.into(),
+                ds_name.clone(),
+                "exact".into(),
+                "-".into(),
+                format!("{:.4}", ideal),
+                "0.00".into(),
+            ]);
+
+            for &w in &ctx.widths() {
+                for (scheme, strategy, precision) in [
+                    ("afs", Strategy::Afs, Precision::F32),
+                    ("sfs", Strategy::Sfs, Precision::F32),
+                    ("aes", Strategy::Aes, Precision::F32),
+                    ("aes+int8", Strategy::Aes, Precision::U8Device),
+                ] {
+                    let req = ForwardRequest {
+                        model: model.into(),
+                        dataset: ds_name.clone(),
+                        width: Some(w),
+                        strategy,
+                        precision,
+                    };
+                    let result = run_forward(&ctx.engine, &ds, &weights, &req, None)?;
+                    let acc = accuracy(&ds, &result.logits)?;
+                    table.push(vec![
+                        model.into(),
+                        ds_name.clone(),
+                        scheme.into(),
+                        w.to_string(),
+                        format!("{:.4}", acc),
+                        format!("{:+.2}", (acc - ideal) * 100.0),
+                    ]);
+                }
+            }
+        }
+    }
+    table.print();
+    super::report::write_report(&ctx.out_dir, &table)?;
+    Ok(table)
+}

@@ -1,0 +1,51 @@
+//! Fig. 7 — SpMM kernel speedup over the cuSPARSE-role exact kernel:
+//! GE-SpMM analog (row caching), AFS, SFS, and AES at each W. The shape
+//! to reproduce: GE-SpMM a modest constant win; sampled kernels' speedup
+//! grows with avg degree / W; AES ≥ AFS (less index math), close to SFS.
+
+use anyhow::Result;
+
+use crate::runtime::Dataset;
+use crate::sampling::Strategy;
+
+use super::kerntime::{random_features, time_exact, time_rowcache, time_sampled};
+use super::report::Table;
+use super::ExpContext;
+
+pub fn run_fig7(ctx: &ExpContext) -> Result<Table> {
+    let mut table = Table::new(
+        "fig7",
+        "SpMM kernel speedup vs exact (cuSPARSE role); sampled kernels include in-kernel sampling cost",
+        &["dataset", "W", "ge-spmm", "afs", "sfs", "aes"],
+    );
+    let manifest = ctx.engine.manifest();
+    let datasets = if ctx.quick {
+        vec!["cora".to_string()]
+    } else {
+        manifest.dataset_names()
+    };
+
+    for ds_name in &datasets {
+        let ds = Dataset::load(&manifest.dir, ds_name)?;
+        let f = ds.feats;
+        let b = random_features(ds.n, f, 7);
+        let exact = time_exact(&ds.csr_gcn, &b, f, ctx.quick).as_secs_f64();
+        let rowcache = time_rowcache(&ds.csr_gcn, &b, f, ctx.quick).as_secs_f64();
+        for &w in &ctx.widths() {
+            let t = |s: Strategy| {
+                time_sampled(&ds.csr_gcn, w, s, &b, f, ctx.quick).as_secs_f64()
+            };
+            table.push(vec![
+                ds_name.clone(),
+                w.to_string(),
+                format!("{:.2}x", exact / rowcache),
+                format!("{:.2}x", exact / t(Strategy::Afs)),
+                format!("{:.2}x", exact / t(Strategy::Sfs)),
+                format!("{:.2}x", exact / t(Strategy::Aes)),
+            ]);
+        }
+    }
+    table.print();
+    super::report::write_report(&ctx.out_dir, &table)?;
+    Ok(table)
+}

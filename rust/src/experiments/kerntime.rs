@@ -1,0 +1,69 @@
+//! Shared SpMM kernel timing for Fig. 2 / Fig. 7: isolates the
+//! *aggregation kernel* exactly as the paper does ("execution time
+//! includes only the kernel time"). The sampled kernels time
+//! sampling + multiply together, since AES-SpMM performs sampling inside
+//! the kernel launch.
+
+use std::time::Duration;
+
+use crate::bench::Bencher;
+use crate::graph::Csr;
+use crate::rng::Pcg32;
+use crate::sampling::{sample_ell_par, Strategy};
+use crate::spmm::{csr_naive, csr_rowcache};
+
+pub fn threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+fn bencher(quick: bool) -> Bencher {
+    if quick {
+        Bencher { warmup_iters: 1, min_iters: 3, max_iters: 10, budget: Duration::from_millis(300) }
+    } else {
+        Bencher { warmup_iters: 2, min_iters: 5, max_iters: 60, budget: Duration::from_millis(1500) }
+    }
+}
+
+/// Random dense feature matrix for kernel timing.
+pub fn random_features(n: usize, f: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n * f).map(|_| rng.f32() - 0.5).collect()
+}
+
+/// Exact CSR SpMM (cuSPARSE role) median kernel time.
+///
+/// All kernel timings here are single-threaded so the ratios reflect the
+/// *algorithmic* work (the paper compares kernels on the same GPU; mixing
+/// thread counts would skew who-wins). The multi-threaded variants are
+/// benchmarked separately in `benches/spmm_kernels.rs`.
+pub fn time_exact(csr: &Csr, b: &[f32], f: usize, quick: bool) -> Duration {
+    let mut out = vec![0.0f32; csr.n_rows * f];
+    bencher(quick).run("exact", || csr_naive(csr, b, f, &mut out)).median
+}
+
+/// GE-SpMM analog (row caching + warp merging) median kernel time.
+pub fn time_rowcache(csr: &Csr, b: &[f32], f: usize, quick: bool) -> Duration {
+    let mut out = vec![0.0f32; csr.n_rows * f];
+    bencher(quick).run("rowcache", || csr_rowcache(csr, b, f, &mut out)).median
+}
+
+/// Sampled kernel (sampling + multiply, like the fused GPU launch):
+/// in-kernel sampling into a reused ELL tile (the shared-memory stand-in)
+/// then the multiply, single thread, no allocation in the loop.
+pub fn time_sampled(
+    csr: &Csr,
+    width: usize,
+    strategy: Strategy,
+    b: &[f32],
+    f: usize,
+    quick: bool,
+) -> Duration {
+    let mut out = vec![0.0f32; csr.n_rows * f];
+    let mut ell = crate::graph::Ell::zeros(csr.n_rows, csr.n_cols, width);
+    bencher(quick)
+        .run("sampled", || {
+            sample_ell_par(csr, width, strategy, &mut ell, 1);
+            crate::spmm::ell_spmm(&ell, b, f, &mut out);
+        })
+        .median
+}

@@ -1,0 +1,75 @@
+//! Experiment harness — one runner per figure/table of the paper's
+//! evaluation (DESIGN.md §6). Each runner prints the same rows/series the
+//! paper reports and returns them as structured data for EXPERIMENTS.md.
+
+mod fig2;
+mod fig3;
+mod fig5;
+mod fig6;
+mod fig7;
+mod kerntime;
+mod report;
+mod tab1;
+mod tab3;
+
+pub use fig2::run_fig2;
+pub use fig3::run_fig3;
+pub use fig5::run_fig5;
+pub use fig6::run_fig6;
+pub use fig7::run_fig7;
+pub use report::{write_report, Table};
+pub use tab1::run_tab1;
+pub use tab3::run_tab3;
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use crate::runtime::Engine;
+
+/// Shared context for all experiment runners.
+pub struct ExpContext {
+    pub engine: Arc<Engine>,
+    pub out_dir: std::path::PathBuf,
+    /// Smaller sweeps for smoke runs (integration tests / CI).
+    pub quick: bool,
+}
+
+impl ExpContext {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>, quick: bool) -> Result<Self> {
+        let engine = Arc::new(Engine::new(&artifacts_dir)?);
+        let out_dir = artifacts_dir.as_ref().join("reports");
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Self { engine, out_dir, quick })
+    }
+
+    /// The W sweep to use (manifest widths, truncated in quick mode).
+    pub fn widths(&self) -> Vec<usize> {
+        let w = self.engine.manifest().widths.clone();
+        if self.quick {
+            w.into_iter().take(2).collect()
+        } else {
+            w
+        }
+    }
+}
+
+/// Dispatch an experiment by id ("fig2".."fig7", "tab1", "tab3", "all").
+pub fn run(ctx: &ExpContext, id: &str) -> Result<Vec<Table>> {
+    Ok(match id {
+        "fig2" => vec![run_fig2(ctx)?],
+        "fig3" => vec![run_fig3(ctx)?],
+        "fig5" => vec![run_fig5(ctx)?],
+        "fig6" => vec![run_fig6(ctx)?],
+        "fig7" => vec![run_fig7(ctx)?],
+        "tab1" => vec![run_tab1(ctx)?],
+        "tab3" => vec![run_tab3(ctx)?],
+        "all" => {
+            let mut all = Vec::new();
+            for id in ["tab1", "fig5", "fig2", "fig3", "fig6", "fig7", "tab3"] {
+                all.extend(run(ctx, id)?);
+            }
+            all
+        }
+        _ => bail!("unknown experiment {id:?} (try fig2/fig3/fig5/fig6/fig7/tab1/tab3/all)"),
+    })
+}

@@ -1,0 +1,88 @@
+//! Report tables: a tiny tabular container the experiment runners fill,
+//! printed to stdout as markdown and written to `artifacts/reports/*.md`
+//! + `.csv` for EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A named table with a caption tying it to the paper artifact.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub id: String,
+    pub caption: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(id: impl Into<String>, caption: impl Into<String>, columns: &[&str]) -> Self {
+        Self {
+            id: id.into(),
+            caption: caption.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.columns.len(), "row width mismatch in {}", self.id);
+        self.rows.push(row);
+    }
+
+    /// Markdown rendering (what EXPERIMENTS.md embeds).
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {} — {}\n", self.id, self.caption);
+        let _ = writeln!(s, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(s, "|{}|", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            let _ = writeln!(s, "| {} |", row.join(" | "));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.columns.join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.join(","));
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("\n{}", self.to_markdown());
+    }
+}
+
+/// Write a table as both markdown and CSV under `dir`.
+pub fn write_report(dir: impl AsRef<Path>, table: &Table) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::write(dir.join(format!("{}.md", table.id)), table.to_markdown())?;
+    std::fs::write(dir.join(format!("{}.csv", table.id)), table.to_csv())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_and_csv() {
+        let mut t = Table::new("t1", "demo", &["a", "b"]);
+        t.push(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut t = Table::new("t", "d", &["a"]);
+        t.push(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,52 @@
+//! Table 1 — the adaptive strategy table itself, plus a census of which
+//! regime each dataset's rows actually land in at each W (this is the
+//! mechanism behind every other result: the regime mix determines both
+//! accuracy loss and sampling cost).
+
+use anyhow::Result;
+
+use crate::runtime::Dataset;
+use crate::sampling::{strategy_params, Strategy};
+
+use super::report::Table;
+use super::ExpContext;
+
+pub fn run_tab1(ctx: &ExpContext) -> Result<Table> {
+    let mut table = Table::new(
+        "tab1",
+        "Table 1 census: fraction of rows per AES regime (R = row_nnz / W)",
+        &["dataset", "W", "R<=1 (all)", "R<=2 (N=W/4)", "R<=36 (N=W/8)", "R<=54 (N=W/16)", "R>54 (N=W/32)"],
+    );
+    for ds_name in ctx.engine.manifest().dataset_names() {
+        let ds = Dataset::load(&ctx.engine.manifest().dir, &ds_name)?;
+        for &w in &ctx.widths() {
+            let mut counts = [0usize; 5];
+            for i in 0..ds.n {
+                let nnz = ds.csr_gcn.row_nnz(i);
+                let idx = if nnz <= w {
+                    0
+                } else if nnz <= 2 * w {
+                    1
+                } else if nnz <= 36 * w {
+                    2
+                } else if nnz <= 54 * w {
+                    3
+                } else {
+                    4
+                };
+                counts[idx] += 1;
+                // Cross-check the census against the canonical table.
+                let p = strategy_params(nnz, w, Strategy::Aes);
+                debug_assert!(p.slots <= w);
+            }
+            let mut row = vec![ds_name.clone(), w.to_string()];
+            for c in counts {
+                row.push(format!("{:.1}%", 100.0 * c as f64 / ds.n as f64));
+            }
+            table.push(row);
+        }
+    }
+    table.print();
+    super::report::write_report(&ctx.out_dir, &table)?;
+    Ok(table)
+}

@@ -1,0 +1,100 @@
+//! Table 3 — feature loading time as a fraction of total inference time:
+//! AFS and SFS load fp32 features; quantization-based AES-SpMM loads INT8
+//! and dequantizes on device. The paper's claim in shape: the INT8 rows
+//! sit well below the fp32 rows at every W (50.91–70.51 % less loading
+//! time), with the ratio shrinking as W (compute) grows.
+
+use anyhow::Result;
+
+use crate::quant::{FeatureStore, Features, Precision};
+use crate::runtime::{run_forward, Dataset, ForwardRequest, Weights};
+use crate::sampling::Strategy;
+
+use super::report::Table;
+use super::ExpContext;
+
+pub fn run_tab3(ctx: &ExpContext) -> Result<Table> {
+    let mut table = Table::new(
+        "tab3",
+        "Feature loading time ratio (% of load+compute) and loading-time reduction of INT8 vs fp32",
+        &["model", "dataset", "W", "afs %", "sfs %", "aes+int8 %", "bytes cut", "load cut"],
+    );
+    let manifest = ctx.engine.manifest();
+    let models: &[&str] = if ctx.quick { &["gcn"] } else { &["gcn", "sage"] };
+    let datasets = if ctx.quick {
+        vec!["cora".to_string()]
+    } else {
+        manifest.dataset_names()
+    };
+    let reps = if ctx.quick { 3 } else { 7 };
+
+    for &model in models {
+        for ds_name in &datasets {
+            let ds = Dataset::load(&manifest.dir, ds_name)?;
+            let weights = Weights::load(&manifest.dir, model, ds_name)?;
+            let fstore = FeatureStore::open(manifest.dir.join(format!("data_{ds_name}.nbt")))?;
+            for &w in &ctx.widths() {
+                let mut pct = Vec::new();
+                let mut f32_load = f64::INFINITY;
+                let mut int8_load = f64::INFINITY;
+                let mut f32_bytes = 0usize;
+                let mut int8_bytes = 0usize;
+                for (strategy, precision) in [
+                    (Strategy::Afs, Precision::F32),
+                    (Strategy::Sfs, Precision::F32),
+                    (Strategy::Aes, Precision::U8Device),
+                ] {
+                    // Median over reps — single loads are dominated by
+                    // page-cache / PJRT-staging jitter at these sizes.
+                    let mut loads = Vec::with_capacity(reps);
+                    let mut comps = Vec::with_capacity(reps);
+                    for _ in 0..reps {
+                        let (feats, lstats) = fstore.load(precision)?;
+                        let feat = match feats {
+                            Features::Dense(t) => t,
+                            Features::Quantized { q, .. } => q,
+                        };
+                        match precision {
+                            Precision::F32 => f32_bytes = lstats.bytes_read,
+                            _ => int8_bytes = lstats.bytes_read,
+                        }
+                        let req = ForwardRequest {
+                            model: model.into(),
+                            dataset: ds_name.clone(),
+                            width: Some(w),
+                            strategy,
+                            precision,
+                        };
+                        let result = run_forward(&ctx.engine, &ds, &weights, &req, Some(&feat))?;
+                        // Loading = storage read + host→device transfer
+                        // (PCIe analog); compute = device execute + fetch.
+                        loads.push((lstats.total() + result.stats.transfer).as_secs_f64());
+                        comps.push((result.stats.execute + result.stats.fetch).as_secs_f64());
+                    }
+                    loads.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    comps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let load_m = loads[loads.len() / 2];
+                    let comp_m = comps[comps.len() / 2];
+                    pct.push(100.0 * load_m / (load_m + comp_m));
+                    match precision {
+                        Precision::F32 => f32_load = f32_load.min(load_m),
+                        _ => int8_load = load_m,
+                    }
+                }
+                table.push(vec![
+                    model.into(),
+                    ds_name.clone(),
+                    w.to_string(),
+                    format!("{:.2}", pct[0]),
+                    format!("{:.2}", pct[1]),
+                    format!("{:.2}", pct[2]),
+                    format!("-{:.1}%", 100.0 * (1.0 - int8_bytes as f64 / f32_bytes as f64)),
+                    format!("{:+.1}%", 100.0 * (int8_load / f32_load - 1.0)),
+                ]);
+            }
+        }
+    }
+    table.print();
+    super::report::write_report(&ctx.out_dir, &table)?;
+    Ok(table)
+}

@@ -1,0 +1,254 @@
+//! Graph generators: Erdős–Rényi, Chung-Lu power-law, degree-corrected
+//! SBM (the dataset-analog model), and RMAT (skew stress test).
+//!
+//! All generators return validated, deduplicated, symmetric CSR graphs
+//! with unit values; callers re-weight (e.g. [`crate::graph::Csr::gcn_normalized`]).
+
+use std::collections::HashSet;
+
+use crate::graph::{coo_to_csr, Csr};
+use crate::rng::Pcg32;
+
+/// Deduplicate + symmetrize COO pairs and build a unit-valued CSR.
+fn build_symmetric(n: usize, pairs: impl IntoIterator<Item = (u32, u32)>) -> Csr {
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut triples: Vec<(i32, i32, f32)> = Vec::new();
+    for (u, v) in pairs {
+        if u == v {
+            continue;
+        }
+        let key = ((u.min(v) as u64) << 32) | u.max(v) as u64;
+        if seen.insert(key) {
+            triples.push((u as i32, v as i32, 1.0));
+            triples.push((v as i32, u as i32, 1.0));
+        }
+    }
+    coo_to_csr(n, n, triples).expect("generator produced invalid CSR")
+}
+
+/// G(n, m): `m` uniform random undirected edges (deduplicated).
+pub fn erdos_renyi(n: usize, m: usize, rng: &mut Pcg32) -> Csr {
+    let pairs = (0..m).map(|_| (rng.below(n as u32), rng.below(n as u32)));
+    build_symmetric(n, pairs.collect::<Vec<_>>())
+}
+
+/// Chung-Lu with power-law expected degrees: weight_i ∝ (i+i0)^(-1/(γ-1)),
+/// shuffled, scaled to hit `avg_deg`. Endpoints drawn weight-biased via a
+/// cumulative table + binary search.
+pub fn chung_lu(n: usize, avg_deg: f64, gamma: f64, rng: &mut Pcg32) -> Csr {
+    let weights = power_law_weights(n, gamma, rng);
+    let cum = cumulative(&weights);
+    let m = (avg_deg * n as f64 / 2.0) as usize;
+    let pairs: Vec<(u32, u32)> = (0..m)
+        .map(|_| (draw(&cum, rng) as u32, draw(&cum, rng) as u32))
+        .collect();
+    build_symmetric(n, pairs)
+}
+
+/// Configuration for the degree-corrected SBM used by the dataset analogs.
+#[derive(Clone, Debug)]
+pub struct DcSbmConfig {
+    pub n: usize,
+    pub avg_deg: f64,
+    /// Power-law exponent for expected degrees; 0.0 = mild lognormal-free
+    /// uniform weights.
+    pub gamma: f64,
+    pub communities: usize,
+    /// Probability an edge's second endpoint stays within the community.
+    pub homophily: f64,
+}
+
+/// Degree-corrected SBM. Returns (graph, community labels).
+pub fn dc_sbm(cfg: &DcSbmConfig, rng: &mut Pcg32) -> (Csr, Vec<i32>) {
+    let n = cfg.n;
+    let comm: Vec<i32> = (0..n).map(|_| rng.below(cfg.communities as u32) as i32).collect();
+    let weights = if cfg.gamma > 0.0 {
+        power_law_weights(n, cfg.gamma, rng)
+    } else {
+        vec![1.0; n]
+    };
+    let cum = cumulative(&weights);
+
+    // Per-community cumulative tables for the homophilous draws.
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); cfg.communities];
+    for (i, &c) in comm.iter().enumerate() {
+        members[c as usize].push(i);
+    }
+    let member_cums: Vec<(Vec<f64>, &Vec<usize>)> = members
+        .iter()
+        .map(|ms| {
+            let w: Vec<f64> = ms.iter().map(|&i| weights[i]).collect();
+            (cumulative(&w), ms)
+        })
+        .collect();
+
+    let m = (cfg.avg_deg * n as f64 / 2.0) as usize;
+    let mut pairs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = draw(&cum, rng);
+        let v = if (rng.f64() < cfg.homophily) && !members[comm[u] as usize].is_empty() {
+            let (mcum, ms) = &member_cums[comm[u] as usize];
+            ms[draw(mcum, rng)]
+        } else {
+            draw(&cum, rng)
+        };
+        pairs.push((u as u32, v as u32));
+    }
+    (build_symmetric(n, pairs), comm)
+}
+
+/// RMAT (Chakrabarti et al.): recursive quadrant splits, heavy skew.
+pub fn rmat(scale: u32, avg_deg: f64, rng: &mut Pcg32) -> Csr {
+    let n = 1usize << scale;
+    let m = (avg_deg * n as f64 / 2.0) as usize;
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let pairs: Vec<(u32, u32)> = (0..m)
+        .map(|_| {
+            let (mut u, mut v) = (0u32, 0u32);
+            for _ in 0..scale {
+                let r = rng.f64();
+                let (du, dv) = if r < a {
+                    (0, 0)
+                } else if r < a + b {
+                    (0, 1)
+                } else if r < a + b + c {
+                    (1, 0)
+                } else {
+                    (1, 1)
+                };
+                u = (u << 1) | du;
+                v = (v << 1) | dv;
+            }
+            (u, v)
+        })
+        .collect();
+    build_symmetric(n, pairs)
+}
+
+/// Add self loops (GCN's A + I) to every node, keeping CSR sorted.
+pub fn with_self_loops(csr: &Csr) -> Csr {
+    let mut triples: Vec<(i32, i32, f32)> = Vec::with_capacity(csr.nnz() + csr.n_rows);
+    for i in 0..csr.n_rows {
+        let mut has_self = false;
+        for e in csr.row_range(i) {
+            triples.push((i as i32, csr.col_ind[e], csr.val[e]));
+            has_self |= csr.col_ind[e] as usize == i;
+        }
+        if !has_self {
+            triples.push((i as i32, i as i32, 1.0));
+        }
+    }
+    coo_to_csr(csr.n_rows, csr.n_cols, triples).expect("self-loop augmentation broke CSR")
+}
+
+fn power_law_weights(n: usize, gamma: f64, rng: &mut Pcg32) -> Vec<f64> {
+    let mut w: Vec<f64> = (1..=n)
+        .map(|i| ((i + 10) as f64).powf(-1.0 / (gamma - 1.0)))
+        .collect();
+    rng.shuffle(&mut w);
+    w
+}
+
+fn cumulative(weights: &[f64]) -> Vec<f64> {
+    let mut cum = Vec::with_capacity(weights.len());
+    let mut acc = 0.0;
+    for &w in weights {
+        acc += w;
+        cum.push(acc);
+    }
+    cum
+}
+
+/// Weight-biased index draw via binary search on the cumulative table.
+fn draw(cum: &[f64], rng: &mut Pcg32) -> usize {
+    let total = *cum.last().expect("empty weight table");
+    let x = rng.f64() * total;
+    cum.partition_point(|&c| c <= x).min(cum.len() - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erdos_renyi_basic_shape() {
+        let mut rng = Pcg32::new(1);
+        let g = erdos_renyi(200, 800, &mut rng);
+        g.validate().unwrap();
+        assert_eq!(g.n_rows, 200);
+        // symmetric + dedup: nnz is even and <= 2*m
+        assert_eq!(g.nnz() % 2, 0);
+        assert!(g.nnz() <= 1600);
+        assert!(g.nnz() > 1000, "dedup shouldn't eat most edges at this density");
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let g1 = chung_lu(300, 10.0, 2.0, &mut Pcg32::new(7));
+        let g2 = chung_lu(300, 10.0, 2.0, &mut Pcg32::new(7));
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn chung_lu_hits_target_degree_and_skew() {
+        let mut rng = Pcg32::new(2);
+        let g = chung_lu(2000, 30.0, 1.8, &mut rng);
+        g.validate().unwrap();
+        // Dedup collapses repeated hub pairs, so realized degree sits below
+        // the 30 requested; it must still be in the right ballpark.
+        let avg = g.avg_degree();
+        assert!((15.0..40.0).contains(&avg), "avg degree {avg} too far from 30");
+        // Power law: max degree far above mean.
+        assert!(g.max_degree() as f64 > 4.0 * avg, "expected heavy tail");
+    }
+
+    #[test]
+    fn symmetry_holds() {
+        let mut rng = Pcg32::new(3);
+        let g = chung_lu(400, 8.0, 2.0, &mut rng);
+        let t = g.transpose();
+        assert_eq!(g, t, "undirected graph should equal its transpose");
+    }
+
+    #[test]
+    fn dc_sbm_homophily_measurable() {
+        let mut rng = Pcg32::new(4);
+        let cfg = DcSbmConfig { n: 1000, avg_deg: 20.0, gamma: 0.0, communities: 5, homophily: 0.9 };
+        let (g, comm) = dc_sbm(&cfg, &mut rng);
+        g.validate().unwrap();
+        let mut intra = 0usize;
+        for i in 0..g.n_rows {
+            for e in g.row_range(i) {
+                if comm[i] == comm[g.col_ind[e] as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        let frac = intra as f64 / g.nnz() as f64;
+        // Homophilous second endpoint + random first: expect well above 1/5.
+        assert!(frac > 0.6, "intra-community fraction {frac} too low");
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let mut rng = Pcg32::new(5);
+        let g = rmat(10, 16.0, &mut rng);
+        g.validate().unwrap();
+        assert!(g.max_degree() > 8 * g.avg_degree() as usize);
+    }
+
+    #[test]
+    fn self_loops_present_and_idempotent() {
+        let mut rng = Pcg32::new(6);
+        let g = with_self_loops(&erdos_renyi(100, 300, &mut rng));
+        g.validate().unwrap();
+        for i in 0..g.n_rows {
+            assert!(
+                g.row_range(i).any(|e| g.col_ind[e] as usize == i),
+                "node {i} lacks self loop"
+            );
+        }
+        let g2 = with_self_loops(&g);
+        assert_eq!(g.nnz(), g2.nnz(), "idempotent");
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic graph generators — workload substrate for benches, property
+//! tests, and standalone experiments (dataset artifacts themselves are
+//! generated once at build time by `python/compile/datagen.py`; these
+//! rust generators produce *structurally equivalent* graphs for the parts
+//! of the evaluation that live purely in rust, e.g. the Fig. 7 CPU kernel
+//! sweeps and the coordinator load tests).
+
+mod generators;
+
+pub use generators::{chung_lu, dc_sbm, erdos_renyi, rmat, with_self_loops, DcSbmConfig};

@@ -1,0 +1,232 @@
+//! Compressed Sparse Row storage (paper §2.2) — `row_ptr` / `col_ind` /
+//! `val`, the format cuSPARSE, DGL, and the AES-SpMM kernel all consume
+//! directly (no conversion on the inference path).
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::NbtFile;
+
+/// A sparse matrix in CSR form. For graphs, rows are destination nodes and
+/// `col_ind[e]` is the source of edge `e` (so SpMM aggregates in-neighbors).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<i32>,
+    pub col_ind: Vec<i32>,
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    /// Build and validate. `row_ptr` must be monotone with
+    /// `row_ptr[0] == 0`, `row_ptr[n] == nnz`, and all columns in range.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        row_ptr: Vec<i32>,
+        col_ind: Vec<i32>,
+        val: Vec<f32>,
+    ) -> Result<Self> {
+        let csr = Self { n_rows, n_cols, row_ptr, col_ind, val };
+        csr.validate()?;
+        Ok(csr)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.n_rows + 1 {
+            bail!("row_ptr len {} != n_rows+1 {}", self.row_ptr.len(), self.n_rows + 1);
+        }
+        if self.row_ptr[0] != 0 {
+            bail!("row_ptr[0] = {} != 0", self.row_ptr[0]);
+        }
+        for i in 0..self.n_rows {
+            if self.row_ptr[i + 1] < self.row_ptr[i] {
+                bail!("row_ptr not monotone at row {i}");
+            }
+        }
+        let nnz = *self.row_ptr.last().unwrap() as usize;
+        if self.col_ind.len() != nnz || self.val.len() != nnz {
+            bail!(
+                "nnz mismatch: row_ptr says {nnz}, col_ind {} val {}",
+                self.col_ind.len(),
+                self.val.len()
+            );
+        }
+        if let Some(&c) = self.col_ind.iter().find(|&&c| c < 0 || c as usize >= self.n_cols) {
+            bail!("column index {c} out of range [0, {})", self.n_cols);
+        }
+        Ok(())
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_ind.len()
+    }
+
+    pub fn row_nnz(&self, row: usize) -> usize {
+        (self.row_ptr[row + 1] - self.row_ptr[row]) as usize
+    }
+
+    /// Byte range of one row within col_ind/val.
+    pub fn row_range(&self, row: usize) -> std::ops::Range<usize> {
+        self.row_ptr[row] as usize..self.row_ptr[row + 1] as usize
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        self.nnz() as f64 / self.n_rows.max(1) as f64
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n_rows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
+    }
+
+    /// Sparsity in percent, as Table 2 reports it.
+    pub fn sparsity_pct(&self) -> f64 {
+        100.0 * self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+
+    /// Expand to per-edge row ids (input of the segment-sum baseline HLO).
+    pub fn row_ids(&self) -> Vec<i32> {
+        let mut ids = Vec::with_capacity(self.nnz());
+        for i in 0..self.n_rows {
+            ids.extend(std::iter::repeat(i as i32).take(self.row_nnz(i)));
+        }
+        ids
+    }
+
+    /// Load the CSR stored in a dataset `.nbt` (keys from datagen.py).
+    pub fn from_nbt(nbt: &NbtFile, val_key: &str) -> Result<Self> {
+        let row_ptr = nbt.get("row_ptr")?.as_i32()?.to_vec();
+        let col_ind = nbt.get("col_ind")?.as_i32()?.to_vec();
+        let val = nbt.get(val_key).with_context(|| format!("val key {val_key}"))?;
+        let n = row_ptr.len() - 1;
+        Csr::new(n, n, row_ptr, col_ind, val.as_f32()?.to_vec())
+    }
+
+    /// GCN symmetric normalization: val[e] = 1/sqrt(deg(row) * deg(col)).
+    /// (Self-loops must already be present in the structure.)
+    pub fn gcn_normalized(&self) -> Csr {
+        let deg: Vec<f64> = (0..self.n_rows).map(|i| self.row_nnz(i).max(1) as f64).collect();
+        let mut out = self.clone();
+        for i in 0..self.n_rows {
+            for e in self.row_range(i) {
+                let j = self.col_ind[e] as usize;
+                out.val[e] = (1.0 / (deg[i] * deg[j]).sqrt()) as f32;
+            }
+        }
+        out
+    }
+
+    /// Transpose (also converts dst-major to src-major). O(nnz).
+    pub fn transpose(&self) -> Csr {
+        let mut deg = vec![0i32; self.n_cols];
+        for &c in &self.col_ind {
+            deg[c as usize] += 1;
+        }
+        let mut row_ptr = vec![0i32; self.n_cols + 1];
+        for i in 0..self.n_cols {
+            row_ptr[i + 1] = row_ptr[i] + deg[i];
+        }
+        let mut cursor: Vec<i32> = row_ptr[..self.n_cols].to_vec();
+        let mut col_ind = vec![0i32; self.nnz()];
+        let mut val = vec![0f32; self.nnz()];
+        for i in 0..self.n_rows {
+            for e in self.row_range(i) {
+                let c = self.col_ind[e] as usize;
+                let slot = cursor[c] as usize;
+                cursor[c] += 1;
+                col_ind[slot] = i as i32;
+                val[slot] = self.val[e];
+            }
+        }
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, row_ptr, col_ind, val }
+    }
+}
+
+/// Build a CSR from COO triples (row, col, val). Sorts, keeps duplicates.
+pub fn coo_to_csr(
+    n_rows: usize,
+    n_cols: usize,
+    mut triples: Vec<(i32, i32, f32)>,
+) -> Result<Csr> {
+    triples.sort_unstable_by_key(|&(r, c, _)| ((r as i64) << 32) | c as i64 as i64 & 0xffff_ffff);
+    let mut row_ptr = vec![0i32; n_rows + 1];
+    for &(r, _, _) in &triples {
+        if r < 0 || r as usize >= n_rows {
+            bail!("row {r} out of range");
+        }
+        row_ptr[r as usize + 1] += 1;
+    }
+    for i in 0..n_rows {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let col_ind = triples.iter().map(|&(_, c, _)| c).collect();
+    let val = triples.iter().map(|&(_, _, v)| v).collect();
+    Csr::new(n_rows, n_cols, row_ptr, col_ind, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // 3x3: row0 {0:1.0, 2:2.0}, row1 {}, row2 {1:3.0}
+        Csr::new(3, 3, vec![0, 2, 2, 3], vec![0, 2, 1], vec![1.0, 2.0, 3.0]).unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let m = sample();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        assert_eq!(m.max_degree(), 2);
+        assert!((m.avg_degree() - 1.0).abs() < 1e-12);
+        assert_eq!(m.row_ids(), vec![0, 0, 2]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        assert!(Csr::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err(), "short row_ptr");
+        assert!(Csr::new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err(), "non-monotone");
+        assert!(Csr::new(2, 2, vec![0, 1, 2], vec![0, 5], vec![1.0, 1.0]).is_err(), "col range");
+        assert!(Csr::new(2, 2, vec![1, 1, 2], vec![0], vec![1.0]).is_err(), "row_ptr[0] != 0");
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = coo_to_csr(3, 3, vec![(2, 1, 3.0), (0, 0, 1.0), (0, 2, 2.0)]).unwrap();
+        assert_eq!(m, sample());
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let m = sample();
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_moves_entries() {
+        let t = sample().transpose();
+        // (0,0,1.0) stays; (0,2,2.0) -> (2,0); (2,1,3.0) -> (1,2)
+        assert_eq!(t.row_ptr, vec![0, 1, 2, 3]);
+        assert_eq!(t.col_ind, vec![0, 2, 0]);
+        assert_eq!(t.val, vec![1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn gcn_normalization_symmetric_graph() {
+        // 2-node graph with self loops + one edge both ways: all degs 2.
+        let m = Csr::new(
+            2,
+            2,
+            vec![0, 2, 4],
+            vec![0, 1, 0, 1],
+            vec![1.0; 4],
+        )
+        .unwrap();
+        let g = m.gcn_normalized();
+        for v in g.val {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+}

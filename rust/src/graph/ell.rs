@@ -1,0 +1,121 @@
+//! ELL (padded fixed-width) storage — the host-side model of the paper's
+//! shared-memory tile: every row holds exactly `width` (val, col) slots,
+//! padding slots are (0.0, 0). The sampling planners in [`crate::sampling`]
+//! produce this form; [`crate::spmm::ell`] multiplies it.
+
+use anyhow::{bail, Result};
+
+/// Fixed-width sampled matrix. `slots[i]` counts valid entries in row `i`
+/// (matching the `slots` output of the L1 `aes_sample` kernel).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ell {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub width: usize,
+    /// Row-major `[n_rows * width]` values; padding = 0.0.
+    pub val: Vec<f32>,
+    /// Row-major `[n_rows * width]` column indices; padding = 0.
+    pub col: Vec<i32>,
+    /// Valid slots per row.
+    pub slots: Vec<i32>,
+}
+
+impl Ell {
+    pub fn zeros(n_rows: usize, n_cols: usize, width: usize) -> Self {
+        Self {
+            n_rows,
+            n_cols,
+            width,
+            val: vec![0.0; n_rows * width],
+            col: vec![0; n_rows * width],
+            slots: vec![0; n_rows],
+        }
+    }
+
+    pub fn row_val(&self, row: usize) -> &[f32] {
+        &self.val[row * self.width..(row + 1) * self.width]
+    }
+
+    pub fn row_col(&self, row: usize) -> &[i32] {
+        &self.col[row * self.width..(row + 1) * self.width]
+    }
+
+    /// Total valid slots (the "kept edges" numerator of Fig. 5, before
+    /// capping draws at row_nnz).
+    pub fn total_slots(&self) -> usize {
+        self.slots.iter().map(|&s| s as usize).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.val.len() != self.n_rows * self.width
+            || self.col.len() != self.n_rows * self.width
+            || self.slots.len() != self.n_rows
+        {
+            bail!("ELL buffer sizes inconsistent with n_rows={} width={}", self.n_rows, self.width);
+        }
+        for (i, &s) in self.slots.iter().enumerate() {
+            if s < 0 || s as usize > self.width {
+                bail!("row {i}: slots {s} outside [0, {}]", self.width);
+            }
+        }
+        if let Some(&c) = self.col.iter().find(|&&c| c < 0 || c as usize >= self.n_cols) {
+            bail!("ELL column {c} out of range [0, {})", self.n_cols);
+        }
+        // Padding slots must be exactly (0.0, 0) so the dense multiply can
+        // skip masking.
+        for i in 0..self.n_rows {
+            let s = self.slots[i] as usize;
+            for k in s..self.width {
+                if self.val[i * self.width + k] != 0.0 || self.col[i * self.width + k] != 0 {
+                    bail!("row {i} slot {k}: padding not zeroed");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_is_valid() {
+        let e = Ell::zeros(4, 4, 8);
+        e.validate().unwrap();
+        assert_eq!(e.total_slots(), 0);
+    }
+
+    #[test]
+    fn validate_catches_dirty_padding() {
+        let mut e = Ell::zeros(2, 2, 4);
+        e.slots[0] = 1;
+        e.val[0] = 2.0;
+        e.col[0] = 1;
+        e.validate().unwrap();
+        e.val[3] = 5.0; // padding slot
+        assert!(e.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut e = Ell::zeros(2, 2, 2);
+        e.slots[1] = 3; // > width
+        assert!(e.validate().is_err());
+        let mut e = Ell::zeros(2, 2, 2);
+        e.col[0] = 9;
+        e.slots[0] = 1;
+        assert!(e.validate().is_err());
+    }
+
+    #[test]
+    fn row_views() {
+        let mut e = Ell::zeros(2, 3, 2);
+        e.val.copy_from_slice(&[1.0, 2.0, 3.0, 0.0]);
+        e.col.copy_from_slice(&[0, 1, 2, 0]);
+        e.slots = vec![2, 1];
+        assert_eq!(e.row_val(0), &[1.0, 2.0]);
+        assert_eq!(e.row_col(1), &[2, 0]);
+        assert_eq!(e.total_slots(), 3);
+    }
+}

@@ -1,0 +1,11 @@
+//! Graph structures: CSR (the kernel input format, §2.2 of the paper),
+//! ELL (the sampled fixed-width form that models the shared-memory tile),
+//! COO↔CSR conversion, validation, and degree statistics.
+
+mod csr;
+mod ell;
+mod stats;
+
+pub use csr::{coo_to_csr, Csr};
+pub use ell::Ell;
+pub use stats::{degree_cdf, DegreeStats};

@@ -1,0 +1,101 @@
+//! Degree statistics — drives the Fig. 5 analysis (how the degree
+//! distribution interacts with the shared-memory width W) and the Table 2
+//! dataset summary printed by `repro inspect`.
+
+use super::Csr;
+
+/// Summary statistics over row degrees.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub median: usize,
+    pub p90: usize,
+    pub p99: usize,
+    /// Fraction of rows with degree <= W, for each probe width.
+    pub frac_within: Vec<(usize, f64)>,
+}
+
+const PROBE_WIDTHS: [usize; 7] = [16, 32, 64, 128, 256, 512, 1024];
+
+impl DegreeStats {
+    pub fn of(csr: &Csr) -> Self {
+        let mut degs: Vec<usize> = (0..csr.n_rows).map(|i| csr.row_nnz(i)).collect();
+        degs.sort_unstable();
+        let n = degs.len().max(1);
+        let pick = |q: f64| degs[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        let frac_within = PROBE_WIDTHS
+            .iter()
+            .map(|&w| {
+                let cnt = degs.partition_point(|&d| d <= w);
+                (w, cnt as f64 / n as f64)
+            })
+            .collect();
+        DegreeStats {
+            min: *degs.first().unwrap_or(&0),
+            max: *degs.last().unwrap_or(&0),
+            mean: degs.iter().sum::<usize>() as f64 / n as f64,
+            median: pick(0.5),
+            p90: pick(0.9),
+            p99: pick(0.99),
+            frac_within,
+        }
+    }
+}
+
+/// Empirical CDF of row degrees evaluated at each degree in `points`.
+pub fn degree_cdf(csr: &Csr, points: &[usize]) -> Vec<f64> {
+    let mut degs: Vec<usize> = (0..csr.n_rows).map(|i| csr.row_nnz(i)).collect();
+    degs.sort_unstable();
+    let n = degs.len().max(1) as f64;
+    points
+        .iter()
+        .map(|&p| degs.partition_point(|&d| d <= p) as f64 / n)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_graph(n: usize) -> Csr {
+        // Row i has exactly i nonzeros (col 0 repeated) for easy checking.
+        let mut row_ptr = vec![0i32];
+        let mut col = Vec::new();
+        for i in 0..n {
+            for _ in 0..i {
+                col.push(0);
+            }
+            row_ptr.push(col.len() as i32);
+        }
+        let val = vec![1.0; col.len()];
+        Csr::new(n, n, row_ptr, col, val).unwrap()
+    }
+
+    #[test]
+    fn stats_on_known_degrees() {
+        let g = line_graph(101); // degrees 0..=100
+        let s = DegreeStats::of(&g);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 100);
+        assert_eq!(s.median, 50);
+        assert!((s.mean - 50.0).abs() < 1e-9);
+        assert_eq!(s.p90, 90);
+        // 17 of 101 rows have degree <= 16
+        let w16 = s.frac_within.iter().find(|&&(w, _)| w == 16).unwrap().1;
+        assert!((w16 - 17.0 / 101.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let g = line_graph(50);
+        let pts: Vec<usize> = (0..60).collect();
+        let cdf = degree_cdf(&g, &pts);
+        for w in cdf.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(cdf.iter().all(|&c| (0.0..=1.0).contains(&c)));
+        assert_eq!(*cdf.last().unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! AES-SpMM reproduction — Layer-3 coordinator and substrates.
+//!
+//! Reproduces "AES-SpMM: Balancing Accuracy and Speed by Adaptive Edge
+//! Sampling Strategy to Accelerate SpMM in GNNs" (Song et al., 2025) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** (build time): Pallas kernels implementing the paper's adaptive
+//!   edge sampling (Table 1 + Eq. 3) and the sampled SpMM (Algorithm 1).
+//! * **L2** (build time): GCN / GraphSAGE forward passes in JAX, lowered
+//!   once to HLO text per (model, dataset, W).
+//! * **L3** (this crate): the GNN inference serving system — graph store,
+//!   fp32 + INT8 feature store, sampling planner, dynamic request batcher,
+//!   PJRT executor pool, metrics, experiment harness, CLI.
+//!
+//! Python never runs on the request path: the binary is self-contained
+//! once `make artifacts` has produced `artifacts/*.hlo.txt` + `*.nbt`.
+//!
+//! Module map (DESIGN.md §5):
+//!
+//! | module        | role                                                  |
+//! |---------------|-------------------------------------------------------|
+//! | [`tensor`]    | `.nbt` named-binary-tensor container, dtypes          |
+//! | [`rng`]       | PCG32 / SplitMix64 (offline registry has no `rand`)   |
+//! | [`graph`]     | CSR / ELL structures, validation, degree statistics   |
+//! | [`gen`]       | synthetic graph generators (Chung-Lu, DC-SBM, RMAT)   |
+//! | [`sampling`]  | the paper's strategy table + hash, ELL planners, CDFs |
+//! | [`quant`]     | INT8 scalar quantization + instrumented feature store |
+//! | [`spmm`]      | CPU SpMM kernels (cuSPARSE / GE-SpMM analogs, ELL)    |
+//! | [`runtime`]   | PJRT engine: artifact registry, executables, literals |
+//! | [`coordinator`]| request router, dynamic batcher, worker pool, metrics|
+//! | [`experiments`]| one runner per paper figure/table                    |
+//! | [`bench`]     | micro-bench harness (no criterion offline)            |
+//! | [`util`]      | flat-JSON parsing/emission, timing helpers            |
+
+pub mod bench;
+pub mod coordinator;
+pub mod experiments;
+pub mod gen;
+pub mod graph;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod spmm;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,312 @@
+//! `repro` — the AES-SpMM leader binary.
+//!
+//! Subcommands (hand-rolled CLI; no clap in the offline registry):
+//!
+//! ```text
+//! repro inspect   [--artifacts DIR]                         dataset/artifact summary
+//! repro infer     --model M --dataset D [--width W]
+//!                 [--strategy afs|sfs|aes] [--quant]        one forward pass + accuracy
+//! repro serve     [--requests N] [--workers K]              run the coordinator demo load
+//! repro experiment <fig2|fig3|fig5|fig6|fig7|tab1|tab3|all> [--quick]
+//! repro gen-data  --nodes N --avg-deg D [--gamma G]         rust-side synthetic graph stats
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use aes_spmm::coordinator::{Coordinator, CoordinatorConfig, ModelStore, RouteKey};
+use aes_spmm::experiments::{self, ExpContext};
+use aes_spmm::gen;
+use aes_spmm::graph::DegreeStats;
+use aes_spmm::quant::Precision;
+use aes_spmm::rng::Pcg32;
+use aes_spmm::runtime::{accuracy, run_forward, Dataset, Engine, ForwardRequest, Weights};
+use aes_spmm::sampling::Strategy;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Minimal flag parser: positionals + `--key value` + boolean `--key`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+const USAGE: &str = "\
+repro — AES-SpMM reproduction (rust + JAX + Pallas, AOT via PJRT)
+
+USAGE:
+  repro inspect    [--artifacts DIR]
+  repro infer      --model gcn|sage --dataset NAME [--width W] [--strategy afs|sfs|aes] [--quant] [--artifacts DIR]
+  repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--artifacts DIR]
+  repro experiment fig2|fig3|fig5|fig6|fig7|tab1|tab3|all [--quick] [--artifacts DIR]
+  repro gen-data   [--nodes N] [--avg-deg D] [--gamma G] [--seed S]
+
+Run `make artifacts` first to produce the AOT artifacts.";
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match cmd.as_str() {
+        "inspect" => cmd_inspect(&artifacts),
+        "infer" => cmd_infer(&artifacts, &args),
+        "serve" => cmd_serve(&artifacts, &args),
+        "experiment" => cmd_experiment(&artifacts, &args),
+        "gen-data" => cmd_gen_data(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_inspect(artifacts: &str) -> Result<()> {
+    let engine = Engine::new(artifacts)?;
+    let m = engine.manifest();
+    println!("platform: {}", engine.platform());
+    println!("artifacts dir: {}", m.dir.display());
+    println!(
+        "\n{:<10} {:>7} {:>9} {:>6} {:>8} {:>9} {:>8}  ideal acc (gcn/sage)",
+        "dataset", "nodes", "edges", "feats", "classes", "avg deg", "max deg"
+    );
+    for name in m.dataset_names() {
+        let meta = m.dataset(&name)?;
+        let ds = Dataset::load(&m.dir, &name)?;
+        let stats = DegreeStats::of(&ds.csr_gcn);
+        println!(
+            "{:<10} {:>7} {:>9} {:>6} {:>8} {:>9.1} {:>8}  {:.4}/{:.4}",
+            name,
+            meta.n,
+            meta.nnz,
+            meta.feats,
+            meta.classes,
+            stats.mean,
+            stats.max,
+            meta.ideal_acc.get("gcn").unwrap_or(&f64::NAN),
+            meta.ideal_acc.get("sage").unwrap_or(&f64::NAN),
+        );
+    }
+    println!("\ncompiled artifact inventory: {} modules", m.artifacts.len());
+    let mut kinds: HashMap<&'static str, usize> = HashMap::new();
+    for a in m.artifacts.values() {
+        *kinds
+            .entry(match a.kind {
+                aes_spmm::runtime::ArtifactKind::Baseline => "baseline",
+                aes_spmm::runtime::ArtifactKind::Sampled => "sampled",
+                aes_spmm::runtime::ArtifactKind::Quantized => "quantized",
+            })
+            .or_insert(0) += 1;
+    }
+    for (k, v) in kinds {
+        println!("  {k}: {v}");
+    }
+    Ok(())
+}
+
+fn cmd_infer(artifacts: &str, args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?.to_string();
+    let dataset = args.get("dataset").context("--dataset required")?.to_string();
+    let width = args.get("width").map(|w| w.parse::<usize>()).transpose()?;
+    let strategy = Strategy::from_name(&args.get_or("strategy", "aes"))
+        .context("--strategy must be afs|sfs|aes")?;
+    let precision = if args.has("quant") { Precision::U8Device } else { Precision::F32 };
+
+    let engine = Engine::new(artifacts)?;
+    let ds = Dataset::load(artifacts, &dataset)?;
+    let weights = Weights::load(artifacts, &model, &dataset)?;
+    let req = ForwardRequest { model, dataset, width, strategy, precision };
+    println!("artifact: {}", req.artifact_name());
+    let result = run_forward(&engine, &ds, &weights, &req, None)?;
+    let acc = accuracy(&ds, &result.logits)?;
+    println!(
+        "accuracy: {:.4} (ideal {:.4}, delta {:+.2}pp)",
+        acc,
+        weights.ideal_acc,
+        (acc - weights.ideal_acc as f64) * 100.0
+    );
+    println!(
+        "timing: transfer {:?}  execute {:?}  fetch {:?}",
+        result.stats.transfer, result.stats.execute, result.stats.fetch
+    );
+    Ok(())
+}
+
+fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
+    let n_requests = args.usize_or("requests", 200)?;
+    let workers = args.usize_or("workers", 2)?;
+    let queue = args.usize_or("queue", 1024)?;
+    let batch = args.usize_or("batch", 32)?;
+
+    let engine = Arc::new(Engine::new(artifacts)?);
+    let datasets = engine.manifest().dataset_names();
+    let models = vec!["gcn".to_string(), "sage".to_string()];
+    let store = Arc::new(ModelStore::load(artifacts, &datasets, &models)?);
+
+    let cfg = CoordinatorConfig {
+        workers,
+        queue_depth: queue,
+        batcher: aes_spmm::coordinator::BatcherConfig {
+            max_batch: batch,
+            max_delay: std::time::Duration::from_millis(2),
+        },
+    };
+    let coord = Coordinator::start(engine.clone(), store.clone(), cfg);
+
+    // Synthetic request mix: random (dataset, width, strategy, precision).
+    let mut rng = Pcg32::new(1234);
+    let widths = engine.manifest().widths.clone();
+    let mut receivers = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    while submitted < n_requests {
+        let ds = &datasets[rng.usize_below(datasets.len())];
+        let n = store.dataset(ds)?.n;
+        let key = RouteKey {
+            model: models[rng.usize_below(2)].clone(),
+            dataset: ds.clone(),
+            width: Some(widths[rng.usize_below(widths.len())]),
+            strategy: [Strategy::Afs, Strategy::Sfs, Strategy::Aes][rng.usize_below(3)],
+            precision: if rng.f32() < 0.5 { Precision::U8Device } else { Precision::F32 },
+        };
+        let nodes: Vec<usize> = (0..8).map(|_| rng.usize_below(n)).collect();
+        match coord.submit(key, nodes) {
+            Ok((_, rx)) => {
+                receivers.push(rx);
+                submitted += 1;
+            }
+            Err(aes_spmm::coordinator::SubmitError::Busy) => {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            Err(e) => bail!("submit failed: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    let mut reported = 0usize;
+    for rx in receivers {
+        let resp = rx.recv()?;
+        if resp.error.is_none() {
+            ok += 1;
+        } else if reported < 3 {
+            eprintln!("request {} failed: {:?}", resp.id, resp.error);
+            reported += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    println!("served {ok}/{n_requests} requests in {elapsed:?}");
+    println!(
+        "throughput: {:.1} req/s | batches: {} (amortization {:.1} req/exec)",
+        ok as f64 / elapsed.as_secs_f64(),
+        snap.batches,
+        coord.metrics().amortization()
+    );
+    println!(
+        "latency p50 {:?} p99 {:?} | queue wait p50 {:?} | exec p50 {:?} | load p50 {:?}",
+        snap.latency_p50, snap.latency_p99, snap.queue_wait_p50, snap.exec_p50, snap.load_p50
+    );
+    println!("\nper-route executions:");
+    for (route, count) in &snap.per_route {
+        println!("  {route}: {count}");
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_experiment(artifacts: &str, args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("experiment id required (fig2/fig3/fig5/fig6/fig7/tab1/tab3/all)")?;
+    let ctx = ExpContext::new(artifacts, args.has("quick"))?;
+    let tables = experiments::run(&ctx, id)?;
+    println!("\nwrote {} report(s) under {}", tables.len(), ctx.out_dir.display());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let n = args.usize_or("nodes", 4096)?;
+    let avg_deg: f64 = args.get_or("avg-deg", "16").parse()?;
+    let gamma: f64 = args.get_or("gamma", "2.0").parse()?;
+    let seed: u64 = args.get_or("seed", "0").parse()?;
+    let mut rng = Pcg32::new(seed);
+    let g = gen::with_self_loops(&gen::chung_lu(n, avg_deg, gamma, &mut rng));
+    let stats = DegreeStats::of(&g);
+    println!("generated: n={} nnz={} sparsity={:.6}%", g.n_rows, g.nnz(), g.sparsity_pct());
+    println!(
+        "degrees: min {} max {} mean {:.1} median {} p90 {} p99 {}",
+        stats.min, stats.max, stats.mean, stats.median, stats.p90, stats.p99
+    );
+    for (w, frac) in &stats.frac_within {
+        println!("  deg <= {w}: {:.1}%", frac * 100.0);
+    }
+    for strat in Strategy::ALL {
+        for w in [16, 64, 256] {
+            println!(
+                "sampling rate {} W={w}: {:.3}",
+                strat.name(),
+                aes_spmm::sampling::sampling_rate(&g, w, strat)
+            );
+        }
+    }
+    Ok(())
+}

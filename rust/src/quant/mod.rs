@@ -1,0 +1,14 @@
+//! Feature quantization (paper §2.3, §3.1) and the instrumented feature
+//! store behind Table 3 / Fig. 3.
+//!
+//! Quantization happens offline (Eq. 1, done at build time by the python
+//! pipeline and mirrored here for rust-generated workloads); the inference
+//! path loads the u8 representation — 4× fewer bytes — and either ships it
+//! to the device for the on-device Pallas dequant kernel (Eq. 2) or
+//! dequantizes host-side for the CPU baselines.
+
+mod scalar;
+mod store;
+
+pub use scalar::{dequantize, dequantize_into, max_quant_error, quantize, QuantParams};
+pub use store::{FeatureStore, Features, LoadStats, Precision};

@@ -1,0 +1,131 @@
+//! Scalar INT8 quantization — Eq. 1 (quantize) and Eq. 2 (dequantize).
+
+/// Quantization range parameters (`x_min`, `x_max` of Eq. 1/2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub x_min: f32,
+    pub x_max: f32,
+}
+
+impl QuantParams {
+    pub fn of(data: &[f32]) -> QuantParams {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            return QuantParams { x_min: 0.0, x_max: 1.0 };
+        }
+        QuantParams { x_min: lo, x_max: hi }
+    }
+
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        let span = self.x_max - self.x_min;
+        if span == 0.0 {
+            1.0
+        } else {
+            span
+        }
+    }
+}
+
+const LEVELS: f32 = 255.0;
+
+/// Eq. 1: `q = floor((x - x_min) / (x_max - x_min) * 255)`, clamped.
+pub fn quantize(data: &[f32], p: QuantParams) -> Vec<u8> {
+    let inv = LEVELS / p.scale();
+    data.iter()
+        .map(|&x| (((x - p.x_min) * inv).floor()).clamp(0.0, LEVELS) as u8)
+        .collect()
+}
+
+/// Eq. 2: `x̂ = q * (x_max - x_min) / 255 + x_min`.
+pub fn dequantize(q: &[u8], p: QuantParams) -> Vec<f32> {
+    let mut out = vec![0.0f32; q.len()];
+    dequantize_into(q, p, &mut out);
+    out
+}
+
+/// Dequantize into a caller-owned buffer (hot path: no allocation).
+pub fn dequantize_into(q: &[u8], p: QuantParams, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len());
+    let scale = p.scale() / LEVELS;
+    // Tiny LUT beats per-element FMA on this path: 256 entries, fully
+    // cache-resident, and autovectorizes to gathers-free shuffles.
+    let mut lut = [0.0f32; 256];
+    for (i, slot) in lut.iter_mut().enumerate() {
+        *slot = i as f32 * scale + p.x_min;
+    }
+    for (o, &qi) in out.iter_mut().zip(q.iter()) {
+        *o = lut[qi as usize];
+    }
+}
+
+/// Worst-case reconstruction error of the scheme: one quantization step.
+pub fn max_quant_error(p: QuantParams) -> f32 {
+    p.scale() / LEVELS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Pcg32::new(1);
+        let data: Vec<f32> = (0..10_000).map(|_| (rng.f32() - 0.5) * 8.0).collect();
+        let p = QuantParams::of(&data);
+        let q = quantize(&data, p);
+        let back = dequantize(&q, p);
+        let bound = max_quant_error(p) + 1e-6;
+        for (x, y) in data.iter().zip(back.iter()) {
+            assert!((x - y).abs() <= bound, "{x} vs {y} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn endpoints_map_to_extremes() {
+        let data = vec![-2.0f32, 3.0];
+        let p = QuantParams::of(&data);
+        let q = quantize(&data, p);
+        assert_eq!(q, vec![0, 255]);
+        let back = dequantize(&q, p);
+        assert!((back[0] + 2.0).abs() < 1e-6);
+        assert!((back[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_input_is_stable() {
+        let data = vec![1.5f32; 64];
+        let p = QuantParams::of(&data);
+        let q = quantize(&data, p);
+        let back = dequantize(&q, p);
+        for y in back {
+            assert!((y - 1.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matches_python_ref_semantics() {
+        // Golden values computed with ref.quantize: x in [0,1], 11 points.
+        let data: Vec<f32> = (0..=10).map(|i| i as f32 / 10.0).collect();
+        let p = QuantParams::of(&data);
+        let q = quantize(&data, p);
+        assert_eq!(q, vec![0, 25, 51, 76, 102, 127, 153, 178, 204, 229, 255]);
+    }
+
+    #[test]
+    fn dequantize_into_no_alloc_path_matches() {
+        let data = vec![0.1f32, 0.7, -0.3, 0.0];
+        let p = QuantParams::of(&data);
+        let q = quantize(&data, p);
+        let a = dequantize(&q, p);
+        let mut b = vec![0.0; q.len()];
+        dequantize_into(&q, p, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,210 @@
+//! Artifact registry — the typed view of `artifacts/manifest.json` written
+//! by the AOT pipeline: which HLO files exist, their input signatures, and
+//! the dataset metadata (including each model's exact-aggregation "ideal
+//! accuracy", the Fig. 6 baseline).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{dtype_from_name, DType};
+use crate::util::{parse_json, JsonValue};
+
+/// One expected input of a compiled artifact, in positional order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// What a compiled artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Exact segment-sum forward (plays cuSPARSE: the accuracy ideal).
+    Baseline,
+    /// Sampled forward (AES/AFS/SFS selected by the strategy scalar).
+    Sampled,
+    /// Sampled forward over INT8 features with on-device dequantization.
+    Quantized,
+}
+
+impl ArtifactKind {
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "baseline" => ArtifactKind::Baseline,
+            "sampled" => ArtifactKind::Sampled,
+            "quantized" => ArtifactKind::Quantized,
+            _ => bail!("unknown artifact kind {s:?}"),
+        })
+    }
+}
+
+/// Registry entry for one compiled HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Shared-memory width W (None for baselines).
+    pub width: Option<usize>,
+    pub inputs: Vec<InputSpec>,
+    pub hlo_path: PathBuf,
+}
+
+/// Per-dataset metadata mirrored from the manifest.
+#[derive(Clone, Debug)]
+pub struct DatasetMeta {
+    pub name: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub feats: usize,
+    pub classes: usize,
+    /// "small" | "large" — the paper's Table 2 grouping.
+    pub scale: String,
+    /// Exact-aggregation test accuracy per model (the Fig. 6 ideal).
+    pub ideal_acc: BTreeMap<String, f64>,
+    pub paper_nodes: usize,
+    pub paper_avg_deg: f64,
+}
+
+/// The whole registry.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub datasets: BTreeMap<String, DatasetMeta>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub widths: Vec<usize>,
+}
+
+/// Canonical artifact name for a routing key.
+pub fn artifact_key(kind: ArtifactKind, model: &str, dataset: &str, width: usize) -> String {
+    match kind {
+        ArtifactKind::Baseline => format!("baseline_{model}_{dataset}"),
+        ArtifactKind::Sampled => format!("model_{model}_{dataset}_w{width}"),
+        ArtifactKind::Quantized => format!("qmodel_{model}_{dataset}_w{width}"),
+    }
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let root = parse_json(&text)?;
+
+        let mut datasets = BTreeMap::new();
+        for (name, v) in root.get("datasets")?.as_obj()? {
+            let mut ideal_acc = BTreeMap::new();
+            for (m, acc) in v.get("ideal_acc")?.as_obj()? {
+                ideal_acc.insert(m.clone(), acc.as_f64()?);
+            }
+            datasets.insert(
+                name.clone(),
+                DatasetMeta {
+                    name: name.clone(),
+                    n: v.get("n")?.as_usize()?,
+                    nnz: v.get("nnz")?.as_usize()?,
+                    feats: v.get("feats")?.as_usize()?,
+                    classes: v.get("classes")?.as_usize()?,
+                    scale: v.get("scale")?.as_str()?.to_string(),
+                    ideal_acc,
+                    paper_nodes: v.get("paper_nodes")?.as_usize()?,
+                    paper_avg_deg: v.get("paper_avg_deg")?.as_f64()?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, v) in root.get("artifacts")?.as_obj()? {
+            let inputs = v
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(parse_input)
+                .collect::<Result<Vec<_>>>()?;
+            let width = match v.get("width") {
+                Ok(w) => Some(w.as_usize()?),
+                Err(_) => None,
+            };
+            let hlo_path = dir.join(format!("{name}.hlo.txt"));
+            if !hlo_path.exists() {
+                bail!("manifest lists {name} but {} is missing", hlo_path.display());
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    kind: ArtifactKind::from_str(v.get("kind")?.as_str()?)?,
+                    width,
+                    inputs,
+                    hlo_path,
+                },
+            );
+        }
+
+        let widths = root
+            .get("widths")?
+            .as_arr()?
+            .iter()
+            .map(|w| w.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest { dir, datasets, artifacts, widths })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetMeta> {
+        self.datasets
+            .get(name)
+            .with_context(|| format!("dataset {name:?} not in manifest"))
+    }
+
+    /// Dataset names sorted small-scale first (paper's presentation order).
+    pub fn dataset_names(&self) -> Vec<String> {
+        let mut names: Vec<_> = self.datasets.keys().cloned().collect();
+        names.sort_by_key(|n| (self.datasets[n].scale != "small", n.clone()));
+        names
+    }
+}
+
+fn parse_input(v: &JsonValue) -> Result<InputSpec> {
+    Ok(InputSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: v
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        dtype: dtype_from_name(v.get("dtype")?.as_str()?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_keys() {
+        assert_eq!(artifact_key(ArtifactKind::Baseline, "gcn", "cora", 0), "baseline_gcn_cora");
+        assert_eq!(artifact_key(ArtifactKind::Sampled, "sage", "reddit", 64), "model_sage_reddit_w64");
+        assert_eq!(
+            artifact_key(ArtifactKind::Quantized, "gcn", "products", 128),
+            "qmodel_gcn_products_w128"
+        );
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(ArtifactKind::from_str("sampled").unwrap(), ArtifactKind::Sampled);
+        assert!(ArtifactKind::from_str("nope").is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Dataset + weights loading from the `.nbt` artifacts.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Csr;
+use crate::quant::QuantParams;
+use crate::tensor::{read_nbt, Tensor};
+
+/// Positional parameter order of each model's artifact signature — must
+/// match `python/compile/model.py`'s `GCN_PARAM_ORDER` / `SAGE_PARAM_ORDER`.
+pub const GCN_PARAM_ORDER: &[&str] = &["w0", "b0", "w1", "b1"];
+pub const SAGE_PARAM_ORDER: &[&str] =
+    &["w0_self", "w0_neigh", "b0", "w1_self", "w1_neigh", "b1"];
+
+/// A fully loaded dataset: graph structure (CSR with self-loops), both
+/// value arrays, f32 + INT8 features, labels, and the train/test split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub feats: usize,
+    pub classes: usize,
+    /// Graph with GCN-normalized values (Â entries).
+    pub csr_gcn: Csr,
+    /// Same structure, all-ones values (GraphSAGE's mean numerator).
+    pub val_ones: Vec<f32>,
+    pub feat: Tensor,
+    pub featq: Tensor,
+    pub qparams: QuantParams,
+    pub labels: Vec<i32>,
+    pub train_mask: Vec<u8>,
+}
+
+impl Dataset {
+    /// Load `data_{name}.nbt` from the artifacts directory.
+    pub fn load(artifacts_dir: impl AsRef<Path>, name: &str) -> Result<Dataset> {
+        let path = artifacts_dir.as_ref().join(format!("data_{name}.nbt"));
+        let nbt = read_nbt(&path)?;
+        let meta = nbt.get("meta")?.as_i64()?;
+        let [n, nnz, feats, classes] = meta else {
+            bail!("meta tensor must have 4 entries, got {}", meta.len());
+        };
+        let (n, nnz, feats, classes) =
+            (*n as usize, *nnz as usize, *feats as usize, *classes as usize);
+        let csr_gcn = Csr::from_nbt(&nbt, "val_gcn")?;
+        if csr_gcn.n_rows != n || csr_gcn.nnz() != nnz {
+            bail!("CSR dims disagree with meta for {name}");
+        }
+        let val_ones = nbt.get("val_ones")?.as_f32()?.to_vec();
+        let qr = nbt.get("qrange")?.as_f32()?;
+        Ok(Dataset {
+            name: name.to_string(),
+            n,
+            nnz,
+            feats,
+            classes,
+            csr_gcn,
+            val_ones,
+            feat: nbt.get("feat")?.clone(),
+            featq: nbt.get("featq")?.clone(),
+            qparams: QuantParams { x_min: qr[0], x_max: qr[1] },
+            labels: nbt.get("labels")?.as_i32()?.to_vec(),
+            train_mask: nbt.get("train_mask")?.as_u8()?.to_vec(),
+        })
+    }
+
+    /// CSR values for a model ("gcn" → normalized, "sage" → ones).
+    pub fn val_for(&self, model: &str) -> &[f32] {
+        if model == "gcn" {
+            &self.csr_gcn.val
+        } else {
+            &self.val_ones
+        }
+    }
+
+    /// Test-set node indices (the complement of the train mask).
+    pub fn test_nodes(&self) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.train_mask[i] == 0).collect()
+    }
+}
+
+/// Trained parameters for one (model, dataset), in artifact input order.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub model: String,
+    pub tensors: Vec<(String, Tensor)>,
+    /// Exact-aggregation test accuracy recorded at training time.
+    pub ideal_acc: f32,
+}
+
+impl Weights {
+    pub fn load(artifacts_dir: impl AsRef<Path>, model: &str, dataset: &str) -> Result<Weights> {
+        let path = artifacts_dir
+            .as_ref()
+            .join(format!("weights_{model}_{dataset}.nbt"));
+        let nbt = read_nbt(&path)?;
+        let order: &[&str] = match model {
+            "gcn" => GCN_PARAM_ORDER,
+            "sage" => SAGE_PARAM_ORDER,
+            _ => bail!("unknown model {model:?}"),
+        };
+        let tensors = order
+            .iter()
+            .map(|&k| Ok((k.to_string(), nbt.get(k)?.clone())))
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("weights file {path:?}", path = path.display()))?;
+        let ideal_acc = nbt.get("ideal_acc")?.as_f32()?[0];
+        Ok(Weights { model: model.to_string(), tensors, ideal_acc })
+    }
+
+    /// Parameter tensors in positional order.
+    pub fn in_order(&self) -> impl Iterator<Item = &Tensor> {
+        self.tensors.iter().map(|(_, t)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Artifact-dependent loading is covered by tests/integration_runtime.rs
+    // (requires `make artifacts`); here we only pin the parameter orders.
+    #[test]
+    fn param_orders_match_python() {
+        assert_eq!(GCN_PARAM_ORDER, &["w0", "b0", "w1", "b1"]);
+        assert_eq!(
+            SAGE_PARAM_ORDER,
+            &["w0_self", "w0_neigh", "b0", "w1_self", "w1_neigh", "b1"]
+        );
+    }
+}

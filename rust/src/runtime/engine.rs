@@ -1,0 +1,290 @@
+//! The PJRT engine: compile-once executable cache + instrumented execute.
+//!
+//! Safety note on `Send + Sync`: the `xla` crate's wrappers hold raw
+//! pointers and are therefore `!Send` by default, but the underlying PJRT
+//! CPU client and loaded executables are documented thread-safe in XLA
+//! (concurrent `Execute` on one `PjRtLoadedExecutable` is the intended
+//! multi-stream pattern, and `TfrtCpuClient` is internally synchronized).
+//! We wrap them in [`Engine`] and assert `Send + Sync` so the coordinator
+//! can execute from a worker pool; all `Literal` staging stays within the
+//! calling thread.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::artifacts::{ArtifactMeta, Manifest};
+
+/// Timing breakdown of one artifact execution — the stages Fig. 3 plots.
+///
+/// PJRT executes asynchronously: `execute` measures dispatch, and the
+/// device compute is absorbed into `fetch` (the output sync). Consumers
+/// that want "compute time" should use `execute + fetch`; `transfer`
+/// is the host→device staging of the fresh inputs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// Host→device staging (literal build + transfer) of fresh inputs.
+    pub transfer: Duration,
+    /// Execution dispatch (async; see struct docs).
+    pub execute: Duration,
+    /// Output sync + device→host fetch — includes the device compute.
+    pub fetch: Duration,
+}
+
+impl ExecStats {
+    pub fn total(&self) -> Duration {
+        self.transfer + self.execute + self.fetch
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+/// An artifact input: either staged fresh on every call (features,
+/// strategy scalars) or cached on-device under a stable key (graph
+/// structure, weights — the static majority of the input bytes).
+pub enum Arg<'a> {
+    Fresh(&'a Tensor),
+    Cached(&'a str, &'a Tensor),
+}
+
+impl<'a> Arg<'a> {
+    fn tensor(&self) -> &'a Tensor {
+        match self {
+            Arg::Fresh(t) | Arg::Cached(_, t) => t,
+        }
+    }
+}
+
+/// Compile-once, execute-many PJRT front end.
+/// A staged device buffer plus the host literal backing it. PJRT's
+/// host→device copy can be asynchronous, so the literal must stay alive
+/// at least as long as the buffer may still be reading from it.
+struct Staged {
+    buffer: xla::PjRtBuffer,
+    _literal: xla::Literal,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Compiled>>>,
+    /// Device-resident buffers for static inputs, keyed by caller key.
+    buffers: Mutex<HashMap<String, Arc<Staged>>>,
+}
+
+// SAFETY: see module docs — PJRT CPU client/executables are thread-safe;
+// per-call Literals never cross threads.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            buffers: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of artifacts currently compiled.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn compiled(&self, name: &str) -> Result<Arc<Compiled>> {
+        if let Some(c) = self.cache.lock().unwrap().get(name) {
+            return Ok(c.clone());
+        }
+        // Compile outside the lock (seconds-long; don't serialize callers
+        // hitting different artifacts). A racing duplicate compile of the
+        // same artifact is benign — last insert wins.
+        let meta = self.manifest.artifact(name)?.clone();
+        let hlo_path = meta
+            .hlo_path
+            .to_str()
+            .context("non-utf8 artifact path")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parsing HLO text {hlo_path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let compiled = Arc::new(Compiled { exe, meta });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Compile (or fetch cached) without executing — warm-up path.
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        self.compiled(name).map(|_| ())
+    }
+
+    /// Validate inputs against the artifact signature, execute, and fetch
+    /// the single (tupled) output as a host tensor.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<(Tensor, ExecStats)> {
+        let args: Vec<Arg> = inputs.iter().map(|t| Arg::Fresh(t)).collect();
+        self.execute_args(name, &args)
+    }
+
+    /// Stage a tensor on device.
+    ///
+    /// Goes through a Literal rather than `buffer_from_host_raw_bytes`:
+    /// the crate's raw-bytes path passes the `ElementType` discriminant
+    /// where the C API expects a `PrimitiveType` value (S32 arrives as
+    /// S16 and every buffer is half-sized). The literal is kept alive
+    /// alongside the buffer because the host→device copy is async.
+    fn stage(&self, t: &Tensor) -> Result<Staged> {
+        let literal = t.to_literal()?;
+        let buffer = self.client.buffer_from_host_literal(None, &literal)?;
+        Ok(Staged { buffer, _literal: literal })
+    }
+
+    /// Device buffer for a cached input (staged once per key).
+    fn cached_buffer(&self, key: &str, t: &Tensor) -> Result<Arc<Staged>> {
+        if let Some(b) = self.buffers.lock().unwrap().get(key) {
+            return Ok(b.clone());
+        }
+        let buf = Arc::new(self.stage(t)?);
+        self.buffers.lock().unwrap().insert(key.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    /// Execute with a mix of cached (device-resident) and fresh inputs —
+    /// the hot path: graph structure + weights stay on device, only the
+    /// per-request payload (features, scalars) crosses the link.
+    pub fn execute_args(&self, name: &str, args: &[Arg]) -> Result<(Tensor, ExecStats)> {
+        let compiled = self.compiled(name)?;
+        let tensors: Vec<&Tensor> = args.iter().map(|a| a.tensor()).collect();
+        validate_inputs(&compiled.meta, &tensors)?;
+        let mut stats = ExecStats::default();
+
+        let t0 = Instant::now();
+        let mut buffers: Vec<Arc<Staged>> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::Fresh(t) => buffers.push(Arc::new(self.stage(t)?)),
+                Arg::Cached(key, t) => buffers.push(self.cached_buffer(key, t)?),
+            }
+        }
+        stats.transfer = t0.elapsed();
+
+        let t1 = Instant::now();
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().map(|b| &b.buffer).collect();
+        let result = compiled.exe.execute_b(&refs)?;
+        stats.execute = t1.elapsed();
+
+        let t2 = Instant::now();
+        let literal = result[0][0].to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = literal.to_tuple1()?;
+        let tensor = literal_to_tensor(&out)?;
+        stats.fetch = t2.elapsed();
+        Ok((tensor, stats))
+    }
+
+    /// Number of device-cached input buffers.
+    pub fn cached_buffer_count(&self) -> usize {
+        self.buffers.lock().unwrap().len()
+    }
+}
+
+fn validate_inputs(meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<()> {
+    if inputs.len() != meta.inputs.len() {
+        bail!(
+            "{}: got {} inputs, artifact expects {} ({:?})",
+            meta.name,
+            inputs.len(),
+            meta.inputs.len(),
+            meta.inputs.iter().map(|i| i.name.as_str()).collect::<Vec<_>>()
+        );
+    }
+    for (t, spec) in inputs.iter().zip(meta.inputs.iter()) {
+        if t.dtype != spec.dtype {
+            bail!(
+                "{} input {:?}: dtype {:?} != expected {:?}",
+                meta.name,
+                spec.name,
+                t.dtype,
+                spec.dtype
+            );
+        }
+        if t.shape != spec.shape {
+            bail!(
+                "{} input {:?}: shape {:?} != expected {:?}",
+                meta.name,
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Convert a (non-tuple) literal back into a host [`Tensor`].
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok(match shape.ty() {
+        xla::ElementType::F32 => Tensor::from_f32(&dims, &lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => Tensor::from_i32(&dims, &lit.to_vec::<i32>()?),
+        xla::ElementType::U8 => Tensor::from_u8(&dims, &lit.to_vec::<u8>()?),
+        xla::ElementType::S64 => Tensor::from_i64(&dims, &lit.to_vec::<i64>()?),
+        xla::ElementType::F64 => Tensor::from_f64(&dims, &lit.to_vec::<f64>()?),
+        ty => bail!("unsupported output element type {ty:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{ArtifactKind, InputSpec};
+    use crate::tensor::DType;
+
+    fn meta(inputs: Vec<InputSpec>) -> ArtifactMeta {
+        ArtifactMeta {
+            name: "t".into(),
+            kind: ArtifactKind::Sampled,
+            width: Some(16),
+            inputs,
+            hlo_path: "/dev/null".into(),
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        let m = meta(vec![InputSpec { name: "x".into(), shape: vec![2, 2], dtype: DType::F32 }]);
+        let good = Tensor::from_f32(&[2, 2], &[0.0; 4]);
+        assert!(validate_inputs(&m, &[&good]).is_ok());
+        let wrong_shape = Tensor::from_f32(&[4], &[0.0; 4]);
+        assert!(validate_inputs(&m, &[&wrong_shape]).is_err());
+        let wrong_dtype = Tensor::from_i32(&[2, 2], &[0; 4]);
+        assert!(validate_inputs(&m, &[&wrong_dtype]).is_err());
+        assert!(validate_inputs(&m, &[]).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! High-level inference: assemble artifact inputs from a [`Dataset`] +
+//! [`Weights`], run the engine, and score accuracy. Shared by the
+//! coordinator's workers, the experiment harness, and the examples.
+
+use anyhow::{bail, Result};
+
+use crate::quant::Precision;
+use crate::sampling::Strategy;
+use crate::tensor::Tensor;
+
+use super::artifacts::{artifact_key, ArtifactKind};
+use super::dataset::{Dataset, Weights};
+use super::engine::{Engine, ExecStats};
+
+/// One forward-pass request against a compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ForwardRequest {
+    pub model: String,
+    pub dataset: String,
+    /// None → exact baseline artifact; Some(w) → sampled artifact.
+    pub width: Option<usize>,
+    pub strategy: Strategy,
+    pub precision: Precision,
+}
+
+impl ForwardRequest {
+    pub fn artifact_name(&self) -> String {
+        match (self.width, self.precision) {
+            (None, _) => artifact_key(ArtifactKind::Baseline, &self.model, &self.dataset, 0),
+            (Some(w), Precision::F32) | (Some(w), Precision::U8Host) => {
+                artifact_key(ArtifactKind::Sampled, &self.model, &self.dataset, w)
+            }
+            (Some(w), Precision::U8Device) => {
+                artifact_key(ArtifactKind::Quantized, &self.model, &self.dataset, w)
+            }
+        }
+    }
+}
+
+/// Logits + timing from one forward pass.
+#[derive(Debug)]
+pub struct ForwardResult {
+    pub logits: Tensor,
+    pub stats: ExecStats,
+}
+
+/// Run one full-graph forward pass through the AOT artifact.
+///
+/// `features` overrides the dataset's stored features when provided (the
+/// coordinator passes store-loaded features so load time is attributable);
+/// otherwise the dataset's in-memory tensor is used.
+pub fn run_forward(
+    engine: &Engine,
+    ds: &Dataset,
+    weights: &Weights,
+    req: &ForwardRequest,
+    features: Option<&Tensor>,
+) -> Result<ForwardResult> {
+    use crate::runtime::Arg;
+
+    let name = req.artifact_name();
+    let row_ptr = Tensor::from_i32(&[ds.n + 1], &ds.csr_gcn.row_ptr);
+    let col_ind = Tensor::from_i32(&[ds.nnz], &ds.csr_gcn.col_ind);
+    let val = Tensor::from_f32(&[ds.nnz], ds.val_for(&req.model));
+    let strategy = Tensor::scalar_i32(req.strategy.code());
+    let dsn = &ds.name;
+    let val_key = format!("{dsn}/val_{}", if req.model == "gcn" { "gcn" } else { "ones" });
+
+    // Graph structure + weights are device-cached (static across requests);
+    // features and scalars are staged fresh per call.
+    // Baseline artifacts have no row_ptr input (XLA would prune it — see
+    // aot.py) and take per-edge row ids instead.
+    let rp_key = format!("{dsn}/row_ptr");
+    let ci_key = format!("{dsn}/col_ind");
+    let mut inputs: Vec<Arg> = if req.width.is_none() {
+        vec![Arg::Cached(&ci_key, &col_ind), Arg::Cached(&val_key, &val)]
+    } else {
+        vec![
+            Arg::Cached(&rp_key, &row_ptr),
+            Arg::Cached(&ci_key, &col_ind),
+            Arg::Cached(&val_key, &val),
+        ]
+    };
+    let row_ids_tensor;
+    let ri_key = format!("{dsn}/row_ids");
+    if req.width.is_none() {
+        row_ids_tensor = Tensor::from_i32(&[ds.nnz], &ds.csr_gcn.row_ids());
+        inputs.push(Arg::Cached(&ri_key, &row_ids_tensor));
+    }
+
+    let qmin;
+    let qmax;
+    let feat_key = format!("{dsn}/feat");
+    let featq_key = format!("{dsn}/featq");
+    match (req.width, req.precision) {
+        (Some(_), Precision::U8Device) => {
+            inputs.push(match features {
+                Some(f) => Arg::Fresh(f),
+                None => Arg::Cached(&featq_key, &ds.featq),
+            });
+            qmin = Tensor::scalar_f32(ds.qparams.x_min);
+            qmax = Tensor::scalar_f32(ds.qparams.x_max);
+            inputs.push(Arg::Fresh(&qmin));
+            inputs.push(Arg::Fresh(&qmax));
+        }
+        (_, Precision::U8Host) if req.width.is_none() => {
+            bail!("host-dequant baseline path not lowered; use F32 for baselines")
+        }
+        _ => {
+            inputs.push(match features {
+                Some(f) => Arg::Fresh(f),
+                None => Arg::Cached(&feat_key, &ds.feat),
+            });
+        }
+    }
+
+    if req.width.is_some() {
+        inputs.push(Arg::Fresh(&strategy));
+    }
+    let wkeys: Vec<String> = weights
+        .tensors
+        .iter()
+        .map(|(k, _)| format!("{}/{dsn}/{k}", req.model))
+        .collect();
+    for ((_, t), key) in weights.tensors.iter().zip(wkeys.iter()) {
+        inputs.push(Arg::Cached(key, t));
+    }
+
+    let (logits, stats) = engine.execute_args(&name, &inputs)?;
+    Ok(ForwardResult { logits, stats })
+}
+
+/// Test-set accuracy of logits against dataset labels (argmax rule).
+pub fn accuracy(ds: &Dataset, logits: &Tensor) -> Result<f64> {
+    let vals = logits.as_f32()?;
+    if logits.shape != [ds.n, ds.classes] {
+        bail!("logits shape {:?} != [{}, {}]", logits.shape, ds.n, ds.classes);
+    }
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..ds.n {
+        if ds.train_mask[i] != 0 {
+            continue;
+        }
+        let row = &vals[i * ds.classes..(i + 1) * ds.classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k as i32)
+            .unwrap();
+        correct += (pred == ds.labels[i]) as usize;
+        total += 1;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_routing() {
+        let mut req = ForwardRequest {
+            model: "gcn".into(),
+            dataset: "cora".into(),
+            width: Some(64),
+            strategy: Strategy::Aes,
+            precision: Precision::F32,
+        };
+        assert_eq!(req.artifact_name(), "model_gcn_cora_w64");
+        req.precision = Precision::U8Device;
+        assert_eq!(req.artifact_name(), "qmodel_gcn_cora_w64");
+        req.width = None;
+        assert_eq!(req.artifact_name(), "baseline_gcn_cora");
+    }
+}

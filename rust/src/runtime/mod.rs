@@ -1,0 +1,17 @@
+//! The PJRT runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + `.nbt` tensors) and executes them
+//! on the PJRT CPU client via the `xla` crate. This is the only module
+//! that touches PJRT; everything above it deals in [`crate::tensor::Tensor`]s.
+//!
+//! Pipeline per artifact: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` (cached) → `execute`.
+
+mod artifacts;
+mod dataset;
+mod engine;
+mod infer;
+
+pub use artifacts::{artifact_key, ArtifactKind, ArtifactMeta, DatasetMeta, InputSpec, Manifest};
+pub use dataset::{Dataset, Weights, GCN_PARAM_ORDER, SAGE_PARAM_ORDER};
+pub use engine::{Arg, Engine, ExecStats};
+pub use infer::{accuracy, run_forward, ForwardRequest, ForwardResult};

@@ -1,0 +1,12 @@
+//! The paper's adaptive edge sampling strategy — rust mirror of the L1
+//! Pallas kernel, bit-exact against `python/compile/kernels/ref.py`
+//! (golden vectors in `tests/golden_sampling.rs`).
+//!
+//! Used for (a) the Fig. 5 sampling-rate CDF analysis, (b) CPU baseline
+//! SpMM over sampled plans, and (c) cross-checking artifact numerics.
+
+mod plan;
+mod strategy;
+
+pub use plan::{plan_row, sample_ell, sample_ell_par, sampling_rate, sampling_rate_cdf};
+pub use strategy::{start_index, strategy_params, RowPlan, Strategy, PRIME};

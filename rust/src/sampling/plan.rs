@@ -1,0 +1,269 @@
+//! Row planners: expand Table 1 + Eq. 3 into concrete ELL plans, and the
+//! sampling-rate statistics behind Fig. 5.
+
+use crate::graph::{Csr, Ell};
+
+use super::strategy::{start_index, strategy_params, Strategy};
+
+/// Within-row source offsets for each ELL slot of a row (Algorithm 1
+/// lines 7–13): sample `s` writes its `j`-th element to slot
+/// `s + j * sample_cnt`. Returns offsets for the `slots` valid entries.
+pub fn plan_row(row_nnz: usize, width: usize, strategy: Strategy) -> Vec<usize> {
+    let p = strategy_params(row_nnz, width, strategy);
+    let mut out = Vec::with_capacity(p.slots);
+    for k in 0..p.slots {
+        let s = k % p.sample_cnt;
+        let j = k / p.sample_cnt;
+        out.push(start_index(s, row_nnz, p.n) + j);
+    }
+    out
+}
+
+/// Sample a CSR matrix into ELL form — the host-side mirror of the L1
+/// `aes_sample` kernel (bit-exact on col indices and slot counts).
+pub fn sample_ell(csr: &Csr, width: usize, strategy: Strategy) -> Ell {
+    let mut ell = Ell::zeros(csr.n_rows, csr.n_cols, width);
+    sample_rows_into(csr, width, strategy, 0..csr.n_rows, &mut ell.val, &mut ell.col, &mut ell.slots);
+    ell
+}
+
+/// Allocation-free row-range sampler used by both the serial and parallel
+/// paths. Slices are the *full-graph* buffers; only `rows` is written.
+/// The inner loop inlines `plan_row`'s math (no per-row Vec), which is
+/// what the GPU kernel does per thread.
+fn sample_rows_into(
+    csr: &Csr,
+    width: usize,
+    strategy: Strategy,
+    rows: std::ops::Range<usize>,
+    val_out: &mut [f32],
+    col_out: &mut [i32],
+    slots_out: &mut [i32],
+) {
+    for i in rows {
+        let base = csr.row_ptr[i] as usize;
+        let nnz = csr.row_nnz(i);
+        let p = strategy_params(nnz, width, strategy);
+        slots_out[i] = p.slots as i32;
+        let row_val = &mut val_out[i * width..i * width + p.slots];
+        let row_col = &mut col_out[i * width..i * width + p.slots];
+        // Iterate sample-major: for each sample s, its run of N elements
+        // lands at slots s, s+cnt, s+2cnt, ... (Algorithm 1's layout).
+        for s in 0..p.sample_cnt.min(p.slots) {
+            let start = base + start_index(s, nnz, p.n);
+            let mut slot = s;
+            let mut j = 0;
+            while slot < p.slots && j < p.n {
+                row_val[slot] = csr.val[start + j];
+                row_col[slot] = csr.col_ind[start + j];
+                slot += p.sample_cnt;
+                j += 1;
+            }
+        }
+        // Zero the padding tail (buffers may be reused across calls).
+        for k in p.slots..width {
+            val_out[i * width + k] = 0.0;
+            col_out[i * width + k] = 0;
+        }
+    }
+}
+
+/// Parallel in-place sampling into a reusable [`Ell`] — the multi-core
+/// mirror of the GPU kernel's lines 5–14, where thousands of threads
+/// sample rows concurrently. `ell` must have matching dims.
+pub fn sample_ell_par(csr: &Csr, width: usize, strategy: Strategy, ell: &mut Ell, threads: usize) {
+    assert_eq!(ell.n_rows, csr.n_rows);
+    assert_eq!(ell.width, width);
+    let parts = threads.max(1);
+    let chunk = csr.n_rows.div_ceil(parts);
+    // Split the output buffers along row boundaries for the workers.
+    let mut val_rest: &mut [f32] = &mut ell.val;
+    let mut col_rest: &mut [i32] = &mut ell.col;
+    let mut slots_rest: &mut [i32] = &mut ell.slots;
+    std::thread::scope(|s| {
+        for part in 0..parts {
+            let lo = part * chunk;
+            let hi = ((part + 1) * chunk).min(csr.n_rows);
+            if lo >= hi {
+                break;
+            }
+            let (val_chunk, vr) = val_rest.split_at_mut((hi - lo) * width);
+            let (col_chunk, cr) = col_rest.split_at_mut((hi - lo) * width);
+            let (slots_chunk, sr) = slots_rest.split_at_mut(hi - lo);
+            val_rest = vr;
+            col_rest = cr;
+            slots_rest = sr;
+            s.spawn(move || {
+                // Re-base the chunk slices to local row indices.
+                for i in lo..hi {
+                    let li = i - lo;
+                    let base = csr.row_ptr[i] as usize;
+                    let nnz = csr.row_nnz(i);
+                    let p = strategy_params(nnz, width, strategy);
+                    slots_chunk[li] = p.slots as i32;
+                    for s_idx in 0..p.sample_cnt.min(p.slots) {
+                        let start = base + start_index(s_idx, nnz, p.n);
+                        let mut slot = s_idx;
+                        let mut j = 0;
+                        while slot < p.slots && j < p.n {
+                            val_chunk[li * width + slot] = csr.val[start + j];
+                            col_chunk[li * width + slot] = csr.col_ind[start + j];
+                            slot += p.sample_cnt;
+                            j += 1;
+                        }
+                    }
+                    for k in p.slots..width {
+                        val_chunk[li * width + k] = 0.0;
+                        col_chunk[li * width + k] = 0;
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Fraction of edges kept by sampling — Fig. 5's per-graph statistic.
+/// Draws are capped at `row_nnz` per row (overlap never counts > 1).
+pub fn sampling_rate(csr: &Csr, width: usize, strategy: Strategy) -> f64 {
+    let mut kept = 0usize;
+    let mut total = 0usize;
+    for i in 0..csr.n_rows {
+        let nnz = csr.row_nnz(i);
+        let p = strategy_params(nnz, width, strategy);
+        kept += p.slots.min(nnz);
+        total += nnz;
+    }
+    if total == 0 {
+        1.0
+    } else {
+        kept as f64 / total as f64
+    }
+}
+
+/// Per-row sampling rates sorted ascending — the CDF series of Fig. 5.
+/// Rows with no edges are reported as rate 1.0 (nothing to lose).
+pub fn sampling_rate_cdf(csr: &Csr, width: usize, strategy: Strategy) -> Vec<f64> {
+    let mut rates: Vec<f64> = (0..csr.n_rows)
+        .map(|i| {
+            let nnz = csr.row_nnz(i);
+            if nnz == 0 {
+                return 1.0;
+            }
+            let p = strategy_params(nnz, width, strategy);
+            p.slots.min(nnz) as f64 / nnz as f64
+        })
+        .collect();
+    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn plan_offsets_in_bounds_and_layout() {
+        for nnz in [0usize, 1, 5, 16, 63, 64, 65, 100, 999, 40_000] {
+            for width in [16usize, 32, 64, 128, 256] {
+                for strat in Strategy::ALL {
+                    let offs = plan_row(nnz, width, strat);
+                    let p = strategy_params(nnz, width, strat);
+                    assert_eq!(offs.len(), p.slots);
+                    for (k, &off) in offs.iter().enumerate() {
+                        assert!(off < nnz.max(1), "off {off} nnz {nnz}");
+                        // slot k's sample/run indices reconstruct its offset
+                        let s = k % p.sample_cnt;
+                        let j = k / p.sample_cnt;
+                        assert_eq!(off, start_index(s, nnz, p.n) + j);
+                        assert!(j < p.n);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_row_keeps_everything_in_order() {
+        let offs = plan_row(7, 16, Strategy::Aes);
+        assert_eq!(offs, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn sfs_takes_prefix() {
+        let offs = plan_row(100, 16, Strategy::Sfs);
+        assert_eq!(offs, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn afs_is_spread_out() {
+        let offs = plan_row(1000, 16, Strategy::Afs);
+        // hash: (s*1429) % 1000 for s in 0..16 — distinct and spread.
+        let max = *offs.iter().max().unwrap();
+        let min = *offs.iter().min().unwrap();
+        assert!(max > 800 && min < 100, "AFS should span the row: {offs:?}");
+    }
+
+    #[test]
+    fn sample_ell_is_valid_and_matches_plan() {
+        let mut rng = Pcg32::new(5);
+        let csr = gen::chung_lu(500, 20.0, 1.8, &mut rng);
+        for strat in Strategy::ALL {
+            let ell = sample_ell(&csr, 32, strat);
+            ell.validate().unwrap();
+            // slot counts agree with strategy_params
+            for i in 0..csr.n_rows {
+                let p = strategy_params(csr.row_nnz(i), 32, strat);
+                assert_eq!(ell.slots[i] as usize, p.slots);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sampler_matches_serial() {
+        let mut rng = Pcg32::new(21);
+        let csr = gen::chung_lu(700, 45.0, 1.8, &mut rng);
+        for strat in Strategy::ALL {
+            for width in [16usize, 32, 64] {
+                let serial = sample_ell(&csr, width, strat);
+                let mut par = crate::graph::Ell::zeros(csr.n_rows, csr.n_cols, width);
+                // Dirty the buffers to prove padding gets re-zeroed.
+                par.val.fill(7.0);
+                par.col.fill(3);
+                for threads in [1, 3, 8] {
+                    sample_ell_par(&csr, width, strat, &mut par, threads);
+                    assert_eq!(par, serial, "{strat:?} w{width} t{threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_rate_monotone_in_width() {
+        let mut rng = Pcg32::new(9);
+        let csr = gen::chung_lu(800, 50.0, 1.8, &mut rng);
+        let mut last = 0.0;
+        for w in [16, 32, 64, 128, 256, 512] {
+            let r = sampling_rate(&csr, w, Strategy::Aes);
+            assert!(r >= last - 1e-12, "rate must grow with W");
+            assert!((0.0..=1.0).contains(&r));
+            last = r;
+        }
+        // At W >= max degree the rate must be exactly 1.
+        let wmax = csr.max_degree();
+        assert_eq!(sampling_rate(&csr, wmax, Strategy::Aes), 1.0);
+    }
+
+    #[test]
+    fn cdf_sorted_and_bounded() {
+        let mut rng = Pcg32::new(11);
+        let csr = gen::chung_lu(300, 30.0, 1.7, &mut rng);
+        let cdf = sampling_rate_cdf(&csr, 32, Strategy::Aes);
+        assert_eq!(cdf.len(), csr.n_rows);
+        for w in cdf.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(cdf.iter().all(|&r| (0.0..=1.0 + 1e-12).contains(&r)));
+    }
+}

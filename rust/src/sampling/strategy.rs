@@ -1,0 +1,167 @@
+//! Table 1 (strategy table) and Eq. 3 (start-index hash) of the paper.
+
+/// Eq. 3's prime multiplier — "a large prime that ensures start_ind spans
+/// the full range of row_nnz".
+pub const PRIME: i64 = 1429;
+
+/// Edge sampling strategies, encoded as the runtime scalar the compiled
+/// artifacts take (so rust and HLO agree by construction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// ES-SpMM accuracy-first: fine-grained, N=1, one hash per slot.
+    Afs = 0,
+    /// ES-SpMM speed-first: coarse, N=W — keeps the first W elements.
+    Sfs = 1,
+    /// The paper's adaptive Table 1 interpolation.
+    Aes = 2,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 3] = [Strategy::Afs, Strategy::Sfs, Strategy::Aes];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Afs => "afs",
+            Strategy::Sfs => "sfs",
+            Strategy::Aes => "aes",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Strategy> {
+        match s {
+            "afs" => Some(Strategy::Afs),
+            "sfs" => Some(Strategy::Sfs),
+            "aes" => Some(Strategy::Aes),
+            _ => None,
+        }
+    }
+
+    /// The int32 scalar fed to the compiled artifact's `strategy` input.
+    pub fn code(self) -> i32 {
+        self as i32
+    }
+}
+
+/// Per-row sampling plan: `n` consecutive elements per sample,
+/// `sample_cnt` samples, laid out in `slots = min(n*cnt, W)` ELL slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowPlan {
+    pub n: usize,
+    pub sample_cnt: usize,
+    pub slots: usize,
+}
+
+/// Table 1 + the implementation clamps (N >= 1, sample_cnt <= W) + the
+/// universal `row_nnz <= W` fast path ("all elements are selected").
+///
+/// Must stay bit-identical to `ref.strategy_params` in python.
+pub fn strategy_params(row_nnz: usize, width: usize, strategy: Strategy) -> RowPlan {
+    let (n, cnt) = if row_nnz <= width {
+        (row_nnz, 1)
+    } else {
+        match strategy {
+            Strategy::Afs => (1, width),
+            Strategy::Sfs => (width, 1),
+            Strategy::Aes => {
+                let (n0, c0) = if row_nnz <= 2 * width {
+                    (width / 4, 4)
+                } else if row_nnz <= 36 * width {
+                    (width / 8, 8)
+                } else if row_nnz <= 54 * width {
+                    (width / 16, 16)
+                } else {
+                    (width / 32, 32)
+                };
+                (n0.max(1), c0.min(width))
+            }
+        }
+    };
+    RowPlan { n, sample_cnt: cnt, slots: (n * cnt).min(width) }
+}
+
+/// Eq. 3: `start_ind = (i * prime) mod (row_nnz - N + 1)`.
+#[inline]
+pub fn start_index(sample_idx: usize, row_nnz: usize, n: usize) -> usize {
+    debug_assert!(n <= row_nnz || row_nnz == 0);
+    let range = (row_nnz as i64 - n as i64 + 1).max(1);
+    ((sample_idx as i64 * PRIME) % range) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_regimes() {
+        let w = 64;
+        // R <= 1
+        assert_eq!(strategy_params(40, w, Strategy::Aes), RowPlan { n: 40, sample_cnt: 1, slots: 40 });
+        // 1 < R <= 2
+        assert_eq!(strategy_params(100, w, Strategy::Aes), RowPlan { n: 16, sample_cnt: 4, slots: 64 });
+        // 2 < R <= 36
+        assert_eq!(strategy_params(1000, w, Strategy::Aes), RowPlan { n: 8, sample_cnt: 8, slots: 64 });
+        // 36 < R <= 54
+        assert_eq!(strategy_params(64 * 40, w, Strategy::Aes), RowPlan { n: 4, sample_cnt: 16, slots: 64 });
+        // R > 54
+        assert_eq!(strategy_params(64 * 60, w, Strategy::Aes), RowPlan { n: 2, sample_cnt: 32, slots: 64 });
+    }
+
+    #[test]
+    fn clamps_for_small_width() {
+        // W=16, R>54: W/32 = 0 -> clamp N to 1; cnt stays 32 > W? min(32,16)=16.
+        let p = strategy_params(16 * 60, 16, Strategy::Aes);
+        assert_eq!(p, RowPlan { n: 1, sample_cnt: 16, slots: 16 });
+    }
+
+    #[test]
+    fn afs_sfs_extremes() {
+        let p = strategy_params(500, 64, Strategy::Afs);
+        assert_eq!(p, RowPlan { n: 1, sample_cnt: 64, slots: 64 });
+        let p = strategy_params(500, 64, Strategy::Sfs);
+        assert_eq!(p, RowPlan { n: 64, sample_cnt: 1, slots: 64 });
+    }
+
+    #[test]
+    fn small_rows_take_everything() {
+        for strat in Strategy::ALL {
+            let p = strategy_params(10, 64, strat);
+            assert_eq!(p, RowPlan { n: 10, sample_cnt: 1, slots: 10 });
+        }
+        // nnz == 0
+        for strat in Strategy::ALL {
+            assert_eq!(strategy_params(0, 64, strat).slots, 0);
+        }
+    }
+
+    #[test]
+    fn hash_stays_in_range() {
+        for nnz in [1usize, 2, 17, 100, 5000] {
+            for n in [1usize, 2, 8, nnz.min(16)] {
+                if n > nnz {
+                    continue;
+                }
+                for s in 0..64 {
+                    let start = start_index(s, nnz, n);
+                    assert!(start + n <= nnz, "start {start} + n {n} > nnz {nnz}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hash_matches_eq3() {
+        // Spot values: (i * 1429) mod (nnz - N + 1)
+        assert_eq!(start_index(0, 100, 1), 0);
+        assert_eq!(start_index(1, 100, 1), 1429 % 100);
+        assert_eq!(start_index(3, 50, 2), (3 * 1429) % 49);
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::from_name("bogus"), None);
+        assert_eq!(Strategy::Aes.code(), 2);
+    }
+}

@@ -1,0 +1,93 @@
+//! Sampled (ELL) SpMM — Algorithm 1 lines 16–19 on the host: multiply the
+//! fixed-width sampled matrix against dense features. Padding slots hold
+//! (0.0, col 0), so no masking is needed in the inner loop.
+
+use crate::graph::Ell;
+
+/// `C[i,:] = Σ_k ell.val[i,k] * B[ell.col[i,k],:]` (GCN aggregation).
+pub fn ell_spmm(ell: &Ell, b: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), ell.n_cols * f);
+    assert_eq!(out.len(), ell.n_rows * f);
+    out.fill(0.0);
+    let w = ell.width;
+    for i in 0..ell.n_rows {
+        let row_out = &mut out[i * f..(i + 1) * f];
+        let vals = &ell.val[i * w..i * w + ell.slots[i] as usize];
+        let cols = &ell.col[i * w..i * w + ell.slots[i] as usize];
+        for (v, &c) in vals.iter().zip(cols.iter()) {
+            let brow = &b[c as usize * f..c as usize * f + f];
+            for (o, &x) in row_out.iter_mut().zip(brow.iter()) {
+                *o += v * x;
+            }
+        }
+    }
+}
+
+/// Mean variant: divide each row by its valid slot count (GraphSAGE).
+pub fn ell_spmm_mean(ell: &Ell, b: &[f32], f: usize, out: &mut [f32]) {
+    ell_spmm(ell, b, f, out);
+    for i in 0..ell.n_rows {
+        let d = ell.slots[i].max(1) as f32;
+        for o in &mut out[i * f..(i + 1) * f] {
+            *o /= d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{sample_ell, Strategy};
+    use crate::spmm::csr_naive;
+    use crate::spmm::testutil::{assert_close, random_graph_and_features};
+
+    #[test]
+    fn full_width_sampling_equals_exact() {
+        let (g, b) = random_graph_and_features(200, 10.0, 9, 4);
+        let wmax = g.max_degree();
+        for strat in Strategy::ALL {
+            let ell = sample_ell(&g, wmax, strat);
+            let mut a = vec![0.0; g.n_rows * 9];
+            let mut c = vec![0.0; g.n_rows * 9];
+            csr_naive(&g, &b, 9, &mut a);
+            ell_spmm(&ell, &b, 9, &mut c);
+            assert_close(&a, &c, 1e-5);
+        }
+    }
+
+    #[test]
+    fn sampled_output_matches_manual_expansion() {
+        let (g, b) = random_graph_and_features(100, 40.0, 5, 5);
+        let ell = sample_ell(&g, 16, Strategy::Aes);
+        let mut out = vec![0.0; g.n_rows * 5];
+        ell_spmm(&ell, &b, 5, &mut out);
+        // Manual per-slot accumulation.
+        let mut want = vec![0.0f32; g.n_rows * 5];
+        for i in 0..ell.n_rows {
+            for k in 0..ell.slots[i] as usize {
+                let v = ell.val[i * 16 + k];
+                let c = ell.col[i * 16 + k] as usize;
+                for kk in 0..5 {
+                    want[i * 5 + kk] += v * b[c * 5 + kk];
+                }
+            }
+        }
+        assert_close(&out, &want, 1e-6);
+    }
+
+    #[test]
+    fn mean_divides_by_slots() {
+        let (g, b) = random_graph_and_features(80, 30.0, 4, 6);
+        let ell = sample_ell(&g, 8, Strategy::Aes);
+        let mut sum = vec![0.0; 80 * 4];
+        let mut mean = vec![0.0; 80 * 4];
+        ell_spmm(&ell, &b, 4, &mut sum);
+        ell_spmm_mean(&ell, &b, 4, &mut mean);
+        for i in 0..80 {
+            let d = ell.slots[i].max(1) as f32;
+            for k in 0..4 {
+                assert!((mean[i * 4 + k] - sum[i * 4 + k] / d).abs() < 1e-6);
+            }
+        }
+    }
+}

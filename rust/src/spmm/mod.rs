@@ -1,0 +1,75 @@
+//! CPU SpMM kernels — the baseline zoo of the paper's evaluation, rebuilt
+//! on this substrate (DESIGN.md §4):
+//!
+//! * [`csr_naive`]    — straightforward CSR SpMM; plays **cuSPARSE** (the
+//!   vendor kernel: exact, no locality tricks beyond row order).
+//! * [`csr_rowcache`] — **GE-SpMM** analog: Coalesced Row Caching (stage
+//!   the row's (val, col) segment into a stack tile = "shared memory")
+//!   plus Coarse-grained Warp Merging (process feature columns in wide
+//!   register blocks).
+//! * [`ell_spmm`]     — the sampled-matrix multiply (AES/AFS/SFS plans),
+//!   Alg. 1 lines 16–19 on the host.
+//! * [`threaded`]     — row-partitioned multi-thread wrappers over any of
+//!   the above (std::thread scoped; the offline registry has no rayon).
+//!
+//! All kernels compute `C = A × B` with `B` row-major `[n, f]`.
+
+mod csr;
+mod ell;
+mod threaded;
+
+pub use csr::{csr_naive, csr_rowcache};
+pub use ell::{ell_spmm, ell_spmm_mean};
+pub use threaded::{csr_naive_par, ell_spmm_par};
+
+/// Flop count of an exact SpMM (2 flops per nnz per feature column).
+pub fn spmm_flops(nnz: usize, feat_dim: usize) -> usize {
+    2 * nnz * feat_dim
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::gen;
+    use crate::graph::Csr;
+    use crate::rng::Pcg32;
+
+    /// Dense reference multiply for cross-checking every kernel.
+    pub fn dense_ref(csr: &Csr, b: &[f32], f: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; csr.n_rows * f];
+        for i in 0..csr.n_rows {
+            for e in csr.row_range(i) {
+                let c = csr.col_ind[e] as usize;
+                let v = csr.val[e];
+                for k in 0..f {
+                    out[i * f + k] += v * b[c * f + k];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn random_graph_and_features(
+        n: usize,
+        deg: f64,
+        f: usize,
+        seed: u64,
+    ) -> (Csr, Vec<f32>) {
+        let mut rng = Pcg32::new(seed);
+        let mut g = gen::chung_lu(n, deg, 1.9, &mut rng);
+        for v in g.val.iter_mut() {
+            *v = rng.f32() - 0.5;
+        }
+        let b: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        (g, b)
+    }
+
+    pub fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "idx {i}: {x} vs {y}"
+            );
+        }
+    }
+}

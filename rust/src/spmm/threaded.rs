@@ -1,0 +1,141 @@
+//! Row-partitioned multi-threaded SpMM wrappers (std::thread::scope; the
+//! offline registry has no rayon). Rows are split into contiguous chunks
+//! balanced by nnz, mirroring how the GPU kernels assign row segments to
+//! thread blocks.
+
+use crate::graph::{Csr, Ell};
+
+/// Split `n_rows` into `parts` contiguous chunks with roughly equal nnz.
+fn balance_rows(row_nnz: impl Fn(usize) -> usize, n_rows: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let total: usize = (0..n_rows).map(&row_nnz).sum();
+    let per = (total / parts.max(1)).max(1);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for i in 0..n_rows {
+        acc += row_nnz(i);
+        if acc >= per && out.len() + 1 < parts {
+            out.push(start..i + 1);
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    out.push(start..n_rows);
+    out
+}
+
+/// Parallel exact CSR SpMM (cuSPARSE-role baseline, multi-core).
+pub fn csr_naive_par(csr: &Csr, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(out.len(), csr.n_rows * f);
+    let chunks = balance_rows(|i| csr.row_nnz(i), csr.n_rows, threads.max(1));
+    // Split the output buffer along the same row boundaries.
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(chunks.len());
+    let mut rest = out;
+    let mut prev_end = 0usize;
+    for r in &chunks {
+        let (head, tail) = rest.split_at_mut((r.end - prev_end) * f);
+        slices.push(head);
+        rest = tail;
+        prev_end = r.end;
+    }
+    std::thread::scope(|s| {
+        for (range, slice) in chunks.into_iter().zip(slices.into_iter()) {
+            s.spawn(move || {
+                slice.fill(0.0);
+                for i in range.clone() {
+                    let local = &mut slice[(i - range.start) * f..(i - range.start + 1) * f];
+                    for e in csr.row_range(i) {
+                        let v = csr.val[e];
+                        let col = csr.col_ind[e] as usize;
+                        let brow = &b[col * f..col * f + f];
+                        for (o, &x) in local.iter_mut().zip(brow.iter()) {
+                            *o += v * x;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Parallel sampled (ELL) SpMM.
+pub fn ell_spmm_par(ell: &Ell, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(out.len(), ell.n_rows * f);
+    let w = ell.width;
+    let chunks = balance_rows(|i| ell.slots[i] as usize, ell.n_rows, threads.max(1));
+    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(chunks.len());
+    let mut rest = out;
+    let mut prev_end = 0usize;
+    for r in &chunks {
+        let (head, tail) = rest.split_at_mut((r.end - prev_end) * f);
+        slices.push(head);
+        rest = tail;
+        prev_end = r.end;
+    }
+    std::thread::scope(|s| {
+        for (range, slice) in chunks.into_iter().zip(slices.into_iter()) {
+            s.spawn(move || {
+                slice.fill(0.0);
+                for i in range.clone() {
+                    let local = &mut slice[(i - range.start) * f..(i - range.start + 1) * f];
+                    let vals = &ell.val[i * w..i * w + ell.slots[i] as usize];
+                    let cols = &ell.col[i * w..i * w + ell.slots[i] as usize];
+                    for (v, &c) in vals.iter().zip(cols.iter()) {
+                        let brow = &b[c as usize * f..c as usize * f + f];
+                        for (o, &x) in local.iter_mut().zip(brow.iter()) {
+                            *o += v * x;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{sample_ell, Strategy};
+    use crate::spmm::testutil::{assert_close, random_graph_and_features};
+    use crate::spmm::{csr_naive, ell_spmm};
+
+    #[test]
+    fn balance_covers_all_rows_disjointly() {
+        let nnz = [5usize, 0, 100, 3, 3, 3, 50, 1];
+        for parts in 1..=6 {
+            let chunks = balance_rows(|i| nnz[i], nnz.len(), parts);
+            assert!(chunks.len() <= parts);
+            let mut next = 0;
+            for c in &chunks {
+                assert_eq!(c.start, next);
+                next = c.end;
+            }
+            assert_eq!(next, nnz.len());
+        }
+    }
+
+    #[test]
+    fn par_csr_matches_serial() {
+        let (g, b) = random_graph_and_features(500, 25.0, 13, 7);
+        let mut serial = vec![0.0; g.n_rows * 13];
+        csr_naive(&g, &b, 13, &mut serial);
+        for threads in [1, 2, 4, 7] {
+            let mut par = vec![0.0; g.n_rows * 13];
+            csr_naive_par(&g, &b, 13, &mut par, threads);
+            assert_close(&serial, &par, 1e-6);
+        }
+    }
+
+    #[test]
+    fn par_ell_matches_serial() {
+        let (g, b) = random_graph_and_features(400, 60.0, 8, 8);
+        let ell = sample_ell(&g, 32, Strategy::Aes);
+        let mut serial = vec![0.0; g.n_rows * 8];
+        ell_spmm(&ell, &b, 8, &mut serial);
+        for threads in [2, 3, 8] {
+            let mut par = vec![0.0; g.n_rows * 8];
+            ell_spmm_par(&ell, &b, 8, &mut par, threads);
+            assert_close(&serial, &par, 1e-6);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Host tensors and the `.nbt` interchange container.
+//!
+//! `.nbt` (named binary tensors) is the build-time ↔ run-time interchange
+//! format shared with `python/compile/nbt.py`; see that file for the exact
+//! byte layout. Round-trip compatibility is covered by golden-file tests.
+
+mod nbt;
+
+pub use nbt::{read_nbt, read_nbt_tensor, write_nbt, NbtFile};
+
+use anyhow::{bail, Result};
+
+/// Element types supported by the container (codes shared with python).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    U8 = 2,
+    I64 = 3,
+    F64 = 4,
+    I8 = 5,
+}
+
+impl DType {
+    pub fn from_code(code: u32) -> Result<Self> {
+        Ok(match code {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U8,
+            3 => DType::I64,
+            4 => DType::F64,
+            5 => DType::I8,
+            _ => bail!("unknown dtype code {code}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::U8 | DType::I8 => 1,
+            DType::F32 | DType::I32 => 4,
+            DType::I64 | DType::F64 => 8,
+        }
+    }
+
+    /// The matching PJRT element type.
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U8 => xla::ElementType::U8,
+            DType::I64 => xla::ElementType::S64,
+            DType::F64 => xla::ElementType::F64,
+            DType::I8 => xla::ElementType::S8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U8 => "uint8",
+            DType::I64 => "int64",
+            DType::F64 => "float64",
+            DType::I8 => "int8",
+        }
+    }
+}
+
+/// Parse the numpy-style dtype names the python manifest uses.
+pub fn dtype_from_name(name: &str) -> Result<DType> {
+    Ok(match name {
+        "float32" => DType::F32,
+        "int32" => DType::I32,
+        "uint8" => DType::U8,
+        "int64" => DType::I64,
+        "float64" => DType::F64,
+        "int8" => DType::I8,
+        _ => bail!("unknown dtype name {name:?}"),
+    })
+}
+
+/// A host tensor: dtype + shape + raw little-endian payload.
+///
+/// Deliberately untyped at rest (artifact inputs are heterogeneous); typed
+/// views are borrowed via [`Tensor::as_f32`] etc., which validate dtype.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+macro_rules! typed_view {
+    ($as_fn:ident, $from_fn:ident, $ty:ty, $dt:expr) => {
+        pub fn $as_fn(&self) -> Result<&[$ty]> {
+            if self.dtype != $dt {
+                bail!("dtype mismatch: have {:?}, want {:?}", self.dtype, $dt);
+            }
+            // Payloads come from Vec<u8> reads; alignment of 1-byte-backed
+            // buffers is not guaranteed, so go through bytemuck-style
+            // manual checks.
+            let ptr = self.data.as_ptr();
+            if (ptr as usize) % std::mem::align_of::<$ty>() != 0 {
+                bail!("unaligned tensor payload");
+            }
+            Ok(unsafe {
+                std::slice::from_raw_parts(
+                    ptr as *const $ty,
+                    self.data.len() / std::mem::size_of::<$ty>(),
+                )
+            })
+        }
+
+        pub fn $from_fn(shape: &[usize], values: &[$ty]) -> Tensor {
+            assert_eq!(
+                shape.iter().product::<usize>(),
+                values.len(),
+                "shape/value count mismatch"
+            );
+            let mut data = Vec::with_capacity(values.len() * std::mem::size_of::<$ty>());
+            for v in values {
+                data.extend_from_slice(&v.to_le_bytes());
+            }
+            Tensor { dtype: $dt, shape: shape.to_vec(), data }
+        }
+    };
+}
+
+impl Tensor {
+    typed_view!(as_f32, from_f32, f32, DType::F32);
+    typed_view!(as_i32, from_i32, i32, DType::I32);
+    typed_view!(as_i64, from_i64, i64, DType::I64);
+    typed_view!(as_f64, from_f64, f64, DType::F64);
+
+    pub fn from_u8(shape: &[usize], values: &[u8]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Tensor { dtype: DType::U8, shape: shape.to_vec(), data: values.to_vec() }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != DType::U8 {
+            bail!("dtype mismatch: have {:?}, want U8", self.dtype);
+        }
+        Ok(&self.data)
+    }
+
+    /// Scalar convenience: one-element f32 tensor.
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(&[1], &[v])
+    }
+
+    /// Scalar convenience: one-element i32 tensor (strategy selector).
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::from_i32(&[1], &[v])
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Build the PJRT literal for this tensor (host → device staging).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
+        )?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_views_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.elem_count(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert!(t.as_i32().is_err(), "wrong-dtype view must fail");
+    }
+
+    #[test]
+    fn dtype_codes_match_python() {
+        for (code, dt) in [
+            (0, DType::F32),
+            (1, DType::I32),
+            (2, DType::U8),
+            (3, DType::I64),
+            (4, DType::F64),
+            (5, DType::I8),
+        ] {
+            assert_eq!(DType::from_code(code).unwrap(), dt);
+            assert_eq!(dt as u32, code);
+        }
+        assert!(DType::from_code(99).is_err());
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        assert_eq!(Tensor::scalar_i32(2).as_i32().unwrap(), &[2]);
+        assert_eq!(Tensor::scalar_f32(0.5).as_f32().unwrap(), &[0.5]);
+    }
+}

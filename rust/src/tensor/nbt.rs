@@ -1,0 +1,253 @@
+//! `.nbt` container codec — rust mirror of `python/compile/nbt.py`.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic  b"NBTC"
+//! u32    tensor count
+//! per tensor:
+//!   u16  name length, then utf-8 name bytes
+//!   u32  dtype code, u32 ndim, ndim * u64 dims
+//!   u64  payload byte length, then raw row-major LE payload
+//! ```
+
+use std::fs;
+use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{DType, Tensor};
+
+const MAGIC: &[u8; 4] = b"NBTC";
+
+/// An ordered set of named tensors (order preserved from the writer).
+#[derive(Default, Debug)]
+pub struct NbtFile {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+}
+
+impl NbtFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, tensor: Tensor) {
+        self.names.push(name.into());
+        self.tensors.push(tensor);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.tensors[i])
+            .with_context(|| format!("tensor {name:?} not in container (have {:?})", self.names))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.names.iter().any(|n| n == name)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names.iter().map(|s| s.as_str()).zip(self.tensors.iter())
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            bail!("truncated .nbt file at offset {}", self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Read an `.nbt` container from disk.
+pub fn read_nbt(path: impl AsRef<Path>) -> Result<NbtFile> {
+    let path = path.as_ref();
+    let buf = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_nbt(&buf).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub(crate) fn parse_nbt(buf: &[u8]) -> Result<NbtFile> {
+    let mut c = Cursor { buf, off: 0 };
+    if c.take(4)? != MAGIC {
+        bail!("bad magic (not an NBTC container)");
+    }
+    let count = c.u32()?;
+    let mut out = NbtFile::new();
+    for _ in 0..count {
+        let nlen = c.u16()? as usize;
+        let name = std::str::from_utf8(c.take(nlen)?)?.to_string();
+        let dtype = DType::from_code(c.u32()?)?;
+        let ndim = c.u32()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u64()? as usize);
+        }
+        let plen = c.u64()? as usize;
+        let expected = shape.iter().product::<usize>() * dtype.size();
+        if plen != expected {
+            bail!("tensor {name:?}: payload {plen} bytes, shape implies {expected}");
+        }
+        // Copy into a fresh Vec so the payload is max-aligned (Vec<u8> from
+        // the file offset may be arbitrarily aligned otherwise).
+        let mut data = vec![0u8; plen];
+        data.copy_from_slice(c.take(plen)?);
+        out.insert(name, Tensor { dtype, shape, data });
+    }
+    Ok(out)
+}
+
+/// Read a single named tensor from an `.nbt` container, seeking past all
+/// other payloads — the hot feature-loading path reads only the bytes of
+/// the tensor it needs (this is what makes the INT8 path actually move 4x
+/// fewer bytes off storage, Table 3's premise).
+pub fn read_nbt_tensor(path: impl AsRef<Path>, name: &str) -> Result<Tensor> {
+    let path = path.as_ref();
+    let mut f = fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut head = [0u8; 8];
+    f.read_exact(&mut head)?;
+    if &head[..4] != MAGIC {
+        bail!("{}: bad magic", path.display());
+    }
+    let count = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    for _ in 0..count {
+        let mut nlen_b = [0u8; 2];
+        f.read_exact(&mut nlen_b)?;
+        let nlen = u16::from_le_bytes(nlen_b) as usize;
+        let mut name_b = vec![0u8; nlen];
+        f.read_exact(&mut name_b)?;
+        let mut meta = [0u8; 8];
+        f.read_exact(&mut meta)?;
+        let code = u32::from_le_bytes(meta[..4].try_into().unwrap());
+        let ndim = u32::from_le_bytes(meta[4..8].try_into().unwrap()) as usize;
+        let mut dims = vec![0u8; ndim * 8];
+        f.read_exact(&mut dims)?;
+        let mut plen_b = [0u8; 8];
+        f.read_exact(&mut plen_b)?;
+        let plen = u64::from_le_bytes(plen_b) as usize;
+        if name_b == name.as_bytes() {
+            let dtype = DType::from_code(code)?;
+            let shape: Vec<usize> = dims
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+                .collect();
+            if plen != shape.iter().product::<usize>() * dtype.size() {
+                bail!("tensor {name:?}: payload/shape mismatch");
+            }
+            let mut data = vec![0u8; plen];
+            f.read_exact(&mut data)?;
+            return Ok(Tensor { dtype, shape, data });
+        }
+        f.seek(SeekFrom::Current(plen as i64))?;
+    }
+    bail!("tensor {name:?} not found in {}", path.display())
+}
+
+/// Write an `.nbt` container to disk (atomic: temp file + rename).
+pub fn write_nbt(path: impl AsRef<Path>, file: &NbtFile) -> Result<()> {
+    let path = path.as_ref();
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(file.len() as u32).to_le_bytes());
+    for (name, t) in file.iter() {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.extend_from_slice(&(t.dtype as u32).to_le_bytes());
+        buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for d in &t.shape {
+            buf.extend_from_slice(&(*d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&t.data);
+    }
+    let tmp = path.with_extension("nbt.tmp");
+    let mut f = fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(&buf)?;
+    f.sync_all()?;
+    drop(f);
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut f = NbtFile::new();
+        f.insert("a", Tensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]));
+        f.insert("b", Tensor::from_i32(&[3], &[-1, 0, 7]));
+        f.insert("q", Tensor::from_u8(&[4], &[0, 128, 200, 255]));
+        let dir = std::env::temp_dir().join("nbt_test_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.nbt");
+        write_nbt(&p, &f).unwrap();
+        let g = read_nbt(&p).unwrap();
+        assert_eq!(g.names(), f.names());
+        assert_eq!(g.get("a").unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(g.get("b").unwrap().as_i32().unwrap(), &[-1, 0, 7]);
+        assert_eq!(g.get("q").unwrap().as_u8().unwrap(), &[0, 128, 200, 255]);
+        assert!(g.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_nbt(b"NOPE").is_err());
+        assert!(parse_nbt(b"NBTC").is_err()); // truncated count
+        // count says 1 but no tensor follows
+        let mut buf = b"NBTC".to_vec();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        assert!(parse_nbt(&buf).is_err());
+    }
+
+    #[test]
+    fn payload_length_validated() {
+        // Hand-build a tensor whose payload length disagrees with shape.
+        let mut buf = b"NBTC".to_vec();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.extend_from_slice(&0u32.to_le_bytes()); // f32
+        buf.extend_from_slice(&1u32.to_le_bytes()); // ndim 1
+        buf.extend_from_slice(&4u64.to_le_bytes()); // 4 elements => 16 bytes
+        buf.extend_from_slice(&8u64.to_le_bytes()); // but claim 8
+        buf.extend_from_slice(&[0u8; 8]);
+        assert!(parse_nbt(&buf).is_err());
+    }
+}

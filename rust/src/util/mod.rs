@@ -1,0 +1,8 @@
+//! Small utilities: a dependency-free JSON codec (the offline registry has
+//! no serde) and timing helpers shared by the bench + experiment harnesses.
+
+mod json;
+mod timing;
+
+pub use json::{parse_json, JsonValue};
+pub use timing::{fmt_duration, median, percentile, Stopwatch};

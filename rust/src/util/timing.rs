@@ -1,0 +1,103 @@
+//! Timing helpers for the bench + experiment harnesses.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch with named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Record the time since the previous lap under `name`.
+    pub fn lap(&mut self, name: impl Into<String>) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.into(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        self.last - self.start
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Median of a sample (copies + sorts; bench-sized inputs only).
+pub fn median(samples: &[Duration]) -> Duration {
+    percentile(samples, 50.0)
+}
+
+/// Percentile (nearest-rank) of a sample.
+pub fn percentile(samples: &[Duration], p: f64) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    let mut v: Vec<Duration> = samples.to_vec();
+    v.sort_unstable();
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Human format: ns/µs/ms/s with 3 significant-ish digits.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        // nearest-rank: round(0.5 * 99) = 50 → the 51st value.
+        assert_eq!(median(&xs), Duration::from_millis(51));
+        assert_eq!(percentile(&xs, 0.0), Duration::from_millis(1));
+        assert_eq!(percentile(&xs, 100.0), Duration::from_millis(100));
+        assert_eq!(percentile(&[], 50.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+        assert!(fmt_duration(Duration::from_secs(2)).starts_with("2.000s"));
+    }
+
+    #[test]
+    fn stopwatch_laps() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(1));
+        let lap = sw.lap("a");
+        assert!(lap >= Duration::from_millis(1));
+        assert_eq!(sw.laps().len(), 1);
+        assert!(sw.total() >= lap);
+    }
+}

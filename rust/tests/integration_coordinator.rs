@@ -1,0 +1,157 @@
+//! Integration tests for the serving stack: coordinator over the real
+//! engine + artifacts, checking batching semantics, correctness of the
+//! answers, backpressure, and clean shutdown. Skipped without artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use aes_spmm::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, RouteKey, SubmitError,
+};
+use aes_spmm::quant::Precision;
+use aes_spmm::runtime::Engine;
+use aes_spmm::sampling::Strategy;
+
+fn setup(workers: usize, queue: usize, max_batch: usize) -> Option<(Coordinator, Arc<ModelStore>)> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping coordinator integration test: run `make artifacts`");
+        return None;
+    }
+    let engine = Arc::new(Engine::new("artifacts").unwrap());
+    let store = Arc::new(
+        ModelStore::load("artifacts", &["cora".into()], &["gcn".into()]).unwrap(),
+    );
+    let coord = Coordinator::start(
+        engine,
+        store.clone(),
+        CoordinatorConfig {
+            workers,
+            queue_depth: queue,
+            batcher: BatcherConfig { max_batch, max_delay: Duration::from_millis(1) },
+        },
+    );
+    Some((coord, store))
+}
+
+fn key(width: usize) -> RouteKey {
+    RouteKey {
+        model: "gcn".into(),
+        dataset: "cora".into(),
+        width: Some(width),
+        strategy: Strategy::Aes,
+        precision: Precision::F32,
+    }
+}
+
+#[test]
+fn answers_are_correct_predictions() {
+    let Some((coord, store)) = setup(1, 64, 8) else { return };
+    let ds = store.dataset("cora").unwrap();
+    // Ask for a handful of *training* nodes — the model fits those well,
+    // so predictions should mostly match labels.
+    let train_nodes: Vec<usize> =
+        (0..ds.n).filter(|&i| ds.train_mask[i] == 1).take(32).collect();
+    let resp = coord.infer(key(256), train_nodes.clone()).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.predictions.len(), train_nodes.len());
+    let correct = resp
+        .predictions
+        .iter()
+        .filter(|p| p.class == ds.labels[p.node])
+        .count();
+    assert!(
+        correct as f64 / train_nodes.len() as f64 > 0.8,
+        "train-node predictions should be mostly right ({correct}/{})",
+        train_nodes.len()
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn batching_amortizes_same_route_requests() {
+    let Some((coord, _store)) = setup(1, 256, 64) else { return };
+    // Warm the executable cache so the burst lands in one steady window.
+    coord.infer(key(16), vec![0]).unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..40 {
+        let (_, rx) = coord.submit(key(16), vec![i % 100]).unwrap();
+        rxs.push(rx);
+    }
+    let mut max_batch_size = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(resp.error.is_none());
+        max_batch_size = max_batch_size.max(resp.batch_size);
+    }
+    assert!(
+        max_batch_size > 1,
+        "burst of same-route requests must share forward passes (max batch {max_batch_size})"
+    );
+    let m = coord.metrics().snapshot();
+    assert!(m.batches < 41, "41 requests must not take 41+ executions");
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    let Some((coord, _store)) = setup(1, 2, 1000) else { return };
+    // Queue depth 2 and a slow worker: flood until Busy appears.
+    let mut busy = false;
+    let mut rxs = Vec::new();
+    for i in 0..200 {
+        match coord.submit(key(16), vec![i]) {
+            Ok((_, rx)) => rxs.push(rx),
+            Err(SubmitError::Busy) => {
+                busy = true;
+                break;
+            }
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(busy, "bounded queue must eventually reject");
+    assert!(coord.metrics().snapshot().rejected >= 1);
+    for rx in rxs {
+        let _ = rx.recv_timeout(Duration::from_secs(60));
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn bad_route_fails_gracefully() {
+    let Some((coord, _store)) = setup(1, 16, 4) else { return };
+    let bad = RouteKey {
+        model: "gcn".into(),
+        dataset: "cora".into(),
+        width: Some(999), // no such artifact
+        strategy: Strategy::Aes,
+        precision: Precision::F32,
+    };
+    let resp = coord.infer(bad, vec![0]).unwrap();
+    assert!(resp.error.is_some(), "unknown width must produce an error reply");
+    assert!(coord.metrics().snapshot().failed >= 1);
+    // The coordinator keeps serving good routes afterwards.
+    let ok = coord.infer(key(16), vec![1]).unwrap();
+    assert!(ok.error.is_none());
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_routes_complete() {
+    let Some((coord, _store)) = setup(2, 256, 16) else { return };
+    let mut rxs = Vec::new();
+    for i in 0..24 {
+        let w = [16, 64, 256][i % 3];
+        let precision = if i % 2 == 0 { Precision::F32 } else { Precision::U8Device };
+        let k = RouteKey { precision, ..key(w) };
+        let (_, rx) = coord.submit(k, vec![i]).unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.predictions.len(), 1);
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.completed, 24 + snap.failed);
+    coord.shutdown();
+}

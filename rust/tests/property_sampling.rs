@@ -1,0 +1,176 @@
+//! Property tests over the sampling/graph/quant substrates (hand-rolled
+//! seeded-random harness — `proptest` is not in the offline registry).
+//! Each property runs across a deterministic family of random cases; a
+//! failure prints the seed for reproduction.
+
+use aes_spmm::gen;
+use aes_spmm::graph::{coo_to_csr, Csr};
+use aes_spmm::quant::{dequantize, max_quant_error, quantize, QuantParams};
+use aes_spmm::rng::Pcg32;
+use aes_spmm::sampling::{plan_row, sample_ell, sampling_rate, strategy_params, Strategy};
+use aes_spmm::spmm::{csr_naive, ell_spmm};
+
+/// Run `f` over `cases` seeded deterministic iterations.
+fn forall(cases: u64, mut f: impl FnMut(u64, &mut Pcg32)) {
+    for seed in 0..cases {
+        let mut rng = Pcg32::new(0xA55_0000 + seed);
+        f(seed, &mut rng);
+    }
+}
+
+fn random_csr(rng: &mut Pcg32, n: usize, max_deg: usize) -> Csr {
+    let mut triples = Vec::new();
+    for i in 0..n {
+        let deg = rng.usize_below(max_deg + 1);
+        for _ in 0..deg {
+            triples.push((i as i32, rng.usize_below(n) as i32, rng.f32() - 0.5));
+        }
+    }
+    coo_to_csr(n, n, triples).unwrap()
+}
+
+#[test]
+fn prop_plan_row_offsets_valid_for_all_regimes() {
+    forall(200, |seed, rng| {
+        let nnz = rng.usize_below(100_000);
+        let width = [16, 32, 64, 128, 256, 512][rng.usize_below(6)];
+        for strat in Strategy::ALL {
+            let offs = plan_row(nnz, width, strat);
+            let p = strategy_params(nnz, width, strat);
+            assert_eq!(offs.len(), p.slots, "seed {seed}");
+            assert!(p.slots <= width, "seed {seed}: slots exceed W");
+            for &o in &offs {
+                assert!(o < nnz.max(1), "seed {seed}: offset {o} out of row (nnz {nnz})");
+            }
+            // Runs of N consecutive offsets share the same hash start.
+            for k in 0..p.slots {
+                let s = k % p.sample_cnt;
+                let j = k / p.sample_cnt;
+                assert!(j < p.n, "seed {seed}: run index exceeds N");
+                let _ = s;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sample_ell_structurally_valid_and_deterministic() {
+    forall(30, |seed, rng| {
+        let n = 20 + rng.usize_below(200);
+        let g = random_csr(rng, n, 200);
+        let width = [16, 32, 64][rng.usize_below(3)];
+        for strat in Strategy::ALL {
+            let a = sample_ell(&g, width, strat);
+            a.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let b = sample_ell(&g, width, strat);
+            assert_eq!(a, b, "seed {seed}: sampling must be deterministic");
+            // Every sampled (col) must exist in the source row.
+            for i in 0..n.min(20) {
+                let row: std::collections::HashSet<i32> =
+                    g.col_ind[g.row_range(i)].iter().copied().collect();
+                for k in 0..a.slots[i] as usize {
+                    assert!(
+                        row.contains(&a.col[i * width + k]),
+                        "seed {seed}: sampled col not in row"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sampled_spmm_bounded_by_exact_mass() {
+    // With non-negative values, each sampled row output never exceeds the
+    // exact row output (sampling keeps a subset; duplicates can appear
+    // only within a sample run, which stays bounded by slot count).
+    forall(20, |seed, rng| {
+        let n = 30 + rng.usize_below(80);
+        let mut g = random_csr(rng, n, 60);
+        for v in g.val.iter_mut() {
+            *v = v.abs();
+        }
+        let f = 4;
+        let b: Vec<f32> = (0..n * f).map(|_| rng.f32()).collect();
+        let mut exact = vec![0.0f32; n * f];
+        csr_naive(&g, &b, f, &mut exact);
+        let wmax = g.max_degree().max(1);
+        let ell = sample_ell(&g, wmax, Strategy::Aes);
+        let mut sampled = vec![0.0f32; n * f];
+        ell_spmm(&ell, &b, f, &mut sampled);
+        for (i, (s, e)) in sampled.iter().zip(exact.iter()).enumerate() {
+            assert!(
+                *s <= *e + 1e-3,
+                "seed {seed} idx {i}: full-width sample exceeded exact ({s} vs {e})"
+            );
+            assert!((s - e).abs() < 1e-3, "seed {seed}: full width must equal exact");
+        }
+    });
+}
+
+#[test]
+fn prop_sampling_rate_bounds_and_monotonicity() {
+    forall(15, |seed, rng| {
+        let n = 50 + rng.usize_below(300);
+        let deg = 2.0 + rng.f64() * 80.0;
+        let g = gen::chung_lu(n, deg, 1.7 + rng.f64(), rng);
+        for strat in Strategy::ALL {
+            let mut last = 0.0;
+            for w in [16, 32, 64, 128, 256, 1024] {
+                let r = sampling_rate(&g, w, strat);
+                assert!((0.0..=1.0).contains(&r), "seed {seed}");
+                assert!(r >= last - 1e-12, "seed {seed}: rate must be monotone in W");
+                last = r;
+            }
+            assert!(
+                (sampling_rate(&g, g.max_degree().max(1), strat) - 1.0).abs() < 1e-12,
+                "seed {seed}: W >= max degree keeps everything"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_quant_roundtrip_bound() {
+    forall(50, |seed, rng| {
+        let len = 1 + rng.usize_below(4096);
+        let scale = 0.01 + rng.f32() * 100.0;
+        let off = (rng.f32() - 0.5) * 50.0;
+        let data: Vec<f32> = (0..len).map(|_| off + rng.f32() * scale).collect();
+        let p = QuantParams::of(&data);
+        let q = quantize(&data, p);
+        let back = dequantize(&q, p);
+        let bound = max_quant_error(p) + 1e-5 * scale.max(1.0);
+        for (x, y) in data.iter().zip(back.iter()) {
+            assert!((x - y).abs() <= bound, "seed {seed}: {x} vs {y} (bound {bound})");
+        }
+    });
+}
+
+#[test]
+fn prop_generated_graphs_always_valid() {
+    forall(12, |seed, rng| {
+        let n = 20 + rng.usize_below(500);
+        let g = match seed % 3 {
+            0 => gen::erdos_renyi(n, n * 4, rng),
+            1 => gen::chung_lu(n, 8.0, 2.0, rng),
+            _ => {
+                let (g, _) = gen::dc_sbm(
+                    &gen::DcSbmConfig {
+                        n,
+                        avg_deg: 10.0,
+                        gamma: 1.9,
+                        communities: 4,
+                        homophily: 0.7,
+                    },
+                    rng,
+                );
+                g
+            }
+        };
+        g.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let sl = gen::with_self_loops(&g);
+        sl.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(sl.transpose(), sl, "seed {seed}: symmetric after self loops");
+    });
+}
