@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI gate: format, lint, build, test — and optionally refresh the SpMM
+# perf baseline (./ci.sh --bench).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo fmt --check =="
+cargo fmt --all -- --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== perf baseline: BENCH_spmm.json =="
+    cargo bench --bench spmm_kernels -- --json BENCH_spmm.json
+fi
+
+echo "CI OK"

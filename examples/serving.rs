@@ -37,6 +37,7 @@ fn main() -> Result<()> {
             workers: 3,
             queue_depth: 512,
             batcher: BatcherConfig { max_batch: 32, max_delay: Duration::from_millis(2) },
+            ..CoordinatorConfig::default()
         },
     );
 
@@ -119,6 +120,12 @@ fn main() -> Result<()> {
     println!(
         "stage p50: queue {:?} | feature load {:?} | execute {:?}",
         snap.queue_wait_p50, snap.load_p50, snap.exec_p50
+    );
+    println!(
+        "plan cache: {} warm hits / {} cold builds ({} routes resident)",
+        snap.plan_hits,
+        snap.plan_misses,
+        coord.plan_cache_len()
     );
     println!("\ntop routes:");
     let mut routes: Vec<_> = snap.per_route.iter().collect();

@@ -1,7 +1,8 @@
 //! Bench: coordinator overhead — batcher grouping latency, submit→reply
-//! round trip with a no-op-sized workload, and amortization behavior as
-//! the offered load grows. L3 must not be the bottleneck (DESIGN.md §Perf
-//! target: batching adds well under a millisecond of overhead).
+//! round trip with a no-op-sized workload, and the warm-route plan cache
+//! against the seed's per-batch feature reload. L3 must not be the
+//! bottleneck (DESIGN.md §Perf target: batching adds well under a
+//! millisecond of overhead).
 //!
 //! Run: `cargo bench --bench coordinator`
 
@@ -10,8 +11,12 @@ use std::time::{Duration, Instant};
 
 use aes_spmm::bench::{print_header, print_result, Bencher};
 use aes_spmm::coordinator::{Batch, BatcherConfig, InferRequest, RouteKey};
-use aes_spmm::quant::Precision;
+use aes_spmm::exec::{prepare_plan, ExecEnv, ExecPlan, PlanCache, PlanSpec};
+use aes_spmm::gen;
+use aes_spmm::quant::{quantize, FeatureStore, Precision, QuantParams};
+use aes_spmm::rng::Pcg32;
 use aes_spmm::sampling::Strategy;
+use aes_spmm::tensor::{write_nbt, NbtFile, Tensor};
 
 fn key(w: usize) -> RouteKey {
     RouteKey {
@@ -73,6 +78,57 @@ fn batcher_round_trip(n_requests: usize, max_batch: usize) -> Duration {
     d
 }
 
+/// Warm-route plan resolution vs the seed's per-batch reload, over a
+/// synthetic feature store (no artifacts needed): this is the acceptance
+/// micro-bench for the exec-layer plan cache.
+fn plan_cache_vs_reload() {
+    let dir = std::env::temp_dir().join(format!("coordinator_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let n = 8192;
+    let f = 64;
+    let mut rng = Pcg32::new(4242);
+    let csr = gen::with_self_loops(&gen::chung_lu(n, 12.0, 2.1, &mut rng));
+    let feat: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+    let params = QuantParams::of(&feat);
+    let mut nbt = NbtFile::new();
+    nbt.insert("feat", Tensor::from_f32(&[n, f], &feat));
+    nbt.insert("featq", Tensor::from_u8(&[n, f], &quantize(&feat, params)));
+    nbt.insert("qrange", Tensor::from_f32(&[2], &[params.x_min, params.x_max]));
+    let path = dir.join("data_bench.nbt");
+    write_nbt(&path, &nbt).expect("write synthetic dataset");
+    let fstore = FeatureStore::open(&path).expect("open feature store");
+
+    let env = ExecEnv::detect();
+    let build = || {
+        let spec = PlanSpec { csr: &csr, width: Some(32), strategy: Strategy::Aes, host_ell: true };
+        prepare_plan(&fstore, Precision::F32, &spec, f, &env).expect("prepare plan")
+    };
+
+    let b = Bencher::default();
+    print_header(&format!("route plan resolution (n={n}, f={f}, fp32 features)"));
+
+    // The seed's behavior: every batch re-reads features and re-samples.
+    let cold = b.run("per-batch rebuild (seed behavior)", || build());
+
+    // The exec-layer path: one cold build, then cache hits.
+    let cache: PlanCache<&'static str, ExecPlan> = PlanCache::new(8);
+    cache.get_or_try_insert(&"route", || Ok::<_, anyhow::Error>(build())).unwrap();
+    let warm = b.run("plan cache hit (warm route)", || {
+        let (plan, hit) = cache
+            .get_or_try_insert(&"route", || Ok::<_, anyhow::Error>(build()))
+            .unwrap();
+        assert!(hit);
+        plan
+    });
+    print_result(&cold, None);
+    print_result(&warm, None);
+    println!(
+        "warm route is {:.1}x faster than per-batch reload ({} storage loads total)",
+        cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12),
+        fstore.load_count(),
+    );
+}
+
 fn main() {
     let b = Bencher::default();
 
@@ -81,4 +137,6 @@ fn main() {
         let r = b.run(format!("{n} reqs, max_batch {mb}"), || batcher_round_trip(n, mb));
         print_result(&r, Some(("req/s", n as f64 / r.median.as_secs_f64())));
     }
+
+    plan_cache_vs_reload();
 }

@@ -1,19 +1,67 @@
 //! Bench: CPU SpMM kernel zoo across the dataset-analog graph family —
 //! regenerates the Fig. 7 kernel-time comparison (exact/cuSPARSE role vs
-//! GE-SpMM-analog vs sampled AFS/SFS/AES at several W).
+//! GE-SpMM-analog vs sampled AFS/SFS/AES at several W), plus the exec
+//! layer's dispatched pick so regressions in the dispatch heuristics show
+//! up next to the kernels they choose between.
 //!
 //! Run: `cargo bench --bench spmm_kernels`
+//! JSON baseline: `cargo bench --bench spmm_kernels -- --json [PATH]`
+//! (default PATH `BENCH_spmm.json`) — future PRs diff this file for the
+//! perf trajectory.
 
-use aes_spmm::bench::{print_header, print_result, Bencher};
+use std::collections::BTreeMap;
+
+use aes_spmm::bench::{print_header, print_result, BenchResult, Bencher};
+use aes_spmm::exec::{self, ExecEnv, GraphProfile};
 use aes_spmm::gen;
+use aes_spmm::graph::Ell;
 use aes_spmm::rng::Pcg32;
 use aes_spmm::sampling::{sample_ell, Strategy};
 use aes_spmm::spmm::{csr_naive, csr_naive_par, csr_rowcache, ell_spmm_par, spmm_flops};
+use aes_spmm::util::JsonValue;
+
+struct Recorder {
+    cases: Vec<(BenchResult, Option<f64>)>,
+}
+
+impl Recorder {
+    fn push(&mut self, r: &BenchResult, gflops: Option<f64>) {
+        self.cases.push((r.clone(), gflops));
+    }
+
+    fn to_json(&self) -> JsonValue {
+        JsonValue::Arr(
+            self.cases
+                .iter()
+                .map(|(r, gflops)| {
+                    let mut obj = match r.to_json() {
+                        JsonValue::Obj(m) => m,
+                        _ => unreachable!("BenchResult::to_json returns an object"),
+                    };
+                    if let Some(g) = gflops {
+                        obj.insert("gflops".to_string(), JsonValue::Num(*g));
+                    }
+                    JsonValue::Obj(obj)
+                })
+                .collect(),
+        )
+    }
+}
 
 fn main() {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        args.get(i + 1)
+            .filter(|p| !p.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "BENCH_spmm.json".to_string())
+    });
+
+    let env = ExecEnv::detect();
+    let threads = env.threads;
     let f = 64;
     let b = Bencher::default();
+    exec::warm_pool();
 
     // (name, nodes, avg_deg, gamma) — mirrors the small/large split.
     let workloads = [
@@ -23,12 +71,19 @@ fn main() {
         ("products-like", 8192, 50.0, 2.1),
     ];
 
+    let mut report: BTreeMap<String, JsonValue> = BTreeMap::new();
+    report.insert("bench".to_string(), JsonValue::Str("spmm_kernels".to_string()));
+    report.insert("feat_dim".to_string(), JsonValue::Num(f as f64));
+    report.insert("threads".to_string(), JsonValue::Num(threads as f64));
+    let mut workload_json = Vec::new();
+
     for (name, n, deg, gamma) in workloads {
         let mut rng = Pcg32::new(42);
         let g = gen::with_self_loops(&gen::chung_lu(n, deg, gamma, &mut rng));
         let feats: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
         let mut out = vec![0.0f32; n * f];
         let flops = spmm_flops(g.nnz(), f);
+        let mut rec = Recorder { cases: Vec::new() };
 
         print_header(&format!("{name}: n={n} nnz={} f={f}", g.nnz()));
 
@@ -36,16 +91,28 @@ fn main() {
             csr_naive(&g, &feats, f, &mut out)
         });
         print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+        rec.push(&r, Some(r.throughput(flops) / 1e9));
 
         let r = b.run(format!("exact csr ({threads} threads)"), || {
             csr_naive_par(&g, &feats, f, &mut out, threads)
         });
         print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+        rec.push(&r, Some(r.throughput(flops) / 1e9));
 
         let r = b.run("rowcache csr (GE-SpMM analog)", || {
             csr_rowcache(&g, &feats, f, &mut out)
         });
         print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+        rec.push(&r, Some(r.throughput(flops) / 1e9));
+
+        // The exec layer's pick for this workload, run through the same
+        // dispatcher the serving path uses.
+        let picked = exec::select_kernel(&GraphProfile::of(&g), f, None, &env);
+        let r = b.run(format!("dispatched exact → {}", picked.name()), || {
+            exec::run_exact(picked, &g, &feats, f, &mut out, threads)
+        });
+        print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+        rec.push(&r, Some(r.throughput(flops) / 1e9));
 
         for w in [16usize, 64, 256] {
             for strat in Strategy::ALL {
@@ -54,7 +121,33 @@ fn main() {
                     ell_spmm_par(&ell, &feats, f, &mut out, threads);
                 });
                 print_result(&r, None);
+                rec.push(&r, None);
             }
+            // Dispatched sampled path over a pre-built plan (the warm-route
+            // shape: sampling amortized by the plan cache).
+            let ell: Ell = sample_ell(&g, w, Strategy::Aes);
+            let picked = exec::select_kernel(&GraphProfile::of_ell(&ell), f, Some(w), &env);
+            let r = b.run(format!("dispatched aes w{w} (warm plan) → {}", picked.name()), || {
+                exec::run_ell(picked, &ell, &feats, f, &mut out, threads)
+            });
+            print_result(&r, None);
+            rec.push(&r, None);
+        }
+
+        let mut wl = BTreeMap::new();
+        wl.insert("name".to_string(), JsonValue::Str(name.to_string()));
+        wl.insert("n".to_string(), JsonValue::Num(n as f64));
+        wl.insert("nnz".to_string(), JsonValue::Num(g.nnz() as f64));
+        wl.insert("cases".to_string(), rec.to_json());
+        workload_json.push(JsonValue::Obj(wl));
+    }
+
+    report.insert("workloads".to_string(), JsonValue::Arr(workload_json));
+    if let Some(path) = json_path {
+        let doc = JsonValue::Obj(report);
+        match std::fs::write(&path, doc.to_string()) {
+            Ok(()) => println!("\nwrote baseline {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
         }
     }
 }

@@ -23,6 +23,19 @@ impl BenchResult {
     pub fn throughput(&self, items_per_iter: usize) -> f64 {
         items_per_iter as f64 / self.median.as_secs_f64()
     }
+
+    /// Flat JSON object for machine-readable baselines (`bench --json`).
+    pub fn to_json(&self) -> crate::util::JsonValue {
+        use crate::util::JsonValue;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), JsonValue::Str(self.name.clone()));
+        obj.insert("iters".to_string(), JsonValue::Num(self.iters as f64));
+        obj.insert("p10_ns".to_string(), JsonValue::Num(self.p10.as_nanos() as f64));
+        obj.insert("median_ns".to_string(), JsonValue::Num(self.median.as_nanos() as f64));
+        obj.insert("p90_ns".to_string(), JsonValue::Num(self.p90.as_nanos() as f64));
+        obj.insert("mean_ns".to_string(), JsonValue::Num(self.mean.as_nanos() as f64));
+        JsonValue::Obj(obj)
+    }
 }
 
 /// Harness configuration.
@@ -129,6 +142,23 @@ mod tests {
         let r = b.run("spin", || (0..1000).sum::<u64>());
         assert!(t0.elapsed() < Duration::from_secs(2));
         assert!(r.iters >= 2);
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_codec() {
+        let r = BenchResult {
+            name: "case".into(),
+            iters: 12,
+            median: Duration::from_micros(5),
+            p10: Duration::from_micros(4),
+            p90: Duration::from_micros(9),
+            mean: Duration::from_micros(6),
+        };
+        let text = r.to_json().to_string();
+        let v = crate::util::parse_json(&text).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "case");
+        assert_eq!(v.get("median_ns").unwrap().as_usize().unwrap(), 5_000);
+        assert_eq!(v.get("iters").unwrap().as_usize().unwrap(), 12);
     }
 
     #[test]

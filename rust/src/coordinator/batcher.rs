@@ -37,12 +37,19 @@ struct Group {
     oldest: Instant,
 }
 
-/// The batcher loop: drains `rx`, emits [`Batch`]es to `tx`. Returns when
-/// `rx` disconnects, flushing everything still queued.
-pub fn run_batcher(
+/// The batcher loop with a channel sink: drains `rx`, emits [`Batch`]es
+/// to `tx`. Returns when `rx` disconnects, flushing everything queued.
+pub fn run_batcher(cfg: BatcherConfig, rx: mpsc::Receiver<InferRequest>, tx: mpsc::Sender<Batch>) {
+    run_batcher_with(cfg, rx, move |batch| tx.send(batch).is_ok())
+}
+
+/// The batcher loop with an arbitrary sink — the coordinator hands
+/// batches straight to the worker pool (no relay channel, no relay
+/// thread). The sink returns `false` to stop the loop (sink closed).
+pub fn run_batcher_with(
     cfg: BatcherConfig,
     rx: mpsc::Receiver<InferRequest>,
-    tx: mpsc::Sender<Batch>,
+    mut sink: impl FnMut(Batch) -> bool,
 ) {
     let mut groups: HashMap<RouteKey, Group> = HashMap::new();
     loop {
@@ -63,7 +70,7 @@ pub fn run_batcher(
                 group.requests.push(req);
                 if group.requests.len() >= cfg.max_batch {
                     let group = groups.remove(&key).unwrap();
-                    if tx.send(Batch { key, requests: group.requests }).is_err() {
+                    if !sink(Batch { key, requests: group.requests }) {
                         return;
                     }
                 }
@@ -71,7 +78,7 @@ pub fn run_batcher(
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 for (key, group) in groups.drain() {
-                    let _ = tx.send(Batch { key, requests: group.requests });
+                    let _ = sink(Batch { key, requests: group.requests });
                 }
                 return;
             }
@@ -84,7 +91,7 @@ pub fn run_batcher(
             .collect();
         for key in expired {
             let group = groups.remove(&key).unwrap();
-            if tx.send(Batch { key, requests: group.requests }).is_err() {
+            if !sink(Batch { key, requests: group.requests }) {
                 return;
             }
         }
@@ -176,6 +183,34 @@ mod tests {
         }
         drop(tx);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn sink_variant_flushes_directly() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let collected = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = collected.clone();
+        let h = std::thread::spawn(move || {
+            run_batcher_with(
+                BatcherConfig { max_batch: 2, max_delay: Duration::from_secs(10) },
+                in_rx,
+                move |batch| {
+                    sink.lock().unwrap().push(batch.requests.len());
+                    true
+                },
+            )
+        });
+        let mut replies = Vec::new();
+        for i in 0..4 {
+            let (r, reply) = req(i, key(16));
+            replies.push(reply);
+            in_tx.send(r).unwrap();
+        }
+        drop(in_tx);
+        h.join().unwrap();
+        let sizes = collected.lock().unwrap().clone();
+        assert_eq!(sizes.iter().sum::<usize>(), 4);
+        assert!(sizes.iter().all(|&s| s <= 2));
     }
 
     #[test]

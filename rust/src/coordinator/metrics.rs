@@ -83,6 +83,10 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub batches: AtomicU64,
+    /// Warm executions served from the route plan cache (no disk load).
+    pub plan_hits: AtomicU64,
+    /// Cold executions that built (and charged) a route plan.
+    pub plan_misses: AtomicU64,
     pub latency: Histogram,
     pub queue_wait: Histogram,
     pub exec_time: Histogram,
@@ -99,6 +103,8 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub failed: u64,
     pub batches: u64,
+    pub plan_hits: u64,
+    pub plan_misses: u64,
     pub latency_p50: Duration,
     pub latency_p99: Duration,
     pub latency_mean: Duration,
@@ -133,6 +139,8 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
             latency_p50: self.latency.percentile(50.0),
             latency_p99: self.latency.percentile(99.0),
             latency_mean: self.latency.mean(),

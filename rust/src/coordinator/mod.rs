@@ -7,10 +7,12 @@
 //! ```text
 //! client → submit (bounded queue, backpressure)
 //!        → dynamic batcher (group by RouteKey, flush on size/deadline)
-//!        → worker pool (std threads)
-//!            → feature store load (fp32 or INT8; Table 3's stage)
-//!            → PJRT execute of the AOT artifact (sample→SpMM→MLP)
-//!            → per-node argmax answers
+//!        → exec::Pool (persistent workers, per-worker queues + stealing)
+//!            → route plan cache (cold: feature store load — Table 3's
+//!              stage — + sampling + kernel dispatch; warm: memory)
+//!            → Backend execute: PJRT AOT artifact (sample→SpMM→MLP) or
+//!              the rust host substrate (dispatched CPU kernels)
+//!            → per-node argmax answers (NaN-safe)
 //!        → per-request reply channels + metrics
 //! ```
 //!
@@ -24,7 +26,7 @@ mod request;
 mod server;
 mod store;
 
-pub use batcher::{run_batcher, Batch, BatcherConfig};
+pub use batcher::{run_batcher, run_batcher_with, Batch, BatcherConfig};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use request::{InferRequest, InferResponse, Prediction, RouteKey, SubmitError};
 pub use server::{oneshot_accuracy, Coordinator, CoordinatorConfig};

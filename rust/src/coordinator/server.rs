@@ -1,17 +1,28 @@
-//! The coordinator itself: bounded intake queue → batcher thread → worker
-//! pool executing batches through the PJRT engine.
+//! The coordinator itself: bounded intake queue → batcher thread → the
+//! persistent exec-layer worker pool, with a per-route plan cache so warm
+//! routes never touch the feature store.
+//!
+//! Execution topology (vs the seed): the batcher hands each flushed
+//! [`Batch`] straight to [`crate::exec::Pool`] (per-worker queues + work
+//! stealing) instead of pushing it through a `Mutex<Receiver>` that every
+//! worker contended; workers are spawned once at startup and parked
+//! between batches.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::{accuracy, run_forward, Engine};
+use crate::exec::{prepare_plan, ExecEnv, ExecPlan, PlanCache, PlanSpec, Pool};
+use crate::quant::{Features, Precision};
+use crate::runtime::{accuracy, run_forward, Backend, Engine};
+use crate::sampling::Strategy;
 use crate::tensor::Tensor;
+use crate::util::argmax_f32;
 
-use super::batcher::{run_batcher, Batch, BatcherConfig};
+use super::batcher::{run_batcher_with, Batch, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse, Prediction, RouteKey, SubmitError};
 use super::store::ModelStore;
@@ -24,63 +35,116 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Bounded intake queue length (backpressure beyond this).
     pub queue_depth: usize,
+    /// Route plans kept warm (LRU beyond this many).
+    pub plan_cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { batcher: BatcherConfig::default(), workers: 2, queue_depth: 1024 }
+        Self {
+            batcher: BatcherConfig::default(),
+            workers: 2,
+            queue_depth: 1024,
+            plan_cache_capacity: 64,
+        }
     }
+}
+
+/// What a route plan is keyed by. Narrower than [`RouteKey`]: the model
+/// never changes the feature tensor, and on device backends (fused
+/// in-kernel sampling) neither do width/strategy — so e.g. `gcn` and
+/// `sage` routes over one dataset share a single cached feature load.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    dataset: String,
+    precision: Precision,
+    /// Host-aggregating backends key the sampled ELL plan too.
+    width: Option<usize>,
+    strategy: Option<Strategy>,
+}
+
+impl PlanKey {
+    fn for_route(key: &RouteKey, host_aggregation: bool) -> PlanKey {
+        if host_aggregation {
+            PlanKey {
+                dataset: key.dataset.clone(),
+                precision: key.precision,
+                width: key.width,
+                // Strategy only matters when something is sampled — exact
+                // host routes share one plan regardless of strategy.
+                strategy: key.width.map(|_| key.strategy),
+            }
+        } else {
+            PlanKey {
+                dataset: key.dataset.clone(),
+                precision: key.precision,
+                width: None,
+                strategy: None,
+            }
+        }
+    }
+}
+
+/// Everything a pool worker needs to execute a batch.
+struct WorkerCtx {
+    backend: Backend,
+    store: Arc<ModelStore>,
+    metrics: Arc<Metrics>,
+    plans: PlanCache<PlanKey, ExecPlan>,
+    env: ExecEnv,
 }
 
 /// Handle to a running coordinator. Dropping it (or calling
 /// [`Coordinator::shutdown`]) drains the pipeline and joins all threads.
 pub struct Coordinator {
     intake: Option<mpsc::SyncSender<InferRequest>>,
-    metrics: Arc<Metrics>,
+    ctx: Arc<WorkerCtx>,
     next_id: AtomicU64,
-    threads: Vec<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+    pool: Option<Arc<Pool>>,
 }
 
 impl Coordinator {
-    /// Start the batcher + worker pool over a shared engine and store.
-    pub fn start(
-        engine: Arc<Engine>,
-        store: Arc<ModelStore>,
-        cfg: CoordinatorConfig,
-    ) -> Coordinator {
-        let metrics = Arc::new(Metrics::new());
+    /// Start over the PJRT engine (production path). Alias for
+    /// [`Coordinator::start_with`] with [`Backend::Pjrt`].
+    pub fn start(engine: Arc<Engine>, store: Arc<ModelStore>, cfg: CoordinatorConfig) -> Coordinator {
+        Coordinator::start_with(Backend::Pjrt(engine), store, cfg)
+    }
+
+    /// Start the batcher + persistent worker pool over any [`Backend`].
+    pub fn start_with(backend: Backend, store: Arc<ModelStore>, cfg: CoordinatorConfig) -> Coordinator {
+        let ctx = Arc::new(WorkerCtx {
+            backend,
+            store,
+            metrics: Arc::new(Metrics::new()),
+            plans: PlanCache::new(cfg.plan_cache_capacity),
+            env: ExecEnv::detect(),
+        });
+        let pool = Arc::new(Pool::new(cfg.workers.max(1)));
         let (intake_tx, intake_rx) = mpsc::sync_channel::<InferRequest>(cfg.queue_depth);
-        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
 
-        let mut threads = Vec::new();
-        let bcfg = cfg.batcher;
-        threads.push(std::thread::spawn(move || run_batcher(bcfg, intake_rx, batch_tx)));
-
-        for _ in 0..cfg.workers.max(1) {
-            let rx = batch_rx.clone();
-            let engine = engine.clone();
-            let store = store.clone();
-            let metrics = metrics.clone();
-            threads.push(std::thread::spawn(move || {
-                loop {
-                    let batch = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match batch {
-                        Ok(b) => run_batch(&engine, &store, &metrics, b),
-                        Err(_) => return,
-                    }
-                }
-            }));
-        }
+        let batcher = {
+            let pool = pool.clone();
+            let ctx = ctx.clone();
+            let bcfg = cfg.batcher;
+            std::thread::Builder::new()
+                .name("coordinator-batcher".into())
+                .spawn(move || {
+                    run_batcher_with(bcfg, intake_rx, move |batch| {
+                        let ctx = ctx.clone();
+                        pool.spawn(move || run_batch(&ctx, batch));
+                        true
+                    })
+                })
+                .expect("spawning batcher thread")
+        };
 
         Coordinator {
             intake: Some(intake_tx),
-            metrics,
+            ctx,
             next_id: AtomicU64::new(1),
-            threads,
+            batcher: Some(batcher),
+            pool: Some(pool),
         }
     }
 
@@ -95,11 +159,11 @@ impl Coordinator {
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = InferRequest { id, key, nodes, enqueued: Instant::now(), reply: reply_tx };
         let intake = self.intake.as_ref().ok_or(SubmitError::Closed)?;
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.ctx.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match intake.try_send(req) {
             Ok(()) => Ok((id, reply_rx)),
             Err(mpsc::TrySendError::Full(_)) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.ctx.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Busy)
             }
             Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
@@ -113,7 +177,31 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+        &self.ctx.metrics
+    }
+
+    /// Worker threads in the batch pool (constant for the coordinator's
+    /// lifetime — workers are never re-spawned per batch).
+    pub fn pool_workers(&self) -> usize {
+        self.pool.as_ref().map(|p| p.worker_count()).unwrap_or(0)
+    }
+
+    /// Cached route plans currently warm.
+    pub fn plan_cache_len(&self) -> usize {
+        self.ctx.plans.len()
+    }
+
+    /// Drop one route's cached plan (dataset republished / features
+    /// rotated); the next batch on it reloads from storage.
+    pub fn invalidate_route(&self, key: &RouteKey) -> bool {
+        self.ctx
+            .plans
+            .invalidate(&PlanKey::for_route(key, self.ctx.backend.aggregates_on_host()))
+    }
+
+    /// Drop every cached plan.
+    pub fn invalidate_all_routes(&self) {
+        self.ctx.plans.clear();
     }
 
     /// Drain the pipeline and join all threads.
@@ -122,9 +210,17 @@ impl Coordinator {
     }
 
     fn shutdown_inner(&mut self) {
-        self.intake.take(); // disconnect → batcher drains → workers exit
-        for t in self.threads.drain(..) {
-            let _ = t.join();
+        // Disconnect intake → batcher flushes pending groups into the
+        // pool and exits → pool drains its queues → workers join.
+        self.intake.take();
+        if let Some(batcher) = self.batcher.take() {
+            let _ = batcher.join();
+        }
+        if let Some(pool) = self.pool.take() {
+            pool.wait_idle();
+            // The batcher's clone is gone (joined above), so this drop is
+            // the last reference and joins the parked workers.
+            drop(pool);
         }
     }
 }
@@ -135,20 +231,26 @@ impl Drop for Coordinator {
     }
 }
 
-/// Execute one batch: load features per the route's precision, run the
-/// artifact once, answer every member request.
-fn run_batch(engine: &Engine, store: &ModelStore, metrics: &Metrics, batch: Batch) {
+/// Execute one batch: resolve the route plan (cache hit = no disk), run
+/// the backend once, answer every member request.
+fn run_batch(ctx: &WorkerCtx, batch: Batch) {
     let size = batch.requests.len();
+    let metrics = &ctx.metrics;
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.record_route(&batch.key.label());
     for r in &batch.requests {
         metrics.queue_wait.record(r.enqueued.elapsed());
     }
 
-    match execute_route(engine, store, &batch.key) {
-        Ok((logits, classes, load_time, exec_time)) => {
+    match execute_route(ctx, &batch.key) {
+        Ok((logits, classes, load_time, exec_time, plan_hit)) => {
             metrics.load_time.record(load_time);
             metrics.exec_time.record(exec_time);
+            if plan_hit {
+                metrics.plan_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                metrics.plan_misses.fetch_add(1, Ordering::Relaxed);
+            }
             let vals = match logits.as_f32() {
                 Ok(v) => v,
                 Err(e) => return fail_batch(metrics, batch, &e.to_string()),
@@ -188,41 +290,55 @@ fn fail_batch(metrics: &Metrics, batch: Batch, msg: &str) {
     }
 }
 
-/// Forward pass for one route. Returns (logits, classes, load, exec).
+/// Forward pass for one route through its (possibly cached) plan.
+/// Returns (logits, classes, load, exec, plan_hit).
+///
+/// Cold route: the plan build performs the instrumented feature load —
+/// the stage the paper's Table 3 measures — and its time is charged to
+/// this batch. Warm route: the plan comes from memory and `load` is zero,
+/// which is the whole point of the cache.
 fn execute_route(
-    engine: &Engine,
-    store: &ModelStore,
+    ctx: &WorkerCtx,
     key: &RouteKey,
-) -> Result<(Tensor, usize, std::time::Duration, std::time::Duration)> {
-    let ds = store.dataset(&key.dataset)?;
-    let weights = store.weights(&key.model, &key.dataset)?;
-    let fstore = store.feature_store(&key.dataset)?;
+) -> Result<(Tensor, usize, Duration, Duration, bool)> {
+    let ds = ctx.store.dataset(&key.dataset)?;
+    let weights = ctx.store.weights(&key.model, &key.dataset)?;
 
-    // Feature loading — the stage the paper's Table 3 measures. The store
-    // re-reads from disk per batch (per-inference loading model).
-    let (features, load_stats) = fstore.load(key.precision)?;
-    let feat_tensor = match features {
-        crate::quant::Features::Dense(t) => t,
-        crate::quant::Features::Quantized { q, .. } => q,
+    let host_aggregation = ctx.backend.aggregates_on_host();
+    let plan_key = PlanKey::for_route(key, host_aggregation);
+    let (plan, hit) = ctx.plans.get_or_try_insert(&plan_key, || {
+        let fstore = ctx.store.feature_store(&key.dataset)?;
+        let spec = PlanSpec {
+            csr: &ds.csr_gcn,
+            width: if host_aggregation { key.width } else { None },
+            strategy: key.strategy,
+            host_ell: host_aggregation,
+        };
+        prepare_plan(&fstore, key.precision, &spec, ds.feats, &ctx.env)
+    })?;
+
+    let feat_tensor = match &plan.features {
+        Features::Dense(t) => t,
+        Features::Quantized { q, .. } => q,
     };
 
     let fwd = key.to_forward();
-    let result = run_forward(engine, &ds, &weights, &fwd, Some(&feat_tensor))?;
-    Ok((
-        result.logits,
-        ds.classes,
-        load_stats.total(),
-        result.stats.total(),
-    ))
+    let result = ctx.backend.forward(
+        &ds,
+        &weights,
+        &fwd,
+        Some(feat_tensor),
+        Some(&*plan),
+        &ctx.env,
+    )?;
+    let load_time = if hit { Duration::ZERO } else { plan.load_stats.total() };
+    Ok((result.logits, ds.classes, load_time, result.stats.total(), hit))
 }
 
+/// NaN-safe per-node argmax (deterministic: NaN loses, ties break low,
+/// all-NaN rows yield class 0).
 fn argmax_row(vals: &[f32], row: usize, classes: usize) -> i32 {
-    let r = &vals[row * classes..(row + 1) * classes];
-    r.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(k, _)| k as i32)
-        .unwrap_or(0)
+    argmax_f32(&vals[row * classes..(row + 1) * classes]) as i32
 }
 
 /// Convenience used by examples: run a route once outside the service and
@@ -243,5 +359,39 @@ mod tests {
         let vals = [0.1f32, 0.9, -1.0, 3.0, 2.0, 1.0];
         assert_eq!(argmax_row(&vals, 0, 3), 1);
         assert_eq!(argmax_row(&vals, 1, 3), 0);
+    }
+
+    #[test]
+    fn argmax_survives_nan_logits() {
+        // The seed panicked the worker thread here (partial_cmp unwrap).
+        let vals = [f32::NAN, 0.5, 0.2, f32::NAN, f32::NAN, f32::NAN];
+        assert_eq!(argmax_row(&vals, 0, 3), 1);
+        // All-NaN row: deterministic class 0, not a panic.
+        assert_eq!(argmax_row(&vals, 1, 3), 0);
+    }
+
+    #[test]
+    fn plan_key_collapses_device_routes() {
+        let mk = |width, strategy, precision| RouteKey {
+            model: "gcn".into(),
+            dataset: "cora".into(),
+            width,
+            strategy,
+            precision,
+        };
+        // Device backends: one plan per (dataset, precision).
+        let a = PlanKey::for_route(&mk(Some(16), Strategy::Aes, Precision::F32), false);
+        let b = PlanKey::for_route(&mk(Some(64), Strategy::Sfs, Precision::F32), false);
+        assert_eq!(a, b);
+        let c = PlanKey::for_route(&mk(Some(16), Strategy::Aes, Precision::U8Device), false);
+        assert_ne!(a, c);
+        // Host backends: the sampled plan differs per width/strategy.
+        let d = PlanKey::for_route(&mk(Some(16), Strategy::Aes, Precision::F32), true);
+        let e = PlanKey::for_route(&mk(Some(64), Strategy::Aes, Precision::F32), true);
+        assert_ne!(d, e);
+        // ...but exact host routes ignore the (unused) strategy field.
+        let f = PlanKey::for_route(&mk(None, Strategy::Aes, Precision::F32), true);
+        let g = PlanKey::for_route(&mk(None, Strategy::Sfs, Precision::F32), true);
+        assert_eq!(f, g);
     }
 }

@@ -1,0 +1,310 @@
+//! Adaptive kernel dispatch — the host-side analog of the paper's
+//! strategy table: instead of every call site hard-coding a kernel, callers
+//! describe the input (graph statistics, feature dim, sampling width)
+//! and the dispatcher picks among the CPU SpMM zoo.
+//!
+//! Selection mirrors how the GPU kernels win on the GPU:
+//! * sampled routes (width given) always run the ELL kernel — the whole
+//!   point of sampling is the fixed-width tile;
+//! * large flop counts amortize the pool fork-join, so they go parallel;
+//! * long rows with a wide feature dim favor the GE-SpMM-analog row
+//!   cache (tile staging + register blocks), short rows do not repay the
+//!   staging and keep the naive kernel.
+
+use crate::graph::{Csr, Ell};
+
+use super::pool;
+
+/// Execution environment: the thread budget kernels may use. Detected
+/// once and passed down, so every layer agrees on the machine size
+/// instead of re-probing `available_parallelism` at each call site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecEnv {
+    pub threads: usize,
+}
+
+impl ExecEnv {
+    /// Probe the machine.
+    pub fn detect() -> ExecEnv {
+        ExecEnv {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+
+    /// Fixed thread budget (tests, single-thread baselines).
+    pub fn with_threads(threads: usize) -> ExecEnv {
+        ExecEnv { threads: threads.max(1) }
+    }
+}
+
+impl Default for ExecEnv {
+    fn default() -> Self {
+        ExecEnv::detect()
+    }
+}
+
+/// The CPU kernel zoo, as dispatch targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Exact CSR, single thread (cuSPARSE role).
+    CsrNaive,
+    /// Exact CSR, row-chunked across the pool.
+    CsrNaivePar,
+    /// GE-SpMM analog: row caching + warp-merged feature blocks.
+    CsrRowCache,
+    /// Sampled fixed-width multiply, single thread.
+    EllSampled,
+    /// Sampled fixed-width multiply, row-chunked across the pool.
+    EllSampledPar,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::CsrNaive => "csr_naive",
+            KernelKind::CsrNaivePar => "csr_naive_par",
+            KernelKind::CsrRowCache => "csr_rowcache",
+            KernelKind::EllSampled => "ell_spmm",
+            KernelKind::EllSampledPar => "ell_spmm_par",
+        }
+    }
+
+    pub fn is_parallel(self) -> bool {
+        matches!(self, KernelKind::CsrNaivePar | KernelKind::EllSampledPar)
+    }
+
+    pub fn is_sampled(self) -> bool {
+        matches!(self, KernelKind::EllSampled | KernelKind::EllSampledPar)
+    }
+}
+
+/// The graph statistics dispatch decides on. Cheap to compute (one pass
+/// over row lengths) and cached inside an `ExecPlan` for serving routes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GraphProfile {
+    pub n_rows: usize,
+    pub nnz: usize,
+    pub mean_nnz: f64,
+    pub max_nnz: usize,
+}
+
+impl GraphProfile {
+    pub fn of(csr: &Csr) -> GraphProfile {
+        GraphProfile {
+            n_rows: csr.n_rows,
+            nnz: csr.nnz(),
+            mean_nnz: csr.avg_degree(),
+            max_nnz: csr.max_degree(),
+        }
+    }
+
+    pub fn of_ell(ell: &Ell) -> GraphProfile {
+        let nnz = ell.total_slots();
+        let max_nnz = ell.slots.iter().map(|&s| s as usize).max().unwrap_or(0);
+        GraphProfile {
+            n_rows: ell.n_rows,
+            nnz,
+            mean_nnz: nnz as f64 / ell.n_rows.max(1) as f64,
+            max_nnz,
+        }
+    }
+}
+
+/// Mean row nnz above which the row-cache tile repays its staging — the
+/// host analog of "the row segment fits and stays in shared memory".
+pub const ROWCACHE_MIN_MEAN_NNZ: f64 = 16.0;
+
+/// Feature-dim floor for the row-cache kernel's warp-merged register
+/// blocks (FBLOCK in `spmm::csr`); below it the blocks never fill.
+pub const ROWCACHE_MIN_FEAT: usize = 8;
+
+/// Flop count where chunked threading amortizes the pool fork-join
+/// (~tens of µs of multiply per chunk at CPU rates).
+pub const PAR_MIN_FLOPS: usize = 2_000_000;
+
+/// Pick a kernel for one SpMM. `width = None` means exact aggregation;
+/// `Some(w)` means the route is sampled to ELL width `w`.
+pub fn select_kernel(
+    profile: &GraphProfile,
+    feat_dim: usize,
+    width: Option<usize>,
+    env: &ExecEnv,
+) -> KernelKind {
+    match width {
+        Some(w) => {
+            // Sampling keeps at most `w` edges per row.
+            let kept = profile.nnz.min(profile.n_rows.saturating_mul(w));
+            let flops = 2usize.saturating_mul(kept).saturating_mul(feat_dim);
+            if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+                KernelKind::EllSampledPar
+            } else {
+                KernelKind::EllSampled
+            }
+        }
+        None => {
+            let flops = 2usize.saturating_mul(profile.nnz).saturating_mul(feat_dim);
+            if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+                KernelKind::CsrNaivePar
+            } else if profile.mean_nnz >= ROWCACHE_MIN_MEAN_NNZ && feat_dim >= ROWCACHE_MIN_FEAT {
+                KernelKind::CsrRowCache
+            } else {
+                KernelKind::CsrNaive
+            }
+        }
+    }
+}
+
+/// Execute an exact SpMM through an explicit kernel choice.
+///
+/// Panics if `kind` is a sampled (ELL) kernel — the caller routed a CSR
+/// input to the wrong family.
+pub fn run_exact(kind: KernelKind, csr: &Csr, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
+    match kind {
+        KernelKind::CsrNaive => crate::spmm::csr_naive(csr, b, f, out),
+        KernelKind::CsrRowCache => crate::spmm::csr_rowcache(csr, b, f, out),
+        KernelKind::CsrNaivePar => crate::spmm::csr_naive_par(csr, b, f, out, threads),
+        other => panic!("{} is not an exact CSR kernel", other.name()),
+    }
+}
+
+/// Execute a sampled (ELL) SpMM through an explicit kernel choice.
+pub fn run_ell(kind: KernelKind, ell: &Ell, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
+    match kind {
+        KernelKind::EllSampled => crate::spmm::ell_spmm(ell, b, f, out),
+        KernelKind::EllSampledPar => crate::spmm::ell_spmm_par(ell, b, f, out, threads),
+        other => panic!("{} is not a sampled ELL kernel", other.name()),
+    }
+}
+
+/// Select-and-run an exact SpMM; returns the choice made (callers log or
+/// assert on it).
+pub fn spmm_exact(csr: &Csr, b: &[f32], f: usize, out: &mut [f32], env: &ExecEnv) -> KernelKind {
+    let kind = select_kernel(&GraphProfile::of(csr), f, None, env);
+    run_exact(kind, csr, b, f, out, env.threads);
+    kind
+}
+
+/// Select-and-run a sampled SpMM over a prepared ELL plan.
+pub fn spmm_ell(ell: &Ell, b: &[f32], f: usize, out: &mut [f32], env: &ExecEnv) -> KernelKind {
+    let kind = select_kernel(&GraphProfile::of_ell(ell), f, Some(ell.width), env);
+    run_ell(kind, ell, b, f, out, env.threads);
+    kind
+}
+
+/// Convenience used by benches/tests: make sure the global compute pool
+/// exists before timing, so pool spin-up never lands inside a sample.
+pub fn warm_pool() {
+    pool::global();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Pcg32;
+    use crate::spmm::testutil::{assert_close, random_graph_and_features};
+
+    fn profile(n_rows: usize, nnz: usize) -> GraphProfile {
+        GraphProfile {
+            n_rows,
+            nnz,
+            mean_nnz: nnz as f64 / n_rows.max(1) as f64,
+            max_nnz: nnz / n_rows.max(1) * 4,
+        }
+    }
+
+    #[test]
+    fn dispatch_matrix_exact() {
+        let multi = ExecEnv::with_threads(8);
+        let single = ExecEnv::with_threads(1);
+
+        // Tiny graph, narrow features → naive.
+        assert_eq!(select_kernel(&profile(100, 500), 4, None, &multi), KernelKind::CsrNaive);
+        // Long rows + wide features but small total → rowcache.
+        assert_eq!(select_kernel(&profile(100, 5_000), 16, None, &multi), KernelKind::CsrRowCache);
+        // Long rows but features below the register block → naive.
+        assert_eq!(select_kernel(&profile(100, 5_000), 4, None, &multi), KernelKind::CsrNaive);
+        // Big total flops + threads → parallel.
+        assert_eq!(
+            select_kernel(&profile(100_000, 2_000_000), 64, None, &multi),
+            KernelKind::CsrNaivePar
+        );
+        // Same workload, one thread → never parallel.
+        assert_ne!(
+            select_kernel(&profile(100_000, 2_000_000), 64, None, &single),
+            KernelKind::CsrNaivePar
+        );
+    }
+
+    #[test]
+    fn dispatch_matrix_sampled() {
+        let multi = ExecEnv::with_threads(8);
+        let single = ExecEnv::with_threads(1);
+
+        // Sampled routes always land on an ELL kernel.
+        for (n, nnz, f) in [(100usize, 400usize, 8usize), (200_000, 8_000_000, 128)] {
+            let kind = select_kernel(&profile(n, nnz), f, Some(32), &multi);
+            assert!(kind.is_sampled(), "{kind:?}");
+        }
+        // Small sampled workload stays serial; huge goes parallel.
+        assert_eq!(select_kernel(&profile(100, 400), 8, Some(32), &multi), KernelKind::EllSampled);
+        assert_eq!(
+            select_kernel(&profile(200_000, 8_000_000), 128, Some(32), &multi),
+            KernelKind::EllSampledPar
+        );
+        // The width cap bounds the kept-edge estimate: a graph whose nnz
+        // dwarfs n_rows*w must not be scored by its raw nnz.
+        let narrow = select_kernel(&profile(100, 10_000_000), 8, Some(4), &multi);
+        assert_eq!(narrow, KernelKind::EllSampled);
+        // One thread → serial regardless of size.
+        assert_eq!(
+            select_kernel(&profile(200_000, 8_000_000), 128, Some(32), &single),
+            KernelKind::EllSampled
+        );
+    }
+
+    #[test]
+    fn profiles_match_structures() {
+        let mut rng = Pcg32::new(3);
+        let csr = gen::chung_lu(300, 12.0, 2.0, &mut rng);
+        let p = GraphProfile::of(&csr);
+        assert_eq!(p.n_rows, 300);
+        assert_eq!(p.nnz, csr.nnz());
+        assert_eq!(p.max_nnz, csr.max_degree());
+
+        let ell = crate::sampling::sample_ell(&csr, 8, crate::sampling::Strategy::Aes);
+        let pe = GraphProfile::of_ell(&ell);
+        assert_eq!(pe.n_rows, 300);
+        assert_eq!(pe.nnz, ell.total_slots());
+        assert!(pe.max_nnz <= 8);
+    }
+
+    #[test]
+    fn dispatched_execution_matches_reference() {
+        let (g, b) = random_graph_and_features(400, 30.0, 16, 11);
+        let mut want = vec![0.0f32; g.n_rows * 16];
+        crate::spmm::csr_naive(&g, &b, 16, &mut want);
+        for threads in [1usize, 8] {
+            let env = ExecEnv::with_threads(threads);
+            let mut got = vec![0.0f32; g.n_rows * 16];
+            let kind = spmm_exact(&g, &b, 16, &mut got, &env);
+            assert!(!kind.is_sampled());
+            assert_close(&want, &got, 1e-6);
+        }
+    }
+
+    #[test]
+    fn dispatched_ell_matches_reference() {
+        let (g, b) = random_graph_and_features(300, 40.0, 8, 12);
+        let ell = crate::sampling::sample_ell(&g, 16, crate::sampling::Strategy::Aes);
+        let mut want = vec![0.0f32; g.n_rows * 8];
+        crate::spmm::ell_spmm(&ell, &b, 8, &mut want);
+        for threads in [1usize, 4] {
+            let env = ExecEnv::with_threads(threads);
+            let mut got = vec![0.0f32; g.n_rows * 8];
+            let kind = spmm_ell(&ell, &b, 8, &mut got, &env);
+            assert!(kind.is_sampled());
+            assert_close(&want, &got, 1e-6);
+        }
+    }
+}

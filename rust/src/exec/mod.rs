@@ -1,0 +1,26 @@
+//! The execution layer — kernel dispatch, the persistent worker pool,
+//! and per-route plan caching (DESIGN: unified execution substrate).
+//!
+//! Everything above the raw kernels routes SpMM work through here:
+//!
+//! * [`dispatch`] — picks a kernel from graph statistics, feature dim,
+//!   and the thread budget (the host-side analog of the paper's adaptive
+//!   strategy table), replacing hard-coded kernel picks at call sites.
+//! * [`pool`] — spawn-once worker pool with per-worker queues and work
+//!   stealing; replaces per-call `std::thread::scope` in the SpMM /
+//!   sampling kernels and the lock-contended worker loop in the
+//!   coordinator.
+//! * [`plan_cache`] — per-route [`ExecPlan`]s (loaded/quantized feature
+//!   tensor, sampled ELL plan, kernel choice) behind an LRU, so warm
+//!   routes stop re-reading features from disk every batch.
+
+mod dispatch;
+mod plan_cache;
+mod pool;
+
+pub use dispatch::{
+    run_ell, run_exact, select_kernel, spmm_ell, spmm_exact, warm_pool, ExecEnv, GraphProfile,
+    KernelKind, PAR_MIN_FLOPS, ROWCACHE_MIN_FEAT, ROWCACHE_MIN_MEAN_NNZ,
+};
+pub use plan_cache::{prepare_plan, ExecPlan, PlanCache, PlanSpec};
+pub use pool::{global as global_pool, Pool};

@@ -1,0 +1,388 @@
+//! Per-route execution plans and the cache that keeps them warm.
+//!
+//! The seed re-read the feature tensor from disk on *every batch* — that
+//! models the paper's per-inference loading cost (Table 3), but a serving
+//! system should pay it once per route and then serve from memory. An
+//! [`ExecPlan`] bundles everything `execute_route` needs that is
+//! per-route rather than per-batch: the loaded (possibly quantized)
+//! feature tensor, the sampled ELL plan for host-side aggregation, the
+//! dispatched kernel choice, and the load-stage timing recorded at the
+//! cold miss.
+//!
+//! [`PlanCache`] is a small sharded-free LRU keyed by whatever the caller
+//! routes on. Policy:
+//! * cold miss → the builder runs (and its `load_time` is charged to
+//!   that batch); concurrent misses on one key may build twice — both
+//!   results are valid, last insert wins (same idiom as the engine's
+//!   compile cache);
+//! * hit → no disk, no sampling, `load_time` reported as zero;
+//! * capacity overflow → least-recently-used entry is evicted;
+//! * [`PlanCache::invalidate`] / [`PlanCache::clear`] drop entries when
+//!   a dataset is republished.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::graph::{Csr, Ell};
+use crate::quant::{FeatureStore, Features, LoadStats, Precision};
+use crate::sampling::{sample_ell_par, Strategy};
+
+use super::dispatch::{select_kernel, ExecEnv, GraphProfile, KernelKind};
+
+/// Everything per-route that the hot path should not rebuild per batch.
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    /// Feature tensor at the route's precision (dense f32 or u8+params).
+    pub features: Features,
+    /// Load-stage breakdown measured when this plan was built.
+    pub load_stats: LoadStats,
+    /// Statistics of the aggregation operand (the sampled ELL when one
+    /// was built, else the CSR) — hot-path consumers dispatch per layer
+    /// from this instead of re-scanning the graph every batch.
+    pub profile: GraphProfile,
+    /// Kernel picked for the route's input-dim aggregation (observability
+    /// + benches; per-layer execution re-selects from `profile`, an O(1)
+    /// decision).
+    pub kernel: KernelKind,
+    /// Sampled fixed-width plan (present when the route samples and the
+    /// backend aggregates on the host).
+    pub ell: Option<Arc<Ell>>,
+}
+
+/// What to prepare for a route.
+pub struct PlanSpec<'a> {
+    /// Graph the route aggregates over (drives kernel dispatch).
+    pub csr: &'a Csr,
+    /// `Some(w)` for sampled routes, `None` for exact aggregation.
+    pub width: Option<usize>,
+    pub strategy: Strategy,
+    /// Build the host-side ELL plan (true for CPU-aggregating backends;
+    /// false when a device artifact performs fused in-kernel sampling).
+    pub host_ell: bool,
+}
+
+/// Build a route's plan: one instrumented feature load, one kernel
+/// choice, and (optionally) one parallel sampling pass.
+pub fn prepare_plan(
+    fstore: &FeatureStore,
+    precision: Precision,
+    spec: &PlanSpec<'_>,
+    feat_dim: usize,
+    env: &ExecEnv,
+) -> Result<ExecPlan> {
+    let (features, load_stats) = fstore.load(precision)?;
+    let (profile, ell) = match (spec.host_ell, spec.width) {
+        (true, Some(width)) => {
+            let mut ell = Ell::zeros(spec.csr.n_rows, spec.csr.n_cols, width);
+            sample_ell_par(spec.csr, width, spec.strategy, &mut ell, env.threads);
+            (GraphProfile::of_ell(&ell), Some(Arc::new(ell)))
+        }
+        _ => (GraphProfile::of(spec.csr), None),
+    };
+    let kernel = select_kernel(&profile, feat_dim, spec.width, env);
+    Ok(ExecPlan { features, load_stats, profile, kernel, ell })
+}
+
+struct Entry<V> {
+    value: Arc<V>,
+    last_used: u64,
+}
+
+struct Inner<K, V> {
+    map: HashMap<K, Entry<V>>,
+    tick: u64,
+    /// Bumped by `invalidate`/`clear` under this same lock; a cold build
+    /// that straddles a bump is served to its caller but **not**
+    /// inserted, so invalidation can never be undone by an in-flight
+    /// build of pre-invalidation data.
+    generation: u64,
+}
+
+/// A bounded LRU cache with hit/miss/eviction counters.
+pub struct PlanCache<K, V> {
+    inner: Mutex<Inner<K, V>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
+    /// `capacity` is clamped to at least 1.
+    pub fn new(capacity: usize) -> PlanCache<K, V> {
+        PlanCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0, generation: 0 }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up without building. Counts a hit or miss.
+    pub fn get(&self, key: &K) -> Option<Arc<V>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(entry) => {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Return the cached value, or build-and-insert it. The builder runs
+    /// outside the lock (a cold feature load takes milliseconds; other
+    /// routes must not stall behind it). Returns `(value, was_hit)`.
+    ///
+    /// If `invalidate`/`clear` fires while the builder runs, the result
+    /// is returned to this caller but not cached — the next lookup
+    /// rebuilds from post-invalidation data.
+    pub fn get_or_try_insert<E>(
+        &self,
+        key: &K,
+        build: impl FnOnce() -> std::result::Result<V, E>,
+    ) -> std::result::Result<(Arc<V>, bool), E> {
+        if let Some(v) = self.get(key) {
+            return Ok((v, true));
+        }
+        let generation = self.inner.lock().unwrap().generation;
+        let value = Arc::new(build()?);
+        // Insert and generation-check under one lock acquisition: an
+        // invalidation cannot interleave between the check and the
+        // insert.
+        let mut inner = self.inner.lock().unwrap();
+        if inner.generation == generation {
+            Self::insert_locked(&mut inner, self.capacity, &self.evictions, key.clone(), value.clone());
+        }
+        drop(inner);
+        Ok((value, false))
+    }
+
+    /// Insert (replacing any previous entry), evicting LRU on overflow.
+    pub fn insert(&self, key: K, value: Arc<V>) {
+        let mut inner = self.inner.lock().unwrap();
+        Self::insert_locked(&mut inner, self.capacity, &self.evictions, key, value);
+    }
+
+    fn insert_locked(
+        inner: &mut Inner<K, V>,
+        capacity: usize,
+        evictions: &AtomicU64,
+        key: K,
+        value: Arc<V>,
+    ) {
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key, Entry { value, last_used: tick });
+        while inner.map.len() > capacity {
+            let Some(oldest) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            inner.map.remove(&oldest);
+            evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop one key (e.g. its dataset was republished). Returns whether
+    /// an entry existed. Also fences out in-flight builds (see
+    /// [`PlanCache::get_or_try_insert`]).
+    pub fn invalidate(&self, key: &K) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.generation += 1;
+        inner.map.remove(key).is_some()
+    }
+
+    /// Drop everything and fence out in-flight builds.
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.generation += 1;
+        inner.map.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::quant::{quantize, QuantParams};
+    use crate::rng::Pcg32;
+    use crate::tensor::{write_nbt, NbtFile, Tensor};
+    use std::path::PathBuf;
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let cache: PlanCache<String, u32> = PlanCache::new(4);
+        assert!(cache.get(&"a".to_string()).is_none());
+        let (v, hit) = cache
+            .get_or_try_insert(&"a".to_string(), || Ok::<_, std::io::Error>(7))
+            .unwrap();
+        assert_eq!((*v, hit), (7, false));
+        let (v, hit) = cache
+            .get_or_try_insert(&"a".to_string(), || panic!("must not rebuild on hit"))
+            .unwrap_or_else(|e: std::io::Error| panic!("{e}"));
+        assert_eq!((*v, hit), (7, true));
+        assert_eq!(cache.hits(), 1);
+        // One explicit lookup-miss plus one build-path miss.
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn build_errors_propagate_and_cache_nothing() {
+        let cache: PlanCache<u32, u32> = PlanCache::new(4);
+        let err = cache
+            .get_or_try_insert(&1, || Err::<u32, _>("nope"))
+            .unwrap_err();
+        assert_eq!(err, "nope");
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let cache: PlanCache<u32, u32> = PlanCache::new(2);
+        cache.insert(1, Arc::new(10));
+        cache.insert(2, Arc::new(20));
+        assert!(cache.get(&1).is_some()); // 1 is now most recent
+        cache.insert(3, Arc::new(30)); // evicts 2
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&2).is_none());
+        assert!(cache.get(&1).is_some());
+        assert!(cache.get(&3).is_some());
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn invalidate_during_build_is_not_resurrected() {
+        let cache: PlanCache<u32, u32> = PlanCache::new(4);
+        // The builder races an invalidation (simulated by invalidating
+        // from inside the build): the stale result must be returned to
+        // the caller but never cached.
+        let (v, hit) = cache
+            .get_or_try_insert(&1, || {
+                cache.invalidate(&1);
+                Ok::<_, std::io::Error>(5)
+            })
+            .unwrap();
+        assert_eq!((*v, hit), (5, false));
+        assert!(cache.get(&1).is_none(), "stale in-flight build must not be cached");
+        // A later build (post-invalidation data) caches normally.
+        cache.get_or_try_insert(&1, || Ok::<_, std::io::Error>(6)).unwrap();
+        assert_eq!(*cache.get(&1).unwrap(), 6);
+    }
+
+    #[test]
+    fn invalidate_and_clear() {
+        let cache: PlanCache<u32, u32> = PlanCache::new(4);
+        cache.insert(1, Arc::new(1));
+        cache.insert(2, Arc::new(2));
+        assert!(cache.invalidate(&1));
+        assert!(!cache.invalidate(&1));
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    fn synthetic_store(tag: &str) -> (PathBuf, FeatureStore, Csr) {
+        let dir = std::env::temp_dir().join(format!("plan_cache_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let n = 128;
+        let f = 8;
+        let mut rng = Pcg32::new(77);
+        let csr = gen::with_self_loops(&gen::chung_lu(n, 6.0, 2.0, &mut rng));
+        let feat: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        let params = QuantParams::of(&feat);
+        let q = quantize(&feat, params);
+        let mut nbt = NbtFile::new();
+        nbt.insert("feat", Tensor::from_f32(&[n, f], &feat));
+        nbt.insert("featq", Tensor::from_u8(&[n, f], &q));
+        nbt.insert("qrange", Tensor::from_f32(&[2], &[params.x_min, params.x_max]));
+        let path = dir.join("data_synth.nbt");
+        write_nbt(&path, &nbt).unwrap();
+        (path.clone(), FeatureStore::open(&path).unwrap(), csr)
+    }
+
+    #[test]
+    fn prepare_plan_builds_features_kernel_and_ell() {
+        let (_path, store, csr) = synthetic_store("full");
+        let env = ExecEnv::with_threads(2);
+        let spec = PlanSpec { csr: &csr, width: Some(4), strategy: Strategy::Aes, host_ell: true };
+        let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
+        assert!(matches!(plan.features, Features::Dense(_)));
+        assert!(plan.kernel.is_sampled());
+        let ell = plan.ell.expect("host_ell requested");
+        assert_eq!(ell.width, 4);
+        ell.validate().unwrap();
+        assert!(plan.load_stats.bytes_read > 0);
+        // The cached profile describes the sampled operand, so per-layer
+        // dispatch needs no graph re-scan.
+        assert_eq!(plan.profile.n_rows, csr.n_rows);
+        assert_eq!(plan.profile.nnz, ell.total_slots());
+        assert!(plan.profile.max_nnz <= 4);
+
+        // Device-style spec: no host ELL even for a sampled width.
+        let spec = PlanSpec { csr: &csr, width: Some(4), strategy: Strategy::Aes, host_ell: false };
+        let plan = prepare_plan(&store, Precision::U8Device, &spec, 8, &env).unwrap();
+        assert!(plan.ell.is_none());
+        assert!(matches!(plan.features, Features::Quantized { .. }));
+    }
+
+    #[test]
+    fn cached_plan_skips_the_feature_store() {
+        let (_path, store, csr) = synthetic_store("skip");
+        let env = ExecEnv::with_threads(1);
+        let cache: PlanCache<&'static str, ExecPlan> = PlanCache::new(4);
+        let build = |precision| {
+            let spec =
+                PlanSpec { csr: &csr, width: Some(4), strategy: Strategy::Aes, host_ell: true };
+            prepare_plan(&store, precision, &spec, 8, &env)
+        };
+        for round in 0..5 {
+            let (_, hit) = cache.get_or_try_insert(&"route", || build(Precision::F32)).unwrap();
+            assert_eq!(hit, round > 0);
+        }
+        // The store was touched exactly once despite five executions.
+        assert_eq!(store.load_count(), 1);
+        let (_, hit) = cache.get_or_try_insert(&"route8", || build(Precision::U8Device)).unwrap();
+        assert!(!hit);
+        assert_eq!(store.load_count(), 2);
+    }
+}

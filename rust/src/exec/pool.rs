@@ -1,0 +1,392 @@
+//! Persistent worker pool — spawn once, park/unpark, per-worker queues
+//! with work stealing.
+//!
+//! Replaces the two thread-management patterns the seed used on hot
+//! paths: `std::thread::scope` (which spawns and joins OS threads on
+//! every SpMM call) and the coordinator's `Mutex<Receiver>` loop (every
+//! worker contending one lock for every batch). Here each worker owns a
+//! deque; submits round-robin across them and idle workers steal from
+//! their neighbours' tails, so an uneven split cannot strand work.
+//!
+//! Two entry points:
+//! * [`Pool::spawn`] — detached `'static` job (coordinator batches).
+//! * [`Pool::run`] — scoped fork-join over *borrowed* tasks (the SpMM /
+//!   sampling row chunks). Blocks until every task finished; the caller
+//!   executes one task inline, so progress is guaranteed even on a
+//!   single-worker pool.
+//!
+//! Do not call [`Pool::run`] from inside a task running on the *same*
+//! pool: the caller would block a worker slot while waiting. Layered use
+//! (coordinator pool tasks fan out onto the global compute pool) is fine
+//! and is exactly the intended topology.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    /// One deque per worker; submit round-robins, owners pop the front,
+    /// thieves pop the back.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Gate for sleep/wake handshakes (guards no data).
+    gate: Mutex<()>,
+    /// Signalled on submit and shutdown.
+    work: Condvar,
+    /// Signalled when `in_flight` drains to zero.
+    idle: Condvar,
+    shutdown: AtomicBool,
+    /// Jobs submitted but not yet finished (queued + executing).
+    in_flight: AtomicUsize,
+    /// Round-robin submit cursor.
+    next: AtomicUsize,
+}
+
+impl Shared {
+    fn pop(&self, home: usize) -> Option<Job> {
+        if let Some(job) = self.queues[home].lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        let n = self.queues.len();
+        for k in 1..n {
+            if let Some(job) = self.queues[(home + k) % n].lock().unwrap().pop_back() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    fn queues_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.lock().unwrap().is_empty())
+    }
+
+    fn finish_one(&self) {
+        if self.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _gate = self.gate.lock().unwrap();
+            self.idle.notify_all();
+        }
+    }
+}
+
+/// Completion latch for one [`Pool::run`] call.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch { remaining: Mutex::new(count), done: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn count_down(&self, ok: bool) {
+        if !ok {
+            self.panicked.store(true, Ordering::Release);
+        }
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+/// Waits for the latch even if the caller's inline task panics, so no
+/// borrowed task can outlive the `run` frame it borrows from.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// The persistent pool. Dropping it drains every queued job, then joins
+/// the workers.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `threads.max(1)` parked workers.
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queues: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            gate: Mutex::new(()),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            next: AtomicUsize::new(0),
+        });
+        let workers = (0..threads)
+            .map(|home| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("exec-pool-{home}"))
+                    .spawn(move || worker_loop(&shared, home))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { shared, workers }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Queue a detached job. Panics inside the job are caught (the worker
+    /// survives); use [`Pool::run`] when you need panic propagation.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.submit(Box::new(job));
+    }
+
+    fn submit(&self, job: Job) {
+        debug_assert!(!self.shared.shutdown.load(Ordering::Acquire), "submit after shutdown");
+        self.shared.in_flight.fetch_add(1, Ordering::AcqRel);
+        let slot = self.shared.next.fetch_add(1, Ordering::Relaxed) % self.shared.queues.len();
+        self.shared.queues[slot].lock().unwrap().push_back(job);
+        // Notify under the gate so a worker checking-then-waiting cannot
+        // miss this submission.
+        let _gate = self.shared.gate.lock().unwrap();
+        self.shared.work.notify_one();
+    }
+
+    /// Scoped fork-join: execute borrowed tasks on the pool and block
+    /// until all of them completed. The last task runs inline on the
+    /// caller. Panics in any task are re-raised here after the join.
+    pub fn run<'env>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let Some(inline) = tasks.pop() else { return };
+        let latch = Arc::new(Latch::new(tasks.len()));
+        let guard = WaitGuard(&latch);
+        for task in tasks {
+            let latch = latch.clone();
+            let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
+                latch.count_down(ok);
+            });
+            // SAFETY: the borrowed lifetime is erased, but `guard` (and the
+            // explicit wait below) blocks this frame until every wrapped
+            // task has run — including when `inline` panics — so no task
+            // can observe its borrows after they expire. The fat-pointer
+            // layout of `Box<dyn FnOnce() + Send>` is lifetime-invariant.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(wrapped)
+            };
+            self.submit(job);
+        }
+        inline();
+        drop(guard); // waits for the pool-side tasks
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("exec::Pool task panicked");
+        }
+    }
+
+    /// Block until every submitted job has finished (the coordinator's
+    /// drain-on-shutdown step).
+    pub fn wait_idle(&self) {
+        let mut gate = self.shared.gate.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::Acquire) > 0 {
+            let (next, _) = self
+                .shared
+                .idle
+                .wait_timeout(gate, Duration::from_millis(10))
+                .unwrap();
+            gate = next;
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _gate = self.shared.gate.lock().unwrap();
+            self.shared.work.notify_all();
+        }
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, home: usize) {
+    loop {
+        if let Some(job) = shared.pop(home) {
+            // Detached jobs must not kill the worker; `run` re-raises
+            // panics on the caller via its latch.
+            let _ = catch_unwind(AssertUnwindSafe(job));
+            shared.finish_one();
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            // Queues are drained (checked above) — exit.
+            return;
+        }
+        let gate = shared.gate.lock().unwrap();
+        // Re-check under the gate: submits notify while holding it, so a
+        // job pushed between our pop attempt and here cannot be missed.
+        if !shared.queues_empty() || shared.shutdown.load(Ordering::Acquire) {
+            continue;
+        }
+        // Timeout is belt-and-braces against lost wakeups.
+        let _ = shared.work.wait_timeout(gate, Duration::from_millis(50)).unwrap();
+    }
+}
+
+/// The process-wide compute pool used by the data-parallel kernels
+/// (SpMM row chunks, parallel sampling). Sized to the machine once;
+/// callers asking for more parallelism than this simply queue.
+pub fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(super::ExecEnv::detect().threads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicU64;
+    use std::thread::ThreadId;
+
+    #[test]
+    fn runs_borrowed_tasks_to_completion() {
+        let pool = Pool::new(4);
+        let mut data = vec![0u64; 64];
+        let chunks: Vec<&mut [u64]> = data.chunks_mut(8).collect();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(k, chunk)| {
+                Box::new(move || {
+                    for (i, slot) in chunk.iter_mut().enumerate() {
+                        *slot = (k * 8 + i) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn reuses_the_same_threads_across_calls() {
+        let pool = Pool::new(3);
+        let seen: Mutex<HashSet<ThreadId>> = Mutex::new(HashSet::new());
+        for _ in 0..50 {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..6)
+                .map(|_| {
+                    Box::new(|| {
+                        seen.lock().unwrap().insert(std::thread::current().id());
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        // 50 scoped invocations × 6 tasks, but only pool workers + the
+        // caller ever execute — the pool does not spawn per call.
+        let distinct = seen.lock().unwrap().len();
+        assert!(
+            distinct <= pool.worker_count() + 1,
+            "expected ≤ {} distinct threads, saw {distinct}",
+            pool.worker_count() + 1
+        );
+    }
+
+    #[test]
+    fn spawn_and_wait_idle_drain() {
+        let pool = Pool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let counter = counter.clone();
+            pool.spawn(move || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = Pool::new(2);
+            for _ in 0..50 {
+                let counter = counter.clone();
+                pool.spawn(move || {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop joins after draining
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn single_worker_pool_makes_progress() {
+        let pool = Pool::new(1);
+        let mut out = vec![0u32; 4];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .iter_mut()
+            .map(|slot| {
+                Box::new(move || {
+                    *slot = 9;
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(out, vec![9; 4]);
+    }
+
+    #[test]
+    fn run_propagates_task_panics() {
+        let pool = Pool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("boom");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        assert!(result.is_err(), "panic in a pool task must surface to the caller");
+        // The pool stays usable afterwards.
+        let flag = AtomicBool::new(false);
+        pool.run(vec![Box::new(|| {
+            flag.store(true, Ordering::Relaxed);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert!(flag.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        assert!(std::ptr::eq(global(), global()));
+        assert!(global().worker_count() >= 1);
+    }
+}

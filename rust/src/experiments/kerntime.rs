@@ -12,8 +12,10 @@ use crate::rng::Pcg32;
 use crate::sampling::{sample_ell_par, Strategy};
 use crate::spmm::{csr_naive, csr_rowcache};
 
+/// Thread budget, via the exec layer's single machine probe (call sites
+/// must not re-detect parallelism ad hoc).
 pub fn threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    crate::exec::ExecEnv::detect().threads
 }
 
 fn bencher(quick: bool) -> Bencher {

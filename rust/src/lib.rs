@@ -26,6 +26,7 @@
 //! | [`sampling`]  | the paper's strategy table + hash, ELL planners, CDFs |
 //! | [`quant`]     | INT8 scalar quantization + instrumented feature store |
 //! | [`spmm`]      | CPU SpMM kernels (cuSPARSE / GE-SpMM analogs, ELL)    |
+//! | [`exec`]      | kernel dispatch, persistent worker pool, plan cache   |
 //! | [`runtime`]   | PJRT engine: artifact registry, executables, literals |
 //! | [`coordinator`]| request router, dynamic batcher, worker pool, metrics|
 //! | [`experiments`]| one runner per paper figure/table                    |
@@ -34,6 +35,7 @@
 
 pub mod bench;
 pub mod coordinator;
+pub mod exec;
 pub mod experiments;
 pub mod gen;
 pub mod graph;

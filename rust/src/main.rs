@@ -209,6 +209,7 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
             max_batch: batch,
             max_delay: std::time::Duration::from_millis(2),
         },
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::start(engine.clone(), store.clone(), cfg);
 
@@ -263,6 +264,12 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     println!(
         "latency p50 {:?} p99 {:?} | queue wait p50 {:?} | exec p50 {:?} | load p50 {:?}",
         snap.latency_p50, snap.latency_p99, snap.queue_wait_p50, snap.exec_p50, snap.load_p50
+    );
+    println!(
+        "plan cache: {} warm hits / {} cold builds ({} routes resident)",
+        snap.plan_hits,
+        snap.plan_misses,
+        coord.plan_cache_len()
     );
     println!("\nper-route executions:");
     for (route, count) in &snap.per_route {

@@ -10,6 +10,7 @@
 //! the Pallas dequant kernel) or host-side (CPU baselines).
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -69,6 +70,9 @@ pub struct FeatureStore {
     path: PathBuf,
     shape: Vec<usize>,
     params: QuantParams,
+    /// Storage reads performed — the exec-layer plan cache asserts this
+    /// stays flat on warm routes.
+    loads: AtomicU64,
 }
 
 impl FeatureStore {
@@ -82,7 +86,13 @@ impl FeatureStore {
             path,
             shape: feat.shape.clone(),
             params: QuantParams { x_min: qr[0], x_max: qr[1] },
+            loads: AtomicU64::new(0),
         })
+    }
+
+    /// How many times [`FeatureStore::load`] has hit storage.
+    pub fn load_count(&self) -> u64 {
+        self.loads.load(Ordering::Relaxed)
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -100,6 +110,7 @@ impl FeatureStore {
     /// → device), which is exactly what Table 3 times. The executor keeps
     /// graph structure cached; features are the per-request payload.
     pub fn load(&self, precision: Precision) -> Result<(Features, LoadStats)> {
+        self.loads.fetch_add(1, Ordering::Relaxed);
         let mut stats = LoadStats::default();
         let t0 = Instant::now();
         let key = match precision {

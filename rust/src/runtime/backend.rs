@@ -1,0 +1,69 @@
+//! Execution backends — how a forward pass actually runs.
+//!
+//! The coordinator used to be hard-wired to the PJRT engine; now it
+//! routes through a [`Backend`] so the same serving stack drives either
+//! the compiled AOT artifacts (production) or the rust host substrate
+//! (CPU-only machines, offline CI, the exec-layer integration tests).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::exec::{ExecEnv, ExecPlan};
+use crate::tensor::Tensor;
+
+use super::dataset::{Dataset, Weights};
+use super::engine::Engine;
+use super::host::host_forward;
+use super::infer::{run_forward, ForwardRequest, ForwardResult};
+
+/// Where forward passes execute.
+#[derive(Clone)]
+pub enum Backend {
+    /// Compiled AOT artifacts through the PJRT engine (device sampling +
+    /// on-device dequant — the paper's fused path).
+    Pjrt(Arc<Engine>),
+    /// The rust substrate: dispatched CPU SpMM + dense MLP. Needs no
+    /// artifacts directory and no XLA runtime.
+    Host,
+}
+
+impl Backend {
+    /// True when aggregation happens on the host — such backends want the
+    /// plan cache to carry a sampled ELL plan.
+    pub fn aggregates_on_host(&self) -> bool {
+        matches!(self, Backend::Host)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Host => "host",
+        }
+    }
+
+    /// Run one forward pass. `features` overrides the dataset tensor
+    /// (the coordinator passes plan-cached features); `plan` is the
+    /// route's cached execution plan (sampled ELL + operand profile),
+    /// used by host aggregation only.
+    pub fn forward(
+        &self,
+        ds: &Dataset,
+        weights: &Weights,
+        req: &ForwardRequest,
+        features: Option<&Tensor>,
+        plan: Option<&ExecPlan>,
+        env: &ExecEnv,
+    ) -> Result<ForwardResult> {
+        match self {
+            Backend::Pjrt(engine) => run_forward(engine, ds, weights, req, features),
+            Backend::Host => host_forward(ds, weights, req, features, plan, env),
+        }
+    }
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}

@@ -143,12 +143,7 @@ pub fn accuracy(ds: &Dataset, logits: &Tensor) -> Result<f64> {
             continue;
         }
         let row = &vals[i * ds.classes..(i + 1) * ds.classes];
-        let pred = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(k, _)| k as i32)
-            .unwrap();
+        let pred = crate::util::argmax_f32(row) as i32;
         correct += (pred == ds.labels[i]) as usize;
         total += 1;
     }

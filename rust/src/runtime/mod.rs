@@ -7,11 +7,15 @@
 //! `XlaComputation::from_proto` → `client.compile` (cached) → `execute`.
 
 mod artifacts;
+mod backend;
 mod dataset;
 mod engine;
+mod host;
 mod infer;
 
 pub use artifacts::{artifact_key, ArtifactKind, ArtifactMeta, DatasetMeta, InputSpec, Manifest};
+pub use backend::Backend;
 pub use dataset::{Dataset, Weights, GCN_PARAM_ORDER, SAGE_PARAM_ORDER};
 pub use engine::{Arg, Engine, ExecStats};
+pub use host::{host_forward, host_supports};
 pub use infer::{accuracy, run_forward, ForwardRequest, ForwardResult};

@@ -70,56 +70,57 @@ fn sample_rows_into(
 
 /// Parallel in-place sampling into a reusable [`Ell`] — the multi-core
 /// mirror of the GPU kernel's lines 5–14, where thousands of threads
-/// sample rows concurrently. `ell` must have matching dims.
+/// sample rows concurrently. `ell` must have matching dims. Chunks run
+/// on the persistent [`crate::exec`] pool (no per-call thread spawns).
 pub fn sample_ell_par(csr: &Csr, width: usize, strategy: Strategy, ell: &mut Ell, threads: usize) {
     assert_eq!(ell.n_rows, csr.n_rows);
     assert_eq!(ell.width, width);
-    let parts = threads.max(1);
+    let parts = threads.max(1).min(csr.n_rows.max(1));
     let chunk = csr.n_rows.div_ceil(parts);
     // Split the output buffers along row boundaries for the workers.
     let mut val_rest: &mut [f32] = &mut ell.val;
     let mut col_rest: &mut [i32] = &mut ell.col;
     let mut slots_rest: &mut [i32] = &mut ell.slots;
-    std::thread::scope(|s| {
-        for part in 0..parts {
-            let lo = part * chunk;
-            let hi = ((part + 1) * chunk).min(csr.n_rows);
-            if lo >= hi {
-                break;
-            }
-            let (val_chunk, vr) = val_rest.split_at_mut((hi - lo) * width);
-            let (col_chunk, cr) = col_rest.split_at_mut((hi - lo) * width);
-            let (slots_chunk, sr) = slots_rest.split_at_mut(hi - lo);
-            val_rest = vr;
-            col_rest = cr;
-            slots_rest = sr;
-            s.spawn(move || {
-                // Re-base the chunk slices to local row indices.
-                for i in lo..hi {
-                    let li = i - lo;
-                    let base = csr.row_ptr[i] as usize;
-                    let nnz = csr.row_nnz(i);
-                    let p = strategy_params(nnz, width, strategy);
-                    slots_chunk[li] = p.slots as i32;
-                    for s_idx in 0..p.sample_cnt.min(p.slots) {
-                        let start = base + start_index(s_idx, nnz, p.n);
-                        let mut slot = s_idx;
-                        let mut j = 0;
-                        while slot < p.slots && j < p.n {
-                            val_chunk[li * width + slot] = csr.val[start + j];
-                            col_chunk[li * width + slot] = csr.col_ind[start + j];
-                            slot += p.sample_cnt;
-                            j += 1;
-                        }
-                    }
-                    for k in p.slots..width {
-                        val_chunk[li * width + k] = 0.0;
-                        col_chunk[li * width + k] = 0;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts);
+    for part in 0..parts {
+        let lo = part * chunk;
+        let hi = ((part + 1) * chunk).min(csr.n_rows);
+        if lo >= hi {
+            break;
+        }
+        let (val_chunk, vr) = val_rest.split_at_mut((hi - lo) * width);
+        let (col_chunk, cr) = col_rest.split_at_mut((hi - lo) * width);
+        let (slots_chunk, sr) = slots_rest.split_at_mut(hi - lo);
+        val_rest = vr;
+        col_rest = cr;
+        slots_rest = sr;
+        tasks.push(Box::new(move || {
+            // Re-base the chunk slices to local row indices.
+            for i in lo..hi {
+                let li = i - lo;
+                let base = csr.row_ptr[i] as usize;
+                let nnz = csr.row_nnz(i);
+                let p = strategy_params(nnz, width, strategy);
+                slots_chunk[li] = p.slots as i32;
+                for s_idx in 0..p.sample_cnt.min(p.slots) {
+                    let start = base + start_index(s_idx, nnz, p.n);
+                    let mut slot = s_idx;
+                    let mut j = 0;
+                    while slot < p.slots && j < p.n {
+                        val_chunk[li * width + slot] = csr.val[start + j];
+                        col_chunk[li * width + slot] = csr.col_ind[start + j];
+                        slot += p.sample_cnt;
+                        j += 1;
                     }
                 }
-            });
-        }
-    });
+                for k in p.slots..width {
+                    val_chunk[li * width + k] = 0.0;
+                    col_chunk[li * width + k] = 0;
+                }
+            }
+        }));
+    }
+    crate::exec::global_pool().run(tasks);
 }
 
 /// Fraction of edges kept by sampling — Fig. 5's per-graph statistic.

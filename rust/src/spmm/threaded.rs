@@ -1,46 +1,92 @@
-//! Row-partitioned multi-threaded SpMM wrappers (std::thread::scope; the
-//! offline registry has no rayon). Rows are split into contiguous chunks
-//! balanced by nnz, mirroring how the GPU kernels assign row segments to
-//! thread blocks.
+//! Row-partitioned multi-threaded SpMM wrappers. Rows are split into
+//! contiguous chunks balanced by nnz (mirroring how the GPU kernels
+//! assign row segments to thread blocks) and executed on the persistent
+//! [`crate::exec`] worker pool — no OS threads are spawned per call.
 
+use crate::exec;
 use crate::graph::{Csr, Ell};
 
-/// Split `n_rows` into `parts` contiguous chunks with roughly equal nnz.
-fn balance_rows(row_nnz: impl Fn(usize) -> usize, n_rows: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
-    let total: usize = (0..n_rows).map(&row_nnz).sum();
-    let per = (total / parts.max(1)).max(1);
+/// Split `n_rows` into at most `parts` contiguous, **non-empty** chunks
+/// with roughly equal nnz (quantile cuts over the nnz prefix sum).
+///
+/// Degenerate inputs are clamped rather than mis-split: `parts` is capped
+/// at `n_rows` (never more chunks than rows), zero/tiny total nnz falls
+/// back to even row counts, and `n_rows == 0` yields one empty chunk.
+fn balance_rows(
+    row_nnz: impl Fn(usize) -> usize,
+    n_rows: usize,
+    parts: usize,
+) -> Vec<std::ops::Range<usize>> {
+    if n_rows == 0 {
+        return vec![0..0];
+    }
+    let parts = parts.clamp(1, n_rows);
+    let mut prefix = Vec::with_capacity(n_rows + 1);
+    prefix.push(0usize);
+    for i in 0..n_rows {
+        let p = prefix[i] + row_nnz(i);
+        prefix.push(p);
+    }
+    let total = prefix[n_rows];
+
     let mut out = Vec::with_capacity(parts);
     let mut start = 0usize;
-    let mut acc = 0usize;
-    for i in 0..n_rows {
-        acc += row_nnz(i);
-        if acc >= per && out.len() + 1 < parts {
-            out.push(start..i + 1);
-            start = i + 1;
-            acc = 0;
-        }
+    for k in 1..=parts {
+        let end = if k == parts {
+            n_rows
+        } else if total == 0 {
+            // No mass to balance — cut by row count.
+            n_rows * k / parts
+        } else {
+            // First row index whose prefix mass reaches the k-th quantile.
+            let target = (total * k).div_ceil(parts);
+            prefix.partition_point(|&p| p < target)
+        };
+        // Keep every chunk non-empty and leave ≥1 row per remaining chunk.
+        let end = end.max(start + 1).min(n_rows - (parts - k));
+        out.push(start..end);
+        start = end;
     }
-    out.push(start..n_rows);
+
+    debug_assert_eq!(out.first().map(|r| r.start), Some(0));
+    debug_assert_eq!(out.last().map(|r| r.end), Some(n_rows));
+    debug_assert!(out.windows(2).all(|w| w[0].end == w[1].start), "chunks must be contiguous");
+    debug_assert!(out.iter().all(|r| !r.is_empty()), "chunks must be non-empty");
     out
 }
 
-/// Parallel exact CSR SpMM (cuSPARSE-role baseline, multi-core).
-pub fn csr_naive_par(csr: &Csr, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
-    assert_eq!(out.len(), csr.n_rows * f);
-    let chunks = balance_rows(|i| csr.row_nnz(i), csr.n_rows, threads.max(1));
-    // Split the output buffer along the same row boundaries.
-    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(chunks.len());
+/// Split `out` into row-aligned mutable slices matching `chunks`.
+fn split_output<'a>(
+    out: &'a mut [f32],
+    chunks: &[std::ops::Range<usize>],
+    f: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut slices = Vec::with_capacity(chunks.len());
     let mut rest = out;
     let mut prev_end = 0usize;
-    for r in &chunks {
+    for r in chunks {
         let (head, tail) = rest.split_at_mut((r.end - prev_end) * f);
         slices.push(head);
         rest = tail;
         prev_end = r.end;
     }
-    std::thread::scope(|s| {
-        for (range, slice) in chunks.into_iter().zip(slices.into_iter()) {
-            s.spawn(move || {
+    slices
+}
+
+/// Parallel exact CSR SpMM (cuSPARSE-role baseline, multi-core).
+///
+/// `threads` is the chunking factor; execution happens on the shared
+/// persistent pool, so asking for more chunks than pool workers simply
+/// queues them.
+pub fn csr_naive_par(csr: &Csr, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(out.len(), csr.n_rows * f);
+    let chunks = balance_rows(|i| csr.row_nnz(i), csr.n_rows, threads.max(1));
+    let slices = split_output(out, &chunks, f);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
                 slice.fill(0.0);
                 for i in range.clone() {
                     let local = &mut slice[(i - range.start) * f..(i - range.start + 1) * f];
@@ -53,9 +99,10 @@ pub fn csr_naive_par(csr: &Csr, b: &[f32], f: usize, out: &mut [f32], threads: u
                         }
                     }
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    exec::global_pool().run(tasks);
 }
 
 /// Parallel sampled (ELL) SpMM.
@@ -63,18 +110,12 @@ pub fn ell_spmm_par(ell: &Ell, b: &[f32], f: usize, out: &mut [f32], threads: us
     assert_eq!(out.len(), ell.n_rows * f);
     let w = ell.width;
     let chunks = balance_rows(|i| ell.slots[i] as usize, ell.n_rows, threads.max(1));
-    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(chunks.len());
-    let mut rest = out;
-    let mut prev_end = 0usize;
-    for r in &chunks {
-        let (head, tail) = rest.split_at_mut((r.end - prev_end) * f);
-        slices.push(head);
-        rest = tail;
-        prev_end = r.end;
-    }
-    std::thread::scope(|s| {
-        for (range, slice) in chunks.into_iter().zip(slices.into_iter()) {
-            s.spawn(move || {
+    let slices = split_output(out, &chunks, f);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
                 slice.fill(0.0);
                 for i in range.clone() {
                     let local = &mut slice[(i - range.start) * f..(i - range.start + 1) * f];
@@ -87,9 +128,10 @@ pub fn ell_spmm_par(ell: &Ell, b: &[f32], f: usize, out: &mut [f32], threads: us
                         }
                     }
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    exec::global_pool().run(tasks);
 }
 
 #[cfg(test)]
@@ -99,18 +141,64 @@ mod tests {
     use crate::spmm::testutil::{assert_close, random_graph_and_features};
     use crate::spmm::{csr_naive, ell_spmm};
 
+    fn assert_chunk_invariants(chunks: &[std::ops::Range<usize>], n_rows: usize, parts: usize) {
+        assert!(!chunks.is_empty());
+        assert!(chunks.len() <= parts);
+        let mut next = 0;
+        for c in chunks {
+            assert_eq!(c.start, next);
+            if n_rows > 0 {
+                assert!(!c.is_empty(), "empty chunk {c:?} for n_rows={n_rows} parts={parts}");
+            }
+            next = c.end;
+        }
+        assert_eq!(next, n_rows);
+    }
+
     #[test]
     fn balance_covers_all_rows_disjointly() {
         let nnz = [5usize, 0, 100, 3, 3, 3, 50, 1];
         for parts in 1..=6 {
             let chunks = balance_rows(|i| nnz[i], nnz.len(), parts);
             assert!(chunks.len() <= parts);
-            let mut next = 0;
-            for c in &chunks {
-                assert_eq!(c.start, next);
-                next = c.end;
-            }
-            assert_eq!(next, nnz.len());
+            assert_chunk_invariants(&chunks, nnz.len(), parts);
+        }
+    }
+
+    #[test]
+    fn balance_clamps_more_parts_than_rows() {
+        // The seed emitted empty trailing chunks here; now parts is capped
+        // at n_rows and every chunk holds at least one row.
+        for (n_rows, parts) in [(3usize, 10usize), (1, 8), (5, 5), (7, 100)] {
+            let chunks = balance_rows(|i| i + 1, n_rows, parts);
+            assert_eq!(chunks.len(), n_rows.min(parts));
+            assert_chunk_invariants(&chunks, n_rows, parts);
+        }
+    }
+
+    #[test]
+    fn balance_handles_tiny_or_zero_nnz() {
+        // All-zero nnz: fall back to even row cuts, still non-empty.
+        let chunks = balance_rows(|_| 0, 9, 4);
+        assert_eq!(chunks.len(), 4);
+        assert_chunk_invariants(&chunks, 9, 4);
+
+        // One heavy row up front must not starve the trailing chunks.
+        let nnz = [1000usize, 0, 0, 0, 0, 0];
+        let chunks = balance_rows(|i| nnz[i], nnz.len(), 3);
+        assert_chunk_invariants(&chunks, nnz.len(), 3);
+
+        // Empty matrix: a single empty chunk, no panic.
+        let chunks = balance_rows(|_| 1, 0, 4);
+        assert_eq!(chunks, vec![0..0]);
+    }
+
+    #[test]
+    fn balance_is_roughly_even_on_uniform_rows() {
+        let chunks = balance_rows(|_| 10, 100, 4);
+        assert_eq!(chunks.len(), 4);
+        for c in &chunks {
+            assert_eq!(c.end - c.start, 25);
         }
     }
 
@@ -127,12 +215,22 @@ mod tests {
     }
 
     #[test]
+    fn par_csr_with_threads_exceeding_rows() {
+        let (g, b) = random_graph_and_features(12, 4.0, 5, 9);
+        let mut serial = vec![0.0; g.n_rows * 5];
+        csr_naive(&g, &b, 5, &mut serial);
+        let mut par = vec![0.0; g.n_rows * 5];
+        csr_naive_par(&g, &b, 5, &mut par, 64);
+        assert_close(&serial, &par, 1e-6);
+    }
+
+    #[test]
     fn par_ell_matches_serial() {
         let (g, b) = random_graph_and_features(400, 60.0, 8, 8);
         let ell = sample_ell(&g, 32, Strategy::Aes);
         let mut serial = vec![0.0; g.n_rows * 8];
         ell_spmm(&ell, &b, 8, &mut serial);
-        for threads in [2, 3, 8] {
+        for threads in [2, 3, 8, 1000] {
             let mut par = vec![0.0; g.n_rows * 8];
             ell_spmm_par(&ell, &b, 8, &mut par, threads);
             assert_close(&serial, &par, 1e-6);

@@ -2,7 +2,9 @@
 //! no serde) and timing helpers shared by the bench + experiment harnesses.
 
 mod json;
+mod num;
 mod timing;
 
 pub use json::{parse_json, JsonValue};
+pub use num::argmax_f32;
 pub use timing::{fmt_duration, median, percentile, Stopwatch};

@@ -1,0 +1,56 @@
+//! Small numeric helpers shared across layers.
+
+/// NaN-safe argmax over a logits row: NaN entries are treated as −∞,
+/// ties break to the lowest index, and an all-NaN (or empty) row
+/// deterministically yields 0. The seed's `partial_cmp(..).unwrap()`
+/// panicked the worker on the first NaN logit.
+pub fn argmax_f32(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_val = f32::NEG_INFINITY;
+    let mut seen_finite = false;
+    for (i, &v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        if !seen_finite || v > best_val {
+            seen_finite = true;
+            best = i;
+            best_val = v;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_the_max() {
+        assert_eq!(argmax_f32(&[0.1, 0.9, -1.0]), 1);
+        assert_eq!(argmax_f32(&[3.0, 2.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn nan_entries_lose() {
+        assert_eq!(argmax_f32(&[f32::NAN, 0.5, 0.2]), 1);
+        assert_eq!(argmax_f32(&[0.5, f32::NAN, 0.9]), 2);
+    }
+
+    #[test]
+    fn all_nan_or_empty_is_zero() {
+        assert_eq!(argmax_f32(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_f32(&[]), 0);
+    }
+
+    #[test]
+    fn neg_infinity_rows_still_deterministic() {
+        assert_eq!(argmax_f32(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax_f32(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn ties_break_low() {
+        assert_eq!(argmax_f32(&[2.0, 2.0, 1.0]), 0);
+    }
+}

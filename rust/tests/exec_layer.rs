@@ -1,0 +1,269 @@
+//! Integration tests for the exec layer through the full serving stack —
+//! runnable with **no artifacts and no PJRT runtime**: a synthetic
+//! dataset + trained-shape weights are written as `.nbt`, and the
+//! coordinator runs on [`Backend::Host`] (dispatched CPU kernels).
+//!
+//! Covers the acceptance criteria of the exec-layer refactor:
+//! * warm routes never touch the feature store (load count stays flat);
+//! * the persistent pool serves every batch with a constant thread pool;
+//! * host-backend answers match a direct substrate forward;
+//! * invalidation forces exactly one reload.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use aes_spmm::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, RouteKey,
+};
+use aes_spmm::gen;
+use aes_spmm::quant::{quantize, Precision, QuantParams};
+use aes_spmm::rng::Pcg32;
+use aes_spmm::runtime::{host_forward, Backend, Dataset, Weights};
+use aes_spmm::sampling::Strategy;
+use aes_spmm::tensor::{write_nbt, NbtFile, Tensor};
+use aes_spmm::util::argmax_f32;
+
+const N: usize = 96;
+const FEATS: usize = 12;
+const HIDDEN: usize = 8;
+const CLASSES: usize = 5;
+
+fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let len: usize = shape.iter().product();
+    let vals: Vec<f32> = (0..len).map(|_| rng.f32() - 0.5).collect();
+    Tensor::from_f32(shape, &vals)
+}
+
+/// Write `data_{name}.nbt` + `weights_gcn_{name}.nbt` with every key the
+/// loaders require, and return the artifacts dir.
+fn synthetic_artifacts(tag: &str, name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("exec_layer_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Pcg32::new(0xBEEF);
+
+    let g = gen::with_self_loops(&gen::chung_lu(N, 6.0, 2.0, &mut rng)).gcn_normalized();
+    let nnz = g.nnz();
+    let feat: Vec<f32> = (0..N * FEATS).map(|_| rng.f32() - 0.5).collect();
+    let params = QuantParams::of(&feat);
+    let labels: Vec<i32> = (0..N).map(|_| rng.usize_below(CLASSES) as i32).collect();
+    let train_mask: Vec<u8> = (0..N).map(|_| (rng.f32() < 0.5) as u8).collect();
+
+    let mut nbt = NbtFile::new();
+    nbt.insert(
+        "meta",
+        Tensor::from_i64(&[4], &[N as i64, nnz as i64, FEATS as i64, CLASSES as i64]),
+    );
+    nbt.insert("row_ptr", Tensor::from_i32(&[N + 1], &g.row_ptr));
+    nbt.insert("col_ind", Tensor::from_i32(&[nnz], &g.col_ind));
+    nbt.insert("val_gcn", Tensor::from_f32(&[nnz], &g.val));
+    nbt.insert("val_ones", Tensor::from_f32(&[nnz], &vec![1.0f32; nnz]));
+    nbt.insert("feat", Tensor::from_f32(&[N, FEATS], &feat));
+    nbt.insert("featq", Tensor::from_u8(&[N, FEATS], &quantize(&feat, params)));
+    nbt.insert("qrange", Tensor::from_f32(&[2], &[params.x_min, params.x_max]));
+    nbt.insert("labels", Tensor::from_i32(&[N], &labels));
+    nbt.insert("train_mask", Tensor::from_u8(&[N], &train_mask));
+    write_nbt(dir.join(format!("data_{name}.nbt")), &nbt).unwrap();
+
+    let mut w = NbtFile::new();
+    w.insert("w0", rand_tensor(&mut rng, &[FEATS, HIDDEN]));
+    w.insert("b0", rand_tensor(&mut rng, &[HIDDEN]));
+    w.insert("w1", rand_tensor(&mut rng, &[HIDDEN, CLASSES]));
+    w.insert("b1", rand_tensor(&mut rng, &[CLASSES]));
+    w.insert("ideal_acc", Tensor::from_f32(&[1], &[0.5]));
+    write_nbt(dir.join(format!("weights_gcn_{name}.nbt")), &w).unwrap();
+    dir
+}
+
+fn start_host_coordinator(dir: &Path, name: &str, workers: usize) -> (Coordinator, Arc<ModelStore>) {
+    let store =
+        Arc::new(ModelStore::load(dir, &[name.to_string()], &["gcn".to_string()]).unwrap());
+    let coord = Coordinator::start_with(
+        Backend::Host,
+        store.clone(),
+        CoordinatorConfig {
+            workers,
+            queue_depth: 128,
+            batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+            plan_cache_capacity: 16,
+        },
+    );
+    (coord, store)
+}
+
+fn key(name: &str, width: Option<usize>, precision: Precision) -> RouteKey {
+    RouteKey {
+        model: "gcn".into(),
+        dataset: name.into(),
+        width,
+        strategy: Strategy::Aes,
+        precision,
+    }
+}
+
+/// The headline acceptance test: repeated `infer` calls on one RouteKey
+/// must hit storage exactly once — warm batches serve from the plan
+/// cache.
+#[test]
+fn warm_route_never_rereads_features() {
+    let dir = synthetic_artifacts("warm", "tiny");
+    let (coord, store) = start_host_coordinator(&dir, "tiny", 2);
+    let fstore = store.feature_store("tiny").unwrap();
+    assert_eq!(fstore.load_count(), 0);
+
+    let route = key("tiny", Some(4), Precision::F32);
+    for i in 0..6 {
+        let resp = coord.infer(route.clone(), vec![i, i + 1]).unwrap();
+        assert!(resp.error.is_none(), "round {i}: {:?}", resp.error);
+        assert_eq!(resp.predictions.len(), 2);
+        assert_eq!(
+            fstore.load_count(),
+            1,
+            "round {i}: warm route must not hit the feature store again"
+        );
+    }
+
+    // A different precision is a different plan → exactly one more load.
+    let resp = coord.infer(key("tiny", Some(4), Precision::U8Device), vec![0]).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(fstore.load_count(), 2);
+
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.plan_misses, 2, "one cold build per distinct plan");
+    assert!(snap.plan_hits >= 5, "warm batches must be cache hits (got {})", snap.plan_hits);
+    assert!(snap.failed == 0);
+    coord.shutdown();
+}
+
+/// Coordinator answers must equal a direct host-substrate forward (no
+/// cached plan) — same sampling plan, same dispatched kernels, same
+/// argmax.
+#[test]
+fn host_backend_matches_direct_forward() {
+    let dir = synthetic_artifacts("match", "tiny");
+    let ds = Dataset::load(&dir, "tiny").unwrap();
+    let weights = Weights::load(&dir, "gcn", "tiny").unwrap();
+    let (coord, _store) = start_host_coordinator(&dir, "tiny", 2);
+
+    for (width, precision) in [
+        (Some(4), Precision::F32),
+        (Some(16), Precision::F32),
+        (None, Precision::F32),
+        (Some(4), Precision::U8Device),
+    ] {
+        let route = key("tiny", width, precision);
+        let nodes: Vec<usize> = (0..N).step_by(7).collect();
+        let resp = coord.infer(route.clone(), nodes.clone()).unwrap();
+        assert!(resp.error.is_none(), "{width:?}/{precision:?}: {:?}", resp.error);
+
+        let features = match precision {
+            Precision::F32 => None,
+            _ => Some(&ds.featq),
+        };
+        let env = aes_spmm::exec::ExecEnv::with_threads(1);
+        let direct =
+            host_forward(&ds, &weights, &route.to_forward(), features, None, &env).unwrap();
+        let logits = direct.logits.as_f32().unwrap();
+        for p in &resp.predictions {
+            let want = argmax_f32(&logits[p.node * CLASSES..(p.node + 1) * CLASSES]) as i32;
+            assert_eq!(p.class, want, "node {} under {width:?}/{precision:?}", p.node);
+        }
+    }
+    coord.shutdown();
+}
+
+/// The batch pool is spawned once: its worker count never changes across
+/// load, and a burst of same-route requests shares forward passes.
+#[test]
+fn pool_stays_constant_and_batches_amortize() {
+    let dir = synthetic_artifacts("pool", "tiny");
+    let (coord, _store) = start_host_coordinator(&dir, "tiny", 3);
+    assert_eq!(coord.pool_workers(), 3);
+
+    // Warm the route so the burst lands in a steady window.
+    coord.infer(key("tiny", Some(4), Precision::F32), vec![0]).unwrap();
+
+    let mut rxs = Vec::new();
+    for i in 0..40 {
+        let (_, rx) = coord.submit(key("tiny", Some(4), Precision::F32), vec![i % N]).unwrap();
+        rxs.push(rx);
+    }
+    let mut max_batch = 0usize;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        max_batch = max_batch.max(resp.batch_size);
+    }
+    assert!(max_batch > 1, "same-route burst must share forward passes (max {max_batch})");
+    assert_eq!(coord.pool_workers(), 3, "pool must not re-spawn under load");
+
+    let snap = coord.metrics().snapshot();
+    assert!(snap.batches < 41, "41 requests must not take 41+ executions");
+    assert_eq!(snap.completed, 41);
+    coord.shutdown();
+}
+
+/// Invalidation drops exactly the targeted plan; the next batch on that
+/// route reloads once, other routes stay warm.
+#[test]
+fn invalidation_forces_one_reload() {
+    let dir = synthetic_artifacts("invalidate", "tiny");
+    let (coord, store) = start_host_coordinator(&dir, "tiny", 2);
+    let fstore = store.feature_store("tiny").unwrap();
+
+    let route = key("tiny", Some(4), Precision::F32);
+    coord.infer(route.clone(), vec![0]).unwrap();
+    coord.infer(route.clone(), vec![1]).unwrap();
+    assert_eq!(fstore.load_count(), 1);
+    assert_eq!(coord.plan_cache_len(), 1);
+
+    assert!(coord.invalidate_route(&route));
+    assert!(!coord.invalidate_route(&route), "second invalidate finds nothing");
+    coord.infer(route.clone(), vec![2]).unwrap();
+    assert_eq!(fstore.load_count(), 2, "invalidated route must reload exactly once");
+    coord.infer(route, vec![3]).unwrap();
+    assert_eq!(fstore.load_count(), 2, "and then stay warm again");
+    coord.shutdown();
+}
+
+/// Exact (unsampled) routes flow through the same plan cache and the
+/// dispatched exact kernels.
+#[test]
+fn exact_route_serves_and_caches() {
+    let dir = synthetic_artifacts("exact", "tiny");
+    let (coord, store) = start_host_coordinator(&dir, "tiny", 2);
+    let fstore = store.feature_store("tiny").unwrap();
+
+    for i in 0..3 {
+        let resp = coord.infer(key("tiny", None, Precision::F32), vec![i]).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.predictions.len(), 1);
+        let class = resp.predictions[0].class;
+        assert!((0..CLASSES as i32).contains(&class));
+    }
+    assert_eq!(fstore.load_count(), 1);
+    coord.shutdown();
+}
+
+/// Unknown routes fail gracefully and do not poison the cache or pool.
+#[test]
+fn bad_route_fails_gracefully_on_host() {
+    let dir = synthetic_artifacts("bad", "tiny");
+    let (coord, _store) = start_host_coordinator(&dir, "tiny", 2);
+
+    let missing = key("nope", Some(4), Precision::F32);
+    let resp = coord.infer(missing, vec![0]).unwrap();
+    assert!(resp.error.is_some(), "unknown dataset must produce an error reply");
+
+    // sage is not implemented on the host backend → error reply, not a hang.
+    let mut sage = key("tiny", Some(4), Precision::F32);
+    sage.model = "sage".into();
+    let resp = coord.infer(sage, vec![0]).unwrap();
+    assert!(resp.error.is_some());
+
+    // The coordinator keeps serving good routes afterwards.
+    let ok = coord.infer(key("tiny", Some(4), Precision::F32), vec![1]).unwrap();
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    assert!(coord.metrics().snapshot().failed >= 2);
+    coord.shutdown();
+}

@@ -28,6 +28,7 @@ fn setup(workers: usize, queue: usize, max_batch: usize) -> Option<(Coordinator,
             workers,
             queue_depth: queue,
             batcher: BatcherConfig { max_batch, max_delay: Duration::from_millis(1) },
+            ..CoordinatorConfig::default()
         },
     );
     Some((coord, store))

@@ -1,0 +1,237 @@
+//! Vendored stand-in for the `anyhow` crate — the offline registry carries
+//! no external crates, so this ships the API subset the workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait (on both
+//! `Result` and `Option`), and the `anyhow!` / `bail!` macros.
+//!
+//! Semantics match upstream where it matters:
+//! * `Display` prints the outermost message; `{:#}` prints the full
+//!   `outer: inner: ...` context chain.
+//! * `Debug` (what `.unwrap()` shows) prints the message plus a
+//!   `Caused by:` list.
+//! * Any `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as
+/// upstream (so `Result<T, SomeOtherError>` through this alias still works).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus the chain of causes it wraps.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost wrapped error first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), chain: Vec::new() }
+    }
+
+    fn from_std<E: StdError + ?Sized>(err: &E) -> Error {
+        let msg = err.to_string();
+        let mut chain = Vec::new();
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg, chain }
+    }
+
+    /// Wrap this error in a new outermost context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Error { msg: context.to_string(), chain }
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.chain.iter().map(|s| s.as_str()))
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for cause in &self.chain {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.chain.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what keeps this blanket `From` coherent (same trick as upstream).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_std(&err)
+    }
+}
+
+mod ext {
+    use super::{Error, StdError};
+
+    /// Anything that can become an [`Error`] — std errors and `Error`
+    /// itself. Mirrors upstream's private `ext::StdError` shim so that
+    /// `Context` works uniformly on `Result<T, E>` and `Result<T, Error>`.
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn from_std_and_context_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("loading dataset");
+        assert_eq!(format!("{e}"), "loading dataset");
+        assert_eq!(format!("{e:#}"), "loading dataset: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: missing file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(7).context("nope").unwrap(), 7);
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 42));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "inner 42"]);
+    }
+
+    #[test]
+    fn bail_macro() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("broke with code {}", 3);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "broke with code 3");
+    }
+
+    #[test]
+    fn debug_shows_causes() {
+        let e: Error = io_err().into();
+        let e = e.context("ctx");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("ctx"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing file"));
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "missing file");
+    }
+}

@@ -1,0 +1,250 @@
+//! Offline stub of the `xla` crate's PJRT surface.
+//!
+//! The offline registry has no XLA runtime, so this crate keeps the
+//! workspace compiling and the non-PJRT 95% of the system testable:
+//!
+//! * [`Literal`] is fully functional host-side (shape + typed payload) —
+//!   `Tensor::to_literal` and round-trips work without any runtime.
+//! * Every device-touching operation ([`PjRtClient::cpu`] first of all)
+//!   returns a clear [`Error`] instead of executing, so callers fail fast
+//!   with "stub" in the message rather than crashing.
+//!
+//! Swap the `xla` path dependency in `rust/Cargo.toml` for the real
+//! bindings to execute the AOT artifacts; the API here is signature-
+//! compatible with the subset the workspace calls.
+
+use std::fmt;
+
+/// Stub error: carries the operation that needed the real runtime.
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable(op: &str) -> Error {
+        Error {
+            msg: format!(
+                "{op}: XLA/PJRT runtime not available (offline `xla` stub; \
+                 link the real bindings to execute compiled artifacts)"
+            ),
+        }
+    }
+
+    fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA element types (subset + padding variants so wildcard matches stay
+/// reachable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    C64,
+    C128,
+}
+
+/// Array shape of a literal: element type + dimensions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Sealed decoding support for [`Literal::to_vec`].
+pub trait NativeType: Sized {
+    const TY: ElementType;
+    const SIZE: usize;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($ty:ty, $elem:expr, $size:expr) => {
+        impl NativeType for $ty {
+            const TY: ElementType = $elem;
+            const SIZE: usize = $size;
+            fn from_le(bytes: &[u8]) -> Self {
+                <$ty>::from_le_bytes(bytes.try_into().expect("slice length checked by caller"))
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32, 4);
+native!(f64, ElementType::F64, 8);
+native!(i32, ElementType::S32, 4);
+native!(i64, ElementType::S64, 8);
+native!(u8, ElementType::U8, 1);
+
+/// A host literal: element type, dims, little-endian payload.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { ty: self.ty, dims: self.dims.clone() })
+    }
+
+    /// Unwrap a 1-tuple literal. Tuples only come back from device
+    /// execution, which the stub cannot perform.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::msg(format!(
+                "literal element type {:?} != requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        if self.data.len() % T::SIZE != 0 {
+            return Err(Error::msg("literal payload not a multiple of the element size"));
+        }
+        Ok(self.data.chunks_exact(T::SIZE).map(T::from_le).collect())
+    }
+}
+
+/// Stub device buffer — never constructible through a real transfer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Stub PJRT client. [`PjRtClient::cpu`] fails fast so callers surface a
+/// single clear error at engine construction instead of deep in a batch.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+/// Stub HLO module proto (text parsing needs the real runtime).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err(), "wrong-type view must fail");
+    }
+
+    #[test]
+    fn device_ops_error_clearly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute_b(&[]).is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
