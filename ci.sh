@@ -16,9 +16,17 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Docs gate: rustdoc warnings (broken intra-doc links, bad code fences)
+# are errors, and `exec` / `quant` carry #![warn(missing_docs)] so every
+# public item in those modules must be documented.
+echo "== cargo doc (deny warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p aes-spmm
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== perf baseline: BENCH_spmm.json =="
     cargo bench --bench spmm_kernels -- --json BENCH_spmm.json
+    echo "== perf baseline: BENCH_loading.json =="
+    cargo bench --bench loading -- --json BENCH_loading.json
 fi
 
 echo "CI OK"

@@ -40,6 +40,8 @@ fn main() -> Result<()> {
         let feat_tensor = match feats {
             Features::Dense(t) => t,
             Features::Quantized { q, .. } => q,
+            // load() is the eager path; only stage() streams.
+            Features::Streamed(h) => h.to_dense(),
         };
         let r = run_forward(
             &engine,

@@ -100,7 +100,13 @@ fn plan_cache_vs_reload() {
 
     let env = ExecEnv::detect();
     let build = || {
-        let spec = PlanSpec { csr: &csr, width: Some(32), strategy: Strategy::Aes, host_ell: true };
+        let spec = PlanSpec {
+            csr: &csr,
+            width: Some(32),
+            strategy: Strategy::Aes,
+            host_ell: true,
+            stream: false,
+        };
         prepare_plan(&fstore, Precision::F32, &spec, f, &env).expect("prepare plan")
     };
 

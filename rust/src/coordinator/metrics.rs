@@ -83,9 +83,11 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub batches: AtomicU64,
-    /// Warm executions served from the route plan cache (no disk load).
+    /// Executions served from the route plan cache (no disk load on the
+    /// critical path — including plans a prefetch staged just in time).
     pub plan_hits: AtomicU64,
-    /// Cold executions that built (and charged) a route plan.
+    /// Route plan builds, wherever they ran: inline on a batch worker or
+    /// ahead of time on the prefetch pool.
     pub plan_misses: AtomicU64,
     pub latency: Histogram,
     pub queue_wait: Histogram,

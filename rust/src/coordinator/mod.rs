@@ -2,23 +2,51 @@
 //! DGL framework" role in the paper's evaluation, §4.1, rebuilt as a
 //! production-style service).
 //!
-//! Request path (all rust, no python):
+//! # Purpose
+//!
+//! Turn individual inference requests into batched, plan-cached,
+//! prefetch-overlapped forward passes — the serving shell around the
+//! exec layer.
+//!
+//! # Structure
+//!
+//! | unit      | role                                                   |
+//! |-----------|--------------------------------------------------------|
+//! | `request` | [`RouteKey`] / request + reply types, submit errors    |
+//! | `batcher` | dynamic batching: group by route, flush on size/delay  |
+//! | `server`  | [`Coordinator`]: intake queue, worker pool, plan cache + prefetcher wiring, route execution |
+//! | `store`   | [`ModelStore`]: immutable datasets / weights / feature stores shared lock-free via `Arc` |
+//! | `metrics` | lock-cheap counters + log-bucketed latency histograms  |
+//!
+//! # Request path (all rust, no python)
 //!
 //! ```text
 //! client → submit (bounded queue, backpressure)
+//!        ├→ async prefetch: cold routes start feature staging + sampling
+//!        │    on a private pool, overlapping the current batches' SpMM
 //!        → dynamic batcher (group by RouteKey, flush on size/deadline)
 //!        → exec::Pool (persistent workers, per-worker queues + stealing)
-//!            → route plan cache (cold: feature store load — Table 3's
-//!              stage — + sampling + kernel dispatch; warm: memory)
+//!            → route plan cache (warm: memory; cold: wait for the
+//!              prefetched build — Table 3's loading stage off the
+//!              critical path — or build inline)
 //!            → Backend execute: PJRT AOT artifact (sample→SpMM→MLP) or
-//!              the rust host substrate (dispatched CPU kernels)
+//!              the rust host substrate; streamed INT8 routes dequantize
+//!              lazily per row-block inside the worker
 //!            → per-node argmax answers (NaN-safe)
 //!        → per-request reply channels + metrics
 //! ```
 //!
-//! Batching exploits the paper's full-graph inference shape: every request
-//! for the same (model, dataset, W, strategy, precision) key is answered
-//! by a single forward pass, so batch size N costs one execution.
+//! # Rules
+//!
+//! * Batching exploits the paper's full-graph inference shape: every
+//!   request for the same (model, dataset, W, strategy, precision) key
+//!   is answered by a single forward pass, so batch size N costs one
+//!   execution.
+//! * The prefetch pool is never the batch pool — a batch worker may
+//!   block waiting for a staging build and must not be able to queue
+//!   that build behind itself.
+//! * `ModelStore` is immutable after startup; republishing data goes
+//!   through plan-cache invalidation, not store mutation.
 
 mod batcher;
 mod metrics;

@@ -7,6 +7,16 @@
 //! stealing) instead of pushing it through a `Mutex<Receiver>` that every
 //! worker contended; workers are spawned once at startup and parked
 //! between batches.
+//!
+//! Cold routes additionally go through the async prefetcher: `submit`
+//! kicks the route's plan build (feature staging + sampling) onto a
+//! private prefetch pool *before* the request even reaches the batcher,
+//! so staging overlaps the batching delay window and whatever SpMM the
+//! workers are already running; by the time a worker executes the batch,
+//! [`crate::exec::Prefetcher::fetch`] usually finds the plan warm. The
+//! prefetch pool is deliberately separate from the batch pool — a batch
+//! worker blocks in `fetch`, and it must never be able to block on a
+//! build queued behind itself.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -15,7 +25,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::exec::{prepare_plan, ExecEnv, ExecPlan, PlanCache, PlanSpec, Pool};
+use crate::exec::{
+    prepare_plan, ExecEnv, ExecPlan, PlanCache, PlanSpec, Pool, PrefetchStats, Prefetcher,
+};
 use crate::quant::{Features, Precision};
 use crate::runtime::{accuracy, run_forward, Backend, Engine};
 use crate::sampling::Strategy;
@@ -37,6 +49,9 @@ pub struct CoordinatorConfig {
     pub queue_depth: usize,
     /// Route plans kept warm (LRU beyond this many).
     pub plan_cache_capacity: usize,
+    /// Threads staging cold route plans ahead of execution (0 disables
+    /// prefetch; cold builds then run inline on the batch workers).
+    pub prefetch_workers: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -46,6 +61,7 @@ impl Default for CoordinatorConfig {
             workers: 2,
             queue_depth: 1024,
             plan_cache_capacity: 64,
+            prefetch_workers: 1,
         }
     }
 }
@@ -90,7 +106,9 @@ struct WorkerCtx {
     backend: Backend,
     store: Arc<ModelStore>,
     metrics: Arc<Metrics>,
-    plans: PlanCache<PlanKey, ExecPlan>,
+    plans: Arc<PlanCache<PlanKey, ExecPlan>>,
+    /// Stages cold plans on its own pool; `None` when disabled.
+    prefetch: Option<Prefetcher<PlanKey, ExecPlan>>,
     env: ExecEnv,
 }
 
@@ -113,11 +131,15 @@ impl Coordinator {
 
     /// Start the batcher + persistent worker pool over any [`Backend`].
     pub fn start_with(backend: Backend, store: Arc<ModelStore>, cfg: CoordinatorConfig) -> Coordinator {
+        let plans = Arc::new(PlanCache::new(cfg.plan_cache_capacity));
+        let prefetch = (cfg.prefetch_workers > 0)
+            .then(|| Prefetcher::new(plans.clone(), Arc::new(Pool::new(cfg.prefetch_workers))));
         let ctx = Arc::new(WorkerCtx {
             backend,
             store,
             metrics: Arc::new(Metrics::new()),
-            plans: PlanCache::new(cfg.plan_cache_capacity),
+            plans,
+            prefetch,
             env: ExecEnv::detect(),
         });
         let pool = Arc::new(Pool::new(cfg.workers.max(1)));
@@ -156,12 +178,31 @@ impl Coordinator {
         nodes: Vec<usize>,
     ) -> Result<(u64, mpsc::Receiver<InferResponse>), SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let intake = self.intake.as_ref().ok_or(SubmitError::Closed)?;
+        // Claim the route's prefetch slot before `key` moves into the
+        // request: warm / already-staging routes coalesce on a cache peek
+        // (no clones, no closure); a cold route's claim makes any batch
+        // worker racing ahead wait for the build instead of duplicating
+        // it. The build itself is only scheduled once the request is
+        // admitted — a backpressure rejection drops the ticket, releasing
+        // the claim without any storage work.
+        let staging = self.ctx.prefetch.as_ref().and_then(|p| {
+            let plan_key = PlanKey::for_route(&key, self.ctx.backend.aggregates_on_host());
+            p.begin(plan_key).map(|ticket| (ticket, key.clone()))
+        });
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = InferRequest { id, key, nodes, enqueued: Instant::now(), reply: reply_tx };
-        let intake = self.intake.as_ref().ok_or(SubmitError::Closed)?;
         self.ctx.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match intake.try_send(req) {
-            Ok(()) => Ok((id, reply_rx)),
+            Ok(()) => {
+                if let Some((ticket, key)) = staging {
+                    // Staging overlaps the batching window and whatever
+                    // SpMM the workers are already executing.
+                    let ctx = self.ctx.clone();
+                    ticket.commit(move || build_plan(&ctx, &key));
+                }
+                Ok((id, reply_rx))
+            }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.ctx.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Busy)
@@ -189,6 +230,37 @@ impl Coordinator {
     /// Cached route plans currently warm.
     pub fn plan_cache_len(&self) -> usize {
         self.ctx.plans.len()
+    }
+
+    /// Warm a route ahead of traffic: stage its plan (feature load +
+    /// sampling + dispatch) on the prefetch pool without submitting a
+    /// request. Returns `true` when a build was scheduled, `false` when
+    /// the route was already warm/in-flight or prefetch is disabled.
+    pub fn prefetch_route(&self, key: &RouteKey) -> bool {
+        self.spawn_prefetch(key)
+    }
+
+    /// Prefetcher counters (all zeros when prefetch is disabled).
+    pub fn prefetch_stats(&self) -> PrefetchStats {
+        self.ctx.prefetch.as_ref().map(|p| p.stats()).unwrap_or_default()
+    }
+
+    /// Block until no prefetch build is queued or running (tests and
+    /// warm-up scripts that want a deterministic cache state).
+    pub fn wait_prefetch_idle(&self) {
+        if let Some(p) = &self.ctx.prefetch {
+            p.wait_idle();
+        }
+    }
+
+    fn spawn_prefetch(&self, key: &RouteKey) -> bool {
+        let Some(p) = &self.ctx.prefetch else { return false };
+        let plan_key = PlanKey::for_route(key, self.ctx.backend.aggregates_on_host());
+        let Some(ticket) = p.begin(plan_key) else { return false };
+        let ctx = self.ctx.clone();
+        let key = key.clone();
+        ticket.commit(move || build_plan(&ctx, &key));
+        true
     }
 
     /// Drop one route's cached plan (dataset republished / features
@@ -222,6 +294,11 @@ impl Coordinator {
             // the last reference and joins the parked workers.
             drop(pool);
         }
+        // Let any still-running prefetch build finish cleanly; its pool
+        // joins when the ctx (and with it the prefetcher) drops.
+        if let Some(p) = &self.ctx.prefetch {
+            p.wait_idle();
+        }
     }
 }
 
@@ -247,9 +324,11 @@ fn run_batch(ctx: &WorkerCtx, batch: Batch) {
             metrics.load_time.record(load_time);
             metrics.exec_time.record(exec_time);
             if plan_hit {
+                // Misses are counted where plans are actually built
+                // (`build_plan`), which may be the prefetcher rather than
+                // this worker; a hit here includes plans a prefetch
+                // finished while the batch waited.
                 metrics.plan_hits.fetch_add(1, Ordering::Relaxed);
-            } else {
-                metrics.plan_misses.fetch_add(1, Ordering::Relaxed);
             }
             let vals = match logits.as_f32() {
                 Ok(v) => v,
@@ -290,13 +369,37 @@ fn fail_batch(metrics: &Metrics, batch: Batch, msg: &str) {
     }
 }
 
+/// Build one route's plan — the cold path, whether it runs inline on a
+/// batch worker or ahead of time on the prefetch pool. Counts itself as
+/// a plan miss (builds are the meaningful "miss" once staging can happen
+/// off the critical path).
+fn build_plan(ctx: &WorkerCtx, key: &RouteKey) -> Result<ExecPlan> {
+    ctx.metrics.plan_misses.fetch_add(1, Ordering::Relaxed);
+    let ds = ctx.store.dataset(&key.dataset)?;
+    let fstore = ctx.store.feature_store(&key.dataset)?;
+    let host_aggregation = ctx.backend.aggregates_on_host();
+    let spec = PlanSpec {
+        csr: &ds.csr_gcn,
+        width: if host_aggregation { key.width } else { None },
+        strategy: key.strategy,
+        host_ell: host_aggregation,
+        // Host aggregation consumes features row-block-wise, so the plan
+        // can hold a zero-copy streamed handle; device artifacts need the
+        // eagerly materialized tensor.
+        stream: host_aggregation,
+    };
+    prepare_plan(&fstore, key.precision, &spec, ds.feats, &ctx.env)
+}
+
 /// Forward pass for one route through its (possibly cached) plan.
 /// Returns (logits, classes, load, exec, plan_hit).
 ///
-/// Cold route: the plan build performs the instrumented feature load —
-/// the stage the paper's Table 3 measures — and its time is charged to
-/// this batch. Warm route: the plan comes from memory and `load` is zero,
-/// which is the whole point of the cache.
+/// Cold route: the plan build performs the instrumented feature staging —
+/// the stage the paper's Table 3 measures. With prefetch enabled the
+/// build usually ran (or is running) on the prefetch pool already; this
+/// worker waits for it instead of duplicating the storage read. Warm
+/// route: the plan comes from memory and `load` is zero, which is the
+/// whole point of the cache.
 fn execute_route(
     ctx: &WorkerCtx,
     key: &RouteKey,
@@ -306,31 +409,21 @@ fn execute_route(
 
     let host_aggregation = ctx.backend.aggregates_on_host();
     let plan_key = PlanKey::for_route(key, host_aggregation);
-    let (plan, hit) = ctx.plans.get_or_try_insert(&plan_key, || {
-        let fstore = ctx.store.feature_store(&key.dataset)?;
-        let spec = PlanSpec {
-            csr: &ds.csr_gcn,
-            width: if host_aggregation { key.width } else { None },
-            strategy: key.strategy,
-            host_ell: host_aggregation,
-        };
-        prepare_plan(&fstore, key.precision, &spec, ds.feats, &ctx.env)
-    })?;
+    let (plan, hit) = match &ctx.prefetch {
+        Some(p) => p.fetch(&plan_key, || build_plan(ctx, key))?,
+        None => ctx.plans.get_or_try_insert(&plan_key, || build_plan(ctx, key))?,
+    };
 
     let feat_tensor = match &plan.features {
-        Features::Dense(t) => t,
-        Features::Quantized { q, .. } => q,
+        Features::Dense(t) => Some(t),
+        Features::Quantized { q, .. } => Some(q),
+        // The host backend streams row-blocks straight from the plan's
+        // handle; there is no materialized tensor to pass.
+        Features::Streamed(_) => None,
     };
 
     let fwd = key.to_forward();
-    let result = ctx.backend.forward(
-        &ds,
-        &weights,
-        &fwd,
-        Some(feat_tensor),
-        Some(&*plan),
-        &ctx.env,
-    )?;
+    let result = ctx.backend.forward(&ds, &weights, &fwd, feat_tensor, Some(&*plan), &ctx.env)?;
     let load_time = if hit { Duration::ZERO } else { plan.load_stats.total() };
     Ok((result.logits, ds.classes, load_time, result.stats.total(), hit))
 }

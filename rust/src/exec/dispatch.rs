@@ -20,6 +20,7 @@ use super::pool;
 /// instead of re-probing `available_parallelism` at each call site.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ExecEnv {
+    /// Thread budget data-parallel kernels may fan out to.
     pub threads: usize,
 }
 
@@ -59,6 +60,7 @@ pub enum KernelKind {
 }
 
 impl KernelKind {
+    /// Stable label used in benches, logs, and reports.
     pub fn name(self) -> &'static str {
         match self {
             KernelKind::CsrNaive => "csr_naive",
@@ -69,10 +71,12 @@ impl KernelKind {
         }
     }
 
+    /// Whether the kernel row-chunks across the pool.
     pub fn is_parallel(self) -> bool {
         matches!(self, KernelKind::CsrNaivePar | KernelKind::EllSampledPar)
     }
 
+    /// Whether the kernel consumes a sampled (ELL) operand.
     pub fn is_sampled(self) -> bool {
         matches!(self, KernelKind::EllSampled | KernelKind::EllSampledPar)
     }
@@ -82,13 +86,18 @@ impl KernelKind {
 /// over row lengths) and cached inside an `ExecPlan` for serving routes.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GraphProfile {
+    /// Rows of the aggregation operand.
     pub n_rows: usize,
+    /// Stored entries (kept slots for a sampled operand).
     pub nnz: usize,
+    /// Mean entries per row.
     pub mean_nnz: f64,
+    /// Longest row.
     pub max_nnz: usize,
 }
 
 impl GraphProfile {
+    /// Profile an exact CSR operand.
     pub fn of(csr: &Csr) -> GraphProfile {
         GraphProfile {
             n_rows: csr.n_rows,
@@ -98,6 +107,7 @@ impl GraphProfile {
         }
     }
 
+    /// Profile a sampled fixed-width (ELL) operand.
     pub fn of_ell(ell: &Ell) -> GraphProfile {
         let nnz = ell.total_slots();
         let max_nnz = ell.slots.iter().map(|&s| s as usize).max().unwrap_or(0);

@@ -1,22 +1,37 @@
 //! The execution layer — kernel dispatch, the persistent worker pool,
-//! and per-route plan caching (DESIGN: unified execution substrate).
+//! per-route plan caching, and async plan prefetch.
 //!
-//! Everything above the raw kernels routes SpMM work through here:
+//! # Purpose
 //!
-//! * [`dispatch`] — picks a kernel from graph statistics, feature dim,
-//!   and the thread budget (the host-side analog of the paper's adaptive
-//!   strategy table), replacing hard-coded kernel picks at call sites.
-//! * [`pool`] — spawn-once worker pool with per-worker queues and work
-//!   stealing; replaces per-call `std::thread::scope` in the SpMM /
-//!   sampling kernels and the lock-contended worker loop in the
-//!   coordinator.
-//! * [`plan_cache`] — per-route [`ExecPlan`]s (loaded/quantized feature
-//!   tensor, sampled ELL plan, kernel choice) behind an LRU, so warm
-//!   routes stop re-reading features from disk every batch.
+//! Everything above the raw kernels routes SpMM work through here; this
+//! is where the serving stack turns the paper's two levers — adaptive
+//! sampling and INT8 loading — into scheduling decisions.
+//!
+//! # Structure
+//!
+//! | unit         | role                                                  |
+//! |--------------|-------------------------------------------------------|
+//! | `dispatch`   | [`select_kernel`]: pick from the CPU SpMM zoo using graph statistics, feature dim, and the thread budget — the host-side analog of the paper's adaptive strategy table |
+//! | `pool`       | [`Pool`]: spawn-once workers, per-worker queues + work stealing; replaces per-call `std::thread::scope` and the old lock-contended coordinator loop |
+//! | `plan_cache` | [`PlanCache`] + [`ExecPlan`]: per-route staged features (zero-copy row-block handles on the streaming path), sampled ELL, kernel choice — behind an LRU with generation-fenced invalidation |
+//! | `prefetch`   | [`Prefetcher`]: build the next route's plan on a private pool so feature staging overlaps the current batch's SpMM |
+//!
+//! # Rules
+//!
+//! * Kernels never probe the machine themselves — thread budgets flow
+//!   down through [`ExecEnv`].
+//! * Never call [`Pool::run`] from a task on the *same* pool; layered
+//!   pools (coordinator → prefetch → global compute) are the intended
+//!   topology, and the prefetcher documents why its pool is private.
+//! * Plans are immutable once cached; republishing a dataset goes
+//!   through `invalidate`, which also fences out in-flight builds.
+
+#![warn(missing_docs)]
 
 mod dispatch;
 mod plan_cache;
 mod pool;
+mod prefetch;
 
 pub use dispatch::{
     run_ell, run_exact, select_kernel, spmm_ell, spmm_exact, warm_pool, ExecEnv, GraphProfile,
@@ -24,3 +39,4 @@ pub use dispatch::{
 };
 pub use plan_cache::{prepare_plan, ExecPlan, PlanCache, PlanSpec};
 pub use pool::{global as global_pool, Pool};
+pub use prefetch::{PrefetchStats, PrefetchTicket, Prefetcher};

@@ -4,10 +4,11 @@
 //! models the paper's per-inference loading cost (Table 3), but a serving
 //! system should pay it once per route and then serve from memory. An
 //! [`ExecPlan`] bundles everything `execute_route` needs that is
-//! per-route rather than per-batch: the loaded (possibly quantized)
-//! feature tensor, the sampled ELL plan for host-side aggregation, the
-//! dispatched kernel choice, and the load-stage timing recorded at the
-//! cold miss.
+//! per-route rather than per-batch: the staged features — on the
+//! streaming path a zero-copy row-block handle rather than an eagerly
+//! materialized tensor — the sampled ELL plan for host-side aggregation,
+//! the dispatched kernel choice, and the load-stage timing recorded at
+//! the cold miss.
 //!
 //! [`PlanCache`] is a small sharded-free LRU keyed by whatever the caller
 //! routes on. Policy:
@@ -36,7 +37,8 @@ use super::dispatch::{select_kernel, ExecEnv, GraphProfile, KernelKind};
 /// Everything per-route that the hot path should not rebuild per batch.
 #[derive(Clone, Debug)]
 pub struct ExecPlan {
-    /// Feature tensor at the route's precision (dense f32 or u8+params).
+    /// Features at the route's precision: dense f32, u8+params, or a
+    /// streamed zero-copy handle (lazy per-block dequant in the worker).
     pub features: Features,
     /// Load-stage breakdown measured when this plan was built.
     pub load_stats: LoadStats,
@@ -59,14 +61,23 @@ pub struct PlanSpec<'a> {
     pub csr: &'a Csr,
     /// `Some(w)` for sampled routes, `None` for exact aggregation.
     pub width: Option<usize>,
+    /// Edge-sampling strategy for sampled routes.
     pub strategy: Strategy,
     /// Build the host-side ELL plan (true for CPU-aggregating backends;
     /// false when a device artifact performs fused in-kernel sampling).
     pub host_ell: bool,
+    /// Stage features through [`FeatureStore::stage`] — the plan then
+    /// holds a zero-copy row-block handle ([`Features::Streamed`]) that
+    /// dequantizes lazily inside the exec worker, instead of an eagerly
+    /// materialized tensor. Set for host-aggregating backends; device
+    /// backends keep the eager load (the artifact wants one owned
+    /// tensor).
+    pub stream: bool,
 }
 
-/// Build a route's plan: one instrumented feature load, one kernel
-/// choice, and (optionally) one parallel sampling pass.
+/// Build a route's plan: one instrumented feature load (or zero-copy
+/// stage), one kernel choice, and (optionally) one parallel sampling
+/// pass.
 pub fn prepare_plan(
     fstore: &FeatureStore,
     precision: Precision,
@@ -74,7 +85,8 @@ pub fn prepare_plan(
     feat_dim: usize,
     env: &ExecEnv,
 ) -> Result<ExecPlan> {
-    let (features, load_stats) = fstore.load(precision)?;
+    let (features, load_stats) =
+        if spec.stream { fstore.stage(precision)? } else { fstore.load(precision)? };
     let (profile, ell) = match (spec.host_ell, spec.width) {
         (true, Some(width)) => {
             let mut ell = Ell::zeros(spec.csr.n_rows, spec.csr.n_cols, width);
@@ -121,6 +133,13 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
+    }
+
+    /// Look up without counting a hit or miss and without refreshing LRU
+    /// recency — the prefetcher's duty-cycle check (a peek must not make
+    /// an entry look hot or skew the hit-rate metrics).
+    pub fn peek(&self, key: &K) -> Option<Arc<V>> {
+        self.inner.lock().unwrap().map.get(key).map(|e| e.value.clone())
     }
 
     /// Look up without building. Counts a hit or miss.
@@ -215,26 +234,32 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
         inner.map.clear();
     }
 
+    /// Entries currently resident.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }
 
+    /// Whether the cache holds no entries.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The (clamped) capacity this cache evicts beyond.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Lookups served from the cache.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Lookups that found nothing (including the build path's recheck).
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries dropped by LRU overflow.
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
     }
@@ -344,7 +369,13 @@ mod tests {
     fn prepare_plan_builds_features_kernel_and_ell() {
         let (_path, store, csr) = synthetic_store("full");
         let env = ExecEnv::with_threads(2);
-        let spec = PlanSpec { csr: &csr, width: Some(4), strategy: Strategy::Aes, host_ell: true };
+        let spec = PlanSpec {
+            csr: &csr,
+            width: Some(4),
+            strategy: Strategy::Aes,
+            host_ell: true,
+            stream: false,
+        };
         let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
         assert!(matches!(plan.features, Features::Dense(_)));
         assert!(plan.kernel.is_sampled());
@@ -359,10 +390,61 @@ mod tests {
         assert!(plan.profile.max_nnz <= 4);
 
         // Device-style spec: no host ELL even for a sampled width.
-        let spec = PlanSpec { csr: &csr, width: Some(4), strategy: Strategy::Aes, host_ell: false };
+        let spec = PlanSpec {
+            csr: &csr,
+            width: Some(4),
+            strategy: Strategy::Aes,
+            host_ell: false,
+            stream: false,
+        };
         let plan = prepare_plan(&store, Precision::U8Device, &spec, 8, &env).unwrap();
         assert!(plan.ell.is_none());
         assert!(matches!(plan.features, Features::Quantized { .. }));
+    }
+
+    #[test]
+    fn streamed_plan_holds_a_row_block_handle() {
+        let (_path, store, csr) = synthetic_store("stream");
+        let env = ExecEnv::with_threads(1);
+        let spec = PlanSpec {
+            csr: &csr,
+            width: Some(4),
+            strategy: Strategy::Aes,
+            host_ell: true,
+            stream: true,
+        };
+        let plan = prepare_plan(&store, Precision::U8Device, &spec, 8, &env).unwrap();
+        match &plan.features {
+            // mmap available: the cached plan holds a handle, and no
+            // payload bytes moved at build time.
+            Features::Streamed(h) => {
+                assert_eq!((h.n_rows(), h.feat_dim()), (128, 8));
+                assert_eq!(plan.load_stats.bytes_read, 0);
+                let mut block = vec![0.0f32; 4 * 8];
+                h.fill_rows_f32(0, &mut block);
+                assert!(block.iter().all(|v| v.is_finite()));
+            }
+            // no mmap on this platform: the documented eager fallback.
+            other => assert!(matches!(other, Features::Quantized { .. }), "{other:?}"),
+        }
+        // fp32 never streams — the fallback keeps the old contract.
+        let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
+        assert!(matches!(plan.features, Features::Dense(_)));
+    }
+
+    #[test]
+    fn peek_neither_counts_nor_touches_recency() {
+        let cache: PlanCache<u32, u32> = PlanCache::new(2);
+        assert!(cache.peek(&1).is_none());
+        cache.insert(1, Arc::new(10));
+        cache.insert(2, Arc::new(20));
+        assert_eq!(*cache.peek(&1).unwrap(), 10);
+        assert_eq!((cache.hits(), cache.misses()), (0, 0), "peek is metric-silent");
+        // Peeking 1 must NOT have refreshed it: inserting 3 evicts 1
+        // (the least recently *used*), not 2.
+        cache.insert(3, Arc::new(30));
+        assert!(cache.peek(&1).is_none());
+        assert!(cache.peek(&2).is_some());
     }
 
     #[test]

@@ -145,6 +145,7 @@ impl Pool {
         Pool { shared, workers }
     }
 
+    /// Worker threads owned by this pool (fixed at construction).
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }

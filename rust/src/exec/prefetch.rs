@@ -1,0 +1,404 @@
+//! Async plan prefetch — overlap the next batch's feature staging with
+//! the current batch's SpMM.
+//!
+//! The plan cache removed *repeated* cold loads; this removes the cold
+//! load from the critical path entirely. When a request is admitted, its
+//! route's plan build (feature stage + sampling + dispatch) is handed to
+//! a dedicated [`Pool`], so by the time the batcher's delay window closes
+//! and a worker picks the batch up, staging has been running concurrently
+//! with whatever SpMM the workers were already executing — the paper's
+//! "loading hides behind compute" shape (Table 3) applied to serving.
+//!
+//! Coordination contract:
+//! * one in-flight build per key — duplicate requests coalesce;
+//! * completed builds land in the shared [`PlanCache`] through its
+//!   generation-checked insert, so an `invalidate` racing a prefetch can
+//!   never be undone by a stale build;
+//! * consumers call [`Prefetcher::fetch`]: cache hit, else wait for the
+//!   in-flight build, else build inline — so a consumer never duplicates
+//!   a staging read that is already running;
+//! * the prefetcher **must not** share its pool with its consumers: a
+//!   worker blocking in `fetch` while its own pool owes it the build
+//!   would deadlock. The coordinator gives the prefetcher a private pool.
+
+use std::collections::HashSet;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::plan_cache::PlanCache;
+use super::pool::Pool;
+
+/// Point-in-time prefetcher counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// Builds handed to the prefetch pool.
+    pub scheduled: u64,
+    /// Builds that finished and populated (or re-validated) the cache.
+    pub completed: u64,
+    /// Requests skipped because the plan was already cached or already
+    /// being built.
+    pub coalesced: u64,
+    /// Builds whose builder errored; the route's next execution rebuilds
+    /// inline and surfaces the error to its caller.
+    pub errors: u64,
+}
+
+/// State shared between the handle, the waiters, and the pool jobs.
+///
+/// Deliberately does NOT own the pool: a job closure holds an
+/// `Arc<Inner>`, and if `Inner` owned the pool, a worker dropping the
+/// last `Arc` would run the pool's drop (join-all-workers) on one of its
+/// own workers. The pool lives in the [`Prefetcher`] handle instead, so
+/// its teardown always happens on a consumer thread.
+struct Inner<K, V> {
+    cache: Arc<PlanCache<K, V>>,
+    /// Keys currently being built (queued or running). Guards the
+    /// wait/notify handshake in [`Prefetcher::fetch`].
+    inflight: Mutex<HashSet<K>>,
+    /// Signalled whenever a key leaves `inflight`.
+    done: Condvar,
+    scheduled: AtomicU64,
+    completed: AtomicU64,
+    coalesced: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Clears the in-flight mark and wakes waiters even if the builder
+/// panics (the pool catches the panic; waiters must not block forever).
+struct InflightGuard<'a, K: Eq + Hash, V> {
+    owner: &'a Inner<K, V>,
+    key: &'a K,
+}
+
+impl<K: Eq + Hash, V> Drop for InflightGuard<'_, K, V> {
+    fn drop(&mut self) {
+        let mut inflight = self.owner.inflight.lock().unwrap();
+        inflight.remove(self.key);
+        // Notify under the lock so a fetch() checking-then-waiting cannot
+        // miss the wakeup.
+        self.owner.done.notify_all();
+    }
+}
+
+/// A claimed in-flight slot for one key, from [`Prefetcher::begin`].
+///
+/// Exactly one of two things must happen to it: [`PrefetchTicket::commit`]
+/// schedules the build on the prefetch pool, or dropping the ticket
+/// releases the claim and wakes any consumer that was waiting on it
+/// (they fall back to building inline).
+pub struct PrefetchTicket<'a, K: Eq + Hash, V> {
+    owner: &'a Prefetcher<K, V>,
+    key: Option<K>,
+}
+
+impl<'a, K, V> PrefetchTicket<'a, K, V>
+where
+    K: Eq + Hash + Clone + Send + Sync + 'static,
+    V: Send + Sync + 'static,
+{
+    /// Schedule the claimed build on the prefetch pool.
+    pub fn commit<E>(mut self, build: impl FnOnce() -> Result<V, E> + Send + 'static)
+    where
+        E: Send + 'static,
+    {
+        let key = self.key.take().expect("a ticket commits at most once");
+        let owner = self.owner;
+        owner.inner.scheduled.fetch_add(1, Ordering::Relaxed);
+        let job_inner = owner.inner.clone();
+        owner.pool.spawn(move || {
+            let _guard = InflightGuard { owner: &job_inner, key: &key };
+            // The generation-checked insert path: a hit (someone built it
+            // inline meanwhile) is fine, an invalidation mid-build keeps
+            // the stale result out of the cache.
+            match job_inner.cache.get_or_try_insert(&key, build) {
+                Ok(_) => job_inner.completed.fetch_add(1, Ordering::Relaxed),
+                Err(_) => job_inner.errors.fetch_add(1, Ordering::Relaxed),
+            };
+        });
+    }
+}
+
+impl<K: Eq + Hash, V> Drop for PrefetchTicket<'_, K, V> {
+    fn drop(&mut self) {
+        // Not committed: release the claim and wake waiters.
+        if let Some(key) = self.key.take() {
+            let mut inflight = self.owner.inner.inflight.lock().unwrap();
+            inflight.remove(&key);
+            self.owner.inner.done.notify_all();
+        }
+    }
+}
+
+/// Stages values into a [`PlanCache`] ahead of need, one in-flight build
+/// per key, on a pool of its own. Cheap to clone — clones share state.
+pub struct Prefetcher<K, V> {
+    inner: Arc<Inner<K, V>>,
+    pool: Arc<Pool>,
+}
+
+impl<K, V> Clone for Prefetcher<K, V> {
+    fn clone(&self) -> Self {
+        Prefetcher { inner: self.inner.clone(), pool: self.pool.clone() }
+    }
+}
+
+impl<K, V> Prefetcher<K, V>
+where
+    K: Eq + Hash + Clone + Send + Sync + 'static,
+    V: Send + Sync + 'static,
+{
+    /// Wrap `cache` with a prefetcher running builds on `pool`. The pool
+    /// must be private to the prefetcher (see the module rules).
+    pub fn new(cache: Arc<PlanCache<K, V>>, pool: Arc<Pool>) -> Prefetcher<K, V> {
+        Prefetcher {
+            inner: Arc::new(Inner {
+                cache,
+                inflight: Mutex::new(HashSet::new()),
+                done: Condvar::new(),
+                scheduled: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                coalesced: AtomicU64::new(0),
+                errors: AtomicU64::new(0),
+            }),
+            pool,
+        }
+    }
+
+    /// Claim the in-flight slot for `key` without scheduling anything
+    /// yet. Returns `None` (counting a coalesced request) when the key is
+    /// already cached or already claimed. Commit the ticket to schedule
+    /// the build; dropping it releases the claim (consumers waiting on
+    /// the key fall back to inline builds). The claim/commit split lets
+    /// an admission path claim *before* its enqueue — so a consumer
+    /// racing ahead waits instead of double-building — while still
+    /// scheduling no storage work for requests that end up rejected.
+    pub fn begin(&self, key: K) -> Option<PrefetchTicket<'_, K, V>> {
+        if self.inner.cache.peek(&key).is_some() {
+            self.inner.coalesced.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        if !self.inner.inflight.lock().unwrap().insert(key.clone()) {
+            self.inner.coalesced.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        Some(PrefetchTicket { owner: self, key: Some(key) })
+    }
+
+    /// Begin building `key` in the background. Returns `true` when a job
+    /// was scheduled, `false` when it coalesced onto the cached value or
+    /// an already-in-flight build.
+    pub fn prefetch<E>(
+        &self,
+        key: K,
+        build: impl FnOnce() -> Result<V, E> + Send + 'static,
+    ) -> bool
+    where
+        E: Send + 'static,
+    {
+        match self.begin(key) {
+            Some(ticket) => {
+                ticket.commit(build);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The consumer side: cached value (hit), else wait for an in-flight
+    /// prefetch of `key`, else build inline. Returns `(value, was_hit)`
+    /// where a hit means no inline build ran — including values a
+    /// prefetch finished while we waited.
+    pub fn fetch<E>(
+        &self,
+        key: &K,
+        build: impl FnOnce() -> Result<V, E>,
+    ) -> Result<(Arc<V>, bool), E> {
+        let inner = &self.inner;
+        // One metric-counted lookup per fetch; the wait loop below
+        // re-checks with `peek` so a slow build does not inflate the
+        // cache's miss counter (or touch LRU recency) once per poll.
+        if let Some(v) = inner.cache.get(key) {
+            return Ok((v, true));
+        }
+        loop {
+            {
+                let inflight = inner.inflight.lock().unwrap();
+                if !inflight.contains(key) {
+                    drop(inflight);
+                    // Nobody building: a final metric-silent re-check (a
+                    // build may have landed since the counted lookup),
+                    // else build inline. An inline build may race a
+                    // brand-new prefetch of the same key — both builds
+                    // are valid and the cache's last insert wins, the
+                    // same idiom get_or_try_insert documents.
+                    if let Some(v) = inner.cache.peek(key) {
+                        return Ok((v, true));
+                    }
+                    return inner.cache.get_or_try_insert(key, build);
+                }
+                // An in-flight build inserts into the cache *before*
+                // clearing its mark, so waking (or timing out) and
+                // re-checking never misses a finished build; the timeout
+                // guards against a build that died without a notify.
+                let _unused =
+                    inner.done.wait_timeout(inflight, Duration::from_millis(50)).unwrap();
+            }
+            if let Some(v) = inner.cache.peek(key) {
+                return Ok((v, true));
+            }
+        }
+    }
+
+    /// Keys currently being built.
+    pub fn in_flight(&self) -> usize {
+        self.inner.inflight.lock().unwrap().len()
+    }
+
+    /// Block until no build is queued or running (shutdown, tests).
+    ///
+    /// Also drains the underlying pool, so on return every job closure —
+    /// and everything it captured — has been dropped. Callers may tear
+    /// down state the builders referenced immediately afterwards.
+    pub fn wait_idle(&self) {
+        {
+            let mut inflight = self.inner.inflight.lock().unwrap();
+            while !inflight.is_empty() {
+                let (next, _) =
+                    self.inner.done.wait_timeout(inflight, Duration::from_millis(10)).unwrap();
+                inflight = next;
+            }
+        }
+        self.pool.wait_idle();
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PrefetchStats {
+        PrefetchStats {
+            scheduled: self.inner.scheduled.load(Ordering::Relaxed),
+            completed: self.inner.completed.load(Ordering::Relaxed),
+            coalesced: self.inner.coalesced.load(Ordering::Relaxed),
+            errors: self.inner.errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn setup(capacity: usize) -> (Arc<PlanCache<u32, u64>>, Prefetcher<u32, u64>) {
+        let cache = Arc::new(PlanCache::new(capacity));
+        let pf = Prefetcher::new(cache.clone(), Arc::new(Pool::new(2)));
+        (cache, pf)
+    }
+
+    #[test]
+    fn prefetch_populates_the_cache_once() {
+        let (cache, pf) = setup(4);
+        let builds = Arc::new(AtomicUsize::new(0));
+        for _ in 0..5 {
+            let builds = builds.clone();
+            pf.prefetch(7, move || {
+                builds.fetch_add(1, Ordering::Relaxed);
+                Ok::<_, std::io::Error>(42)
+            });
+        }
+        pf.wait_idle();
+        assert_eq!(builds.load(Ordering::Relaxed), 1, "duplicates must coalesce");
+        assert_eq!(*cache.peek(&7).unwrap(), 42);
+        let s = pf.stats();
+        assert_eq!(s.scheduled, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.coalesced, 4);
+        // A fetch after the prefetch is a pure hit — no inline build.
+        let (v, hit) = pf
+            .fetch(&7, || panic!("must not rebuild"))
+            .unwrap_or_else(|e: std::io::Error| panic!("{e}"));
+        assert_eq!((*v, hit), (42, true));
+    }
+
+    #[test]
+    fn fetch_waits_for_an_in_flight_build_instead_of_duplicating_it() {
+        let (_cache, pf) = setup(4);
+        let builds = Arc::new(AtomicUsize::new(0));
+        {
+            let builds = builds.clone();
+            pf.prefetch(1, move || {
+                std::thread::sleep(Duration::from_millis(60));
+                builds.fetch_add(1, Ordering::Relaxed);
+                Ok::<_, std::io::Error>(9)
+            });
+        }
+        // Consumer arrives while the build sleeps: it must block, then
+        // see the prefetched value as a hit.
+        let (v, hit) = pf
+            .fetch(&1, || {
+                builds.fetch_add(1, Ordering::Relaxed);
+                Ok::<_, std::io::Error>(100)
+            })
+            .unwrap();
+        assert_eq!((*v, hit), (9, true));
+        assert_eq!(builds.load(Ordering::Relaxed), 1, "exactly one staging read");
+    }
+
+    #[test]
+    fn builder_errors_leave_the_cache_clean_and_unblock_consumers() {
+        let (cache, pf) = setup(4);
+        pf.prefetch(3, || Err::<u64, _>("storage gone"));
+        pf.wait_idle();
+        assert_eq!(pf.stats().errors, 1);
+        assert!(cache.peek(&3).is_none());
+        // The consumer rebuilds inline and gets a working value.
+        let (v, hit) = pf.fetch(&3, || Ok::<_, &str>(5)).unwrap();
+        assert_eq!((*v, hit), (5, false));
+        // An inline error propagates to the consumer.
+        assert_eq!(pf.fetch(&4, || Err::<u64, _>("nope")).unwrap_err(), "nope");
+    }
+
+    #[test]
+    fn invalidation_racing_a_prefetch_is_not_resurrected() {
+        let (cache, pf) = setup(4);
+        {
+            let cache = cache.clone();
+            pf.prefetch(8, move || {
+                // Simulate the dataset being republished mid-build.
+                cache.invalidate(&8);
+                Ok::<_, std::io::Error>(1)
+            });
+        }
+        pf.wait_idle();
+        assert!(cache.peek(&8).is_none(), "stale build must not land post-invalidation");
+    }
+
+    #[test]
+    fn aborted_ticket_releases_the_claim_without_scheduling() {
+        let (cache, pf) = setup(4);
+        {
+            let ticket = pf.begin(5).expect("cold key must claim");
+            assert_eq!(pf.in_flight(), 1);
+            assert!(pf.begin(5).is_none(), "claimed key coalesces");
+            drop(ticket); // e.g. the request was rejected for backpressure
+        }
+        assert_eq!(pf.in_flight(), 0);
+        assert_eq!(pf.stats().scheduled, 0, "an aborted claim never builds");
+        // A consumer is not blocked by the released claim.
+        let (v, hit) = pf.fetch(&5, || Ok::<_, &str>(1)).unwrap();
+        assert_eq!((*v, hit), (1, false));
+        assert!(cache.peek(&5).is_some());
+    }
+
+    #[test]
+    fn stats_and_in_flight_track_the_lifecycle() {
+        let (_cache, pf) = setup(4);
+        assert_eq!(pf.in_flight(), 0);
+        assert!(pf.prefetch(1, || Ok::<_, std::io::Error>(1)));
+        pf.wait_idle();
+        assert_eq!(pf.in_flight(), 0);
+        assert!(!pf.prefetch(1, || Ok::<_, std::io::Error>(2)), "cached key coalesces");
+        let s = pf.stats();
+        assert_eq!((s.scheduled, s.completed, s.coalesced, s.errors), (1, 1, 1, 0));
+    }
+}

@@ -17,7 +17,7 @@ pub fn run_tab3(ctx: &ExpContext) -> Result<Table> {
     let mut table = Table::new(
         "tab3",
         "Feature loading time ratio (% of load+compute) and loading-time reduction of INT8 vs fp32",
-        &["model", "dataset", "W", "afs %", "sfs %", "aes+int8 %", "bytes cut", "load cut"],
+        &["model", "dataset", "W", "afs %", "sfs %", "aes+int8 %", "bytes cut", "load cut", "src"],
     );
     let manifest = ctx.engine.manifest();
     let models: &[&str] = if ctx.quick { &["gcn"] } else { &["gcn", "sage"] };
@@ -53,6 +53,8 @@ pub fn run_tab3(ctx: &ExpContext) -> Result<Table> {
                         let feat = match feats {
                             Features::Dense(t) => t,
                             Features::Quantized { q, .. } => q,
+                            // load() is the eager path; only stage() streams.
+                            Features::Streamed(h) => h.to_dense(),
                         };
                         match precision {
                             Precision::F32 => f32_bytes = lstats.bytes_read,
@@ -90,6 +92,7 @@ pub fn run_tab3(ctx: &ExpContext) -> Result<Table> {
                     format!("{:.2}", pct[2]),
                     format!("-{:.1}%", 100.0 * (1.0 - int8_bytes as f64 / f32_bytes as f64)),
                     format!("{:+.1}%", 100.0 * (int8_load / f32_load - 1.0)),
+                    fstore.source().name().to_string(),
                 ]);
             }
         }

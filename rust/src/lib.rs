@@ -24,9 +24,9 @@
 //! | [`graph`]     | CSR / ELL structures, validation, degree statistics   |
 //! | [`gen`]       | synthetic graph generators (Chung-Lu, DC-SBM, RMAT)   |
 //! | [`sampling`]  | the paper's strategy table + hash, ELL planners, CDFs |
-//! | [`quant`]     | INT8 scalar quantization + instrumented feature store |
+//! | [`quant`]     | INT8 quantization (per-chunk), mmap feature store, streamed row-block handles |
 //! | [`spmm`]      | CPU SpMM kernels (cuSPARSE / GE-SpMM analogs, ELL)    |
-//! | [`exec`]      | kernel dispatch, persistent worker pool, plan cache   |
+//! | [`exec`]      | kernel dispatch, persistent pool, plan cache, async prefetch |
 //! | [`runtime`]   | PJRT engine: artifact registry, executables, literals |
 //! | [`coordinator`]| request router, dynamic batcher, worker pool, metrics|
 //! | [`experiments`]| one runner per paper figure/table                    |

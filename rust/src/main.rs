@@ -5,11 +5,14 @@
 //! ```text
 //! repro inspect   [--artifacts DIR]                         dataset/artifact summary
 //! repro infer     --model M --dataset D [--width W]
-//!                 [--strategy afs|sfs|aes] [--quant]        one forward pass + accuracy
+//!                 [--strategy afs|sfs|aes] [--fp32]         one forward pass + accuracy
 //! repro serve     [--requests N] [--workers K]              run the coordinator demo load
 //! repro experiment <fig2|fig3|fig5|fig6|fig7|tab1|tab3|all> [--quick]
 //! repro gen-data  --nodes N --avg-deg D [--gamma G]         rust-side synthetic graph stats
 //! ```
+//!
+//! Serving precision defaults to INT8 (the paper's quantized path);
+//! `--fp32` opts into the full-precision baseline.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -90,11 +93,12 @@ repro — AES-SpMM reproduction (rust + JAX + Pallas, AOT via PJRT)
 
 USAGE:
   repro inspect    [--artifacts DIR]
-  repro infer      --model gcn|sage --dataset NAME [--width W] [--strategy afs|sfs|aes] [--quant] [--artifacts DIR]
-  repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--artifacts DIR]
+  repro infer      --model gcn|sage --dataset NAME [--width W] [--strategy afs|sfs|aes] [--fp32] [--artifacts DIR]
+  repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--prefetch P] [--artifacts DIR]
   repro experiment fig2|fig3|fig5|fig6|fig7|tab1|tab3|all [--quick] [--artifacts DIR]
   repro gen-data   [--nodes N] [--avg-deg D] [--gamma G] [--seed S]
 
+Serving precision defaults to INT8 (--fp32 opts into the baseline).
 Run `make artifacts` first to produce the AOT artifacts.";
 
 fn run() -> Result<()> {
@@ -169,7 +173,12 @@ fn cmd_infer(artifacts: &str, args: &Args) -> Result<()> {
     let width = args.get("width").map(|w| w.parse::<usize>()).transpose()?;
     let strategy = Strategy::from_name(&args.get_or("strategy", "aes"))
         .context("--strategy must be afs|sfs|aes")?;
-    let precision = if args.has("quant") { Precision::U8Device } else { Precision::F32 };
+    if args.has("fp32") && args.has("quant") {
+        bail!("--fp32 and --quant are mutually exclusive");
+    }
+    // INT8 is the serving default; --fp32 opts into the baseline
+    // (--quant kept for backward compatibility — it is now the default).
+    let precision = if args.has("fp32") { Precision::F32 } else { Precision::default() };
 
     let engine = Engine::new(artifacts)?;
     let ds = Dataset::load(artifacts, &dataset)?;
@@ -196,6 +205,7 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 2)?;
     let queue = args.usize_or("queue", 1024)?;
     let batch = args.usize_or("batch", 32)?;
+    let prefetch = args.usize_or("prefetch", 1)?;
 
     let engine = Arc::new(Engine::new(artifacts)?);
     let datasets = engine.manifest().dataset_names();
@@ -209,6 +219,7 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
             max_batch: batch,
             max_delay: std::time::Duration::from_millis(2),
         },
+        prefetch_workers: prefetch,
         ..CoordinatorConfig::default()
     };
     let coord = Coordinator::start(engine.clone(), store.clone(), cfg);
@@ -271,6 +282,23 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         snap.plan_misses,
         coord.plan_cache_len()
     );
+    let pstats = coord.prefetch_stats();
+    println!(
+        "prefetch: {} staged / {} completed / {} coalesced / {} errors",
+        pstats.scheduled, pstats.completed, pstats.coalesced, pstats.errors
+    );
+    println!("\nfeature staging per dataset (monotonic totals):");
+    for ds in &datasets {
+        let f = store.feature_store(ds)?;
+        let t = f.totals();
+        println!(
+            "  {ds}: {} loads, {} bytes staged via {}, {:?} staging time",
+            t.loads,
+            t.bytes_read,
+            f.source().name(),
+            t.stage_time
+        );
+    }
     println!("\nper-route executions:");
     for (route, count) in &snap.per_route {
         println!("  {route}: {count}");

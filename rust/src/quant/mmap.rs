@@ -1,0 +1,294 @@
+//! Zero-copy `.nbt` reading — memory-map the dataset container and serve
+//! tensor payloads as borrowed slices instead of buffered copies.
+//!
+//! The buffered loader ([`crate::tensor::read_nbt_tensor`]) copies the
+//! whole feature payload into a fresh `Vec` on every cold route; at the
+//! sizes the paper's Fig. 3 measures, that copy *is* the loading
+//! bottleneck. [`MmapNbt`] maps the file read-only once, parses only the
+//! container index, and then hands out `&[u8]` windows into the mapping —
+//! the kernel's page cache becomes the feature cache, and INT8 feature
+//! rows reach the dequant loop without ever being materialized as an
+//! owned tensor.
+//!
+//! Rules of the road:
+//! * payload slices are **byte** slices: `.nbt` payloads are unaligned,
+//!   so `u8` tensors (the INT8 serving path) are zero-copy while wider
+//!   dtypes must go through [`MmapNbt::tensor`], which copies into an
+//!   aligned buffer — exactly the old buffered behavior;
+//! * the mapping assumes the file is immutable while open. Artifacts are
+//!   published atomically (temp file + rename, see
+//!   [`crate::tensor::write_nbt`]), so a republish produces a *new* inode
+//!   and live mappings stay valid;
+//! * mapping can fail (platform without `mmap`, exotic filesystems,
+//!   zero-length files). [`MmapNbt::open`] reports the error and callers
+//!   fall back to the buffered reader — see
+//!   [`FeatureStore::open`](crate::quant::FeatureStore::open).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{parse_nbt_index, DType, Tensor, TensorEntry};
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    //! The two raw syscalls we need, declared directly against the C
+    //! library std already links (the offline registry has no `libc`
+    //! crate). 64-bit unix only: the `off_t` argument is declared `i64`,
+    //! which matches the LP64 ABI; other targets take the buffered
+    //! fallback path instead of risking an ABI mismatch.
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A read-only, private memory mapping of one file. Unmapped on drop.
+struct Mapping {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ + MAP_PRIVATE over a file our write
+// path replaces only by rename (never truncates in place), so the bytes
+// behind `ptr` are immutable for the mapping's lifetime — shared reads
+// from any thread are safe.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn of(file: &fs::File, len: usize) -> Result<Mapping> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            bail!("cannot map an empty file");
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mapping { ptr: ptr as *const u8, len })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn of(_file: &fs::File, _len: usize) -> Result<Mapping> {
+        bail!("mmap is not available on this platform");
+    }
+
+    fn bytes(&self) -> &[u8] {
+        // SAFETY: `ptr` spans exactly `len` mapped read-only bytes for as
+        // long as `self` lives (unmapped only in Drop).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        // SAFETY: `ptr`/`len` are exactly what mmap returned.
+        unsafe {
+            let _ = sys::munmap(self.ptr as *mut _, self.len);
+        }
+    }
+}
+
+/// A memory-mapped `.nbt` container: parsed index + zero-copy payload
+/// access. Cheap to share behind an `Arc`; see the module docs for the
+/// immutability contract.
+pub struct MmapNbt {
+    path: PathBuf,
+    map: Mapping,
+    entries: Vec<TensorEntry>,
+}
+
+impl MmapNbt {
+    /// Map `path` read-only and parse the container index (no payload is
+    /// copied or even touched — pages fault in lazily on first access).
+    /// Errors when mapping is unsupported or the container is malformed;
+    /// callers are expected to fall back to the buffered reader.
+    pub fn open(path: impl AsRef<Path>) -> Result<MmapNbt> {
+        let path = path.as_ref().to_path_buf();
+        let file = fs::File::open(&path).with_context(|| format!("opening {}", path.display()))?;
+        let len = file.metadata()?.len() as usize;
+        let map = Mapping::of(&file, len).with_context(|| format!("mapping {}", path.display()))?;
+        let entries =
+            parse_nbt_index(map.bytes()).with_context(|| format!("indexing {}", path.display()))?;
+        Ok(MmapNbt { path, map, entries })
+    }
+
+    /// The mapped file's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Total mapped bytes (the whole container).
+    pub fn file_len(&self) -> usize {
+        self.map.len
+    }
+
+    /// Names in container order.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.name.as_str())
+    }
+
+    /// Whether the container holds a tensor called `name`.
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|e| e.name == name)
+    }
+
+    /// Index entry (dtype/shape/extent) for `name`.
+    pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("tensor {name:?} not in {}", self.path.display()))
+    }
+
+    /// The whole payload of `name`, zero-copy.
+    pub fn bytes(&self, name: &str) -> Result<&[u8]> {
+        let e = self.entry(name)?;
+        Ok(&self.map.bytes()[e.offset..e.offset + e.len])
+    }
+
+    /// Rows `row0 .. row0 + n_rows` of a 2-D tensor, zero-copy. This is
+    /// the streaming pipeline's unit of access: a sampled row-block's
+    /// quantized bytes, straight out of the page cache.
+    pub fn row_bytes(&self, name: &str, row0: usize, n_rows: usize) -> Result<&[u8]> {
+        let e = self.entry(name)?;
+        if e.shape.len() != 2 {
+            bail!("tensor {name:?} is not 2-D (shape {:?})", e.shape);
+        }
+        let (rows, cols) = (e.shape[0], e.shape[1]);
+        if row0 + n_rows > rows {
+            bail!("rows {row0}..{} out of range (tensor has {rows})", row0 + n_rows);
+        }
+        let row_bytes = cols * e.dtype.size();
+        let lo = e.offset + row0 * row_bytes;
+        Ok(&self.map.bytes()[lo..lo + n_rows * row_bytes])
+    }
+
+    /// Materialize `name` as an owned, max-aligned [`Tensor`] — the
+    /// compatibility path for dtypes wider than `u8` (payloads in the map
+    /// are unaligned) and for consumers that need ownership.
+    pub fn tensor(&self, name: &str) -> Result<Tensor> {
+        let e = self.entry(name)?;
+        let mut data = vec![0u8; e.len];
+        data.copy_from_slice(&self.map.bytes()[e.offset..e.offset + e.len]);
+        Ok(Tensor { dtype: e.dtype, shape: e.shape.clone(), data })
+    }
+
+    /// Like [`MmapNbt::bytes`] but validating the dtype first — the
+    /// INT8 zero-copy view.
+    pub fn u8_view(&self, name: &str) -> Result<&[u8]> {
+        let e = self.entry(name)?;
+        if e.dtype != DType::U8 {
+            bail!("tensor {name:?} is {:?}, wanted U8 for a zero-copy view", e.dtype);
+        }
+        self.bytes(name)
+    }
+}
+
+impl std::fmt::Debug for MmapNbt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapNbt")
+            .field("path", &self.path)
+            .field("file_len", &self.map.len)
+            .field("tensors", &self.entries.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{write_nbt, NbtFile};
+
+    fn fixture(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mmap_nbt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = NbtFile::new();
+        f.insert("feat", Tensor::from_f32(&[4, 3], &(0..12).map(|i| i as f32).collect::<Vec<_>>()));
+        let q: Vec<u8> = (0..12).map(|i| i as u8 * 3).collect();
+        f.insert("featq", Tensor::from_u8(&[4, 3], &q));
+        f.insert("qrange", Tensor::from_f32(&[2], &[0.0, 1.0]));
+        let p = dir.join("fixture.nbt");
+        write_nbt(&p, &f).unwrap();
+        p
+    }
+
+    // The container in CI is 64-bit linux; elsewhere the mapping path is
+    // compiled out and `open` must fail cleanly (the fallback contract).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn mapped_views_match_buffered_reads() {
+        let p = fixture("views");
+        let m = MmapNbt::open(&p).unwrap();
+        let buffered = crate::tensor::read_nbt(&p).unwrap();
+        assert_eq!(m.names().collect::<Vec<_>>(), vec!["feat", "featq", "qrange"]);
+        assert!(m.contains("featq") && !m.contains("nope"));
+        // Zero-copy u8 view equals the buffered payload byte-for-byte.
+        assert_eq!(m.u8_view("featq").unwrap(), buffered.get("featq").unwrap().as_u8().unwrap());
+        // Aligned materialization round-trips wider dtypes.
+        let t = m.tensor("feat").unwrap();
+        assert_eq!(t.as_f32().unwrap(), buffered.get("feat").unwrap().as_f32().unwrap());
+        assert_eq!(t.shape, vec![4, 3]);
+        // Row-block slicing picks exactly the middle rows.
+        let rows = m.row_bytes("featq", 1, 2).unwrap();
+        assert_eq!(rows, &buffered.get("featq").unwrap().as_u8().unwrap()[3..9]);
+        assert!(m.file_len() > 0);
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn row_bounds_and_shape_are_enforced() {
+        let p = fixture("bounds");
+        let m = MmapNbt::open(&p).unwrap();
+        assert!(m.row_bytes("featq", 3, 2).is_err(), "past-the-end row range");
+        assert!(m.row_bytes("qrange", 0, 1).is_err(), "1-D tensor has no rows");
+        assert!(m.u8_view("feat").is_err(), "f32 payload must not get a u8 view");
+        assert!(m.bytes("missing").is_err());
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn rejects_malformed_containers() {
+        let dir = std::env::temp_dir().join(format!("mmap_nbt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("garbage.nbt");
+        std::fs::write(&p, b"this is not a container at all").unwrap();
+        assert!(MmapNbt::open(&p).is_err());
+        let empty = dir.join("empty.nbt");
+        std::fs::write(&empty, b"").unwrap();
+        assert!(MmapNbt::open(&empty).is_err(), "zero-length file cannot be mapped");
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    #[test]
+    fn open_fails_cleanly_without_mmap() {
+        let p = fixture("nommap");
+        assert!(MmapNbt::open(&p).is_err());
+    }
+}

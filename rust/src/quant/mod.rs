@@ -1,14 +1,45 @@
-//! Feature quantization (paper §2.3, §3.1) and the instrumented feature
-//! store behind Table 3 / Fig. 3.
+//! INT8 feature quantization and the streaming feature store —
+//! the serving-side realization of the paper's Table 3 (§2.3, §3.1).
 //!
-//! Quantization happens offline (Eq. 1, done at build time by the python
-//! pipeline and mirrored here for rust-generated workloads); the inference
-//! path loads the u8 representation — 4× fewer bytes — and either ships it
-//! to the device for the on-device Pallas dequant kernel (Eq. 2) or
-//! dequantizes host-side for the CPU baselines.
+//! # Purpose
+//!
+//! Feature loading, not compute, dominates GNN inference (Fig. 3); this
+//! module owns everything between the dataset `.nbt` on disk and the
+//! fp32 rows a kernel consumes: quantization math (Eq. 1/2), the
+//! zero-copy container reader, and the instrumented store.
+//!
+//! # Structure
+//!
+//! | unit       | role                                                    |
+//! |------------|---------------------------------------------------------|
+//! | `scalar`   | Eq. 1/2 scalar codecs + per-row-block [`ChunkedParams`] |
+//! | `mmap`     | [`MmapNbt`]: memory-mapped `.nbt`, zero-copy row-blocks |
+//! | `store`    | [`FeatureStore`]: eager `load` / streaming `stage`, monotonic [`LoadTotals`] |
+//!
+//! # Rules
+//!
+//! * Quantization ranges are calibrated **offline** (Eq. 1, by the
+//!   python pipeline or [`ChunkedParams::of_rows`]); the serving path
+//!   only ever dequantizes.
+//! * INT8 ([`Precision::U8Device`]) is the serving default; fp32 is the
+//!   opt-in baseline — 4× the bytes off storage.
+//! * Streamed handles borrow the page cache: containers must be
+//!   republished atomically (`write_nbt`'s temp-file + rename), never
+//!   truncated in place.
+//! * Every staged byte is charged to the owning store's [`LoadTotals`]
+//!   via atomic, individually monotonic counters — safe to audit while a
+//!   prefetcher races the workers.
 
+#![warn(missing_docs)]
+
+mod mmap;
 mod scalar;
 mod store;
 
-pub use scalar::{dequantize, dequantize_into, max_quant_error, quantize, QuantParams};
-pub use store::{FeatureStore, Features, LoadStats, Precision};
+pub use mmap::MmapNbt;
+pub use scalar::{
+    dequantize, dequantize_into, max_quant_error, quantize, ChunkedParams, QuantParams,
+};
+pub use store::{
+    FeatureHandle, FeatureStore, Features, LoadSource, LoadStats, LoadTotals, Precision,
+};

@@ -1,13 +1,21 @@
-//! Scalar INT8 quantization — Eq. 1 (quantize) and Eq. 2 (dequantize).
+//! Scalar INT8 quantization — Eq. 1 (quantize) and Eq. 2 (dequantize),
+//! plus the per-row-block [`ChunkedParams`] the streaming feature
+//! pipeline dequantizes with.
+
+use anyhow::{bail, Result};
 
 /// Quantization range parameters (`x_min`, `x_max` of Eq. 1/2).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantParams {
+    /// Smallest representable value (maps to code 0).
     pub x_min: f32,
+    /// Largest representable value (maps to code 255).
     pub x_max: f32,
 }
 
 impl QuantParams {
+    /// The tight min/max range of `data` (the paper's offline Eq. 1
+    /// calibration). Empty or non-finite input falls back to `[0, 1]`.
     pub fn of(data: &[f32]) -> QuantParams {
         let mut lo = f32::INFINITY;
         let mut hi = f32::NEG_INFINITY;
@@ -21,6 +29,7 @@ impl QuantParams {
         QuantParams { x_min: lo, x_max: hi }
     }
 
+    /// The range span `x_max - x_min`, degenerate ranges clamped to 1.
     #[inline]
     pub fn scale(&self) -> f32 {
         let span = self.x_max - self.x_min;
@@ -67,6 +76,164 @@ pub fn dequantize_into(q: &[u8], p: QuantParams, out: &mut [f32]) {
 /// Worst-case reconstruction error of the scheme: one quantization step.
 pub fn max_quant_error(p: QuantParams) -> f32 {
     p.scale() / LEVELS
+}
+
+/// Per-row-block quantization ranges — the streaming pipeline's unit of
+/// lazy dequantization.
+///
+/// A feature matrix of `n_rows` rows is cut into chunks of
+/// `rows_per_chunk` consecutive rows (the last chunk may be short), each
+/// calibrated with its own Eq. 1 range. Tighter per-chunk ranges shrink
+/// the one-step reconstruction error wherever feature magnitudes vary by
+/// region, and — more importantly for serving — let a row-block be
+/// dequantized on its own, without the whole-tensor range pass, inside
+/// the exec worker that consumes it.
+///
+/// Serialized in the dataset `.nbt` as a `qchunks` f32 tensor of shape
+/// `[n_chunks, 2]` ((min, max) pairs in row order) with
+/// `rows_per_chunk = ceil(n_rows / n_chunks)`; containers without
+/// `qchunks` degrade to one chunk covering every row (the legacy global
+/// `qrange`), which reproduces the old numerics exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkedParams {
+    rows_per_chunk: usize,
+    n_rows: usize,
+    chunks: Vec<QuantParams>,
+}
+
+impl ChunkedParams {
+    /// One chunk covering all rows — byte-compatible with the legacy
+    /// global `qrange` calibration.
+    pub fn uniform(n_rows: usize, p: QuantParams) -> ChunkedParams {
+        ChunkedParams { rows_per_chunk: n_rows.max(1), n_rows, chunks: vec![p] }
+    }
+
+    /// Calibrate per-chunk ranges over a row-major `[n_rows, width]`
+    /// matrix (build-time Eq. 1, chunk by chunk). `rows_per_chunk` is a
+    /// target: it is normalized to the serialization convention
+    /// (`ceil(n_rows / n_chunks)`) so that encode, `qchunks` round-trip,
+    /// and decode all agree on chunk boundaries — an un-normalized size
+    /// (e.g. 512 rows over 1000) would silently shift the boundary rows
+    /// onto a neighbouring chunk's range after a round-trip.
+    pub fn of_rows(
+        data: &[f32],
+        n_rows: usize,
+        width: usize,
+        rows_per_chunk: usize,
+    ) -> ChunkedParams {
+        assert_eq!(data.len(), n_rows * width, "data is not [n_rows, width]");
+        let requested = rows_per_chunk.max(1);
+        let n_chunks = n_rows.div_ceil(requested).max(1);
+        let rpc = n_rows.div_ceil(n_chunks).max(1);
+        let chunks = (0..n_chunks)
+            .map(|i| {
+                let lo = i * rpc * width;
+                let hi = ((i + 1) * rpc * width).min(data.len());
+                QuantParams::of(&data[lo..hi])
+            })
+            .collect();
+        ChunkedParams { rows_per_chunk: rpc, n_rows, chunks }
+    }
+
+    /// Rebuild from a deserialized chunk list (the `qchunks` tensor).
+    /// Validates that the chunk count is consistent with `n_rows` under
+    /// the `rows_per_chunk = ceil(n_rows / n_chunks)` convention.
+    pub fn from_chunks(n_rows: usize, chunks: Vec<QuantParams>) -> Result<ChunkedParams> {
+        if chunks.is_empty() {
+            bail!("qchunks must hold at least one (min, max) pair");
+        }
+        let rpc = n_rows.div_ceil(chunks.len()).max(1);
+        if n_rows.div_ceil(rpc).max(1) != chunks.len() {
+            bail!(
+                "{} chunks cannot tile {} rows evenly (ceil-division convention)",
+                chunks.len(),
+                n_rows
+            );
+        }
+        Ok(ChunkedParams { rows_per_chunk: rpc, n_rows, chunks })
+    }
+
+    /// Rows covered by each chunk (the last chunk may be short).
+    pub fn rows_per_chunk(&self) -> usize {
+        self.rows_per_chunk
+    }
+
+    /// Total rows covered.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Number of chunks.
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// The `(min, max)` pairs in row order, for serialization.
+    pub fn chunks(&self) -> &[QuantParams] {
+        &self.chunks
+    }
+
+    /// The range governing row `row`.
+    pub fn for_row(&self, row: usize) -> QuantParams {
+        assert!(row < self.n_rows, "row {row} out of {} rows", self.n_rows);
+        self.chunks[row / self.rows_per_chunk]
+    }
+
+    /// The loosest envelope over every chunk (what a device kernel with a
+    /// single-range Eq. 2 would have to use).
+    pub fn envelope(&self) -> QuantParams {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for c in &self.chunks {
+            lo = lo.min(c.x_min);
+            hi = hi.max(c.x_max);
+        }
+        QuantParams { x_min: lo, x_max: hi }
+    }
+
+    /// Worst-case reconstruction error across all chunks — the bound
+    /// lazy per-block dequantization is tested against.
+    pub fn max_error(&self) -> f32 {
+        self.chunks.iter().map(|&c| max_quant_error(c)).fold(0.0, f32::max)
+    }
+
+    /// Quantize a full `[n_rows, width]` matrix chunk by chunk (Eq. 1
+    /// with each chunk's own range) — the build-time producer of the
+    /// `featq` payload this struct later dequantizes.
+    pub fn quantize_rows(&self, data: &[f32], width: usize) -> Vec<u8> {
+        assert_eq!(data.len(), self.n_rows * width, "data is not [n_rows, width]");
+        let mut out = Vec::with_capacity(data.len());
+        for (i, p) in self.chunks.iter().enumerate() {
+            let lo = i * self.rows_per_chunk * width;
+            let hi = ((i + 1) * self.rows_per_chunk * width).min(data.len());
+            out.extend(quantize(&data[lo..hi], *p));
+        }
+        out
+    }
+
+    /// Eq. 2 over the row-block `row0 .. row0 + q.len() / width`, each
+    /// row with its own chunk's range. This is the hot lazy-dequant path:
+    /// `q` is a borrowed (typically memory-mapped) INT8 row-block and
+    /// `out` the worker's scratch buffer. Runs one LUT pass per chunk
+    /// segment, so the cost matches the whole-tensor `dequantize_into`.
+    pub fn dequantize_rows_into(&self, q: &[u8], row0: usize, width: usize, out: &mut [f32]) {
+        assert_eq!(q.len(), out.len());
+        if width == 0 || q.is_empty() {
+            return;
+        }
+        assert_eq!(q.len() % width, 0, "block is not whole rows");
+        let rows = q.len() / width;
+        assert!(row0 + rows <= self.n_rows, "block past the last row");
+        let mut r = 0usize;
+        while r < rows {
+            let chunk = (row0 + r) / self.rows_per_chunk;
+            let chunk_end = (chunk + 1) * self.rows_per_chunk;
+            let seg = (chunk_end - (row0 + r)).min(rows - r);
+            let (lo, hi) = (r * width, (r + seg) * width);
+            dequantize_into(&q[lo..hi], self.chunks[chunk], &mut out[lo..hi]);
+            r += seg;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -127,5 +294,101 @@ mod tests {
         let mut b = vec![0.0; q.len()];
         dequantize_into(&q, p, &mut b);
         assert_eq!(a, b);
+    }
+
+    fn ramp(n_rows: usize, width: usize) -> Vec<f32> {
+        // Row blocks with very different magnitudes, so per-chunk ranges
+        // actually differ from the global envelope.
+        (0..n_rows * width)
+            .map(|i| {
+                let row = i / width;
+                (i as f32 * 0.13).sin() * (1.0 + row as f32)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn uniform_chunking_matches_global_params() {
+        let data = ramp(10, 4);
+        let p = QuantParams::of(&data);
+        let c = ChunkedParams::uniform(10, p);
+        assert_eq!((c.n_chunks(), c.rows_per_chunk(), c.n_rows()), (1, 10, 10));
+        assert_eq!(c.quantize_rows(&data, 4), quantize(&data, p));
+        let q = quantize(&data, p);
+        let mut lazy = vec![0.0f32; q.len()];
+        c.dequantize_rows_into(&q, 0, 4, &mut lazy);
+        assert_eq!(lazy, dequantize(&q, p), "one chunk must reproduce the legacy numerics");
+        assert_eq!(c.envelope(), p);
+    }
+
+    #[test]
+    fn per_block_lazy_dequant_matches_whole_tensor_within_bound() {
+        let (n_rows, width) = (23, 6); // deliberately not a chunk multiple
+        let data = ramp(n_rows, width);
+        let c = ChunkedParams::of_rows(&data, n_rows, width, 4);
+        assert_eq!(c.n_chunks(), 6); // ceil(23 / 4)
+        let q = c.quantize_rows(&data, width);
+
+        // Whole-tensor dequant through the chunked path.
+        let mut whole = vec![0.0f32; q.len()];
+        c.dequantize_rows_into(&q, 0, width, &mut whole);
+        // Lazy per-block dequant over ragged, chunk-straddling blocks.
+        let mut lazy = vec![0.0f32; q.len()];
+        let mut row = 0usize;
+        for block in [3usize, 5, 1, 7, 4, 3] {
+            let (lo, hi) = (row * width, (row + block) * width);
+            c.dequantize_rows_into(&q[lo..hi], row, width, &mut lazy[lo..hi]);
+            row += block;
+        }
+        assert_eq!(row, n_rows);
+        assert_eq!(lazy, whole, "block boundaries must not change the numerics");
+
+        // And both sit within the quantization error bound of the input.
+        let bound = c.max_error() + 1e-6;
+        for (x, y) in data.iter().zip(lazy.iter()) {
+            assert!((x - y).abs() <= bound, "{x} vs {y} (bound {bound})");
+        }
+        // Per-chunk calibration is at least as tight as the global range.
+        assert!(c.max_error() <= max_quant_error(QuantParams::of(&data)) + 1e-6);
+    }
+
+    #[test]
+    fn of_rows_normalizes_to_the_serialization_convention() {
+        // Requested 12 rows/chunk over 20 rows gives 2 chunks, but the
+        // qchunks round-trip implies ceil(20/2) = 10 rows per chunk —
+        // encode and decode must agree on that boundary, or rows 10..12
+        // would decode with the wrong chunk's range after serialization.
+        let data = ramp(20, 2);
+        let c = ChunkedParams::of_rows(&data, 20, 2, 12);
+        assert_eq!((c.n_chunks(), c.rows_per_chunk()), (2, 10));
+        let rebuilt = ChunkedParams::from_chunks(20, c.chunks().to_vec()).unwrap();
+        assert_eq!(rebuilt, c);
+        let q = c.quantize_rows(&data, 2);
+        let mut direct = vec![0.0f32; q.len()];
+        c.dequantize_rows_into(&q, 0, 2, &mut direct);
+        let mut roundtrip = vec![0.0f32; q.len()];
+        rebuilt.dequantize_rows_into(&q, 0, 2, &mut roundtrip);
+        assert_eq!(direct, roundtrip, "serialized params must decode identically");
+        let bound = c.max_error() + 1e-6;
+        for (x, y) in data.iter().zip(direct.iter()) {
+            assert!((x - y).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn chunk_lookup_and_validation() {
+        let data = ramp(10, 2);
+        let c = ChunkedParams::of_rows(&data, 10, 2, 4); // chunks of 4,4,2 rows
+        assert_eq!(c.n_chunks(), 3);
+        assert_eq!(c.for_row(0), c.chunks()[0]);
+        assert_eq!(c.for_row(7), c.chunks()[1]);
+        assert_eq!(c.for_row(9), c.chunks()[2]);
+
+        let rebuilt = ChunkedParams::from_chunks(10, c.chunks().to_vec()).unwrap();
+        assert_eq!(rebuilt, c, "serialization convention must round-trip");
+        assert!(ChunkedParams::from_chunks(10, vec![]).is_err());
+        // 6 chunks cannot tile 10 rows under ceil-division (rpc 2 → 5 chunks).
+        let p = QuantParams { x_min: 0.0, x_max: 1.0 };
+        assert!(ChunkedParams::from_chunks(10, vec![p; 6]).is_err());
     }
 }

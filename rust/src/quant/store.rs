@@ -3,34 +3,57 @@
 //! 50.91–70.51 % (Table 3).
 //!
 //! `FeatureStore` owns the on-disk feature tensors for one dataset
-//! (fp32 and u8 variants, both inside the dataset `.nbt`) and exposes an
-//! instrumented `load()` that measures the stages the paper measures:
-//! bytes read from storage, host staging, and (for the quantized path)
-//! the dequantization location — on-device (the `qmodel_*` artifacts run
-//! the Pallas dequant kernel) or host-side (CPU baselines).
+//! (fp32 and u8 variants, both inside the dataset `.nbt`) and serves
+//! them two ways:
+//!
+//! * [`FeatureStore::load`] — the eager path: one instrumented storage
+//!   read producing an owned tensor (what Table 3 times per inference);
+//! * [`FeatureStore::stage`] — the streaming path: when the container is
+//!   memory-mapped and the precision is INT8, returns a zero-copy
+//!   [`FeatureHandle`] whose rows dequantize lazily, per sampled
+//!   row-block, inside the exec worker that consumes them
+//!   ([`Features::Streamed`]). Falls back to `load` when mmap is
+//!   unavailable or fp32 was requested.
+//!
+//! The store watches the file identity: datasets are republished
+//! atomically (temp file + rename), and the next cold `load`/`stage`
+//! after a republish re-opens metadata and mapping, so plan-cache
+//! invalidation really does reload fresh bytes. Handles staged earlier
+//! keep serving the publication they were staged from (their mapping
+//! pins the old inode) — exactly what an in-flight request wants.
+//!
+//! Every byte that leaves the store — eager loads and streamed
+//! row-blocks alike — lands in the monotonic [`LoadTotals`] counters, so
+//! concurrent prefetchers and workers can be audited without locks.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::tensor::{read_nbt, read_nbt_tensor, Tensor};
+use crate::tensor::{read_nbt, read_nbt_tensor, DType, Tensor};
 
-use super::scalar::{dequantize_into, QuantParams};
+use super::mmap::MmapNbt;
+use super::scalar::{dequantize_into, ChunkedParams, QuantParams};
 
-/// Which representation to load from storage.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Which representation to load from storage. INT8 on-device dequant is
+/// the serving default — the paper's quantized path; fp32 is the opt-in
+/// baseline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// Full-precision features (AFS/SFS rows of Table 3).
     F32,
     /// INT8 features, dequantized on device (quantization-based AES-SpMM).
+    #[default]
     U8Device,
     /// INT8 features, dequantized on the host (CPU baseline path).
     U8Host,
 }
 
 impl Precision {
+    /// Short label used in route keys and reports.
     pub fn name(self) -> &'static str {
         match self {
             Precision::F32 => "f32",
@@ -40,102 +63,453 @@ impl Precision {
     }
 }
 
+/// How feature bytes reached the host.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum LoadSource {
+    /// Zero-copy slices out of a memory-mapped container.
+    Mmap,
+    /// The buffered fallback: a seek-past selective read per load.
+    #[default]
+    Buffered,
+}
+
+impl LoadSource {
+    /// Short label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadSource::Mmap => "mmap",
+            LoadSource::Buffered => "buffered",
+        }
+    }
+}
+
 /// Timing + volume breakdown of one feature load.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LoadStats {
-    /// Bytes read from storage for the feature tensor.
+    /// Bytes read from storage for the feature tensor. Zero for a
+    /// streamed stage — streamed bytes accrue in [`LoadTotals`] as
+    /// row-blocks are actually touched.
     pub bytes_read: usize,
-    /// Wall time of the storage read + container decode.
+    /// Wall time of the storage read + container decode (for a streamed
+    /// stage: the index lookup + handle construction).
     pub read_time: Duration,
-    /// Host-side dequantization time (zero for F32 / U8Device).
+    /// Host-side dequantization time (zero when no host dequant ran;
+    /// lazy for streamed handles, where it accrues in [`LoadTotals`]
+    /// instead).
     pub dequant_time: Duration,
+    /// Whether the bytes came off an mmap or the buffered fallback.
+    pub source: LoadSource,
 }
 
 impl LoadStats {
+    /// Read + host-dequant wall time of this load.
     pub fn total(&self) -> Duration {
         self.read_time + self.dequant_time
     }
 }
 
-/// Loaded features ready for the executor: either an f32 tensor or a u8
-/// tensor plus its quantization params (device dequant).
+/// Monotonic lifetime counters, updated atomically at every staging site.
+///
+/// The previous design filled a per-call `LoadStats` and left callers to
+/// aggregate, which under the concurrent prefetcher meant bytes-read and
+/// staging time were accumulated non-atomically (read-modify-write over
+/// plain fields). Here each counter is its own `AtomicU64` bumped with
+/// `fetch_add`: individual counters never go backwards and never lose
+/// increments, at the cost of the pair being only eventually consistent
+/// with each other — fine for throughput accounting.
+#[derive(Debug, Default)]
+struct StoreCounters {
+    loads: AtomicU64,
+    bytes_read: AtomicU64,
+    stage_nanos: AtomicU64,
+}
+
+impl StoreCounters {
+    fn record(&self, bytes: usize, elapsed: Duration) {
+        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.stage_nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Lifetime totals across every load and streamed row-block of one store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoadTotals {
+    /// Storage-hitting operations (`load` + `stage` calls).
+    pub loads: u64,
+    /// Bytes staged to the host: eager payload reads plus every streamed
+    /// row-block actually dequantized.
+    pub bytes_read: u64,
+    /// Cumulative staging wall time (reads + dequantization), summed
+    /// across threads — overlapped work counts once per worker.
+    pub stage_time: Duration,
+}
+
+/// Loaded features ready for the executor.
 #[derive(Clone, Debug)]
 pub enum Features {
+    /// An owned fp32 tensor (eager fp32 load or host-side dequant).
     Dense(Tensor),
-    Quantized { q: Tensor, params: QuantParams },
+    /// An owned u8 tensor plus its single Eq. 2 range (device dequant;
+    /// only produced for globally-calibrated containers — see
+    /// [`FeatureStore::load`]).
+    Quantized {
+        /// The INT8 payload.
+        q: Tensor,
+        /// The range the payload was encoded with.
+        params: QuantParams,
+    },
+    /// A zero-copy handle over the memory-mapped INT8 rows; dequantizes
+    /// lazily, per row-block, inside the consumer.
+    Streamed(FeatureHandle),
+}
+
+/// A zero-copy handle to one dataset's quantized feature rows.
+///
+/// Cheap to clone (two `Arc`s); lives inside cached
+/// [`ExecPlan`](crate::exec::ExecPlan)s, so warm routes hold a window
+/// into the page cache rather than a materialized tensor. Row-blocks are
+/// dequantized on demand with per-chunk ranges via
+/// [`FeatureHandle::fill_rows_f32`], which also charges the streamed
+/// bytes and time to the owning store's [`LoadTotals`]. A handle pins
+/// the publication it was staged from; republished datasets reach new
+/// plans via the store, not via live handles.
+#[derive(Clone, Debug)]
+pub struct FeatureHandle {
+    nbt: Arc<MmapNbt>,
+    counters: Arc<StoreCounters>,
+    n_rows: usize,
+    feat_dim: usize,
+    params: ChunkedParams,
+}
+
+impl FeatureHandle {
+    /// Feature rows available.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Feature dimension (columns per row).
+    pub fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    /// The per-chunk dequantization ranges.
+    pub fn params(&self) -> &ChunkedParams {
+        &self.params
+    }
+
+    /// Size of the full quantized payload in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.n_rows * self.feat_dim
+    }
+
+    /// The quantized bytes of rows `row0 .. row0 + n_rows`, zero-copy.
+    ///
+    /// Panics if the range exceeds [`FeatureHandle::n_rows`] — callers
+    /// derive block bounds from this handle, so an overrun is a bug, not
+    /// an I/O condition (the payload itself was validated at stage time).
+    pub fn quantized_rows(&self, row0: usize, n_rows: usize) -> &[u8] {
+        self.nbt
+            .row_bytes("featq", row0, n_rows)
+            .expect("featq extent validated when the handle was staged")
+    }
+
+    /// Dequantize rows `row0 ..` into `out` (whose length fixes the block
+    /// height: `out.len() / feat_dim` rows). The streamed hot path: one
+    /// borrow from the page cache, one LUT pass per chunk segment, and an
+    /// atomic charge to the store's totals.
+    pub fn fill_rows_f32(&self, row0: usize, out: &mut [f32]) {
+        if self.feat_dim == 0 || out.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let rows = out.len() / self.feat_dim;
+        assert_eq!(out.len(), rows * self.feat_dim, "out is not whole feature rows");
+        let q = self.quantized_rows(row0, rows);
+        self.params.dequantize_rows_into(q, row0, self.feat_dim, out);
+        self.counters.record(q.len(), t0.elapsed());
+    }
+
+    /// Materialize the whole tensor as fp32 through the same per-chunk
+    /// path (compat for consumers that need ownership; counts as one
+    /// full-tensor stage in the totals).
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.n_rows * self.feat_dim];
+        self.fill_rows_f32(0, &mut out);
+        Tensor::from_f32(&[self.n_rows, self.feat_dim], &out)
+    }
+}
+
+/// Identity of the publication a snapshot was built from. Atomic
+/// republication (temp file + rename) changes the inode — and usually
+/// mtime/length — which is how cold loads detect it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct FileId {
+    len: u64,
+    mtime: Option<SystemTime>,
+    ino: u64,
+}
+
+impl FileId {
+    fn of(path: &Path) -> Option<FileId> {
+        let md = std::fs::metadata(path).ok()?;
+        #[cfg(unix)]
+        let ino = std::os::unix::fs::MetadataExt::ino(&md);
+        #[cfg(not(unix))]
+        let ino = 0;
+        Some(FileId { len: md.len(), mtime: md.modified().ok(), ino })
+    }
+}
+
+/// One publication of the dataset file: parsed metadata + the reader.
+struct Snapshot {
+    shape: Vec<usize>,
+    params: QuantParams,
+    chunked: ChunkedParams,
+    /// The zero-copy reader; `None` means every access takes the
+    /// buffered fallback (`read_nbt_tensor`).
+    mapped: Option<Arc<MmapNbt>>,
+    identity: Option<FileId>,
+}
+
+impl Snapshot {
+    fn build(path: &Path, try_mmap: bool) -> Result<Snapshot> {
+        // Stat before parsing: if a rename lands between the stat and the
+        // read, the stale identity makes the *next* cold load rebuild
+        // again — an extra reopen, never stale data served as fresh.
+        let identity = FileId::of(path);
+        let mapped = if try_mmap { MmapNbt::open(path).ok().map(Arc::new) } else { None };
+        let (shape, qrange, qchunks) = match &mapped {
+            Some(m) => (
+                m.entry("feat")?.shape.clone(),
+                m.tensor("qrange")?,
+                if m.contains("qchunks") { Some(m.tensor("qchunks")?) } else { None },
+            ),
+            None => {
+                let nbt = read_nbt(path)?;
+                (
+                    nbt.get("feat")?.shape.clone(),
+                    nbt.get("qrange")?.clone(),
+                    nbt.get("qchunks").ok().cloned(),
+                )
+            }
+        };
+        let qr = qrange.as_f32()?;
+        let params = QuantParams { x_min: qr[0], x_max: qr[1] };
+        let n_rows = shape.first().copied().unwrap_or(0);
+        let chunked = match qchunks {
+            Some(t) => {
+                let pairs = t.as_f32()?;
+                let chunks = pairs
+                    .chunks_exact(2)
+                    .map(|p| QuantParams { x_min: p[0], x_max: p[1] })
+                    .collect();
+                ChunkedParams::from_chunks(n_rows, chunks)
+                    .with_context(|| format!("qchunks of {}", path.display()))?
+            }
+            None => ChunkedParams::uniform(n_rows, params),
+        };
+        Ok(Snapshot { shape, params, chunked, mapped, identity })
+    }
+
+    fn source(&self) -> LoadSource {
+        if self.mapped.is_some() {
+            LoadSource::Mmap
+        } else {
+            LoadSource::Buffered
+        }
+    }
 }
 
 /// One dataset's feature storage.
 pub struct FeatureStore {
     path: PathBuf,
-    shape: Vec<usize>,
-    params: QuantParams,
-    /// Storage reads performed — the exec-layer plan cache asserts this
-    /// stays flat on warm routes.
-    loads: AtomicU64,
+    try_mmap: bool,
+    snapshot: Mutex<Arc<Snapshot>>,
+    counters: Arc<StoreCounters>,
 }
 
 impl FeatureStore {
-    /// Open the store for a dataset `.nbt`; reads only the metadata.
+    /// Open the store for a dataset `.nbt`: memory-map the container when
+    /// the platform allows it (falling back silently to buffered reads
+    /// otherwise) and read only the metadata — feature shape, the global
+    /// `qrange`, and the optional per-chunk `qchunks` calibration.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
-        let path = path.as_ref().to_path_buf();
-        let nbt = read_nbt(&path)?;
-        let feat = nbt.get("feat")?;
-        let qr = nbt.get("qrange")?.as_f32()?.to_vec();
+        Self::open_inner(path.as_ref(), true)
+    }
+
+    /// Open with the mmap reader disabled: every load takes the buffered
+    /// seek-past path. Benches use this to time the fallback; it is also
+    /// the behavior [`FeatureStore::open`] degrades to without mmap.
+    pub fn open_buffered(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_inner(path.as_ref(), false)
+    }
+
+    fn open_inner(path: &Path, try_mmap: bool) -> Result<Self> {
+        let snapshot = Arc::new(Snapshot::build(path, try_mmap)?);
         Ok(Self {
-            path,
-            shape: feat.shape.clone(),
-            params: QuantParams { x_min: qr[0], x_max: qr[1] },
-            loads: AtomicU64::new(0),
+            path: path.to_path_buf(),
+            try_mmap,
+            snapshot: Mutex::new(snapshot),
+            counters: Arc::new(StoreCounters::default()),
         })
     }
 
-    /// How many times [`FeatureStore::load`] has hit storage.
+    /// The live publication; re-opened when the file on disk changed.
+    /// Cold paths only — warm routes never reach the store at all.
+    fn current(&self) -> Arc<Snapshot> {
+        let mut snap = self.snapshot.lock().unwrap();
+        let on_disk = FileId::of(&self.path);
+        if on_disk.is_some() && on_disk != snap.identity {
+            // Republished: reopen metadata + mapping so invalidated
+            // routes rebuild from fresh bytes. If the rebuild fails
+            // (mid-publish race), keep serving the previous publication;
+            // the next cold load retries.
+            if let Ok(next) = Snapshot::build(&self.path, self.try_mmap) {
+                *snap = Arc::new(next);
+            }
+        }
+        snap.clone()
+    }
+
+    /// How many times the store has hit storage (eager loads + stages).
     pub fn load_count(&self) -> u64 {
-        self.loads.load(Ordering::Relaxed)
+        self.counters.loads.load(Ordering::Relaxed)
     }
 
-    pub fn shape(&self) -> &[usize] {
-        &self.shape
+    /// Monotonic lifetime totals — safe to read while loads and streamed
+    /// dequants are in flight on other threads.
+    pub fn totals(&self) -> LoadTotals {
+        LoadTotals {
+            loads: self.counters.loads.load(Ordering::Relaxed),
+            bytes_read: self.counters.bytes_read.load(Ordering::Relaxed),
+            stage_time: Duration::from_nanos(self.counters.stage_nanos.load(Ordering::Relaxed)),
+        }
     }
 
+    /// Feature tensor shape (`[n_rows, feat_dim]`) of the last-opened
+    /// publication.
+    pub fn shape(&self) -> Vec<usize> {
+        self.snapshot.lock().unwrap().shape.clone()
+    }
+
+    /// The global (envelope) quantization range of the last-opened
+    /// publication.
     pub fn params(&self) -> QuantParams {
-        self.params
+        self.snapshot.lock().unwrap().params
     }
 
-    /// Load features at the requested precision, instrumented.
+    /// The per-chunk calibration (uniform when the container carries only
+    /// the legacy global `qrange`).
+    pub fn chunk_params(&self) -> ChunkedParams {
+        self.snapshot.lock().unwrap().chunked.clone()
+    }
+
+    /// Which path feature bytes take out of this store.
+    pub fn source(&self) -> LoadSource {
+        self.snapshot.lock().unwrap().source()
+    }
+
+    /// Load features eagerly at the requested precision, instrumented.
     ///
-    /// Note the whole container is re-read per call by design: this stage
-    /// *models the paper's per-inference feature loading* (storage → host
-    /// → device), which is exactly what Table 3 times. The executor keeps
-    /// graph structure cached; features are the per-request payload.
+    /// Note the payload is re-staged per call by design: this models the
+    /// paper's per-inference feature loading (storage → host → device),
+    /// which is exactly what Table 3 times. The executor keeps graph
+    /// structure cached; features are the per-request payload. Serving
+    /// paths that want the copy off the critical path use
+    /// [`FeatureStore::stage`] instead.
+    ///
+    /// `U8Device` returns [`Features::Quantized`] only for
+    /// globally-calibrated containers; chunk-encoded payloads have no
+    /// single-range u8 form a device kernel could decode (Eq. 2 takes one
+    /// range), so they decode host-side with the per-chunk ranges rather
+    /// than shipping bytes that would dequantize wrongly.
     pub fn load(&self, precision: Precision) -> Result<(Features, LoadStats)> {
-        self.loads.fetch_add(1, Ordering::Relaxed);
-        let mut stats = LoadStats::default();
+        let snap = self.current();
+        self.load_from(&snap, precision)
+    }
+
+    fn load_from(&self, snap: &Snapshot, precision: Precision) -> Result<(Features, LoadStats)> {
+        self.counters.loads.fetch_add(1, Ordering::Relaxed);
+        let mut stats = LoadStats { source: snap.source(), ..LoadStats::default() };
         let t0 = Instant::now();
         let key = match precision {
             Precision::F32 => "feat",
             _ => "featq",
         };
-        // Selective read: seek past every other tensor in the container so
-        // the INT8 path really moves 4x fewer bytes off storage.
-        let tensor = read_nbt_tensor(&self.path, key).context("feature tensor missing")?;
+        // Selective read: only the requested tensor's bytes move (a seek
+        // -past read, or a copy out of the map), so the INT8 path really
+        // stages 4x fewer bytes.
+        let tensor = match &snap.mapped {
+            Some(m) => m.tensor(key).context("feature tensor missing")?,
+            None => read_nbt_tensor(&self.path, key).context("feature tensor missing")?,
+        };
         stats.bytes_read = tensor.byte_len();
         stats.read_time = t0.elapsed();
 
         let feats = match precision {
             Precision::F32 => Features::Dense(tensor),
-            Precision::U8Device => Features::Quantized { q: tensor, params: self.params },
-            Precision::U8Host => {
+            Precision::U8Device if snap.chunked.n_chunks() <= 1 => {
+                Features::Quantized { q: tensor, params: snap.params }
+            }
+            // U8Host — and U8Device over a chunk-encoded payload, which
+            // has no single-range u8 form a device kernel could decode —
+            // dequantize host-side with the ranges the payload was
+            // actually encoded with.
+            _ => {
                 let t1 = Instant::now();
                 let q = tensor.as_u8()?;
                 let mut out = vec![0.0f32; q.len()];
-                dequantize_into(q, self.params, &mut out);
+                if snap.chunked.n_chunks() > 1 && snap.shape.len() == 2 {
+                    snap.chunked.dequantize_rows_into(q, 0, snap.shape[1], &mut out);
+                } else {
+                    dequantize_into(q, snap.params, &mut out);
+                }
                 stats.dequant_time = t1.elapsed();
                 Features::Dense(Tensor::from_f32(&tensor.shape, &out))
             }
         };
+        self.counters.record(stats.bytes_read, stats.total());
         Ok((feats, stats))
+    }
+
+    /// Stage features for serving — the streaming path.
+    ///
+    /// With the mmap reader available and an INT8 precision, returns a
+    /// [`Features::Streamed`] handle: no payload bytes move now;
+    /// row-blocks dequantize lazily (per-chunk Eq. 2) inside whichever
+    /// exec worker consumes them. Anything else falls back to the eager
+    /// [`FeatureStore::load`].
+    pub fn stage(&self, precision: Precision) -> Result<(Features, LoadStats)> {
+        let snap = self.current();
+        let Some(m) = &snap.mapped else { return self.load_from(&snap, precision) };
+        if matches!(precision, Precision::F32) {
+            return self.load_from(&snap, precision);
+        }
+        self.counters.loads.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let entry = m.entry("featq").context("featq missing — quantize the dataset")?;
+        if entry.dtype != DType::U8 {
+            bail!("featq is {:?}, expected u8", entry.dtype);
+        }
+        if entry.shape != snap.shape || snap.shape.len() != 2 {
+            bail!("featq shape {:?} disagrees with feat shape {:?}", entry.shape, snap.shape);
+        }
+        let handle = FeatureHandle {
+            nbt: m.clone(),
+            counters: self.counters.clone(),
+            n_rows: snap.shape[0],
+            feat_dim: snap.shape[1],
+            params: snap.chunked.clone(),
+        };
+        let stats = LoadStats {
+            bytes_read: 0,
+            read_time: t0.elapsed(),
+            dequant_time: Duration::ZERO,
+            source: LoadSource::Mmap,
+        };
+        self.counters.record(0, stats.read_time);
+        Ok((Features::Streamed(handle), stats))
     }
 }
 
@@ -145,26 +519,48 @@ mod tests {
     use crate::quant::quantize;
     use crate::tensor::{write_nbt, NbtFile};
 
-    fn make_store(dir: &Path) -> FeatureStore {
-        let n = 64;
-        let f = 16;
-        let feat: Vec<f32> = (0..n * f).map(|i| (i as f32 * 0.37).sin()).collect();
+    const N: usize = 64;
+    const F: usize = 16;
+
+    fn write_store_values(dir: &Path, chunked: Option<usize>, phase: f32) -> PathBuf {
+        let feat: Vec<f32> = (0..N * F).map(|i| (i as f32 * 0.37 + phase).sin()).collect();
         let p = QuantParams::of(&feat);
-        let q = quantize(&feat, p);
         let mut nbt = NbtFile::new();
-        nbt.insert("feat", Tensor::from_f32(&[n, f], &feat));
-        nbt.insert("featq", Tensor::from_u8(&[n, f], &q));
+        nbt.insert("feat", Tensor::from_f32(&[N, F], &feat));
         nbt.insert("qrange", Tensor::from_f32(&[2], &[p.x_min, p.x_max]));
+        match chunked {
+            Some(rpc) => {
+                let c = ChunkedParams::of_rows(&feat, N, F, rpc);
+                let pairs: Vec<f32> = c.chunks().iter().flat_map(|q| [q.x_min, q.x_max]).collect();
+                nbt.insert("featq", Tensor::from_u8(&[N, F], &c.quantize_rows(&feat, F)));
+                nbt.insert("qchunks", Tensor::from_f32(&[c.n_chunks(), 2], &pairs));
+            }
+            None => {
+                nbt.insert("featq", Tensor::from_u8(&[N, F], &quantize(&feat, p)));
+            }
+        }
         let path = dir.join("store_test.nbt");
         write_nbt(&path, &nbt).unwrap();
-        FeatureStore::open(&path).unwrap()
+        path
+    }
+
+    fn write_store(dir: &Path, chunked: Option<usize>) -> PathBuf {
+        write_store_values(dir, chunked, 0.0)
+    }
+
+    fn make_store(dir: &Path) -> FeatureStore {
+        FeatureStore::open(write_store(dir, None)).unwrap()
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fstore_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
     }
 
     #[test]
     fn f32_load_reads_4x_the_bytes() {
-        let dir = std::env::temp_dir().join("fstore_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let store = make_store(&dir);
+        let store = make_store(&tmp("bytes"));
         let (_, s32) = store.load(Precision::F32).unwrap();
         let (_, s8) = store.load(Precision::U8Device).unwrap();
         assert_eq!(s32.bytes_read, 4 * s8.bytes_read);
@@ -173,9 +569,7 @@ mod tests {
 
     #[test]
     fn host_dequant_approximates_f32() {
-        let dir = std::env::temp_dir().join("fstore_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let store = make_store(&dir);
+        let store = make_store(&tmp("dequant"));
         let (f32_feats, _) = store.load(Precision::F32).unwrap();
         let (host_feats, stats) = store.load(Precision::U8Host).unwrap();
         let (Features::Dense(a), Features::Dense(b)) = (f32_feats, host_feats) else {
@@ -190,9 +584,7 @@ mod tests {
 
     #[test]
     fn quantized_load_carries_params() {
-        let dir = std::env::temp_dir().join("fstore_test3");
-        std::fs::create_dir_all(&dir).unwrap();
-        let store = make_store(&dir);
+        let store = make_store(&tmp("params"));
         let (f, _) = store.load(Precision::U8Device).unwrap();
         match f {
             Features::Quantized { q, params } => {
@@ -201,5 +593,166 @@ mod tests {
             }
             _ => panic!("expected quantized features"),
         }
+    }
+
+    #[test]
+    fn buffered_fallback_matches_mapped_reads() {
+        let dir = tmp("fallback");
+        let path = write_store(&dir, None);
+        let mapped = FeatureStore::open(&path).unwrap();
+        let buffered = FeatureStore::open_buffered(&path).unwrap();
+        assert_eq!(buffered.source(), LoadSource::Buffered);
+        let (bf, bs) = buffered.load(Precision::F32).unwrap();
+        let (mf, ms) = mapped.load(Precision::F32).unwrap();
+        assert_eq!(bs.source, LoadSource::Buffered);
+        let (Features::Dense(a), Features::Dense(b)) = (bf, mf) else { panic!() };
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        assert_eq!(bs.bytes_read, ms.bytes_read, "same payload either way");
+        // The buffered store's stage() degrades to an eager load.
+        let (f, s) = buffered.stage(Precision::U8Device).unwrap();
+        assert!(matches!(f, Features::Quantized { .. }));
+        assert!(s.bytes_read > 0);
+    }
+
+    #[test]
+    fn staged_handle_is_lazy_and_matches_eager_dequant() {
+        let dir = tmp("staged");
+        let path = write_store(&dir, Some(8));
+        let store = FeatureStore::open(&path).unwrap();
+        if store.source() != LoadSource::Mmap {
+            return; // platform without mmap: stage() == load(), covered above
+        }
+        let before = store.totals();
+        let (f, stats) = store.stage(Precision::U8Device).unwrap();
+        let Features::Streamed(h) = f else { panic!("mmap store must stream INT8") };
+        assert_eq!(stats.bytes_read, 0, "staging moves no payload bytes");
+        assert_eq!(stats.source, LoadSource::Mmap);
+        assert_eq!((h.n_rows(), h.feat_dim()), (N, F));
+        assert_eq!(store.totals().bytes_read, before.bytes_read, "no bytes until a block is read");
+
+        // Lazy per-block dequant equals the eager host dequant exactly.
+        let (eager, _) = store.load(Precision::U8Host).unwrap();
+        let Features::Dense(eager) = eager else { panic!() };
+        let mut lazy = vec![0.0f32; N * F];
+        for row0 in (0..N).step_by(8) {
+            h.fill_rows_f32(row0, &mut lazy[row0 * F..(row0 + 8) * F]);
+        }
+        assert_eq!(&lazy, eager.as_f32().unwrap());
+        // ...and the streamed bytes were charged to the totals.
+        assert_eq!(
+            store.totals().bytes_read - before.bytes_read,
+            (2 * N * F) as u64, // one streamed pass + the eager u8 load
+        );
+        assert_eq!(h.to_dense().as_f32().unwrap(), eager.as_f32().unwrap());
+    }
+
+    #[test]
+    fn chunked_u8device_load_decodes_host_side() {
+        // A chunk-encoded payload has no single-range u8 representation:
+        // the eager U8Device path must decode with the per-chunk ranges,
+        // never ship codes that a single-range consumer would misread.
+        let dir = tmp("chunked_dev");
+        let path = write_store(&dir, Some(4));
+        let stores = [
+            FeatureStore::open(&path).unwrap(),
+            FeatureStore::open_buffered(&path).unwrap(),
+        ];
+        for store in stores {
+            let (orig, _) = store.load(Precision::F32).unwrap();
+            let (dev, _) = store.load(Precision::U8Device).unwrap();
+            let Features::Dense(orig) = orig else { panic!() };
+            let Features::Dense(dev) = dev else {
+                panic!("chunk-encoded U8Device must decode host-side, got {dev:?}")
+            };
+            let bound = store.chunk_params().max_error() + 1e-6;
+            for (x, y) in orig.as_f32().unwrap().iter().zip(dev.as_f32().unwrap()) {
+                assert!((x - y).abs() <= bound, "{x} vs {y} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_store_tightens_the_error_bound() {
+        let dir = tmp("chunked");
+        let path = write_store(&dir, Some(4));
+        let store = FeatureStore::open(&path).unwrap();
+        assert_eq!(store.chunk_params().n_chunks(), N / 4);
+        assert!(store.chunk_params().max_error() <= crate::quant::max_quant_error(store.params()));
+        // U8Host dequant through the chunked path stays within the
+        // per-chunk bound of the original data.
+        let (dense, _) = store.load(Precision::F32).unwrap();
+        let (host, _) = store.load(Precision::U8Host).unwrap();
+        let (Features::Dense(a), Features::Dense(b)) = (dense, host) else { panic!() };
+        let bound = store.chunk_params().max_error() + 1e-6;
+        for (x, y) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+            assert!((x - y).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn republished_file_reaches_the_next_cold_load() {
+        let dir = tmp("republish");
+        let path = write_store_values(&dir, None, 0.0);
+        let store = FeatureStore::open(&path).unwrap();
+        let (v1, _) = store.load(Precision::F32).unwrap();
+        let Features::Dense(v1) = v1 else { panic!() };
+
+        // A live handle (if streaming) pins the first publication.
+        let staged = store.stage(Precision::U8Device).unwrap().0;
+
+        // Atomic republish: same path, new inode, different values.
+        write_store_values(&dir, None, 1.0);
+        let (v2, _) = store.load(Precision::F32).unwrap();
+        let Features::Dense(v2) = v2 else { panic!() };
+        assert_ne!(
+            v1.as_f32().unwrap(),
+            v2.as_f32().unwrap(),
+            "cold load after republish must serve the new bytes"
+        );
+
+        if let Features::Streamed(h) = staged {
+            let old = h.to_dense();
+            let bound = crate::quant::max_quant_error(QuantParams::of(v1.as_f32().unwrap())) + 1e-5;
+            for (x, y) in v1.as_f32().unwrap().iter().zip(old.as_f32().unwrap()) {
+                assert!((x - y).abs() <= bound, "old handle must keep serving its publication");
+            }
+        }
+    }
+
+    #[test]
+    fn totals_stay_monotonic_under_concurrent_staging() {
+        let dir = tmp("monotonic");
+        let store = Arc::new(FeatureStore::open(write_store(&dir, None)).unwrap());
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let loaders: Vec<_> = (0..4)
+            .map(|_| {
+                let store = store.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..8 {
+                        store.load(Precision::U8Host).unwrap();
+                    }
+                })
+            })
+            .collect();
+        // Poll while the loaders race: every observation must be
+        // non-decreasing in every counter.
+        let mut last = store.totals();
+        while !done.load(Ordering::Relaxed) {
+            let now = store.totals();
+            assert!(now.loads >= last.loads);
+            assert!(now.bytes_read >= last.bytes_read);
+            assert!(now.stage_time >= last.stage_time);
+            last = now;
+            if loaders.iter().all(|h| h.is_finished()) {
+                done.store(true, Ordering::Relaxed);
+            }
+            std::thread::yield_now();
+        }
+        for h in loaders {
+            h.join().unwrap();
+        }
+        let t = store.totals();
+        assert_eq!(t.loads, 32);
+        assert_eq!(t.bytes_read, (32 * N * F) as u64, "no streamed byte lost or double-counted");
     }
 }

@@ -19,7 +19,7 @@ use crate::exec::{
     run_ell, run_exact, select_kernel, ExecEnv, ExecPlan, GraphProfile, PAR_MIN_FLOPS,
 };
 use crate::graph::Ell;
-use crate::quant::{dequantize, Precision};
+use crate::quant::{dequantize, FeatureHandle, Features, Precision};
 use crate::sampling::sample_ell_par;
 use crate::tensor::{DType, Tensor};
 
@@ -67,6 +67,59 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, env: &ExecEnv) -> 
     out
 }
 
+/// Layer-1 multiply over a streamed feature handle: each row chunk
+/// dequantizes its own INT8 block into a chunk-local scratch buffer and
+/// multiplies — dequantization is lazy, per row-block, inside the exec
+/// worker, and the fp32 feature matrix never materializes whole. Inner
+/// loops mirror [`matmul`] exactly, so per-row FP order (and therefore
+/// the result) is identical to the eager path given the same dequantized
+/// values.
+fn matmul_streamed(
+    fh: &FeatureHandle,
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    env: &ExecEnv,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+    let chunk_rows = if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+        m.div_ceil(env.threads).max(1)
+    } else {
+        m
+    };
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(chunk_rows * n)
+        .enumerate()
+        .map(|(chunk_idx, out_chunk)| {
+            Box::new(move || {
+                let row0 = chunk_idx * chunk_rows;
+                let rows = out_chunk.len() / n;
+                let mut xbuf = vec![0.0f32; rows * k];
+                fh.fill_rows_f32(row0, &mut xbuf);
+                for (r, orow) in out_chunk.chunks_mut(n).enumerate() {
+                    let arow = &xbuf[r * k..(r + 1) * k];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for (o, &x) in orow.iter_mut().zip(brow.iter()) {
+                            *o += av * x;
+                        }
+                    }
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::exec::global_pool().run(tasks);
+    out
+}
+
 /// Run one full-graph GCN forward on the host:
 /// `logits = Â(relu(Â(XW₀)+b₀)W₁)+b₁` with Â either exact or the route's
 /// sampled ELL plan. `plan` (from the coordinator's cache) supplies the
@@ -75,7 +128,11 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, env: &ExecEnv) -> 
 ///
 /// `features` overrides the dataset tensor; a u8 tensor is dequantized
 /// host-side with the dataset's Eq. 2 params (the CPU stand-in for the
-/// on-device Pallas dequant).
+/// on-device Pallas dequant). When the cached plan carries a
+/// [`Features::Streamed`] handle (and no explicit `features` override),
+/// layer 1 streams INT8 row-blocks straight off the mmap instead — the
+/// `transfer` stat is then near-zero and the lazy dequant time lands
+/// inside `execute` (and in the feature store's `LoadTotals`).
 pub fn host_forward(
     ds: &Dataset,
     weights: &Weights,
@@ -88,19 +145,39 @@ pub fn host_forward(
         bail!("host backend implements the gcn forward only (requested {:?})", req.model);
     }
 
-    // Stage the features (the host analog of the transfer stage).
+    // Stage the features (the host analog of the transfer stage). The
+    // streamed path stages nothing here — blocks flow lazily in layer 1.
     let t0 = Instant::now();
+    let streamed: Option<&FeatureHandle> = match (features, plan) {
+        (None, Some(p)) => match &p.features {
+            Features::Streamed(h) => Some(h),
+            _ => None,
+        },
+        _ => None,
+    };
     let dequantized;
-    let x: &[f32] = match features {
-        None => ds.feat.as_f32()?,
-        Some(t) if t.dtype == DType::F32 => t.as_f32()?,
-        Some(t) if t.dtype == DType::U8 => {
+    let x: &[f32] = match (streamed, features) {
+        (Some(h), _) => {
+            if h.n_rows() != ds.n || h.feat_dim() != ds.feats {
+                bail!(
+                    "streamed features are [{}, {}], dataset needs [{}, {}]",
+                    h.n_rows(),
+                    h.feat_dim(),
+                    ds.n,
+                    ds.feats
+                );
+            }
+            &[]
+        }
+        (None, None) => ds.feat.as_f32()?,
+        (None, Some(t)) if t.dtype == DType::F32 => t.as_f32()?,
+        (None, Some(t)) if t.dtype == DType::U8 => {
             dequantized = dequantize(t.as_u8()?, ds.qparams);
             &dequantized
         }
-        Some(t) => bail!("unsupported feature dtype {:?} for the host backend", t.dtype),
+        (None, Some(t)) => bail!("unsupported feature dtype {:?} for the host backend", t.dtype),
     };
-    if x.len() != ds.n * ds.feats {
+    if streamed.is_none() && x.len() != ds.n * ds.feats {
         bail!("feature tensor has {} values, dataset needs {}", x.len(), ds.n * ds.feats);
     }
     let transfer = t0.elapsed();
@@ -140,8 +217,12 @@ pub fn host_forward(
         bail!("weight shapes inconsistent with dataset dims (f={f}, h={h}, c={c})");
     }
 
-    // Layer 1: agg(X W0) + b0, ReLU.
-    let xw = matmul(x, w0, n, f, h, env);
+    // Layer 1: agg(X W0) + b0, ReLU. Streamed routes dequantize X lazily
+    // per row-block inside the multiply's pool tasks.
+    let xw = match streamed {
+        Some(fh) => matmul_streamed(fh, w0, n, f, h, env),
+        None => matmul(x, w0, n, f, h, env),
+    };
     let mut hidden = vec![0.0f32; n * h];
     aggregate(&xw, h, &mut hidden);
     for i in 0..n {
@@ -218,6 +299,46 @@ mod tests {
         let env = ExecEnv::with_threads(4);
         assert!(matmul(&[], &[], 0, 3, 3, &env).is_empty());
         assert_eq!(matmul(&[1.0, 2.0], &[], 2, 1, 0, &env), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn streamed_matmul_matches_eager_over_the_same_dequant() {
+        use crate::quant::{ChunkedParams, FeatureStore, Features, Precision};
+        use crate::tensor::{write_nbt, NbtFile};
+
+        let (m, k, n) = (37usize, 8usize, 5usize);
+        let mut rng = crate::rng::Pcg32::new(23);
+        let feat: Vec<f32> = (0..m * k).map(|_| rng.f32() - 0.5).collect();
+        let chunked = ChunkedParams::of_rows(&feat, m, k, 10);
+        let q = chunked.quantize_rows(&feat, k);
+        let pairs: Vec<f32> = chunked.chunks().iter().flat_map(|p| [p.x_min, p.x_max]).collect();
+        let env_p = chunked.envelope();
+
+        let mut nbt = NbtFile::new();
+        nbt.insert("feat", Tensor::from_f32(&[m, k], &feat));
+        nbt.insert("featq", Tensor::from_u8(&[m, k], &q));
+        nbt.insert("qrange", Tensor::from_f32(&[2], &[env_p.x_min, env_p.x_max]));
+        nbt.insert("qchunks", Tensor::from_f32(&[chunked.n_chunks(), 2], &pairs));
+        let dir = std::env::temp_dir().join(format!("host_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.nbt");
+        write_nbt(&path, &nbt).unwrap();
+
+        let store = FeatureStore::open(&path).unwrap();
+        let (feats, _) = store.stage(Precision::U8Device).unwrap();
+        let Features::Streamed(fh) = feats else {
+            return; // platform without mmap: streaming is compiled out
+        };
+        let b: Vec<f32> = (0..k * n).map(|_| rng.f32() - 0.5).collect();
+        // Eager reference over the identical per-chunk dequant.
+        let mut x = vec![0.0f32; m * k];
+        chunked.dequantize_rows_into(&q, 0, k, &mut x);
+        for threads in [1usize, 4] {
+            let env = ExecEnv::with_threads(threads);
+            let want = matmul(&x, &b, m, k, n, &env);
+            let got = matmul_streamed(&fh, &b, m, k, n, &env);
+            assert_eq!(want, got, "streamed layer-1 must be bit-identical ({threads} threads)");
+        }
     }
 
     // Full forward correctness is covered in tests/exec_layer.rs, which

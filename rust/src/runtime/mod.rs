@@ -1,10 +1,36 @@
-//! The PJRT runtime — loads the AOT artifacts produced by
-//! `python/compile/aot.py` (HLO text + `.nbt` tensors) and executes them
-//! on the PJRT CPU client via the `xla` crate. This is the only module
-//! that touches PJRT; everything above it deals in [`crate::tensor::Tensor`]s.
+//! The runtime — execution backends and artifact plumbing. This is the
+//! only module that touches PJRT; everything above it deals in
+//! [`crate::tensor::Tensor`]s.
 //!
-//! Pipeline per artifact: `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` (cached) → `execute`.
+//! # Purpose
+//!
+//! Run one forward pass, wherever it can run: the compiled AOT artifacts
+//! through PJRT (production), or the rust host substrate (CPU-only
+//! machines, offline CI) — behind one [`Backend`] switch so the
+//! coordinator does not care which.
+//!
+//! # Structure
+//!
+//! | unit        | role                                                  |
+//! |-------------|-------------------------------------------------------|
+//! | `artifacts` | manifest + artifact metadata produced by `python/compile/aot.py` |
+//! | `dataset`   | [`Dataset`] / [`Weights`] loading from the `.nbt` artifacts |
+//! | `engine`    | [`Engine`]: HLO text → `XlaComputation` → compile (cached) → execute |
+//! | `backend`   | [`Backend`]: Pjrt (device) vs Host dispatch           |
+//! | `host`      | [`host_forward`]: dispatched CPU GCN forward, incl. lazy streamed-INT8 layer 1 |
+//! | `infer`     | [`run_forward`] / [`accuracy`] request-level helpers  |
+//!
+//! # Rules
+//!
+//! * Pipeline per artifact: `HloModuleProto::from_text_file` →
+//!   `XlaComputation::from_proto` → `client.compile` (cached) →
+//!   `execute`.
+//! * The host path must stay numerically cross-checkable against the
+//!   artifacts — it shares the sampling planner and kernel dispatch with
+//!   the serving stack, not a private reimplementation.
+//! * Streamed feature handles are a host-backend feature: device
+//!   artifacts receive one eagerly materialized tensor (the PJRT
+//!   signature has no notion of lazy row-blocks).
 
 mod artifacts;
 mod backend;

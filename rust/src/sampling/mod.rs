@@ -2,6 +2,28 @@
 //! Pallas kernel, bit-exact against `python/compile/kernels/ref.py`
 //! (golden vectors in `tests/golden_sampling.rs`).
 //!
+//! # Purpose
+//!
+//! Decide, per row, which ≤ W edges survive (Table 1 + Eq. 3) and build
+//! the fixed-width ELL plans the sampled SpMM kernels consume.
+//!
+//! # Structure
+//!
+//! | unit       | role                                                   |
+//! |------------|--------------------------------------------------------|
+//! | `strategy` | [`Strategy`] (AFS / SFS / AES) + per-row start-index hash (the `PRIME` stride of Eq. 3) |
+//! | `plan`     | row planners and the parallel [`sample_ell_par`] ELL builder; sampling-rate CDFs for Fig. 5 |
+//!
+//! # Rules
+//!
+//! * Sampling is **deterministic** per (row, degree, W, strategy) — no
+//!   RNG on the serving path; reproducibility is what lets the plan
+//!   cache reuse a sampled plan across batches.
+//! * Any change here must keep the golden vectors green — the python
+//!   reference is the source of truth for kernel parity.
+//! * Parallel planners fan out on the exec layer's global pool; never
+//!   call them from inside a task already on that pool.
+//!
 //! Used for (a) the Fig. 5 sampling-rate CDF analysis, (b) CPU baseline
 //! SpMM over sampled plans, and (c) cross-checking artifact numerics.
 

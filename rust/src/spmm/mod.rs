@@ -9,7 +9,7 @@
 //!   register blocks).
 //! * [`ell_spmm`]     — the sampled-matrix multiply (AES/AFS/SFS plans),
 //!   Alg. 1 lines 16–19 on the host.
-//! * [`threaded`]     — row-partitioned multi-thread wrappers over any of
+//! * `threaded`       — row-partitioned multi-thread wrappers over any of
 //!   the above (std::thread scoped; the offline registry has no rayon).
 //!
 //! All kernels compute `C = A × B` with `B` row-major `[n, f]`.

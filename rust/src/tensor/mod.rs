@@ -6,7 +6,8 @@
 
 mod nbt;
 
-pub use nbt::{read_nbt, read_nbt_tensor, write_nbt, NbtFile};
+pub(crate) use nbt::parse_nbt_index;
+pub use nbt::{read_nbt, read_nbt_tensor, write_nbt, NbtFile, TensorEntry};
 
 use anyhow::{bail, Result};
 

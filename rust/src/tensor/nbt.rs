@@ -101,13 +101,32 @@ pub fn read_nbt(path: impl AsRef<Path>) -> Result<NbtFile> {
     parse_nbt(&buf).with_context(|| format!("parsing {}", path.display()))
 }
 
-pub(crate) fn parse_nbt(buf: &[u8]) -> Result<NbtFile> {
+/// Location + metadata of one tensor inside a container buffer — the
+/// zero-copy index [`crate::quant::MmapNbt`] serves payload slices from.
+/// `offset`/`len` address the raw row-major LE payload inside the file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorEntry {
+    /// Tensor name as written by the producer.
+    pub name: String,
+    /// Element type of the payload.
+    pub dtype: DType,
+    /// Row-major dimensions.
+    pub shape: Vec<usize>,
+    /// Payload byte offset from the start of the container.
+    pub offset: usize,
+    /// Payload byte length (validated against `shape` × dtype size).
+    pub len: usize,
+}
+
+/// Walk a container buffer and return the tensor index without copying
+/// any payload. Validates magic, shape/payload agreement, and bounds.
+pub(crate) fn parse_nbt_index(buf: &[u8]) -> Result<Vec<TensorEntry>> {
     let mut c = Cursor { buf, off: 0 };
     if c.take(4)? != MAGIC {
         bail!("bad magic (not an NBTC container)");
     }
     let count = c.u32()?;
-    let mut out = NbtFile::new();
+    let mut out = Vec::with_capacity(count as usize);
     for _ in 0..count {
         let nlen = c.u16()? as usize;
         let name = std::str::from_utf8(c.take(nlen)?)?.to_string();
@@ -122,11 +141,21 @@ pub(crate) fn parse_nbt(buf: &[u8]) -> Result<NbtFile> {
         if plen != expected {
             bail!("tensor {name:?}: payload {plen} bytes, shape implies {expected}");
         }
-        // Copy into a fresh Vec so the payload is max-aligned (Vec<u8> from
+        let offset = c.off;
+        c.take(plen)?; // bounds-check the payload without copying it
+        out.push(TensorEntry { name, dtype, shape, offset, len: plen });
+    }
+    Ok(out)
+}
+
+pub(crate) fn parse_nbt(buf: &[u8]) -> Result<NbtFile> {
+    let mut out = NbtFile::new();
+    for e in parse_nbt_index(buf)? {
+        // Copy into a fresh Vec so the payload is max-aligned (a slice at
         // the file offset may be arbitrarily aligned otherwise).
-        let mut data = vec![0u8; plen];
-        data.copy_from_slice(c.take(plen)?);
-        out.insert(name, Tensor { dtype, shape, data });
+        let mut data = vec![0u8; e.len];
+        data.copy_from_slice(&buf[e.offset..e.offset + e.len]);
+        out.insert(e.name, Tensor { dtype: e.dtype, shape: e.shape, data });
     }
     Ok(out)
 }
@@ -224,6 +253,26 @@ mod tests {
         assert_eq!(g.get("b").unwrap().as_i32().unwrap(), &[-1, 0, 7]);
         assert_eq!(g.get("q").unwrap().as_u8().unwrap(), &[0, 128, 200, 255]);
         assert!(g.get("missing").is_err());
+    }
+
+    #[test]
+    fn index_addresses_the_same_payloads_the_parser_copies() {
+        let mut f = NbtFile::new();
+        f.insert("a", Tensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]));
+        f.insert("q", Tensor::from_u8(&[3], &[7, 8, 9]));
+        let dir = std::env::temp_dir().join("nbt_test_idx");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.nbt");
+        write_nbt(&p, &f).unwrap();
+        let buf = std::fs::read(&p).unwrap();
+        let idx = parse_nbt_index(&buf).unwrap();
+        assert_eq!(idx.len(), 2);
+        for (entry, (name, tensor)) in idx.iter().zip(f.iter()) {
+            assert_eq!(entry.name, name);
+            assert_eq!(entry.dtype, tensor.dtype);
+            assert_eq!(entry.shape, tensor.shape);
+            assert_eq!(&buf[entry.offset..entry.offset + entry.len], &tensor.data[..]);
+        }
     }
 
     #[test]

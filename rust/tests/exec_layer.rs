@@ -3,11 +3,16 @@
 //! dataset + trained-shape weights are written as `.nbt`, and the
 //! coordinator runs on [`Backend::Host`] (dispatched CPU kernels).
 //!
-//! Covers the acceptance criteria of the exec-layer refactor:
+//! Covers the acceptance criteria of the exec-layer refactor and the
+//! streaming feature pipeline:
 //! * warm routes never touch the feature store (load count stays flat);
 //! * the persistent pool serves every batch with a constant thread pool;
-//! * host-backend answers match a direct substrate forward;
-//! * invalidation forces exactly one reload.
+//! * host-backend answers match a direct substrate forward (including
+//!   INT8 routes streamed zero-copy off the mmap);
+//! * invalidation forces exactly one reload;
+//! * with prefetch enabled, a warmed route serves with zero
+//!   feature-store reads and the staged bytes land in the monotonic
+//!   `LoadTotals`.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -86,6 +91,7 @@ fn start_host_coordinator(dir: &Path, name: &str, workers: usize) -> (Coordinato
             queue_depth: 128,
             batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
             plan_cache_capacity: 16,
+            prefetch_workers: 1,
         },
     );
     (coord, store)
@@ -223,6 +229,48 @@ fn invalidation_forces_one_reload() {
     assert_eq!(fstore.load_count(), 2, "invalidated route must reload exactly once");
     coord.infer(route, vec![3]).unwrap();
     assert_eq!(fstore.load_count(), 2, "and then stay warm again");
+    coord.shutdown();
+}
+
+/// The streaming-pipeline acceptance test: an explicitly prefetched
+/// route performs its one storage read on the prefetch pool, and serving
+/// it afterwards triggers **zero** feature-store reads — every batch is
+/// a plan-cache hit over the staged row-block handle, and the bytes the
+/// streamed forwards dequantize are charged to the store's monotonic
+/// totals.
+#[test]
+fn prefetched_route_serves_with_zero_feature_store_reads() {
+    let dir = synthetic_artifacts("prefetch", "tiny");
+    let (coord, store) = start_host_coordinator(&dir, "tiny", 2);
+    let fstore = store.feature_store("tiny").unwrap();
+
+    let route = key("tiny", Some(4), Precision::U8Device);
+    assert!(coord.prefetch_route(&route), "cold route must schedule a build");
+    assert!(!coord.prefetch_route(&route), "second request coalesces");
+    coord.wait_prefetch_idle();
+    assert_eq!(fstore.load_count(), 1, "the prefetcher performed the one cold read");
+    let staged_before = fstore.totals().bytes_read;
+
+    for i in 0..4 {
+        let resp = coord.infer(route.clone(), vec![i]).unwrap();
+        assert!(resp.error.is_none(), "round {i}: {:?}", resp.error);
+    }
+    assert_eq!(fstore.load_count(), 1, "warm route + prefetch = zero feature-store reads");
+
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.plan_misses, 1, "the only build ran on the prefetch pool");
+    assert_eq!(snap.plan_hits, 4, "every batch served from the cached plan");
+    let stats = coord.prefetch_stats();
+    assert_eq!(stats.scheduled, 1);
+    assert_eq!(stats.completed, 1);
+    assert!(stats.coalesced >= 5, "explicit re-prefetch + submit-path peeks coalesce");
+
+    // If this platform streams (mmap available), each forward dequantized
+    // the whole INT8 feature payload lazily — visible in the totals.
+    let streamed = fstore.totals().bytes_read - staged_before;
+    if fstore.source() == aes_spmm::quant::LoadSource::Mmap {
+        assert_eq!(streamed, (4 * N * FEATS) as u64, "4 forwards × n×f quantized bytes");
+    }
     coord.shutdown();
 }
 
