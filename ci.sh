@@ -1,14 +1,79 @@
 #!/usr/bin/env bash
-# CI gate: format, lint, build, test — and optionally refresh the SpMM
-# perf baseline (./ci.sh --bench).
+# CI gate: format, lint, build, test — and optionally refresh the perf
+# baselines (./ci.sh --bench) and diff them against the committed ones.
+#
+# The workspace has no registry dependencies (everything is vendored
+# under /vendor as path deps), so cargo runs fully offline; CI exports
+# CARGO_NET_OFFLINE=true and network-restricted runners pass.
+#
+# Modes:
+#   ./ci.sh               full gate (fmt, clippy, build, test, docs)
+#   ./ci.sh --bench       full gate, then benches + bench_diff regression gate
+#   ./ci.sh --bench-only  benches + bench_diff only (CI's bench job, which
+#                         already ran the gate via its `needs:` dependency)
+#
+# Env knobs:
+#   SKIP_LINT=1   skip the fmt + clippy steps (e.g. a toolchain without
+#                 the components; the error below tells you how to add them)
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "== cargo fmt --check =="
-cargo fmt --all -- --check
+export CARGO_NET_OFFLINE="${CARGO_NET_OFFLINE:-true}"
 
-echo "== cargo clippy (deny warnings) =="
-cargo clippy --workspace --all-targets -- -D warnings
+die() {
+    echo "ci.sh: error: $1" >&2
+    shift
+    for line in "$@"; do echo "  $line" >&2; done
+    exit 1
+}
+
+command -v cargo >/dev/null 2>&1 || die \
+    "cargo is not on PATH." \
+    "fix: install rust via https://rustup.rs (or your distro's rustup package)," \
+    "then re-run ./ci.sh"
+
+run_benches() {
+    # Bench binaries run with cwd = the aes-spmm package dir (rust/), so
+    # pass absolute output paths to land the JSONs at the repo root where
+    # bench_diff, the committed baselines, and the CI artifact upload
+    # expect them.
+    echo "== perf baseline: BENCH_spmm.json =="
+    cargo bench --bench spmm_kernels -- --json "$PWD/BENCH_spmm.json"
+    echo "== perf baseline: BENCH_loading.json =="
+    cargo bench --bench loading -- --json "$PWD/BENCH_loading.json"
+    echo "== bench regression gate (>15% median slowdown fails) =="
+    cargo run --release -p aes-spmm --bin bench_diff -- \
+        BENCH_spmm.json benchmarks/baseline/BENCH_spmm.json --threshold 0.15
+    cargo run --release -p aes-spmm --bin bench_diff -- \
+        BENCH_loading.json benchmarks/baseline/BENCH_loading.json --threshold 0.15
+}
+
+if [[ "${1:-}" == "--bench-only" ]]; then
+    run_benches
+    echo "CI OK (bench only)"
+    exit 0
+fi
+
+if [[ "${SKIP_LINT:-0}" != "1" ]]; then
+    # A bare `set -e` death inside `cargo fmt`/`cargo clippy` on machines
+    # without the components is useless — probe first and explain.
+    cargo fmt --version >/dev/null 2>&1 || die \
+        "the rustfmt component is missing for $(rustc --version 2>/dev/null || echo 'this toolchain')." \
+        "fix: rustup component add rustfmt" \
+        "or:  SKIP_LINT=1 ./ci.sh   (build + test only)"
+    cargo clippy --version >/dev/null 2>&1 || die \
+        "the clippy component is missing for $(rustc --version 2>/dev/null || echo 'this toolchain')." \
+        "fix: rustup component add clippy" \
+        "or:  SKIP_LINT=1 ./ci.sh   (build + test only)"
+
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+
+    echo "== cargo clippy (deny warnings) =="
+    cargo clippy --workspace --all-targets -- -D warnings
+else
+    echo "== SKIP_LINT=1: skipping fmt + clippy =="
+fi
 
 echo "== cargo build --release =="
 cargo build --release
@@ -23,10 +88,7 @@ echo "== cargo doc (deny warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p aes-spmm
 
 if [[ "${1:-}" == "--bench" ]]; then
-    echo "== perf baseline: BENCH_spmm.json =="
-    cargo bench --bench spmm_kernels -- --json BENCH_spmm.json
-    echo "== perf baseline: BENCH_loading.json =="
-    cargo bench --bench loading -- --json BENCH_loading.json
+    run_benches
 fi
 
 echo "CI OK"

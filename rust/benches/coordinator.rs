@@ -106,6 +106,8 @@ fn plan_cache_vs_reload() {
             strategy: Strategy::Aes,
             host_ell: true,
             stream: false,
+            shard: None,
+            shard_cache: None,
         };
         prepare_plan(&fstore, Precision::F32, &spec, f, &env).expect("prepare plan")
     };

@@ -128,7 +128,12 @@ mod tests {
 
     #[test]
     fn measures_something_plausible() {
-        let b = Bencher { warmup_iters: 1, min_iters: 5, max_iters: 20, budget: Duration::from_millis(200) };
+        let b = Bencher {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 20,
+            budget: Duration::from_millis(200),
+        };
         let r = b.run("sleep", || std::thread::sleep(Duration::from_millis(2)));
         assert!(r.median >= Duration::from_millis(2));
         assert!(r.iters >= 5);
@@ -137,7 +142,12 @@ mod tests {
 
     #[test]
     fn respects_budget() {
-        let b = Bencher { warmup_iters: 0, min_iters: 2, max_iters: 100_000, budget: Duration::from_millis(50) };
+        let b = Bencher {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 100_000,
+            budget: Duration::from_millis(50),
+        };
         let t0 = Instant::now();
         let r = b.run("spin", || (0..1000).sum::<u64>());
         assert!(t0.elapsed() < Duration::from_secs(2));

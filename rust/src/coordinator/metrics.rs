@@ -89,6 +89,9 @@ pub struct Metrics {
     /// Route plan builds, wherever they ran: inline on a batch worker or
     /// ahead of time on the prefetch pool.
     pub plan_misses: AtomicU64,
+    /// Batches executed through a sharded plan (per-shard sampling +
+    /// dispatch, row-concatenated merge).
+    pub sharded_batches: AtomicU64,
     pub latency: Histogram,
     pub queue_wait: Histogram,
     pub exec_time: Histogram,
@@ -107,6 +110,7 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub plan_hits: u64,
     pub plan_misses: u64,
+    pub sharded_batches: u64,
     pub latency_p50: Duration,
     pub latency_p99: Duration,
     pub latency_mean: Duration,
@@ -143,6 +147,7 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            sharded_batches: self.sharded_batches.load(Ordering::Relaxed),
             latency_p50: self.latency.percentile(50.0),
             latency_p99: self.latency.percentile(99.0),
             latency_mean: self.latency.mean(),

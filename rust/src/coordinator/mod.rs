@@ -14,7 +14,7 @@
 //! |-----------|--------------------------------------------------------|
 //! | `request` | [`RouteKey`] / request + reply types, submit errors    |
 //! | `batcher` | dynamic batching: group by route, flush on size/delay  |
-//! | `server`  | [`Coordinator`]: intake queue, worker pool, plan cache + prefetcher wiring, route execution |
+//! | `server`  | [`Coordinator`]: intake queue, worker pool, plan cache + prefetcher + shard-unit cache wiring, route execution |
 //! | `store`   | [`ModelStore`]: immutable datasets / weights / feature stores shared lock-free via `Arc` |
 //! | `metrics` | lock-cheap counters + log-bucketed latency histograms  |
 //!
@@ -47,6 +47,11 @@
 //!   that build behind itself.
 //! * `ModelStore` is immutable after startup; republishing data goes
 //!   through plan-cache invalidation, not store mutation.
+//! * With sharding enabled ([`CoordinatorConfig::sharding`]), host plans
+//!   carry a `ShardedPlan`; prepared shard units live in a cache of
+//!   their own keyed by (dataset, width, strategy, row range) — shared
+//!   across precisions, so a plan build re-samples only cold shards.
+//!   Invalidating a route drops its dataset's units too.
 
 mod batcher;
 mod metrics;
@@ -57,5 +62,5 @@ mod store;
 pub use batcher::{run_batcher, run_batcher_with, Batch, BatcherConfig};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use request::{InferRequest, InferResponse, Prediction, RouteKey, SubmitError};
-pub use server::{oneshot_accuracy, Coordinator, CoordinatorConfig};
+pub use server::{oneshot_accuracy, Coordinator, CoordinatorConfig, ShardCacheStats};
 pub use store::ModelStore;

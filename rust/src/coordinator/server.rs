@@ -27,7 +27,9 @@ use anyhow::Result;
 
 use crate::exec::{
     prepare_plan, ExecEnv, ExecPlan, PlanCache, PlanSpec, Pool, PrefetchStats, Prefetcher,
+    ShardKey, ShardUnit,
 };
+use crate::graph::ShardSpec;
 use crate::quant::{Features, Precision};
 use crate::runtime::{accuracy, run_forward, Backend, Engine};
 use crate::sampling::Strategy;
@@ -52,6 +54,16 @@ pub struct CoordinatorConfig {
     /// Threads staging cold route plans ahead of execution (0 disables
     /// prefetch; cold builds then run inline on the batch workers).
     pub prefetch_workers: usize,
+    /// Row-shard host aggregation plans: partition each route's operand
+    /// into working-set-budgeted shards with per-shard sampling and
+    /// per-shard kernel dispatch (`--shards` / `--shard-budget`).
+    /// `None` keeps single-working-set plans. Ignored by device
+    /// backends, which aggregate in the compiled artifact.
+    pub sharding: Option<ShardSpec>,
+    /// Prepared shard units kept warm across routes and precisions
+    /// (LRU; units are pure graph structure, so one entry serves every
+    /// route over the same operand).
+    pub shard_cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -62,6 +74,8 @@ impl Default for CoordinatorConfig {
             queue_depth: 1024,
             plan_cache_capacity: 64,
             prefetch_workers: 1,
+            sharding: None,
+            shard_cache_capacity: 256,
         }
     }
 }
@@ -101,6 +115,20 @@ impl PlanKey {
     }
 }
 
+/// Point-in-time shard-unit cache counters (see
+/// [`Coordinator::shard_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardCacheStats {
+    /// Prepared shard units currently resident.
+    pub resident: usize,
+    /// Unit lookups served warm (no re-partition, no re-sampling).
+    pub hits: u64,
+    /// Unit lookups that had to build.
+    pub misses: u64,
+    /// Units dropped by LRU overflow.
+    pub evictions: u64,
+}
+
 /// Everything a pool worker needs to execute a batch.
 struct WorkerCtx {
     backend: Backend,
@@ -109,6 +137,11 @@ struct WorkerCtx {
     plans: Arc<PlanCache<PlanKey, ExecPlan>>,
     /// Stages cold plans on its own pool; `None` when disabled.
     prefetch: Option<Prefetcher<PlanKey, ExecPlan>>,
+    /// Sharding policy for host aggregation plans (`None` = unsharded).
+    sharding: Option<ShardSpec>,
+    /// Prepared shard units, shared across routes/precisions — a plan
+    /// build (inline or prefetched) samples only the cold shards.
+    shard_units: Arc<PlanCache<ShardKey, ShardUnit>>,
     env: ExecEnv,
 }
 
@@ -125,12 +158,20 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start over the PJRT engine (production path). Alias for
     /// [`Coordinator::start_with`] with [`Backend::Pjrt`].
-    pub fn start(engine: Arc<Engine>, store: Arc<ModelStore>, cfg: CoordinatorConfig) -> Coordinator {
+    pub fn start(
+        engine: Arc<Engine>,
+        store: Arc<ModelStore>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
         Coordinator::start_with(Backend::Pjrt(engine), store, cfg)
     }
 
     /// Start the batcher + persistent worker pool over any [`Backend`].
-    pub fn start_with(backend: Backend, store: Arc<ModelStore>, cfg: CoordinatorConfig) -> Coordinator {
+    pub fn start_with(
+        backend: Backend,
+        store: Arc<ModelStore>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
         let plans = Arc::new(PlanCache::new(cfg.plan_cache_capacity));
         let prefetch = (cfg.prefetch_workers > 0)
             .then(|| Prefetcher::new(plans.clone(), Arc::new(Pool::new(cfg.prefetch_workers))));
@@ -140,6 +181,8 @@ impl Coordinator {
             metrics: Arc::new(Metrics::new()),
             plans,
             prefetch,
+            sharding: cfg.sharding,
+            shard_units: Arc::new(PlanCache::new(cfg.shard_cache_capacity)),
             env: ExecEnv::detect(),
         });
         let pool = Arc::new(Pool::new(cfg.workers.max(1)));
@@ -232,6 +275,19 @@ impl Coordinator {
         self.ctx.plans.len()
     }
 
+    /// Shard-unit cache counters (all zeros until a sharded route
+    /// builds). Units are shared across routes and precisions, so
+    /// `hits` counts shards a plan build did *not* have to re-sample.
+    pub fn shard_stats(&self) -> ShardCacheStats {
+        let units = &self.ctx.shard_units;
+        ShardCacheStats {
+            resident: units.len(),
+            hits: units.hits(),
+            misses: units.misses(),
+            evictions: units.evictions(),
+        }
+    }
+
     /// Warm a route ahead of traffic: stage its plan (feature load +
     /// sampling + dispatch) on the prefetch pool without submitting a
     /// request. Returns `true` when a build was scheduled, `false` when
@@ -263,17 +319,22 @@ impl Coordinator {
         true
     }
 
-    /// Drop one route's cached plan (dataset republished / features
-    /// rotated); the next batch on it reloads from storage.
+    /// Drop every cached plan and shard unit of the route's **dataset**
+    /// (republished data / rotated features); the next batch on any of
+    /// its routes reloads from storage. Invalidation is per-dataset, not
+    /// per-route, because sibling routes (other precisions, widths,
+    /// models) share the same underlying graph and feature file —
+    /// dropping only one would leave the others serving stale data.
+    /// Returns whether any plan was resident.
     pub fn invalidate_route(&self, key: &RouteKey) -> bool {
-        self.ctx
-            .plans
-            .invalidate(&PlanKey::for_route(key, self.ctx.backend.aggregates_on_host()))
+        self.ctx.shard_units.invalidate_matching(|k| k.tag == key.dataset);
+        self.ctx.plans.invalidate_matching(|k| k.dataset == key.dataset) > 0
     }
 
-    /// Drop every cached plan.
+    /// Drop every cached plan and shard unit.
     pub fn invalidate_all_routes(&self) {
         self.ctx.plans.clear();
+        self.ctx.shard_units.clear();
     }
 
     /// Drain the pipeline and join all threads.
@@ -378,6 +439,9 @@ fn build_plan(ctx: &WorkerCtx, key: &RouteKey) -> Result<ExecPlan> {
     let ds = ctx.store.dataset(&key.dataset)?;
     let fstore = ctx.store.feature_store(&key.dataset)?;
     let host_aggregation = ctx.backend.aggregates_on_host();
+    // Sharding is a host-aggregation concern; device artifacts aggregate
+    // in-kernel and keep the single-operand plan.
+    let shard = if host_aggregation { ctx.sharding } else { None };
     let spec = PlanSpec {
         csr: &ds.csr_gcn,
         width: if host_aggregation { key.width } else { None },
@@ -387,6 +451,10 @@ fn build_plan(ctx: &WorkerCtx, key: &RouteKey) -> Result<ExecPlan> {
         // can hold a zero-copy streamed handle; device artifacts need the
         // eagerly materialized tensor.
         stream: host_aggregation,
+        shard,
+        // Units are keyed by dataset + width + strategy + row range, so a
+        // build for one precision warms every sibling route's shards.
+        shard_cache: shard.map(|_| (&*ctx.shard_units, key.dataset.as_str())),
     };
     prepare_plan(&fstore, key.precision, &spec, ds.feats, &ctx.env)
 }
@@ -413,6 +481,9 @@ fn execute_route(
         Some(p) => p.fetch(&plan_key, || build_plan(ctx, key))?,
         None => ctx.plans.get_or_try_insert(&plan_key, || build_plan(ctx, key))?,
     };
+    if plan.sharded.is_some() {
+        ctx.metrics.sharded_batches.fetch_add(1, Ordering::Relaxed);
+    }
 
     let feat_tensor = match &plan.features {
         Features::Dense(t) => Some(t),

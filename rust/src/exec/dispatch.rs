@@ -128,6 +128,15 @@ pub const ROWCACHE_MIN_MEAN_NNZ: f64 = 16.0;
 /// blocks (FBLOCK in `spmm::csr`); below it the blocks never fill.
 pub const ROWCACHE_MIN_FEAT: usize = 8;
 
+/// Longest row the row-cache kernel is dispatched for. Rows within one
+/// tile accumulate in plain edge order — bitwise-identical to the naive
+/// kernel — while longer rows introduce per-tile partial sums. Keeping
+/// dispatch inside the tile makes **every** exact kernel per-row
+/// FP-order identical, so serial / parallel / sharded execution can mix
+/// kernel choices freely and still concatenate bit-for-bit (the sharded
+/// serving guarantee, `docs/sharding.md`).
+pub const ROWCACHE_MAX_ROW_NNZ: usize = crate::spmm::ROWCACHE_TILE;
+
 /// Flop count where chunked threading amortizes the pool fork-join
 /// (~tens of µs of multiply per chunk at CPU rates).
 pub const PAR_MIN_FLOPS: usize = 2_000_000;
@@ -155,7 +164,10 @@ pub fn select_kernel(
             let flops = 2usize.saturating_mul(profile.nnz).saturating_mul(feat_dim);
             if env.threads > 1 && flops >= PAR_MIN_FLOPS {
                 KernelKind::CsrNaivePar
-            } else if profile.mean_nnz >= ROWCACHE_MIN_MEAN_NNZ && feat_dim >= ROWCACHE_MIN_FEAT {
+            } else if profile.mean_nnz >= ROWCACHE_MIN_MEAN_NNZ
+                && feat_dim >= ROWCACHE_MIN_FEAT
+                && profile.max_nnz <= ROWCACHE_MAX_ROW_NNZ
+            {
                 KernelKind::CsrRowCache
             } else {
                 KernelKind::CsrNaive
@@ -168,7 +180,14 @@ pub fn select_kernel(
 ///
 /// Panics if `kind` is a sampled (ELL) kernel — the caller routed a CSR
 /// input to the wrong family.
-pub fn run_exact(kind: KernelKind, csr: &Csr, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
+pub fn run_exact(
+    kind: KernelKind,
+    csr: &Csr,
+    b: &[f32],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
     match kind {
         KernelKind::CsrNaive => crate::spmm::csr_naive(csr, b, f, out),
         KernelKind::CsrRowCache => crate::spmm::csr_rowcache(csr, b, f, out),
@@ -234,6 +253,16 @@ mod tests {
         assert_eq!(select_kernel(&profile(100, 5_000), 16, None, &multi), KernelKind::CsrRowCache);
         // Long rows but features below the register block → naive.
         assert_eq!(select_kernel(&profile(100, 5_000), 4, None, &multi), KernelKind::CsrNaive);
+        // Long rows + wide features but a row beyond the tile → naive:
+        // multi-tile rowcache changes per-row FP order, which would break
+        // the sharded/unsharded bitwise guarantee.
+        let over_tile = GraphProfile {
+            n_rows: 100,
+            nnz: 5_000,
+            mean_nnz: 50.0,
+            max_nnz: ROWCACHE_MAX_ROW_NNZ + 1,
+        };
+        assert_eq!(select_kernel(&over_tile, 16, None, &multi), KernelKind::CsrNaive);
         // Big total flops + threads → parallel.
         assert_eq!(
             select_kernel(&profile(100_000, 2_000_000), 64, None, &multi),

@@ -14,6 +14,7 @@
 //! | `dispatch`   | [`select_kernel`]: pick from the CPU SpMM zoo using graph statistics, feature dim, and the thread budget — the host-side analog of the paper's adaptive strategy table |
 //! | `pool`       | [`Pool`]: spawn-once workers, per-worker queues + work stealing; replaces per-call `std::thread::scope` and the old lock-contended coordinator loop |
 //! | `plan_cache` | [`PlanCache`] + [`ExecPlan`]: per-route staged features (zero-copy row-block handles on the streaming path), sampled ELL, kernel choice — behind an LRU with generation-fenced invalidation |
+//! | `sharded`    | [`ShardedPlan`] + [`ShardUnit`]: working-set-budgeted row shards with per-shard sampling + dispatch, executed as independent pool tasks and merged by row concatenation; units cached per [`ShardKey`] so warm routes rebuild only cold shards |
 //! | `prefetch`   | [`Prefetcher`]: build the next route's plan on a private pool so feature staging overlaps the current batch's SpMM |
 //!
 //! # Rules
@@ -32,11 +33,13 @@ mod dispatch;
 mod plan_cache;
 mod pool;
 mod prefetch;
+mod sharded;
 
 pub use dispatch::{
     run_ell, run_exact, select_kernel, spmm_ell, spmm_exact, warm_pool, ExecEnv, GraphProfile,
-    KernelKind, PAR_MIN_FLOPS, ROWCACHE_MIN_FEAT, ROWCACHE_MIN_MEAN_NNZ,
+    KernelKind, PAR_MIN_FLOPS, ROWCACHE_MAX_ROW_NNZ, ROWCACHE_MIN_FEAT, ROWCACHE_MIN_MEAN_NNZ,
 };
 pub use plan_cache::{prepare_plan, ExecPlan, PlanCache, PlanSpec};
 pub use pool::{global as global_pool, Pool};
 pub use prefetch::{PrefetchStats, PrefetchTicket, Prefetcher};
+pub use sharded::{ShardKey, ShardSampling, ShardUnit, ShardedPlan};

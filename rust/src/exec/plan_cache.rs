@@ -28,11 +28,12 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::graph::{Csr, Ell};
+use crate::graph::{Csr, Ell, ShardSpec};
 use crate::quant::{FeatureStore, Features, LoadStats, Precision};
 use crate::sampling::{sample_ell_par, Strategy};
 
 use super::dispatch::{select_kernel, ExecEnv, GraphProfile, KernelKind};
+use super::sharded::{ShardKey, ShardUnit, ShardedPlan};
 
 /// Everything per-route that the hot path should not rebuild per batch.
 #[derive(Clone, Debug)]
@@ -51,8 +52,14 @@ pub struct ExecPlan {
     /// decision).
     pub kernel: KernelKind,
     /// Sampled fixed-width plan (present when the route samples and the
-    /// backend aggregates on the host).
+    /// backend aggregates on the host, and sharding is off).
     pub ell: Option<Arc<Ell>>,
+    /// Sharded execution plan (host aggregation with sharding enabled):
+    /// per-shard sampled ELL + per-shard dispatch, executed as
+    /// independent pool tasks with a row-concatenation merge. When set,
+    /// `ell` is `None` and `profile`/`kernel` describe the unsharded
+    /// operand (observability only — execution dispatches per shard).
+    pub sharded: Option<Arc<ShardedPlan>>,
 }
 
 /// What to prepare for a route.
@@ -73,6 +80,15 @@ pub struct PlanSpec<'a> {
     /// backends keep the eager load (the artifact wants one owned
     /// tensor).
     pub stream: bool,
+    /// Row-shard host aggregation: partition the operand into
+    /// working-set-budgeted [`crate::graph::GraphShard`]s with per-shard
+    /// sampling and dispatch. `None` keeps the single-working-set path.
+    /// Only meaningful with `host_ell`-style host aggregation.
+    pub shard: Option<ShardSpec>,
+    /// Shard-unit cache plus the graph's identity tag: warm routes reuse
+    /// prepared units, and a build of a partially-warm route samples
+    /// only the cold shards. `None` builds units uncached.
+    pub shard_cache: Option<(&'a PlanCache<ShardKey, ShardUnit>, &'a str)>,
 }
 
 /// Build a route's plan: one instrumented feature load (or zero-copy
@@ -87,16 +103,27 @@ pub fn prepare_plan(
 ) -> Result<ExecPlan> {
     let (features, load_stats) =
         if spec.stream { fstore.stage(precision)? } else { fstore.load(precision)? };
-    let (profile, ell) = match (spec.host_ell, spec.width) {
-        (true, Some(width)) => {
+    let (profile, ell, sharded) = match (spec.host_ell, spec.shard, spec.width) {
+        (true, Some(shard_spec), _) => {
+            let plan = ShardedPlan::prepare(
+                spec.csr,
+                &shard_spec,
+                spec.width,
+                spec.strategy,
+                feat_dim,
+                spec.shard_cache,
+            );
+            (GraphProfile::of(spec.csr), None, Some(Arc::new(plan)))
+        }
+        (true, None, Some(width)) => {
             let mut ell = Ell::zeros(spec.csr.n_rows, spec.csr.n_cols, width);
             sample_ell_par(spec.csr, width, spec.strategy, &mut ell, env.threads);
-            (GraphProfile::of_ell(&ell), Some(Arc::new(ell)))
+            (GraphProfile::of_ell(&ell), Some(Arc::new(ell)), None)
         }
-        _ => (GraphProfile::of(spec.csr), None),
+        _ => (GraphProfile::of(spec.csr), None, None),
     };
     let kernel = select_kernel(&profile, feat_dim, spec.width, env);
-    Ok(ExecPlan { features, load_stats, profile, kernel, ell })
+    Ok(ExecPlan { features, load_stats, profile, kernel, ell, sharded })
 }
 
 struct Entry<V> {
@@ -182,7 +209,8 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
         // insert.
         let mut inner = self.inner.lock().unwrap();
         if inner.generation == generation {
-            Self::insert_locked(&mut inner, self.capacity, &self.evictions, key.clone(), value.clone());
+            let value = value.clone();
+            Self::insert_locked(&mut inner, self.capacity, &self.evictions, key.clone(), value);
         }
         drop(inner);
         Ok((value, false))
@@ -225,6 +253,17 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
         let mut inner = self.inner.lock().unwrap();
         inner.generation += 1;
         inner.map.remove(key).is_some()
+    }
+
+    /// Drop every key matching `pred` — e.g. all shard units of one
+    /// republished dataset — and fence out in-flight builds. Returns how
+    /// many entries were dropped.
+    pub fn invalidate_matching(&self, pred: impl Fn(&K) -> bool) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        inner.generation += 1;
+        let before = inner.map.len();
+        inner.map.retain(|k, _| !pred(k));
+        before - inner.map.len()
     }
 
     /// Drop everything and fence out in-flight builds.
@@ -375,6 +414,8 @@ mod tests {
             strategy: Strategy::Aes,
             host_ell: true,
             stream: false,
+            shard: None,
+            shard_cache: None,
         };
         let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
         assert!(matches!(plan.features, Features::Dense(_)));
@@ -396,6 +437,8 @@ mod tests {
             strategy: Strategy::Aes,
             host_ell: false,
             stream: false,
+            shard: None,
+            shard_cache: None,
         };
         let plan = prepare_plan(&store, Precision::U8Device, &spec, 8, &env).unwrap();
         assert!(plan.ell.is_none());
@@ -412,6 +455,8 @@ mod tests {
             strategy: Strategy::Aes,
             host_ell: true,
             stream: true,
+            shard: None,
+            shard_cache: None,
         };
         let plan = prepare_plan(&store, Precision::U8Device, &spec, 8, &env).unwrap();
         match &plan.features {
@@ -430,6 +475,57 @@ mod tests {
         // fp32 never streams — the fallback keeps the old contract.
         let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
         assert!(matches!(plan.features, Features::Dense(_)));
+    }
+
+    #[test]
+    fn invalidate_matching_drops_by_predicate_and_fences() {
+        let cache: PlanCache<(u32, u32), u32> = PlanCache::new(8);
+        for k in 0..6u32 {
+            cache.insert((k % 2, k), Arc::new(k));
+        }
+        assert_eq!(cache.invalidate_matching(|&(family, _)| family == 0), 3);
+        assert_eq!(cache.len(), 3);
+        assert!(cache.peek(&(0, 0)).is_none());
+        assert!(cache.peek(&(1, 1)).is_some());
+        // The generation bump fences in-flight builds like invalidate().
+        let (v, _) = cache
+            .get_or_try_insert(&(0, 0), || {
+                cache.invalidate_matching(|_| false); // bump, drop nothing
+                Ok::<_, std::io::Error>(9)
+            })
+            .unwrap();
+        assert_eq!(*v, 9);
+        assert!(cache.peek(&(0, 0)).is_none(), "straddling build must not land");
+    }
+
+    #[test]
+    fn sharded_spec_builds_a_sharded_plan() {
+        use crate::exec::{ShardKey, ShardUnit};
+        use crate::graph::ShardSpec;
+
+        let (_path, store, csr) = synthetic_store("sharded");
+        let env = ExecEnv::with_threads(2);
+        let units: PlanCache<ShardKey, ShardUnit> = PlanCache::new(32);
+        let spec = PlanSpec {
+            csr: &csr,
+            width: Some(4),
+            strategy: Strategy::Aes,
+            host_ell: true,
+            stream: false,
+            shard: Some(ShardSpec::by_count(3)),
+            shard_cache: Some((&units, "synth")),
+        };
+        let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
+        let sharded = plan.sharded.as_ref().expect("shard spec must shard the plan");
+        assert_eq!(sharded.shard_count(), 3);
+        assert_eq!(sharded.warm_units(), 0);
+        assert!(plan.ell.is_none(), "the sharded plan replaces the whole-graph ELL");
+        assert_eq!(units.len(), 3);
+
+        // A second precision over the same route: plan rebuilt, every
+        // shard unit warm — the shard-aware prefetch contract.
+        let plan = prepare_plan(&store, Precision::U8Device, &spec, 8, &env).unwrap();
+        assert_eq!(plan.sharded.unwrap().warm_units(), 3);
     }
 
     #[test]
@@ -453,8 +549,15 @@ mod tests {
         let env = ExecEnv::with_threads(1);
         let cache: PlanCache<&'static str, ExecPlan> = PlanCache::new(4);
         let build = |precision| {
-            let spec =
-                PlanSpec { csr: &csr, width: Some(4), strategy: Strategy::Aes, host_ell: true };
+            let spec = PlanSpec {
+                csr: &csr,
+                width: Some(4),
+                strategy: Strategy::Aes,
+                host_ell: true,
+                stream: false,
+                shard: None,
+                shard_cache: None,
+            };
             prepare_plan(&store, precision, &spec, 8, &env)
         };
         for round in 0..5 {

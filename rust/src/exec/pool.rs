@@ -81,7 +81,11 @@ struct Latch {
 
 impl Latch {
     fn new(count: usize) -> Latch {
-        Latch { remaining: Mutex::new(count), done: Condvar::new(), panicked: AtomicBool::new(false) }
+        Latch {
+            remaining: Mutex::new(count),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
     }
 
     fn count_down(&self, ok: bool) {

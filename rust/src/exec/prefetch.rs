@@ -20,6 +20,10 @@
 //! * the prefetcher **must not** share its pool with its consumers: a
 //!   worker blocking in `fetch` while its own pool owes it the build
 //!   would deadlock. The coordinator gives the prefetcher a private pool.
+//! * prefetch is shard-aware by composition: a sharded route's build
+//!   resolves each [`super::ShardUnit`] through the shared shard-unit
+//!   cache, so prefetching a partially-warm route stages features and
+//!   samples **only the cold shards** — warm units are never rebuilt.
 
 use std::collections::HashSet;
 use std::hash::Hash;

@@ -1,0 +1,432 @@
+//! Sharded execution plans — run one SpMM as independent per-shard
+//! tasks on the persistent pool, with per-shard adaptive sampling and
+//! per-shard kernel dispatch.
+//!
+//! The plan cache made routes cheap to *re*-execute; this makes a single
+//! execution scale past one working set. A [`ShardedPlan`] holds one
+//! prepared [`ShardUnit`] per [`crate::graph::GraphShard`]: the shard's
+//! CSR slice, its sampled ELL at a **shard-local** tile width
+//! ([`crate::sampling::shard_width`]), and the kernel the dispatcher
+//! picked from the *shard's* statistics — so a skewed shard can run the
+//! sampled ELL kernel while a uniform neighbor keeps every edge in a
+//! shrunken exhaustive tile, and an exact route's long-row shard can
+//! take the row-cache kernel while its short-row shards stay naive.
+//!
+//! Execution fans the units out as independent tasks on the global pool
+//! and merges by row concatenation: each unit owns a disjoint row slice
+//! of the output, so the merge is the `split_at_mut` — no combination
+//! arithmetic, and per-row FP order identical to the unsharded kernels
+//! (see `docs/sharding.md` for the exactness argument).
+//!
+//! Units are cached in a [`PlanCache<ShardKey, ShardUnit>`] shared
+//! across routes: units depend only on (graph, width, strategy, row
+//! range) — not on precision or feature representation — so a second
+//! route over the same graph finds every unit warm, and a prefetch of a
+//! partially-warm route builds **only the cold shards**.
+
+use std::convert::Infallible;
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::graph::{Csr, Ell, GraphShard, ShardPlan, ShardSpec};
+use crate::sampling::{sample_ell, shard_width, Strategy};
+
+use super::dispatch::{run_ell, run_exact, select_kernel, ExecEnv, GraphProfile, KernelKind};
+use super::plan_cache::PlanCache;
+use super::pool;
+
+/// Cache key for one prepared [`ShardUnit`]. Deliberately excludes
+/// precision and feature state: units are pure graph structure, shared
+/// by every route over the same operand.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ShardKey {
+    /// Graph identity (the coordinator uses the dataset name).
+    pub tag: String,
+    /// The route's global sampling width (`None` = exact aggregation).
+    pub width: Option<usize>,
+    /// Sampling strategy; normalized to `None` for exact units, which
+    /// are strategy-independent.
+    pub strategy: Option<Strategy>,
+    /// Global row range `[start, end)` the unit covers.
+    pub rows: (usize, usize),
+}
+
+impl ShardKey {
+    /// Normalized constructor (drops the strategy for exact units).
+    pub fn new(
+        tag: &str,
+        width: Option<usize>,
+        strategy: Strategy,
+        rows: &Range<usize>,
+    ) -> ShardKey {
+        ShardKey {
+            tag: tag.to_string(),
+            width,
+            strategy: width.map(|_| strategy),
+            rows: (rows.start, rows.end),
+        }
+    }
+}
+
+/// How a shard's edges are treated — the per-shard sampling decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardSampling {
+    /// Exact aggregation (the route has no sampling width).
+    Exact,
+    /// Every row fits the global tile: sampling keeps all edges, and the
+    /// tile shrank to the shard-local `width` (≤ the global W).
+    Exhaustive {
+        /// Shard-local ELL width.
+        width: usize,
+    },
+    /// Rows overflow the tile: the route's strategy decides which edges
+    /// survive (paper Table 1 + Eq. 3), at the full global width.
+    Sampled {
+        /// Global ELL width (unshrunken — sampled rows must match the
+        /// unsharded plan bit-for-bit).
+        width: usize,
+        /// The route's edge-sampling strategy.
+        strategy: Strategy,
+    },
+}
+
+impl ShardSampling {
+    /// The unit's ELL width (`None` for exact units).
+    pub fn width(&self) -> Option<usize> {
+        match self {
+            ShardSampling::Exact => None,
+            ShardSampling::Exhaustive { width } | ShardSampling::Sampled { width, .. } => {
+                Some(*width)
+            }
+        }
+    }
+
+    /// Stable label for logs and metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardSampling::Exact => "exact",
+            ShardSampling::Exhaustive { .. } => "exhaustive",
+            ShardSampling::Sampled { .. } => "sampled",
+        }
+    }
+}
+
+/// One shard, fully prepared for execution.
+#[derive(Clone, Debug)]
+pub struct ShardUnit {
+    /// Global row range this unit computes.
+    pub rows: Range<usize>,
+    /// The shard's rows as a standalone CSR (global columns).
+    pub csr: Csr,
+    /// Sampled fixed-width plan (`None` for exact units).
+    pub ell: Option<Ell>,
+    /// The per-shard sampling decision.
+    pub sampling: ShardSampling,
+    /// Statistics of the unit's aggregation operand (the ELL when
+    /// sampled, else the CSR slice) — per-layer dispatch reads this.
+    pub profile: GraphProfile,
+    /// Kernel dispatched from the shard's profile at the plan's input
+    /// feature dim (observability; execution re-selects per layer, an
+    /// O(1) decision). Always a serial kernel — shards *are* the
+    /// parallelism.
+    pub kernel: KernelKind,
+}
+
+/// Build one unit: per-shard tile width, per-shard sampling, per-shard
+/// dispatch.
+fn build_unit(
+    shard: GraphShard,
+    width: Option<usize>,
+    strategy: Strategy,
+    feat_dim: usize,
+) -> ShardUnit {
+    let serial = ExecEnv::with_threads(1);
+    let (ell, sampling) = match width {
+        None => (None, ShardSampling::Exact),
+        Some(w) => {
+            let max_deg = shard.csr.max_degree();
+            let local = shard_width(w, max_deg);
+            let sampling = if max_deg <= local {
+                ShardSampling::Exhaustive { width: local }
+            } else {
+                ShardSampling::Sampled { width: local, strategy }
+            };
+            (Some(sample_ell(&shard.csr, local, strategy)), sampling)
+        }
+    };
+    let profile = match &ell {
+        Some(e) => GraphProfile::of_ell(e),
+        None => GraphProfile::of(&shard.csr),
+    };
+    let kernel = select_kernel(&profile, feat_dim, sampling.width(), &serial);
+    ShardUnit { rows: shard.rows, csr: shard.csr, ell, sampling, profile, kernel }
+}
+
+/// Resolve one shard's unit: through the shared cache when one is
+/// given (warm units skip re-sampling), else built directly. Returns
+/// the unit and whether it came warm.
+fn resolve_unit(
+    shard: GraphShard,
+    width: Option<usize>,
+    strategy: Strategy,
+    feat_dim: usize,
+    cache: Option<(&PlanCache<ShardKey, ShardUnit>, &str)>,
+) -> (Arc<ShardUnit>, bool) {
+    match cache {
+        Some((units, tag)) => {
+            let key = ShardKey::new(tag, width, strategy, &shard.rows);
+            units
+                .get_or_try_insert(&key, || {
+                    Ok::<_, Infallible>(build_unit(shard, width, strategy, feat_dim))
+                })
+                .unwrap()
+        }
+        None => (Arc::new(build_unit(shard, width, strategy, feat_dim)), false),
+    }
+}
+
+/// A route's sharded execution plan: prepared units covering the whole
+/// graph, in row order.
+#[derive(Debug)]
+pub struct ShardedPlan {
+    n_rows: usize,
+    n_cols: usize,
+    units: Vec<Arc<ShardUnit>>,
+    warm_units: usize,
+}
+
+impl ShardedPlan {
+    /// Partition `csr` per `spec` and prepare every unit (sampling +
+    /// dispatch), fanning unit builds out on the global pool.
+    ///
+    /// With a `cache`, each unit goes through
+    /// [`PlanCache::get_or_try_insert`] keyed by [`ShardKey`]: warm
+    /// units are reused without re-sampling, so only cold shards pay a
+    /// build — the shard-aware prefetch contract. The `&str` is the
+    /// graph identity tag (dataset name).
+    pub fn prepare(
+        csr: &Csr,
+        spec: &ShardSpec,
+        width: Option<usize>,
+        strategy: Strategy,
+        feat_dim: usize,
+        cache: Option<(&PlanCache<ShardKey, ShardUnit>, &str)>,
+    ) -> ShardedPlan {
+        let plan = ShardPlan::partition(csr, spec);
+        let (n_rows, n_cols) = (plan.n_rows(), plan.n_cols());
+        let shards = plan.into_shards();
+        let mut slots: Vec<Option<(Arc<ShardUnit>, bool)>> =
+            (0..shards.len()).map(|_| None).collect();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .zip(shards)
+            .map(|(slot, shard)| {
+                Box::new(move || {
+                    *slot = Some(resolve_unit(shard, width, strategy, feat_dim, cache));
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::global().run(tasks);
+
+        let mut units = Vec::with_capacity(slots.len());
+        let mut warm_units = 0usize;
+        for slot in slots {
+            let (unit, hit) = slot.expect("every shard build task ran");
+            warm_units += hit as usize;
+            units.push(unit);
+        }
+        ShardedPlan { n_rows, n_cols, units, warm_units }
+    }
+
+    /// Shards in this plan (≥ 1).
+    pub fn shard_count(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Units that came warm from the shard cache when this plan was
+    /// assembled (`shard_count - warm_units` were built cold).
+    pub fn warm_units(&self) -> usize {
+        self.warm_units
+    }
+
+    /// The prepared units, in row order.
+    pub fn units(&self) -> &[Arc<ShardUnit>] {
+        &self.units
+    }
+
+    /// Rows of the full graph (the concatenated output height).
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Global row bounds of each unit — the dense layers chunk their
+    /// multiplies along the same cuts (`matmul_sharded`).
+    pub fn bounds(&self) -> Vec<Range<usize>> {
+        self.units.iter().map(|u| u.rows.clone()).collect()
+    }
+
+    /// Execute one aggregation over the plan: every unit runs as an
+    /// independent task on the global pool, writing its own disjoint row
+    /// slice of `out` (the row-concatenation merge). Per-unit kernels
+    /// are re-selected from the cached profiles for this layer's
+    /// `f`, restricted to the serial families — the shards are the
+    /// parallelism. A single-unit plan runs inline with the caller's
+    /// full thread budget instead.
+    ///
+    /// Must not be called from a task already on the global pool (the
+    /// same layering rule as [`crate::exec::Pool::run`]).
+    pub fn run(&self, b: &[f32], f: usize, out: &mut [f32], env: &ExecEnv) {
+        assert_eq!(b.len(), self.n_cols * f);
+        assert_eq!(out.len(), self.n_rows * f);
+        if let [unit] = self.units.as_slice() {
+            // The shard is the whole graph — use the thread budget.
+            let kind = select_kernel(&unit.profile, f, unit.sampling.width(), env);
+            match &unit.ell {
+                Some(e) => run_ell(kind, e, b, f, out, env.threads),
+                None => run_exact(kind, &unit.csr, b, f, out, env.threads),
+            }
+            return;
+        }
+        let serial = ExecEnv::with_threads(1);
+        let mut rest = out;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(self.units.len());
+        for unit in &self.units {
+            let (chunk, tail) = rest.split_at_mut(unit.rows.len() * f);
+            rest = tail;
+            tasks.push(Box::new(move || {
+                let kind = select_kernel(&unit.profile, f, unit.sampling.width(), &serial);
+                match &unit.ell {
+                    Some(e) => run_ell(kind, e, b, f, chunk, 1),
+                    None => run_exact(kind, &unit.csr, b, f, chunk, 1),
+                }
+            }));
+        }
+        pool::global().run(tasks);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Pcg32;
+    use crate::spmm::testutil::random_graph_and_features;
+
+    #[test]
+    fn sharded_exact_run_is_bitwise_equal_to_unsharded() {
+        // Dispatch never picks a kernel whose per-row FP order diverges
+        // (rowcache is gated on ROWCACHE_MAX_ROW_NNZ), so the
+        // row-concatenated merge is bitwise — see docs/sharding.md.
+        let (g, b) = random_graph_and_features(250, 25.0, 16, 5);
+        let env = ExecEnv::with_threads(4);
+        let mut want = vec![0.0f32; g.n_rows * 16];
+        crate::spmm::csr_naive(&g, &b, 16, &mut want);
+        for k in [1usize, 2, 5, 9] {
+            let plan = ShardedPlan::prepare(
+                &g,
+                &ShardSpec::by_count(k),
+                None,
+                Strategy::Aes,
+                16,
+                None,
+            );
+            assert_eq!(plan.shard_count(), k.min(g.n_rows));
+            let mut got = vec![7.0f32; g.n_rows * 16];
+            plan.run(&b, 16, &mut got, &env);
+            assert_eq!(want, got, "exact sharded run must concatenate bit-for-bit (k={k})");
+        }
+    }
+
+    #[test]
+    fn sharded_sampled_run_is_bitwise_equal_to_unsharded() {
+        let (g, b) = random_graph_and_features(350, 50.0, 8, 6);
+        let env = ExecEnv::with_threads(4);
+        for w in [8usize, 16] {
+            for strat in Strategy::ALL {
+                let ell = sample_ell(&g, w, strat);
+                let mut want = vec![0.0f32; g.n_rows * 8];
+                crate::spmm::ell_spmm(&ell, &b, 8, &mut want);
+                let plan =
+                    ShardedPlan::prepare(&g, &ShardSpec::by_count(4), Some(w), strat, 8, None);
+                let mut got = vec![0.0f32; g.n_rows * 8];
+                plan.run(&b, 8, &mut got, &env);
+                assert_eq!(want, got, "sampled sharded run (w={w}, {strat:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_and_uniform_shards_pick_different_modes() {
+        // Head: 60 uniform rows × deg 4 (240 edges). Tail: 4 rows ×
+        // deg 60 (240 edges) — equal masses so the 2-way quantile cut
+        // lands exactly on the uniform/skewed boundary.
+        let mut triples = Vec::new();
+        for r in 0..60i32 {
+            for c in 0..4 {
+                triples.push((r, c, 1.0));
+            }
+        }
+        for r in 60..64i32 {
+            for c in 0..60 {
+                triples.push((r, (c * 3) % 200, 1.0));
+            }
+        }
+        let g = crate::graph::coo_to_csr(64, 200, triples).unwrap();
+        let plan =
+            ShardedPlan::prepare(&g, &ShardSpec::by_count(2), Some(16), Strategy::Aes, 64, None);
+        assert_eq!(plan.shard_count(), 2);
+        let head = &plan.units()[0];
+        let tail = plan.units().last().unwrap();
+        // Uniform shard: exhaustive sampling in a shrunken tile.
+        assert_eq!(head.sampling, ShardSampling::Exhaustive { width: 4 });
+        // Skewed shard: the route's strategy at the full width.
+        assert_eq!(
+            tail.sampling,
+            ShardSampling::Sampled { width: 16, strategy: Strategy::Aes }
+        );
+        assert!(head.kernel.is_sampled() && tail.kernel.is_sampled());
+        assert!(!head.kernel.is_parallel() && !tail.kernel.is_parallel());
+        assert_ne!(head.profile.max_nnz, tail.profile.max_nnz);
+    }
+
+    #[test]
+    fn shard_cache_reuses_units_across_routes_and_builds_only_cold_shards() {
+        let mut rng = Pcg32::new(12);
+        let g = gen::chung_lu(300, 20.0, 1.9, &mut rng);
+        let cache: PlanCache<ShardKey, ShardUnit> = PlanCache::new(64);
+        let spec = ShardSpec::by_count(4);
+
+        let cold =
+            ShardedPlan::prepare(&g, &spec, Some(8), Strategy::Aes, 16, Some((&cache, "ds")));
+        assert_eq!(cold.warm_units(), 0);
+        assert_eq!(cache.len(), 4);
+
+        // Same route again (e.g. another precision): every unit warm.
+        let warm =
+            ShardedPlan::prepare(&g, &spec, Some(8), Strategy::Aes, 16, Some((&cache, "ds")));
+        assert_eq!(warm.warm_units(), 4, "a warm route must not rebuild any shard");
+
+        // A different width is a different unit family: all cold again,
+        // but the old units stay resident.
+        let other =
+            ShardedPlan::prepare(&g, &spec, Some(16), Strategy::Aes, 16, Some((&cache, "ds")));
+        assert_eq!(other.warm_units(), 0);
+        assert_eq!(cache.len(), 8);
+
+        // Exact units ignore the strategy (normalized key).
+        let a = ShardKey::new("ds", None, Strategy::Aes, &(0..10));
+        let b = ShardKey::new("ds", None, Strategy::Sfs, &(0..10));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_graph_plan_runs_without_panic() {
+        let g = Csr::new(0, 3, vec![0], vec![], vec![]).unwrap();
+        let plan = ShardedPlan::prepare(&g, &ShardSpec::default(), Some(4), Strategy::Aes, 4, None);
+        assert_eq!(plan.shard_count(), 1);
+        let b = vec![1.0f32; 3 * 4];
+        let mut out = Vec::new();
+        plan.run(&b, 4, &mut out, &ExecEnv::with_threads(2));
+        assert!(out.is_empty());
+    }
+}

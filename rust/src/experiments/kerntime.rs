@@ -22,7 +22,12 @@ fn bencher(quick: bool) -> Bencher {
     if quick {
         Bencher { warmup_iters: 1, min_iters: 3, max_iters: 10, budget: Duration::from_millis(300) }
     } else {
-        Bencher { warmup_iters: 2, min_iters: 5, max_iters: 60, budget: Duration::from_millis(1500) }
+        Bencher {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 60,
+            budget: Duration::from_millis(1500),
+        }
     }
 }
 

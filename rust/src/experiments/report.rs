@@ -36,7 +36,8 @@ impl Table {
         let mut s = String::new();
         let _ = writeln!(s, "### {} — {}\n", self.id, self.caption);
         let _ = writeln!(s, "| {} |", self.columns.join(" | "));
-        let _ = writeln!(s, "|{}|", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        let dashes = self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|");
+        let _ = writeln!(s, "|{dashes}|");
         for row in &self.rows {
             let _ = writeln!(s, "| {} |", row.join(" | "));
         }

@@ -15,7 +15,15 @@ pub fn run_tab1(ctx: &ExpContext) -> Result<Table> {
     let mut table = Table::new(
         "tab1",
         "Table 1 census: fraction of rows per AES regime (R = row_nnz / W)",
-        &["dataset", "W", "R<=1 (all)", "R<=2 (N=W/4)", "R<=36 (N=W/8)", "R<=54 (N=W/16)", "R>54 (N=W/32)"],
+        &[
+            "dataset",
+            "W",
+            "R<=1 (all)",
+            "R<=2 (N=W/4)",
+            "R<=36 (N=W/8)",
+            "R<=54 (N=W/16)",
+            "R>54 (N=W/32)",
+        ],
     );
     for ds_name in ctx.engine.manifest().dataset_names() {
         let ds = Dataset::load(&ctx.engine.manifest().dir, &ds_name)?;

@@ -213,7 +213,8 @@ mod tests {
     #[test]
     fn dc_sbm_homophily_measurable() {
         let mut rng = Pcg32::new(4);
-        let cfg = DcSbmConfig { n: 1000, avg_deg: 20.0, gamma: 0.0, communities: 5, homophily: 0.9 };
+        let cfg =
+            DcSbmConfig { n: 1000, avg_deg: 20.0, gamma: 0.0, communities: 5, homophily: 0.9 };
         let (g, comm) = dc_sbm(&cfg, &mut rng);
         g.validate().unwrap();
         let mut intra = 0usize;

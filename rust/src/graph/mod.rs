@@ -1,11 +1,15 @@
 //! Graph structures: CSR (the kernel input format, §2.2 of the paper),
 //! ELL (the sampled fixed-width form that models the shared-memory tile),
-//! COO↔CSR conversion, validation, and degree statistics.
+//! COO↔CSR conversion, validation, degree statistics, and the
+//! working-set-budgeted row shard partitioner (the host-level analog of
+//! the shared-memory width — see `docs/sharding.md`).
 
 mod csr;
 mod ell;
+mod shard;
 mod stats;
 
 pub use csr::{coo_to_csr, Csr};
 pub use ell::Ell;
-pub use stats::{degree_cdf, DegreeStats};
+pub use shard::{working_set_bytes, GraphShard, ShardPlan, ShardSpec};
+pub use stats::{balanced_cuts, degree_cdf, degree_prefix, DegreeStats};

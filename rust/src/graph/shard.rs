@@ -1,0 +1,360 @@
+//! Row-partitioned graph shards — the paper's shared-memory-width
+//! argument applied one level up. AES-SpMM shapes each *row's* edge set
+//! to fit a fixed fast-memory tile (W); a serving host has the same
+//! problem per *worker*: the whole aggregation operand must fit an exec
+//! worker's working set or the SpMM thrashes. [`ShardPlan::partition`]
+//! cuts a CSR into contiguous row ranges sized against a configurable
+//! working-set budget, balanced by edge mass over the [`degree_prefix`]
+//! histogram — the same quantile-cut scheme the threaded kernels use
+//! for thread chunks, promoted to a first-class, cacheable structure.
+//!
+//! Each [`GraphShard`] is a self-contained CSR (shard-local rows, global
+//! columns), so a shard multiplied against the full feature matrix
+//! yields exactly its rows of the full product: concatenating shard
+//! outputs row-wise *is* the merge, with no combination arithmetic.
+
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use super::stats::{balanced_cuts, degree_prefix, DegreeStats};
+use super::Csr;
+
+/// Bytes per stored CSR edge (f32 value + i32 column index).
+const EDGE_BYTES: usize = 8;
+/// Bytes of `row_ptr` overhead per row.
+const ROW_BYTES: usize = 4;
+
+/// Estimated resident bytes of a CSR row range: its edges plus its
+/// `row_ptr` slice. The host analog of "does the row segment fit in
+/// shared memory" — here, "does the shard fit a worker's working set".
+/// (Feature rows are shared across shards and deliberately not charged.)
+pub fn working_set_bytes(rows: usize, nnz: usize) -> usize {
+    nnz * EDGE_BYTES + (rows + 1) * ROW_BYTES
+}
+
+/// How to cut a graph into shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Explicit shard count (the coordinator's `--shards`); `None`
+    /// derives the count from `budget_bytes`.
+    pub shards: Option<usize>,
+    /// Per-shard working-set budget in bytes (`--shard-budget`). Used
+    /// when `shards` is `None`: the count becomes
+    /// `ceil(total_working_set / budget)`. Best-effort — a single row
+    /// larger than the budget still gets (exactly) one shard.
+    pub budget_bytes: usize,
+}
+
+impl ShardSpec {
+    /// Default per-shard working-set budget: 32 MiB, a typical per-core
+    /// L2+L3 slice on the serving hosts this models.
+    pub const DEFAULT_BUDGET: usize = 32 << 20;
+
+    /// Fixed shard count (budget kept as the default for reporting).
+    pub fn by_count(shards: usize) -> ShardSpec {
+        ShardSpec { shards: Some(shards.max(1)), budget_bytes: Self::DEFAULT_BUDGET }
+    }
+
+    /// Derive the shard count from a working-set budget.
+    pub fn by_budget(bytes: usize) -> ShardSpec {
+        ShardSpec { shards: None, budget_bytes: bytes.max(1) }
+    }
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec { shards: None, budget_bytes: Self::DEFAULT_BUDGET }
+    }
+}
+
+/// One contiguous row range of a graph, extracted as a self-contained
+/// CSR. Rows are shard-local (`csr.n_rows == rows.len()`), columns stay
+/// global (`csr.n_cols` is the full graph's), so the shard multiplies
+/// against the full feature matrix directly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphShard {
+    /// Position of this shard in the plan (0-based).
+    pub index: usize,
+    /// Global row range `[start, end)` this shard covers.
+    pub rows: Range<usize>,
+    /// The shard's rows as a standalone CSR.
+    pub csr: Csr,
+}
+
+impl GraphShard {
+    /// Rows in this shard.
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Stored edges in this shard.
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    /// Estimated resident bytes (see [`working_set_bytes`]).
+    pub fn working_set_bytes(&self) -> usize {
+        working_set_bytes(self.n_rows(), self.nnz())
+    }
+
+    /// Degree statistics of this shard's rows — the skew signal the
+    /// per-shard sampling and kernel decisions key on.
+    pub fn stats(&self) -> DegreeStats {
+        DegreeStats::of(&self.csr)
+    }
+}
+
+/// The partition of one graph into row shards. Invariants (checked by
+/// [`ShardPlan::validate`] and the partitioner's construction): shards
+/// are contiguous, disjoint, cover every row exactly once, and are
+/// non-empty whenever the graph has rows.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    n_rows: usize,
+    n_cols: usize,
+    shards: Vec<GraphShard>,
+}
+
+impl ShardPlan {
+    /// Cut `csr` into shards per `spec`.
+    ///
+    /// The shard count is `spec.shards` if given, else
+    /// `ceil(total_working_set / budget)`, clamped to `[1, n_rows]` —
+    /// a row is never split, so a single mega-row exceeding the budget
+    /// simply becomes its own (over-budget) shard. Cut points are
+    /// edge-mass quantiles over the degree prefix histogram, the same
+    /// balancing the threaded kernels use; an all-zero-nnz graph falls
+    /// back to even row counts.
+    pub fn partition(csr: &Csr, spec: &ShardSpec) -> ShardPlan {
+        let n = csr.n_rows;
+        if n == 0 {
+            let empty = Csr::new(0, csr.n_cols, vec![0], Vec::new(), Vec::new())
+                .expect("the empty CSR is valid");
+            let shard = GraphShard { index: 0, rows: 0..0, csr: empty };
+            return ShardPlan { n_rows: 0, n_cols: csr.n_cols, shards: vec![shard] };
+        }
+        let prefix = degree_prefix(csr);
+        let total = prefix[n];
+        let want = match spec.shards {
+            Some(k) => k,
+            None => working_set_bytes(n, total).div_ceil(spec.budget_bytes.max(1)),
+        };
+        let shards = balanced_cuts(&prefix, want)
+            .into_iter()
+            .enumerate()
+            .map(|(index, rows)| GraphShard {
+                index,
+                rows: rows.clone(),
+                csr: extract_rows(csr, rows),
+            })
+            .collect();
+        ShardPlan { n_rows: n, n_cols: csr.n_cols, shards }
+    }
+
+    /// The shards, in row order.
+    pub fn shards(&self) -> &[GraphShard] {
+        &self.shards
+    }
+
+    /// Consume the plan, yielding owned shards (in row order).
+    pub fn into_shards(self) -> Vec<GraphShard> {
+        self.shards
+    }
+
+    /// Number of shards (always ≥ 1).
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Whether the plan holds no shards (never true for plans built by
+    /// [`ShardPlan::partition`], which emits at least one).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Rows of the partitioned graph.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Columns of the partitioned graph (global — shared by all shards).
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Check the partition invariants: contiguous disjoint cover of
+    /// `0..n_rows`, non-empty shards (unless the graph is empty), and
+    /// each shard a valid standalone CSR with matching dimensions.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards.is_empty() {
+            bail!("a shard plan must hold at least one shard");
+        }
+        let mut next = 0usize;
+        for s in &self.shards {
+            if s.rows.start != next {
+                bail!("shard {} starts at {} (expected {next})", s.index, s.rows.start);
+            }
+            if s.rows.is_empty() && self.n_rows > 0 {
+                bail!("shard {} is empty", s.index);
+            }
+            if s.csr.n_rows != s.rows.len() || s.csr.n_cols != self.n_cols {
+                bail!("shard {} CSR dims disagree with its row range", s.index);
+            }
+            s.csr.validate()?;
+            next = s.rows.end;
+        }
+        if next != self.n_rows {
+            bail!("shards cover rows 0..{next}, graph has {}", self.n_rows);
+        }
+        Ok(())
+    }
+}
+
+/// Slice `rows` out of `csr` as a standalone CSR (local rows, global
+/// columns). O(shard nnz).
+fn extract_rows(csr: &Csr, rows: Range<usize>) -> Csr {
+    let base = csr.row_ptr[rows.start];
+    let lo = base as usize;
+    let hi = csr.row_ptr[rows.end] as usize;
+    let row_ptr: Vec<i32> = csr.row_ptr[rows.start..=rows.end].iter().map(|&p| p - base).collect();
+    Csr::new(
+        rows.len(),
+        csr.n_cols,
+        row_ptr,
+        csr.col_ind[lo..hi].to_vec(),
+        csr.val[lo..hi].to_vec(),
+    )
+    .expect("a row slice of a valid CSR is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::rng::Pcg32;
+
+    fn cover_exactly_once(plan: &ShardPlan) {
+        plan.validate().unwrap();
+        let mut owner = vec![0usize; plan.n_rows()];
+        for s in plan.shards() {
+            for r in s.rows.clone() {
+                owner[r] += 1;
+            }
+        }
+        assert!(owner.iter().all(|&c| c == 1), "every row in exactly one shard");
+    }
+
+    #[test]
+    fn partition_by_count_covers_and_balances() {
+        let mut rng = Pcg32::new(3);
+        let g = gen::chung_lu(500, 20.0, 1.8, &mut rng);
+        for k in [1usize, 2, 3, 7, 16] {
+            let plan = ShardPlan::partition(&g, &ShardSpec::by_count(k));
+            assert_eq!(plan.len(), k.min(g.n_rows));
+            cover_exactly_once(&plan);
+            // Shard rows reproduce the original rows bit-for-bit.
+            for s in plan.shards() {
+                for (li, gi) in s.rows.clone().enumerate() {
+                    assert_eq!(s.csr.row_nnz(li), g.row_nnz(gi));
+                    let lr = s.csr.row_range(li);
+                    let gr = g.row_range(gi);
+                    assert_eq!(&s.csr.col_ind[lr.clone()], &g.col_ind[gr.clone()]);
+                    assert_eq!(&s.csr.val[lr], &g.val[gr]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_by_budget_respects_the_budget_on_average() {
+        let mut rng = Pcg32::new(9);
+        let g = gen::chung_lu(2000, 30.0, 2.0, &mut rng);
+        let total = working_set_bytes(g.n_rows, g.nnz());
+        let budget = total / 5;
+        let plan = ShardPlan::partition(&g, &ShardSpec::by_budget(budget));
+        assert!(plan.len() >= 5, "5× the budget needs ≥5 shards (got {})", plan.len());
+        cover_exactly_once(&plan);
+        // Quantile cuts keep shards near the budget (2× slack for row
+        // granularity).
+        for s in plan.shards() {
+            assert!(
+                s.working_set_bytes() <= budget * 2,
+                "shard {} holds {}B against a {budget}B budget",
+                s.index,
+                s.working_set_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn mega_row_exceeding_the_budget_gets_its_own_shard() {
+        // Row 1 alone dwarfs the budget; the partitioner must isolate it
+        // without panicking or splitting it.
+        let row_ptr = vec![0i32, 2, 10_002, 10_004, 10_006];
+        let nnz = *row_ptr.last().unwrap() as usize;
+        let col_ind: Vec<i32> = (0..nnz).map(|e| (e % 4) as i32).collect();
+        let g = Csr::new(4, 4, row_ptr, col_ind, vec![1.0; nnz]).unwrap();
+        let budget = working_set_bytes(1, 100); // far below the mega row
+        let plan = ShardPlan::partition(&g, &ShardSpec::by_budget(budget));
+        cover_exactly_once(&plan);
+        let mega = plan.shards().iter().find(|s| s.rows.contains(&1)).unwrap();
+        assert!(mega.working_set_bytes() > budget, "mega shard is over budget by design");
+        // The light rows are not trapped behind it.
+        assert!(plan.len() >= 2);
+    }
+
+    #[test]
+    fn degenerate_graphs_partition_without_panic() {
+        // Empty graph → one empty shard.
+        let g = Csr::new(0, 7, vec![0], vec![], vec![]).unwrap();
+        let plan = ShardPlan::partition(&g, &ShardSpec::by_count(4));
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.shards()[0].rows, 0..0);
+        plan.validate().unwrap();
+
+        // Single row, many shards requested → one shard.
+        let g = Csr::new(1, 2, vec![0, 2], vec![0, 1], vec![1.0, 2.0]).unwrap();
+        let plan = ShardPlan::partition(&g, &ShardSpec::by_count(8));
+        assert_eq!(plan.len(), 1);
+        cover_exactly_once(&plan);
+
+        // All-empty rows: zero edge mass falls back to even row cuts.
+        let g = Csr::new(9, 9, vec![0; 10], vec![], vec![]).unwrap();
+        let plan = ShardPlan::partition(&g, &ShardSpec::by_count(3));
+        assert_eq!(plan.len(), 3);
+        cover_exactly_once(&plan);
+    }
+
+    #[test]
+    fn shard_stats_expose_skew() {
+        // Uniform head (40 rows × deg 4 = 160 edges) and heavy tail
+        // (2 rows × deg 80 = 160 edges): equal masses put the 2-way
+        // quantile cut exactly on the boundary, so the tail shard's max
+        // degree dwarfs the head shard's.
+        let mut triples = Vec::new();
+        for r in 0..40 {
+            for c in 0..4 {
+                triples.push((r as i32, c as i32, 1.0));
+            }
+        }
+        for c in 0..80 {
+            triples.push((40, c % 50, 1.0));
+            triples.push((41, (c + 7) % 50, 1.0));
+        }
+        let g = crate::graph::coo_to_csr(42, 50, triples).unwrap();
+        let plan = ShardPlan::partition(&g, &ShardSpec::by_count(2));
+        cover_exactly_once(&plan);
+        assert_eq!(plan.shards()[0].rows, 0..40);
+        let head = plan.shards()[0].stats();
+        let tail = plan.shards().last().unwrap().stats();
+        assert!(tail.max > head.max * 10, "tail max {} vs head max {}", tail.max, head.max);
+    }
+
+    #[test]
+    fn working_set_model_is_monotone() {
+        assert!(working_set_bytes(10, 100) < working_set_bytes(10, 200));
+        assert!(working_set_bytes(10, 100) < working_set_bytes(20, 100));
+        assert_eq!(working_set_bytes(0, 0), ROW_BYTES);
+    }
+}

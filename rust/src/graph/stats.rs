@@ -44,6 +44,58 @@ impl DegreeStats {
     }
 }
 
+/// Row-degree prefix sums: `prefix[i]` is the total nnz of rows `< i`
+/// (length `n_rows + 1`). The balanced-cut substrate shared by the
+/// threaded SpMM chunkers and the shard partitioner: a k-quantile cut
+/// over this prefix yields row ranges with roughly equal edge mass.
+pub fn degree_prefix(csr: &Csr) -> Vec<usize> {
+    let mut prefix = Vec::with_capacity(csr.n_rows + 1);
+    prefix.push(0usize);
+    for i in 0..csr.n_rows {
+        let p = prefix[i] + csr.row_nnz(i);
+        prefix.push(p);
+    }
+    prefix
+}
+
+/// Cut `0..n` (where `n = prefix.len() - 1`) into at most `parts`
+/// contiguous, **non-empty** ranges with roughly equal mass, where
+/// `prefix` is a mass prefix sum (e.g. [`degree_prefix`]). The shared
+/// balanced-cut substrate behind both the threaded SpMM chunkers and
+/// the shard partitioner: cut points are mass quantiles
+/// (`partition_point` over the prefix), zero total mass falls back to
+/// even row counts, and `parts` is clamped to `[1, n]` so no range is
+/// ever empty (an item is never split across ranges). `n == 0` yields
+/// one empty range.
+pub fn balanced_cuts(prefix: &[usize], parts: usize) -> Vec<std::ops::Range<usize>> {
+    let n = prefix.len().saturating_sub(1);
+    if n == 0 {
+        return vec![0..0];
+    }
+    let total = prefix[n];
+    let parts = parts.clamp(1, n);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for k in 1..=parts {
+        let end = if k == parts {
+            n
+        } else if total == 0 {
+            // No mass to balance — cut by item count.
+            n * k / parts
+        } else {
+            // First index whose prefix mass reaches the k-th quantile.
+            let target = (total * k).div_ceil(parts);
+            prefix.partition_point(|&p| p < target)
+        };
+        // Keep every range non-empty and leave ≥1 item per remaining
+        // range.
+        let end = end.max(start + 1).min(n - (parts - k));
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
 /// Empirical CDF of row degrees evaluated at each degree in `points`.
 pub fn degree_cdf(csr: &Csr, points: &[usize]) -> Vec<f64> {
     let mut degs: Vec<usize> = (0..csr.n_rows).map(|i| csr.row_nnz(i)).collect();
@@ -85,6 +137,39 @@ mod tests {
         // 17 of 101 rows have degree <= 16
         let w16 = s.frac_within.iter().find(|&&(w, _)| w == 16).unwrap().1;
         assert!((w16 - 17.0 / 101.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_cuts_cover_disjointly() {
+        // Thorough degenerate-input coverage lives with the two callers
+        // (spmm::threaded chunk tests, graph::shard partition tests);
+        // this pins the direct contract.
+        let prefix = [0usize, 5, 5, 105, 108, 111, 114, 164, 165];
+        for parts in 1..=8 {
+            let cuts = balanced_cuts(&prefix, parts);
+            assert!(cuts.len() <= parts);
+            let mut next = 0;
+            for c in &cuts {
+                assert_eq!(c.start, next);
+                assert!(!c.is_empty());
+                next = c.end;
+            }
+            assert_eq!(next, 8);
+        }
+        assert_eq!(balanced_cuts(&[0], 4), vec![0..0]);
+        assert_eq!(balanced_cuts(&[], 4), vec![0..0]);
+    }
+
+    #[test]
+    fn prefix_matches_row_nnz() {
+        let g = line_graph(20); // degrees 0..=19
+        let p = degree_prefix(&g);
+        assert_eq!(p.len(), 21);
+        assert_eq!(p[0], 0);
+        for i in 0..20 {
+            assert_eq!(p[i + 1] - p[i], g.row_nnz(i));
+        }
+        assert_eq!(*p.last().unwrap(), g.nnz());
     }
 
     #[test]

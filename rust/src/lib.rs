@@ -21,12 +21,12 @@
 //! |---------------|-------------------------------------------------------|
 //! | [`tensor`]    | `.nbt` named-binary-tensor container, dtypes          |
 //! | [`rng`]       | PCG32 / SplitMix64 (offline registry has no `rand`)   |
-//! | [`graph`]     | CSR / ELL structures, validation, degree statistics   |
+//! | [`graph`]     | CSR / ELL structures, validation, degree statistics, shard partitioner |
 //! | [`gen`]       | synthetic graph generators (Chung-Lu, DC-SBM, RMAT)   |
 //! | [`sampling`]  | the paper's strategy table + hash, ELL planners, CDFs |
 //! | [`quant`]     | INT8 quantization (per-chunk), mmap feature store, streamed row-block handles |
 //! | [`spmm`]      | CPU SpMM kernels (cuSPARSE / GE-SpMM analogs, ELL)    |
-//! | [`exec`]      | kernel dispatch, persistent pool, plan cache, async prefetch |
+//! | [`exec`]      | kernel dispatch, persistent pool, plan cache, async prefetch, sharded plans |
 //! | [`runtime`]   | PJRT engine: artifact registry, executables, literals |
 //! | [`coordinator`]| request router, dynamic batcher, worker pool, metrics|
 //! | [`experiments`]| one runner per paper figure/table                    |

@@ -94,11 +94,15 @@ repro — AES-SpMM reproduction (rust + JAX + Pallas, AOT via PJRT)
 USAGE:
   repro inspect    [--artifacts DIR]
   repro infer      --model gcn|sage --dataset NAME [--width W] [--strategy afs|sfs|aes] [--fp32] [--artifacts DIR]
-  repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--prefetch P] [--artifacts DIR]
+  repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--prefetch P]
+                   [--host] [--shards N] [--shard-budget MIB] [--artifacts DIR]
   repro experiment fig2|fig3|fig5|fig6|fig7|tab1|tab3|all [--quick] [--artifacts DIR]
   repro gen-data   [--nodes N] [--avg-deg D] [--gamma G] [--seed S]
 
 Serving precision defaults to INT8 (--fp32 opts into the baseline).
+--host serves on the rust substrate (no PJRT); --shards/--shard-budget
+row-shard host aggregation into working-set-budgeted GraphShards with
+per-shard sampling + kernel dispatch (see docs/sharding.md).
 Run `make artifacts` first to produce the AOT artifacts.";
 
 fn run() -> Result<()> {
@@ -206,10 +210,27 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let queue = args.usize_or("queue", 1024)?;
     let batch = args.usize_or("batch", 32)?;
     let prefetch = args.usize_or("prefetch", 1)?;
+    // --shards / --shard-budget (MiB) turn on row-sharded host plans.
+    let sharding = if args.has("shards") || args.has("shard-budget") {
+        Some(aes_spmm::graph::ShardSpec {
+            shards: args
+                .get("shards")
+                .map(|s| s.parse().context("--shards must be an integer"))
+                .transpose()?,
+            budget_bytes: args.usize_or("shard-budget", 32)? << 20,
+        })
+    } else {
+        None
+    };
 
     let engine = Arc::new(Engine::new(artifacts)?);
     let datasets = engine.manifest().dataset_names();
-    let models = vec!["gcn".to_string(), "sage".to_string()];
+    // The host substrate implements the gcn forward only.
+    let models = if args.has("host") {
+        vec!["gcn".to_string()]
+    } else {
+        vec!["gcn".to_string(), "sage".to_string()]
+    };
     let store = Arc::new(ModelStore::load(artifacts, &datasets, &models)?);
 
     let cfg = CoordinatorConfig {
@@ -220,9 +241,15 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
             max_delay: std::time::Duration::from_millis(2),
         },
         prefetch_workers: prefetch,
+        sharding,
         ..CoordinatorConfig::default()
     };
-    let coord = Coordinator::start(engine.clone(), store.clone(), cfg);
+    let coord = if args.has("host") {
+        // The rust substrate: sharding applies here (host aggregation).
+        Coordinator::start_with(aes_spmm::runtime::Backend::Host, store.clone(), cfg)
+    } else {
+        Coordinator::start(engine.clone(), store.clone(), cfg)
+    };
 
     // Synthetic request mix: random (dataset, width, strategy, precision).
     let mut rng = Pcg32::new(1234);
@@ -234,7 +261,7 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         let ds = &datasets[rng.usize_below(datasets.len())];
         let n = store.dataset(ds)?.n;
         let key = RouteKey {
-            model: models[rng.usize_below(2)].clone(),
+            model: models[rng.usize_below(models.len())].clone(),
             dataset: ds.clone(),
             width: Some(widths[rng.usize_below(widths.len())]),
             strategy: [Strategy::Afs, Strategy::Sfs, Strategy::Aes][rng.usize_below(3)],
@@ -286,6 +313,11 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     println!(
         "prefetch: {} staged / {} completed / {} coalesced / {} errors",
         pstats.scheduled, pstats.completed, pstats.coalesced, pstats.errors
+    );
+    let sstats = coord.shard_stats();
+    println!(
+        "shards: {} batches sharded | units: {} resident / {} warm / {} built / {} evicted",
+        snap.sharded_batches, sstats.resident, sstats.hits, sstats.misses, sstats.evictions
     );
     println!("\nfeature staging per dataset (monotonic totals):");
     for ds in &datasets {

@@ -195,7 +195,10 @@ mod tests {
     #[test]
     fn artifact_keys() {
         assert_eq!(artifact_key(ArtifactKind::Baseline, "gcn", "cora", 0), "baseline_gcn_cora");
-        assert_eq!(artifact_key(ArtifactKind::Sampled, "sage", "reddit", 64), "model_sage_reddit_w64");
+        assert_eq!(
+            artifact_key(ArtifactKind::Sampled, "sage", "reddit", 64),
+            "model_sage_reddit_w64"
+        );
         assert_eq!(
             artifact_key(ArtifactKind::Quantized, "gcn", "products", 128),
             "qmodel_gcn_products_w128"

@@ -11,12 +11,14 @@
 //! re-profiling. This keeps the full serving stack runnable (and
 //! testable end to end) on machines without a PJRT runtime.
 
+use std::ops::Range;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::exec::{
-    run_ell, run_exact, select_kernel, ExecEnv, ExecPlan, GraphProfile, PAR_MIN_FLOPS,
+    run_ell, run_exact, select_kernel, ExecEnv, ExecPlan, GraphProfile, ShardedPlan,
+    PAR_MIN_FLOPS,
 };
 use crate::graph::Ell;
 use crate::quant::{dequantize, FeatureHandle, Features, Precision};
@@ -27,9 +29,29 @@ use super::dataset::{Dataset, Weights};
 use super::engine::ExecStats;
 use super::infer::{ForwardRequest, ForwardResult};
 
-/// Row-major `A[m,k] × B[k,n]`, skipping zero A entries (hidden
-/// activations are sparse-ish after ReLU). Row chunks run on the
-/// persistent pool when the flop count repays the fork-join.
+/// Multiply rows `row0..row0 + out_chunk.len()/n` of `A` into
+/// `out_chunk`, skipping zero A entries (hidden activations are
+/// sparse-ish after ReLU). The single inner loop every dense path —
+/// thread-chunked, shard-chunked, streamed — shares, so per-row FP order
+/// is identical regardless of how the rows were partitioned.
+fn matmul_rows(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, out_chunk: &mut [f32]) {
+    for (r, orow) in out_chunk.chunks_mut(n).enumerate() {
+        let i = row0 + r;
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &x) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * x;
+            }
+        }
+    }
+}
+
+/// Row-major `A[m,k] × B[k,n]`. Row chunks run on the persistent pool
+/// when the flop count repays the fork-join.
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, env: &ExecEnv) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
     if m == 0 || n == 0 {
@@ -46,20 +68,7 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, env: &ExecEnv) -> 
         .enumerate()
         .map(|(chunk_idx, out_chunk)| {
             Box::new(move || {
-                let row0 = chunk_idx * chunk_rows;
-                for (r, orow) in out_chunk.chunks_mut(n).enumerate() {
-                    let i = row0 + r;
-                    let arow = &a[i * k..(i + 1) * k];
-                    for (kk, &av) in arow.iter().enumerate() {
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[kk * n..(kk + 1) * n];
-                        for (o, &x) in orow.iter_mut().zip(brow.iter()) {
-                            *o += av * x;
-                        }
-                    }
-                }
+                matmul_rows(a, b, k, n, chunk_idx * chunk_rows, out_chunk);
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
@@ -67,13 +76,51 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, env: &ExecEnv) -> 
     out
 }
 
+/// Dense multiply with row chunks aligned to shard boundaries — one pool
+/// task per shard, so the dense layers' working sets track the same
+/// partition as the sharded aggregation. Per-row FP order (and therefore
+/// the result) is identical to [`matmul`]; single-shard bound lists and
+/// multiplies too small to repay the per-shard fork-join (the same
+/// [`PAR_MIN_FLOPS`] gate the other dense paths use) fall back to the
+/// thread-chunked path.
+fn matmul_sharded(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bounds: &[Range<usize>],
+    env: &ExecEnv,
+) -> Vec<f32> {
+    let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+    if m == 0 || n == 0 || bounds.len() <= 1 || env.threads <= 1 || flops < PAR_MIN_FLOPS {
+        return matmul(a, b, m, k, n, env);
+    }
+    let mut out = vec![0.0f32; m * n];
+    let mut rest: &mut [f32] = &mut out;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len());
+    for rows in bounds {
+        let (chunk, tail) = rest.split_at_mut(rows.len() * n);
+        rest = tail;
+        let row0 = rows.start;
+        tasks.push(Box::new(move || {
+            matmul_rows(a, b, k, n, row0, chunk);
+        }));
+    }
+    crate::exec::global_pool().run(tasks);
+    out
+}
+
 /// Layer-1 multiply over a streamed feature handle: each row chunk
 /// dequantizes its own INT8 block into a chunk-local scratch buffer and
 /// multiplies — dequantization is lazy, per row-block, inside the exec
-/// worker, and the fp32 feature matrix never materializes whole. Inner
-/// loops mirror [`matmul`] exactly, so per-row FP order (and therefore
-/// the result) is identical to the eager path given the same dequantized
-/// values.
+/// worker, and the fp32 feature matrix never materializes whole. With
+/// `bounds` (a sharded plan's row cuts), chunks align to the shard
+/// boundaries instead of the thread heuristic, so each shard's feature
+/// block stages exactly once per forward. Inner loops mirror [`matmul`]
+/// exactly, so per-row FP order (and therefore the result) is identical
+/// to the eager path given the same dequantized values — chunked either
+/// way.
 fn matmul_streamed(
     fh: &FeatureHandle,
     b: &[f32],
@@ -81,41 +128,54 @@ fn matmul_streamed(
     k: usize,
     n: usize,
     env: &ExecEnv,
+    bounds: Option<&[Range<usize>]>,
 ) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
     if m == 0 || n == 0 {
         return out;
     }
-    let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
-    let chunk_rows = if env.threads > 1 && flops >= PAR_MIN_FLOPS {
-        m.div_ceil(env.threads).max(1)
-    } else {
-        m
+    // Row cuts: shard boundaries when sharded, else the thread
+    // heuristic. Shard bounds are honored regardless of flop count —
+    // unlike `matmul_sharded`'s fallback, the cut here also decides
+    // which feature blocks get staged together, and per-shard staging
+    // is the point of the partition; the total staged bytes are the
+    // same either way.
+    let cuts: Vec<Range<usize>> = match bounds {
+        Some(bs) if bs.len() > 1 => bs.to_vec(),
+        _ => {
+            let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+            let chunk_rows = if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+                m.div_ceil(env.threads).max(1)
+            } else {
+                m
+            };
+            (0..m.div_ceil(chunk_rows))
+                .map(|c| c * chunk_rows..((c + 1) * chunk_rows).min(m))
+                .collect()
+        }
     };
-    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
-        .chunks_mut(chunk_rows * n)
-        .enumerate()
-        .map(|(chunk_idx, out_chunk)| {
-            Box::new(move || {
-                let row0 = chunk_idx * chunk_rows;
-                let rows = out_chunk.len() / n;
-                let mut xbuf = vec![0.0f32; rows * k];
-                fh.fill_rows_f32(row0, &mut xbuf);
-                for (r, orow) in out_chunk.chunks_mut(n).enumerate() {
-                    let arow = &xbuf[r * k..(r + 1) * k];
-                    for (kk, &av) in arow.iter().enumerate() {
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[kk * n..(kk + 1) * n];
-                        for (o, &x) in orow.iter_mut().zip(brow.iter()) {
-                            *o += av * x;
-                        }
+    let mut rest: &mut [f32] = &mut out;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(cuts.len());
+    for rows in cuts {
+        let (out_chunk, tail) = rest.split_at_mut(rows.len() * n);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            let mut xbuf = vec![0.0f32; rows.len() * k];
+            fh.fill_rows_f32(rows.start, &mut xbuf);
+            for (r, orow) in out_chunk.chunks_mut(n).enumerate() {
+                let arow = &xbuf[r * k..(r + 1) * k];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &x) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * x;
                     }
                 }
-            }) as Box<dyn FnOnce() + Send + '_>
-        })
-        .collect();
+            }
+        }));
+    }
     crate::exec::global_pool().run(tasks);
     out
 }
@@ -124,7 +184,10 @@ fn matmul_streamed(
 /// `logits = Â(relu(Â(XW₀)+b₀)W₁)+b₁` with Â either exact or the route's
 /// sampled ELL plan. `plan` (from the coordinator's cache) supplies the
 /// sampled ELL and the operand profile; without it, a one-shot caller
-/// pays one sampling + profiling pass here.
+/// pays one sampling + profiling pass here. When the plan carries a
+/// [`ShardedPlan`], both aggregations fan out as per-shard tasks and the
+/// dense multiplies chunk along the same shard row cuts
+/// (`matmul_sharded`) — output bit-identical to the unsharded path.
 ///
 /// `features` overrides the dataset tensor; a u8 tensor is dequantized
 /// host-side with the dataset's Eq. 2 params (the CPU stand-in for the
@@ -184,9 +247,12 @@ pub fn host_forward(
 
     let t1 = Instant::now();
     // Aggregation operand + its statistics: cached plan when available,
-    // otherwise sampled/profiled once here.
+    // otherwise sampled/profiled once here. A sharded plan supersedes
+    // the whole-graph operand — its units carry their own profiles.
+    let sharded: Option<&ShardedPlan> = plan.and_then(|p| p.sharded.as_deref());
     let sampled;
     let (ell, profile): (Option<&Ell>, GraphProfile) = match (req.width, plan) {
+        _ if sharded.is_some() => (None, plan.expect("sharded implies a plan").profile),
         (None, Some(p)) => (None, p.profile),
         (None, None) => (None, GraphProfile::of(&ds.csr_gcn)),
         (Some(_), Some(p)) if p.ell.is_some() => (p.ell.as_deref(), p.profile),
@@ -199,6 +265,12 @@ pub fn host_forward(
     };
     let width = ell.map(|e| e.width);
     let aggregate = |b: &[f32], f_dim: usize, out: &mut [f32]| {
+        // Sharded route: independent per-shard tasks, per-shard dispatch,
+        // row-concatenation merge.
+        if let Some(sp) = sharded {
+            sp.run(b, f_dim, out, env);
+            return;
+        }
         // O(1) per-layer dispatch from the cached profile.
         let kind = select_kernel(&profile, f_dim, width, env);
         match ell {
@@ -206,6 +278,8 @@ pub fn host_forward(
             None => run_exact(kind, &ds.csr_gcn, b, f_dim, out, env.threads),
         }
     };
+    // Dense layers chunk along the same row cuts as the shards.
+    let shard_bounds = sharded.map(|sp| sp.bounds());
 
     // Weights in GCN_PARAM_ORDER: w0 [f,h], b0 [h], w1 [h,c], b1 [c].
     let w0 = weights.tensors[0].1.as_f32()?;
@@ -219,9 +293,10 @@ pub fn host_forward(
 
     // Layer 1: agg(X W0) + b0, ReLU. Streamed routes dequantize X lazily
     // per row-block inside the multiply's pool tasks.
-    let xw = match streamed {
-        Some(fh) => matmul_streamed(fh, w0, n, f, h, env),
-        None => matmul(x, w0, n, f, h, env),
+    let xw = match (streamed, &shard_bounds) {
+        (Some(fh), bounds) => matmul_streamed(fh, w0, n, f, h, env, bounds.as_deref()),
+        (None, Some(bounds)) => matmul_sharded(x, w0, n, f, h, bounds, env),
+        (None, None) => matmul(x, w0, n, f, h, env),
     };
     let mut hidden = vec![0.0f32; n * h];
     aggregate(&xw, h, &mut hidden);
@@ -232,7 +307,10 @@ pub fn host_forward(
     }
 
     // Layer 2: agg(H W1) + b1.
-    let hw = matmul(&hidden, w1, n, h, c, env);
+    let hw = match &shard_bounds {
+        Some(bounds) => matmul_sharded(&hidden, w1, n, h, c, bounds, env),
+        None => matmul(&hidden, w1, n, h, c, env),
+    };
     let mut logits = vec![0.0f32; n * c];
     aggregate(&hw, c, &mut logits);
     for i in 0..n {
@@ -336,9 +414,44 @@ mod tests {
         for threads in [1usize, 4] {
             let env = ExecEnv::with_threads(threads);
             let want = matmul(&x, &b, m, k, n, &env);
-            let got = matmul_streamed(&fh, &b, m, k, n, &env);
+            let got = matmul_streamed(&fh, &b, m, k, n, &env, None);
             assert_eq!(want, got, "streamed layer-1 must be bit-identical ({threads} threads)");
         }
+        // Shard-aligned chunking stages per-shard blocks but keeps the
+        // result bit-identical too.
+        let bounds = [0usize..11, 11..12, 12..30, 30..m];
+        let env = ExecEnv::with_threads(4);
+        let want = matmul(&x, &b, m, k, n, &env);
+        let got = matmul_streamed(&fh, &b, m, k, n, &env, Some(&bounds));
+        assert_eq!(want, got, "shard-chunked streamed multiply must be bit-identical");
+    }
+
+    #[test]
+    fn sharded_matmul_is_bitwise_equal_to_matmul() {
+        let mut rng = crate::rng::Pcg32::new(41);
+        // Above PAR_MIN_FLOPS so the per-shard fan-out actually runs
+        // (smaller multiplies fall back to the thread-chunked path).
+        let (m, k, n) = (256usize, 128usize, 64usize);
+        assert!(2 * m * k * n >= PAR_MIN_FLOPS);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.f32() - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.f32() - 0.5).collect();
+        let env = ExecEnv::with_threads(4);
+        let want = matmul(&a, &b, m, k, n, &env);
+        // Uneven shard cuts, including a single-row shard.
+        let bounds = [0usize..100, 100..101, 101..200, 200..m];
+        let got = matmul_sharded(&a, &b, m, k, n, &bounds, &env);
+        assert_eq!(want, got);
+        // Single-bound lists fall back to the thread-chunked path.
+        let got = matmul_sharded(&a, &b, m, k, n, &[0..m], &env);
+        assert_eq!(want, got);
+        // Sub-threshold multiplies fall back too — still bitwise equal.
+        let (sm, sk, sn) = (19usize, 7usize, 5usize);
+        let sa: Vec<f32> = (0..sm * sk).map(|_| rng.f32() - 0.5).collect();
+        let sb: Vec<f32> = (0..sk * sn).map(|_| rng.f32() - 0.5).collect();
+        let small_bounds = [0usize..4, 4..19];
+        let want = matmul(&sa, &sb, sm, sk, sn, &env);
+        let got = matmul_sharded(&sa, &sb, sm, sk, sn, &small_bounds, &env);
+        assert_eq!(want, got);
     }
 
     // Full forward correctness is covered in tests/exec_layer.rs, which

@@ -12,7 +12,7 @@
 //! | unit       | role                                                   |
 //! |------------|--------------------------------------------------------|
 //! | `strategy` | [`Strategy`] (AFS / SFS / AES) + per-row start-index hash (the `PRIME` stride of Eq. 3) |
-//! | `plan`     | row planners and the parallel [`sample_ell_par`] ELL builder; sampling-rate CDFs for Fig. 5 |
+//! | `plan`     | row planners and the parallel [`sample_ell_par`] ELL builder; [`shard_width`] shard-local tile budgets; sampling-rate CDFs for Fig. 5 |
 //!
 //! # Rules
 //!
@@ -30,5 +30,7 @@
 mod plan;
 mod strategy;
 
-pub use plan::{plan_row, sample_ell, sample_ell_par, sampling_rate, sampling_rate_cdf};
+pub use plan::{
+    plan_row, sample_ell, sample_ell_par, sampling_rate, sampling_rate_cdf, shard_width,
+};
 pub use strategy::{start_index, strategy_params, RowPlan, Strategy, PRIME};

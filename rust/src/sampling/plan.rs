@@ -23,7 +23,15 @@ pub fn plan_row(row_nnz: usize, width: usize, strategy: Strategy) -> Vec<usize> 
 /// `aes_sample` kernel (bit-exact on col indices and slot counts).
 pub fn sample_ell(csr: &Csr, width: usize, strategy: Strategy) -> Ell {
     let mut ell = Ell::zeros(csr.n_rows, csr.n_cols, width);
-    sample_rows_into(csr, width, strategy, 0..csr.n_rows, &mut ell.val, &mut ell.col, &mut ell.slots);
+    sample_rows_into(
+        csr,
+        width,
+        strategy,
+        0..csr.n_rows,
+        &mut ell.val,
+        &mut ell.col,
+        &mut ell.slots,
+    );
     ell
 }
 
@@ -121,6 +129,21 @@ pub fn sample_ell_par(csr: &Csr, width: usize, strategy: Strategy, ell: &mut Ell
         }));
     }
     crate::exec::global_pool().run(tasks);
+}
+
+/// Shard-local ELL tile width — the shard analog of the paper's
+/// shared-memory width W. A shard whose longest row fits the global
+/// width keeps **every** edge regardless of strategy (Table 1's
+/// `row_nnz <= W` fast path), so its tile can shrink to the power of
+/// two covering its max degree: less padding memory, bit-identical
+/// output. A shard with overflowing rows keeps the full global width so
+/// its sampled rows match the unsharded plan exactly.
+pub fn shard_width(width: usize, shard_max_degree: usize) -> usize {
+    if shard_max_degree <= width {
+        shard_max_degree.next_power_of_two().clamp(1, width.max(1))
+    } else {
+        width
+    }
 }
 
 /// Fraction of edges kept by sampling — Fig. 5's per-graph statistic.
@@ -237,6 +260,36 @@ mod tests {
                     assert_eq!(par, serial, "{strat:?} w{width} t{threads}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn shard_width_shrinks_only_when_everything_fits() {
+        // Uniform shard: max degree 5 under W=16 → tile 8, exhaustive.
+        assert_eq!(shard_width(16, 5), 8);
+        assert_eq!(shard_width(16, 16), 16);
+        assert_eq!(shard_width(16, 1), 1);
+        // Empty shard clamps to a 1-wide (all-padding) tile.
+        assert_eq!(shard_width(16, 0), 1);
+        // Skewed shard: rows overflow → keep the global width verbatim.
+        assert_eq!(shard_width(16, 17), 16);
+        assert_eq!(shard_width(16, 40_000), 16);
+        // Shrunken tiles still keep every edge (row_nnz <= width holds
+        // for all rows), so sampled output is bit-identical.
+        let mut rng = Pcg32::new(33);
+        let csr = gen::chung_lu(200, 5.0, 2.0, &mut rng);
+        let wmax = csr.max_degree();
+        let local = shard_width(4 * wmax.max(1), wmax);
+        assert!(local >= wmax);
+        let full = sample_ell(&csr, 4 * wmax.max(1), Strategy::Aes);
+        let narrow = sample_ell(&csr, local, Strategy::Aes);
+        for i in 0..csr.n_rows {
+            assert_eq!(full.slots[i], narrow.slots[i]);
+            let s = full.slots[i] as usize;
+            assert_eq!(
+                &full.val[i * full.width..i * full.width + s],
+                &narrow.val[i * narrow.width..i * narrow.width + s]
+            );
         }
     }
 

@@ -94,16 +94,17 @@ mod tests {
     #[test]
     fn table1_regimes() {
         let w = 64;
+        let plan = |n, sample_cnt, slots| RowPlan { n, sample_cnt, slots };
         // R <= 1
-        assert_eq!(strategy_params(40, w, Strategy::Aes), RowPlan { n: 40, sample_cnt: 1, slots: 40 });
+        assert_eq!(strategy_params(40, w, Strategy::Aes), plan(40, 1, 40));
         // 1 < R <= 2
-        assert_eq!(strategy_params(100, w, Strategy::Aes), RowPlan { n: 16, sample_cnt: 4, slots: 64 });
+        assert_eq!(strategy_params(100, w, Strategy::Aes), plan(16, 4, 64));
         // 2 < R <= 36
-        assert_eq!(strategy_params(1000, w, Strategy::Aes), RowPlan { n: 8, sample_cnt: 8, slots: 64 });
+        assert_eq!(strategy_params(1000, w, Strategy::Aes), plan(8, 8, 64));
         // 36 < R <= 54
-        assert_eq!(strategy_params(64 * 40, w, Strategy::Aes), RowPlan { n: 4, sample_cnt: 16, slots: 64 });
+        assert_eq!(strategy_params(64 * 40, w, Strategy::Aes), plan(4, 16, 64));
         // R > 54
-        assert_eq!(strategy_params(64 * 60, w, Strategy::Aes), RowPlan { n: 2, sample_cnt: 32, slots: 64 });
+        assert_eq!(strategy_params(64 * 60, w, Strategy::Aes), plan(2, 32, 64));
     }
 
     #[test]

@@ -24,8 +24,11 @@ pub fn csr_naive(csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
 }
 
 /// Row-cache tile size — the "shared memory" stand-in. 256 entries of
-/// (f32, i32) = 2 KiB, comfortably L1-resident.
-const TILE: usize = 256;
+/// (f32, i32) = 2 KiB, comfortably L1-resident. Public because kernel
+/// dispatch keys on it: rows within one tile accumulate in plain edge
+/// order (bitwise-identical to [`csr_naive`]), rows beyond it introduce
+/// per-tile partial sums (different FP order).
+pub const TILE: usize = 256;
 
 /// Feature-column block width for warp-merged accumulation (CWM analog).
 const FBLOCK: usize = 8;

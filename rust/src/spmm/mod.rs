@@ -18,7 +18,7 @@ mod csr;
 mod ell;
 mod threaded;
 
-pub use csr::{csr_naive, csr_rowcache};
+pub use csr::{csr_naive, csr_rowcache, TILE as ROWCACHE_TILE};
 pub use ell::{ell_spmm, ell_spmm_mean};
 pub use threaded::{csr_naive_par, ell_spmm_par};
 

@@ -7,7 +7,9 @@ use crate::exec;
 use crate::graph::{Csr, Ell};
 
 /// Split `n_rows` into at most `parts` contiguous, **non-empty** chunks
-/// with roughly equal nnz (quantile cuts over the nnz prefix sum).
+/// with roughly equal nnz — a thin wrapper over the shared
+/// [`crate::graph::balanced_cuts`] quantile cutter (the same substrate
+/// the shard partitioner uses), fed by an inline nnz prefix sum.
 ///
 /// Degenerate inputs are clamped rather than mis-split: `parts` is capped
 /// at `n_rows` (never more chunks than rows), zero/tiny total nnz falls
@@ -17,41 +19,21 @@ fn balance_rows(
     n_rows: usize,
     parts: usize,
 ) -> Vec<std::ops::Range<usize>> {
-    if n_rows == 0 {
-        return vec![0..0];
-    }
-    let parts = parts.clamp(1, n_rows);
     let mut prefix = Vec::with_capacity(n_rows + 1);
     prefix.push(0usize);
     for i in 0..n_rows {
         let p = prefix[i] + row_nnz(i);
         prefix.push(p);
     }
-    let total = prefix[n_rows];
-
-    let mut out = Vec::with_capacity(parts);
-    let mut start = 0usize;
-    for k in 1..=parts {
-        let end = if k == parts {
-            n_rows
-        } else if total == 0 {
-            // No mass to balance — cut by row count.
-            n_rows * k / parts
-        } else {
-            // First row index whose prefix mass reaches the k-th quantile.
-            let target = (total * k).div_ceil(parts);
-            prefix.partition_point(|&p| p < target)
-        };
-        // Keep every chunk non-empty and leave ≥1 row per remaining chunk.
-        let end = end.max(start + 1).min(n_rows - (parts - k));
-        out.push(start..end);
-        start = end;
-    }
+    let out = crate::graph::balanced_cuts(&prefix, parts);
 
     debug_assert_eq!(out.first().map(|r| r.start), Some(0));
     debug_assert_eq!(out.last().map(|r| r.end), Some(n_rows));
     debug_assert!(out.windows(2).all(|w| w[0].end == w[1].start), "chunks must be contiguous");
-    debug_assert!(out.iter().all(|r| !r.is_empty()), "chunks must be non-empty");
+    debug_assert!(
+        n_rows == 0 || out.iter().all(|r| !r.is_empty()),
+        "chunks must be non-empty"
+    );
     out
 }
 

@@ -80,7 +80,11 @@ fn synthetic_artifacts(tag: &str, name: &str) -> PathBuf {
     dir
 }
 
-fn start_host_coordinator(dir: &Path, name: &str, workers: usize) -> (Coordinator, Arc<ModelStore>) {
+fn start_host_coordinator(
+    dir: &Path,
+    name: &str,
+    workers: usize,
+) -> (Coordinator, Arc<ModelStore>) {
     let store =
         Arc::new(ModelStore::load(dir, &[name.to_string()], &["gcn".to_string()]).unwrap());
     let coord = Coordinator::start_with(
@@ -92,6 +96,7 @@ fn start_host_coordinator(dir: &Path, name: &str, workers: usize) -> (Coordinato
             batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
             plan_cache_capacity: 16,
             prefetch_workers: 1,
+            ..CoordinatorConfig::default()
         },
     );
     (coord, store)
@@ -209,8 +214,8 @@ fn pool_stays_constant_and_batches_amortize() {
     coord.shutdown();
 }
 
-/// Invalidation drops exactly the targeted plan; the next batch on that
-/// route reloads once, other routes stay warm.
+/// Invalidation drops the dataset's cached plans; the next batch on the
+/// route reloads exactly once and then stays warm again.
 #[test]
 fn invalidation_forces_one_reload() {
     let dir = synthetic_artifacts("invalidate", "tiny");

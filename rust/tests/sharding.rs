@@ -1,0 +1,387 @@
+//! Integration tests for the sharding subsystem — the acceptance
+//! criteria of the sharded-serving PR:
+//!
+//! * partition invariants: every row lands in exactly one shard, across
+//!   budgets, explicit counts, and degenerate inputs (empty graph, a
+//!   single mega-row exceeding the budget);
+//! * sharded sampling matches the golden per-row plans bit-for-bit —
+//!   sharding must not perturb the paper's Table 1 + Eq. 3 math;
+//! * a sharded host forward (`shards >= 2`) is **bitwise equal** to the
+//!   unsharded forward, exact and sampled, eager and streamed-INT8;
+//! * the coordinator serves sharded routes correctly, reuses warm shard
+//!   units across precisions, and drops them on invalidation.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use aes_spmm::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, RouteKey,
+};
+use aes_spmm::exec::{prepare_plan, ExecEnv, PlanSpec, ShardSampling, ShardedPlan};
+use aes_spmm::gen;
+use aes_spmm::graph::{working_set_bytes, Csr, ShardPlan, ShardSpec};
+use aes_spmm::quant::{quantize, FeatureStore, Precision, QuantParams};
+use aes_spmm::rng::Pcg32;
+use aes_spmm::runtime::{host_forward, Backend, Dataset, Weights};
+use aes_spmm::sampling::{plan_row, Strategy};
+use aes_spmm::tensor::{write_nbt, NbtFile, Tensor};
+use aes_spmm::util::argmax_f32;
+
+const N: usize = 180;
+const FEATS: usize = 10;
+const HIDDEN: usize = 8;
+const CLASSES: usize = 4;
+
+fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let len: usize = shape.iter().product();
+    let vals: Vec<f32> = (0..len).map(|_| rng.f32() - 0.5).collect();
+    Tensor::from_f32(shape, &vals)
+}
+
+/// Synthetic dataset + gcn weights, as `tests/exec_layer.rs` builds them.
+fn synthetic_artifacts(tag: &str, name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sharding_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Pcg32::new(0xD0C);
+
+    let g = gen::with_self_loops(&gen::chung_lu(N, 7.0, 1.9, &mut rng)).gcn_normalized();
+    let nnz = g.nnz();
+    let feat: Vec<f32> = (0..N * FEATS).map(|_| rng.f32() - 0.5).collect();
+    let params = QuantParams::of(&feat);
+    let labels: Vec<i32> = (0..N).map(|_| rng.usize_below(CLASSES) as i32).collect();
+    let train_mask: Vec<u8> = (0..N).map(|_| (rng.f32() < 0.5) as u8).collect();
+
+    let mut nbt = NbtFile::new();
+    nbt.insert(
+        "meta",
+        Tensor::from_i64(&[4], &[N as i64, nnz as i64, FEATS as i64, CLASSES as i64]),
+    );
+    nbt.insert("row_ptr", Tensor::from_i32(&[N + 1], &g.row_ptr));
+    nbt.insert("col_ind", Tensor::from_i32(&[nnz], &g.col_ind));
+    nbt.insert("val_gcn", Tensor::from_f32(&[nnz], &g.val));
+    nbt.insert("val_ones", Tensor::from_f32(&[nnz], &vec![1.0f32; nnz]));
+    nbt.insert("feat", Tensor::from_f32(&[N, FEATS], &feat));
+    nbt.insert("featq", Tensor::from_u8(&[N, FEATS], &quantize(&feat, params)));
+    nbt.insert("qrange", Tensor::from_f32(&[2], &[params.x_min, params.x_max]));
+    nbt.insert("labels", Tensor::from_i32(&[N], &labels));
+    nbt.insert("train_mask", Tensor::from_u8(&[N], &train_mask));
+    write_nbt(dir.join(format!("data_{name}.nbt")), &nbt).unwrap();
+
+    let mut w = NbtFile::new();
+    w.insert("w0", rand_tensor(&mut rng, &[FEATS, HIDDEN]));
+    w.insert("b0", rand_tensor(&mut rng, &[HIDDEN]));
+    w.insert("w1", rand_tensor(&mut rng, &[HIDDEN, CLASSES]));
+    w.insert("b1", rand_tensor(&mut rng, &[CLASSES]));
+    w.insert("ideal_acc", Tensor::from_f32(&[1], &[0.5]));
+    write_nbt(dir.join(format!("weights_gcn_{name}.nbt")), &w).unwrap();
+    dir
+}
+
+fn plan_spec<'a>(
+    csr: &'a Csr,
+    width: Option<usize>,
+    stream: bool,
+    shard: Option<ShardSpec>,
+) -> PlanSpec<'a> {
+    PlanSpec {
+        csr,
+        width,
+        strategy: Strategy::Aes,
+        host_ell: true,
+        stream,
+        shard,
+        shard_cache: None,
+    }
+}
+
+/// Every row in exactly one shard, for explicit counts, byte budgets,
+/// and degenerate shapes — the partition invariant suite.
+#[test]
+fn every_row_lands_in_exactly_one_shard() {
+    let mut rng = Pcg32::new(7);
+    let graphs: Vec<Csr> = vec![
+        gen::chung_lu(257, 18.0, 1.8, &mut rng),
+        gen::chung_lu(64, 3.0, 2.5, &mut rng),
+        Csr::new(5, 5, vec![0; 6], vec![], vec![]).unwrap(), // no edges
+    ];
+    for g in &graphs {
+        let total = working_set_bytes(g.n_rows, g.nnz());
+        let specs = [
+            ShardSpec::default(),
+            ShardSpec::by_count(1),
+            ShardSpec::by_count(4),
+            ShardSpec::by_count(1000),
+            ShardSpec::by_budget(1),
+            ShardSpec::by_budget(total / 3 + 1),
+            ShardSpec::by_budget(total * 10 + 1),
+        ];
+        for spec in specs {
+            let plan = ShardPlan::partition(g, &spec);
+            plan.validate().unwrap();
+            let mut owner = vec![0u32; g.n_rows];
+            for s in plan.shards() {
+                for r in s.rows.clone() {
+                    owner[r] += 1;
+                }
+            }
+            assert!(
+                owner.iter().all(|&c| c == 1),
+                "{spec:?} on n={} must cover each row once",
+                g.n_rows
+            );
+        }
+    }
+}
+
+/// A row whose working set alone exceeds the budget gets its own shard
+/// and nothing panics downstream of it.
+#[test]
+fn mega_row_is_isolated_not_split() {
+    let heavy = 6000usize;
+    let mut triples: Vec<(i32, i32, f32)> = Vec::new();
+    for r in 0..10i32 {
+        triples.push((r, r % 7, 1.0));
+    }
+    for e in 0..heavy {
+        triples.push((10, (e % 50) as i32, 0.5));
+    }
+    for r in 11..20i32 {
+        triples.push((r, (r * 3) % 50, 1.0));
+    }
+    let g = aes_spmm::graph::coo_to_csr(20, 50, triples).unwrap();
+    let budget = working_set_bytes(1, 64);
+    let plan = ShardPlan::partition(&g, &ShardSpec::by_budget(budget));
+    plan.validate().unwrap();
+    let host = plan.shards().iter().find(|s| s.rows.contains(&10)).unwrap();
+    assert_eq!(host.csr.max_degree(), heavy);
+
+    // The sharded execution built over it must still match unsharded —
+    // wide features would tempt dispatch toward the row-cache kernel,
+    // but the ROWCACHE_MAX_ROW_NNZ gate keeps the 6000-edge row on the
+    // order-preserving naive kernel.
+    let feats = 16usize;
+    let b: Vec<f32> = (0..50 * feats).map(|i| (i as f32).sin()).collect();
+    let sp =
+        ShardedPlan::prepare(&g, &ShardSpec::by_budget(budget), None, Strategy::Aes, feats, None);
+    assert!(sp.shard_count() >= 2);
+    let mut want = vec![0.0f32; 20 * feats];
+    aes_spmm::spmm::csr_naive(&g, &b, feats, &mut want);
+    let mut got = vec![0.0f32; 20 * feats];
+    sp.run(&b, feats, &mut got, &ExecEnv::with_threads(4));
+    assert_eq!(want, got);
+}
+
+/// Sharding must not perturb the golden sampling math: a row of nnz 100
+/// (or 600) at W=16 samples the same offsets whether its shard starts at
+/// row 0 or somewhere in the middle of the graph — the per-row plan
+/// depends only on (row_nnz, W, strategy).
+#[test]
+fn sharded_sampling_matches_the_golden_row_plans() {
+    // Rows: 30 light rows, one golden 100-nnz row, 30 light, one golden
+    // 600-nnz row, 30 light.
+    let mut triples: Vec<(i32, i32, f32)> = Vec::new();
+    let light = |r: i32, triples: &mut Vec<(i32, i32, f32)>| {
+        for c in 0..3 {
+            triples.push((r, (r + c) % 700, 1.0));
+        }
+    };
+    for r in 0..30 {
+        light(r, &mut triples);
+    }
+    for e in 0..100i32 {
+        triples.push((30, e, e as f32));
+    }
+    for r in 31..61 {
+        light(r, &mut triples);
+    }
+    for e in 0..600i32 {
+        triples.push((61, e, (e * 2) as f32));
+    }
+    for r in 62..92 {
+        light(r, &mut triples);
+    }
+    let g = aes_spmm::graph::coo_to_csr(92, 700, triples).unwrap();
+
+    let sp = ShardedPlan::prepare(&g, &ShardSpec::by_count(5), Some(16), Strategy::Aes, 8, None);
+    assert!(sp.shard_count() >= 2);
+    for (global_row, golden_nnz) in [(30usize, 100usize), (61, 600)] {
+        let unit = sp
+            .units()
+            .iter()
+            .find(|u| u.rows.contains(&global_row))
+            .expect("golden row must land in a shard");
+        let ell = unit.ell.as_ref().expect("sampled route builds per-shard ELL");
+        let local = global_row - unit.rows.start;
+        let w = ell.width;
+        let golden = plan_row(golden_nnz, 16, Strategy::Aes);
+        assert_eq!(ell.slots[local] as usize, golden.len());
+        let base = g.row_ptr[global_row] as usize;
+        for (slot, &off) in golden.iter().enumerate() {
+            assert_eq!(
+                ell.col[local * w + slot],
+                g.col_ind[base + off],
+                "row {global_row} slot {slot} must follow the golden offset {off}"
+            );
+            assert_eq!(ell.val[local * w + slot], g.val[base + off]);
+        }
+    }
+}
+
+/// The headline acceptance test: a sharded host forward (eager fp32,
+/// INT8, streamed INT8; exact and sampled) equals the unsharded forward
+/// **bitwise** for shard counts >= 2.
+#[test]
+fn sharded_forward_is_bitwise_equal_to_unsharded() {
+    let dir = synthetic_artifacts("bitwise", "tiny");
+    let ds = Dataset::load(&dir, "tiny").unwrap();
+    let weights = Weights::load(&dir, "gcn", "tiny").unwrap();
+    let fstore = FeatureStore::open(dir.join("data_tiny.nbt")).unwrap();
+    let env = ExecEnv::with_threads(4);
+
+    for (width, precision, stream) in [
+        (None, Precision::F32, false),
+        (Some(4), Precision::F32, false),
+        (Some(16), Precision::F32, false),
+        (Some(4), Precision::U8Device, true), // streamed INT8 when mmap exists
+    ] {
+        let fwd = aes_spmm::runtime::ForwardRequest {
+            model: "gcn".into(),
+            dataset: "tiny".into(),
+            width,
+            strategy: Strategy::Aes,
+            precision,
+        };
+        let base_spec = plan_spec(&ds.csr_gcn, width, stream, None);
+        let base_plan = prepare_plan(&fstore, precision, &base_spec, FEATS, &env).unwrap();
+        let want = host_forward(&ds, &weights, &fwd, None, Some(&base_plan), &env).unwrap();
+        let want = want.logits.as_f32().unwrap().to_vec();
+
+        for shards in [2usize, 3, 7] {
+            let spec = plan_spec(&ds.csr_gcn, width, stream, Some(ShardSpec::by_count(shards)));
+            let plan = prepare_plan(&fstore, precision, &spec, FEATS, &env).unwrap();
+            let sp = plan.sharded.as_ref().expect("spec must shard the plan");
+            assert_eq!(sp.shard_count(), shards);
+            let got = host_forward(&ds, &weights, &fwd, None, Some(&plan), &env).unwrap();
+            assert_eq!(
+                want,
+                got.logits.as_f32().unwrap(),
+                "width {width:?} precision {precision:?} shards {shards}: \
+                 concatenated shard outputs must equal the unsharded forward bitwise"
+            );
+        }
+    }
+}
+
+/// Per-shard adaptivity end to end: a graph with a uniform head and a
+/// skewed tail yields shards with different sampling modes and
+/// different dispatched kernels — and still matches unsharded bitwise.
+#[test]
+fn adaptive_shards_diverge_and_stay_exact() {
+    // Equal edge masses (120 × deg 4 head, 8 × deg 60 tail) pin the
+    // 2-way quantile cut to the uniform/skewed boundary at row 120.
+    let mut triples: Vec<(i32, i32, f32)> = Vec::new();
+    for r in 0..120i32 {
+        for c in 0..4 {
+            triples.push((r, (r + c * 17) % 150, 0.25));
+        }
+    }
+    for r in 120..128i32 {
+        for e in 0..60 {
+            triples.push((r, (e * 7) % 150, 0.125));
+        }
+    }
+    let g = aes_spmm::graph::coo_to_csr(128, 150, triples).unwrap();
+    let sp = ShardedPlan::prepare(&g, &ShardSpec::by_count(2), Some(8), Strategy::Aes, 32, None);
+    assert_eq!(sp.shard_count(), 2);
+    let head = &sp.units()[0];
+    let tail = sp.units().last().unwrap();
+    assert_eq!(head.rows, 0..120);
+    assert!(matches!(head.sampling, ShardSampling::Exhaustive { width: 4 }));
+    assert!(matches!(tail.sampling, ShardSampling::Sampled { width: 8, .. }));
+
+    let b: Vec<f32> = (0..150 * 32).map(|i| ((i % 91) as f32) * 0.01 - 0.4).collect();
+    let ell = aes_spmm::sampling::sample_ell(&g, 8, Strategy::Aes);
+    let mut want = vec![0.0f32; 128 * 32];
+    aes_spmm::spmm::ell_spmm(&ell, &b, 32, &mut want);
+    let mut got = vec![0.0f32; 128 * 32];
+    sp.run(&b, 32, &mut got, &ExecEnv::with_threads(4));
+    assert_eq!(want, got);
+}
+
+fn start_sharded_coordinator(
+    dir: &Path,
+    name: &str,
+    sharding: Option<ShardSpec>,
+) -> (Coordinator, Arc<ModelStore>) {
+    let store =
+        Arc::new(ModelStore::load(dir, &[name.to_string()], &["gcn".to_string()]).unwrap());
+    let coord = Coordinator::start_with(
+        Backend::Host,
+        store.clone(),
+        CoordinatorConfig {
+            workers: 2,
+            queue_depth: 64,
+            batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+            plan_cache_capacity: 16,
+            prefetch_workers: 1,
+            sharding,
+            ..CoordinatorConfig::default()
+        },
+    );
+    (coord, store)
+}
+
+/// The coordinator serves sharded routes with answers equal to a direct
+/// unsharded forward, warms shard units across precisions (a sibling
+/// route's build samples zero shards), and drops units on invalidation.
+#[test]
+fn coordinator_serves_sharded_routes_and_reuses_units() {
+    let dir = synthetic_artifacts("coord", "tiny");
+    let ds = Dataset::load(&dir, "tiny").unwrap();
+    let weights = Weights::load(&dir, "gcn", "tiny").unwrap();
+    let (coord, _store) = start_sharded_coordinator(&dir, "tiny", Some(ShardSpec::by_count(3)));
+
+    let key = |precision| RouteKey {
+        model: "gcn".into(),
+        dataset: "tiny".into(),
+        width: Some(4),
+        strategy: Strategy::Aes,
+        precision,
+    };
+
+    // First route: all 3 units built cold.
+    let nodes: Vec<usize> = (0..N).step_by(11).collect();
+    let resp = coord.infer(key(Precision::F32), nodes.clone()).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let s1 = coord.shard_stats();
+    assert_eq!(s1.resident, 3);
+    assert_eq!(s1.misses, 3, "three cold shard builds");
+
+    // Answers equal the direct unsharded forward.
+    let fwd = key(Precision::F32).to_forward();
+    let direct =
+        host_forward(&ds, &weights, &fwd, None, None, &ExecEnv::with_threads(1)).unwrap();
+    let logits = direct.logits.as_f32().unwrap();
+    for p in &resp.predictions {
+        let want = argmax_f32(&logits[p.node * CLASSES..(p.node + 1) * CLASSES]) as i32;
+        assert_eq!(p.class, want, "node {}", p.node);
+    }
+
+    // Sibling precision: new plan, zero new shard builds.
+    let resp = coord.infer(key(Precision::U8Device), vec![0, 5]).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let s2 = coord.shard_stats();
+    assert_eq!(s2.misses, 3, "warm units must serve the sibling route");
+    assert!(s2.hits >= 3, "the sibling build must hit all three units (got {})", s2.hits);
+    let snap = coord.metrics().snapshot();
+    assert!(snap.sharded_batches >= 2);
+
+    // Invalidation drops the dataset's units with the plan.
+    assert!(coord.invalidate_route(&key(Precision::F32)));
+    assert_eq!(coord.shard_stats().resident, 0, "republished dataset drops its shard units");
+    let resp = coord.infer(key(Precision::F32), vec![1]).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(coord.shard_stats().resident, 3, "rebuilt after invalidation");
+    coord.shutdown();
+}

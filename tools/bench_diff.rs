@@ -1,0 +1,264 @@
+//! `bench_diff` — CI's bench-regression gate.
+//!
+//! Compares a freshly generated bench JSON (`./ci.sh --bench` writes
+//! `BENCH_spmm.json` / `BENCH_loading.json`) against a committed
+//! baseline and fails when any case's median slowed down by more than
+//! the threshold (throughput regression = time increase).
+//!
+//! ```text
+//! bench_diff <fresh.json> <baseline.json> [--threshold 0.15] [--min-median-us 100]
+//! ```
+//!
+//! * Cases are discovered structurally: any JSON object carrying both
+//!   `name` and `median_ns` is a case; objects carrying `name` +
+//!   `cases` (the per-workload grouping) extend the case's path prefix.
+//!   This makes the tool agnostic to the exact report schema, so both
+//!   bench files — and future ones — diff without changes here.
+//! * Cases whose **baseline** median is under `--min-median-us` are
+//!   reported informationally but never fail the gate: micro-times
+//!   jitter far beyond any sane threshold on shared CI runners.
+//! * A baseline case missing from the fresh run **fails** the gate —
+//!   silent coverage loss (a renamed bench, a bench that crashed after
+//!   partial JSON) must force a deliberate baseline refresh. Fresh-only
+//!   cases are informational.
+//! * A missing baseline file is the bootstrap state (the repo starts
+//!   with no toolchain-blessed numbers): the tool prints how to seed
+//!   `benchmarks/baseline/` from the fresh file and exits 0.
+//! * Exit codes: 0 = pass (or bootstrap), 1 = regression, 2 = usage or
+//!   malformed input.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use aes_spmm::util::{parse_json, JsonValue};
+
+/// Recursively collect `(path-qualified name, median_ns)` cases.
+fn collect_cases(prefix: &str, v: &JsonValue, out: &mut BTreeMap<String, f64>) {
+    match v {
+        JsonValue::Obj(map) => {
+            let name = map.get("name").and_then(|n| n.as_str().ok());
+            if let (Some(name), Some(JsonValue::Num(median))) = (name, map.get("median_ns")) {
+                let key = if prefix.is_empty() {
+                    name.to_string()
+                } else {
+                    format!("{prefix} / {name}")
+                };
+                out.insert(key, *median);
+                return;
+            }
+            // Grouping object: a name plus nested cases extends the path.
+            let nested = match name {
+                Some(n) if map.contains_key("cases") => {
+                    if prefix.is_empty() {
+                        n.to_string()
+                    } else {
+                        format!("{prefix} / {n}")
+                    }
+                }
+                _ => prefix.to_string(),
+            };
+            for val in map.values() {
+                collect_cases(&nested, val, out);
+            }
+        }
+        JsonValue::Arr(items) => {
+            for item in items {
+                collect_cases(prefix, item, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn load_cases(path: &str) -> Result<BTreeMap<String, f64>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    let doc = parse_json(&text).map_err(|e| format!("{path} is not valid JSON: {e}"))?;
+    let mut cases = BTreeMap::new();
+    collect_cases("", &doc, &mut cases);
+    if cases.is_empty() {
+        return Err(format!("{path} holds no cases (objects with name + median_ns)"));
+    }
+    Ok(cases)
+}
+
+fn parse_flag(args: &[String], flag: &str, default: f64) -> Result<f64, String> {
+    match args.iter().position(|a| a == flag) {
+        Some(i) => args
+            .get(i + 1)
+            .ok_or_else(|| format!("{flag} needs a value"))?
+            .parse()
+            .map_err(|e| format!("{flag}: {e}")),
+        None => Ok(default),
+    }
+}
+
+/// Everything that is not a `--flag` or a flag's value (every flag here
+/// takes one value).
+fn positionals(args: &[String]) -> Vec<&String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i].starts_with("--") {
+            i += 2;
+        } else {
+            out.push(&args[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let positional = positionals(&args);
+    let [fresh_path, baseline_path] = positional.as_slice() else {
+        return Err("usage: bench_diff <fresh.json> <baseline.json> \
+                    [--threshold 0.15] [--min-median-us 100]"
+            .to_string());
+    };
+    let threshold = parse_flag(&args, "--threshold", 0.15)?;
+    let min_median_ns = parse_flag(&args, "--min-median-us", 100.0)? * 1_000.0;
+
+    let fresh = load_cases(fresh_path)?;
+    if !std::path::Path::new(baseline_path.as_str()).exists() {
+        println!("bench_diff: no baseline at {baseline_path} — bootstrap run.");
+        println!(
+            "  {} fresh case(s) measured; to arm the gate, commit the fresh file:",
+            fresh.len()
+        );
+        println!("    cp {fresh_path} {baseline_path}");
+        return Ok(true);
+    }
+    let baseline = load_cases(baseline_path)?;
+
+    let mut regressions = Vec::new();
+    let mut gone = Vec::new();
+    let mut compared = 0usize;
+    let mut noisy = 0usize;
+    for (name, &base) in &baseline {
+        let Some(&new) = fresh.get(name) else {
+            // A vanished case fails the gate: a renamed bench or one
+            // that crashed after partial JSON would otherwise shrink
+            // coverage silently. Intentional renames go through a
+            // baseline refresh (benchmarks/baseline/README.md).
+            println!("  [GONE]  {name} (in baseline, not in fresh run)");
+            gone.push(name.clone());
+            continue;
+        };
+        compared += 1;
+        let rel = new / base.max(1.0) - 1.0;
+        if base < min_median_ns {
+            noisy += 1;
+            if rel > threshold {
+                println!(
+                    "  [noise] {name}: {:.0}ns -> {:.0}ns ({:+.1}%) — under the {}µs floor",
+                    base,
+                    new,
+                    rel * 100.0,
+                    min_median_ns / 1_000.0
+                );
+            }
+            continue;
+        }
+        if rel > threshold {
+            println!(
+                "  [SLOW]  {name}: {:.2}ms -> {:.2}ms ({:+.1}%)",
+                base / 1e6,
+                new / 1e6,
+                rel * 100.0
+            );
+            regressions.push(name.clone());
+        }
+    }
+    for name in fresh.keys() {
+        if !baseline.contains_key(name) {
+            println!("  [new]   {name} (no baseline yet)");
+        }
+    }
+    println!(
+        "bench_diff: {compared} case(s) compared ({noisy} under the noise floor), \
+         {} regression(s) beyond {:.0}%, {} baseline case(s) missing from the fresh run",
+        regressions.len(),
+        threshold * 100.0,
+        gone.len()
+    );
+    Ok(regressions.is_empty() && gone.is_empty())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(msg) => {
+            eprintln!("bench_diff: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cases_of(text: &str) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        collect_cases("", &parse_json(text).unwrap(), &mut out);
+        out
+    }
+
+    #[test]
+    fn collects_flat_and_nested_cases() {
+        // The spmm_kernels shape: workloads → named groups → cases.
+        let spmm = r#"{"bench":"spmm_kernels","workloads":[
+            {"name":"cora-like","n":2708,"cases":[
+                {"name":"exact csr","median_ns":1000000,"iters":10},
+                {"name":"sampled aes w16","median_ns":250000,"iters":10}]},
+            {"name":"reddit-like","cases":[
+                {"name":"exact csr","median_ns":9000000,"iters":5}]}]}"#;
+        let c = cases_of(spmm);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c["cora-like / exact csr"], 1e6);
+        assert_eq!(c["reddit-like / exact csr"], 9e6);
+
+        // The loading shape: top-level cases array.
+        let loading = r#"{"bench":"loading","cases":[
+            {"name":"cold stage fp32","median_ns":5000000,"bytes_staged":4096},
+            {"name":"cold stage int8","median_ns":1200000,"bytes_staged":1024}]}"#;
+        let c = cases_of(loading);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c["cold stage int8"], 1.2e6);
+    }
+
+    #[test]
+    fn case_objects_do_not_recurse_into_themselves() {
+        // A case with extra nested junk is still exactly one case.
+        let doc = r#"[{"name":"x","median_ns":5,"extra":{"name":"inner","median_ns":9}}]"#;
+        assert_eq!(cases_of(doc).len(), 1);
+    }
+
+    #[test]
+    fn flag_values_are_not_positional() {
+        // `--threshold 0.15` must consume its value, leaving exactly the
+        // two paths as positionals.
+        let args: Vec<String> =
+            ["fresh.json", "base.json", "--threshold", "0.15", "--min-median-us", "50"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(positionals(&args), ["fresh.json", "base.json"]);
+        assert_eq!(parse_flag(&args, "--threshold", 0.99).unwrap(), 0.15);
+        assert_eq!(parse_flag(&args, "--min-median-us", 100.0).unwrap(), 50.0);
+    }
+
+    #[test]
+    fn regression_math() {
+        // 15% threshold: +14% passes, +16% fails (sanity on the formula
+        // used in run(); kept in lockstep by construction).
+        let base = 1_000_000.0f64;
+        for (new, slow) in [(1_140_000.0, false), (1_160_000.0, true)] {
+            let rel: f64 = new / base - 1.0;
+            assert_eq!(rel > 0.15, slow);
+        }
+    }
+}
