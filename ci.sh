@@ -11,6 +11,8 @@
 #   ./ci.sh --bench       full gate, then benches + bench_diff regression gate
 #   ./ci.sh --bench-only  benches + bench_diff only (CI's bench job, which
 #                         already ran the gate via its `needs:` dependency)
+#   ./ci.sh --eval-only   accuracy conformance (repro eval -> ACC_eval.json)
+#                         + acc_diff regression gate (CI's eval job)
 #
 # Env knobs:
 #   SKIP_LINT=1   skip the fmt + clippy steps (e.g. a toolchain without
@@ -48,9 +50,30 @@ run_benches() {
         BENCH_loading.json benchmarks/baseline/BENCH_loading.json --threshold 0.15
 }
 
+run_eval_gate() {
+    # The conformance grid needs no artifacts: seeded datasets are
+    # generated under target/, served on the host backend, and scored
+    # against the exact oracle. `repro eval` exits nonzero on any
+    # budget violation; acc_diff additionally fails on top-1 agreement
+    # drops vs the committed baseline (bootstrap-pass while
+    # benchmarks/baseline/ACC_eval.json is unseeded).
+    echo "== accuracy conformance: ACC_eval.json =="
+    cargo run --release -p aes-spmm --bin repro -- \
+        eval --json "$PWD/ACC_eval.json" --dir "$PWD/target/acc-eval"
+    echo "== accuracy regression gate (budget violation or agreement drop fails) =="
+    cargo run --release -p aes-spmm --bin acc_diff -- \
+        ACC_eval.json benchmarks/baseline/ACC_eval.json
+}
+
 if [[ "${1:-}" == "--bench-only" ]]; then
     run_benches
     echo "CI OK (bench only)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--eval-only" ]]; then
+    run_eval_gate
+    echo "CI OK (eval only)"
     exit 0
 fi
 

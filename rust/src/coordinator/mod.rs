@@ -52,6 +52,12 @@
 //!   their own keyed by (dataset, width, strategy, row range) — shared
 //!   across precisions, so a plan build re-samples only cold shards.
 //!   Invalidating a route drops its dataset's units too.
+//! * Accuracy conformance (`crate::eval`) enters through
+//!   [`Coordinator::route_logits`]: the same plan resolution and
+//!   backend execution as a batch worker, returning raw logits so
+//!   every configuration — including [`CoordinatorConfig::streaming`]
+//!   off (eager staging) — is scored against the exact oracle through
+//!   this stack, never a side path.
 
 mod batcher;
 mod metrics;

@@ -60,6 +60,14 @@ pub struct CoordinatorConfig {
     /// `None` keeps single-working-set plans. Ignored by device
     /// backends, which aggregate in the compiled artifact.
     pub sharding: Option<ShardSpec>,
+    /// Stage features through the zero-copy streaming path on
+    /// host-aggregating backends (`FeatureStore::stage`: mmap row-block
+    /// handles, lazy per-block dequant). `false` forces eager loads —
+    /// the accuracy-conformance eval uses both settings to pin the
+    /// streamed-vs-eager bitwise guarantee through the serving path.
+    /// Ignored by device backends (always eager) and by fp32 routes
+    /// (which never stream).
+    pub streaming: bool,
     /// Prepared shard units kept warm across routes and precisions
     /// (LRU; units are pure graph structure, so one entry serves every
     /// route over the same operand).
@@ -75,6 +83,7 @@ impl Default for CoordinatorConfig {
             plan_cache_capacity: 64,
             prefetch_workers: 1,
             sharding: None,
+            streaming: true,
             shard_cache_capacity: 256,
         }
     }
@@ -139,6 +148,8 @@ struct WorkerCtx {
     prefetch: Option<Prefetcher<PlanKey, ExecPlan>>,
     /// Sharding policy for host aggregation plans (`None` = unsharded).
     sharding: Option<ShardSpec>,
+    /// Whether host plans stage features through the streaming path.
+    streaming: bool,
     /// Prepared shard units, shared across routes/precisions — a plan
     /// build (inline or prefetched) samples only the cold shards.
     shard_units: Arc<PlanCache<ShardKey, ShardUnit>>,
@@ -182,6 +193,7 @@ impl Coordinator {
             plans,
             prefetch,
             sharding: cfg.sharding,
+            streaming: cfg.streaming,
             shard_units: Arc::new(PlanCache::new(cfg.shard_cache_capacity)),
             env: ExecEnv::detect(),
         });
@@ -258,6 +270,22 @@ impl Coordinator {
     pub fn infer(&self, key: RouteKey, nodes: Vec<usize>) -> Result<InferResponse> {
         let (_, rx) = self.submit(key, nodes).map_err(anyhow::Error::from)?;
         Ok(rx.recv()?)
+    }
+
+    /// Execute one route synchronously through the full serving data
+    /// path — plan cache, prefetcher, sharded execution, backend — and
+    /// return the raw logits tensor.
+    ///
+    /// This is the accuracy-conformance entry (`eval::run_eval`,
+    /// `tests/accuracy.rs`): it resolves and executes the route exactly
+    /// the way a batch worker does (the batched request path only adds
+    /// grouping and per-node argmax on top), but hands back the logits
+    /// so differential metrics can be computed against the exact oracle.
+    /// Runs on the calling thread; plan-cache hit/miss and
+    /// sharded-batch metrics are recorded as usual.
+    pub fn route_logits(&self, key: &RouteKey) -> Result<Tensor> {
+        let (logits, ..) = execute_route(&self.ctx, key)?;
+        Ok(logits)
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -449,8 +477,10 @@ fn build_plan(ctx: &WorkerCtx, key: &RouteKey) -> Result<ExecPlan> {
         host_ell: host_aggregation,
         // Host aggregation consumes features row-block-wise, so the plan
         // can hold a zero-copy streamed handle; device artifacts need the
-        // eagerly materialized tensor.
-        stream: host_aggregation,
+        // eagerly materialized tensor. The eval harness flips
+        // `CoordinatorConfig::streaming` off to pin streamed-vs-eager
+        // bitwise equality through this exact path.
+        stream: host_aggregation && ctx.streaming,
         shard,
         // Units are keyed by dataset + width + strategy + row range, so a
         // build for one precision warms every sibling route's shards.

@@ -1,0 +1,204 @@
+//! Seeded conformance datasets — deterministic synthetic graphs the
+//! accuracy grid runs over.
+//!
+//! Two degree profiles, so both branches of
+//! [`crate::sampling::shard_width`] get exercised: a **power-law** DC-SBM
+//! (hubs overflow every grid width → skewed shards keep the full tile
+//! and sample) and a **uniform** DC-SBM (rows fit modest widths →
+//! uniform shards shrink to an exhaustive tile).
+//!
+//! The construction is deliberately *homophilous*: community labels,
+//! features carrying a one-hot community signal plus small noise, and
+//! weights that pass that signal through both layers. That mirrors the
+//! regime the paper's accuracy claims are made in — GNN inputs where
+//! neighbors agree — and gives the logits wide margins, so edge sampling
+//! (a subset of mostly same-community neighbors) and INT8 rounding
+//! (≤ 1/255 of the feature range) perturb predictions about as much as
+//! they perturb the paper's benchmarks. Purely random features would
+//! instead measure sampling noise on margin-free logits, which no
+//! serving stack could keep within the paper's budgets.
+//!
+//! Everything is derived from fixed seeds: the same binary produces the
+//! same graphs, the same plans, and therefore bit-identical logits on
+//! every run and machine.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::gen::{self, DcSbmConfig};
+use crate::quant::{quantize, QuantParams};
+use crate::rng::Pcg32;
+use crate::tensor::{write_nbt, NbtFile, Tensor};
+
+/// Nodes per conformance dataset.
+pub const EVAL_NODES: usize = 160;
+/// Feature dimension.
+pub const EVAL_FEATS: usize = 8;
+/// Hidden dimension of the synthetic GCN weights.
+pub const EVAL_HIDDEN: usize = 6;
+/// Classes (= DC-SBM communities).
+pub const EVAL_CLASSES: usize = 4;
+/// Target average degree before self-loops.
+pub const EVAL_AVG_DEG: f64 = 10.0;
+
+/// Degree profile of a conformance dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegreeProfile {
+    /// Power-law expected degrees (hubs overflow the sampling widths).
+    PowerLaw,
+    /// Uniform expected degrees (rows fit modest tile widths).
+    Uniform,
+}
+
+/// One conformance dataset: name, degree profile, generator seed.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalDatasetSpec {
+    /// Dataset name (`data_<name>.nbt` / `weights_gcn_<name>.nbt`).
+    pub name: &'static str,
+    /// Degree profile driving the DC-SBM generator.
+    pub profile: DegreeProfile,
+    /// Seed for every random draw in the dataset.
+    pub seed: u64,
+}
+
+/// The fixed conformance-dataset roster.
+pub const EVAL_DATASETS: [EvalDatasetSpec; 2] = [
+    EvalDatasetSpec { name: "evalpow", profile: DegreeProfile::PowerLaw, seed: 0xACC_0001 },
+    EvalDatasetSpec { name: "evaluni", profile: DegreeProfile::Uniform, seed: 0xACC_0002 },
+];
+
+/// Write one conformance dataset (`data_*.nbt` + `weights_gcn_*.nbt`)
+/// under `dir`. Fully deterministic in `spec.seed`.
+pub fn write_eval_dataset(dir: &Path, spec: &EvalDatasetSpec) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let (n, f, h, c) = (EVAL_NODES, EVAL_FEATS, EVAL_HIDDEN, EVAL_CLASSES);
+    let mut rng = Pcg32::new(spec.seed);
+    let gamma = match spec.profile {
+        DegreeProfile::PowerLaw => 1.8,
+        DegreeProfile::Uniform => 0.0,
+    };
+    let cfg = DcSbmConfig {
+        n,
+        avg_deg: EVAL_AVG_DEG,
+        gamma,
+        communities: c,
+        homophily: 0.9,
+    };
+    let (raw, comm) = gen::dc_sbm(&cfg, &mut rng);
+    let g = gen::with_self_loops(&raw).gcn_normalized();
+    let nnz = g.nnz();
+
+    // Features: strictly positive noise plus a one-hot community bump —
+    // no exact zeros, so the host's zero-skipping multiply and the
+    // oracle's plain multiply see identical FP sequences.
+    let mut feat = vec![0.0f32; n * f];
+    for (i, &label) in comm.iter().enumerate() {
+        for j in 0..f {
+            feat[i * f + j] = 0.02 + 0.08 * rng.f32();
+        }
+        feat[i * f + label as usize] += 1.0;
+    }
+    let params = QuantParams::of(&feat);
+    let featq = quantize(&feat, params);
+
+    let mut nbt = NbtFile::new();
+    nbt.insert(
+        "meta",
+        Tensor::from_i64(&[4], &[n as i64, nnz as i64, f as i64, c as i64]),
+    );
+    nbt.insert("row_ptr", Tensor::from_i32(&[n + 1], &g.row_ptr));
+    nbt.insert("col_ind", Tensor::from_i32(&[nnz], &g.col_ind));
+    nbt.insert("val_gcn", Tensor::from_f32(&[nnz], &g.val));
+    nbt.insert("val_ones", Tensor::from_f32(&[nnz], &vec![1.0f32; nnz]));
+    nbt.insert("feat", Tensor::from_f32(&[n, f], &feat));
+    nbt.insert("featq", Tensor::from_u8(&[n, f], &featq));
+    nbt.insert("qrange", Tensor::from_f32(&[2], &[params.x_min, params.x_max]));
+    nbt.insert("labels", Tensor::from_i32(&[n], &comm));
+    nbt.insert("train_mask", Tensor::from_u8(&[n], &vec![0u8; n]));
+    write_nbt(dir.join(format!("data_{}.nbt", spec.name)), &nbt)?;
+
+    // Weights: class-preserving diagonals plus small off-diagonal noise.
+    // Biases are kept strictly nonzero so no pre-ReLU value can land on
+    // an exact -0.0 (the one case where the oracle's branch-ReLU and the
+    // platform's maxNum could disagree on the sign of zero).
+    let mut w0 = vec![0.0f32; f * h];
+    for slot in w0.iter_mut() {
+        *slot = 0.01 * (rng.f32() - 0.5);
+    }
+    for j in 0..c.min(h) {
+        w0[j * h + j] += 1.0;
+    }
+    let b0: Vec<f32> = (0..h).map(|_| -0.04 - 0.02 * rng.f32()).collect();
+    let mut w1 = vec![0.0f32; h * c];
+    for slot in w1.iter_mut() {
+        *slot = 0.01 * (rng.f32() - 0.5);
+    }
+    for j in 0..c.min(h) {
+        w1[j * c + j] += 1.0;
+    }
+    let b1: Vec<f32> = (0..c).map(|_| 0.005 * (rng.f32() - 0.5)).collect();
+
+    let mut w = NbtFile::new();
+    w.insert("w0", Tensor::from_f32(&[f, h], &w0));
+    w.insert("b0", Tensor::from_f32(&[h], &b0));
+    w.insert("w1", Tensor::from_f32(&[h, c], &w1));
+    w.insert("b1", Tensor::from_f32(&[c], &b1));
+    w.insert("ideal_acc", Tensor::from_f32(&[1], &[1.0]));
+    write_nbt(dir.join(format!("weights_gcn_{}.nbt", spec.name)), &w)?;
+    Ok(())
+}
+
+/// Write every conformance dataset under `dir`; returns their names.
+pub fn write_eval_datasets(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::with_capacity(EVAL_DATASETS.len());
+    for spec in &EVAL_DATASETS {
+        write_eval_dataset(dir, spec)?;
+        names.push(spec.name.to_string());
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Dataset, Weights};
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("eval_ds_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn datasets_load_and_are_deterministic() {
+        let dir = tmp("det");
+        let names = write_eval_datasets(&dir).unwrap();
+        assert_eq!(names, ["evalpow", "evaluni"]);
+        let a = Dataset::load(&dir, "evalpow").unwrap();
+        // Rewriting produces byte-identical data.
+        write_eval_datasets(&dir).unwrap();
+        let b = Dataset::load(&dir, "evalpow").unwrap();
+        assert_eq!(a.csr_gcn, b.csr_gcn);
+        assert_eq!(a.feat.as_f32().unwrap(), b.feat.as_f32().unwrap());
+        assert_eq!(a.labels, b.labels);
+        let w = Weights::load(&dir, "gcn", "evalpow").unwrap();
+        assert_eq!(w.tensors.len(), 4);
+    }
+
+    #[test]
+    fn profiles_differ_in_skew() {
+        let dir = tmp("skew");
+        write_eval_datasets(&dir).unwrap();
+        let pow = Dataset::load(&dir, "evalpow").unwrap();
+        let uni = Dataset::load(&dir, "evaluni").unwrap();
+        assert_eq!(pow.n, EVAL_NODES);
+        // The power-law profile's hubs tower over the uniform profile's
+        // longest row, and both overflow the aggressive grid width (8).
+        assert!(pow.csr_gcn.max_degree() > uni.csr_gcn.max_degree());
+        assert!(pow.csr_gcn.max_degree() > 8);
+        assert!(uni.csr_gcn.max_degree() > 8);
+        // No exact zeros in features (the zero-skip FP argument).
+        assert!(pow.feat.as_f32().unwrap().iter().all(|&x| x > 0.0));
+    }
+}

@@ -1,0 +1,691 @@
+//! The conformance harness: run the {strategy × width × precision ×
+//! shards} grid through the **real serving path** — coordinator plan
+//! cache, prefetcher, sharded execution, host backend — and score every
+//! configuration against the exact oracle.
+//!
+//! Four coordinators serve the grid, one per (streaming, sharding)
+//! corner, so the INT8-eager vs INT8-streamed and sharded vs unsharded
+//! axes each exercise a genuinely different serving configuration
+//! rather than a test-only side path. Logits come back through
+//! [`Coordinator::route_logits`], which resolves plans exactly the way
+//! a batch worker does.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, RouteKey};
+use crate::exec::{ShardSampling, ShardedPlan};
+use crate::experiments::Table;
+use crate::graph::ShardSpec;
+use crate::quant::Precision;
+use crate::runtime::{accuracy, Backend, Dataset};
+use crate::sampling::Strategy;
+use crate::tensor::Tensor;
+use crate::util::{argmax_f32, JsonValue};
+
+use super::budget::{budget_for, quant_delta_budget, Budget};
+use super::dataset::{write_eval_datasets, DegreeProfile, EVAL_DATASETS};
+use super::metrics::{compare_logits, AccuracyMetrics};
+use super::oracle::oracle_forward;
+
+/// Shard counts in the grid (1 = the unsharded plan path).
+pub const SHARD_GRID: [usize; 2] = [1, 3];
+
+/// Sampled tile widths in the grid (`None` = exact aggregation). The
+/// quick sweep drops the wide tile.
+pub fn width_grid(quick: bool) -> Vec<Option<usize>> {
+    if quick {
+        vec![None, Some(8)]
+    } else {
+        vec![None, Some(8), Some(32)]
+    }
+}
+
+/// How features reach the forward — the precision axis of the grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrecisionMode {
+    /// fp32 features (the baseline; never streamed).
+    F32,
+    /// INT8 features, staged eagerly (`CoordinatorConfig::streaming`
+    /// off).
+    U8Eager,
+    /// INT8 features, streamed zero-copy with lazy per-block dequant
+    /// (the serving default).
+    U8Streamed,
+}
+
+impl PrecisionMode {
+    /// Every grid point on the precision axis.
+    pub const ALL: [PrecisionMode; 3] =
+        [PrecisionMode::F32, PrecisionMode::U8Eager, PrecisionMode::U8Streamed];
+
+    /// The route-key precision this mode submits as.
+    pub fn precision(self) -> Precision {
+        match self {
+            PrecisionMode::F32 => Precision::F32,
+            PrecisionMode::U8Eager | PrecisionMode::U8Streamed => Precision::U8Device,
+        }
+    }
+
+    /// Whether this mode's features stream (zero-copy lazy dequant).
+    pub fn streamed(self) -> bool {
+        matches!(self, PrecisionMode::U8Streamed)
+    }
+
+    /// Which coordinator serves this mode: everything except eager INT8
+    /// rides the streaming coordinator — fp32 never streams
+    /// (`FeatureStore::stage` falls back to an eager load), so putting
+    /// it there keeps it on the serving-default configuration. Distinct
+    /// from [`PrecisionMode::streamed`]; the grid loop and the
+    /// serving-path probes must agree on this or they would compare
+    /// logits from two different coordinators' plan caches.
+    pub fn streaming_coordinator(self) -> bool {
+        !matches!(self, PrecisionMode::U8Eager)
+    }
+
+    /// Whether features are INT8-quantized (the quant budget applies).
+    pub fn quantized(self) -> bool {
+        !matches!(self, PrecisionMode::F32)
+    }
+
+    /// Stable label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            PrecisionMode::F32 => "f32",
+            PrecisionMode::U8Eager => "u8-eager",
+            PrecisionMode::U8Streamed => "u8-streamed",
+        }
+    }
+}
+
+/// One grid point's outcome.
+#[derive(Clone, Debug)]
+pub struct ConfigResult {
+    /// Conformance dataset name.
+    pub dataset: String,
+    /// Edge-sampling strategy (ignored by exact routes).
+    pub strategy: Strategy,
+    /// Sampling width (`None` = exact aggregation).
+    pub width: Option<usize>,
+    /// Precision-axis grid point.
+    pub mode: PrecisionMode,
+    /// Shard count the serving coordinator partitioned into.
+    pub shards: usize,
+    /// Differential metrics vs the oracle.
+    pub metrics: AccuracyMetrics,
+    /// The budget this configuration is held to.
+    pub budget: Budget,
+    /// Whether `metrics` sit inside `budget`.
+    pub pass: bool,
+    /// Label accuracy of this configuration's logits (context only).
+    pub label_accuracy: f64,
+    /// Label accuracy of the oracle on the same dataset (context only).
+    pub oracle_accuracy: f64,
+}
+
+impl ConfigResult {
+    /// Stable configuration id (the gate keys on it).
+    pub fn name(&self) -> String {
+        let shape = shape_label(self.width, self.strategy);
+        format!("{}/{}/{}/shards{}", self.dataset, shape, self.mode.name(), self.shards)
+    }
+}
+
+/// The width/strategy part of a configuration or check id — one
+/// formatter, so config names and check names can never desynchronize
+/// (acc_diff keys its baseline diff on these strings).
+fn shape_label(width: Option<usize>, strategy: Strategy) -> String {
+    match width {
+        Some(w) => format!("{}-w{w}", strategy.name()),
+        None => "exact".to_string(),
+    }
+}
+
+/// One cross-configuration invariant (bitwise or pairwise-budget check).
+#[derive(Clone, Debug)]
+pub struct EvalCheck {
+    /// Stable check id.
+    pub name: String,
+    /// Whether the invariant held.
+    pub pass: bool,
+    /// Human-readable evidence (counts, deltas).
+    pub detail: String,
+}
+
+/// Per-dataset context carried into the report.
+#[derive(Clone, Debug)]
+pub struct DatasetSummary {
+    /// Dataset name.
+    pub name: String,
+    /// Node count.
+    pub nodes: usize,
+    /// Class count.
+    pub classes: usize,
+    /// Longest row (drives which sampling branches fire).
+    pub max_degree: usize,
+    /// Label accuracy of the oracle forward.
+    pub oracle_accuracy: f64,
+}
+
+/// The full conformance report: every grid configuration plus the
+/// cross-configuration checks.
+#[derive(Clone, Debug, Default)]
+pub struct EvalReport {
+    /// Per-dataset context.
+    pub datasets: Vec<DatasetSummary>,
+    /// One entry per grid point.
+    pub configs: Vec<ConfigResult>,
+    /// Cross-configuration invariants.
+    pub checks: Vec<EvalCheck>,
+}
+
+impl EvalReport {
+    /// Whether every configuration and every check passed.
+    pub fn pass(&self) -> bool {
+        self.configs.iter().all(|c| c.pass) && self.checks.iter().all(|c| c.pass)
+    }
+
+    /// Failure descriptions (empty when [`EvalReport::pass`]).
+    pub fn failures(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for c in &self.configs {
+            if !c.pass {
+                out.push(format!(
+                    "config {}: {} of {} rows disagree with the oracle (top-1 {:.4}, \
+                     max |delta| {:.3e}) outside budget [{}]",
+                    c.name(),
+                    c.metrics.disagreeing,
+                    c.metrics.rows,
+                    c.metrics.top1_agreement,
+                    c.metrics.max_abs_delta,
+                    c.budget.label()
+                ));
+            }
+        }
+        for c in &self.checks {
+            if !c.pass {
+                out.push(format!("check {}: {}", c.name, c.detail));
+            }
+        }
+        out
+    }
+
+    /// The report as a flat JSON document (`ACC_eval.json`), consumed by
+    /// `tools/acc_diff.rs`.
+    pub fn to_json(&self) -> JsonValue {
+        use std::collections::BTreeMap;
+        let num = JsonValue::Num;
+        let mut root = BTreeMap::new();
+        root.insert("report".to_string(), JsonValue::Str("acc_eval".to_string()));
+        root.insert("version".to_string(), JsonValue::Num(1.0));
+        root.insert("pass".to_string(), JsonValue::Bool(self.pass()));
+        root.insert(
+            "datasets".to_string(),
+            JsonValue::Arr(
+                self.datasets
+                    .iter()
+                    .map(|d| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".to_string(), JsonValue::Str(d.name.clone()));
+                        m.insert("nodes".to_string(), num(d.nodes as f64));
+                        m.insert("classes".to_string(), num(d.classes as f64));
+                        m.insert("max_degree".to_string(), num(d.max_degree as f64));
+                        m.insert("oracle_accuracy".to_string(), num(d.oracle_accuracy));
+                        JsonValue::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "configs".to_string(),
+            JsonValue::Arr(
+                self.configs
+                    .iter()
+                    .map(|c| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".to_string(), JsonValue::Str(c.name()));
+                        m.insert("dataset".to_string(), JsonValue::Str(c.dataset.clone()));
+                        m.insert(
+                            "strategy".to_string(),
+                            JsonValue::Str(c.strategy.name().to_string()),
+                        );
+                        m.insert(
+                            "width".to_string(),
+                            c.width.map(|w| num(w as f64)).unwrap_or(JsonValue::Null),
+                        );
+                        m.insert(
+                            "precision".to_string(),
+                            JsonValue::Str(c.mode.name().to_string()),
+                        );
+                        m.insert("shards".to_string(), num(c.shards as f64));
+                        m.insert("rows".to_string(), num(c.metrics.rows as f64));
+                        m.insert(
+                            "disagreeing_rows".to_string(),
+                            num(c.metrics.disagreeing as f64),
+                        );
+                        m.insert("top1_agreement".to_string(), num(c.metrics.top1_agreement));
+                        m.insert("mean_rel_l2".to_string(), num(c.metrics.mean_rel_l2));
+                        m.insert("max_rel_l2".to_string(), num(c.metrics.max_rel_l2));
+                        m.insert(
+                            "max_abs_delta".to_string(),
+                            num(f64::from(c.metrics.max_abs_delta)),
+                        );
+                        m.insert(
+                            "bitwise_equal".to_string(),
+                            JsonValue::Bool(c.metrics.bitwise_equal),
+                        );
+                        m.insert("budget_top1_loss".to_string(), num(c.budget.max_top1_loss));
+                        m.insert(
+                            "budget_slack_rows".to_string(),
+                            num(c.budget.slack_rows as f64),
+                        );
+                        m.insert("budget_bitwise".to_string(), JsonValue::Bool(c.budget.bitwise));
+                        m.insert("label_accuracy".to_string(), num(c.label_accuracy));
+                        m.insert("oracle_accuracy".to_string(), num(c.oracle_accuracy));
+                        m.insert("pass".to_string(), JsonValue::Bool(c.pass));
+                        JsonValue::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "checks".to_string(),
+            JsonValue::Arr(
+                self.checks
+                    .iter()
+                    .map(|c| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".to_string(), JsonValue::Str(c.name.clone()));
+                        m.insert("pass".to_string(), JsonValue::Bool(c.pass));
+                        m.insert("detail".to_string(), JsonValue::Str(c.detail.clone()));
+                        JsonValue::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        JsonValue::Obj(root)
+    }
+
+    /// The report as a printable table (one row per configuration).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "acc_eval",
+            "accuracy conformance vs the exact oracle (paper Tables 4-6 budgets)",
+            &["config", "top-1", "flips", "max rel L2", "max |delta|", "budget", "pass"],
+        );
+        for c in &self.configs {
+            t.push(vec![
+                c.name(),
+                format!("{:.4}", c.metrics.top1_agreement),
+                format!("{}/{}", c.metrics.disagreeing, c.metrics.rows),
+                format!("{:.3e}", c.metrics.max_rel_l2),
+                format!("{:.3e}", c.metrics.max_abs_delta),
+                c.budget.label(),
+                if c.pass { "yes".to_string() } else { "NO".to_string() },
+            ]);
+        }
+        t
+    }
+}
+
+/// Bitwise comparison of two logit vectors, with a count of differing
+/// elements for check details.
+fn bits_equal(a: &[f32], b: &[f32]) -> (bool, usize) {
+    if a.len() != b.len() {
+        return (false, a.len().max(b.len()));
+    }
+    let differing = a.iter().zip(b.iter()).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+    (differing == 0, differing)
+}
+
+/// Bank key: one grid point's logits.
+type BankKey = (String, Strategy, Option<usize>, PrecisionMode, usize);
+
+/// Run the conformance grid under `dir` (datasets are (re)written there
+/// deterministically). `quick` trims the width axis for smoke runs.
+pub fn run_eval(dir: &Path, quick: bool) -> Result<EvalReport> {
+    let names = write_eval_datasets(dir)?;
+    let store = Arc::new(ModelStore::load(dir, &names, &["gcn".to_string()])?);
+
+    // One coordinator per (streaming, shards) corner of the grid.
+    let mut coords: HashMap<(bool, usize), Coordinator> = HashMap::new();
+    for &shards in &SHARD_GRID {
+        for streaming in [false, true] {
+            let cfg = CoordinatorConfig {
+                workers: 2,
+                queue_depth: 256,
+                plan_cache_capacity: 128,
+                prefetch_workers: 1,
+                sharding: (shards > 1).then(|| ShardSpec::by_count(shards)),
+                streaming,
+                batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+                ..CoordinatorConfig::default()
+            };
+            let coord = Coordinator::start_with(Backend::Host, store.clone(), cfg);
+            coords.insert((streaming, shards), coord);
+        }
+    }
+
+    let widths = width_grid(quick);
+    // Route shapes: the exact route (strategy-independent, keep one),
+    // then every (width, strategy) pair.
+    let mut shapes: Vec<(Option<usize>, Strategy)> = vec![(None, Strategy::Aes)];
+    for w in widths.iter().filter_map(|w| *w) {
+        for s in Strategy::ALL {
+            shapes.push((Some(w), s));
+        }
+    }
+
+    let mut report = EvalReport::default();
+    let mut bank: HashMap<BankKey, Vec<f32>> = HashMap::new();
+
+    for spec in &EVAL_DATASETS {
+        let name = spec.name;
+        let ds = store.dataset(name)?;
+        let weights = store.weights("gcn", name)?;
+        let oracle = oracle_forward(&ds, &weights)?;
+        let oracle_t = Tensor::from_f32(&[ds.n, ds.classes], &oracle);
+        let oracle_acc = accuracy(&ds, &oracle_t)?;
+        report.datasets.push(DatasetSummary {
+            name: name.to_string(),
+            nodes: ds.n,
+            classes: ds.classes,
+            max_degree: ds.csr_gcn.max_degree(),
+            oracle_accuracy: oracle_acc,
+        });
+
+        // The grid proper.
+        for &(width, strategy) in &shapes {
+            for mode in PrecisionMode::ALL {
+                for &shards in &SHARD_GRID {
+                    let coord = &coords[&(mode.streaming_coordinator(), shards)];
+                    let key = RouteKey {
+                        model: "gcn".to_string(),
+                        dataset: name.to_string(),
+                        width,
+                        strategy,
+                        precision: mode.precision(),
+                    };
+                    let logits_t = coord
+                        .route_logits(&key)
+                        .with_context(|| format!("route {} (shards {shards})", key.label()))?;
+                    let logits = logits_t.as_f32()?.to_vec();
+                    let metrics = compare_logits(&oracle, &logits, ds.n, ds.classes);
+                    let budget = budget_for(width, mode.quantized());
+                    report.configs.push(ConfigResult {
+                        dataset: name.to_string(),
+                        strategy,
+                        width,
+                        mode,
+                        shards,
+                        metrics,
+                        budget,
+                        pass: budget.admits(&metrics),
+                        label_accuracy: accuracy(&ds, &logits_t)?,
+                        oracle_accuracy: oracle_acc,
+                    });
+                    bank.insert((name.to_string(), strategy, width, mode, shards), logits);
+                }
+            }
+        }
+
+        // Cross-configuration invariants.
+        push_pairwise_checks(&mut report, &bank, name, &shapes, &ds);
+        push_shard_branch_checks(&mut report, spec.profile, name, &ds);
+        push_serving_path_checks(&mut report, &coords, &bank, name, &ds)?;
+    }
+
+    for (_, c) in coords {
+        c.shutdown();
+    }
+    Ok(report)
+}
+
+/// Streamed-vs-eager and sharded-vs-unsharded bitwise checks plus the
+/// pairwise quantization budget, for every shape of one dataset.
+fn push_pairwise_checks(
+    report: &mut EvalReport,
+    bank: &HashMap<BankKey, Vec<f32>>,
+    name: &str,
+    shapes: &[(Option<usize>, Strategy)],
+    ds: &Dataset,
+) {
+    for &(width, strategy) in shapes {
+        let shape = shape_label(width, strategy);
+        for &shards in &SHARD_GRID {
+            // INT8 streamed ≡ INT8 eager (bitwise, the PR 2 contract).
+            let eager =
+                &bank[&(name.to_string(), strategy, width, PrecisionMode::U8Eager, shards)];
+            let streamed =
+                &bank[&(name.to_string(), strategy, width, PrecisionMode::U8Streamed, shards)];
+            let (equal, differing) = bits_equal(eager, streamed);
+            report.checks.push(EvalCheck {
+                name: format!("int8 streamed == eager ({name}/{shape}/shards{shards})"),
+                pass: equal,
+                detail: format!("{differing} logit(s) differ at the bit level"),
+            });
+            // Quantization adds ≤ 0.3% vs the fp32 sibling.
+            let f32_logits =
+                &bank[&(name.to_string(), strategy, width, PrecisionMode::F32, shards)];
+            let m = compare_logits(f32_logits, eager, ds.n, ds.classes);
+            let budget = quant_delta_budget();
+            report.checks.push(EvalCheck {
+                name: format!("int8 vs fp32 delta ({name}/{shape}/shards{shards})"),
+                pass: budget.admits(&m),
+                detail: format!(
+                    "{} of {} rows flip vs fp32 (allowed {})",
+                    m.disagreeing,
+                    m.rows,
+                    budget.allowed_disagreements(m.rows)
+                ),
+            });
+        }
+        // Sharding adds exactly zero — the budget-table entry for this
+        // invariant (`shard_delta_budget`) is bitwise, so the check is a
+        // plain bit comparison.
+        for mode in PrecisionMode::ALL {
+            let unsharded = &bank[&(name.to_string(), strategy, width, mode, SHARD_GRID[0])];
+            let sharded = &bank[&(name.to_string(), strategy, width, mode, SHARD_GRID[1])];
+            let (equal, differing) = bits_equal(unsharded, sharded);
+            report.checks.push(EvalCheck {
+                name: format!("sharded == unsharded ({name}/{shape}/{})", mode.name()),
+                pass: equal,
+                detail: format!("{differing} logit(s) differ at the bit level"),
+            });
+        }
+    }
+}
+
+/// Both branches of [`crate::sampling::shard_width`] must fire on the
+/// conformance datasets: skewed shards keep the full tile and sample,
+/// uniform shards shrink to an exhaustive tile.
+fn push_shard_branch_checks(
+    report: &mut EvalReport,
+    profile: DegreeProfile,
+    name: &str,
+    ds: &Dataset,
+) {
+    match profile {
+        DegreeProfile::PowerLaw => {
+            let plan = ShardedPlan::prepare(
+                &ds.csr_gcn,
+                &ShardSpec::by_count(3),
+                Some(8),
+                Strategy::Aes,
+                ds.feats,
+                None,
+            );
+            let sampled = plan
+                .units()
+                .iter()
+                .filter(|u| matches!(u.sampling, ShardSampling::Sampled { .. }))
+                .count();
+            report.checks.push(EvalCheck {
+                name: format!("skewed shards sample at full W ({name}, W=8)"),
+                pass: sampled > 0,
+                detail: format!(
+                    "{sampled} of {} shard(s) took the sampled branch",
+                    plan.shard_count()
+                ),
+            });
+        }
+        DegreeProfile::Uniform => {
+            let plan = ShardedPlan::prepare(
+                &ds.csr_gcn,
+                &ShardSpec::by_count(3),
+                Some(64),
+                Strategy::Aes,
+                ds.feats,
+                None,
+            );
+            let exhaustive = plan
+                .units()
+                .iter()
+                .filter(|u| matches!(u.sampling, ShardSampling::Exhaustive { .. }))
+                .count();
+            report.checks.push(EvalCheck {
+                name: format!("uniform shards shrink to exhaustive tiles ({name}, W=64)"),
+                pass: exhaustive > 0,
+                detail: format!(
+                    "{exhaustive} of {} shard(s) took the exhaustive branch",
+                    plan.shard_count()
+                ),
+            });
+        }
+    }
+}
+
+/// The batched request path must agree with the logits the plan served:
+/// per-node predictions are the NaN-safe argmax of the route's logits.
+fn push_serving_path_checks(
+    report: &mut EvalReport,
+    coords: &HashMap<(bool, usize), Coordinator>,
+    bank: &HashMap<BankKey, Vec<f32>>,
+    name: &str,
+    ds: &Dataset,
+) -> Result<()> {
+    let probes: [(Option<usize>, Strategy, PrecisionMode, usize); 3] = [
+        (None, Strategy::Aes, PrecisionMode::F32, SHARD_GRID[0]),
+        (Some(8), Strategy::Aes, PrecisionMode::U8Streamed, SHARD_GRID[0]),
+        (Some(8), Strategy::Sfs, PrecisionMode::F32, SHARD_GRID[1]),
+    ];
+    for (width, strategy, mode, shards) in probes {
+        let coord = &coords[&(mode.streaming_coordinator(), shards)];
+        let key = RouteKey {
+            model: "gcn".to_string(),
+            dataset: name.to_string(),
+            width,
+            strategy,
+            precision: mode.precision(),
+        };
+        let nodes: Vec<usize> = (0..ds.n).step_by(17).collect();
+        let resp = coord.infer(key, nodes.clone())?;
+        let logits = &bank[&(name.to_string(), strategy, width, mode, shards)];
+        let mismatches = match &resp.error {
+            Some(_) => nodes.len(),
+            None => resp
+                .predictions
+                .iter()
+                .filter(|p| {
+                    let row = &logits[p.node * ds.classes..(p.node + 1) * ds.classes];
+                    p.class != argmax_f32(row) as i32
+                })
+                .count(),
+        };
+        let shape = shape_label(width, strategy);
+        report.checks.push(EvalCheck {
+            name: format!(
+                "batched predictions == route logits argmax ({name}/{shape}/{}/shards{shards})",
+                mode.name()
+            ),
+            pass: resp.error.is_none() && mismatches == 0,
+            detail: match resp.error {
+                Some(e) => format!("request failed: {e}"),
+                None => format!("{mismatches} of {} prediction(s) mismatch", nodes.len()),
+            },
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_modes_map_to_route_precisions() {
+        assert_eq!(PrecisionMode::F32.precision(), Precision::F32);
+        assert_eq!(PrecisionMode::U8Eager.precision(), Precision::U8Device);
+        assert_eq!(PrecisionMode::U8Streamed.precision(), Precision::U8Device);
+        assert!(PrecisionMode::U8Streamed.streamed());
+        assert!(!PrecisionMode::U8Eager.streamed());
+        assert!(PrecisionMode::U8Eager.quantized() && !PrecisionMode::F32.quantized());
+        // fp32 rides the streaming coordinator (stage falls back to an
+        // eager load for fp32); only eager INT8 uses the eager one.
+        assert!(PrecisionMode::F32.streaming_coordinator());
+        assert!(PrecisionMode::U8Streamed.streaming_coordinator());
+        assert!(!PrecisionMode::U8Eager.streaming_coordinator());
+    }
+
+    #[test]
+    fn config_names_are_stable() {
+        let c = ConfigResult {
+            dataset: "evalpow".into(),
+            strategy: Strategy::Aes,
+            width: Some(8),
+            mode: PrecisionMode::U8Streamed,
+            shards: 3,
+            metrics: compare_logits(&[], &[], 0, 1),
+            budget: budget_for(Some(8), true),
+            pass: true,
+            label_accuracy: 0.0,
+            oracle_accuracy: 0.0,
+        };
+        assert_eq!(c.name(), "evalpow/aes-w8/u8-streamed/shards3");
+        let exact = ConfigResult { width: None, mode: PrecisionMode::F32, shards: 1, ..c };
+        assert_eq!(exact.name(), "evalpow/exact/f32/shards1");
+    }
+
+    #[test]
+    fn width_grid_sizes() {
+        assert_eq!(width_grid(true).len(), 2);
+        assert_eq!(width_grid(false).len(), 3);
+        assert!(width_grid(false).contains(&None));
+    }
+
+    #[test]
+    fn report_json_has_the_gate_contract() {
+        let mut report = EvalReport::default();
+        report.configs.push(ConfigResult {
+            dataset: "d".into(),
+            strategy: Strategy::Sfs,
+            width: None,
+            mode: PrecisionMode::F32,
+            shards: 1,
+            metrics: compare_logits(&[1.0, 0.0], &[1.0, 0.0], 1, 2),
+            budget: Budget::bitwise(),
+            pass: true,
+            label_accuracy: 1.0,
+            oracle_accuracy: 1.0,
+        });
+        report.checks.push(EvalCheck { name: "c".into(), pass: true, detail: "ok".into() });
+        let text = report.to_json().to_string();
+        let doc = crate::util::parse_json(&text).unwrap();
+        assert!(matches!(doc.get("pass").unwrap(), JsonValue::Bool(true)));
+        let configs = doc.get("configs").unwrap().as_arr().unwrap();
+        assert_eq!(configs.len(), 1);
+        assert_eq!(configs[0].get("name").unwrap().as_str().unwrap(), "d/exact/f32/shards1");
+        assert_eq!(configs[0].get("top1_agreement").unwrap().as_f64().unwrap(), 1.0);
+        assert!(report.failures().is_empty());
+        // A failing config surfaces in failures() and flips pass().
+        report.configs[0].pass = false;
+        assert!(!report.pass());
+        assert_eq!(report.failures().len(), 1);
+    }
+
+    // run_eval itself is covered end to end by tests/accuracy.rs.
+}

@@ -1,0 +1,153 @@
+//! Differential accuracy metrics — how far a configuration's logits sit
+//! from the oracle's.
+//!
+//! Three views, matching how the paper reports accuracy:
+//!
+//! * **top-1 agreement** — fraction of rows whose argmax class equals
+//!   the reference's (the paper's accuracy metric, measured against the
+//!   exact forward instead of labels, so it isolates the serving
+//!   stack's error from model quality);
+//! * **per-row relative L2** — `‖got_i − ref_i‖₂ / (‖ref_i‖₂ + ε)`,
+//!   reported as mean and max over rows;
+//! * **max elementwise delta** and a **bitwise** flag (`f32::to_bits`
+//!   equality, so `−0.0 ≠ +0.0` and NaNs never sneak through).
+
+use crate::util::argmax_f32;
+
+/// Shields the per-row relative L2 against all-zero reference rows.
+const REL_L2_EPS: f64 = 1e-12;
+
+/// Differential metrics of one configuration against a reference
+/// (usually the oracle). Produced by [`compare_logits`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccuracyMetrics {
+    /// Rows compared.
+    pub rows: usize,
+    /// Rows whose top-1 class disagrees with the reference
+    /// (deterministic ties: [`argmax_f32`] breaks to the lowest index).
+    pub disagreeing: usize,
+    /// `1 − disagreeing / rows` (1.0 for an empty comparison).
+    pub top1_agreement: f64,
+    /// Mean over rows of the relative L2 error.
+    pub mean_rel_l2: f64,
+    /// Max over rows of the relative L2 error.
+    pub max_rel_l2: f64,
+    /// Largest `|got − ref|` over all elements (NaN deltas force the
+    /// bitwise flag off instead of propagating here).
+    pub max_abs_delta: f32,
+    /// Every element identical at the bit level (`to_bits` equality).
+    pub bitwise_equal: bool,
+}
+
+/// Compare `got` against `reference`, both row-major `[rows, classes]`.
+pub fn compare_logits(
+    reference: &[f32],
+    got: &[f32],
+    rows: usize,
+    classes: usize,
+) -> AccuracyMetrics {
+    assert_eq!(reference.len(), rows * classes, "reference is not [rows, classes]");
+    assert_eq!(got.len(), rows * classes, "got is not [rows, classes]");
+    let mut disagreeing = 0usize;
+    let mut sum_rel = 0.0f64;
+    let mut max_rel = 0.0f64;
+    let mut max_abs = 0.0f32;
+    let mut bitwise = true;
+    for r in 0..rows {
+        let a = &reference[r * classes..(r + 1) * classes];
+        let g = &got[r * classes..(r + 1) * classes];
+        if argmax_f32(a) != argmax_f32(g) {
+            disagreeing += 1;
+        }
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (x, y) in a.iter().zip(g.iter()) {
+            let d = f64::from(*y) - f64::from(*x);
+            num += d * d;
+            den += f64::from(*x) * f64::from(*x);
+            let ad = (y - x).abs();
+            if ad > max_abs {
+                max_abs = ad;
+            }
+            if x.to_bits() != y.to_bits() {
+                bitwise = false;
+            }
+        }
+        let rel = num.sqrt() / (den.sqrt() + REL_L2_EPS);
+        sum_rel += rel;
+        if rel > max_rel {
+            max_rel = rel;
+        }
+    }
+    AccuracyMetrics {
+        rows,
+        disagreeing,
+        top1_agreement: 1.0 - disagreeing as f64 / rows.max(1) as f64,
+        mean_rel_l2: sum_rel / rows.max(1) as f64,
+        max_rel_l2: max_rel,
+        max_abs_delta: max_abs,
+        bitwise_equal: bitwise,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_logits_are_perfect() {
+        let a = [0.1f32, 0.9, -1.0, 3.0, 2.0, 1.0];
+        let m = compare_logits(&a, &a, 2, 3);
+        assert_eq!(m.disagreeing, 0);
+        assert_eq!(m.top1_agreement, 1.0);
+        assert_eq!(m.max_abs_delta, 0.0);
+        assert_eq!((m.mean_rel_l2, m.max_rel_l2), (0.0, 0.0));
+        assert!(m.bitwise_equal);
+    }
+
+    #[test]
+    fn flipped_rows_are_counted() {
+        let reference = [1.0f32, 0.0, 0.0, 1.0, 1.0, 0.0];
+        // Row 0 keeps its argmax, row 1 flips, row 2 keeps.
+        let got = [0.9f32, 0.1, 0.3, 0.2, 0.95, 0.05];
+        let m = compare_logits(&reference, &got, 3, 2);
+        assert_eq!(m.disagreeing, 1);
+        assert!((m.top1_agreement - 2.0 / 3.0).abs() < 1e-12);
+        assert!(!m.bitwise_equal);
+        assert!(m.max_abs_delta > 0.0);
+        assert!(m.max_rel_l2 >= m.mean_rel_l2);
+    }
+
+    #[test]
+    fn small_perturbations_keep_top1_but_not_bitwise() {
+        let reference = [2.0f32, 1.0, 0.5, 3.0];
+        let got = [2.0f32, 1.0001, 0.5, 3.0];
+        let m = compare_logits(&reference, &got, 2, 2);
+        assert_eq!(m.disagreeing, 0);
+        assert!(!m.bitwise_equal);
+        assert!(m.max_abs_delta > 0.0 && m.max_abs_delta < 0.001);
+    }
+
+    #[test]
+    fn bitwise_distinguishes_signed_zero() {
+        let m = compare_logits(&[0.0f32, 1.0], &[-0.0f32, 1.0], 1, 2);
+        assert!(!m.bitwise_equal, "to_bits must see -0.0 != +0.0");
+        assert_eq!(m.max_abs_delta, 0.0);
+        assert_eq!(m.disagreeing, 0);
+    }
+
+    #[test]
+    fn nan_never_passes_bitwise() {
+        let m = compare_logits(&[1.0f32, 2.0], &[1.0f32, f32::NAN], 1, 2);
+        assert!(!m.bitwise_equal);
+        // NaN delta is ignored by max_abs_delta (the flag carries it).
+        assert_eq!(m.max_abs_delta, 0.0);
+    }
+
+    #[test]
+    fn empty_comparison_is_vacuously_perfect() {
+        let m = compare_logits(&[], &[], 0, 4);
+        assert_eq!(m.top1_agreement, 1.0);
+        assert!(m.bitwise_equal);
+    }
+}

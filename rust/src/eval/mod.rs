@@ -1,0 +1,57 @@
+//! Accuracy conformance — the exact oracle, differential metrics, the
+//! paper's accuracy-budget table, and the grid harness behind
+//! `repro eval` / `ACC_eval.json` / `tools/acc_diff.rs`.
+//!
+//! # Purpose
+//!
+//! The paper's claim is two-sided: speed **and** accuracy (< 1% top-1
+//! loss from adaptive sampling, ≤ 0.3% extra from INT8 — Tables 4–6).
+//! `bench_diff` gates the speed side; this module gives the accuracy
+//! side the same treatment: an in-tree exact oracle, per-configuration
+//! budgets, and a CI regression gate (see docs/accuracy.md).
+//!
+//! # Structure
+//!
+//! | unit      | role                                                    |
+//! |-----------|---------------------------------------------------------|
+//! | `oracle`  | [`oracle_forward`]: the unsampled fp32 forward in one canonical FP reduction order — ground truth for every configuration |
+//! | `metrics` | [`compare_logits`] → [`AccuracyMetrics`]: top-1 agreement, per-row relative L2, max elementwise delta, bitwise flag |
+//! | `budget`  | [`budget_for`] + the pairwise budgets: the paper's claims as checkable thresholds |
+//! | `dataset` | seeded homophilous DC-SBM conformance datasets (power-law + uniform degree profiles) |
+//! | `harness` | [`run_eval`]: the {strategy × width × precision × shards} grid through the real coordinator, plus cross-config invariants |
+//!
+//! # Rules
+//!
+//! * The oracle's reduction order is defined **here** and changes only
+//!   with a deliberate refresh of the golden fixtures
+//!   (`tests/fixtures/`, pinned by `tests/oracle_regression.rs`).
+//! * Grid forwards go through [`crate::coordinator::Coordinator`] — the
+//!   real plan cache / prefetcher / sharded execution — never a side
+//!   path; a conformance pass that skipped the serving stack would
+//!   certify nothing.
+//! * Budgets may gain slack only with a paper-table justification in
+//!   docs/accuracy.md; the golden fixtures catch oracle drift even if
+//!   the budget table is later loosened.
+
+#![warn(missing_docs)]
+
+mod budget;
+mod dataset;
+mod harness;
+mod metrics;
+mod oracle;
+
+pub use budget::{
+    budget_for, quant_delta_budget, shard_delta_budget, Budget, QUANT_EXTRA_TOP1_LOSS,
+    SAMPLING_TOP1_LOSS,
+};
+pub use dataset::{
+    write_eval_dataset, write_eval_datasets, DegreeProfile, EvalDatasetSpec, EVAL_AVG_DEG,
+    EVAL_CLASSES, EVAL_DATASETS, EVAL_FEATS, EVAL_HIDDEN, EVAL_NODES,
+};
+pub use harness::{
+    run_eval, width_grid, ConfigResult, DatasetSummary, EvalCheck, EvalReport, PrecisionMode,
+    SHARD_GRID,
+};
+pub use metrics::{compare_logits, AccuracyMetrics};
+pub use oracle::{oracle_aggregate, oracle_forward, oracle_matmul};

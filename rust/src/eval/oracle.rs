@@ -1,0 +1,233 @@
+//! The exact oracle — ground truth for every serving configuration.
+//!
+//! `oracle_forward` runs the unsampled fp32 GCN forward with one
+//! **canonical reduction order**, fixed here and nowhere else:
+//!
+//! * dense multiplies accumulate each output element over `k` ascending;
+//! * aggregations accumulate each output row over its CSR edges in
+//!   storage order;
+//! * everything is serial — no dispatch, no pool, no chunking — so the
+//!   oracle cannot drift when the execution layer changes.
+//!
+//! The host substrate's exact fp32 forward is *engineered* to match this
+//! order bit-for-bit (per-row FP order is preserved by every exact
+//! kernel, thread partitioning, and shard cut — see `docs/sharding.md`),
+//! and `tests/accuracy.rs` checks that equality through the coordinator.
+//! The golden fixtures under `tests/fixtures/` pin the oracle itself
+//! against drift (`tests/oracle_regression.rs`).
+//!
+//! ReLU is written as `if v > 0.0 { v } else { 0.0 }` rather than
+//! `f32::max`, so a `-0.0` or NaN pre-activation normalizes to `+0.0`
+//! deterministically regardless of how the platform's `maxNum` breaks
+//! the `±0.0` tie.
+
+use anyhow::{bail, Result};
+
+use crate::graph::Csr;
+use crate::runtime::{Dataset, Weights};
+
+/// Canonical dense multiply: row-major `A[m,k] × B[k,n]`, each output
+/// element accumulated strictly over `k` ascending, serially.
+pub fn oracle_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A is not [m, k]");
+    assert_eq!(b.len(), k * n, "B is not [k, n]");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &x) in out[i * n..(i + 1) * n].iter_mut().zip(brow.iter()) {
+                *o += av * x;
+            }
+        }
+    }
+    out
+}
+
+/// Canonical exact aggregation: `out[i, :] += val[e] · B[col[e], :]` for
+/// each edge `e` of row `i` in CSR storage order, rows serially. `out`
+/// must be `n_rows × f` and is cleared first.
+pub fn oracle_aggregate(csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), csr.n_cols * f, "B is not [n_cols, f]");
+    assert_eq!(out.len(), csr.n_rows * f, "out is not [n_rows, f]");
+    out.fill(0.0);
+    for i in 0..csr.n_rows {
+        let row_out = &mut out[i * f..(i + 1) * f];
+        for e in csr.row_range(i) {
+            let v = csr.val[e];
+            let col = csr.col_ind[e] as usize;
+            let brow = &b[col * f..col * f + f];
+            for (o, &x) in row_out.iter_mut().zip(brow.iter()) {
+                *o += v * x;
+            }
+        }
+    }
+}
+
+/// The exact oracle forward:
+/// `logits = Â(relu(Â(X W₀) + b₀) W₁) + b₁` with `Â = ds.csr_gcn`,
+/// fp32 features, no sampling, no quantization, canonical reduction
+/// order throughout. Returns row-major `[n, classes]` logits.
+pub fn oracle_forward(ds: &Dataset, weights: &Weights) -> Result<Vec<f32>> {
+    if weights.model != "gcn" {
+        bail!("the oracle implements the gcn forward only (got {:?})", weights.model);
+    }
+    let x = ds.feat.as_f32()?;
+    if x.len() != ds.n * ds.feats {
+        bail!("feature tensor has {} values, dataset needs {}", x.len(), ds.n * ds.feats);
+    }
+    // Weights in GCN_PARAM_ORDER: w0 [f,h], b0 [h], w1 [h,c], b1 [c].
+    let w0 = weights.tensors[0].1.as_f32()?;
+    let b0 = weights.tensors[1].1.as_f32()?;
+    let w1 = weights.tensors[2].1.as_f32()?;
+    let b1 = weights.tensors[3].1.as_f32()?;
+    let (n, f, h, c) = (ds.n, ds.feats, b0.len(), ds.classes);
+    if w0.len() != f * h || w1.len() != h * c || b1.len() != c {
+        bail!("weight shapes inconsistent with dataset dims (f={f}, h={h}, c={c})");
+    }
+
+    // Layer 1: relu(Â (X W0) + b0).
+    let xw = oracle_matmul(x, w0, n, f, h);
+    let mut hidden = vec![0.0f32; n * h];
+    oracle_aggregate(&ds.csr_gcn, &xw, h, &mut hidden);
+    for i in 0..n {
+        for j in 0..h {
+            let v = hidden[i * h + j] + b0[j];
+            hidden[i * h + j] = if v > 0.0 { v } else { 0.0 };
+        }
+    }
+
+    // Layer 2: Â (H W1) + b1.
+    let hw = oracle_matmul(&hidden, w1, n, h, c);
+    let mut logits = vec![0.0f32; n * c];
+    oracle_aggregate(&ds.csr_gcn, &hw, c, &mut logits);
+    for i in 0..n {
+        for j in 0..c {
+            logits[i * c + j] += b1[j];
+        }
+    }
+    Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecEnv;
+    use crate::gen;
+    use crate::quant::{quantize, QuantParams};
+    use crate::rng::Pcg32;
+    use crate::runtime::host_forward;
+    use crate::sampling::Strategy;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn oracle_matmul_known_values() {
+        // [1 2; 3 4] × [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        assert_eq!(oracle_matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+        // Zero-row multiply: shapes must still agree, output is empty.
+        assert!(oracle_matmul(&[], &[0.0f32; 9], 0, 3, 3).is_empty());
+    }
+
+    #[test]
+    fn oracle_aggregate_is_bitwise_csr_naive() {
+        let mut rng = Pcg32::new(91);
+        let mut g = gen::chung_lu(220, 14.0, 1.9, &mut rng);
+        for v in g.val.iter_mut() {
+            *v = rng.f32() - 0.5;
+        }
+        let f = 7;
+        let b: Vec<f32> = (0..g.n_cols * f).map(|_| rng.f32() - 0.5).collect();
+        let mut want = vec![0.0f32; g.n_rows * f];
+        crate::spmm::csr_naive(&g, &b, f, &mut want);
+        let mut got = vec![7.0f32; g.n_rows * f]; // dirty: must be cleared
+        oracle_aggregate(&g, &b, f, &mut got);
+        assert_eq!(want, got, "the canonical order IS csr_naive's order");
+    }
+
+    /// Build an in-memory synthetic dataset + weights (no files).
+    fn synthetic(seed: u64, n: usize, f: usize, h: usize, c: usize) -> (Dataset, Weights) {
+        let mut rng = Pcg32::new(seed);
+        let g = gen::with_self_loops(&gen::chung_lu(n, 6.0, 2.0, &mut rng)).gcn_normalized();
+        let nnz = g.nnz();
+        let feat: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        let params = QuantParams::of(&feat);
+        let featq = quantize(&feat, params);
+        let ds = Dataset {
+            name: "synth".to_string(),
+            n,
+            nnz,
+            feats: f,
+            classes: c,
+            val_ones: vec![1.0; nnz],
+            csr_gcn: g,
+            feat: Tensor::from_f32(&[n, f], &feat),
+            featq: Tensor::from_u8(&[n, f], &featq),
+            qparams: params,
+            labels: (0..n).map(|_| rng.usize_below(c) as i32).collect(),
+            train_mask: vec![0; n],
+        };
+        let t = |shape: &[usize], rng: &mut Pcg32| {
+            let len: usize = shape.iter().product();
+            let vals: Vec<f32> = (0..len).map(|_| rng.f32() - 0.5).collect();
+            Tensor::from_f32(shape, &vals)
+        };
+        let weights = Weights {
+            model: "gcn".into(),
+            tensors: vec![
+                ("w0".into(), t(&[f, h], &mut rng)),
+                ("b0".into(), t(&[h], &mut rng)),
+                ("w1".into(), t(&[h, c], &mut rng)),
+                ("b1".into(), t(&[c], &mut rng)),
+            ],
+            ideal_acc: 0.5,
+        };
+        (ds, weights)
+    }
+
+    #[test]
+    fn oracle_is_deterministic() {
+        let (ds, w) = synthetic(7, 90, 6, 5, 4);
+        let a = oracle_forward(&ds, &w).unwrap();
+        let b = oracle_forward(&ds, &w).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 90 * 4);
+    }
+
+    #[test]
+    fn host_exact_fp32_forward_is_bitwise_equal_to_the_oracle() {
+        // The dispatch/threading-independence claim: whatever exact
+        // kernel and thread count the host substrate picks, per-row FP
+        // order equals the canonical order.
+        let (ds, w) = synthetic(13, 120, 9, 7, 5);
+        let want = oracle_forward(&ds, &w).unwrap();
+        let req = crate::runtime::ForwardRequest {
+            model: "gcn".into(),
+            dataset: ds.name.clone(),
+            width: None,
+            strategy: Strategy::Aes,
+            precision: crate::quant::Precision::F32,
+        };
+        for threads in [1usize, 4] {
+            let env = ExecEnv::with_threads(threads);
+            let got = host_forward(&ds, &w, &req, None, None, &env).unwrap();
+            let got = got.logits.as_f32().unwrap();
+            assert_eq!(got.len(), want.len());
+            for (i, (g, o)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    o.to_bits(),
+                    "logit {i} differs from the oracle at {threads} threads ({g} vs {o})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_rejects_non_gcn_models() {
+        let (ds, mut w) = synthetic(3, 20, 4, 3, 2);
+        w.model = "sage".into();
+        assert!(oracle_forward(&ds, &w).is_err());
+    }
+}

@@ -16,7 +16,11 @@
 //! and merges by row concatenation: each unit owns a disjoint row slice
 //! of the output, so the merge is the `split_at_mut` — no combination
 //! arithmetic, and per-row FP order identical to the unsharded kernels
-//! (see `docs/sharding.md` for the exactness argument).
+//! (see `docs/sharding.md` for the exactness argument). That bitwise
+//! guarantee is a **checked invariant**, not just a doc claim: the
+//! accuracy-conformance grid (`crate::eval`, `tests/accuracy.rs`)
+//! asserts sharded == unsharded logits bit-for-bit through the
+//! coordinator for every strategy/width/precision it serves.
 //!
 //! Units are cached in a [`PlanCache<ShardKey, ShardUnit>`] shared
 //! across routes: units depend only on (graph, width, strategy, row

@@ -29,12 +29,14 @@
 //! | [`exec`]      | kernel dispatch, persistent pool, plan cache, async prefetch, sharded plans |
 //! | [`runtime`]   | PJRT engine: artifact registry, executables, literals |
 //! | [`coordinator`]| request router, dynamic batcher, worker pool, metrics|
+//! | [`eval`]      | accuracy conformance: exact oracle, budget table, grid harness |
 //! | [`experiments`]| one runner per paper figure/table                    |
 //! | [`bench`]     | micro-bench harness (no criterion offline)            |
 //! | [`util`]      | flat-JSON parsing/emission, timing helpers            |
 
 pub mod bench;
 pub mod coordinator;
+pub mod eval;
 pub mod exec;
 pub mod experiments;
 pub mod gen;

@@ -8,6 +8,7 @@
 //!                 [--strategy afs|sfs|aes] [--fp32]         one forward pass + accuracy
 //! repro serve     [--requests N] [--workers K]              run the coordinator demo load
 //! repro experiment <fig2|fig3|fig5|fig6|fig7|tab1|tab3|all> [--quick]
+//! repro eval      [--json [PATH]] [--dir DIR] [--quick]     accuracy conformance grid
 //! repro gen-data  --nodes N --avg-deg D [--gamma G]         rust-side synthetic graph stats
 //! ```
 //!
@@ -97,9 +98,17 @@ USAGE:
   repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--prefetch P]
                    [--host] [--shards N] [--shard-budget MIB] [--artifacts DIR]
   repro experiment fig2|fig3|fig5|fig6|fig7|tab1|tab3|all [--quick] [--artifacts DIR]
+  repro eval       [--json [PATH]] [--dir DIR] [--quick]
   repro gen-data   [--nodes N] [--avg-deg D] [--gamma G] [--seed S]
 
-Serving precision defaults to INT8 (--fp32 opts into the baseline).
+Serving precision defaults to INT8 (--fp32 opts into the baseline;
+--precision f32|u8-device|u8-host picks one explicitly on `infer`).
+`eval` needs no artifacts: it runs the accuracy-conformance grid
+(strategy x width x precision x shards) on seeded synthetic datasets
+through the host serving path, scores every configuration against the
+exact oracle (docs/accuracy.md), and with --json writes ACC_eval.json
+(default path) for the tools/acc_diff.rs CI gate. Exits nonzero on any
+budget violation.
 --host serves on the rust substrate (no PJRT); --shards/--shard-budget
 row-shard host aggregation into working-set-budgeted GraphShards with
 per-shard sampling + kernel dispatch (see docs/sharding.md).
@@ -119,6 +128,7 @@ fn run() -> Result<()> {
         "infer" => cmd_infer(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
         "experiment" => cmd_experiment(&artifacts, &args),
+        "eval" => cmd_eval(&args),
         "gen-data" => cmd_gen_data(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -181,8 +191,19 @@ fn cmd_infer(artifacts: &str, args: &Args) -> Result<()> {
         bail!("--fp32 and --quant are mutually exclusive");
     }
     // INT8 is the serving default; --fp32 opts into the baseline
-    // (--quant kept for backward compatibility — it is now the default).
-    let precision = if args.has("fp32") { Precision::F32 } else { Precision::default() };
+    // (--quant kept for backward compatibility — it is now the default)
+    // and --precision picks any representation by its route-key label.
+    let precision = match args.get("precision") {
+        Some(p) => {
+            if args.has("fp32") || args.has("quant") {
+                bail!("--precision conflicts with --fp32/--quant");
+            }
+            Precision::from_name(p)
+                .with_context(|| format!("--precision must be f32|u8-device|u8-host, got {p:?}"))?
+        }
+        None if args.has("fp32") => Precision::F32,
+        None => Precision::default(),
+    };
 
     let engine = Engine::new(artifacts)?;
     let ds = Dataset::load(artifacts, &dataset)?;
@@ -347,6 +368,36 @@ fn cmd_experiment(artifacts: &str, args: &Args) -> Result<()> {
     let ctx = ExpContext::new(artifacts, args.has("quick"))?;
     let tables = experiments::run(&ctx, id)?;
     println!("\nwrote {} report(s) under {}", tables.len(), ctx.out_dir.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = args.get_or("dir", "target/acc-eval");
+    let quick = args.has("quick");
+    let report = aes_spmm::eval::run_eval(std::path::Path::new(&dir), quick)?;
+    report.table().print();
+    let failed_checks = report.checks.iter().filter(|c| !c.pass).count();
+    println!(
+        "checks: {}/{} passed ({} grid configs over {} datasets)",
+        report.checks.len() - failed_checks,
+        report.checks.len(),
+        report.configs.len(),
+        report.datasets.len()
+    );
+    if args.has("json") {
+        // Bare `--json` lands as the value "true": use the default path.
+        let path = match args.get("json") {
+            Some("true") | None => "ACC_eval.json".to_string(),
+            Some(p) => p.to_string(),
+        };
+        std::fs::write(&path, report.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if !report.pass() {
+        bail!("accuracy budgets violated:\n  {}", report.failures().join("\n  "));
+    }
+    println!("accuracy conformance: every configuration within budget");
     Ok(())
 }
 

@@ -61,6 +61,16 @@ impl Precision {
             Precision::U8Host => "u8-host",
         }
     }
+
+    /// Parse a [`Precision::name`] label back (CLI flags, report diffs).
+    pub fn from_name(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "u8-device" => Some(Precision::U8Device),
+            "u8-host" => Some(Precision::U8Host),
+            _ => None,
+        }
+    }
 }
 
 /// How feature bytes reached the host.
@@ -556,6 +566,15 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("fstore_{tag}_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         dir
+    }
+
+    #[test]
+    fn precision_names_roundtrip() {
+        for p in [Precision::F32, Precision::U8Device, Precision::U8Host] {
+            assert_eq!(Precision::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Precision::from_name("int8"), None);
+        assert_eq!(Precision::default(), Precision::U8Device);
     }
 
     #[test]

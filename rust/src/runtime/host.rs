@@ -10,6 +10,12 @@
 //! the graph profile come from the cache — no per-batch re-sampling or
 //! re-profiling. This keeps the full serving stack runnable (and
 //! testable end to end) on machines without a PJRT runtime.
+//!
+//! Numerics contract: on the exact fp32 path this forward is
+//! bit-identical to [`crate::eval::oracle_forward`]'s canonical
+//! reduction order at any thread count — every exact kernel, thread
+//! chunk, and shard cut preserves per-row FP order, and the conformance
+//! grid (`crate::eval`) checks the equality through the coordinator.
 
 use std::ops::Range;
 use std::time::{Duration, Instant};

@@ -1,0 +1,97 @@
+//! Tiny argv helpers shared by the CI gate binaries (`bench_diff`,
+//! `acc_diff`): positional/flag splitting without a registry dependency.
+//! Errors are plain `String`s — the gates print them and exit 2.
+
+/// Everything that is not a `--flag` or a flag's value. Every gate flag
+/// takes exactly one value, so a `--flag` consumes the next token.
+pub fn cli_positionals(args: &[String]) -> Vec<&String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i].starts_with("--") {
+            i += 2;
+        } else {
+            out.push(&args[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Parse `--flag <f64>`, falling back to `default` when absent.
+pub fn cli_flag_f64(args: &[String], flag: &str, default: f64) -> Result<f64, String> {
+    match args.iter().position(|a| a == flag) {
+        Some(i) => args
+            .get(i + 1)
+            .ok_or_else(|| format!("{flag} needs a value"))?
+            .parse()
+            .map_err(|e| format!("{flag}: {e}")),
+        None => Ok(default),
+    }
+}
+
+/// Reject `--` tokens the gate does not understand — `--flag=value`
+/// syntax (the helpers above take space-separated values only) and
+/// unknown flags. Without this, a mistyped `--threshold=0.5` would be
+/// silently skipped and the gate would run with its default threshold,
+/// which for a CI gate is worse than failing loudly.
+pub fn cli_require_known_flags(args: &[String], known: &[&str]) -> Result<(), String> {
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(rest) = a.strip_prefix("--") {
+            if rest.contains('=') {
+                let name = rest.split('=').next().unwrap_or(rest);
+                return Err(format!(
+                    "--{name}=... syntax is not supported; pass the value \
+                     space-separated: --{name} <value>"
+                ));
+            }
+            if !known.contains(&a.as_str()) {
+                return Err(format!("unknown flag {a} (known: {})", known.join(", ")));
+            }
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn flag_values_are_not_positional() {
+        // `--threshold 0.15` must consume its value, leaving exactly the
+        // two paths as positionals.
+        let args = argv(&["fresh.json", "base.json", "--threshold", "0.15", "--min-us", "50"]);
+        assert_eq!(cli_positionals(&args), ["fresh.json", "base.json"]);
+        assert_eq!(cli_flag_f64(&args, "--threshold", 0.99).unwrap(), 0.15);
+        assert_eq!(cli_flag_f64(&args, "--min-us", 100.0).unwrap(), 50.0);
+        assert_eq!(cli_flag_f64(&args, "--absent", 7.0).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn malformed_flags_error() {
+        assert!(cli_flag_f64(&argv(&["--threshold"]), "--threshold", 0.0).is_err());
+        assert!(cli_flag_f64(&argv(&["--threshold", "abc"]), "--threshold", 0.0).is_err());
+    }
+
+    #[test]
+    fn unknown_and_equals_flags_fail_loudly() {
+        let known = ["--threshold"];
+        assert!(cli_require_known_flags(&argv(&["a", "--threshold", "0.5"]), &known).is_ok());
+        // `--flag=value` must not be silently skipped.
+        let err =
+            cli_require_known_flags(&argv(&["--threshold=0.5"]), &known).unwrap_err();
+        assert!(err.contains("space-separated"), "{err}");
+        // An unknown flag must not silently swallow its neighbor.
+        assert!(cli_require_known_flags(&argv(&["--verbose", "x"]), &known).is_err());
+    }
+}

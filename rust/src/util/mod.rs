@@ -1,10 +1,13 @@
 //! Small utilities: a dependency-free JSON codec (the offline registry has
-//! no serde) and timing helpers shared by the bench + experiment harnesses.
+//! no serde), timing helpers shared by the bench + experiment harnesses,
+//! and the argv helpers the CI gate binaries share.
 
+mod cli;
 mod json;
 mod num;
 mod timing;
 
+pub use cli::{cli_flag_f64, cli_positionals, cli_require_known_flags};
 pub use json::{parse_json, JsonValue};
 pub use num::argmax_f32;
 pub use timing::{fmt_duration, median, percentile, Stopwatch};

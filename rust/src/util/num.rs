@@ -1,9 +1,19 @@
 //! Small numeric helpers shared across layers.
 
 /// NaN-safe argmax over a logits row: NaN entries are treated as −∞,
-/// ties break to the lowest index, and an all-NaN (or empty) row
-/// deterministically yields 0. The seed's `partial_cmp(..).unwrap()`
-/// panicked the worker on the first NaN logit.
+/// and an all-NaN (or empty) row deterministically yields 0. The seed's
+/// `partial_cmp(..).unwrap()` panicked the worker on the first NaN
+/// logit.
+///
+/// **Tie-breaking contract: the lowest index wins.** A later entry
+/// replaces the current best only under strict `>`, so equal values —
+/// including the `-0.0` / `+0.0` pair, which compares equal — keep the
+/// earliest index. This determinism is load-bearing: top-1 agreement in
+/// [`crate::eval`] compares this function's output across the oracle
+/// and every serving configuration, and an unstable tie rule would turn
+/// exact-duplicate logits into phantom accuracy loss. Every consumer
+/// (coordinator replies, `runtime::accuracy`, the eval metrics) routes
+/// through here, so they agree on ties by construction.
 pub fn argmax_f32(row: &[f32]) -> usize {
     let mut best = 0usize;
     let mut best_val = f32::NEG_INFINITY;
@@ -52,5 +62,15 @@ mod tests {
     #[test]
     fn ties_break_low() {
         assert_eq!(argmax_f32(&[2.0, 2.0, 1.0]), 0);
+        // The tie rule holds wherever the tied pair sits...
+        assert_eq!(argmax_f32(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax_f32(&[3.0, 1.0, 3.0, 3.0]), 0);
+        // ...across NaN gaps (NaN never becomes the incumbent)...
+        assert_eq!(argmax_f32(&[f32::NAN, 2.0, 2.0]), 1);
+        // ...and for the equal-comparing signed-zero pair.
+        assert_eq!(argmax_f32(&[-0.0, 0.0]), 0);
+        assert_eq!(argmax_f32(&[0.0, -0.0]), 0);
+        // All-equal rows pick index 0, like an all-NaN row does.
+        assert_eq!(argmax_f32(&[5.0; 8]), 0);
     }
 }

@@ -1,0 +1,205 @@
+//! Differential accuracy suite — every grid point of the conformance
+//! harness forwards through the **coordinator** (plan cache, prefetcher,
+//! sharded execution, host backend) and is asserted against the exact
+//! oracle within the budget table; the INT8 streamed-vs-eager and
+//! sharded-vs-unsharded invariants are additionally pinned as exact
+//! (bitwise) assertions on raw logits.
+//!
+//! Runs with no artifacts and no PJRT runtime: the seeded conformance
+//! datasets are generated on the fly (deterministically) and served on
+//! [`Backend::Host`].
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use aes_spmm::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, RouteKey,
+};
+use aes_spmm::eval::{
+    oracle_forward, run_eval, width_grid, write_eval_datasets, PrecisionMode, SHARD_GRID,
+};
+use aes_spmm::graph::ShardSpec;
+use aes_spmm::quant::Precision;
+use aes_spmm::runtime::Backend;
+use aes_spmm::sampling::Strategy;
+use aes_spmm::util::argmax_f32;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("accuracy_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A host coordinator over the conformance datasets with explicit
+/// streaming/sharding knobs.
+fn start(dir: &Path, names: &[String], streaming: bool, shards: usize) -> Coordinator {
+    let store = Arc::new(ModelStore::load(dir, names, &["gcn".to_string()]).unwrap());
+    Coordinator::start_with(
+        Backend::Host,
+        store,
+        CoordinatorConfig {
+            workers: 2,
+            queue_depth: 128,
+            batcher: BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+            plan_cache_capacity: 64,
+            prefetch_workers: 1,
+            sharding: (shards > 1).then(|| ShardSpec::by_count(shards)),
+            streaming,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+fn key(dataset: &str, width: Option<usize>, strategy: Strategy, precision: Precision) -> RouteKey {
+    RouteKey { model: "gcn".into(), dataset: dataset.into(), width, strategy, precision }
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: logit {i} differs ({x} vs {y})");
+    }
+}
+
+/// The headline assertion: the full {strategy × width × precision ×
+/// shards} grid, forwarded through the coordinator, sits inside the
+/// budget table — and every cross-configuration check holds.
+#[test]
+fn full_grid_meets_the_budget_table() {
+    let report = run_eval(&tmp("grid"), false).unwrap();
+    let failures = report.failures();
+    assert!(failures.is_empty(), "accuracy budget violations:\n{}", failures.join("\n"));
+
+    // Full coverage: per dataset, 1 exact shape + widths×strategies
+    // sampled shapes, × 3 precision modes × 2 shard counts.
+    let sampled_widths = width_grid(false).iter().filter(|w| w.is_some()).count();
+    let shapes = 1 + sampled_widths * Strategy::ALL.len();
+    let expected = 2 * shapes * PrecisionMode::ALL.len() * SHARD_GRID.len();
+    assert_eq!(report.configs.len(), expected, "grid coverage shrank");
+    assert_eq!(report.datasets.len(), 2);
+
+    // The three invariant families all ran.
+    for needle in ["streamed == eager", "sharded == unsharded", "int8 vs fp32 delta"] {
+        assert!(
+            report.checks.iter().any(|c| c.name.contains(needle)),
+            "missing check family {needle:?}"
+        );
+    }
+    // Both sampling branches of sampling::shard_width were exercised.
+    assert!(report.checks.iter().any(|c| c.name.contains("sampled branch")
+        || c.name.contains("skewed shards sample")));
+    assert!(report.checks.iter().any(|c| c.name.contains("exhaustive")));
+    // The exact fp32 route is the oracle bit-for-bit (budget `bitwise`).
+    for c in &report.configs {
+        if c.width.is_none() && c.mode == PrecisionMode::F32 {
+            assert!(c.metrics.bitwise_equal, "exact fp32 drifted from the oracle: {}", c.name());
+        }
+    }
+}
+
+/// INT8 streamed and eager staging produce bit-identical logits through
+/// the real serving path — exact assertion, not a budget.
+#[test]
+fn int8_streamed_equals_eager_bitwise_through_the_coordinator() {
+    let dir = tmp("stream");
+    let names = write_eval_datasets(&dir).unwrap();
+    let streaming = start(&dir, &names, true, 1);
+    let eager = start(&dir, &names, false, 1);
+    let shapes =
+        [(Some(8), Strategy::Aes), (Some(32), Strategy::Sfs), (None, Strategy::Aes)];
+    for name in &names {
+        for (width, strategy) in shapes {
+            let k = key(name, width, strategy, Precision::U8Device);
+            let a = streaming.route_logits(&k).unwrap();
+            let b = eager.route_logits(&k).unwrap();
+            assert_bitwise(
+                a.as_f32().unwrap(),
+                b.as_f32().unwrap(),
+                &format!("{name} {width:?}/{strategy:?} streamed vs eager"),
+            );
+        }
+    }
+    streaming.shutdown();
+    eager.shutdown();
+}
+
+/// Sharded serving is bit-identical to unsharded serving for every
+/// precision — the PR 3 guarantee as an exact assertion through the
+/// coordinator.
+#[test]
+fn sharded_equals_unsharded_bitwise_through_the_coordinator() {
+    let dir = tmp("shard");
+    let names = write_eval_datasets(&dir).unwrap();
+    let unsharded = start(&dir, &names, true, 1);
+    let sharded = start(&dir, &names, true, 3);
+    let shapes =
+        [(None, Strategy::Aes), (Some(8), Strategy::Aes), (Some(32), Strategy::Afs)];
+    for name in &names {
+        for precision in [Precision::F32, Precision::U8Device] {
+            for (width, strategy) in shapes {
+                let k = key(name, width, strategy, precision);
+                let a = unsharded.route_logits(&k).unwrap();
+                let b = sharded.route_logits(&k).unwrap();
+                assert_bitwise(
+                    a.as_f32().unwrap(),
+                    b.as_f32().unwrap(),
+                    &format!("{name} {width:?}/{strategy:?}/{precision:?} sharded vs unsharded"),
+                );
+            }
+        }
+    }
+    unsharded.shutdown();
+    sharded.shutdown();
+}
+
+/// The exact fp32 route served by the coordinator IS the oracle,
+/// bit-for-bit: dispatch, threading, plan caching, and prefetch change
+/// nothing about the canonical FP order.
+#[test]
+fn exact_fp32_route_is_bitwise_equal_to_the_oracle() {
+    let dir = tmp("oracle");
+    let names = write_eval_datasets(&dir).unwrap();
+    let store = Arc::new(ModelStore::load(&dir, &names, &["gcn".to_string()]).unwrap());
+    let coord = start(&dir, &names, true, 1);
+    for name in &names {
+        let ds = store.dataset(name).unwrap();
+        let weights = store.weights("gcn", name).unwrap();
+        let want = oracle_forward(&ds, &weights).unwrap();
+        // Serve twice: the second pass comes from the warm plan cache
+        // and must not drift either.
+        let exact = key(name, None, Strategy::Aes, Precision::F32);
+        for round in 0..2 {
+            let got = coord.route_logits(&exact).unwrap();
+            assert_bitwise(
+                &want,
+                got.as_f32().unwrap(),
+                &format!("{name} exact fp32 vs oracle (round {round})"),
+            );
+        }
+    }
+    coord.shutdown();
+}
+
+/// Batched predictions agree with the route's raw logits under the
+/// deterministic argmax tie rule — the reply path adds no drift.
+#[test]
+fn batched_predictions_match_route_logits_argmax() {
+    let dir = tmp("argmax");
+    let names = write_eval_datasets(&dir).unwrap();
+    let coord = start(&dir, &names, true, 1);
+    let name = &names[0];
+    let k = key(name, Some(8), Strategy::Aes, Precision::U8Device);
+    let logits = coord.route_logits(&k).unwrap();
+    let vals = logits.as_f32().unwrap();
+    let classes = logits.shape[1];
+    let nodes: Vec<usize> = (0..logits.shape[0]).step_by(11).collect();
+    let resp = coord.infer(k, nodes.clone()).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.predictions.len(), nodes.len());
+    for p in &resp.predictions {
+        let want = argmax_f32(&vals[p.node * classes..(p.node + 1) * classes]) as i32;
+        assert_eq!(p.class, want, "node {}", p.node);
+    }
+    coord.shutdown();
+}

@@ -3,8 +3,9 @@
 //! Each property runs across a deterministic family of random cases; a
 //! failure prints the seed for reproduction.
 
+use aes_spmm::exec::{ShardSampling, ShardedPlan};
 use aes_spmm::gen;
-use aes_spmm::graph::{coo_to_csr, Csr};
+use aes_spmm::graph::{coo_to_csr, Csr, ShardSpec};
 use aes_spmm::quant::{dequantize, max_quant_error, quantize, QuantParams};
 use aes_spmm::rng::Pcg32;
 use aes_spmm::sampling::{plan_row, sample_ell, sampling_rate, strategy_params, Strategy};
@@ -143,6 +144,108 @@ fn prop_quant_roundtrip_bound() {
         let bound = max_quant_error(p) + 1e-5 * scale.max(1.0);
         for (x, y) in data.iter().zip(back.iter()) {
             assert!((x - y).abs() <= bound, "seed {seed}: {x} vs {y} (bound {bound})");
+        }
+    });
+}
+
+/// A graph with the requested degree profile: even seeds draw a
+/// power-law Chung-Lu, odd seeds a uniform Erdős–Rényi — so every
+/// sampling property below is driven over both profiles.
+fn profiled_graph(seed: u64, n: usize, rng: &mut Pcg32) -> Csr {
+    if seed % 2 == 0 {
+        gen::chung_lu(n, 14.0, 1.8, rng)
+    } else {
+        gen::erdos_renyi(n, n * 6, rng)
+    }
+}
+
+#[test]
+fn prop_shard_tile_budgets_never_exceed_global_width() {
+    // Shard-local tile widths (sampling::shard_width via the sharded
+    // planner) must stay within the route's global W: a shard may
+    // shrink its tile, never widen it.
+    forall(12, |seed, rng| {
+        let n = 40 + rng.usize_below(160);
+        let g = profiled_graph(seed, n, rng);
+        let shards = 1 + rng.usize_below(5);
+        for w in [4usize, 16, 64] {
+            let strat = Strategy::ALL[rng.usize_below(3)];
+            let spec = ShardSpec::by_count(shards);
+            let plan = ShardedPlan::prepare(&g, &spec, Some(w), strat, 8, None);
+            for u in plan.units() {
+                let tile = u.sampling.width().expect("sampled route units carry a width");
+                assert!(tile <= w, "seed {seed}: shard tile {tile} exceeds global W {w}");
+                let ell = u.ell.as_ref().expect("sampled route units carry an ELL");
+                assert_eq!(ell.width, tile, "seed {seed}: ELL width disagrees with the tile");
+                ell.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_uniform_shards_sample_exhaustively() {
+    // When every row of a shard fits the global tile, sampling must keep
+    // EVERY edge: the shrunken-tile ELL holds each row's full edge list,
+    // in CSR order.
+    forall(10, |seed, rng| {
+        let n = 30 + rng.usize_below(120);
+        let g = profiled_graph(seed, n, rng);
+        let w = g.max_degree().max(1) * 2; // every shard fits => exhaustive everywhere
+        let spec = ShardSpec::by_count(4);
+        let plan = ShardedPlan::prepare(&g, &spec, Some(w), Strategy::Aes, 8, None);
+        for u in plan.units() {
+            match u.sampling {
+                ShardSampling::Exhaustive { width } => {
+                    let ell = u.ell.as_ref().unwrap();
+                    assert!(width <= w, "seed {seed}");
+                    let mut kept = 0usize;
+                    for li in 0..u.csr.n_rows {
+                        let nnz = u.csr.row_nnz(li);
+                        assert_eq!(ell.slots[li] as usize, nnz, "seed {seed} local row {li}");
+                        let cols = &u.csr.col_ind[u.csr.row_range(li)];
+                        for (k, &c) in cols.iter().enumerate() {
+                            assert_eq!(ell.col[li * ell.width + k], c, "seed {seed}: edge dropped");
+                        }
+                        kept += nnz;
+                    }
+                    assert_eq!(kept, u.csr.nnz(), "seed {seed}: ELL must keep every edge");
+                }
+                other => panic!("seed {seed}: W >= max degree must be exhaustive, got {other:?}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sampled_row_nnz_never_exceeds_original() {
+    // Sampling keeps a subset: a row's ELL slot count never exceeds its
+    // CSR nnz (nor W), for every strategy over both degree profiles.
+    forall(16, |seed, rng| {
+        let n = 30 + rng.usize_below(150);
+        let g = profiled_graph(seed, n, rng);
+        for strat in Strategy::ALL {
+            for w in [4usize, 16, 64] {
+                let ell = sample_ell(&g, w, strat);
+                for i in 0..n {
+                    let s = ell.slots[i] as usize;
+                    assert!(
+                        s <= g.row_nnz(i),
+                        "seed {seed}: row {i} sampled {s} slots from {} edges",
+                        g.row_nnz(i)
+                    );
+                    assert!(s <= w, "seed {seed}: row {i} overflows the tile");
+                }
+            }
+        }
+        // The same invariant at the planner level, across the regimes
+        // (including the empty row, where slots must be 0).
+        for strat in Strategy::ALL {
+            for nnz in [0usize, 1, 7, 63, 64, 65, 4097] {
+                let p = strategy_params(nnz, 64, strat);
+                assert!(p.slots <= nnz, "seed {seed}: {nnz}-edge row planned {} slots", p.slots);
+                assert!(p.slots <= 64, "seed {seed}: slots exceed W");
+            }
         }
     });
 }

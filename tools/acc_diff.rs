@@ -1,0 +1,214 @@
+//! `acc_diff` — CI's accuracy-regression gate, the `bench_diff` twin
+//! for `ACC_eval.json`.
+//!
+//! ```text
+//! acc_diff <fresh.json> <baseline.json> [--tolerance 0.005]
+//! ```
+//!
+//! Two layers of gating:
+//!
+//! 1. **Budget violations always fail**, baseline or not: any entry in
+//!    the fresh report (a grid config or a cross-config check — any
+//!    JSON object carrying `name` + `pass`) with `pass: false` means
+//!    the serving stack broke the paper's accuracy claims outright.
+//! 2. **Regression vs the committed baseline**: for every baseline
+//!    config (entries that also carry `top1_agreement`), the fresh
+//!    agreement may not drop by more than `--tolerance`; a baseline
+//!    entry missing from the fresh run fails (silent coverage loss —
+//!    a renamed config or a crashed grid must force a deliberate
+//!    baseline refresh). Fresh-only entries are informational.
+//!
+//! The conformance grid is bit-deterministic (seeded data, deterministic
+//! sampling, FP order pinned by the oracle contract), so agreements are
+//! exactly reproducible across machines; the default tolerance only
+//! absorbs deliberate small budget-neutral changes between refreshes.
+//!
+//! A missing baseline file is the bootstrap state: the tool prints how
+//! to seed `benchmarks/baseline/ACC_eval.json` and exits 0 — unless the
+//! fresh run itself has failures. Exit codes: 0 = pass (or bootstrap),
+//! 1 = violation/regression, 2 = usage or malformed input.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use aes_spmm::util::{
+    cli_flag_f64, cli_positionals, cli_require_known_flags, parse_json, JsonValue,
+};
+
+/// One gated entry of a report: a grid config (`top1` present) or a
+/// cross-config check (`top1` absent).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Entry {
+    top1: Option<f64>,
+    pass: bool,
+}
+
+/// Recursively collect `(name, Entry)` from any object carrying `name`
+/// + `pass` (schema-agnostic, like bench_diff's case discovery).
+fn collect_entries(v: &JsonValue, out: &mut BTreeMap<String, Entry>) {
+    match v {
+        JsonValue::Obj(map) => {
+            let name = map.get("name").and_then(|n| n.as_str().ok());
+            let pass = map.get("pass").and_then(|p| match p {
+                JsonValue::Bool(b) => Some(*b),
+                _ => None,
+            });
+            if let (Some(name), Some(pass)) = (name, pass) {
+                let top1 = match map.get("top1_agreement") {
+                    Some(JsonValue::Num(x)) => Some(*x),
+                    _ => None,
+                };
+                out.insert(name.to_string(), Entry { top1, pass });
+                return;
+            }
+            for val in map.values() {
+                collect_entries(val, out);
+            }
+        }
+        JsonValue::Arr(items) => {
+            for item in items {
+                collect_entries(item, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn load_entries(path: &str) -> Result<BTreeMap<String, Entry>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    let doc = parse_json(&text).map_err(|e| format!("{path} is not valid JSON: {e}"))?;
+    let mut entries = BTreeMap::new();
+    collect_entries(&doc, &mut entries);
+    if entries.is_empty() {
+        return Err(format!("{path} holds no entries (objects with name + pass)"));
+    }
+    Ok(entries)
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    cli_require_known_flags(&args, &["--tolerance"])?;
+    let positional = cli_positionals(&args);
+    let [fresh_path, baseline_path] = positional.as_slice() else {
+        return Err(
+            "usage: acc_diff <fresh.json> <baseline.json> [--tolerance 0.005]".to_string()
+        );
+    };
+    let tolerance = cli_flag_f64(&args, "--tolerance", 0.005)?;
+
+    let fresh = load_entries(fresh_path)?;
+    let mut failures = 0usize;
+    for (name, e) in &fresh {
+        if !e.pass {
+            println!("  [FAIL]  {name} (accuracy budget violated in the fresh run)");
+            failures += 1;
+        }
+    }
+
+    if !std::path::Path::new(baseline_path.as_str()).exists() {
+        println!("acc_diff: no baseline at {baseline_path} — bootstrap run.");
+        println!(
+            "  {} fresh entr(ies) measured; to arm the regression gate, commit the fresh file:",
+            fresh.len()
+        );
+        println!("    cp {fresh_path} {baseline_path}");
+        if failures > 0 {
+            println!("acc_diff: {failures} budget violation(s) — failing despite bootstrap.");
+        }
+        return Ok(failures == 0);
+    }
+
+    let baseline = load_entries(baseline_path)?;
+    let mut gone = 0usize;
+    let mut drops = 0usize;
+    let mut compared = 0usize;
+    for (name, base) in &baseline {
+        let Some(new) = fresh.get(name) else {
+            println!("  [GONE]  {name} (in baseline, not in fresh run)");
+            gone += 1;
+            continue;
+        };
+        let (Some(b), Some(n)) = (base.top1, new.top1) else { continue };
+        compared += 1;
+        let drop = b - n;
+        if drop > tolerance {
+            println!("  [DROP]  {name}: top-1 agreement {b:.4} -> {n:.4} (-{drop:.4})");
+            drops += 1;
+        }
+    }
+    for name in fresh.keys() {
+        if !baseline.contains_key(name) {
+            println!("  [new]   {name} (no baseline yet)");
+        }
+    }
+    println!(
+        "acc_diff: {compared} config(s) compared, {failures} budget violation(s), \
+         {drops} drop(s) beyond {tolerance}, {gone} baseline entr(ies) missing from the fresh run"
+    );
+    Ok(failures == 0 && drops == 0 && gone == 0)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(msg) => {
+            eprintln!("acc_diff: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries_of(text: &str) -> BTreeMap<String, Entry> {
+        let mut out = BTreeMap::new();
+        collect_entries(&parse_json(text).unwrap(), &mut out);
+        out
+    }
+
+    #[test]
+    fn collects_configs_and_checks() {
+        // The ACC_eval.json shape: configs carry top1, checks do not.
+        let doc = r#"{"report":"acc_eval","pass":true,
+            "configs":[
+                {"name":"d/exact/f32/shards1","top1_agreement":1.0,"pass":true},
+                {"name":"d/aes-w8/u8-streamed/shards3","top1_agreement":0.9938,"pass":true}],
+            "checks":[{"name":"sharded == unsharded (d/exact/f32)","pass":true,"detail":"ok"}]}"#;
+        let e = entries_of(doc);
+        assert_eq!(e.len(), 3);
+        assert_eq!(e["d/exact/f32/shards1"].top1, Some(1.0));
+        assert!(e["sharded == unsharded (d/exact/f32)"].top1.is_none());
+        assert!(e.values().all(|x| x.pass));
+    }
+
+    #[test]
+    fn entry_objects_do_not_recurse_into_themselves() {
+        let doc = r#"[{"name":"x","pass":true,"extra":{"name":"inner","pass":false}}]"#;
+        let e = entries_of(doc);
+        assert_eq!(e.len(), 1);
+        assert!(e["x"].pass);
+    }
+
+    #[test]
+    fn top_level_pass_flag_is_not_an_entry() {
+        // The root object has "pass" but no "name": recursion continues
+        // into it rather than swallowing the document.
+        let doc = r#"{"pass":false,"configs":[{"name":"a","top1_agreement":0.5,"pass":false}]}"#;
+        let e = entries_of(doc);
+        assert_eq!(e.len(), 1);
+        assert!(!e["a"].pass);
+    }
+
+    #[test]
+    fn drop_math_matches_the_gate() {
+        // tolerance 0.005: a 0.004 drop passes, a 0.006 drop fails.
+        let base = 0.993f64;
+        for (new, fails) in [(0.989, false), (0.987, true)] {
+            let drop: f64 = base - new;
+            assert_eq!(drop > 0.005, fails, "drop {drop}");
+        }
+    }
+}

@@ -30,7 +30,9 @@
 use std::collections::BTreeMap;
 use std::process::ExitCode;
 
-use aes_spmm::util::{parse_json, JsonValue};
+use aes_spmm::util::{
+    cli_flag_f64, cli_positionals, cli_require_known_flags, parse_json, JsonValue,
+};
 
 /// Recursively collect `(path-qualified name, median_ns)` cases.
 fn collect_cases(prefix: &str, v: &JsonValue, out: &mut BTreeMap<String, f64>) {
@@ -82,43 +84,17 @@ fn load_cases(path: &str) -> Result<BTreeMap<String, f64>, String> {
     Ok(cases)
 }
 
-fn parse_flag(args: &[String], flag: &str, default: f64) -> Result<f64, String> {
-    match args.iter().position(|a| a == flag) {
-        Some(i) => args
-            .get(i + 1)
-            .ok_or_else(|| format!("{flag} needs a value"))?
-            .parse()
-            .map_err(|e| format!("{flag}: {e}")),
-        None => Ok(default),
-    }
-}
-
-/// Everything that is not a `--flag` or a flag's value (every flag here
-/// takes one value).
-fn positionals(args: &[String]) -> Vec<&String> {
-    let mut out = Vec::new();
-    let mut i = 0;
-    while i < args.len() {
-        if args[i].starts_with("--") {
-            i += 2;
-        } else {
-            out.push(&args[i]);
-            i += 1;
-        }
-    }
-    out
-}
-
 fn run() -> Result<bool, String> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let positional = positionals(&args);
+    cli_require_known_flags(&args, &["--threshold", "--min-median-us"])?;
+    let positional = cli_positionals(&args);
     let [fresh_path, baseline_path] = positional.as_slice() else {
         return Err("usage: bench_diff <fresh.json> <baseline.json> \
                     [--threshold 0.15] [--min-median-us 100]"
             .to_string());
     };
-    let threshold = parse_flag(&args, "--threshold", 0.15)?;
-    let min_median_ns = parse_flag(&args, "--min-median-us", 100.0)? * 1_000.0;
+    let threshold = cli_flag_f64(&args, "--threshold", 0.15)?;
+    let min_median_ns = cli_flag_f64(&args, "--min-median-us", 100.0)? * 1_000.0;
 
     let fresh = load_cases(fresh_path)?;
     if !std::path::Path::new(baseline_path.as_str()).exists() {
@@ -237,19 +213,8 @@ mod tests {
         assert_eq!(cases_of(doc).len(), 1);
     }
 
-    #[test]
-    fn flag_values_are_not_positional() {
-        // `--threshold 0.15` must consume its value, leaving exactly the
-        // two paths as positionals.
-        let args: Vec<String> =
-            ["fresh.json", "base.json", "--threshold", "0.15", "--min-median-us", "50"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect();
-        assert_eq!(positionals(&args), ["fresh.json", "base.json"]);
-        assert_eq!(parse_flag(&args, "--threshold", 0.99).unwrap(), 0.15);
-        assert_eq!(parse_flag(&args, "--min-median-us", 100.0).unwrap(), 50.0);
-    }
+    // Flag/positional splitting is covered where the helpers live
+    // (`util::cli`); both gate binaries share them.
 
     #[test]
     fn regression_math() {

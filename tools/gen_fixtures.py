@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""Generate the golden accuracy fixtures under rust/tests/fixtures/.
+
+Produces, for each of two tiny hand-built graphs (a skewed 8-node graph
+and a uniform 6-node ring):
+
+  data_<name>.nbt         a complete dataset container (Dataset::load keys)
+  weights_gcn_<name>.nbt  GCN weights in GCN_PARAM_ORDER (+ ideal_acc)
+  oracle_<name>.nbt       the expected oracle logits ("logits", f32 [n, c])
+
+The logits are computed here with *bit-exact f32 emulation* of
+`eval::oracle_forward`'s canonical reduction order: every multiply and
+add is rounded to f32 immediately. Computing each op in float64 and
+then rounding to f32 yields the correctly-rounded f32 op by the
+double-rounding theorem: binary64's 53 significand bits exceed the
+2*24+2 = 50 bits that make double rounding innocuous for binary32
+add/mul (the f32 *product* is even exact in f64; the exact *sum* of two
+f32s generally is not — e.g. 1e30f32 + 1.0f32 — but the theorem covers
+it). This argument is specific to binary32-via-binary64 add/mul; do NOT
+extend the emulation to an f64 oracle or to fused ops on the same
+reasoning. The Rust oracle must reproduce these bytes exactly — see
+rust/tests/oracle_regression.rs and rust/tests/fixtures/README.md.
+
+All graph values, features, and weights are dyadic rationals, keeping
+every intermediate exactly representable; the f32 emulation makes the
+result independent of that choice, the dyadics just keep the files
+human-auditable.
+
+Deterministic: re-running this script must reproduce the committed
+fixture bytes. Python 3 stdlib only.
+"""
+
+import struct
+from pathlib import Path
+
+FIXTURE_DIR = Path(__file__).resolve().parent.parent / "rust" / "tests" / "fixtures"
+
+F32, I32, U8, I64 = 0, 1, 2, 3
+SIZES = {F32: 4, I32: 4, U8: 1, I64: 8}
+PACK = {F32: "<f", I32: "<i", U8: "<B", I64: "<q"}
+
+
+def f32(x):
+    """Round a python float to the nearest f32 (IEEE-754 binary32)."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def write_nbt(path, tensors):
+    """tensors: list of (name, dtype, shape, flat_values)."""
+    buf = bytearray(b"NBTC")
+    buf += struct.pack("<I", len(tensors))
+    for name, dtype, shape, values in tensors:
+        n_elems = 1
+        for d in shape:
+            n_elems *= d
+        assert len(values) == n_elems, f"{name}: {len(values)} values, shape {shape}"
+        nb = name.encode()
+        buf += struct.pack("<H", len(nb)) + nb
+        buf += struct.pack("<I", dtype) + struct.pack("<I", len(shape))
+        for d in shape:
+            buf += struct.pack("<Q", d)
+        payload = b"".join(struct.pack(PACK[dtype], v) for v in values)
+        assert len(payload) == n_elems * SIZES[dtype]
+        buf += struct.pack("<Q", len(payload)) + payload
+    path.write_bytes(bytes(buf))
+    print(f"wrote {path} ({len(buf)} bytes)")
+
+
+# ---- the canonical oracle, f32-emulated -------------------------------
+
+def matmul(a, b, m, k, n):
+    out = [0.0] * (m * n)
+    for i in range(m):
+        for kk in range(k):
+            av = a[i * k + kk]
+            for j in range(n):
+                out[i * n + j] = f32(out[i * n + j] + f32(av * b[kk * n + j]))
+    return out
+
+
+def aggregate(row_ptr, col_ind, val, b, n_rows, f):
+    out = [0.0] * (n_rows * f)
+    for i in range(n_rows):
+        for e in range(row_ptr[i], row_ptr[i + 1]):
+            v, col = val[e], col_ind[e]
+            for j in range(f):
+                out[i * f + j] = f32(out[i * f + j] + f32(v * b[col * f + j]))
+    return out
+
+
+def oracle_forward(graph, feat, w0, b0, w1, b1, n, f, h, c):
+    row_ptr, col_ind, val = graph
+    xw = matmul(feat, w0, n, f, h)
+    hidden = aggregate(row_ptr, col_ind, val, xw, n, h)
+    for i in range(n):
+        for j in range(h):
+            v = f32(hidden[i * h + j] + b0[j])
+            hidden[i * h + j] = v if v > 0.0 else 0.0
+    hw = matmul(hidden, w1, n, h, c)
+    logits = aggregate(row_ptr, col_ind, val, hw, n, c)
+    for i in range(n):
+        for j in range(c):
+            logits[i * c + j] = f32(logits[i * c + j] + b1[j])
+    return logits
+
+
+# ---- fixture construction ---------------------------------------------
+
+def build_csr(n, rows):
+    """rows: list of sorted column lists. Dyadic values 0.25/0.375/0.5."""
+    row_ptr, col_ind, val = [0], [], []
+    for i, cols in enumerate(rows):
+        assert cols == sorted(cols) and all(0 <= c < n for c in cols)
+        for c in cols:
+            col_ind.append(c)
+            val.append(0.25 + 0.125 * ((i + c) % 3))
+        row_ptr.append(len(col_ind))
+    return row_ptr, col_ind, val
+
+
+def quantize(data, lo, hi):
+    inv = f32(255.0 / f32(hi - lo))
+    out = []
+    for x in data:
+        q = int(f32(f32(x - lo) * inv) // 1)  # floor
+        out.append(max(0, min(255, q)))
+    return out
+
+
+def emit(name, rows, n, f, h, c):
+    row_ptr, col_ind, val = build_csr(n, rows)
+    nnz = len(col_ind)
+    # Dyadic features/weights via small modular patterns (no randomness).
+    feat = [((i * f + j) % 7) * 0.25 - 0.75 for i in range(n) for j in range(f)]
+    w0 = [(((j * h + k) % 5) - 2) * 0.125 for j in range(f) for k in range(h)]
+    b0 = [[0.0625, -0.125, 0.09375, 0.046875][k % 4] for k in range(h)]
+    w1 = [(((j * c + k) % 7) - 3) * 0.0625 for j in range(h) for k in range(c)]
+    b1 = [[0.03125, -0.0625, 0.015625][k % 3] for k in range(c)]
+    labels = [i % c for i in range(n)]
+
+    # Every input must be exactly f32-representable (dyadic by design).
+    for v in feat + w0 + b0 + w1 + b1 + val:
+        assert f32(v) == v, f"{name}: {v} is not exactly f32-representable"
+
+    lo, hi = min(feat), max(feat)
+    write_nbt(FIXTURE_DIR / f"data_{name}.nbt", [
+        ("meta", I64, [4], [n, nnz, f, c]),
+        ("row_ptr", I32, [n + 1], row_ptr),
+        ("col_ind", I32, [nnz], col_ind),
+        ("val_gcn", F32, [nnz], val),
+        ("val_ones", F32, [nnz], [1.0] * nnz),
+        ("feat", F32, [n, f], feat),
+        ("featq", U8, [n, f], quantize(feat, lo, hi)),
+        ("qrange", F32, [2], [lo, hi]),
+        ("labels", I32, [n], labels),
+        ("train_mask", U8, [n], [0] * n),
+    ])
+    write_nbt(FIXTURE_DIR / f"weights_gcn_{name}.nbt", [
+        ("w0", F32, [f, h], w0),
+        ("b0", F32, [h], b0),
+        ("w1", F32, [h, c], w1),
+        ("b1", F32, [c], b1),
+        ("ideal_acc", F32, [1], [1.0]),
+    ])
+    logits = oracle_forward((row_ptr, col_ind, val), feat, w0, b0, w1, b1, n, f, h, c)
+    # The stored logits must survive the f32 round-trip bit-for-bit.
+    assert all(f32(x) == x for x in logits)
+    write_nbt(FIXTURE_DIR / f"oracle_{name}.nbt", [
+        ("logits", F32, [n, c], logits),
+    ])
+
+
+def main():
+    FIXTURE_DIR.mkdir(parents=True, exist_ok=True)
+    # goldskew: 8 nodes, a degree-6 hub plus sparse tail rows.
+    emit(
+        "goldskew",
+        rows=[
+            [0, 1, 2, 3, 5, 7],
+            [0, 1],
+            [2],
+            [0, 3, 4],
+            [4, 6],
+            [0, 5],
+            [6],
+            [0, 7],
+        ],
+        n=8, f=4, h=3, c=3,
+    )
+    # golduni: 6-node ring with self-loops — uniform degree 3.
+    emit(
+        "golduni",
+        rows=[sorted({(i - 1) % 6, i, (i + 1) % 6}) for i in range(6)],
+        n=6, f=5, h=4, c=2,
+    )
+
+
+if __name__ == "__main__":
+    main()
