@@ -107,6 +107,7 @@ fn plan_cache_vs_reload() {
             host_ell: true,
             stream: false,
             shard: None,
+            shard_bounds: None,
             shard_cache: None,
         };
         prepare_plan(&fstore, Precision::F32, &spec, f, &env).expect("prepare plan")

@@ -2,7 +2,10 @@
 //! group when it reaches `max_batch` or its oldest member has waited
 //! `max_delay` — the standard serving trade-off (vLLM/Orca-style), applied
 //! to full-graph GNN inference where a batch of N same-route requests
-//! costs exactly one forward pass.
+//! costs exactly one forward pass. Multi-group flushes (deadline sweeps
+//! and the shutdown drain) emit oldest-first, so flush order — and the
+//! latency accounting built on it — is deterministic rather than
+//! `HashMap`-iteration-order dependent.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -77,19 +80,29 @@ pub fn run_batcher_with(
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                for (key, group) in groups.drain() {
+                // Shutdown drain. `HashMap::drain` yields groups in
+                // arbitrary (seed-dependent) order, which made shutdown
+                // latency accounting — and any test reading the flush
+                // sequence — irreproducible. Flush oldest-first: the
+                // deterministic order that also bounds the worst
+                // queue-wait a drained request reports.
+                let mut drained: Vec<(RouteKey, Group)> = groups.drain().collect();
+                drained.sort_by_key(|(_, g)| g.oldest);
+                for (key, group) in drained {
                     let _ = sink(Batch { key, requests: group.requests });
                 }
                 return;
             }
         }
-        // Deadline flushes.
-        let expired: Vec<RouteKey> = groups
+        // Deadline flushes, oldest deadline first (same determinism
+        // argument as the shutdown drain).
+        let mut expired: Vec<(Instant, RouteKey)> = groups
             .iter()
             .filter(|(_, g)| g.oldest.elapsed() >= cfg.max_delay)
-            .map(|(k, _)| k.clone())
+            .map(|(k, g)| (g.oldest, k.clone()))
             .collect();
-        for key in expired {
+        expired.sort_by_key(|&(oldest, _)| oldest);
+        for (_, key) in expired {
             let group = groups.remove(&key).unwrap();
             if !sink(Batch { key, requests: group.requests }) {
                 return;
@@ -211,6 +224,100 @@ mod tests {
         let sizes = collected.lock().unwrap().clone();
         assert_eq!(sizes.iter().sum::<usize>(), 4);
         assert!(sizes.iter().all(|&s| s <= 2));
+    }
+
+    /// Partial groups must drain oldest-first on disconnect — pinned
+    /// order, not `HashMap` iteration order. Enqueue times are set
+    /// explicitly so the expected order is unambiguous.
+    #[test]
+    fn shutdown_drain_is_oldest_first() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let order = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = order.clone();
+        let h = std::thread::spawn(move || {
+            run_batcher_with(
+                BatcherConfig { max_batch: 1000, max_delay: Duration::from_secs(10) },
+                in_rx,
+                move |batch| {
+                    sink.lock().unwrap().push(batch.key.width.unwrap());
+                    true
+                },
+            )
+        });
+        let now = Instant::now();
+        let mut replies = Vec::new();
+        // Send in shuffled width order; ages say 64 (oldest) → 16 → 32.
+        for (w, age_ms) in [(32u64, 5u64), (64, 50), (16, 20)] {
+            let (mut r, reply) = req(w, key(w as usize));
+            r.enqueued = now - Duration::from_millis(age_ms);
+            replies.push(reply);
+            in_tx.send(r).unwrap();
+        }
+        drop(in_tx); // disconnect before any flush condition fires
+        h.join().unwrap();
+        assert_eq!(*order.lock().unwrap(), vec![64, 16, 32], "drain must be oldest-first");
+    }
+
+    /// Deadline sweeps flush every expired group oldest-first, and a
+    /// group never waits past ~max_delay plus one recv bound: the wait
+    /// timeout is derived from the nearest group deadline, so a queued
+    /// group's flush latency is bounded even with no further traffic.
+    #[test]
+    fn deadline_flush_is_ordered_and_bounded() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let order = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = order.clone();
+        let max_delay = Duration::from_millis(20);
+        let h = std::thread::spawn(move || {
+            run_batcher_with(
+                BatcherConfig { max_batch: 1000, max_delay },
+                in_rx,
+                move |batch| {
+                    sink.lock().unwrap().push((batch.key.width.unwrap(), Instant::now()));
+                    true
+                },
+            )
+        });
+        let now = Instant::now();
+        let mut replies = Vec::new();
+        // Two groups born 10ms apart (backdated), same sweep window.
+        for (w, age_ms) in [(32u64, 0u64), (16, 10)] {
+            let (mut r, reply) = req(w, key(w as usize));
+            r.enqueued = now - Duration::from_millis(age_ms);
+            replies.push(reply);
+            in_tx.send(r).unwrap();
+        }
+        // No more traffic: both groups must still flush via deadlines.
+        loop {
+            let done = order.lock().unwrap().len() == 2;
+            if done {
+                break;
+            }
+            assert!(now.elapsed() < Duration::from_secs(5), "deadline flush never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        drop(in_tx);
+        h.join().unwrap();
+        let flushed = order.lock().unwrap().clone();
+        assert_eq!(
+            flushed.iter().map(|&(w, _)| w).collect::<Vec<_>>(),
+            vec![16, 32],
+            "expired groups must flush oldest-first"
+        );
+        // The deadline bound: every group flushed within max_delay of
+        // its (backdated) birth, plus generous scheduling slack — the
+        // bound distinguishes "flushed by its deadline" from "sat until
+        // the 10s-scale fallback", not exact latency, so it stays far
+        // above CI scheduler noise.
+        let slack = Duration::from_secs(2);
+        for &(w, at) in &flushed {
+            let born = now - Duration::from_millis(if w == 16 { 10 } else { 0 });
+            assert!(
+                at.duration_since(born) <= max_delay + slack,
+                "group w{w} waited {:?} past its deadline",
+                at.duration_since(born)
+            );
+        }
     }
 
     #[test]

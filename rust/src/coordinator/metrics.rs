@@ -92,6 +92,13 @@ pub struct Metrics {
     /// Batches executed through a sharded plan (per-shard sampling +
     /// dispatch, row-concatenated merge).
     pub sharded_batches: AtomicU64,
+    /// Graph epochs advanced by `apply_delta` (changing deltas only).
+    pub graph_epochs: AtomicU64,
+    /// Shard units a delta invalidated (re-sampled on next use).
+    pub shards_resampled: AtomicU64,
+    /// Shard units a delta re-tagged to the new epoch without
+    /// rebuilding (the scoped-invalidation win — untouched shards).
+    pub shards_retained: AtomicU64,
     pub latency: Histogram,
     pub queue_wait: Histogram,
     pub exec_time: Histogram,
@@ -111,6 +118,9 @@ pub struct MetricsSnapshot {
     pub plan_hits: u64,
     pub plan_misses: u64,
     pub sharded_batches: u64,
+    pub graph_epochs: u64,
+    pub shards_resampled: u64,
+    pub shards_retained: u64,
     pub latency_p50: Duration,
     pub latency_p99: Duration,
     pub latency_mean: Duration,
@@ -148,6 +158,9 @@ impl Metrics {
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
             sharded_batches: self.sharded_batches.load(Ordering::Relaxed),
+            graph_epochs: self.graph_epochs.load(Ordering::Relaxed),
+            shards_resampled: self.shards_resampled.load(Ordering::Relaxed),
+            shards_retained: self.shards_retained.load(Ordering::Relaxed),
             latency_p50: self.latency.percentile(50.0),
             latency_p99: self.latency.percentile(99.0),
             latency_mean: self.latency.mean(),

@@ -45,8 +45,15 @@
 //! * The prefetch pool is never the batch pool — a batch worker may
 //!   block waiting for a staging build and must not be able to queue
 //!   that build behind itself.
-//! * `ModelStore` is immutable after startup; republishing data goes
-//!   through plan-cache invalidation, not store mutation.
+//! * `ModelStore` weights/features are immutable after startup;
+//!   datasets are **published by replacement** — a live
+//!   [`crate::graph::GraphDelta`] goes through
+//!   [`Coordinator::apply_delta`], which publishes the next epoch's
+//!   graph first and then invalidates precisely: only the shard units
+//!   of touched shards are re-sampled, untouched units are re-tagged
+//!   and stay warm, and dropped route plans are re-staged through the
+//!   prefetcher (docs/mutation.md). Wholesale republish (features
+//!   rotated on disk) still uses `invalidate_route`.
 //! * With sharding enabled ([`CoordinatorConfig::sharding`]), host plans
 //!   carry a `ShardedPlan`; prepared shard units live in a cache of
 //!   their own keyed by (dataset, width, strategy, row range) — shared
@@ -68,5 +75,7 @@ mod store;
 pub use batcher::{run_batcher, run_batcher_with, Batch, BatcherConfig};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use request::{InferRequest, InferResponse, Prediction, RouteKey, SubmitError};
-pub use server::{oneshot_accuracy, Coordinator, CoordinatorConfig, ShardCacheStats};
+pub use server::{
+    oneshot_accuracy, Coordinator, CoordinatorConfig, DeltaOutcome, ShardCacheStats,
+};
 pub use store::ModelStore;

@@ -18,8 +18,9 @@
 //! worker blocks in `fetch`, and it must never be able to block on a
 //! build queued behind itself.
 
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -27,11 +28,11 @@ use anyhow::Result;
 
 use crate::exec::{
     prepare_plan, ExecEnv, ExecPlan, PlanCache, PlanSpec, Pool, PrefetchStats, Prefetcher,
-    ShardKey, ShardUnit,
+    ShardCacheRef, ShardKey, ShardLayout, ShardUnit,
 };
-use crate::graph::ShardSpec;
+use crate::graph::{DeltaReport, GraphDelta, ShardSpec};
 use crate::quant::{Features, Precision};
-use crate::runtime::{accuracy, run_forward, Backend, Engine};
+use crate::runtime::{accuracy, run_forward, Backend, Dataset, Engine};
 use crate::sampling::Strategy;
 use crate::tensor::Tensor;
 use crate::util::argmax_f32;
@@ -136,6 +137,37 @@ pub struct ShardCacheStats {
     pub misses: u64,
     /// Units dropped by LRU overflow.
     pub evictions: u64,
+    /// Unit lookups that found the resident entry tagged with a
+    /// superseded graph epoch (a mutation raced its build). Counted per
+    /// encounter — the entry stays resident until it is replaced by a
+    /// rebuild, re-tagged by a later delta, or evicted.
+    pub stale: u64,
+}
+
+/// What one [`Coordinator::apply_delta`] did — epoch advance, scope of
+/// invalidation, and how much prepared state survived.
+#[derive(Clone, Debug)]
+pub struct DeltaOutcome {
+    /// The dataset's epoch after the apply (unchanged for no-op deltas).
+    pub epoch: u64,
+    /// The splice report (touched rows, op counts).
+    pub report: DeltaReport,
+    /// Shard units invalidated (their shards were touched, or the
+    /// layout was re-cut): these re-sample on next use.
+    pub shards_resampled: usize,
+    /// Shard units re-tagged to the new epoch without rebuilding —
+    /// untouched shards staying warm, the scoped-invalidation win.
+    pub shards_retained: usize,
+    /// Whether a touched shard drifted past its working-set budget and
+    /// forced the sticky layout to be thrown away (full re-partition on
+    /// next build).
+    pub repartitioned: bool,
+    /// Route plans dropped (whole-graph objects: any change invalidates
+    /// them, but their shard units above mostly survive).
+    pub plans_invalidated: usize,
+    /// Dropped route plans handed to the prefetcher for immediate
+    /// re-staging against the new epoch (0 when prefetch is disabled).
+    pub routes_restaged: usize,
 }
 
 /// Everything a pool worker needs to execute a batch.
@@ -153,7 +185,86 @@ struct WorkerCtx {
     /// Prepared shard units, shared across routes/precisions — a plan
     /// build (inline or prefetched) samples only the cold shards.
     shard_units: Arc<PlanCache<ShardKey, ShardUnit>>,
+    /// Sticky per-dataset shard layouts: the cut points are frozen at
+    /// the first sharded build and reused across graph epochs, so a
+    /// delta's shard-scoped invalidation has stable [`ShardKey`]s to
+    /// aim at. Cleared (forcing a re-partition) on dataset-wide
+    /// invalidation or working-set drift — the slot then keeps a
+    /// **minimum derivation epoch**, so an in-flight build still
+    /// holding a pre-re-cut dataset snapshot cannot resurrect the old
+    /// cuts by re-deriving and inserting them.
+    layouts: Mutex<HashMap<String, LayoutSlot>>,
+    /// Serializes [`Coordinator::apply_delta`]: mutation is a
+    /// read→splice→publish→invalidate sequence, and two concurrent
+    /// appliers reading the same epoch would each publish "epoch N+1"
+    /// with one delta's edits silently lost — and worse, tag two
+    /// *different* graphs with the same epoch, which the versioned
+    /// caches cannot tell apart. Mutations are rare; one lock is fine.
+    delta_lock: Mutex<()>,
     env: ExecEnv,
+}
+
+/// One dataset's sticky-layout slot: the frozen cuts (if any) plus the
+/// minimum graph epoch a newly derived layout must come from to be
+/// allowed in. A drift re-cut (or dataset invalidation) clears the
+/// layout and raises the floor to the current epoch, so a straggler
+/// build still holding an older dataset snapshot derives its cuts
+/// locally but cannot publish them — the next current-epoch build
+/// re-partitions the mutated graph as intended.
+#[derive(Default)]
+struct LayoutSlot {
+    layout: Option<Arc<ShardLayout>>,
+    min_epoch: u64,
+}
+
+impl WorkerCtx {
+    /// The dataset's frozen shard layout, created on first use from the
+    /// builder's `(csr, epoch)` snapshot. A resident layout that no
+    /// longer covers `csr`'s rows (a wholesale republish swapped in a
+    /// differently-shaped graph) is never served — feeding it to
+    /// `partition_fixed` would panic a worker. The derivation runs
+    /// outside the lock (two racing first builds may both derive; first
+    /// eligible insert wins — the cuts are deterministic in
+    /// (csr, spec)).
+    fn layout_for(
+        &self,
+        dataset: &str,
+        csr: &crate::graph::Csr,
+        epoch: u64,
+        spec: &ShardSpec,
+    ) -> Arc<ShardLayout> {
+        if let Some(slot) = self.layouts.lock().unwrap().get(dataset) {
+            if let Some(l) = &slot.layout {
+                if l.covers(csr) {
+                    return l.clone();
+                }
+            }
+        }
+        let built = Arc::new(ShardLayout::of(csr, spec));
+        let mut layouts = self.layouts.lock().unwrap();
+        let slot = layouts.entry(dataset.to_string()).or_default();
+        match &slot.layout {
+            Some(l) if l.covers(csr) => l.clone(),
+            // Publish our derivation only if the snapshot it came from
+            // is not older than the slot's floor; a sub-floor build
+            // keeps its cuts private (its plan is tagged with a
+            // superseded epoch and unreachable anyway).
+            _ if epoch >= slot.min_epoch => {
+                slot.layout = Some(built.clone());
+                built
+            }
+            _ => built,
+        }
+    }
+
+    /// Clear a dataset's sticky layout and forbid re-derivations from
+    /// snapshots older than `min_epoch` (see [`LayoutSlot`]).
+    fn clear_layout(&self, dataset: &str, min_epoch: u64) {
+        let mut layouts = self.layouts.lock().unwrap();
+        let slot = layouts.entry(dataset.to_string()).or_default();
+        slot.layout = None;
+        slot.min_epoch = slot.min_epoch.max(min_epoch);
+    }
 }
 
 /// Handle to a running coordinator. Dropping it (or calling
@@ -195,6 +306,8 @@ impl Coordinator {
             sharding: cfg.sharding,
             streaming: cfg.streaming,
             shard_units: Arc::new(PlanCache::new(cfg.shard_cache_capacity)),
+            layouts: Mutex::new(HashMap::new()),
+            delta_lock: Mutex::new(()),
             env: ExecEnv::detect(),
         });
         let pool = Arc::new(Pool::new(cfg.workers.max(1)));
@@ -243,18 +356,26 @@ impl Coordinator {
         // the claim without any storage work.
         let staging = self.ctx.prefetch.as_ref().and_then(|p| {
             let plan_key = PlanKey::for_route(&key, self.ctx.backend.aggregates_on_host());
-            p.begin(plan_key).map(|ticket| (ticket, key.clone()))
+            // Coalesce only on a plan at the dataset's *current* epoch:
+            // a resident superseded-epoch plan (a mutation raced a stale
+            // build) must not suppress staging, or the rebuild lands on
+            // the batch worker's critical path.
+            let epoch = self.ctx.store.dataset(&plan_key.dataset).ok()?.epoch;
+            p.begin_versioned(plan_key.clone(), epoch).map(|ticket| (ticket, plan_key))
         });
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = InferRequest { id, key, nodes, enqueued: Instant::now(), reply: reply_tx };
         self.ctx.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match intake.try_send(req) {
             Ok(()) => {
-                if let Some((ticket, key)) = staging {
+                if let Some((ticket, plan_key)) = staging {
                     // Staging overlaps the batching window and whatever
-                    // SpMM the workers are already executing.
+                    // SpMM the workers are already executing. The build
+                    // binds the dataset snapshot (and its epoch) when it
+                    // runs, so the cached plan is tagged with the epoch
+                    // of the graph it actually read.
                     let ctx = self.ctx.clone();
-                    ticket.commit(move || build_plan(&ctx, &key));
+                    ticket.commit_versioned(move || build_plan_current(&ctx, &plan_key));
                 }
                 Ok((id, reply_rx))
             }
@@ -313,6 +434,7 @@ impl Coordinator {
             hits: units.hits(),
             misses: units.misses(),
             evictions: units.evictions(),
+            stale: units.stale(),
         }
     }
 
@@ -338,31 +460,201 @@ impl Coordinator {
     }
 
     fn spawn_prefetch(&self, key: &RouteKey) -> bool {
-        let Some(p) = &self.ctx.prefetch else { return false };
         let plan_key = PlanKey::for_route(key, self.ctx.backend.aggregates_on_host());
-        let Some(ticket) = p.begin(plan_key) else { return false };
+        self.spawn_prefetch_key(plan_key)
+    }
+
+    fn spawn_prefetch_key(&self, plan_key: PlanKey) -> bool {
+        let Some(p) = &self.ctx.prefetch else { return false };
+        let Ok(ds) = self.ctx.store.dataset(&plan_key.dataset) else { return false };
+        let Some(ticket) = p.begin_versioned(plan_key.clone(), ds.epoch) else { return false };
         let ctx = self.ctx.clone();
-        let key = key.clone();
-        ticket.commit(move || build_plan(&ctx, &key));
+        ticket.commit_versioned(move || build_plan_current(&ctx, &plan_key));
         true
     }
 
-    /// Drop every cached plan and shard unit of the route's **dataset**
-    /// (republished data / rotated features); the next batch on any of
-    /// its routes reloads from storage. Invalidation is per-dataset, not
-    /// per-route, because sibling routes (other precisions, widths,
-    /// models) share the same underlying graph and feature file —
-    /// dropping only one would leave the others serving stale data.
-    /// Returns whether any plan was resident.
+    /// Drop every cached plan, shard unit, and the sticky shard layout
+    /// of the route's **dataset** (republished data / rotated features);
+    /// the next batch on any of its routes reloads from storage and
+    /// re-partitions. Invalidation is per-dataset, not per-route,
+    /// because sibling routes (other precisions, widths, models) share
+    /// the same underlying graph and feature file — dropping only one
+    /// would leave the others serving stale data. Returns whether any
+    /// plan was resident.
+    ///
+    /// This is the blunt instrument (everything rebuilds). For live
+    /// edge mutations prefer [`Coordinator::apply_delta`], which keeps
+    /// untouched shards warm.
     pub fn invalidate_route(&self, key: &RouteKey) -> bool {
+        // Floor the layout slot at the currently published epoch so an
+        // in-flight build of a pre-invalidation snapshot cannot
+        // re-publish the old cuts (if the dataset is unchanged the
+        // re-derived cuts are identical anyway, so the floor only
+        // matters when this invalidate follows a republish).
+        let epoch =
+            self.ctx.store.dataset(&key.dataset).map(|d| d.epoch).unwrap_or(u64::MAX);
+        self.ctx.clear_layout(&key.dataset, epoch);
         self.ctx.shard_units.invalidate_matching(|k| k.tag == key.dataset);
         self.ctx.plans.invalidate_matching(|k| k.dataset == key.dataset) > 0
     }
 
-    /// Drop every cached plan and shard unit.
+    /// Drop every cached plan, shard unit, and layout.
     pub fn invalidate_all_routes(&self) {
+        for name in self.ctx.store.dataset_names() {
+            let epoch = self.ctx.store.dataset(&name).map(|d| d.epoch).unwrap_or(u64::MAX);
+            self.ctx.clear_layout(&name, epoch);
+        }
         self.ctx.plans.clear();
         self.ctx.shard_units.clear();
+    }
+
+    /// Apply a live edge delta to `dataset`: splice the CSR, advance
+    /// the epoch, and invalidate **precisely** — only the shard units
+    /// whose rows the delta touched are dropped (they re-sample, and
+    /// their [`crate::sampling::shard_width`] uniform/skewed decision
+    /// is re-evaluated, on next use); untouched units are re-tagged to
+    /// the new epoch and stay warm, which [`Coordinator::shard_stats`]
+    /// can prove. Route plans of the dataset are whole-graph objects,
+    /// so they are dropped and immediately re-staged through the
+    /// prefetcher (warm shard units make those rebuilds cheap).
+    ///
+    /// Ordering contract (the stale-plan fix depends on it): the new
+    /// dataset is **published first**, then caches are invalidated.
+    /// A plan builder serializes either before the publish (its plan is
+    /// tagged with the old epoch — unreachable at the new one) or after
+    /// (it reads the new graph). Either way no stale plan can be served
+    /// at the new epoch; see `docs/mutation.md`.
+    ///
+    /// Consistency note: deltas edit stored values (for GCN routes the
+    /// Â entries) directly; a weight policy that depends on degrees
+    /// must emit the corresponding reweights itself. Live mutation is a
+    /// host-aggregation feature — device artifacts are compiled against
+    /// a fixed graph shape, so PJRT routes of a mutated dataset should
+    /// be re-compiled (`make artifacts`) and republished instead.
+    pub fn apply_delta(&self, dataset: &str, delta: &GraphDelta) -> Result<DeltaOutcome> {
+        let ctx = &self.ctx;
+        // Mutations serialize: concurrent appliers reading the same
+        // epoch would lose edits and double-assign the epoch tag.
+        let _mutating = ctx.delta_lock.lock().unwrap();
+        let ds = ctx.store.dataset(dataset)?;
+        let (spliced, report) = delta.apply_to(&ds.csr_gcn)?;
+        let Some(csr_gcn) = spliced else {
+            // Nothing changed: keep the epoch, keep every plan warm.
+            return Ok(DeltaOutcome {
+                epoch: ds.epoch,
+                report,
+                shards_resampled: 0,
+                shards_retained: 0,
+                repartitioned: false,
+                plans_invalidated: 0,
+                routes_restaged: 0,
+            });
+        };
+        let epoch = ds.epoch + 1;
+        let nnz = csr_gcn.nnz();
+        // The feature tensors / labels / masks are copied here because
+        // Dataset owns them; a delta never changes them, so Arc-ifying
+        // those fields is the obvious follow-up if delta rates ever
+        // make this copy show up.
+        let new_ds = Dataset {
+            nnz,
+            epoch,
+            csr_gcn,
+            // Same structure with unit values (GraphSAGE's numerator).
+            val_ones: vec![1.0f32; nnz],
+            ..(*ds).clone()
+        };
+        // 1. Publish first — every lookup from here on binds epoch N+1.
+        // Compare-and-publish: a concurrent *direct*
+        // `ModelStore::publish_dataset` (wholesale republish — not
+        // covered by the delta lock) would otherwise be silently
+        // overwritten with a splice of data it just replaced.
+        let new_ds = Arc::new(new_ds);
+        if !ctx.store.publish_dataset_cas(dataset, ds.epoch, new_ds.clone())? {
+            anyhow::bail!(
+                "dataset {dataset:?} was republished while the delta applied \
+                 (epoch moved past {}); re-apply against the new data",
+                ds.epoch
+            );
+        }
+
+        // 2. Shard units: atomically drop the touched shards' units and
+        // re-tag the untouched ones from the superseded epoch to the
+        // new one. One cache-lock acquisition (`advance_epoch`), so a
+        // racing stale insert can neither land between the drop and the
+        // re-tag nor be promoted — only entries verifiably built
+        // against epoch N are revalidated at N+1.
+        let layout = ctx.layouts.lock().unwrap().get(dataset).and_then(|s| s.layout.clone());
+        let (mut shards_resampled, mut shards_retained) = (0usize, 0usize);
+        let mut repartitioned = false;
+        match layout {
+            // A layout that no longer covers the graph (wholesale
+            // republish changed the row count) is useless for scoping:
+            // fall through to the drop-everything arm below.
+            Some(layout) if layout.covers(&new_ds.csr_gcn) => {
+                let affected = layout.affected_shards(&report.touched_rows);
+                if layout.drifted(&new_ds.csr_gcn, &affected) {
+                    // A touched shard outgrew its working-set budget:
+                    // throw the cuts away (flooring the slot at the new
+                    // epoch, so a straggler build of the pre-mutation
+                    // snapshot cannot resurrect them); the next build
+                    // re-partitions and re-samples everything.
+                    ctx.clear_layout(dataset, epoch);
+                    shards_resampled =
+                        ctx.shard_units.invalidate_matching(|k| k.tag == dataset);
+                    repartitioned = true;
+                } else {
+                    let hot: HashSet<(usize, usize)> = affected
+                        .iter()
+                        .map(|&i| {
+                            let r = &layout.bounds()[i];
+                            (r.start, r.end)
+                        })
+                        .collect();
+                    (shards_resampled, shards_retained) = ctx.shard_units.advance_epoch(
+                        |k| k.tag == dataset && hot.contains(&k.rows),
+                        |k| k.tag == dataset,
+                        ds.epoch,
+                        epoch,
+                    );
+                }
+            }
+            // No sharded route built yet (or the resident layout is for
+            // a differently-shaped graph): drop every unit; the next
+            // build re-partitions.
+            _ => {
+                ctx.clear_layout(dataset, epoch);
+                shards_resampled = ctx.shard_units.invalidate_matching(|k| k.tag == dataset);
+            }
+        }
+
+        // 3. Route plans are whole-graph: drop the dataset's, keeping
+        // the keys so step 4 can re-stage exactly those routes.
+        let stale_keys = ctx.plans.take_matching(|k| k.dataset == dataset);
+
+        ctx.metrics.graph_epochs.fetch_add(1, Ordering::Relaxed);
+        ctx.metrics.shards_resampled.fetch_add(shards_resampled as u64, Ordering::Relaxed);
+        ctx.metrics.shards_retained.fetch_add(shards_retained as u64, Ordering::Relaxed);
+
+        // 4. Re-stage the dropped routes against the new epoch so the
+        // next batch finds them warm (feature staging + the touched
+        // shards' re-sampling run on the prefetch pool, off the batch
+        // critical path).
+        let mut routes_restaged = 0usize;
+        for plan_key in &stale_keys {
+            if self.spawn_prefetch_key(plan_key.clone()) {
+                routes_restaged += 1;
+            }
+        }
+        Ok(DeltaOutcome {
+            epoch,
+            report,
+            shards_resampled,
+            shards_retained,
+            repartitioned,
+            plans_invalidated: stale_keys.len(),
+            routes_restaged,
+        })
     }
 
     /// Drain the pipeline and join all threads.
@@ -458,22 +750,31 @@ fn fail_batch(metrics: &Metrics, batch: Batch, msg: &str) {
     }
 }
 
-/// Build one route's plan — the cold path, whether it runs inline on a
-/// batch worker or ahead of time on the prefetch pool. Counts itself as
-/// a plan miss (builds are the meaningful "miss" once staging can happen
-/// off the critical path).
-fn build_plan(ctx: &WorkerCtx, key: &RouteKey) -> Result<ExecPlan> {
+/// Build one route's plan from an already-bound dataset snapshot — the
+/// cold path, whether it runs inline on a batch worker or ahead of time
+/// on the prefetch pool. Counts itself as a plan miss (builds are the
+/// meaningful "miss" once staging can happen off the critical path).
+///
+/// The caller fetches `ds` **once** and uses `ds.epoch` for the cache
+/// transaction; building from that same snapshot is what makes the
+/// epoch tag truthful — the plan can never claim an epoch whose graph
+/// it did not read.
+fn build_plan(ctx: &WorkerCtx, key: &PlanKey, ds: &Dataset) -> Result<ExecPlan> {
     ctx.metrics.plan_misses.fetch_add(1, Ordering::Relaxed);
-    let ds = ctx.store.dataset(&key.dataset)?;
     let fstore = ctx.store.feature_store(&key.dataset)?;
     let host_aggregation = ctx.backend.aggregates_on_host();
     // Sharding is a host-aggregation concern; device artifacts aggregate
     // in-kernel and keep the single-operand plan.
     let shard = if host_aggregation { ctx.sharding } else { None };
+    // Sticky layout: the dataset's frozen cuts (created here on first
+    // sharded use). Mutated epochs reuse them so untouched shard units
+    // keep their keys.
+    let layout = shard.map(|spec| ctx.layout_for(&key.dataset, &ds.csr_gcn, ds.epoch, &spec));
     let spec = PlanSpec {
         csr: &ds.csr_gcn,
-        width: if host_aggregation { key.width } else { None },
-        strategy: key.strategy,
+        // PlanKey width/strategy are pre-normalized for the backend.
+        width: key.width,
+        strategy: key.strategy.unwrap_or(Strategy::Aes),
         host_ell: host_aggregation,
         // Host aggregation consumes features row-block-wise, so the plan
         // can hold a zero-copy streamed handle; device artifacts need the
@@ -482,11 +783,27 @@ fn build_plan(ctx: &WorkerCtx, key: &RouteKey) -> Result<ExecPlan> {
         // bitwise equality through this exact path.
         stream: host_aggregation && ctx.streaming,
         shard,
-        // Units are keyed by dataset + width + strategy + row range, so a
-        // build for one precision warms every sibling route's shards.
-        shard_cache: shard.map(|_| (&*ctx.shard_units, key.dataset.as_str())),
+        shard_bounds: layout.as_deref().map(|l| l.bounds()),
+        // Units are keyed by dataset + width + strategy + row range (and
+        // epoch-versioned), so a build for one precision warms every
+        // sibling route's shards.
+        shard_cache: shard.map(|_| ShardCacheRef {
+            units: &ctx.shard_units,
+            tag: key.dataset.as_str(),
+            epoch: ds.epoch,
+        }),
     };
     prepare_plan(&fstore, key.precision, &spec, ds.feats, &ctx.env)
+}
+
+/// [`build_plan`] against the store's **current** snapshot, reporting
+/// the epoch it bound — the prefetch-pool builder
+/// ([`crate::exec::PrefetchTicket::commit_versioned`] tags the cached
+/// plan with exactly this epoch).
+fn build_plan_current(ctx: &WorkerCtx, key: &PlanKey) -> Result<(ExecPlan, u64)> {
+    let ds = ctx.store.dataset(&key.dataset)?;
+    let plan = build_plan(ctx, key, &ds)?;
+    Ok((plan, ds.epoch))
 }
 
 /// Forward pass for one route through its (possibly cached) plan.
@@ -502,14 +819,20 @@ fn execute_route(
     ctx: &WorkerCtx,
     key: &RouteKey,
 ) -> Result<(Tensor, usize, Duration, Duration, bool)> {
+    // One dataset fetch per execution: the epoch of this snapshot is
+    // the epoch the whole batch runs at — plan resolution, shard units,
+    // and the forward all read this same `Arc`, so a delta landing
+    // mid-batch cannot tear the execution across epochs.
     let ds = ctx.store.dataset(&key.dataset)?;
     let weights = ctx.store.weights(&key.model, &key.dataset)?;
 
     let host_aggregation = ctx.backend.aggregates_on_host();
     let plan_key = PlanKey::for_route(key, host_aggregation);
     let (plan, hit) = match &ctx.prefetch {
-        Some(p) => p.fetch(&plan_key, || build_plan(ctx, key))?,
-        None => ctx.plans.get_or_try_insert(&plan_key, || build_plan(ctx, key))?,
+        Some(p) => p.fetch_versioned(&plan_key, ds.epoch, || build_plan(ctx, &plan_key, &ds))?,
+        None => ctx.plans.get_or_try_insert_versioned(&plan_key, ds.epoch, || {
+            build_plan(ctx, &plan_key, &ds)
+        })?,
     };
     if plan.sharded.is_some() {
         ctx.metrics.sharded_batches.fetch_add(1, Ordering::Relaxed);

@@ -1,20 +1,28 @@
 //! Model store: preloaded datasets, weights, and feature stores shared by
-//! the worker pool. Everything here is immutable after startup, so
-//! workers read lock-free through `Arc`s.
+//! the worker pool. Weights and feature stores are immutable after
+//! startup, so workers read them lock-free through `Arc`s. Datasets are
+//! **published by replacement**: [`ModelStore::publish_dataset`] swaps
+//! the `Arc` behind a short read-mostly lock so the live-mutation path
+//! ([`crate::coordinator::Coordinator::apply_delta`]) can advance a
+//! dataset's epoch without touching readers mid-batch — a reader that
+//! already cloned the `Arc` keeps a consistent epoch-N snapshot for the
+//! rest of its batch.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{Context, Result};
 
 use crate::quant::FeatureStore;
 use crate::runtime::{Dataset, Weights};
 
-/// Immutable registry of loaded datasets + weights for serving.
+/// Registry of loaded datasets + weights for serving. Datasets are
+/// replaceable (epoch-versioned mutation); everything else is fixed at
+/// load time.
 pub struct ModelStore {
     artifacts_dir: PathBuf,
-    datasets: HashMap<String, Arc<Dataset>>,
+    datasets: RwLock<HashMap<String, Arc<Dataset>>>,
     weights: HashMap<(String, String), Arc<Weights>>,
     features: HashMap<String, Arc<FeatureStore>>,
 }
@@ -29,13 +37,13 @@ impl ModelStore {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let mut store = ModelStore {
             artifacts_dir: dir.clone(),
-            datasets: HashMap::new(),
+            datasets: RwLock::new(HashMap::new()),
             weights: HashMap::new(),
             features: HashMap::new(),
         };
         for ds in datasets {
             let data = Dataset::load(&dir, ds).with_context(|| format!("dataset {ds}"))?;
-            store.datasets.insert(ds.clone(), Arc::new(data));
+            store.datasets.get_mut().unwrap().insert(ds.clone(), Arc::new(data));
             store.features.insert(
                 ds.clone(),
                 Arc::new(FeatureStore::open(dir.join(format!("data_{ds}.nbt")))?),
@@ -54,9 +62,86 @@ impl ModelStore {
 
     pub fn dataset(&self, name: &str) -> Result<Arc<Dataset>> {
         self.datasets
+            .read()
+            .unwrap()
             .get(name)
             .cloned()
             .with_context(|| format!("dataset {name:?} not loaded"))
+    }
+
+    /// Replace a dataset's published value (the next epoch after a
+    /// [`crate::graph::GraphDelta`], or a wholesale republish). The name
+    /// must already be loaded — publication changes *content*, never the
+    /// serving roster. Readers holding the previous `Arc` are untouched.
+    ///
+    /// **Epochs never regress**: if the incoming dataset's epoch is not
+    /// strictly greater than the published one (the wholesale-republish
+    /// case — a freshly loaded `Dataset` restarts at epoch 0), it is
+    /// re-stamped to `published.epoch + 1`. Every publication is
+    /// therefore an epoch advance, which is what keeps the versioned
+    /// plan caches sound: a builder that bound the pre-publish snapshot
+    /// tagged its plan with the old epoch, and no new reader can ever
+    /// look that epoch up again (`docs/mutation.md`) — even when the
+    /// publisher forgot to bump the epoch itself.
+    pub fn publish_dataset(&self, name: &str, dataset: Arc<Dataset>) -> Result<()> {
+        let mut map = self.datasets.write().unwrap();
+        let slot = map
+            .get_mut(name)
+            .with_context(|| format!("dataset {name:?} not loaded (publish is content-only)"))?;
+        let dataset = if dataset.epoch > slot.epoch {
+            dataset
+        } else {
+            let epoch = slot.epoch + 1;
+            // Rare path (wholesale republish): the clone is dominated by
+            // the reload that produced the dataset.
+            let restamped = match Arc::try_unwrap(dataset) {
+                Ok(owned) => Dataset { epoch, ..owned },
+                Err(shared) => Dataset { epoch, ..(*shared).clone() },
+            };
+            Arc::new(restamped)
+        };
+        *slot = dataset;
+        Ok(())
+    }
+
+    /// Compare-and-publish: replace the dataset only if the published
+    /// epoch is still `expected_epoch`. Returns `false` (publishing
+    /// nothing) when another publication won the race — the caller
+    /// derived its value from a snapshot that is no longer current and
+    /// must re-derive. `Coordinator::apply_delta` uses this so a
+    /// concurrent wholesale [`ModelStore::publish_dataset`] is never
+    /// silently overwritten by a splice of the data it just replaced.
+    ///
+    /// Like [`ModelStore::publish_dataset`], the epoch **never
+    /// regresses or repeats**: a winning publication whose dataset does
+    /// not already carry a newer epoch is re-stamped to
+    /// `expected_epoch + 1` — enforced in release builds too, because a
+    /// same-epoch republish of different content would poison every
+    /// versioned cache entry tagged with that epoch.
+    pub fn publish_dataset_cas(
+        &self,
+        name: &str,
+        expected_epoch: u64,
+        dataset: Arc<Dataset>,
+    ) -> Result<bool> {
+        let mut map = self.datasets.write().unwrap();
+        let slot = map
+            .get_mut(name)
+            .with_context(|| format!("dataset {name:?} not loaded (publish is content-only)"))?;
+        if slot.epoch != expected_epoch {
+            return Ok(false);
+        }
+        *slot = if dataset.epoch > expected_epoch {
+            dataset
+        } else {
+            let epoch = expected_epoch + 1;
+            let restamped = match Arc::try_unwrap(dataset) {
+                Ok(owned) => Dataset { epoch, ..owned },
+                Err(shared) => Dataset { epoch, ..(*shared).clone() },
+            };
+            Arc::new(restamped)
+        };
+        Ok(true)
     }
 
     pub fn weights(&self, model: &str, dataset: &str) -> Result<Arc<Weights>> {
@@ -74,7 +159,7 @@ impl ModelStore {
     }
 
     pub fn dataset_names(&self) -> Vec<String> {
-        let mut v: Vec<_> = self.datasets.keys().cloned().collect();
+        let mut v: Vec<_> = self.datasets.read().unwrap().keys().cloned().collect();
         v.sort();
         v
     }

@@ -18,9 +18,9 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, RouteKey};
-use crate::exec::{ShardSampling, ShardedPlan};
+use crate::exec::{ShardLayout, ShardSampling, ShardedPlan};
 use crate::experiments::Table;
-use crate::graph::ShardSpec;
+use crate::graph::{EdgeOp, GraphDelta, ShardSpec};
 use crate::quant::Precision;
 use crate::runtime::{accuracy, Backend, Dataset};
 use crate::sampling::Strategy;
@@ -437,12 +437,169 @@ pub fn run_eval(dir: &Path, quick: bool) -> Result<EvalReport> {
         push_pairwise_checks(&mut report, &bank, name, &shapes, &ds);
         push_shard_branch_checks(&mut report, spec.profile, name, &ds);
         push_serving_path_checks(&mut report, &coords, &bank, name, &ds)?;
+        // Live mutation: dedicated coordinators (apply_delta advances
+        // the store's epoch, which must not touch the grid's stores).
+        push_mutation_checks(&mut report, dir, name, quick)?;
     }
 
     for (_, c) in coords {
         c.shutdown();
     }
     Ok(report)
+}
+
+/// Deterministic deltas for the mutate-then-serve scenario, derived
+/// from the dataset's own structure: one value-level delta and one
+/// structural delta, both confined to the first rows (a single shard of
+/// the 3-way layout) so shard retention is observable.
+fn eval_deltas(ds: &Dataset) -> Vec<GraphDelta> {
+    let g = &ds.csr_gcn;
+    let first_edge = |row: usize| -> Option<(i32, f32)> {
+        g.row_range(row).next().map(|e| (g.col_ind[e], g.val[e]))
+    };
+    let (c0, v0) = first_edge(0).expect("eval graphs have self-loops");
+    let (c1, _) = first_edge(1).expect("eval graphs have self-loops");
+    vec![
+        // Delta 1: reweight one edge of row 0, insert a fresh edge on
+        // row 1 (new column: the last node, weights stay Â-scale).
+        GraphDelta::new(vec![
+            EdgeOp::Reweight { row: 0, col: c0, weight: v0 * 0.5 },
+            EdgeOp::Insert { row: 1, col: (ds.n - 1) as i32, weight: 0.05 },
+        ]),
+        // Delta 2: delete the edge delta 1 inserted and one original
+        // edge of row 1 — exercising delete-after-insert across epochs.
+        GraphDelta::new(vec![
+            EdgeOp::Delete { row: 1, col: (ds.n - 1) as i32 },
+            EdgeOp::Delete { row: 1, col: c1 },
+        ]),
+    ]
+}
+
+/// The mutate-then-serve guarantee through the real serving stack:
+/// after each [`Coordinator::apply_delta`], the warm (sharded,
+/// streaming) coordinator's forward must be **bitwise-equal** to a cold
+/// coordinator built directly on the mutated graph — and the warm
+/// coordinator must prove (via [`crate::coordinator::ShardCacheStats`])
+/// that it kept every untouched shard's unit instead of re-sampling it.
+/// The quick sweep keeps the scenario (it is the only coverage of the
+/// mutation path in `--quick` CI smoke runs) but trims it to a single
+/// delta, halving the cold-coordinator replays.
+fn push_mutation_checks(
+    report: &mut EvalReport,
+    dir: &Path,
+    name: &str,
+    quick: bool,
+) -> Result<()> {
+    let names = vec![name.to_string()];
+    let models = vec!["gcn".to_string()];
+    let shards = SHARD_GRID[1];
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_depth: 64,
+        prefetch_workers: 1,
+        sharding: Some(ShardSpec::by_count(shards)),
+        streaming: true,
+        ..CoordinatorConfig::default()
+    };
+    let store = Arc::new(ModelStore::load(dir, &names, &models)?);
+    let warm = Coordinator::start_with(Backend::Host, store.clone(), cfg.clone());
+    let ds = store.dataset(name)?;
+    // Two route families (exact + sampled) so retention counts cover
+    // both unit families; INT8-streamed rides the same units.
+    let routes = [
+        (None, Strategy::Aes, Precision::F32),
+        (Some(8), Strategy::Aes, Precision::U8Device),
+    ];
+    let route_key = |(width, strategy, precision): (Option<usize>, Strategy, Precision)| RouteKey {
+        model: "gcn".to_string(),
+        dataset: name.to_string(),
+        width,
+        strategy,
+        precision,
+    };
+    for &r in &routes {
+        warm.route_logits(&route_key(r))?;
+    }
+    // The warm coordinator's sticky layout is derived deterministically
+    // from (csr, spec) at first build; recompute it here so the
+    // retention expectations track the actual cuts instead of assuming
+    // which shard the touched rows land in.
+    let layout = ShardLayout::of(&ds.csr_gcn, &ShardSpec::by_count(shards));
+
+    let mut deltas = eval_deltas(&ds);
+    if quick {
+        deltas.truncate(1);
+    }
+    for (i, delta) in deltas.iter().enumerate() {
+        let before = warm.shard_stats();
+        let outcome = warm.apply_delta(name, delta)?;
+        warm.wait_prefetch_idle();
+        let mut warm_logits = Vec::new();
+        for &r in &routes {
+            warm_logits.push(warm.route_logits(&route_key(r))?.as_f32()?.to_vec());
+        }
+        let after = warm.shard_stats();
+
+        // Cold oracle: a fresh coordinator that never served the
+        // pre-mutation graph, fed the same delta prefix.
+        let cold_store = Arc::new(ModelStore::load(dir, &names, &models)?);
+        let cold = Coordinator::start_with(Backend::Host, cold_store, cfg.clone());
+        for d in &deltas[..=i] {
+            cold.apply_delta(name, d)?;
+        }
+        for (ri, &r) in routes.iter().enumerate() {
+            let key = route_key(r);
+            let want = cold.route_logits(&key)?.as_f32()?.to_vec();
+            let (equal, differing) = bits_equal(&want, &warm_logits[ri]);
+            report.checks.push(EvalCheck {
+                name: format!(
+                    "mutate-then-serve bitwise ({name}/{}/delta{})",
+                    shape_label(key.width, key.strategy),
+                    i + 1
+                ),
+                pass: equal,
+                detail: format!(
+                    "{differing} logit(s) differ vs a cold coordinator on the mutated graph \
+                     (epoch {})",
+                    outcome.epoch
+                ),
+            });
+        }
+        cold.shutdown();
+
+        // Retention: per route family, exactly the shards the delta's
+        // touched rows land in (per the sticky layout) re-sample; the
+        // rest stay warm. Deltas are shaped to leave at least one
+        // untouched shard, so retention is observable.
+        let affected = layout.affected_shards(&outcome.report.touched_rows).len();
+        let families = routes.len();
+        let untouched = layout.shard_count() - affected;
+        let misses = after.misses - before.misses;
+        let hits = after.hits - before.hits;
+        let expect_misses = (families * affected) as u64;
+        let expect_hits = (families * untouched) as u64;
+        report.checks.push(EvalCheck {
+            name: format!("mutation retains untouched shards ({name}/delta{})", i + 1),
+            pass: untouched > 0
+                && outcome.shards_resampled == families * affected
+                && outcome.shards_retained == families * untouched
+                && misses == expect_misses
+                && hits >= expect_hits
+                && !outcome.repartitioned,
+            detail: format!(
+                "{affected}/{} shard(s) touched; resampled {} (want {}), retained {} \
+                 (want {}), unit misses {misses} (want {expect_misses}), unit hits {hits} \
+                 (want ≥{expect_hits})",
+                layout.shard_count(),
+                outcome.shards_resampled,
+                families * affected,
+                outcome.shards_retained,
+                families * untouched
+            ),
+        });
+    }
+    warm.shutdown();
+    Ok(())
 }
 
 /// Streamed-vs-eager and sharded-vs-unsharded bitwise checks plus the

@@ -160,6 +160,7 @@ mod tests {
             nnz,
             feats: f,
             classes: c,
+            epoch: 0,
             val_ones: vec![1.0; nnz],
             csr_gcn: g,
             feat: Tensor::from_f32(&[n, f], &feat),

@@ -13,8 +13,8 @@
 //! |--------------|-------------------------------------------------------|
 //! | `dispatch`   | [`select_kernel`]: pick from the CPU SpMM zoo using graph statistics, feature dim, and the thread budget — the host-side analog of the paper's adaptive strategy table |
 //! | `pool`       | [`Pool`]: spawn-once workers, per-worker queues + work stealing; replaces per-call `std::thread::scope` and the old lock-contended coordinator loop |
-//! | `plan_cache` | [`PlanCache`] + [`ExecPlan`]: per-route staged features (zero-copy row-block handles on the streaming path), sampled ELL, kernel choice — behind an LRU with generation-fenced invalidation |
-//! | `sharded`    | [`ShardedPlan`] + [`ShardUnit`]: working-set-budgeted row shards with per-shard sampling + dispatch, executed as independent pool tasks and merged by row concatenation; units cached per [`ShardKey`] so warm routes rebuild only cold shards |
+//! | `plan_cache` | [`PlanCache`] + [`ExecPlan`]: per-route staged features (zero-copy row-block handles on the streaming path), sampled ELL, kernel choice — behind an LRU with generation-fenced invalidation and epoch-versioned entries (live-graph mutation, `docs/mutation.md`) |
+//! | `sharded`    | [`ShardedPlan`] + [`ShardUnit`]: working-set-budgeted row shards with per-shard sampling + dispatch, executed as independent pool tasks and merged by row concatenation; units cached per [`ShardKey`] so warm routes rebuild only cold shards; [`ShardLayout`] freezes the cuts across epochs so deltas re-sample only touched shards |
 //! | `prefetch`   | [`Prefetcher`]: build the next route's plan on a private pool so feature staging overlaps the current batch's SpMM |
 //!
 //! # Rules
@@ -42,4 +42,4 @@ pub use dispatch::{
 pub use plan_cache::{prepare_plan, ExecPlan, PlanCache, PlanSpec};
 pub use pool::{global as global_pool, Pool};
 pub use prefetch::{PrefetchStats, PrefetchTicket, Prefetcher};
-pub use sharded::{ShardKey, ShardSampling, ShardUnit, ShardedPlan};
+pub use sharded::{ShardCacheRef, ShardKey, ShardLayout, ShardSampling, ShardUnit, ShardedPlan};

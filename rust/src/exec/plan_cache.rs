@@ -15,7 +15,10 @@
 //! * cold miss → the builder runs (and its `load_time` is charged to
 //!   that batch); concurrent misses on one key may build twice — both
 //!   results are valid, last insert wins (same idiom as the engine's
-//!   compile cache);
+//!   compile cache). On the **versioned** API the tie-break is
+//!   newest-epoch wins instead: a build against a superseded graph
+//!   epoch can never clobber (or be served over) the rebuilt plan —
+//!   the live-mutation correctness contract (`docs/mutation.md`);
 //! * hit → no disk, no sampling, `load_time` reported as zero;
 //! * capacity overflow → least-recently-used entry is evicted;
 //! * [`PlanCache::invalidate`] / [`PlanCache::clear`] drop entries when
@@ -33,7 +36,7 @@ use crate::quant::{FeatureStore, Features, LoadStats, Precision};
 use crate::sampling::{sample_ell_par, Strategy};
 
 use super::dispatch::{select_kernel, ExecEnv, GraphProfile, KernelKind};
-use super::sharded::{ShardKey, ShardUnit, ShardedPlan};
+use super::sharded::{ShardCacheRef, ShardedPlan};
 
 /// Everything per-route that the hot path should not rebuild per batch.
 #[derive(Clone, Debug)]
@@ -85,10 +88,16 @@ pub struct PlanSpec<'a> {
     /// sampling and dispatch. `None` keeps the single-working-set path.
     /// Only meaningful with `host_ell`-style host aggregation.
     pub shard: Option<ShardSpec>,
-    /// Shard-unit cache plus the graph's identity tag: warm routes reuse
-    /// prepared units, and a build of a partially-warm route samples
-    /// only the cold shards. `None` builds units uncached.
-    pub shard_cache: Option<(&'a PlanCache<ShardKey, ShardUnit>, &'a str)>,
+    /// Fixed shard cut points from a sticky [`super::ShardLayout`] —
+    /// the live-mutation path, where the partition must survive epochs
+    /// so untouched shard units stay warm. `None` derives fresh
+    /// quantile cuts from `shard` (the static-graph behavior).
+    pub shard_bounds: Option<&'a [std::ops::Range<usize>]>,
+    /// Shard-unit cache reference (cache + graph identity tag + graph
+    /// epoch): warm routes reuse prepared units, and a build of a
+    /// partially-warm route samples only the cold shards. `None` builds
+    /// units uncached.
+    pub shard_cache: Option<ShardCacheRef<'a>>,
 }
 
 /// Build a route's plan: one instrumented feature load (or zero-copy
@@ -105,14 +114,26 @@ pub fn prepare_plan(
         if spec.stream { fstore.stage(precision)? } else { fstore.load(precision)? };
     let (profile, ell, sharded) = match (spec.host_ell, spec.shard, spec.width) {
         (true, Some(shard_spec), _) => {
-            let plan = ShardedPlan::prepare(
-                spec.csr,
-                &shard_spec,
-                spec.width,
-                spec.strategy,
-                feat_dim,
-                spec.shard_cache,
-            );
+            let plan = match spec.shard_bounds {
+                // Sticky layout (live mutation): reuse the serving cuts
+                // so untouched shard units keep their keys.
+                Some(bounds) => ShardedPlan::prepare_with_bounds(
+                    spec.csr,
+                    bounds,
+                    spec.width,
+                    spec.strategy,
+                    feat_dim,
+                    spec.shard_cache,
+                ),
+                None => ShardedPlan::prepare(
+                    spec.csr,
+                    &shard_spec,
+                    spec.width,
+                    spec.strategy,
+                    feat_dim,
+                    spec.shard_cache,
+                ),
+            };
             (GraphProfile::of(spec.csr), None, Some(Arc::new(plan)))
         }
         (true, None, Some(width)) => {
@@ -129,6 +150,10 @@ pub fn prepare_plan(
 struct Entry<V> {
     value: Arc<V>,
     last_used: u64,
+    /// Graph epoch this value was built against (0 for unversioned
+    /// inserts). Versioned lookups require an exact match; see the
+    /// `*_versioned` methods.
+    epoch: u64,
 }
 
 struct Inner<K, V> {
@@ -138,16 +163,39 @@ struct Inner<K, V> {
     /// that straddles a bump is served to its caller but **not**
     /// inserted, so invalidation can never be undone by an in-flight
     /// build of pre-invalidation data.
+    ///
+    /// The generation fence alone is a *time* fence: it only catches
+    /// builds whose snapshot predates the bump. A builder that bound its
+    /// input data before a mutation but took its snapshot after the
+    /// mutation's bump sails through — which is why versioned entries
+    /// exist: the **epoch** tag travels with the data itself, so a stale
+    /// value is unreachable at the new epoch no matter how the fence
+    /// race resolved.
     generation: u64,
 }
 
 /// A bounded LRU cache with hit/miss/eviction counters.
+///
+/// Two usage modes, per cache instance (don't mix them on one cache):
+/// * **Unversioned** (`get`/`insert`/`get_or_try_insert`): the original
+///   contract — last insert wins, invalidation generation-fences
+///   in-flight builds.
+/// * **Versioned** (`*_versioned`): every entry carries the graph epoch
+///   it was built against. A lookup at epoch `e` hits only an entry
+///   tagged `e`; an *older* entry is dropped as stale (counted in
+///   [`PlanCache::stale`]); a *newer* entry is left resident (the
+///   reader, not the entry, is behind). Inserts are **newest-epoch
+///   wins**: a build tagged `e` never replaces a resident entry tagged
+///   `> e`, so a builder that started against epoch N cannot clobber
+///   the rebuilt N+1 plan — the live-mutation correctness contract
+///   (`docs/mutation.md`).
 pub struct PlanCache<K, V> {
     inner: Mutex<Inner<K, V>>,
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    stale: AtomicU64,
 }
 
 impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
@@ -159,7 +207,16 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
         }
+    }
+
+    /// Snapshot the invalidation generation — taken by a builder
+    /// **before** it reads any input state, and passed back to
+    /// [`PlanCache::try_insert_versioned`] so the insert can be refused
+    /// if any invalidation fired in between.
+    pub fn generation(&self) -> u64 {
+        self.inner.lock().unwrap().generation
     }
 
     /// Look up without counting a hit or miss and without refreshing LRU
@@ -167,6 +224,139 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
     /// an entry look hot or skew the hit-rate metrics).
     pub fn peek(&self, key: &K) -> Option<Arc<V>> {
         self.inner.lock().unwrap().map.get(key).map(|e| e.value.clone())
+    }
+
+    /// [`PlanCache::peek`] restricted to entries tagged exactly `epoch`.
+    /// Pure read: a mismatched entry is neither dropped nor counted.
+    pub fn peek_versioned(&self, key: &K, epoch: u64) -> Option<Arc<V>> {
+        let inner = self.inner.lock().unwrap();
+        inner.map.get(key).filter(|e| e.epoch == epoch).map(|e| e.value.clone())
+    }
+
+    /// Versioned lookup. Hit iff the resident entry is tagged exactly
+    /// `epoch`. Any other tag misses **without evicting the entry**:
+    /// * tagged *older*: superseded data — unreachable (counted in
+    ///   [`PlanCache::stale`] per encounter), but left resident because
+    ///   a mutation's `advance_epoch` may still be on its way to re-tag
+    ///   it (untouched-shard revalidation); an eager drop here would
+    ///   let a reader racing the publish→advance window destroy the
+    ///   retained-shard win. The entry is reclaimed by the rebuild's
+    ///   replacing insert, by `advance_epoch`/invalidation, or by LRU.
+    /// * tagged *newer*: the **reader** bound an old epoch; it rebuilds
+    ///   from its own snapshot and its insert is refused by
+    ///   newest-epoch-wins.
+    pub fn get_versioned(&self, key: &K, epoch: u64) -> Option<Arc<V>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get(key).map(|e| e.epoch) {
+            Some(tagged) if tagged == epoch => {
+                let entry = inner.map.get_mut(key).expect("checked above");
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.value.clone())
+            }
+            Some(tagged) => {
+                if tagged < epoch {
+                    self.stale.fetch_add(1, Ordering::Relaxed);
+                }
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Fenced, epoch-tagged insert: lands only if (a) no invalidation
+    /// fired since the builder's `generation` snapshot and (b) no
+    /// resident entry carries a newer epoch. Returns whether the value
+    /// was inserted. This is the extension of the generation fence that
+    /// closes the stale-insert race: even when a stale builder's
+    /// snapshot postdates the invalidation bump (so (a) passes), its
+    /// epoch tag keeps the value unreachable at the advanced epoch, and
+    /// (b) keeps it from clobbering an already-rebuilt plan.
+    pub fn try_insert_versioned(
+        &self,
+        key: &K,
+        value: Arc<V>,
+        epoch: u64,
+        generation: u64,
+    ) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.generation != generation {
+            return false;
+        }
+        if let Some(existing) = inner.map.get(key) {
+            if existing.epoch > epoch {
+                return false;
+            }
+        }
+        Self::insert_locked(&mut inner, self.capacity, &self.evictions, key.clone(), value, epoch);
+        true
+    }
+
+    /// Versioned variant of [`PlanCache::get_or_try_insert`]: the caller
+    /// binds `epoch` to the input data **before** building (fetch the
+    /// dataset once, read its epoch, build from that same snapshot), so
+    /// the entry's tag always matches the data actually read.
+    pub fn get_or_try_insert_versioned<E>(
+        &self,
+        key: &K,
+        epoch: u64,
+        build: impl FnOnce() -> std::result::Result<V, E>,
+    ) -> std::result::Result<(Arc<V>, bool), E> {
+        if let Some(v) = self.get_versioned(key, epoch) {
+            return Ok((v, true));
+        }
+        let generation = self.generation();
+        let value = Arc::new(build()?);
+        self.try_insert_versioned(key, value.clone(), epoch, generation);
+        Ok((value, false))
+    }
+
+    /// Atomically advance matching entries across an epoch boundary —
+    /// the mutation path's scoped invalidation, in **one** lock
+    /// acquisition so no insert can interleave between the drop and the
+    /// re-tag:
+    /// * entries matching `drop` are removed (and the generation is
+    ///   bumped, fencing in-flight builds like an invalidate);
+    /// * surviving entries matching `keep` that are tagged **exactly**
+    ///   `from_epoch` are re-tagged to `to_epoch` — "this entry's
+    ///   content is byte-identical at the new epoch" revalidation.
+    ///
+    /// The `from_epoch` check is load-bearing: an entry tagged with any
+    /// *other* epoch was built from a graph this boundary knows nothing
+    /// about (e.g. a racing stale build that landed moments ago), and
+    /// promoting it would serve superseded data at the new epoch. Such
+    /// entries are left untouched — unreachable by versioned lookups
+    /// (which keep them resident), reclaimed by a rebuild's replacing
+    /// insert or by LRU.
+    ///
+    /// Returns `(dropped, retagged)`.
+    pub fn advance_epoch(
+        &self,
+        drop: impl Fn(&K) -> bool,
+        keep: impl Fn(&K) -> bool,
+        from_epoch: u64,
+        to_epoch: u64,
+    ) -> (usize, usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.generation += 1;
+        let dropped: Vec<K> = inner.map.keys().filter(|k| drop(k)).cloned().collect();
+        for k in &dropped {
+            inner.map.remove(k);
+        }
+        let mut retagged = 0usize;
+        for (k, e) in inner.map.iter_mut() {
+            if e.epoch == from_epoch && keep(k) {
+                e.epoch = to_epoch;
+                retagged += 1;
+            }
+        }
+        (dropped.len(), retagged)
     }
 
     /// Look up without building. Counts a hit or miss.
@@ -210,16 +400,17 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
         let mut inner = self.inner.lock().unwrap();
         if inner.generation == generation {
             let value = value.clone();
-            Self::insert_locked(&mut inner, self.capacity, &self.evictions, key.clone(), value);
+            Self::insert_locked(&mut inner, self.capacity, &self.evictions, key.clone(), value, 0);
         }
         drop(inner);
         Ok((value, false))
     }
 
     /// Insert (replacing any previous entry), evicting LRU on overflow.
+    /// Unversioned (entries tagged epoch 0).
     pub fn insert(&self, key: K, value: Arc<V>) {
         let mut inner = self.inner.lock().unwrap();
-        Self::insert_locked(&mut inner, self.capacity, &self.evictions, key, value);
+        Self::insert_locked(&mut inner, self.capacity, &self.evictions, key, value, 0);
     }
 
     fn insert_locked(
@@ -228,10 +419,11 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
         evictions: &AtomicU64,
         key: K,
         value: Arc<V>,
+        epoch: u64,
     ) {
         inner.tick += 1;
         let tick = inner.tick;
-        inner.map.insert(key, Entry { value, last_used: tick });
+        inner.map.insert(key, Entry { value, last_used: tick, epoch });
         while inner.map.len() > capacity {
             let Some(oldest) = inner
                 .map
@@ -257,13 +449,27 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
 
     /// Drop every key matching `pred` — e.g. all shard units of one
     /// republished dataset — and fence out in-flight builds. Returns how
-    /// many entries were dropped.
+    /// many entries were dropped. (Allocation-free; use
+    /// [`PlanCache::take_matching`] when the dropped keys themselves are
+    /// needed.)
     pub fn invalidate_matching(&self, pred: impl Fn(&K) -> bool) -> usize {
         let mut inner = self.inner.lock().unwrap();
         inner.generation += 1;
         let before = inner.map.len();
         inner.map.retain(|k, _| !pred(k));
         before - inner.map.len()
+    }
+
+    /// [`PlanCache::invalidate_matching`] that also returns the dropped
+    /// keys — the mutation path re-stages exactly the routes it evicted.
+    pub fn take_matching(&self, pred: impl Fn(&K) -> bool) -> Vec<K> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.generation += 1;
+        let taken: Vec<K> = inner.map.keys().filter(|k| pred(k)).cloned().collect();
+        for k in &taken {
+            inner.map.remove(k);
+        }
+        taken
     }
 
     /// Drop everything and fence out in-flight builds.
@@ -301,6 +507,14 @@ impl<K: Eq + Hash + Clone, V> PlanCache<K, V> {
     /// Entries dropped by LRU overflow.
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Versioned lookups that found the resident entry tagged with a
+    /// superseded epoch (stale data a mutation left behind; counted per
+    /// encounter — the entry stays resident until replaced, re-tagged,
+    /// or evicted).
+    pub fn stale(&self) -> u64 {
+        self.stale.load(Ordering::Relaxed)
     }
 }
 
@@ -415,6 +629,7 @@ mod tests {
             host_ell: true,
             stream: false,
             shard: None,
+            shard_bounds: None,
             shard_cache: None,
         };
         let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
@@ -438,6 +653,7 @@ mod tests {
             host_ell: false,
             stream: false,
             shard: None,
+            shard_bounds: None,
             shard_cache: None,
         };
         let plan = prepare_plan(&store, Precision::U8Device, &spec, 8, &env).unwrap();
@@ -456,6 +672,7 @@ mod tests {
             host_ell: true,
             stream: true,
             shard: None,
+            shard_bounds: None,
             shard_cache: None,
         };
         let plan = prepare_plan(&store, Precision::U8Device, &spec, 8, &env).unwrap();
@@ -498,6 +715,129 @@ mod tests {
         assert!(cache.peek(&(0, 0)).is_none(), "straddling build must not land");
     }
 
+    /// The stale-insert regression (ISSUE 5's headline bugfix). The
+    /// pre-fix cache had only the time-based generation fence, which
+    /// misses the mutation TOCTOU: a builder binds its input graph at
+    /// epoch N, the dataset advances to N+1 (publish happens *before*
+    /// the cache invalidation, and the builder's generation snapshot can
+    /// land *after* the bump), and the stale build then inserts under
+    /// "last insert wins" — resurrecting a pre-mutation plan that the
+    /// epoch-blind `get` happily serves forever. With epoch-versioned
+    /// entries both halves close: the stale value is unreachable at
+    /// N+1, and it can never clobber an already-rebuilt N+1 entry.
+    #[test]
+    fn stale_build_cannot_resurrect_after_epoch_advance() {
+        // Half 1: builder bound epoch 0, delta already invalidated
+        // (generation bumped) BEFORE the builder's cache transaction —
+        // the exact interleaving the bare fence cannot see.
+        let cache: PlanCache<&str, u32> = PlanCache::new(4);
+        cache.invalidate_matching(|_| true); // the delta's scoped invalidation
+        let (v, hit) = cache
+            .get_or_try_insert_versioned(&"route", 0, || Ok::<_, std::io::Error>(7))
+            .unwrap();
+        // The pre-mutation caller is still served its (consistent,
+        // epoch-0) result...
+        assert_eq!((*v, hit), (7, false));
+        // ...but lookups at the advanced epoch must NOT see it. Pre-fix
+        // (epoch-blind get after a plain get_or_try_insert) this
+        // returned the stale 7.
+        assert!(
+            cache.get_versioned(&"route", 1).is_none(),
+            "stale plan resurrected: built against epoch 0, served at epoch 1"
+        );
+        assert_eq!(cache.stale(), 1, "the stale encounter is counted");
+        // The entry stays resident (an advance_epoch may still re-tag
+        // it) but a rebuild at the new epoch replaces it.
+        let (v, hit) = cache
+            .get_or_try_insert_versioned(&"route", 1, || Ok::<_, std::io::Error>(8))
+            .unwrap();
+        assert_eq!((*v, hit), (8, false));
+        assert_eq!(cache.get_versioned(&"route", 1).as_deref(), Some(&8));
+
+        // Half 2: the route was already rebuilt at epoch 1 (the
+        // post-delta restage) while the stale build was in flight; the
+        // stale insert must not clobber it ("last insert wins" did).
+        let cache: PlanCache<&str, u32> = PlanCache::new(4);
+        let (v, _) = cache
+            .get_or_try_insert_versioned(&"route", 0, || {
+                // Mid-build: delta applies and the restage lands N+1.
+                cache.try_insert_versioned(&"route", Arc::new(99), 1, cache.generation());
+                Ok::<_, std::io::Error>(7)
+            })
+            .unwrap();
+        assert_eq!(*v, 7, "the stale builder's caller still gets its own result");
+        assert_eq!(
+            cache.get_versioned(&"route", 1).as_deref(),
+            Some(&99),
+            "newest-epoch-wins: the rebuilt plan survives the stale insert"
+        );
+    }
+
+    #[test]
+    fn versioned_lookups_keep_newer_entries_for_stale_readers() {
+        let cache: PlanCache<&str, u32> = PlanCache::new(4);
+        assert!(cache.try_insert_versioned(&"k", Arc::new(5), 3, cache.generation()));
+        // A reader still bound to epoch 2 misses but must not evict the
+        // newer value.
+        assert!(cache.get_versioned(&"k", 2).is_none());
+        assert_eq!(cache.get_versioned(&"k", 3).as_deref(), Some(&5));
+        assert_eq!(cache.stale(), 0, "newer-than-reader entries are not stale");
+        // peek_versioned is metric-silent and epoch-exact.
+        assert!(cache.peek_versioned(&"k", 2).is_none());
+        assert!(cache.peek_versioned(&"k", 3).is_some());
+    }
+
+    #[test]
+    fn advance_epoch_drops_and_revalidates_atomically() {
+        let cache: PlanCache<(u32, u32), u32> = PlanCache::new(8);
+        for k in 0..4u32 {
+            cache.try_insert_versioned(&(k % 2, k), Arc::new(k), 0, cache.generation());
+        }
+        // The delta touched family 0 only: family 0 drops, family 1 is
+        // revalidated at epoch 1 — one atomic boundary.
+        let gen_before = cache.generation();
+        let (dropped, retagged) =
+            cache.advance_epoch(|&(fam, _)| fam == 0, |&(fam, _)| fam == 1, 0, 1);
+        assert_eq!((dropped, retagged), (2, 2));
+        assert_eq!(cache.generation(), gen_before + 1, "the drop half fences builds");
+        assert_eq!(cache.get_versioned(&(1, 1), 1).as_deref(), Some(&1));
+        assert!(cache.get_versioned(&(0, 0), 1).is_none());
+    }
+
+    /// A racing stale build must not be *promoted* across an epoch
+    /// boundary: advance_epoch only re-tags entries verifiably at the
+    /// superseded epoch, so an entry tagged with any other epoch (a
+    /// stale insert that slipped in post-fence) stays unreachable.
+    #[test]
+    fn advance_epoch_never_promotes_entries_from_other_epochs() {
+        let cache: PlanCache<u32, u32> = PlanCache::new(8);
+        // Entry at the current epoch 1, plus a stale straggler still
+        // tagged 0 (a pre-mutation build that landed late).
+        cache.try_insert_versioned(&1, Arc::new(10), 1, cache.generation());
+        cache.try_insert_versioned(&2, Arc::new(99), 0, cache.generation());
+        let (dropped, retagged) = cache.advance_epoch(|_| false, |_| true, 1, 2);
+        assert_eq!((dropped, retagged), (0, 1), "only the epoch-1 entry is promoted");
+        assert_eq!(cache.get_versioned(&1, 2).as_deref(), Some(&10));
+        assert!(
+            cache.get_versioned(&2, 2).is_none(),
+            "the stale epoch-0 entry must not be served at epoch 2"
+        );
+    }
+
+    #[test]
+    fn take_matching_returns_the_dropped_keys_and_fences() {
+        let cache: PlanCache<u32, u32> = PlanCache::new(8);
+        for k in 0..5u32 {
+            cache.insert(k, Arc::new(k));
+        }
+        let gen_before = cache.generation();
+        let mut taken = cache.take_matching(|&k| k % 2 == 0);
+        taken.sort_unstable();
+        assert_eq!(taken, vec![0, 2, 4]);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.generation(), gen_before + 1, "take fences like invalidate");
+    }
+
     #[test]
     fn sharded_spec_builds_a_sharded_plan() {
         use crate::exec::{ShardKey, ShardUnit};
@@ -513,7 +853,8 @@ mod tests {
             host_ell: true,
             stream: false,
             shard: Some(ShardSpec::by_count(3)),
-            shard_cache: Some((&units, "synth")),
+            shard_bounds: None,
+            shard_cache: Some(ShardCacheRef { units: &units, tag: "synth", epoch: 0 }),
         };
         let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
         let sharded = plan.sharded.as_ref().expect("shard spec must shard the plan");
@@ -556,6 +897,7 @@ mod tests {
                 host_ell: true,
                 stream: false,
                 shard: None,
+                shard_bounds: None,
                 shard_cache: None,
             };
             prepare_plan(&store, precision, &spec, 8, &env)

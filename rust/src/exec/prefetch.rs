@@ -122,6 +122,37 @@ where
             };
         });
     }
+
+    /// Epoch-versioned [`PrefetchTicket::commit`]: the builder returns
+    /// `(value, epoch)` where `epoch` is read from the same input
+    /// snapshot the value was built from (fetch the dataset once, build
+    /// from it, report its epoch). The generation snapshot is taken
+    /// **before** the builder runs — the fence half — and the insert is
+    /// epoch-tagged with newest-epoch-wins — the versioning half, which
+    /// holds even when a mutation interleaves between the two (see
+    /// `docs/mutation.md`).
+    pub fn commit_versioned<E>(
+        mut self,
+        build: impl FnOnce() -> Result<(V, u64), E> + Send + 'static,
+    ) where
+        E: Send + 'static,
+    {
+        let key = self.key.take().expect("a ticket commits at most once");
+        let owner = self.owner;
+        owner.inner.scheduled.fetch_add(1, Ordering::Relaxed);
+        let job_inner = owner.inner.clone();
+        owner.pool.spawn(move || {
+            let _guard = InflightGuard { owner: &job_inner, key: &key };
+            let generation = job_inner.cache.generation();
+            match build() {
+                Ok((value, epoch)) => {
+                    job_inner.cache.try_insert_versioned(&key, Arc::new(value), epoch, generation);
+                    job_inner.completed.fetch_add(1, Ordering::Relaxed)
+                }
+                Err(_) => job_inner.errors.fetch_add(1, Ordering::Relaxed),
+            };
+        });
+    }
 }
 
 impl<K: Eq + Hash, V> Drop for PrefetchTicket<'_, K, V> {
@@ -183,6 +214,24 @@ where
             self.inner.coalesced.fetch_add(1, Ordering::Relaxed);
             return None;
         }
+        self.claim(key)
+    }
+
+    /// Epoch-aware [`Prefetcher::begin`]: coalesces only on a cached
+    /// value tagged exactly `epoch`. A resident entry at any *other*
+    /// epoch does not suppress the claim — it is useless to consumers
+    /// at `epoch`, and letting it coalesce would push the rebuild onto
+    /// the consumer's critical path (the epoch-blind `begin` has
+    /// exactly that blind spot after a mutation races a stale insert).
+    pub fn begin_versioned(&self, key: K, epoch: u64) -> Option<PrefetchTicket<'_, K, V>> {
+        if self.inner.cache.peek_versioned(&key, epoch).is_some() {
+            self.inner.coalesced.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.claim(key)
+    }
+
+    fn claim(&self, key: K) -> Option<PrefetchTicket<'_, K, V>> {
         if !self.inner.inflight.lock().unwrap().insert(key.clone()) {
             self.inner.coalesced.fetch_add(1, Ordering::Relaxed);
             return None;
@@ -250,6 +299,43 @@ where
                     inner.done.wait_timeout(inflight, Duration::from_millis(50)).unwrap();
             }
             if let Some(v) = inner.cache.peek(key) {
+                return Ok((v, true));
+            }
+        }
+    }
+
+    /// Epoch-versioned [`Prefetcher::fetch`]: the caller binds `epoch`
+    /// from the dataset snapshot it will execute against, so a plan
+    /// built for a superseded epoch can never be served — it reads as a
+    /// miss (the entry stays resident until the rebuild's insert
+    /// replaces it; see [`PlanCache::get_versioned`]) — and a plan
+    /// built for a *newer* epoch is left for newer readers while this
+    /// caller rebuilds inline from its own snapshot (whose insert then
+    /// defers to the newer entry).
+    pub fn fetch_versioned<E>(
+        &self,
+        key: &K,
+        epoch: u64,
+        build: impl FnOnce() -> Result<V, E>,
+    ) -> Result<(Arc<V>, bool), E> {
+        let inner = &self.inner;
+        if let Some(v) = inner.cache.get_versioned(key, epoch) {
+            return Ok((v, true));
+        }
+        loop {
+            {
+                let inflight = inner.inflight.lock().unwrap();
+                if !inflight.contains(key) {
+                    drop(inflight);
+                    if let Some(v) = inner.cache.peek_versioned(key, epoch) {
+                        return Ok((v, true));
+                    }
+                    return inner.cache.get_or_try_insert_versioned(key, epoch, build);
+                }
+                let _unused =
+                    inner.done.wait_timeout(inflight, Duration::from_millis(50)).unwrap();
+            }
+            if let Some(v) = inner.cache.peek_versioned(key, epoch) {
                 return Ok((v, true));
             }
         }
@@ -392,6 +478,55 @@ mod tests {
         let (v, hit) = pf.fetch(&5, || Ok::<_, &str>(1)).unwrap();
         assert_eq!((*v, hit), (1, false));
         assert!(cache.peek(&5).is_some());
+    }
+
+    #[test]
+    fn versioned_commit_tags_the_epoch_and_fetch_respects_it() {
+        let (cache, pf) = setup(4);
+        {
+            let ticket = pf.begin(2).expect("cold key claims");
+            ticket.commit_versioned(|| Ok::<_, std::io::Error>((40, 1)));
+        }
+        pf.wait_idle();
+        assert_eq!(pf.stats().completed, 1);
+        // A consumer bound to the matching epoch hits...
+        let (v, hit) = pf
+            .fetch_versioned(&2, 1, || panic!("must not rebuild"))
+            .unwrap_or_else(|e: std::io::Error| panic!("{e}"));
+        assert_eq!((*v, hit), (40, true));
+        // ...a consumer bound to a newer epoch (the dataset advanced)
+        // must NOT be served the stale plan: it rebuilds inline, and
+        // the rebuild's insert replaces the superseded entry.
+        let (v, hit) = pf.fetch_versioned(&2, 2, || Ok::<_, std::io::Error>(41)).unwrap();
+        assert_eq!((*v, hit), (41, false));
+        assert!(cache.stale() >= 1, "the superseded plan was seen and bypassed");
+        assert_eq!(*cache.peek_versioned(&2, 2).unwrap(), 41);
+    }
+
+    #[test]
+    fn begin_versioned_ignores_stale_resident_entries() {
+        let (cache, pf) = setup(4);
+        cache.try_insert_versioned(&6, Arc::new(60), 0, cache.generation());
+        // The epoch-blind begin coalesces on the resident entry...
+        assert!(pf.begin(6).is_none());
+        // ...but at a newer epoch that entry is useless: the versioned
+        // begin must claim so staging happens off the critical path.
+        let ticket = pf.begin_versioned(6, 1).expect("stale entry must not coalesce");
+        drop(ticket);
+        // A matching-epoch entry does coalesce.
+        assert!(pf.begin_versioned(6, 0).is_none());
+    }
+
+    #[test]
+    fn stale_epoch_inline_build_defers_to_a_newer_resident_plan() {
+        let (cache, pf) = setup(4);
+        cache.try_insert_versioned(&9, Arc::new(90), 5, cache.generation());
+        // A reader still bound to epoch 4 misses (the entry is newer),
+        // rebuilds inline, is served its own result — but its insert
+        // must not clobber the epoch-5 plan.
+        let (v, hit) = pf.fetch_versioned(&9, 4, || Ok::<_, std::io::Error>(44)).unwrap();
+        assert_eq!((*v, hit), (44, false));
+        assert_eq!(*cache.peek_versioned(&9, 5).unwrap(), 90, "newer plan survives");
     }
 
     #[test]

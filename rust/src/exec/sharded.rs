@@ -26,18 +26,142 @@
 //! across routes: units depend only on (graph, width, strategy, row
 //! range) — not on precision or feature representation — so a second
 //! route over the same graph finds every unit warm, and a prefetch of a
-//! partially-warm route builds **only the cold shards**.
+//! partially-warm route builds **only the cold shards**. Under live
+//! mutation the same machinery is the retention lever: resolution is
+//! epoch-versioned (via [`ShardCacheRef`]), the serving partition is
+//! frozen in a sticky [`ShardLayout`] so keys stay stable across
+//! epochs, a delta invalidates only the units of shards it touched and
+//! re-tags the rest to the new epoch — re-sampling (and re-running
+//! [`crate::sampling::shard_width`]'s uniform/skewed decision) exactly
+//! where the graph changed (`docs/mutation.md`).
 
 use std::convert::Infallible;
 use std::ops::Range;
 use std::sync::Arc;
 
-use crate::graph::{Csr, Ell, GraphShard, ShardPlan, ShardSpec};
+use crate::graph::{working_set_bytes, Csr, Ell, GraphShard, ShardPlan, ShardSpec};
 use crate::sampling::{sample_ell, shard_width, Strategy};
 
 use super::dispatch::{run_ell, run_exact, select_kernel, ExecEnv, GraphProfile, KernelKind};
 use super::plan_cache::PlanCache;
 use super::pool;
+
+/// Borrowed handle to the shared shard-unit cache, plus the identity of
+/// the graph the units are for: the dataset `tag` and the graph `epoch`
+/// the requesting route is bound to. Unit lookups and inserts go through
+/// the cache's **versioned** API, so a unit built against a superseded
+/// epoch can neither be served nor clobber a rebuilt one (see
+/// `docs/mutation.md`).
+#[derive(Clone, Copy)]
+pub struct ShardCacheRef<'a> {
+    /// The shared unit cache.
+    pub units: &'a PlanCache<ShardKey, ShardUnit>,
+    /// Graph identity (the coordinator uses the dataset name).
+    pub tag: &'a str,
+    /// Graph epoch the requesting route's dataset snapshot carries.
+    pub epoch: u64,
+}
+
+/// The sticky serving partition of one dataset: cut points derived once
+/// (from the graph as first served) and reused across epochs, so a
+/// delta's shard-scoped invalidation has stable [`ShardKey`]s to aim at
+/// and untouched units stay warm. Re-cut only when
+/// [`ShardLayout::drifted`] reports a touched shard outgrew its
+/// working-set budget.
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    bounds: Vec<Range<usize>>,
+    /// Per-shard drift budgets, parallel to `bounds`.
+    budgets: Vec<usize>,
+}
+
+impl ShardLayout {
+    /// Derive the cut points `ShardPlan::partition` would use (via
+    /// [`crate::graph::partition_bounds`] — no shard extraction, so
+    /// creating a layout is O(n_rows), not O(nnz) of copies) and
+    /// freeze them, with a **per-shard** drift budget:
+    /// * budget-based specs allow each shard 2× the configured working
+    ///   set (the same slack the partitioner's row granularity already
+    ///   implies), floored at 2× that shard's *birth* working set — so
+    ///   a mega-row shard that is born over budget still gets growth
+    ///   room instead of forcing a futile full re-partition on every
+    ///   delta that touches it (re-cutting cannot shrink an
+    ///   unsplittable row);
+    /// * count-based specs (whose byte budget is only the reporting
+    ///   default) allow each shard 2× its own birth working set.
+    pub fn of(csr: &Csr, spec: &ShardSpec) -> ShardLayout {
+        let bounds = crate::graph::partition_bounds(csr, spec);
+        let budgets = bounds
+            .iter()
+            .map(|r| {
+                let nnz = (csr.row_ptr[r.end] - csr.row_ptr[r.start]) as usize;
+                let birth_slack = working_set_bytes(r.len(), nnz).saturating_mul(2).max(1);
+                match spec.shards {
+                    Some(_) => birth_slack,
+                    None => spec.budget_bytes.saturating_mul(2).max(birth_slack),
+                }
+            })
+            .collect();
+        ShardLayout { bounds, budgets }
+    }
+
+    /// The frozen cut points, in row order.
+    pub fn bounds(&self) -> &[Range<usize>] {
+        &self.bounds
+    }
+
+    /// Shards in the layout.
+    pub fn shard_count(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Rows this layout covers (the graph's row count at freeze time).
+    /// A published graph whose row count no longer matches cannot use
+    /// this layout — callers must rebuild it.
+    pub fn n_rows(&self) -> usize {
+        self.bounds.last().map(|r| r.end).unwrap_or(0)
+    }
+
+    /// Whether this layout's cuts apply to `csr` (edge deltas never
+    /// change the row count, so a mismatch means a wholesale republish
+    /// swapped in a differently-shaped graph).
+    pub fn covers(&self, csr: &Csr) -> bool {
+        self.n_rows() == csr.n_rows
+    }
+
+    /// Map **sorted** touched row ids to the indices of the shards that
+    /// contain them (sorted, unique) — the delta's invalidation scope.
+    pub fn affected_shards(&self, touched_rows: &[usize]) -> Vec<usize> {
+        debug_assert!(touched_rows.windows(2).all(|w| w[0] <= w[1]));
+        let mut out = Vec::new();
+        let mut shard = 0usize;
+        for &row in touched_rows {
+            while shard < self.bounds.len() && self.bounds[shard].end <= row {
+                shard += 1;
+            }
+            if shard >= self.bounds.len() {
+                break; // rows past the layout (caller validated ranges)
+            }
+            if self.bounds[shard].contains(&row) && out.last() != Some(&shard) {
+                out.push(shard);
+            }
+        }
+        out
+    }
+
+    /// Whether any of the `affected` shards' working sets now exceed
+    /// their per-shard budget under the mutated graph — the signal to
+    /// throw the cuts away and re-partition (invalidating every unit).
+    /// Callers must have checked [`ShardLayout::covers`] first.
+    pub fn drifted(&self, csr: &Csr, affected: &[usize]) -> bool {
+        debug_assert!(self.covers(csr), "drift check against a layout for another graph");
+        affected.iter().any(|&i| {
+            let r = &self.bounds[i];
+            let nnz = (csr.row_ptr[r.end] - csr.row_ptr[r.start]) as usize;
+            working_set_bytes(r.len(), nnz) > self.budgets[i]
+        })
+    }
+}
 
 /// Cache key for one prepared [`ShardUnit`]. Deliberately excludes
 /// precision and feature state: units are pure graph structure, shared
@@ -168,19 +292,23 @@ fn build_unit(
 
 /// Resolve one shard's unit: through the shared cache when one is
 /// given (warm units skip re-sampling), else built directly. Returns
-/// the unit and whether it came warm.
+/// the unit and whether it came warm. Cached resolution is **epoch
+/// versioned**: a warm hit requires the unit's tag to match the route's
+/// graph epoch (deltas re-tag untouched shards instead of rebuilding
+/// them), and a build bound to a superseded epoch can never land over a
+/// newer unit.
 fn resolve_unit(
     shard: GraphShard,
     width: Option<usize>,
     strategy: Strategy,
     feat_dim: usize,
-    cache: Option<(&PlanCache<ShardKey, ShardUnit>, &str)>,
+    cache: Option<ShardCacheRef<'_>>,
 ) -> (Arc<ShardUnit>, bool) {
     match cache {
-        Some((units, tag)) => {
-            let key = ShardKey::new(tag, width, strategy, &shard.rows);
-            units
-                .get_or_try_insert(&key, || {
+        Some(cr) => {
+            let key = ShardKey::new(cr.tag, width, strategy, &shard.rows);
+            cr.units
+                .get_or_try_insert_versioned(&key, cr.epoch, || {
                     Ok::<_, Infallible>(build_unit(shard, width, strategy, feat_dim))
                 })
                 .unwrap()
@@ -203,20 +331,46 @@ impl ShardedPlan {
     /// Partition `csr` per `spec` and prepare every unit (sampling +
     /// dispatch), fanning unit builds out on the global pool.
     ///
-    /// With a `cache`, each unit goes through
-    /// [`PlanCache::get_or_try_insert`] keyed by [`ShardKey`]: warm
-    /// units are reused without re-sampling, so only cold shards pay a
-    /// build — the shard-aware prefetch contract. The `&str` is the
-    /// graph identity tag (dataset name).
+    /// With a `cache`, each unit goes through the cache's versioned
+    /// lookup keyed by [`ShardKey`] at the [`ShardCacheRef`]'s epoch:
+    /// warm units are reused without re-sampling, so only cold shards
+    /// pay a build — the shard-aware prefetch contract.
     pub fn prepare(
         csr: &Csr,
         spec: &ShardSpec,
         width: Option<usize>,
         strategy: Strategy,
         feat_dim: usize,
-        cache: Option<(&PlanCache<ShardKey, ShardUnit>, &str)>,
+        cache: Option<ShardCacheRef<'_>>,
     ) -> ShardedPlan {
         let plan = ShardPlan::partition(csr, spec);
+        Self::from_partition(plan, width, strategy, feat_dim, cache)
+    }
+
+    /// [`ShardedPlan::prepare`] along **fixed** cut points from a sticky
+    /// [`ShardLayout`] — the live-mutation path: a mutated graph keeps
+    /// its serving partition so untouched shards' [`ShardKey`]s keep
+    /// matching (and their units stay warm) until the coordinator
+    /// re-partitions on drift.
+    pub fn prepare_with_bounds(
+        csr: &Csr,
+        bounds: &[Range<usize>],
+        width: Option<usize>,
+        strategy: Strategy,
+        feat_dim: usize,
+        cache: Option<ShardCacheRef<'_>>,
+    ) -> ShardedPlan {
+        let plan = ShardPlan::partition_fixed(csr, bounds);
+        Self::from_partition(plan, width, strategy, feat_dim, cache)
+    }
+
+    fn from_partition(
+        plan: ShardPlan,
+        width: Option<usize>,
+        strategy: Strategy,
+        feat_dim: usize,
+        cache: Option<ShardCacheRef<'_>>,
+    ) -> ShardedPlan {
         let (n_rows, n_cols) = (plan.n_rows(), plan.n_cols());
         let shards = plan.into_shards();
         let mut slots: Vec<Option<(Arc<ShardUnit>, bool)>> =
@@ -393,6 +547,13 @@ mod tests {
         assert_ne!(head.profile.max_nnz, tail.profile.max_nnz);
     }
 
+    fn cache_ref<'a>(
+        cache: &'a PlanCache<ShardKey, ShardUnit>,
+        epoch: u64,
+    ) -> Option<ShardCacheRef<'a>> {
+        Some(ShardCacheRef { units: cache, tag: "ds", epoch })
+    }
+
     #[test]
     fn shard_cache_reuses_units_across_routes_and_builds_only_cold_shards() {
         let mut rng = Pcg32::new(12);
@@ -401,19 +562,19 @@ mod tests {
         let spec = ShardSpec::by_count(4);
 
         let cold =
-            ShardedPlan::prepare(&g, &spec, Some(8), Strategy::Aes, 16, Some((&cache, "ds")));
+            ShardedPlan::prepare(&g, &spec, Some(8), Strategy::Aes, 16, cache_ref(&cache, 0));
         assert_eq!(cold.warm_units(), 0);
         assert_eq!(cache.len(), 4);
 
         // Same route again (e.g. another precision): every unit warm.
         let warm =
-            ShardedPlan::prepare(&g, &spec, Some(8), Strategy::Aes, 16, Some((&cache, "ds")));
+            ShardedPlan::prepare(&g, &spec, Some(8), Strategy::Aes, 16, cache_ref(&cache, 0));
         assert_eq!(warm.warm_units(), 4, "a warm route must not rebuild any shard");
 
         // A different width is a different unit family: all cold again,
         // but the old units stay resident.
         let other =
-            ShardedPlan::prepare(&g, &spec, Some(16), Strategy::Aes, 16, Some((&cache, "ds")));
+            ShardedPlan::prepare(&g, &spec, Some(16), Strategy::Aes, 16, cache_ref(&cache, 0));
         assert_eq!(other.warm_units(), 0);
         assert_eq!(cache.len(), 8);
 
@@ -421,6 +582,85 @@ mod tests {
         let a = ShardKey::new("ds", None, Strategy::Aes, &(0..10));
         let b = ShardKey::new("ds", None, Strategy::Sfs, &(0..10));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unit_resolution_is_epoch_versioned() {
+        let mut rng = Pcg32::new(21);
+        let g = gen::chung_lu(200, 15.0, 2.0, &mut rng);
+        let cache: PlanCache<ShardKey, ShardUnit> = PlanCache::new(64);
+        let spec = ShardSpec::by_count(3);
+        let layout = ShardLayout::of(&g, &spec);
+
+        let cold = ShardedPlan::prepare_with_bounds(
+            &g,
+            layout.bounds(),
+            Some(8),
+            Strategy::Aes,
+            16,
+            cache_ref(&cache, 0),
+        );
+        assert_eq!((cold.shard_count(), cold.warm_units()), (3, 0));
+
+        // A route bound to a newer epoch must not be served epoch-0
+        // units: everything rebuilds...
+        let bumped = ShardedPlan::prepare_with_bounds(
+            &g,
+            layout.bounds(),
+            Some(8),
+            Strategy::Aes,
+            16,
+            cache_ref(&cache, 1),
+        );
+        assert_eq!(bumped.warm_units(), 0, "epoch-0 units are stale at epoch 1");
+
+        // ...unless the delta re-tagged them (untouched shards): then the
+        // same lookups come warm.
+        cache.advance_epoch(|_| false, |k| k.tag == "ds", 1, 2);
+        let retagged = ShardedPlan::prepare_with_bounds(
+            &g,
+            layout.bounds(),
+            Some(8),
+            Strategy::Aes,
+            16,
+            cache_ref(&cache, 2),
+        );
+        assert_eq!(retagged.warm_units(), 3, "re-tagged units serve the new epoch");
+    }
+
+    #[test]
+    fn layout_maps_touched_rows_to_shards_and_detects_drift() {
+        let mut rng = Pcg32::new(33);
+        let g = gen::chung_lu(400, 10.0, 2.1, &mut rng);
+        let layout = ShardLayout::of(&g, &ShardSpec::by_count(4));
+        assert_eq!(layout.shard_count(), 4);
+        let bounds = layout.bounds().to_vec();
+
+        // Row → owning shard, duplicates collapse, order preserved.
+        let mid = |r: &Range<usize>| (r.start + r.end) / 2;
+        let touched = vec![0, 1, mid(&bounds[2]), bounds[3].start, g.n_rows - 1];
+        assert_eq!(layout.affected_shards(&touched), vec![0, 2, 3]);
+        assert_eq!(layout.affected_shards(&[]), Vec::<usize>::new());
+
+        // No drift under a value-only mutation...
+        assert!(!layout.drifted(&g, &[0, 1, 2, 3]));
+        // ...but a shard bloated past 2× its birth working set trips
+        // it: pour ~30 extra distinct edges into every shard-0 row
+        // (far more than the ~10 it was born with).
+        let mut triples: Vec<(i32, i32, f32)> = Vec::new();
+        for r in 0..g.n_rows {
+            for e in g.row_range(r) {
+                triples.push((r as i32, g.col_ind[e], g.val[e]));
+            }
+        }
+        for r in bounds[0].clone() {
+            for k in 0..30usize {
+                triples.push((r as i32, ((r * 7 + k * 13) % g.n_cols) as i32, 0.5));
+            }
+        }
+        let bloated = crate::graph::coo_to_csr(g.n_rows, g.n_cols, triples).unwrap();
+        assert!(layout.drifted(&bloated, &[0]), "a 3×-grown shard must trip the drift check");
+        assert!(!layout.drifted(&bloated, &[1, 2, 3]), "other shards did not drift");
     }
 
     #[test]

@@ -142,13 +142,29 @@ impl Csr {
     }
 }
 
-/// Build a CSR from COO triples (row, col, val). Sorts, keeps duplicates.
+/// Build a CSR from COO triples (row, col, val). Sorts by (row, col) and
+/// **deduplicates**: repeated `(row, col)` entries collapse to one edge
+/// carrying the *last* weight in input order (last-write-wins — the same
+/// rule [`crate::graph::GraphDelta`] applies when a delta re-inserts an
+/// existing edge). The seed kept duplicates, which double-counted nnz in
+/// every working-set and sampling budget the moment mutation could
+/// re-insert an edge.
 pub fn coo_to_csr(
     n_rows: usize,
     n_cols: usize,
     mut triples: Vec<(i32, i32, f32)>,
 ) -> Result<Csr> {
-    triples.sort_unstable_by_key(|&(r, c, _)| ((r as i64) << 32) | c as i64 as i64 & 0xffff_ffff);
+    // Stable sort: equal (row, col) keys keep input order, so dedup_by
+    // keeping the later element implements last-write-wins.
+    triples.sort_by_key(|&(r, c, _)| ((r as i64) << 32) | (c as i64 & 0xffff_ffff));
+    triples.dedup_by(|later, earlier| {
+        let dup = later.0 == earlier.0 && later.1 == earlier.1;
+        if dup {
+            // dedup_by drops `later`; keep its weight in the survivor.
+            earlier.2 = later.2;
+        }
+        dup
+    });
     let mut row_ptr = vec![0i32; n_rows + 1];
     for &(r, _, _) in &triples {
         if r < 0 || r as usize >= n_rows {
@@ -196,6 +212,24 @@ mod tests {
     fn coo_roundtrip() {
         let m = coo_to_csr(3, 3, vec![(2, 1, 3.0), (0, 0, 1.0), (0, 2, 2.0)]).unwrap();
         assert_eq!(m, sample());
+    }
+
+    #[test]
+    fn coo_duplicates_collapse_last_write_wins() {
+        let m = coo_to_csr(
+            3,
+            3,
+            vec![
+                (0, 2, 9.0), // overwritten below
+                (2, 1, 3.0),
+                (0, 0, 1.0),
+                (0, 2, 2.0), // last write for (0, 2)
+                (0, 0, 1.0), // exact duplicate
+            ],
+        )
+        .unwrap();
+        assert_eq!(m, sample(), "duplicates must collapse to the last weight");
+        assert_eq!(m.nnz(), 3, "nnz counts unique (row, col) pairs");
     }
 
     #[test]

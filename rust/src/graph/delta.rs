@@ -1,0 +1,482 @@
+//! Epoch-versioned live-graph deltas — the mutation half of the serving
+//! story. The paper's sampling (and ES-SpMM's cache-first sampling
+//! before it) assumes a static graph; a served graph gains edges, loses
+//! edges, and re-weights them while plans are warm. This module defines
+//! the mutation unit ([`GraphDelta`]), the versioned structure it
+//! applies to ([`VersionedCsr`]: a CSR plus a monotonically increasing
+//! **epoch**), and the change summary ([`DeltaReport`]) the coordinator
+//! uses for shard-scoped invalidation (`docs/mutation.md`).
+//!
+//! Semantics (all deterministic, all order-preserving):
+//! * **Insert** of an absent `(row, col)` appends the edge at the row's
+//!   tail; insert of a present edge is last-write-wins on the weight
+//!   (counted as a reweight) — the same dedup rule
+//!   [`crate::graph::coo_to_csr`] applies at construction time.
+//! * **Delete** removes the edge; deleting an absent edge is a counted
+//!   no-op. Deleting a row's last edge leaves a valid empty row —
+//!   "node deletion" is expressed as deleting its edges.
+//! * **Reweight** updates a present edge's value in place; reweighting
+//!   an absent edge is a counted no-op (it does *not* insert).
+//! * Surviving edges keep their stored order, so untouched rows are
+//!   byte-identical and a touched row's surviving prefix keeps its FP
+//!   aggregation order.
+//! * Delta values are final stored values (for GCN routes, the
+//!   republished Â entries). Re-normalization is the publisher's
+//!   concern: a weight policy that depends on degrees must emit the
+//!   corresponding reweights itself.
+//! * A delta that changes nothing (empty, or all no-ops) does **not**
+//!   advance the epoch — callers can use `report.changed()` to skip
+//!   invalidation entirely.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::Csr;
+
+/// One edge mutation. Rows/columns are global node ids.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeOp {
+    /// Add `(row, col)` with `weight`; last-write-wins if present.
+    Insert {
+        /// Destination row.
+        row: i32,
+        /// Source column.
+        col: i32,
+        /// Stored edge value.
+        weight: f32,
+    },
+    /// Remove `(row, col)`; no-op if absent.
+    Delete {
+        /// Destination row.
+        row: i32,
+        /// Source column.
+        col: i32,
+    },
+    /// Set the value of a present `(row, col)`; no-op if absent.
+    Reweight {
+        /// Destination row.
+        row: i32,
+        /// Source column.
+        col: i32,
+        /// New stored edge value.
+        weight: f32,
+    },
+}
+
+impl EdgeOp {
+    /// The destination row this op names.
+    pub fn row(&self) -> i32 {
+        match *self {
+            EdgeOp::Insert { row, .. }
+            | EdgeOp::Delete { row, .. }
+            | EdgeOp::Reweight { row, .. } => row,
+        }
+    }
+
+    /// The source column this op names.
+    pub fn col(&self) -> i32 {
+        match *self {
+            EdgeOp::Insert { col, .. }
+            | EdgeOp::Delete { col, .. }
+            | EdgeOp::Reweight { col, .. } => col,
+        }
+    }
+}
+
+/// An ordered batch of edge mutations, applied atomically as one epoch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GraphDelta {
+    /// Ops in application order (later ops win within a batch).
+    pub ops: Vec<EdgeOp>,
+}
+
+impl GraphDelta {
+    /// Wrap an op list.
+    pub fn new(ops: Vec<EdgeOp>) -> GraphDelta {
+        GraphDelta { ops }
+    }
+
+    /// Whether the batch holds no ops.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Ops in the batch.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Parse the CLI/file format (`repro mutate --edges FILE`): one op
+    /// per line, `#` comments and blank lines ignored.
+    ///
+    /// ```text
+    /// + ROW COL WEIGHT    # insert (reweight if the edge exists)
+    /// - ROW COL           # delete (no-op if absent)
+    /// = ROW COL WEIGHT    # reweight (no-op if absent)
+    /// ```
+    pub fn parse(text: &str) -> Result<GraphDelta> {
+        let mut ops = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let op = parts.next().unwrap_or("");
+            let ctx = || format!("delta line {}: {raw:?}", lineno + 1);
+            let mut num = |what: &str| -> Result<i32> {
+                parts
+                    .next()
+                    .with_context(|| format!("{}: missing {what}", ctx()))?
+                    .parse::<i32>()
+                    .with_context(|| format!("{}: {what} must be an integer", ctx()))
+            };
+            let (row, col) = (num("row")?, num("col")?);
+            let weight = |parts: &mut std::str::SplitWhitespace<'_>| -> Result<f32> {
+                parts
+                    .next()
+                    .with_context(|| format!("{}: missing weight", ctx()))?
+                    .parse::<f32>()
+                    .with_context(|| format!("{}: weight must be a float", ctx()))
+            };
+            let parsed = match op {
+                "+" => EdgeOp::Insert { row, col, weight: weight(&mut parts)? },
+                "-" => EdgeOp::Delete { row, col },
+                "=" => EdgeOp::Reweight { row, col, weight: weight(&mut parts)? },
+                other => bail!("{}: unknown op {other:?} (expected + - =)", ctx()),
+            };
+            if let Some(extra) = parts.next() {
+                bail!("{}: trailing token {extra:?}", ctx());
+            }
+            ops.push(parsed);
+        }
+        Ok(GraphDelta { ops })
+    }
+
+    /// Read and [`GraphDelta::parse`] a delta file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<GraphDelta> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading delta file {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Splice this delta into a borrowed CSR. Returns the mutated graph
+    /// (`None` when nothing changed — empty or all-no-op deltas) and
+    /// the change report. O(nnz + ops); the input is never copied or
+    /// modified. This is the allocation-minimal entry the coordinator
+    /// uses; [`VersionedCsr::apply`] layers epoch bookkeeping on top.
+    pub fn apply_to(&self, csr: &Csr) -> Result<(Option<Csr>, DeltaReport)> {
+        let mut report = DeltaReport {
+            nnz_before: csr.nnz(),
+            nnz_after: csr.nnz(),
+            ..DeltaReport::default()
+        };
+        // Validate every op before touching anything: a delta applies
+        // atomically or not at all.
+        for op in &self.ops {
+            let (r, c) = (op.row(), op.col());
+            if r < 0 || r as usize >= csr.n_rows {
+                bail!("delta row {r} out of range [0, {})", csr.n_rows);
+            }
+            if c < 0 || c as usize >= csr.n_cols {
+                bail!("delta col {c} out of range [0, {})", csr.n_cols);
+            }
+        }
+        let mut by_row: BTreeMap<usize, Vec<&EdgeOp>> = BTreeMap::new();
+        for op in &self.ops {
+            by_row.entry(op.row() as usize).or_default().push(op);
+        }
+
+        // Splice touched rows; copy untouched ranges wholesale.
+        let mut row_ptr = Vec::with_capacity(csr.n_rows + 1);
+        let mut col_ind = Vec::with_capacity(csr.nnz());
+        let mut val = Vec::with_capacity(csr.nnz());
+        row_ptr.push(0i32);
+        let mut touched = Vec::with_capacity(by_row.len());
+        for row in 0..csr.n_rows {
+            let range = csr.row_range(row);
+            match by_row.get(&row) {
+                None => {
+                    col_ind.extend_from_slice(&csr.col_ind[range.clone()]);
+                    val.extend_from_slice(&csr.val[range]);
+                }
+                Some(ops) => {
+                    let mut cols: Vec<i32> = csr.col_ind[range.clone()].to_vec();
+                    let mut vals: Vec<f32> = csr.val[range].to_vec();
+                    let mut changed = false;
+                    for op in ops {
+                        let at = cols.iter().position(|&c| c == op.col());
+                        match (op, at) {
+                            (EdgeOp::Insert { weight, .. }, Some(i))
+                            | (EdgeOp::Reweight { weight, .. }, Some(i)) => {
+                                // Value-only change; bitwise-identical
+                                // rewrites still count (simpler contract,
+                                // and rare enough not to matter).
+                                vals[i] = *weight;
+                                report.reweighted += 1;
+                                changed = true;
+                            }
+                            (EdgeOp::Insert { col, weight, .. }, None) => {
+                                cols.push(*col);
+                                vals.push(*weight);
+                                report.inserted += 1;
+                                changed = true;
+                            }
+                            (EdgeOp::Delete { .. }, Some(i)) => {
+                                cols.remove(i);
+                                vals.remove(i);
+                                report.deleted += 1;
+                                changed = true;
+                            }
+                            (EdgeOp::Delete { .. }, None) | (EdgeOp::Reweight { .. }, None) => {
+                                report.noops += 1;
+                            }
+                        }
+                    }
+                    if changed {
+                        touched.push(row);
+                    }
+                    col_ind.extend_from_slice(&cols);
+                    val.extend_from_slice(&vals);
+                }
+            }
+            row_ptr.push(col_ind.len() as i32);
+        }
+
+        if touched.is_empty() {
+            return Ok((None, report));
+        }
+        report.touched_rows = touched;
+        report.nnz_after = col_ind.len();
+        let next = Csr::new(csr.n_rows, csr.n_cols, row_ptr, col_ind, val)
+            .context("delta splice produced an invalid CSR")?;
+        Ok((Some(next), report))
+    }
+}
+
+/// What one [`VersionedCsr::apply`] actually changed — the coordinator's
+/// invalidation input.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeltaReport {
+    /// Rows whose edge set or values actually changed (sorted, unique).
+    /// No-op rows are *not* listed: they need no invalidation.
+    pub touched_rows: Vec<usize>,
+    /// Edges added (absent before).
+    pub inserted: usize,
+    /// Edges removed.
+    pub deleted: usize,
+    /// Edge values updated in place (including insert-of-present).
+    pub reweighted: usize,
+    /// Ops that matched nothing (delete/reweight of an absent edge).
+    pub noops: usize,
+    /// Stored edges before the splice.
+    pub nnz_before: usize,
+    /// Stored edges after the splice.
+    pub nnz_after: usize,
+}
+
+impl DeltaReport {
+    /// Whether the delta changed anything (structure or values). A
+    /// no-change apply keeps the epoch, so nothing needs invalidating.
+    pub fn changed(&self) -> bool {
+        !self.touched_rows.is_empty()
+    }
+}
+
+/// A CSR with an epoch — the unit the serving stack versions plans
+/// against. Epoch 0 is the loaded graph; every changing
+/// [`VersionedCsr::apply`] produces a **new** value at epoch + 1 (the
+/// previous epoch stays valid for readers still holding it — mutation
+/// is publish-by-replacement, never in place).
+#[derive(Clone, Debug)]
+pub struct VersionedCsr {
+    csr: Arc<Csr>,
+    epoch: u64,
+}
+
+impl VersionedCsr {
+    /// Wrap a freshly loaded graph at epoch 0.
+    pub fn new(csr: Csr) -> VersionedCsr {
+        VersionedCsr { csr: Arc::new(csr), epoch: 0 }
+    }
+
+    /// Wrap an existing graph at a known epoch (the coordinator rebuilds
+    /// these from [`crate::runtime::Dataset`] state).
+    pub fn with_epoch(csr: Arc<Csr>, epoch: u64) -> VersionedCsr {
+        VersionedCsr { csr, epoch }
+    }
+
+    /// The graph at this epoch.
+    pub fn csr(&self) -> &Arc<Csr> {
+        &self.csr
+    }
+
+    /// The epoch of this value.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Apply a delta, producing the next epoch's graph and the change
+    /// report (see [`GraphDelta::apply_to`] for the splice semantics).
+    /// The receiver is untouched (readers holding epoch N keep a
+    /// consistent graph); a delta that changes nothing returns a clone
+    /// at the **same** epoch with `report.changed() == false`.
+    pub fn apply(&self, delta: &GraphDelta) -> Result<(VersionedCsr, DeltaReport)> {
+        match delta.apply_to(&self.csr)? {
+            // Nothing changed: keep the epoch (and the Arc) — callers
+            // skip invalidation entirely.
+            (None, report) => Ok((self.clone(), report)),
+            (Some(next), report) => {
+                Ok((VersionedCsr { csr: Arc::new(next), epoch: self.epoch + 1 }, report))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> VersionedCsr {
+        // 4x4: row0 {0:1.0, 2:2.0}, row1 {1:3.0}, row2 {}, row3 {3:4.0}
+        VersionedCsr::new(
+            Csr::new(
+                4,
+                4,
+                vec![0, 2, 3, 3, 4],
+                vec![0, 2, 1, 3],
+                vec![1.0, 2.0, 3.0, 4.0],
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn insert_delete_reweight_splice() {
+        let v = base();
+        let delta = GraphDelta::new(vec![
+            EdgeOp::Insert { row: 0, col: 3, weight: 9.0 }, // append to row 0
+            EdgeOp::Delete { row: 1, col: 1 },              // empties row 1
+            EdgeOp::Insert { row: 2, col: 0, weight: 7.0 }, // into empty row
+            EdgeOp::Reweight { row: 3, col: 3, weight: 5.0 },
+        ]);
+        let (next, report) = v.apply(&delta).unwrap();
+        assert_eq!(next.epoch(), 1);
+        assert_eq!(report.touched_rows, vec![0, 1, 2, 3]);
+        assert_eq!((report.inserted, report.deleted, report.reweighted), (2, 1, 1));
+        assert_eq!(report.noops, 0);
+        assert_eq!((report.nnz_before, report.nnz_after), (4, 5));
+        let g = next.csr();
+        g.validate().unwrap();
+        assert_eq!(g.row_ptr, vec![0, 3, 3, 4, 5]);
+        // Surviving edges keep stored order; the insert appends.
+        assert_eq!(g.col_ind, vec![0, 2, 3, 0, 3]);
+        assert_eq!(g.val, vec![1.0, 2.0, 9.0, 7.0, 5.0]);
+        // The source epoch is untouched (publish-by-replacement).
+        assert_eq!(v.epoch(), 0);
+        assert_eq!(v.csr().nnz(), 4);
+    }
+
+    #[test]
+    fn insert_of_present_edge_is_last_write_wins() {
+        let v = base();
+        let delta = GraphDelta::new(vec![
+            EdgeOp::Insert { row: 0, col: 2, weight: 8.0 },
+            EdgeOp::Insert { row: 0, col: 2, weight: 6.5 },
+        ]);
+        let (next, report) = v.apply(&delta).unwrap();
+        assert_eq!(report.inserted, 0);
+        assert_eq!(report.reweighted, 2);
+        assert_eq!(next.csr().nnz(), 4, "re-inserting must not duplicate the edge");
+        assert_eq!(next.csr().val[1], 6.5);
+    }
+
+    #[test]
+    fn noop_delta_keeps_the_epoch() {
+        let v = base();
+        // Empty delta.
+        let (same, report) = v.apply(&GraphDelta::default()).unwrap();
+        assert_eq!(same.epoch(), 0);
+        assert!(!report.changed());
+        // All-noop delta (delete/reweight of absent edges).
+        let delta = GraphDelta::new(vec![
+            EdgeOp::Delete { row: 2, col: 2 },
+            EdgeOp::Reweight { row: 0, col: 1, weight: 1.0 },
+        ]);
+        let (same, report) = v.apply(&delta).unwrap();
+        assert_eq!(same.epoch(), 0, "no-op deltas must not advance the epoch");
+        assert!(!report.changed());
+        assert_eq!(report.noops, 2);
+        assert!(Arc::ptr_eq(same.csr(), v.csr()), "no-change apply shares the graph");
+    }
+
+    #[test]
+    fn delete_last_edge_leaves_a_valid_empty_row() {
+        let v = base();
+        let delta = GraphDelta::new(vec![EdgeOp::Delete { row: 3, col: 3 }]);
+        let (next, report) = v.apply(&delta).unwrap();
+        assert_eq!(report.touched_rows, vec![3]);
+        let g = next.csr();
+        g.validate().unwrap();
+        assert_eq!(g.row_nnz(3), 0);
+        assert_eq!(g.nnz(), 3);
+        // And the row can be refilled in a later epoch.
+        let delta = GraphDelta::new(vec![EdgeOp::Insert { row: 3, col: 0, weight: 1.5 }]);
+        let (refilled, _) = next.apply(&delta).unwrap();
+        assert_eq!(refilled.epoch(), 2);
+        assert_eq!(refilled.csr().row_nnz(3), 1);
+    }
+
+    #[test]
+    fn out_of_range_ops_fail_atomically() {
+        let v = base();
+        let delta = GraphDelta::new(vec![
+            EdgeOp::Insert { row: 0, col: 1, weight: 1.0 }, // valid...
+            EdgeOp::Delete { row: 9, col: 0 },              // ...but this is not
+        ]);
+        assert!(v.apply(&delta).is_err());
+        let delta = GraphDelta::new(vec![EdgeOp::Insert { row: 0, col: -1, weight: 1.0 }]);
+        assert!(v.apply(&delta).is_err());
+        assert_eq!(v.csr().nnz(), 4, "a failed apply changes nothing");
+    }
+
+    #[test]
+    fn parse_round_trips_the_file_format() {
+        let text = "\
+            # weight rotation\n\
+            + 0 3 0.25\n\
+            - 1 1      # drop the hub edge\n\
+            = 3 3 1.5\n\
+            \n";
+        let delta = GraphDelta::parse(text).unwrap();
+        assert_eq!(
+            delta.ops,
+            vec![
+                EdgeOp::Insert { row: 0, col: 3, weight: 0.25 },
+                EdgeOp::Delete { row: 1, col: 1 },
+                EdgeOp::Reweight { row: 3, col: 3, weight: 1.5 },
+            ]
+        );
+        assert!(GraphDelta::parse("? 1 2").is_err(), "unknown op");
+        assert!(GraphDelta::parse("+ 1 2").is_err(), "insert without weight");
+        assert!(GraphDelta::parse("- 1 2 3.0").is_err(), "trailing token");
+        assert!(GraphDelta::parse("+ a 2 1.0").is_err(), "non-integer row");
+    }
+
+    #[test]
+    fn epochs_chain_across_applies() {
+        let v = base();
+        let d1 = GraphDelta::new(vec![EdgeOp::Insert { row: 2, col: 1, weight: 1.0 }]);
+        let d2 = GraphDelta::new(vec![EdgeOp::Delete { row: 2, col: 1 }]);
+        let (a, _) = v.apply(&d1).unwrap();
+        let (b, _) = a.apply(&d2).unwrap();
+        assert_eq!((a.epoch(), b.epoch()), (1, 2));
+        // Structure returns to the original; the epoch does not.
+        assert_eq!(b.csr().col_ind, v.csr().col_ind);
+        assert_eq!(b.csr().row_ptr, v.csr().row_ptr);
+    }
+}

@@ -1,15 +1,18 @@
 //! Graph structures: CSR (the kernel input format, §2.2 of the paper),
 //! ELL (the sampled fixed-width form that models the shared-memory tile),
-//! COO↔CSR conversion, validation, degree statistics, and the
+//! COO↔CSR conversion, validation, degree statistics, the
 //! working-set-budgeted row shard partitioner (the host-level analog of
-//! the shared-memory width — see `docs/sharding.md`).
+//! the shared-memory width — see `docs/sharding.md`), and epoch-versioned
+//! live-graph deltas (`docs/mutation.md`).
 
 mod csr;
+mod delta;
 mod ell;
 mod shard;
 mod stats;
 
 pub use csr::{coo_to_csr, Csr};
+pub use delta::{DeltaReport, EdgeOp, GraphDelta, VersionedCsr};
 pub use ell::Ell;
-pub use shard::{working_set_bytes, GraphShard, ShardPlan, ShardSpec};
+pub use shard::{partition_bounds, working_set_bytes, GraphShard, ShardPlan, ShardSpec};
 pub use stats::{balanced_cuts, degree_cdf, degree_prefix, DegreeStats};

@@ -127,20 +127,13 @@ impl ShardPlan {
     /// balancing the threaded kernels use; an all-zero-nnz graph falls
     /// back to even row counts.
     pub fn partition(csr: &Csr, spec: &ShardSpec) -> ShardPlan {
-        let n = csr.n_rows;
-        if n == 0 {
+        if csr.n_rows == 0 {
             let empty = Csr::new(0, csr.n_cols, vec![0], Vec::new(), Vec::new())
                 .expect("the empty CSR is valid");
             let shard = GraphShard { index: 0, rows: 0..0, csr: empty };
             return ShardPlan { n_rows: 0, n_cols: csr.n_cols, shards: vec![shard] };
         }
-        let prefix = degree_prefix(csr);
-        let total = prefix[n];
-        let want = match spec.shards {
-            Some(k) => k,
-            None => working_set_bytes(n, total).div_ceil(spec.budget_bytes.max(1)),
-        };
-        let shards = balanced_cuts(&prefix, want)
+        let shards = partition_bounds(csr, spec)
             .into_iter()
             .enumerate()
             .map(|(index, rows)| GraphShard {
@@ -149,7 +142,38 @@ impl ShardPlan {
                 csr: extract_rows(csr, rows),
             })
             .collect();
-        ShardPlan { n_rows: n, n_cols: csr.n_cols, shards }
+        ShardPlan { n_rows: csr.n_rows, n_cols: csr.n_cols, shards }
+    }
+
+    /// Re-extract shards along **fixed** cut points instead of deriving
+    /// new quantile cuts — the live-mutation path. A mutated graph must
+    /// keep its serving partition (so untouched shards stay cache-warm
+    /// and [`crate::exec::ShardKey`]s keep matching) until the
+    /// coordinator decides a shard drifted past its working-set budget
+    /// and re-partitions explicitly.
+    ///
+    /// `bounds` must be the contiguous disjoint cover of `0..n_rows`
+    /// that a previous [`ShardPlan::partition`] produced (row counts
+    /// never change under edge deltas); panics otherwise — a mismatch
+    /// means the caller's sticky layout is for a different graph.
+    pub fn partition_fixed(csr: &Csr, bounds: &[Range<usize>]) -> ShardPlan {
+        assert!(!bounds.is_empty(), "a shard layout holds at least one range");
+        let mut next = 0usize;
+        for r in bounds {
+            assert_eq!(r.start, next, "shard layout ranges must be contiguous");
+            next = r.end;
+        }
+        assert_eq!(next, csr.n_rows, "shard layout must cover the graph's rows");
+        let shards = bounds
+            .iter()
+            .enumerate()
+            .map(|(index, rows)| GraphShard {
+                index,
+                rows: rows.clone(),
+                csr: extract_rows(csr, rows.clone()),
+            })
+            .collect();
+        ShardPlan { n_rows: csr.n_rows, n_cols: csr.n_cols, shards }
     }
 
     /// The shards, in row order.
@@ -209,6 +233,25 @@ impl ShardPlan {
         }
         Ok(())
     }
+}
+
+/// Just the cut points [`ShardPlan::partition`] would use — no shard
+/// extraction, O(n_rows). The one source of truth for the cuts: the
+/// sticky serving layouts (`crate::exec::ShardLayout`) derive bounds
+/// here without paying the per-shard CSR copies, and `partition`
+/// extracts along the same cuts.
+pub fn partition_bounds(csr: &Csr, spec: &ShardSpec) -> Vec<Range<usize>> {
+    let n = csr.n_rows;
+    if n == 0 {
+        return vec![0..0];
+    }
+    let prefix = degree_prefix(csr);
+    let total = prefix[n];
+    let want = match spec.shards {
+        Some(k) => k,
+        None => working_set_bytes(n, total).div_ceil(spec.budget_bytes.max(1)),
+    };
+    balanced_cuts(&prefix, want)
 }
 
 /// Slice `rows` out of `csr` as a standalone CSR (local rows, global
@@ -339,16 +382,50 @@ mod tests {
             }
         }
         for c in 0..80 {
-            triples.push((40, c % 50, 1.0));
-            triples.push((41, (c + 7) % 50, 1.0));
+            // Distinct columns per row — coo_to_csr dedupes repeats.
+            triples.push((40, c, 1.0));
+            triples.push((41, (c + 7) % 100, 1.0));
         }
-        let g = crate::graph::coo_to_csr(42, 50, triples).unwrap();
+        let g = crate::graph::coo_to_csr(42, 100, triples).unwrap();
         let plan = ShardPlan::partition(&g, &ShardSpec::by_count(2));
         cover_exactly_once(&plan);
         assert_eq!(plan.shards()[0].rows, 0..40);
         let head = plan.shards()[0].stats();
         let tail = plan.shards().last().unwrap().stats();
         assert!(tail.max > head.max * 10, "tail max {} vs head max {}", tail.max, head.max);
+    }
+
+    #[test]
+    fn partition_fixed_reuses_cuts_across_content_changes() {
+        let mut rng = Pcg32::new(5);
+        let g = gen::chung_lu(300, 12.0, 2.0, &mut rng);
+        let plan = ShardPlan::partition(&g, &ShardSpec::by_count(4));
+        let bounds: Vec<Range<usize>> = plan.shards().iter().map(|s| s.rows.clone()).collect();
+
+        // Same graph, fixed cuts: identical shards.
+        let fixed = ShardPlan::partition_fixed(&g, &bounds);
+        fixed.validate().unwrap();
+        assert_eq!(plan.shards(), fixed.shards());
+
+        // Mutated content (one edge reweighted) keeps the cuts even
+        // though fresh quantile cuts might move.
+        let mut g2 = g.clone();
+        g2.val[0] += 1.0;
+        let fixed2 = ShardPlan::partition_fixed(&g2, &bounds);
+        fixed2.validate().unwrap();
+        assert_eq!(
+            fixed2.shards().iter().map(|s| s.rows.clone()).collect::<Vec<_>>(),
+            bounds
+        );
+        // Untouched shards are content-identical to the original's.
+        assert_eq!(fixed2.shards()[1], plan.shards()[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the graph's rows")]
+    fn partition_fixed_rejects_mismatched_layouts() {
+        let g = Csr::new(3, 3, vec![0, 1, 2, 3], vec![0, 1, 2], vec![1.0; 3]).unwrap();
+        let _ = ShardPlan::partition_fixed(&g, &[0..2]);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! repro infer     --model M --dataset D [--width W]
 //!                 [--strategy afs|sfs|aes] [--fp32]         one forward pass + accuracy
 //! repro serve     [--requests N] [--workers K]              run the coordinator demo load
+//! repro mutate    --dataset D --edges FILE                  apply a live edge delta, re-serve
 //! repro experiment <fig2|fig3|fig5|fig6|fig7|tab1|tab3|all> [--quick]
 //! repro eval      [--json [PATH]] [--dir DIR] [--quick]     accuracy conformance grid
 //! repro gen-data  --nodes N --avg-deg D [--gamma G]         rust-side synthetic graph stats
@@ -97,6 +98,8 @@ USAGE:
   repro infer      --model gcn|sage --dataset NAME [--width W] [--strategy afs|sfs|aes] [--fp32] [--artifacts DIR]
   repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--prefetch P]
                    [--host] [--shards N] [--shard-budget MIB] [--artifacts DIR]
+  repro mutate     --dataset NAME --edges FILE [--width W] [--strategy afs|sfs|aes]
+                   [--shards N] [--shard-budget MIB] [--artifacts DIR]
   repro experiment fig2|fig3|fig5|fig6|fig7|tab1|tab3|all [--quick] [--artifacts DIR]
   repro eval       [--json [PATH]] [--dir DIR] [--quick]
   repro gen-data   [--nodes N] [--avg-deg D] [--gamma G] [--seed S]
@@ -112,6 +115,11 @@ budget violation.
 --host serves on the rust substrate (no PJRT); --shards/--shard-budget
 row-shard host aggregation into working-set-budgeted GraphShards with
 per-shard sampling + kernel dispatch (see docs/sharding.md).
+`mutate` applies a live edge delta (insert/delete/reweight lines, see
+docs/mutation.md for the file format) through the serving coordinator:
+the graph advances one epoch, only the shard units of touched shards
+re-sample, and the post-delta forward is checked bitwise against a cold
+coordinator built directly on the mutated graph.
 Run `make artifacts` first to produce the AOT artifacts.";
 
 fn run() -> Result<()> {
@@ -127,6 +135,7 @@ fn run() -> Result<()> {
         "inspect" => cmd_inspect(&artifacts),
         "infer" => cmd_infer(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
+        "mutate" => cmd_mutate(&artifacts, &args),
         "experiment" => cmd_experiment(&artifacts, &args),
         "eval" => cmd_eval(&args),
         "gen-data" => cmd_gen_data(&args),
@@ -356,6 +365,112 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     for (route, count) in &snap.per_route {
         println!("  {route}: {count}");
     }
+    coord.shutdown();
+    Ok(())
+}
+
+/// Apply a live edge delta through the serving coordinator (host
+/// backend): warm a route, apply, report the invalidation scope, and
+/// verify the post-delta forward bitwise against a cold coordinator
+/// built directly on the mutated graph (the `docs/mutation.md`
+/// guarantee, checked on the operator's real data).
+fn cmd_mutate(artifacts: &str, args: &Args) -> Result<()> {
+    use aes_spmm::graph::GraphDelta;
+    use aes_spmm::runtime::Backend;
+
+    let dataset = args.get("dataset").context("--dataset required")?.to_string();
+    let edges = args.get("edges").context("--edges FILE required")?;
+    let delta = GraphDelta::from_file(edges)?;
+    let width = args.get("width").map(|w| w.parse::<usize>()).transpose()?;
+    let strategy = Strategy::from_name(&args.get_or("strategy", "aes"))
+        .context("--strategy must be afs|sfs|aes")?;
+    let sharding = Some(aes_spmm::graph::ShardSpec {
+        shards: args
+            .get("shards")
+            .map(|s| s.parse().context("--shards must be an integer"))
+            .transpose()?,
+        budget_bytes: args.usize_or("shard-budget", 32)? << 20,
+    });
+
+    let names = vec![dataset.clone()];
+    let models = vec!["gcn".to_string()];
+    let cfg = CoordinatorConfig { sharding, ..CoordinatorConfig::default() };
+    let store = Arc::new(ModelStore::load(artifacts, &names, &models)?);
+    let coord = Coordinator::start_with(Backend::Host, store.clone(), cfg.clone());
+    let key = RouteKey {
+        model: "gcn".to_string(),
+        dataset: dataset.clone(),
+        width,
+        strategy,
+        precision: Precision::default(),
+    };
+
+    // Warm the route, then mutate.
+    let t0 = std::time::Instant::now();
+    coord.route_logits(&key)?;
+    let warm_time = t0.elapsed();
+    let before = coord.shard_stats();
+    let t1 = std::time::Instant::now();
+    let outcome = coord.apply_delta(&dataset, &delta)?;
+    let apply_time = t1.elapsed();
+    coord.wait_prefetch_idle();
+    let t2 = std::time::Instant::now();
+    let logits = coord.route_logits(&key)?;
+    let reserve_time = t2.elapsed();
+    let after = coord.shard_stats();
+
+    let r = &outcome.report;
+    println!(
+        "delta: {} op(s) → {} inserted / {} deleted / {} reweighted / {} no-op",
+        delta.len(),
+        r.inserted,
+        r.deleted,
+        r.reweighted,
+        r.noops
+    );
+    println!(
+        "graph: epoch {} | nnz {} → {} | {} row(s) touched",
+        outcome.epoch,
+        r.nnz_before,
+        r.nnz_after,
+        r.touched_rows.len()
+    );
+    println!(
+        "invalidation: {} shard unit(s) re-sampled, {} retained warm{} | {} plan(s) dropped, \
+         {} re-staged",
+        outcome.shards_resampled,
+        outcome.shards_retained,
+        if outcome.repartitioned { " (layout re-cut: working-set drift)" } else { "" },
+        outcome.plans_invalidated,
+        outcome.routes_restaged
+    );
+    println!(
+        "unit cache: {} resident | +{} hits / +{} misses since warm-up",
+        after.resident,
+        after.hits - before.hits,
+        after.misses - before.misses
+    );
+    println!(
+        "timing: warm-up {warm_time:?} | apply {apply_time:?} | post-delta serve {reserve_time:?}"
+    );
+
+    // The mutate-then-serve guarantee, on the operator's data: a cold
+    // coordinator on the already-mutated graph must agree bitwise.
+    let cold_store = Arc::new(ModelStore::load(artifacts, &names, &models)?);
+    let cold = Coordinator::start_with(Backend::Host, cold_store, cfg);
+    cold.apply_delta(&dataset, &delta)?;
+    let want = cold.route_logits(&key)?;
+    let (a, b) = (logits.as_f32()?, want.as_f32()?);
+    let differing =
+        a.iter().zip(b.iter()).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+    if differing == 0 {
+        println!("verify: post-delta forward is bitwise-equal to a cold rebuild");
+    } else {
+        cold.shutdown();
+        coord.shutdown();
+        bail!("post-delta forward differs from a cold rebuild in {differing} logit(s)");
+    }
+    cold.shutdown();
     coord.shutdown();
     Ok(())
 }

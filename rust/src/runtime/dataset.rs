@@ -23,6 +23,10 @@ pub struct Dataset {
     pub nnz: usize,
     pub feats: usize,
     pub classes: usize,
+    /// Graph epoch: 0 as loaded, +1 per applied
+    /// [`crate::graph::GraphDelta`] that changed anything. Plans and
+    /// shard units are versioned against this — see `docs/mutation.md`.
+    pub epoch: u64,
     /// Graph with GCN-normalized values (Â entries).
     pub csr_gcn: Csr,
     /// Same structure, all-ones values (GraphSAGE's mean numerator).
@@ -57,6 +61,7 @@ impl Dataset {
             nnz,
             feats,
             classes,
+            epoch: 0,
             csr_gcn,
             val_ones,
             feat: nbt.get("feat")?.clone(),

@@ -263,6 +263,29 @@ mod tests {
         }
     }
 
+    /// The live-mutation contract (`docs/mutation.md`): `shard_width`
+    /// is a pure function of (W, shard max degree), so re-evaluating it
+    /// after a delta changes a shard's max degree is what flips the
+    /// shard between the exhaustive and sampled branches — in both
+    /// directions, and exactly at the W boundary.
+    #[test]
+    fn shard_width_flips_branches_as_mutation_moves_max_degree() {
+        let w = 8usize;
+        // Uniform shard (max degree 3): exhaustive shrunken tile.
+        assert_eq!(shard_width(w, 3), 4);
+        // A delta grows some row to degree 15: the re-evaluated tile
+        // must be the full W (the sampled branch).
+        assert_eq!(shard_width(w, 15), w);
+        // Deleting edges back below W flips it to exhaustive again.
+        assert_eq!(shard_width(w, 6), 8);
+        assert_eq!(shard_width(w, 2), 2);
+        // The boundary itself: max degree == W stays exhaustive; one
+        // past it samples.
+        assert_eq!(shard_width(w, w), w);
+        assert_eq!(shard_width(w, w + 1), w);
+        assert!(w >= shard_width(w, w), "tiles never exceed W");
+    }
+
     #[test]
     fn shard_width_shrinks_only_when_everything_fits() {
         // Uniform shard: max degree 5 under W=16 → tile 8, exhaustive.

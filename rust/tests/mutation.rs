@@ -1,0 +1,438 @@
+//! Live-graph mutation through the full serving stack — the ISSUE 5
+//! acceptance suite. Runs with **no artifacts and no PJRT**: synthetic
+//! datasets are written as `.nbt` and the coordinator serves on
+//! [`Backend::Host`].
+//!
+//! Covers:
+//! * mutate-then-serve: after `apply_delta`, the sharded/streamed
+//!   forward is bitwise-equal to a cold coordinator built directly on
+//!   the mutated graph;
+//! * shard-scoped invalidation: untouched shards are retained (proven
+//!   via [`ShardCacheStats`]), touched shards re-sample;
+//! * the delta edge cases: empty delta, delete-last-edge-in-row,
+//!   insert into an empty row, a delta landing in a mega-row shard,
+//!   and a delta flipping a shard between the `shard_width`
+//!   uniform/skewed branches;
+//! * working-set drift forcing a re-partition.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use aes_spmm::coordinator::{Coordinator, CoordinatorConfig, ModelStore, RouteKey};
+use aes_spmm::exec::{
+    PlanCache, ShardCacheRef, ShardKey, ShardLayout, ShardSampling, ShardUnit, ShardedPlan,
+};
+use aes_spmm::graph::{coo_to_csr, Csr, EdgeOp, GraphDelta, ShardSpec, VersionedCsr};
+use aes_spmm::quant::{quantize, Precision, QuantParams};
+use aes_spmm::rng::Pcg32;
+use aes_spmm::runtime::Backend;
+use aes_spmm::sampling::Strategy;
+use aes_spmm::tensor::{write_nbt, NbtFile, Tensor};
+
+const FEATS: usize = 8;
+const HIDDEN: usize = 6;
+const CLASSES: usize = 4;
+
+fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let len: usize = shape.iter().product();
+    let vals: Vec<f32> = (0..len).map(|_| rng.f32() - 0.5).collect();
+    Tensor::from_f32(shape, &vals)
+}
+
+/// Write `data_{name}.nbt` + `weights_gcn_{name}.nbt` for an arbitrary
+/// square graph, returning the artifacts dir.
+fn write_artifacts(tag: &str, name: &str, g: &Csr) -> PathBuf {
+    assert_eq!(g.n_rows, g.n_cols, "serving datasets are square");
+    let dir = std::env::temp_dir().join(format!("mutation_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let n = g.n_rows;
+    let nnz = g.nnz();
+    let mut rng = Pcg32::new(0xD117A);
+    let feat: Vec<f32> = (0..n * FEATS).map(|_| rng.f32() - 0.5).collect();
+    let params = QuantParams::of(&feat);
+    let labels: Vec<i32> = (0..n).map(|_| rng.usize_below(CLASSES) as i32).collect();
+
+    let mut nbt = NbtFile::new();
+    nbt.insert(
+        "meta",
+        Tensor::from_i64(&[4], &[n as i64, nnz as i64, FEATS as i64, CLASSES as i64]),
+    );
+    nbt.insert("row_ptr", Tensor::from_i32(&[n + 1], &g.row_ptr));
+    nbt.insert("col_ind", Tensor::from_i32(&[nnz], &g.col_ind));
+    nbt.insert("val_gcn", Tensor::from_f32(&[nnz], &g.val));
+    nbt.insert("val_ones", Tensor::from_f32(&[nnz], &vec![1.0f32; nnz]));
+    nbt.insert("feat", Tensor::from_f32(&[n, FEATS], &feat));
+    nbt.insert("featq", Tensor::from_u8(&[n, FEATS], &quantize(&feat, params)));
+    nbt.insert("qrange", Tensor::from_f32(&[2], &[params.x_min, params.x_max]));
+    nbt.insert("labels", Tensor::from_i32(&[n], &labels));
+    nbt.insert("train_mask", Tensor::from_u8(&[n], &vec![0u8; n]));
+    write_nbt(dir.join(format!("data_{name}.nbt")), &nbt).unwrap();
+
+    let mut w = NbtFile::new();
+    let mut wrng = Pcg32::new(0xD117B);
+    w.insert("w0", rand_tensor(&mut wrng, &[FEATS, HIDDEN]));
+    w.insert("b0", rand_tensor(&mut wrng, &[HIDDEN]));
+    w.insert("w1", rand_tensor(&mut wrng, &[HIDDEN, CLASSES]));
+    w.insert("b1", rand_tensor(&mut wrng, &[CLASSES]));
+    w.insert("ideal_acc", Tensor::from_f32(&[1], &[0.5]));
+    write_nbt(dir.join(format!("weights_gcn_{name}.nbt")), &w).unwrap();
+    dir
+}
+
+/// A 90-node graph: 80 uniform rows (deg 4 + self-loop), one empty-ish
+/// region, and two hub rows — shaped so a 3-way layout puts the hubs in
+/// the last shard.
+fn serving_graph() -> Csr {
+    let n = 90usize;
+    let mut triples: Vec<(i32, i32, f32)> = Vec::new();
+    for r in 0..n as i32 {
+        triples.push((r, r, 1.0)); // self-loop
+    }
+    for r in 0..80i32 {
+        for k in 1..=4i32 {
+            triples.push((r, (r + k * 17) % 90, 0.25));
+        }
+    }
+    for r in 84..86i32 {
+        for c in 0..40i32 {
+            triples.push((r, (c * 2 + r) % 90, 0.1));
+        }
+    }
+    coo_to_csr(n, n, triples).unwrap()
+}
+
+fn start(dir: &Path, name: &str, spec: ShardSpec) -> (Coordinator, Arc<ModelStore>) {
+    let store = Arc::new(
+        ModelStore::load(dir, &[name.to_string()], &["gcn".to_string()]).unwrap(),
+    );
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        prefetch_workers: 1,
+        sharding: Some(spec),
+        ..CoordinatorConfig::default()
+    };
+    (Coordinator::start_with(Backend::Host, store.clone(), cfg), store)
+}
+
+fn route(name: &str, width: Option<usize>, precision: Precision) -> RouteKey {
+    RouteKey {
+        model: "gcn".to_string(),
+        dataset: name.to_string(),
+        width,
+        strategy: Strategy::Aes,
+        precision,
+    }
+}
+
+fn logits_bits(coord: &Coordinator, key: &RouteKey) -> Vec<u32> {
+    coord
+        .route_logits(key)
+        .unwrap()
+        .as_f32()
+        .unwrap()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+/// The acceptance criterion: after `apply_delta`, the sharded/streamed
+/// forward is bitwise-equal to a cold coordinator built directly on the
+/// mutated graph, and `ShardCacheStats` proves untouched shards were
+/// retained. Sequences three deltas covering delete-last-edge-in-row
+/// and insert-into-empty-row along the way.
+#[test]
+fn mutate_then_serve_is_bitwise_and_retains_untouched_shards() {
+    let g = serving_graph();
+    let dir = write_artifacts("serve", "live", &g);
+    let (warm, _store) = start(&dir, "live", ShardSpec::by_count(3));
+    let routes =
+        [route("live", None, Precision::F32), route("live", Some(8), Precision::U8Device)];
+    for k in &routes {
+        warm.route_logits(k).unwrap();
+    }
+    assert_eq!(warm.shard_stats().resident, 6, "two unit families × three shards");
+
+    // Row 2's full edge list (self-loop + 4 neighbors), for the
+    // delete-last-edge case; all in shard 0.
+    let row2: Vec<i32> = g.row_range(2).map(|e| g.col_ind[e]).collect();
+    let deltas = vec![
+        // Delta 1: weight update + a fresh edge, rows 0-1 (shard 0).
+        GraphDelta::new(vec![
+            EdgeOp::Reweight { row: 0, col: 0, weight: 0.75 },
+            EdgeOp::Insert { row: 1, col: 89, weight: 0.2 },
+        ]),
+        // Delta 2: delete every edge of row 2 — the
+        // delete-last-edge-in-row case ends with an empty row.
+        GraphDelta::new(
+            row2.iter().map(|&c| EdgeOp::Delete { row: 2, col: c }).collect(),
+        ),
+        // Delta 3: insert into the now-empty row 2.
+        GraphDelta::new(vec![EdgeOp::Insert { row: 2, col: 50, weight: 0.3 }]),
+    ];
+
+    for (i, delta) in deltas.iter().enumerate() {
+        let before = warm.shard_stats();
+        let outcome = warm.apply_delta("live", delta).unwrap();
+        assert_eq!(outcome.epoch, (i + 1) as u64);
+        assert!(!outcome.repartitioned);
+        // Both route families: exactly the touched shard re-sampled.
+        assert_eq!(outcome.shards_resampled, 2, "delta {i}: one unit per family");
+        assert_eq!(outcome.shards_retained, 4, "delta {i}: untouched shards stay warm");
+        assert_eq!(outcome.plans_invalidated, 2);
+        warm.wait_prefetch_idle();
+
+        let warm_bits: Vec<Vec<u32>> = routes.iter().map(|k| logits_bits(&warm, k)).collect();
+        let after = warm.shard_stats();
+        assert_eq!(
+            after.misses - before.misses,
+            2,
+            "delta {i}: only the touched shard rebuilds (per family)"
+        );
+        assert!(
+            after.hits - before.hits >= 4,
+            "delta {i}: the re-staged plans must reuse the retained units"
+        );
+
+        // Cold rebuild directly on the mutated graph.
+        let (cold, _cs) = start(&dir, "live", ShardSpec::by_count(3));
+        for d in &deltas[..=i] {
+            cold.apply_delta("live", d).unwrap();
+        }
+        for (ri, k) in routes.iter().enumerate() {
+            assert_eq!(
+                warm_bits[ri],
+                logits_bits(&cold, k),
+                "delta {i}, route {}: warm serve must match a cold rebuild bitwise",
+                k.label()
+            );
+        }
+        cold.shutdown();
+    }
+    let snap = warm.metrics().snapshot();
+    assert_eq!(snap.graph_epochs, 3);
+    assert_eq!(snap.shards_resampled, 6);
+    assert_eq!(snap.shards_retained, 12);
+    // Row 2 is empty after delta 2 and refilled after delta 3.
+    let ds = _store.dataset("live").unwrap();
+    assert_eq!(ds.epoch, 3);
+    assert_eq!(ds.csr_gcn.row_nnz(2), 1);
+    warm.shutdown();
+}
+
+/// An empty (or all-no-op) delta keeps the epoch and every plan warm —
+/// no invalidation, no re-sampling, no re-staging.
+#[test]
+fn noop_delta_keeps_everything_warm() {
+    let g = serving_graph();
+    let dir = write_artifacts("noop", "live", &g);
+    let (coord, store) = start(&dir, "live", ShardSpec::by_count(3));
+    let key = route("live", Some(8), Precision::F32);
+    coord.route_logits(&key).unwrap();
+    let before = coord.shard_stats();
+    let fstore = store.feature_store("live").unwrap();
+    let loads = fstore.load_count();
+
+    let outcome = coord.apply_delta("live", &GraphDelta::default()).unwrap();
+    assert_eq!(outcome.epoch, 0, "an empty delta must not advance the epoch");
+    assert_eq!((outcome.shards_resampled, outcome.plans_invalidated), (0, 0));
+    // A delta that names edges but changes nothing is equally free.
+    let noop = GraphDelta::new(vec![EdgeOp::Delete { row: 3, col: 88 }]);
+    let outcome = coord.apply_delta("live", &noop).unwrap();
+    assert_eq!(outcome.epoch, 0);
+    assert_eq!(outcome.report.noops, 1);
+
+    coord.route_logits(&key).unwrap();
+    let after = coord.shard_stats();
+    assert_eq!(after.misses, before.misses, "no unit rebuilt");
+    assert_eq!(fstore.load_count(), loads, "no feature re-staging");
+    assert_eq!(coord.metrics().snapshot().graph_epochs, 0);
+    coord.shutdown();
+}
+
+/// A wholesale republish (freshly loaded Dataset, epoch restarts at 0)
+/// must never regress the published epoch: `publish_dataset` re-stamps
+/// it past the current one, so plans built against the pre-republish
+/// snapshot can never be served afterwards even if the publisher
+/// forgot to bump anything itself.
+#[test]
+fn wholesale_republish_never_regresses_the_epoch() {
+    let g = serving_graph();
+    let dir = write_artifacts("republish", "live", &g);
+    let (coord, store) = start(&dir, "live", ShardSpec::by_count(3));
+    let key = route("live", Some(8), Precision::F32);
+    coord.route_logits(&key).unwrap();
+    let delta = GraphDelta::new(vec![EdgeOp::Reweight { row: 0, col: 0, weight: 0.9 }]);
+    coord.apply_delta("live", &delta).unwrap();
+    assert_eq!(store.dataset("live").unwrap().epoch, 1);
+
+    // Operator rotates the files and republishes a fresh load.
+    let fresh = aes_spmm::runtime::Dataset::load(&dir, "live").unwrap();
+    assert_eq!(fresh.epoch, 0, "a fresh load restarts at epoch 0");
+    store.publish_dataset("live", Arc::new(fresh)).unwrap();
+    assert_eq!(
+        store.dataset("live").unwrap().epoch,
+        2,
+        "publication must advance the epoch, never regress it"
+    );
+    // The epoch-1 plan (mutated weights) is unreachable at epoch 2:
+    // serving rebuilds from the republished graph and matches a cold
+    // coordinator on the same files bitwise.
+    coord.wait_prefetch_idle();
+    let bits = logits_bits(&coord, &key);
+    let (cold, _cs) = start(&dir, "live", ShardSpec::by_count(3));
+    assert_eq!(bits, logits_bits(&cold, &key));
+    cold.shutdown();
+
+    // The CAS variant publishes nothing when the expected epoch is
+    // stale (apply_delta's guard against concurrent republishes).
+    let current = store.dataset("live").unwrap();
+    let next = Arc::new(aes_spmm::runtime::Dataset {
+        epoch: current.epoch + 1,
+        ..(*current).clone()
+    });
+    assert!(!store.publish_dataset_cas("live", current.epoch + 5, next.clone()).unwrap());
+    assert_eq!(store.dataset("live").unwrap().epoch, current.epoch, "lost CAS changed nothing");
+    assert!(store.publish_dataset_cas("live", current.epoch, next).unwrap());
+    assert_eq!(store.dataset("live").unwrap().epoch, current.epoch + 1);
+    coord.shutdown();
+}
+
+/// A delta landing in a mega-row shard re-samples only that shard, and
+/// a delta that bloats a shard past its working-set budget forces a
+/// re-partition (sticky layout dropped, everything rebuilt).
+#[test]
+fn mega_row_shard_delta_and_drift_repartition() {
+    // Graph with a 300-edge mega row at 40 (n=60): budget-based
+    // sharding isolates it.
+    let n = 60usize;
+    let mut triples: Vec<(i32, i32, f32)> = Vec::new();
+    for r in 0..n as i32 {
+        triples.push((r, r, 1.0));
+        triples.push((r, (r + 1) % n as i32, 0.5));
+    }
+    for c in 0..50i32 {
+        triples.push((40, c, 0.05));
+    }
+    let g = coo_to_csr(n, n, triples).unwrap();
+    let budget = aes_spmm::graph::working_set_bytes(8, 24);
+    let dir = write_artifacts("mega", "live", &g);
+    let (coord, _store) = start(&dir, "live", ShardSpec::by_budget(budget));
+    let key = route("live", Some(8), Precision::F32);
+    coord.route_logits(&key).unwrap();
+    let resident = coord.shard_stats().resident;
+    assert!(resident >= 3, "budget sharding must cut several shards (got {resident})");
+
+    // Touch only the mega row: exactly its shard re-samples, and even
+    // though that shard was *born* over the byte budget, neither a
+    // reweight nor a single insert forces a futile re-partition (the
+    // drift floor gives born-over-budget shards 2× growth room).
+    let delta = GraphDelta::new(vec![
+        EdgeOp::Reweight { row: 40, col: 0, weight: 0.07 },
+        EdgeOp::Insert { row: 40, col: 55, weight: 0.02 },
+    ]);
+    let outcome = coord.apply_delta("live", &delta).unwrap();
+    assert!(!outcome.repartitioned, "one grown edge must not re-cut a mega-row shard");
+    assert_eq!(outcome.shards_resampled, 1, "only the mega-row shard re-samples");
+    assert_eq!(outcome.shards_retained, resident - 1);
+    coord.wait_prefetch_idle();
+
+    // Bitwise vs cold rebuild on the mutated graph.
+    let warm_bits = logits_bits(&coord, &key);
+    let (cold, _cs) = start(&dir, "live", ShardSpec::by_budget(budget));
+    cold.apply_delta("live", &delta).unwrap();
+    assert_eq!(warm_bits, logits_bits(&cold, &key));
+    cold.shutdown();
+
+    // Now bloat the light leading shard far past 2× its birth weight:
+    // the layout is re-cut and every unit drops.
+    let bloat = || -> GraphDelta {
+        let mut ops = Vec::new();
+        for r in 0..3i32 {
+            for c in 0..50i32 {
+                ops.push(EdgeOp::Insert { row: r, col: (c + 3) % n as i32, weight: 0.01 });
+            }
+        }
+        GraphDelta::new(ops)
+    };
+    let outcome = coord.apply_delta("live", &bloat()).unwrap();
+    assert!(outcome.repartitioned, "a ~150-edge insert into a ~24-edge shard must drift");
+    assert_eq!(outcome.shards_retained, 0, "a re-partition retains nothing");
+    assert_eq!(
+        outcome.shards_resampled, resident,
+        "a re-partition drops every resident unit"
+    );
+    coord.wait_prefetch_idle();
+    // Serving still agrees with a cold rebuild after the re-cut.
+    let warm_bits = logits_bits(&coord, &key);
+    let (cold, _cs) = start(&dir, "live", ShardSpec::by_budget(budget));
+    cold.apply_delta("live", &delta).unwrap();
+    cold.apply_delta("live", &bloat()).unwrap();
+    assert_eq!(warm_bits, logits_bits(&cold, &key));
+    cold.shutdown();
+    coord.shutdown();
+}
+
+/// Mutation can flip a shard between `shard_width`'s uniform and skewed
+/// branches: inserting hub edges into a uniform (exhaustive-tile) shard
+/// must re-evaluate the per-shard decision and come back `Sampled`.
+#[test]
+fn delta_flips_a_shard_between_width_branches() {
+    // Uniform graph: every row deg 3 (self + 2), W=8 ⇒ every shard
+    // exhaustive at a shrunken tile.
+    let n = 48usize;
+    let mut triples: Vec<(i32, i32, f32)> = Vec::new();
+    for r in 0..n as i32 {
+        triples.push((r, r, 1.0));
+        triples.push((r, (r + 3) % n as i32, 0.5));
+        triples.push((r, (r + 7) % n as i32, 0.25));
+    }
+    let g = coo_to_csr(n, n, triples).unwrap();
+    let spec = ShardSpec::by_count(3);
+    let layout = ShardLayout::of(&g, &spec);
+    let cache: PlanCache<ShardKey, ShardUnit> = PlanCache::new(64);
+    let cr = |epoch| Some(ShardCacheRef { units: &cache, tag: "live", epoch });
+
+    let plan =
+        ShardedPlan::prepare_with_bounds(&g, layout.bounds(), Some(8), Strategy::Aes, FEATS, cr(0));
+    assert!(
+        plan.units()
+            .iter()
+            .all(|u| matches!(u.sampling, ShardSampling::Exhaustive { .. })),
+        "uniform shards start on the exhaustive branch"
+    );
+
+    // Delta: 12 extra edges on row 1 → its shard's max degree (15)
+    // overflows W=8 → the skewed branch. (Simulate the coordinator's
+    // scoped invalidation: drop the touched shard's units, re-tag the
+    // rest, rebuild at the new epoch.)
+    let v = VersionedCsr::new(g);
+    let ops: Vec<EdgeOp> = (0..12i32)
+        .map(|k| EdgeOp::Insert { row: 1, col: (10 + 3 * k) % n as i32, weight: 0.1 })
+        .collect();
+    let (next, report) = v.apply(&GraphDelta::new(ops)).unwrap();
+    assert_eq!(report.touched_rows, vec![1]);
+    let affected = layout.affected_shards(&report.touched_rows);
+    assert_eq!(affected, vec![0]);
+    let hot = (layout.bounds()[0].start, layout.bounds()[0].end);
+    cache.advance_epoch(|k: &ShardKey| k.rows == hot, |k| k.rows != hot, 0, next.epoch());
+
+    let plan = ShardedPlan::prepare_with_bounds(
+        &g_ref(&next),
+        layout.bounds(),
+        Some(8),
+        Strategy::Aes,
+        FEATS,
+        cr(next.epoch()),
+    );
+    assert_eq!(plan.warm_units(), 2, "untouched shards stay warm across the flip");
+    let flipped = &plan.units()[0];
+    assert!(
+        matches!(flipped.sampling, ShardSampling::Sampled { width: 8, .. }),
+        "the touched shard must re-evaluate shard_width and sample (got {:?})",
+        flipped.sampling
+    );
+}
+
+fn g_ref(v: &VersionedCsr) -> Csr {
+    (**v.csr()).clone()
+}

@@ -91,6 +91,7 @@ fn plan_spec<'a>(
         host_ell: true,
         stream,
         shard,
+        shard_bounds: None,
         shard_cache: None,
     }
 }
@@ -139,17 +140,18 @@ fn every_row_lands_in_exactly_one_shard() {
 #[test]
 fn mega_row_is_isolated_not_split() {
     let heavy = 6000usize;
+    let cols = 6000usize; // distinct columns — coo_to_csr dedupes repeats
     let mut triples: Vec<(i32, i32, f32)> = Vec::new();
     for r in 0..10i32 {
         triples.push((r, r % 7, 1.0));
     }
     for e in 0..heavy {
-        triples.push((10, (e % 50) as i32, 0.5));
+        triples.push((10, e as i32, 0.5));
     }
     for r in 11..20i32 {
         triples.push((r, (r * 3) % 50, 1.0));
     }
-    let g = aes_spmm::graph::coo_to_csr(20, 50, triples).unwrap();
+    let g = aes_spmm::graph::coo_to_csr(20, cols, triples).unwrap();
     let budget = working_set_bytes(1, 64);
     let plan = ShardPlan::partition(&g, &ShardSpec::by_budget(budget));
     plan.validate().unwrap();
@@ -161,7 +163,7 @@ fn mega_row_is_isolated_not_split() {
     // but the ROWCACHE_MAX_ROW_NNZ gate keeps the 6000-edge row on the
     // order-preserving naive kernel.
     let feats = 16usize;
-    let b: Vec<f32> = (0..50 * feats).map(|i| (i as f32).sin()).collect();
+    let b: Vec<f32> = (0..cols * feats).map(|i| (i as f32).sin()).collect();
     let sp =
         ShardedPlan::prepare(&g, &ShardSpec::by_budget(budget), None, Strategy::Aes, feats, None);
     assert!(sp.shard_count() >= 2);
