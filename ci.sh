@@ -17,6 +17,10 @@
 # Env knobs:
 #   SKIP_LINT=1   skip the fmt + clippy steps (e.g. a toolchain without
 #                 the components; the error below tells you how to add them)
+#   AES_SPMM_FORCE_SCALAR=1
+#                 pin every runtime SIMD dispatch site to the scalar arm
+#                 (docs/simd.md); the whole gate must pass bit-identically
+#                 in this configuration — CI's `scalar` job runs it
 set -euo pipefail
 cd "$(dirname "$0")"
 

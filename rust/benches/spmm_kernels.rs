@@ -15,9 +15,13 @@ use aes_spmm::bench::{print_header, print_result, BenchResult, Bencher};
 use aes_spmm::exec::{self, ExecEnv, GraphProfile};
 use aes_spmm::gen;
 use aes_spmm::graph::Ell;
+use aes_spmm::quant::ChunkedParams;
 use aes_spmm::rng::Pcg32;
 use aes_spmm::sampling::{sample_ell, Strategy};
-use aes_spmm::spmm::{csr_naive, csr_naive_par, csr_rowcache, ell_spmm_par, spmm_flops};
+use aes_spmm::spmm::{
+    csr_naive, csr_naive_par, csr_rowcache, csr_rowcache_at, csr_spmm_i8, ell_spmm_at,
+    ell_spmm_i8, ell_spmm_par, simd, spmm_flops, spmm_i8_flops, AdjQuant,
+};
 use aes_spmm::util::JsonValue;
 
 struct Recorder {
@@ -105,6 +109,30 @@ fn main() {
         print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
         rec.push(&r, Some(r.throughput(flops) / 1e9));
 
+        // Scalar-vs-SIMD split on the same kernel: the detected level is
+        // what `csr_rowcache` above already ran; this pins the scalar
+        // arm so the vector speedup is a first-class diffable case.
+        let lvl = simd::level();
+        let r = b.run(format!("rowcache csr (forced scalar; detected {})", lvl.name()), || {
+            csr_rowcache_at(simd::SimdLevel::Scalar, &g, &feats, f, &mut out)
+        });
+        print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+        rec.push(&r, Some(r.throughput(flops) / 1e9));
+
+        // True INT8 compute on the exact operand: i8×u8→i32 MACs over
+        // the requantized adjacency, u8 codes in place of fp32 features.
+        // Throughput is reported in fp32-flop equivalents (the dispatch
+        // cost model's like-units — see `spmm_i8_flops`).
+        let params = ChunkedParams::of_rows(&feats, n, f, (n / 8).max(1));
+        let qb = params.quantize_rows(&feats, f);
+        let aq_csr = AdjQuant::from_csr(&g, &params);
+        let i8_flops = spmm_i8_flops(g.nnz(), f);
+        let r = b.run("exact csr i8-compute (1 thread)", || {
+            csr_spmm_i8(&g, &aq_csr, &qb, f, &mut out)
+        });
+        print_result(&r, Some(("GFLOP/s-eq", r.throughput(i8_flops) / 1e9)));
+        rec.push(&r, Some(r.throughput(i8_flops) / 1e9));
+
         // The exec layer's pick for this workload, run through the same
         // dispatcher the serving path uses.
         let picked = exec::select_kernel(&GraphProfile::of(&g), f, None, &env);
@@ -129,6 +157,28 @@ fn main() {
             let picked = exec::select_kernel(&GraphProfile::of_ell(&ell), f, Some(w), &env);
             let r = b.run(format!("dispatched aes w{w} (warm plan) → {}", picked.name()), || {
                 exec::run_ell(picked, &ell, &feats, f, &mut out, threads)
+            });
+            print_result(&r, None);
+            rec.push(&r, None);
+
+            // Scalar-vs-SIMD on the sampled kernel (serial, so the two
+            // cases differ only in the vector arm).
+            let r = b.run(format!("aes w{w} forced scalar (serial)"), || {
+                ell_spmm_at(simd::SimdLevel::Scalar, &ell, &feats, f, &mut out)
+            });
+            print_result(&r, None);
+            rec.push(&r, None);
+            let r = b.run(format!("aes w{w} {} (serial)", simd::level().name()), || {
+                ell_spmm_at(simd::level(), &ell, &feats, f, &mut out)
+            });
+            print_result(&r, None);
+            rec.push(&r, None);
+
+            // fp32-dequant vs true-INT8-compute on the same sampled
+            // plan: the i8 case consumes u8 codes directly.
+            let aq = AdjQuant::from_ell(&ell, &params);
+            let r = b.run(format!("aes w{w} i8-compute (serial)"), || {
+                ell_spmm_i8(&ell, &aq, &qb, f, &mut out)
             });
             print_result(&r, None);
             rec.push(&r, None);

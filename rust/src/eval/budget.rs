@@ -26,6 +26,13 @@ pub const SAMPLING_TOP1_LOSS: f64 = 0.01;
 /// route's sampling budget (paper Table 6: ≤ 0.3% extra).
 pub const QUANT_EXTRA_TOP1_LOSS: f64 = 0.003;
 
+/// True INT8 *compute* (integer-accumulating SpMM over a requantized
+/// adjacency — `crate::spmm::ell_spmm_i8`) may add at most this top-1
+/// fraction on top of the INT8-dequant route: the edge-coefficient
+/// requant is a second Eq. 1-style rounding, held to the same ≤ 0.3%
+/// increment Table 6 allows the first.
+pub const I8_COMPUTE_EXTRA_TOP1_LOSS: f64 = 0.003;
+
 /// One configuration's accuracy budget.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Budget {
@@ -102,11 +109,31 @@ pub fn budget_for(width: Option<usize>, quantized: bool) -> Budget {
     }
 }
 
+/// Budget for an i8-compute route vs the **oracle**: the route stacks
+/// the sampling loss (when sampled), the feature-quantization increment,
+/// and the edge-coefficient requant increment.
+pub fn i8_compute_budget(width: Option<usize>) -> Budget {
+    let base = budget_for(width, true);
+    Budget {
+        max_top1_loss: base.max_top1_loss + I8_COMPUTE_EXTRA_TOP1_LOSS,
+        slack_rows: base.slack_rows + 1,
+        bitwise: false,
+    }
+}
+
 /// The pairwise "quantization adds ≤ 0.3%" budget: INT8 logits measured
 /// against the route's **fp32 sibling** (not the oracle), isolating the
 /// quantization increment from the shared sampling error.
 pub fn quant_delta_budget() -> Budget {
     Budget { max_top1_loss: QUANT_EXTRA_TOP1_LOSS, slack_rows: 1, bitwise: false }
+}
+
+/// The pairwise "true INT8 compute adds ≤ 0.3%" budget: i8-compute
+/// logits measured against the route's **INT8-dequant sibling**
+/// (U8Eager), isolating the integer-accumulation increment from the
+/// shared sampling and feature-quantization error.
+pub fn i8_compute_delta_budget() -> Budget {
+    Budget { max_top1_loss: I8_COMPUTE_EXTRA_TOP1_LOSS, slack_rows: 1, bitwise: false }
 }
 
 /// The pairwise sharding budget: a sharded forward against its
@@ -161,6 +188,23 @@ mod tests {
         assert!(!quant_delta_budget().bitwise);
         assert!(shard_delta_budget().bitwise);
         assert!(budget_for(Some(4), true).max_top1_loss > SAMPLING_TOP1_LOSS);
+    }
+
+    #[test]
+    fn i8_compute_budgets_stack_on_the_dequant_route() {
+        // Oracle budget: dequant route's allowance + the requant
+        // increment, one extra slack row.
+        let dequant = budget_for(Some(8), true);
+        let i8 = i8_compute_budget(Some(8));
+        assert!((i8.max_top1_loss - dequant.max_top1_loss - I8_COMPUTE_EXTRA_TOP1_LOSS).abs() < 1e-12);
+        assert_eq!(i8.slack_rows, dequant.slack_rows + 1);
+        assert!(!i8.bitwise);
+        // Exact i8-compute: quant + requant only, no sampling term.
+        let exact = i8_compute_budget(None);
+        assert!((exact.max_top1_loss - (QUANT_EXTRA_TOP1_LOSS + I8_COMPUTE_EXTRA_TOP1_LOSS)).abs() < 1e-12);
+        // Pairwise vs the dequant sibling: the requant increment alone.
+        assert_eq!(i8_compute_delta_budget().max_top1_loss, I8_COMPUTE_EXTRA_TOP1_LOSS);
+        assert!(!i8_compute_delta_budget().bitwise);
     }
 
     #[test]

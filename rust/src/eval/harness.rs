@@ -27,7 +27,9 @@ use crate::sampling::Strategy;
 use crate::tensor::Tensor;
 use crate::util::{argmax_f32, JsonValue};
 
-use super::budget::{budget_for, quant_delta_budget, Budget};
+use super::budget::{
+    budget_for, i8_compute_budget, i8_compute_delta_budget, quant_delta_budget, Budget,
+};
 use super::dataset::{write_eval_datasets, DegreeProfile, EVAL_DATASETS};
 use super::metrics::{compare_logits, AccuracyMetrics};
 use super::oracle::oracle_forward;
@@ -56,24 +58,35 @@ pub enum PrecisionMode {
     /// INT8 features, streamed zero-copy with lazy per-block dequant
     /// (the serving default).
     U8Streamed,
+    /// True INT8 compute: streamed INT8 codes fed straight to the
+    /// integer-accumulating SpMM kernels over a requantized adjacency
+    /// (`crate::spmm::ell_spmm_i8`) — no fp32 feature block is ever
+    /// materialized on the aggregation path.
+    I8Compute,
 }
 
 impl PrecisionMode {
     /// Every grid point on the precision axis.
-    pub const ALL: [PrecisionMode; 3] =
-        [PrecisionMode::F32, PrecisionMode::U8Eager, PrecisionMode::U8Streamed];
+    pub const ALL: [PrecisionMode; 4] = [
+        PrecisionMode::F32,
+        PrecisionMode::U8Eager,
+        PrecisionMode::U8Streamed,
+        PrecisionMode::I8Compute,
+    ];
 
     /// The route-key precision this mode submits as.
     pub fn precision(self) -> Precision {
         match self {
             PrecisionMode::F32 => Precision::F32,
             PrecisionMode::U8Eager | PrecisionMode::U8Streamed => Precision::U8Device,
+            PrecisionMode::I8Compute => Precision::I8Compute,
         }
     }
 
-    /// Whether this mode's features stream (zero-copy lazy dequant).
+    /// Whether this mode's features stream (zero-copy; lazy per-block
+    /// dequant for `U8Streamed`, raw-code access for `I8Compute`).
     pub fn streamed(self) -> bool {
-        matches!(self, PrecisionMode::U8Streamed)
+        matches!(self, PrecisionMode::U8Streamed | PrecisionMode::I8Compute)
     }
 
     /// Which coordinator serves this mode: everything except eager INT8
@@ -92,12 +105,23 @@ impl PrecisionMode {
         !matches!(self, PrecisionMode::F32)
     }
 
+    /// The oracle-relative budget this mode's configurations are held
+    /// to (i8-compute stacks the edge-requant increment on the dequant
+    /// route's budget).
+    pub fn budget(self, width: Option<usize>) -> Budget {
+        match self {
+            PrecisionMode::I8Compute => i8_compute_budget(width),
+            _ => budget_for(width, self.quantized()),
+        }
+    }
+
     /// Stable label for reports.
     pub fn name(self) -> &'static str {
         match self {
             PrecisionMode::F32 => "f32",
             PrecisionMode::U8Eager => "u8-eager",
             PrecisionMode::U8Streamed => "u8-streamed",
+            PrecisionMode::I8Compute => "i8-compute",
         }
     }
 }
@@ -415,7 +439,7 @@ pub fn run_eval(dir: &Path, quick: bool) -> Result<EvalReport> {
                         .with_context(|| format!("route {} (shards {shards})", key.label()))?;
                     let logits = logits_t.as_f32()?.to_vec();
                     let metrics = compare_logits(&oracle, &logits, ds.n, ds.classes);
-                    let budget = budget_for(width, mode.quantized());
+                    let budget = mode.budget(width);
                     report.configs.push(ConfigResult {
                         dataset: name.to_string(),
                         strategy,
@@ -640,6 +664,22 @@ fn push_pairwise_checks(
                     budget.allowed_disagreements(m.rows)
                 ),
             });
+            // True INT8 compute adds ≤ 0.3% on top of the dequant route
+            // (the edge-coefficient requant is a second Eq. 1-style
+            // rounding — see docs/simd.md).
+            let i8c = &bank[&(name.to_string(), strategy, width, PrecisionMode::I8Compute, shards)];
+            let m = compare_logits(eager, i8c, ds.n, ds.classes);
+            let budget = i8_compute_delta_budget();
+            report.checks.push(EvalCheck {
+                name: format!("i8-compute vs int8-dequant delta ({name}/{shape}/shards{shards})"),
+                pass: budget.admits(&m),
+                detail: format!(
+                    "{} of {} rows flip vs the dequant sibling (allowed {})",
+                    m.disagreeing,
+                    m.rows,
+                    budget.allowed_disagreements(m.rows)
+                ),
+            });
         }
         // Sharding adds exactly zero — the budget-table entry for this
         // invariant (`shard_delta_budget`) is bitwise, so the check is a
@@ -775,17 +815,35 @@ mod tests {
 
     #[test]
     fn precision_modes_map_to_route_precisions() {
+        assert_eq!(PrecisionMode::ALL.len(), 4);
         assert_eq!(PrecisionMode::F32.precision(), Precision::F32);
         assert_eq!(PrecisionMode::U8Eager.precision(), Precision::U8Device);
         assert_eq!(PrecisionMode::U8Streamed.precision(), Precision::U8Device);
+        assert_eq!(PrecisionMode::I8Compute.precision(), Precision::I8Compute);
         assert!(PrecisionMode::U8Streamed.streamed());
+        assert!(PrecisionMode::I8Compute.streamed());
         assert!(!PrecisionMode::U8Eager.streamed());
         assert!(PrecisionMode::U8Eager.quantized() && !PrecisionMode::F32.quantized());
+        assert!(PrecisionMode::I8Compute.quantized());
         // fp32 rides the streaming coordinator (stage falls back to an
         // eager load for fp32); only eager INT8 uses the eager one.
         assert!(PrecisionMode::F32.streaming_coordinator());
         assert!(PrecisionMode::U8Streamed.streaming_coordinator());
+        assert!(PrecisionMode::I8Compute.streaming_coordinator());
         assert!(!PrecisionMode::U8Eager.streaming_coordinator());
+    }
+
+    #[test]
+    fn mode_budgets_match_the_budget_table() {
+        for width in [None, Some(8)] {
+            assert_eq!(PrecisionMode::F32.budget(width), budget_for(width, false));
+            assert_eq!(PrecisionMode::U8Eager.budget(width), budget_for(width, true));
+            assert_eq!(PrecisionMode::I8Compute.budget(width), i8_compute_budget(width));
+        }
+        assert!(
+            PrecisionMode::I8Compute.budget(Some(8)).max_top1_loss
+                > PrecisionMode::U8Streamed.budget(Some(8)).max_top1_loss
+        );
     }
 
     #[test]

@@ -42,7 +42,8 @@ mod metrics;
 mod oracle;
 
 pub use budget::{
-    budget_for, quant_delta_budget, shard_delta_budget, Budget, QUANT_EXTRA_TOP1_LOSS,
+    budget_for, i8_compute_budget, i8_compute_delta_budget, quant_delta_budget,
+    shard_delta_budget, Budget, I8_COMPUTE_EXTRA_TOP1_LOSS, QUANT_EXTRA_TOP1_LOSS,
     SAMPLING_TOP1_LOSS,
 };
 pub use dataset::{

@@ -57,6 +57,16 @@ pub enum KernelKind {
     EllSampled,
     /// Sampled fixed-width multiply, row-chunked across the pool.
     EllSampledPar,
+    /// Exact CSR in the quantized domain (`i8×u8→i32`), single thread.
+    CsrI8,
+    /// Exact CSR in the quantized domain, row-chunked across the pool.
+    CsrI8Par,
+    /// Sampled fixed-width multiply in the quantized domain, single
+    /// thread.
+    EllSampledI8,
+    /// Sampled fixed-width multiply in the quantized domain,
+    /// row-chunked across the pool.
+    EllSampledI8Par,
 }
 
 impl KernelKind {
@@ -68,17 +78,45 @@ impl KernelKind {
             KernelKind::CsrRowCache => "csr_rowcache",
             KernelKind::EllSampled => "ell_spmm",
             KernelKind::EllSampledPar => "ell_spmm_par",
+            KernelKind::CsrI8 => "csr_spmm_i8",
+            KernelKind::CsrI8Par => "csr_spmm_i8_par",
+            KernelKind::EllSampledI8 => "ell_spmm_i8",
+            KernelKind::EllSampledI8Par => "ell_spmm_i8_par",
         }
     }
 
     /// Whether the kernel row-chunks across the pool.
     pub fn is_parallel(self) -> bool {
-        matches!(self, KernelKind::CsrNaivePar | KernelKind::EllSampledPar)
+        matches!(
+            self,
+            KernelKind::CsrNaivePar
+                | KernelKind::EllSampledPar
+                | KernelKind::CsrI8Par
+                | KernelKind::EllSampledI8Par
+        )
     }
 
     /// Whether the kernel consumes a sampled (ELL) operand.
     pub fn is_sampled(self) -> bool {
-        matches!(self, KernelKind::EllSampled | KernelKind::EllSampledPar)
+        matches!(
+            self,
+            KernelKind::EllSampled
+                | KernelKind::EllSampledPar
+                | KernelKind::EllSampledI8
+                | KernelKind::EllSampledI8Par
+        )
+    }
+
+    /// Whether the kernel accumulates in the quantized (`i8×u8→i32`)
+    /// domain instead of fp32.
+    pub fn is_i8(self) -> bool {
+        matches!(
+            self,
+            KernelKind::CsrI8
+                | KernelKind::CsrI8Par
+                | KernelKind::EllSampledI8
+                | KernelKind::EllSampledI8Par
+        )
     }
 }
 
@@ -176,6 +214,39 @@ pub fn select_kernel(
     }
 }
 
+/// Pick a kernel for one SpMM executed in the quantized domain. Mirrors
+/// [`select_kernel`] with the flop estimate scaled by
+/// [`crate::spmm::spmm_i8_flops`]: integer MACs are ~2x cheaper per
+/// nnz, so a workload must be twice as large before the pool fork-join
+/// amortizes — [`PAR_MIN_FLOPS`] compares like units. The rowcache gate
+/// does not apply: the i8 kernels have no fp32 staging tile.
+pub fn select_kernel_i8(
+    profile: &GraphProfile,
+    feat_dim: usize,
+    width: Option<usize>,
+    env: &ExecEnv,
+) -> KernelKind {
+    match width {
+        Some(w) => {
+            let kept = profile.nnz.min(profile.n_rows.saturating_mul(w));
+            let flops = crate::spmm::spmm_i8_flops(kept, feat_dim);
+            if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+                KernelKind::EllSampledI8Par
+            } else {
+                KernelKind::EllSampledI8
+            }
+        }
+        None => {
+            let flops = crate::spmm::spmm_i8_flops(profile.nnz, feat_dim);
+            if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+                KernelKind::CsrI8Par
+            } else {
+                KernelKind::CsrI8
+            }
+        }
+    }
+}
+
 /// Execute an exact SpMM through an explicit kernel choice.
 ///
 /// Panics if `kind` is a sampled (ELL) kernel — the caller routed a CSR
@@ -202,6 +273,45 @@ pub fn run_ell(kind: KernelKind, ell: &Ell, b: &[f32], f: usize, out: &mut [f32]
         KernelKind::EllSampled => crate::spmm::ell_spmm(ell, b, f, out),
         KernelKind::EllSampledPar => crate::spmm::ell_spmm_par(ell, b, f, out, threads),
         other => panic!("{} is not a sampled ELL kernel", other.name()),
+    }
+}
+
+/// Execute an exact SpMM in the quantized domain (`qb` is the row-major
+/// u8 feature codes, `aq` the requantized adjacency).
+///
+/// Panics if `kind` is not an exact i8 kernel.
+pub fn run_exact_i8(
+    kind: KernelKind,
+    csr: &Csr,
+    aq: &crate::spmm::AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match kind {
+        KernelKind::CsrI8 => crate::spmm::csr_spmm_i8(csr, aq, qb, f, out),
+        KernelKind::CsrI8Par => crate::spmm::csr_spmm_i8_par(csr, aq, qb, f, out, threads),
+        other => panic!("{} is not an exact i8 kernel", other.name()),
+    }
+}
+
+/// Execute a sampled (ELL) SpMM in the quantized domain.
+///
+/// Panics if `kind` is not a sampled i8 kernel.
+pub fn run_ell_i8(
+    kind: KernelKind,
+    ell: &Ell,
+    aq: &crate::spmm::AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match kind {
+        KernelKind::EllSampledI8 => crate::spmm::ell_spmm_i8(ell, aq, qb, f, out),
+        KernelKind::EllSampledI8Par => crate::spmm::ell_spmm_i8_par(ell, aq, qb, f, out, threads),
+        other => panic!("{} is not a sampled i8 kernel", other.name()),
     }
 }
 
@@ -300,6 +410,68 @@ mod tests {
             select_kernel(&profile(200_000, 8_000_000), 128, Some(32), &single),
             KernelKind::EllSampled
         );
+    }
+
+    #[test]
+    fn dispatch_matrix_i8_compares_like_units() {
+        let multi = ExecEnv::with_threads(8);
+        let single = ExecEnv::with_threads(1);
+
+        // Integer MACs are ~2x cheaper, so a workload that just crosses
+        // the fp32 parallel threshold (2·nnz·f = 2.56 M flops) stays
+        // serial in the i8 domain…
+        let p = profile(100_000, 20_000);
+        assert_eq!(select_kernel(&p, 64, None, &multi), KernelKind::CsrNaivePar);
+        assert_eq!(select_kernel_i8(&p, 64, None, &multi), KernelKind::CsrI8);
+        // …and twice that workload forks in both domains.
+        let p2 = profile(100_000, 40_000);
+        assert_eq!(select_kernel_i8(&p2, 64, None, &multi), KernelKind::CsrI8Par);
+
+        // Sampled routes always land on an ELL i8 kernel, same width cap.
+        assert_eq!(select_kernel_i8(&profile(100, 400), 8, Some(32), &multi), KernelKind::EllSampledI8);
+        assert_eq!(
+            select_kernel_i8(&profile(200_000, 8_000_000), 128, Some(32), &multi),
+            KernelKind::EllSampledI8Par
+        );
+        assert_eq!(
+            select_kernel_i8(&profile(200_000, 8_000_000), 128, Some(32), &single),
+            KernelKind::EllSampledI8
+        );
+        for kind in [
+            KernelKind::CsrI8,
+            KernelKind::CsrI8Par,
+            KernelKind::EllSampledI8,
+            KernelKind::EllSampledI8Par,
+        ] {
+            assert!(kind.is_i8());
+        }
+        assert!(!KernelKind::CsrRowCache.is_i8());
+    }
+
+    #[test]
+    fn dispatched_i8_execution_matches_direct_kernels() {
+        use crate::quant::ChunkedParams;
+        let (g, b) = random_graph_and_features(200, 15.0, 12, 23);
+        let params = ChunkedParams::of_rows(&b, 200, 12, 64);
+        let qb = params.quantize_rows(&b, 12);
+        let ell = crate::sampling::sample_ell(&g, 8, crate::sampling::Strategy::Aes);
+        let aq = crate::spmm::AdjQuant::from_ell(&ell, &params);
+        let mut want = vec![0.0f32; 200 * 12];
+        crate::spmm::ell_spmm_i8(&ell, &aq, &qb, 12, &mut want);
+        for env in [ExecEnv::with_threads(1), ExecEnv::with_threads(4)] {
+            let kind = select_kernel_i8(&GraphProfile::of_ell(&ell), 12, Some(8), &env);
+            let mut got = vec![0.0f32; 200 * 12];
+            run_ell_i8(kind, &ell, &aq, &qb, 12, &mut got, env.threads);
+            assert_eq!(want, got, "i8 dispatch must not change a bit");
+        }
+        let caq = crate::spmm::AdjQuant::from_csr(&g, &params);
+        let mut cwant = vec![0.0f32; 200 * 12];
+        crate::spmm::csr_spmm_i8(&g, &caq, &qb, 12, &mut cwant);
+        let env = ExecEnv::with_threads(4);
+        let kind = select_kernel_i8(&GraphProfile::of(&g), 12, None, &env);
+        let mut cgot = vec![0.0f32; 200 * 12];
+        run_exact_i8(kind, &g, &caq, &qb, 12, &mut cgot, env.threads);
+        assert_eq!(cwant, cgot);
     }
 
     #[test]

@@ -36,10 +36,11 @@ mod prefetch;
 mod sharded;
 
 pub use dispatch::{
-    run_ell, run_exact, select_kernel, spmm_ell, spmm_exact, warm_pool, ExecEnv, GraphProfile,
-    KernelKind, PAR_MIN_FLOPS, ROWCACHE_MAX_ROW_NNZ, ROWCACHE_MIN_FEAT, ROWCACHE_MIN_MEAN_NNZ,
+    run_ell, run_ell_i8, run_exact, run_exact_i8, select_kernel, select_kernel_i8, spmm_ell,
+    spmm_exact, warm_pool, ExecEnv, GraphProfile, KernelKind, PAR_MIN_FLOPS, ROWCACHE_MAX_ROW_NNZ,
+    ROWCACHE_MIN_FEAT, ROWCACHE_MIN_MEAN_NNZ,
 };
-pub use plan_cache::{prepare_plan, ExecPlan, PlanCache, PlanSpec};
+pub use plan_cache::{prepare_plan, AdjQuantPlan, ExecPlan, PlanCache, PlanSpec};
 pub use pool::{global as global_pool, Pool};
 pub use prefetch::{PrefetchStats, PrefetchTicket, Prefetcher};
 pub use sharded::{ShardCacheRef, ShardKey, ShardLayout, ShardSampling, ShardUnit, ShardedPlan};

@@ -32,10 +32,11 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::graph::{Csr, Ell, ShardSpec};
-use crate::quant::{FeatureStore, Features, LoadStats, Precision};
+use crate::quant::{ChunkedParams, FeatureStore, Features, LoadStats, Precision};
 use crate::sampling::{sample_ell_par, Strategy};
+use crate::spmm::AdjQuant;
 
-use super::dispatch::{select_kernel, ExecEnv, GraphProfile, KernelKind};
+use super::dispatch::{select_kernel, select_kernel_i8, ExecEnv, GraphProfile, KernelKind};
 use super::sharded::{ShardCacheRef, ShardedPlan};
 
 /// Everything per-route that the hot path should not rebuild per batch.
@@ -63,6 +64,25 @@ pub struct ExecPlan {
     /// `ell` is `None` and `profile`/`kernel` describe the unsharded
     /// operand (observability only — execution dispatches per shard).
     pub sharded: Option<Arc<ShardedPlan>>,
+    /// Requantized adjacency for true-INT8-compute routes
+    /// ([`Precision::I8Compute`]): the [`AdjQuant`] operands the
+    /// `i8×u8→i32` kernels consume, built once here from the staged
+    /// features' chunk ranges. `None` at every other precision — and
+    /// when the staged features carry no codes (dense-only container),
+    /// in which case the executor falls back to fp32 aggregation.
+    pub adj: Option<Arc<AdjQuantPlan>>,
+}
+
+/// Requantized adjacency operands for one i8-compute route — parallel
+/// to the plan's execution structure: a single entry for unsharded
+/// plans (over the sampled ELL when present, else the exact CSR), one
+/// entry per [`super::ShardUnit`] in unit order for sharded plans.
+/// Depends only on the adjacency and the feature chunk ranges, so it is
+/// built at plan-preparation time and reused across batches.
+#[derive(Clone, Debug)]
+pub struct AdjQuantPlan {
+    /// Per-unit requantized adjacencies, in unit (row) order.
+    pub units: Vec<AdjQuant>,
 }
 
 /// What to prepare for a route.
@@ -143,8 +163,45 @@ pub fn prepare_plan(
         }
         _ => (GraphProfile::of(spec.csr), None, None),
     };
-    let kernel = select_kernel(&profile, feat_dim, spec.width, env);
-    Ok(ExecPlan { features, load_stats, profile, kernel, ell, sharded })
+    let adj = if precision == Precision::I8Compute && spec.host_ell {
+        i8_chunk_params(&features, spec.csr.n_cols).map(|params| {
+            let units = match (&sharded, &ell) {
+                (Some(sh), _) => sh
+                    .units()
+                    .iter()
+                    .map(|u| match &u.ell {
+                        Some(e) => AdjQuant::from_ell(e, &params),
+                        None => AdjQuant::from_csr(&u.csr, &params),
+                    })
+                    .collect(),
+                (None, Some(e)) => vec![AdjQuant::from_ell(e, &params)],
+                (None, None) => vec![AdjQuant::from_csr(spec.csr, &params)],
+            };
+            Arc::new(AdjQuantPlan { units })
+        })
+    } else {
+        None
+    };
+    let kernel = match &adj {
+        Some(_) => select_kernel_i8(&profile, feat_dim, spec.width, env),
+        None => select_kernel(&profile, feat_dim, spec.width, env),
+    };
+    Ok(ExecPlan { features, load_stats, profile, kernel, ell, sharded, adj })
+}
+
+/// The per-chunk feature ranges an i8-compute route folds into its
+/// [`AdjQuant`] — available whenever the staged representation still
+/// carries u8 codes. A dense-only representation has nothing to fold,
+/// so the route degrades to fp32 aggregation (`None`).
+fn i8_chunk_params(features: &Features, n_nodes: usize) -> Option<ChunkedParams> {
+    match features {
+        Features::Streamed(h) => Some(h.params().clone()),
+        Features::Quantized { q, params } => {
+            let rows = q.shape.first().copied().unwrap_or(n_nodes);
+            Some(ChunkedParams::uniform(rows, *params))
+        }
+        Features::Dense(_) => None,
+    }
 }
 
 struct Entry<V> {
@@ -692,6 +749,60 @@ mod tests {
         // fp32 never streams — the fallback keeps the old contract.
         let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
         assert!(matches!(plan.features, Features::Dense(_)));
+    }
+
+    #[test]
+    fn i8_compute_plan_carries_requantized_adjacency() {
+        let (_path, store, csr) = synthetic_store("i8plan");
+        let env = ExecEnv::with_threads(2);
+        let spec = PlanSpec {
+            csr: &csr,
+            width: Some(4),
+            strategy: Strategy::Aes,
+            host_ell: true,
+            stream: true,
+            shard: None,
+            shard_bounds: None,
+            shard_cache: None,
+        };
+        let plan = prepare_plan(&store, Precision::I8Compute, &spec, 8, &env).unwrap();
+        let adj = plan.adj.expect("i8-compute host plan must build AdjQuant");
+        assert_eq!(adj.units.len(), 1, "unsharded plan carries one operand");
+        assert_eq!(adj.units[0].row_scale.len(), csr.n_rows);
+        assert!(plan.kernel.is_i8(), "observed kernel is from the i8 family");
+
+        // Sharded route: one operand per shard unit, row-aligned.
+        let spec = PlanSpec {
+            csr: &csr,
+            width: Some(4),
+            strategy: Strategy::Aes,
+            host_ell: true,
+            stream: true,
+            shard: Some(ShardSpec::by_count(3)),
+            shard_bounds: None,
+            shard_cache: None,
+        };
+        let plan = prepare_plan(&store, Precision::I8Compute, &spec, 8, &env).unwrap();
+        let sharded = plan.sharded.expect("sharded requested");
+        let adj = plan.adj.expect("sharded i8 plan builds per-unit operands");
+        assert_eq!(adj.units.len(), sharded.shard_count());
+        for (u, aq) in sharded.units().iter().zip(adj.units.iter()) {
+            assert_eq!(aq.row_scale.len(), u.rows.len());
+        }
+
+        // Every other precision leaves the field empty.
+        let spec = PlanSpec {
+            csr: &csr,
+            width: Some(4),
+            strategy: Strategy::Aes,
+            host_ell: true,
+            stream: false,
+            shard: None,
+            shard_bounds: None,
+            shard_cache: None,
+        };
+        let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
+        assert!(plan.adj.is_none());
     }
 
     #[test]

@@ -40,10 +40,13 @@ use std::ops::Range;
 use std::sync::Arc;
 
 use crate::graph::{working_set_bytes, Csr, Ell, GraphShard, ShardPlan, ShardSpec};
-use crate::sampling::{sample_ell, shard_width, Strategy};
+use crate::sampling::{sample_ell, shard_width, Strategy, FP32_EDGE_BYTES};
 
-use super::dispatch::{run_ell, run_exact, select_kernel, ExecEnv, GraphProfile, KernelKind};
-use super::plan_cache::PlanCache;
+use super::dispatch::{
+    run_ell, run_ell_i8, run_exact, run_exact_i8, select_kernel, select_kernel_i8, ExecEnv,
+    GraphProfile, KernelKind,
+};
+use super::plan_cache::{AdjQuantPlan, PlanCache};
 use super::pool;
 
 /// Borrowed handle to the shared shard-unit cache, plus the identity of
@@ -273,7 +276,10 @@ fn build_unit(
         None => (None, ShardSampling::Exact),
         Some(w) => {
             let max_deg = shard.csr.max_degree();
-            let local = shard_width(w, max_deg);
+            // Always the fp32 edge budget: units are shared across
+            // precision siblings, so the tile decision must not depend
+            // on the route's precision (see `sampling::shard_width`).
+            let local = shard_width(w, max_deg, FP32_EDGE_BYTES);
             let sampling = if max_deg <= local {
                 ShardSampling::Exhaustive { width: local }
             } else {
@@ -461,6 +467,51 @@ impl ShardedPlan {
         }
         pool::global().run(tasks);
     }
+
+    /// [`ShardedPlan::run`] in the quantized domain: every unit runs its
+    /// `i8×u8→i32` kernel over the matching [`AdjQuantPlan`] entry and
+    /// the shared u8 feature codes, writing its disjoint row slice.
+    /// Integer accumulation is exact, so the row-concatenation merge is
+    /// bitwise-identical to the unsharded i8 kernels by construction.
+    pub fn run_i8(
+        &self,
+        adj: &AdjQuantPlan,
+        qb: &[u8],
+        f: usize,
+        out: &mut [f32],
+        env: &ExecEnv,
+    ) {
+        assert_eq!(qb.len(), self.n_cols * f);
+        assert_eq!(out.len(), self.n_rows * f);
+        assert_eq!(
+            adj.units.len(),
+            self.units.len(),
+            "AdjQuantPlan must carry one operand per shard unit"
+        );
+        if let ([unit], [aq]) = (self.units.as_slice(), adj.units.as_slice()) {
+            let kind = select_kernel_i8(&unit.profile, f, unit.sampling.width(), env);
+            match &unit.ell {
+                Some(e) => run_ell_i8(kind, e, aq, qb, f, out, env.threads),
+                None => run_exact_i8(kind, &unit.csr, aq, qb, f, out, env.threads),
+            }
+            return;
+        }
+        let serial = ExecEnv::with_threads(1);
+        let mut rest = out;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(self.units.len());
+        for (unit, aq) in self.units.iter().zip(adj.units.iter()) {
+            let (chunk, tail) = rest.split_at_mut(unit.rows.len() * f);
+            rest = tail;
+            tasks.push(Box::new(move || {
+                let kind = select_kernel_i8(&unit.profile, f, unit.sampling.width(), &serial);
+                match &unit.ell {
+                    Some(e) => run_ell_i8(kind, e, aq, qb, f, chunk, 1),
+                    None => run_exact_i8(kind, &unit.csr, aq, qb, f, chunk, 1),
+                }
+            }));
+        }
+        pool::global().run(tasks);
+    }
 }
 
 #[cfg(test)]
@@ -509,6 +560,55 @@ mod tests {
                 let mut got = vec![0.0f32; g.n_rows * 8];
                 plan.run(&b, 8, &mut got, &env);
                 assert_eq!(want, got, "sampled sharded run (w={w}, {strat:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_i8_run_is_bitwise_equal_to_unsharded() {
+        // AdjQuant rows depend only on that row's (val, col) segment and
+        // the feature chunk ranges, and integer accumulation is exact,
+        // so per-shard requantization + row concatenation reproduces the
+        // unsharded i8 kernels bit-for-bit.
+        let (g, b) = random_graph_and_features(300, 30.0, 8, 11);
+        let params = crate::quant::ChunkedParams::of_rows(&b, 300, 8, 50);
+        let qb = params.quantize_rows(&b, 8);
+        let env = ExecEnv::with_threads(4);
+        for width in [None, Some(8usize)] {
+            let mut want = vec![0.0f32; g.n_rows * 8];
+            match width {
+                Some(w) => {
+                    let ell = sample_ell(&g, w, Strategy::Aes);
+                    let aq = crate::spmm::AdjQuant::from_ell(&ell, &params);
+                    crate::spmm::ell_spmm_i8(&ell, &aq, &qb, 8, &mut want);
+                }
+                None => {
+                    let aq = crate::spmm::AdjQuant::from_csr(&g, &params);
+                    crate::spmm::csr_spmm_i8(&g, &aq, &qb, 8, &mut want);
+                }
+            }
+            for k in [1usize, 3, 5] {
+                let plan = ShardedPlan::prepare(
+                    &g,
+                    &ShardSpec::by_count(k),
+                    width,
+                    Strategy::Aes,
+                    8,
+                    None,
+                );
+                let adj = AdjQuantPlan {
+                    units: plan
+                        .units()
+                        .iter()
+                        .map(|u| match &u.ell {
+                            Some(e) => crate::spmm::AdjQuant::from_ell(e, &params),
+                            None => crate::spmm::AdjQuant::from_csr(&u.csr, &params),
+                        })
+                        .collect(),
+                };
+                let mut got = vec![7.0f32; g.n_rows * 8];
+                plan.run_i8(&adj, &qb, 8, &mut got, &env);
+                assert_eq!(want, got, "i8 sharded run (width={width:?}, k={k})");
             }
         }
     }

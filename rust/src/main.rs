@@ -105,7 +105,9 @@ USAGE:
   repro gen-data   [--nodes N] [--avg-deg D] [--gamma G] [--seed S]
 
 Serving precision defaults to INT8 (--fp32 opts into the baseline;
---precision f32|u8-device|u8-host picks one explicitly on `infer`).
+--precision f32|u8-device|u8-host|i8-compute picks one explicitly on
+`infer`; i8-compute aggregates the codes in integer arithmetic on the
+host backend — docs/simd.md).
 `eval` needs no artifacts: it runs the accuracy-conformance grid
 (strategy x width x precision x shards) on seeded synthetic datasets
 through the host serving path, scores every configuration against the
@@ -208,7 +210,9 @@ fn cmd_infer(artifacts: &str, args: &Args) -> Result<()> {
                 bail!("--precision conflicts with --fp32/--quant");
             }
             Precision::from_name(p)
-                .with_context(|| format!("--precision must be f32|u8-device|u8-host, got {p:?}"))?
+                .with_context(|| {
+                    format!("--precision must be f32|u8-device|u8-host|i8-compute, got {p:?}")
+                })?
         }
         None if args.has("fp32") => Precision::F32,
         None => Precision::default(),

@@ -50,6 +50,10 @@ pub enum Precision {
     U8Device,
     /// INT8 features, dequantized on the host (CPU baseline path).
     U8Host,
+    /// True INT8 compute: the u8 codes feed the integer-accumulating
+    /// SpMM kernels directly (`crate::spmm::ell_spmm_i8`) — no fp32
+    /// feature block ever materializes on the aggregation path.
+    I8Compute,
 }
 
 impl Precision {
@@ -59,6 +63,7 @@ impl Precision {
             Precision::F32 => "f32",
             Precision::U8Device => "u8-device",
             Precision::U8Host => "u8-host",
+            Precision::I8Compute => "i8-compute",
         }
     }
 
@@ -68,6 +73,7 @@ impl Precision {
             "f32" => Some(Precision::F32),
             "u8-device" => Some(Precision::U8Device),
             "u8-host" => Some(Precision::U8Host),
+            "i8-compute" => Some(Precision::I8Compute),
             _ => None,
         }
     }
@@ -459,13 +465,16 @@ impl FeatureStore {
 
         let feats = match precision {
             Precision::F32 => Features::Dense(tensor),
-            Precision::U8Device if snap.chunked.n_chunks() <= 1 => {
+            Precision::U8Device | Precision::I8Compute if snap.chunked.n_chunks() <= 1 => {
                 Features::Quantized { q: tensor, params: snap.params }
             }
-            // U8Host — and U8Device over a chunk-encoded payload, which
-            // has no single-range u8 form a device kernel could decode —
-            // dequantize host-side with the ranges the payload was
-            // actually encoded with.
+            // U8Host — and U8Device/I8Compute over a chunk-encoded
+            // payload, which has no single-range u8 form a single-range
+            // consumer could decode — dequantize host-side with the
+            // ranges the payload was actually encoded with. (I8Compute
+            // then degrades to the fp32 aggregation path; the streaming
+            // stage keeps the codes + per-chunk ranges together, which
+            // is why i8-compute serving prefers `stage`.)
             _ => {
                 let t1 = Instant::now();
                 let q = tensor.as_u8()?;
@@ -570,7 +579,12 @@ mod tests {
 
     #[test]
     fn precision_names_roundtrip() {
-        for p in [Precision::F32, Precision::U8Device, Precision::U8Host] {
+        for p in [
+            Precision::F32,
+            Precision::U8Device,
+            Precision::U8Host,
+            Precision::I8Compute,
+        ] {
             assert_eq!(Precision::from_name(p.name()), Some(p));
         }
         assert_eq!(Precision::from_name("int8"), None);

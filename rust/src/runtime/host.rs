@@ -23,12 +23,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::exec::{
-    run_ell, run_exact, select_kernel, ExecEnv, ExecPlan, GraphProfile, ShardedPlan,
-    PAR_MIN_FLOPS,
+    run_ell, run_ell_i8, run_exact, run_exact_i8, select_kernel, select_kernel_i8, AdjQuantPlan,
+    ExecEnv, ExecPlan, GraphProfile, ShardedPlan, PAR_MIN_FLOPS,
 };
 use crate::graph::Ell;
-use crate::quant::{dequantize, FeatureHandle, Features, Precision};
+use crate::quant::{dequantize, ChunkedParams, FeatureHandle, Features, Precision};
 use crate::sampling::sample_ell_par;
+use crate::spmm::AdjQuant;
 use crate::tensor::{DType, Tensor};
 
 use super::dataset::{Dataset, Weights};
@@ -224,6 +225,34 @@ pub fn host_forward(
         },
         _ => None,
     };
+    // True INT8 compute ([`Precision::I8Compute`]): layer 1 feeds the u8
+    // codes straight into the `i8×u8→i32` kernels (aggregate-first:
+    // `Â ×_i8 X`, then the dense W0), so no fp32 feature block is ever
+    // staged. Codes come zero-copy from the plan's streamed handle, from
+    // the coordinator's u8 override, or from the dataset's own `featq`
+    // for plan-less callers; a dense-only representation (no codes, or a
+    // plan without an [`AdjQuantPlan`]) falls back to the fp32 path.
+    let i8_codes: Option<&[u8]> = if matches!(req.precision, Precision::I8Compute) {
+        match (plan, streamed, features) {
+            (Some(p), Some(h), _) if p.adj.is_some() => Some(h.quantized_rows(0, h.n_rows())),
+            (Some(p), None, Some(t)) if p.adj.is_some() && t.dtype == DType::U8 => {
+                Some(t.as_u8()?)
+            }
+            (Some(p), None, None) => match (&p.adj, &p.features) {
+                (Some(_), Features::Quantized { q, .. }) => Some(q.as_u8()?),
+                _ => None,
+            },
+            (None, _, None) if ds.featq.dtype == DType::U8 => Some(ds.featq.as_u8()?),
+            _ => None,
+        }
+    } else {
+        None
+    };
+    if let Some(qb) = i8_codes {
+        if qb.len() != ds.n * ds.feats {
+            bail!("quantized payload has {} codes, dataset needs {}", qb.len(), ds.n * ds.feats);
+        }
+    }
     let dequantized;
     let x: &[f32] = match (streamed, features) {
         (Some(h), _) => {
@@ -238,6 +267,8 @@ pub fn host_forward(
             }
             &[]
         }
+        // Codes route: layer 1 never touches fp32 features.
+        _ if i8_codes.is_some() => &[],
         (None, None) => ds.feat.as_f32()?,
         (None, Some(t)) if t.dtype == DType::F32 => t.as_f32()?,
         (None, Some(t)) if t.dtype == DType::U8 => {
@@ -246,7 +277,7 @@ pub fn host_forward(
         }
         (None, Some(t)) => bail!("unsupported feature dtype {:?} for the host backend", t.dtype),
     };
-    if streamed.is_none() && x.len() != ds.n * ds.feats {
+    if streamed.is_none() && i8_codes.is_none() && x.len() != ds.n * ds.feats {
         bail!("feature tensor has {} values, dataset needs {}", x.len(), ds.n * ds.feats);
     }
     let transfer = t0.elapsed();
@@ -270,6 +301,24 @@ pub fn host_forward(
         }
     };
     let width = ell.map(|e| e.width);
+    // i8 operand: the plan's cached [`AdjQuantPlan`]; plan-less callers
+    // requantize here against the dataset's global Eq. 2 range — one
+    // pass over the adjacency, the same cost class as the sampling pass
+    // above.
+    let local_adj;
+    let i8_adj: Option<&AdjQuantPlan> = match (i8_codes, plan) {
+        (Some(_), Some(p)) => p.adj.as_deref(),
+        (Some(_), None) => {
+            let params = ChunkedParams::uniform(ds.n, ds.qparams);
+            let aq = match ell {
+                Some(e) => AdjQuant::from_ell(e, &params),
+                None => AdjQuant::from_csr(&ds.csr_gcn, &params),
+            };
+            local_adj = AdjQuantPlan { units: vec![aq] };
+            Some(&local_adj)
+        }
+        (None, _) => None,
+    };
     let aggregate = |b: &[f32], f_dim: usize, out: &mut [f32]| {
         // Sharded route: independent per-shard tasks, per-shard dispatch,
         // row-concatenation merge.
@@ -298,14 +347,38 @@ pub fn host_forward(
     }
 
     // Layer 1: agg(X W0) + b0, ReLU. Streamed routes dequantize X lazily
-    // per row-block inside the multiply's pool tasks.
-    let xw = match (streamed, &shard_bounds) {
-        (Some(fh), bounds) => matmul_streamed(fh, w0, n, f, h, env, bounds.as_deref()),
-        (None, Some(bounds)) => matmul_sharded(x, w0, n, f, h, bounds, env),
-        (None, None) => matmul(x, w0, n, f, h, env),
+    // per row-block inside the multiply's pool tasks. i8-compute routes
+    // flip the order — `(Â ×_i8 X) W0` — so the integer kernels see the
+    // raw codes; the two orders compute the same `Â X W0` product, and
+    // the flip's FP effect is covered by the mode's accuracy budget
+    // (`crate::eval::i8_compute_budget`).
+    let mut hidden = if let (Some(qb), Some(adj)) = (i8_codes, i8_adj) {
+        let mut agg_x = vec![0.0f32; n * f];
+        if let Some(sp) = sharded {
+            sp.run_i8(adj, qb, f, &mut agg_x, env);
+        } else {
+            // Unsharded plans (and the local fallback) carry one operand.
+            let aq = &adj.units[0];
+            let kind = select_kernel_i8(&profile, f, width, env);
+            match ell {
+                Some(e) => run_ell_i8(kind, e, aq, qb, f, &mut agg_x, env.threads),
+                None => run_exact_i8(kind, &ds.csr_gcn, aq, qb, f, &mut agg_x, env.threads),
+            }
+        }
+        match &shard_bounds {
+            Some(bounds) => matmul_sharded(&agg_x, w0, n, f, h, bounds, env),
+            None => matmul(&agg_x, w0, n, f, h, env),
+        }
+    } else {
+        let xw = match (streamed, &shard_bounds) {
+            (Some(fh), bounds) => matmul_streamed(fh, w0, n, f, h, env, bounds.as_deref()),
+            (None, Some(bounds)) => matmul_sharded(x, w0, n, f, h, bounds, env),
+            (None, None) => matmul(x, w0, n, f, h, env),
+        };
+        let mut agg = vec![0.0f32; n * h];
+        aggregate(&xw, h, &mut agg);
+        agg
     };
-    let mut hidden = vec![0.0f32; n * h];
-    aggregate(&xw, h, &mut hidden);
     for i in 0..n {
         for j in 0..h {
             hidden[i * h + j] = (hidden[i * h + j] + b0[j]).max(0.0);
@@ -333,10 +406,14 @@ pub fn host_forward(
 }
 
 /// Does this request's precision produce a dense-f32-compatible host
-/// path? (All current precisions do: u8 dequantizes host-side.)
+/// path? (All current precisions do: u8 dequantizes host-side, and
+/// i8-compute consumes the codes directly in the integer kernels.)
 pub fn host_supports(req: &ForwardRequest) -> bool {
     req.model == "gcn"
-        && matches!(req.precision, Precision::F32 | Precision::U8Device | Precision::U8Host)
+        && matches!(
+            req.precision,
+            Precision::F32 | Precision::U8Device | Precision::U8Host | Precision::I8Compute
+        )
 }
 
 #[cfg(test)]

@@ -30,7 +30,10 @@ impl ForwardRequest {
             (Some(w), Precision::F32) | (Some(w), Precision::U8Host) => {
                 artifact_key(ArtifactKind::Sampled, &self.model, &self.dataset, w)
             }
-            (Some(w), Precision::U8Device) => {
+            // i8-compute shares the quantized artifact family (same
+            // INT8 payload); only the host backend actually runs it —
+            // see the guard in [`run_forward`].
+            (Some(w), Precision::U8Device) | (Some(w), Precision::I8Compute) => {
                 artifact_key(ArtifactKind::Quantized, &self.model, &self.dataset, w)
             }
         }
@@ -58,6 +61,11 @@ pub fn run_forward(
 ) -> Result<ForwardResult> {
     use crate::runtime::Arg;
 
+    if matches!(req.precision, Precision::I8Compute) {
+        // No compiled artifact performs integer accumulation; the
+        // precision exists for the host backend's i8×u8→i32 kernels.
+        bail!("i8-compute is a host-backend precision; device artifacts dequantize in-kernel");
+    }
     let name = req.artifact_name();
     let row_ptr = Tensor::from_i32(&[ds.n + 1], &ds.csr_gcn.row_ptr);
     let col_ind = Tensor::from_i32(&[ds.nnz], &ds.csr_gcn.col_ind);
@@ -165,6 +173,8 @@ mod tests {
         };
         assert_eq!(req.artifact_name(), "model_gcn_cora_w64");
         req.precision = Precision::U8Device;
+        assert_eq!(req.artifact_name(), "qmodel_gcn_cora_w64");
+        req.precision = Precision::I8Compute;
         assert_eq!(req.artifact_name(), "qmodel_gcn_cora_w64");
         req.width = None;
         assert_eq!(req.artifact_name(), "baseline_gcn_cora");

@@ -32,5 +32,6 @@ mod strategy;
 
 pub use plan::{
     plan_row, sample_ell, sample_ell_par, sampling_rate, sampling_rate_cdf, shard_width,
+    FP32_EDGE_BYTES, I8_EDGE_BYTES,
 };
 pub use strategy::{start_index, strategy_params, RowPlan, Strategy, PRIME};

@@ -131,16 +131,40 @@ pub fn sample_ell_par(csr: &Csr, width: usize, strategy: Strategy, ell: &mut Ell
     crate::exec::global_pool().run(tasks);
 }
 
+/// Bytes one resident ELL slot costs with fp32 edge values: an `i32`
+/// column index plus an `f32` coefficient. The global width W is
+/// budgeted in these units, so passing this constant to [`shard_width`]
+/// reproduces the original fp32 tile decision exactly.
+pub const FP32_EDGE_BYTES: usize = 8;
+
+/// Bytes one resident ELL slot costs on the true-INT8-compute path: an
+/// `i32` column index plus an `i8` requantized coefficient
+/// (`crate::spmm::AdjQuant` stores `qa: Vec<i8>`; the per-row scale and
+/// base amortize to nothing across a tile).
+pub const I8_EDGE_BYTES: usize = 5;
+
 /// Shard-local ELL tile width — the shard analog of the paper's
-/// shared-memory width W. A shard whose longest row fits the global
-/// width keeps **every** edge regardless of strategy (Table 1's
+/// shared-memory width W. A shard whose longest row fits the byte
+/// budget keeps **every** edge regardless of strategy (Table 1's
 /// `row_nnz <= W` fast path), so its tile can shrink to the power of
 /// two covering its max degree: less padding memory, bit-identical
 /// output. A shard with overflowing rows keeps the full global width so
 /// its sampled rows match the unsharded plan exactly.
-pub fn shard_width(width: usize, shard_max_degree: usize) -> usize {
-    if shard_max_degree <= width {
-        shard_max_degree.next_power_of_two().clamp(1, width.max(1))
+///
+/// The budget is `width` slots **at fp32 edge cost**
+/// ([`FP32_EDGE_BYTES`]): with `bytes_per_edge = FP32_EDGE_BYTES` the
+/// exhaustive cap is exactly `width`, preserving the original decision
+/// bit for bit. Lighter edges widen the exhaustive window — at
+/// [`I8_EDGE_BYTES`] a shard whose max degree is up to `width * 8 / 5`
+/// still fits the same memory and keeps every edge instead of
+/// sampling. The serving path always passes [`FP32_EDGE_BYTES`]:
+/// shard units are shared across precision siblings (one build warms
+/// every route), so the tile decision must not depend on precision.
+/// The i8 budget is for i8-only deployments that size their own plans.
+pub fn shard_width(width: usize, shard_max_degree: usize, bytes_per_edge: usize) -> usize {
+    let cap = (width.max(1) * FP32_EDGE_BYTES / bytes_per_edge.max(1)).max(1);
+    if shard_max_degree <= cap {
+        shard_max_degree.next_power_of_two().clamp(1, cap)
     } else {
         width
     }
@@ -271,38 +295,40 @@ mod tests {
     #[test]
     fn shard_width_flips_branches_as_mutation_moves_max_degree() {
         let w = 8usize;
+        let fp = FP32_EDGE_BYTES;
         // Uniform shard (max degree 3): exhaustive shrunken tile.
-        assert_eq!(shard_width(w, 3), 4);
+        assert_eq!(shard_width(w, 3, fp), 4);
         // A delta grows some row to degree 15: the re-evaluated tile
         // must be the full W (the sampled branch).
-        assert_eq!(shard_width(w, 15), w);
+        assert_eq!(shard_width(w, 15, fp), w);
         // Deleting edges back below W flips it to exhaustive again.
-        assert_eq!(shard_width(w, 6), 8);
-        assert_eq!(shard_width(w, 2), 2);
+        assert_eq!(shard_width(w, 6, fp), 8);
+        assert_eq!(shard_width(w, 2, fp), 2);
         // The boundary itself: max degree == W stays exhaustive; one
         // past it samples.
-        assert_eq!(shard_width(w, w), w);
-        assert_eq!(shard_width(w, w + 1), w);
-        assert!(w >= shard_width(w, w), "tiles never exceed W");
+        assert_eq!(shard_width(w, w, fp), w);
+        assert_eq!(shard_width(w, w + 1, fp), w);
+        assert!(w >= shard_width(w, w, fp), "fp32 tiles never exceed W");
     }
 
     #[test]
     fn shard_width_shrinks_only_when_everything_fits() {
+        let fp = FP32_EDGE_BYTES;
         // Uniform shard: max degree 5 under W=16 → tile 8, exhaustive.
-        assert_eq!(shard_width(16, 5), 8);
-        assert_eq!(shard_width(16, 16), 16);
-        assert_eq!(shard_width(16, 1), 1);
+        assert_eq!(shard_width(16, 5, fp), 8);
+        assert_eq!(shard_width(16, 16, fp), 16);
+        assert_eq!(shard_width(16, 1, fp), 1);
         // Empty shard clamps to a 1-wide (all-padding) tile.
-        assert_eq!(shard_width(16, 0), 1);
+        assert_eq!(shard_width(16, 0, fp), 1);
         // Skewed shard: rows overflow → keep the global width verbatim.
-        assert_eq!(shard_width(16, 17), 16);
-        assert_eq!(shard_width(16, 40_000), 16);
+        assert_eq!(shard_width(16, 17, fp), 16);
+        assert_eq!(shard_width(16, 40_000, fp), 16);
         // Shrunken tiles still keep every edge (row_nnz <= width holds
         // for all rows), so sampled output is bit-identical.
         let mut rng = Pcg32::new(33);
         let csr = gen::chung_lu(200, 5.0, 2.0, &mut rng);
         let wmax = csr.max_degree();
-        let local = shard_width(4 * wmax.max(1), wmax);
+        let local = shard_width(4 * wmax.max(1), wmax, fp);
         assert!(local >= wmax);
         let full = sample_ell(&csr, 4 * wmax.max(1), Strategy::Aes);
         let narrow = sample_ell(&csr, local, Strategy::Aes);
@@ -314,6 +340,37 @@ mod tests {
                 &narrow.val[i * narrow.width..i * narrow.width + s]
             );
         }
+    }
+
+    /// The byte-budget contract: fp32 edge cost reproduces the original
+    /// decision exactly, while the lighter i8 edges widen the
+    /// exhaustive window to `W * 8 / 5` within the same memory.
+    #[test]
+    fn shard_width_budgets_like_units_per_edge_encoding() {
+        // With fp32 edges the cap is W itself, for every W.
+        for w in [1usize, 4, 8, 16, 64] {
+            for d in [0usize, 1, w / 2 + 1, w, w + 1, 3 * w] {
+                let got = shard_width(w, d, FP32_EDGE_BYTES);
+                let want = if d <= w {
+                    d.next_power_of_two().clamp(1, w)
+                } else {
+                    w
+                };
+                assert_eq!(got, want, "W={w} d={d}");
+            }
+        }
+        // i8 edges: W=16 slots of 8 bytes buy 25 slots of 5 bytes, so
+        // max degree 17..=25 stays exhaustive instead of sampling (the
+        // pow2 rounding clamps to the 25-slot byte budget).
+        assert_eq!(shard_width(16, 17, I8_EDGE_BYTES), 25);
+        assert_eq!(shard_width(16, 25, I8_EDGE_BYTES), 25);
+        // Inside the pow2 range the tile stays a power of two.
+        assert_eq!(shard_width(16, 9, I8_EDGE_BYTES), 16);
+        // Past the byte budget the sampled branch keeps the global W.
+        assert_eq!(shard_width(16, 26, I8_EDGE_BYTES), 16);
+        // Small shards shrink the same way in both encodings.
+        assert_eq!(shard_width(16, 5, I8_EDGE_BYTES), 8);
+        assert_eq!(shard_width(16, 0, I8_EDGE_BYTES), 1);
     }
 
     #[test]

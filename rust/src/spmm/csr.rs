@@ -1,17 +1,34 @@
 //! Exact CSR SpMM kernels (no sampling, no accuracy loss).
 
 use crate::graph::Csr;
+use crate::spmm::simd::{self, SimdLevel};
 
 /// Straightforward CSR SpMM — the cuSPARSE-role baseline.
 ///
 /// One pass per row; inner loop over nonzeros, fanning out across the
 /// feature dimension. `out` must be `n_rows * f`, zeroed by the callee.
+/// Deliberately scalar on every machine: this is the canonical FP
+/// reduction order the eval oracle and the SIMD arms are measured
+/// against.
 pub fn csr_naive(csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
     assert_eq!(b.len(), csr.n_cols * f);
     assert_eq!(out.len(), csr.n_rows * f);
     out.fill(0.0);
-    for i in 0..csr.n_rows {
-        let row_out = &mut out[i * f..(i + 1) * f];
+    csr_naive_rows(csr, b, f, 0..csr.n_rows, out);
+}
+
+/// Row-range worker behind [`csr_naive`] and the threaded wrapper:
+/// computes rows `rows` into the chunk-local `out` (`rows.len() * f`,
+/// pre-zeroed by the caller).
+pub(crate) fn csr_naive_rows(
+    csr: &Csr,
+    b: &[f32],
+    f: usize,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    for (oi, i) in rows.enumerate() {
+        let row_out = &mut out[oi * f..(oi + 1) * f];
         for e in csr.row_range(i) {
             let v = csr.val[e];
             let col = csr.col_ind[e] as usize;
@@ -23,65 +40,52 @@ pub fn csr_naive(csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
     }
 }
 
-/// Row-cache tile size — the "shared memory" stand-in. 256 entries of
-/// (f32, i32) = 2 KiB, comfortably L1-resident. Public because kernel
-/// dispatch keys on it: rows within one tile accumulate in plain edge
-/// order (bitwise-identical to [`csr_naive`]), rows beyond it introduce
-/// per-tile partial sums (different FP order).
-pub const TILE: usize = 256;
+/// Floor of the row-cache staging tile — the "shared memory" stand-in.
+/// Public because kernel dispatch keys on it: the tuned runtime tile
+/// ([`crate::spmm::simd::edge_tile`]) is always ≥ this, so any row of
+/// at most `TILE` nonzeros fits a single tile on every machine and
+/// accumulates in plain edge order (bitwise-identical to
+/// [`csr_naive`]); longer rows introduce per-tile partial sums whose
+/// boundaries depend on the detected L1d, which is why the dispatch
+/// gate keeps them on the naive kernel.
+pub const TILE: usize = simd::EDGE_TILE_MIN;
 
-/// Feature-column block width for warp-merged accumulation (CWM analog).
-const FBLOCK: usize = 8;
-
-/// GE-SpMM analog: Coalesced Row Caching + Coarse-grained Warp Merging.
+/// GE-SpMM analog: Coalesced Row Caching + Coarse-grained Warp Merging,
+/// dispatched at the detected SIMD level.
 ///
-/// CRC: the row's (val, col) pairs are staged into a fixed stack tile so
-/// the inner feature loop reads them from L1 with unit stride — the CPU
-/// equivalent of GE-SpMM caching the row segment in GPU shared memory.
-/// CWM: features are processed in blocks of `FBLOCK` accumulated in
-/// registers, the analog of one warp covering several columns.
+/// CRC: the row's (val, col) pairs are staged into an L1-sized tile
+/// (tuned from the detected cache profile) so the inner feature loop
+/// reads them with unit stride — the CPU equivalent of GE-SpMM caching
+/// the row segment in GPU shared memory. CWM: features are processed in
+/// 8-column register blocks, the analog of one warp covering several
+/// columns; on AVX2/NEON the block is a vector register.
 pub fn csr_rowcache(csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
+    csr_rowcache_at(simd::level(), csr, b, f, out)
+}
+
+/// [`csr_rowcache`] pinned to an explicit SIMD level — the bitwise
+/// cross-checks in tests and the scalar-vs-SIMD bench cases use this;
+/// serving code should call [`csr_rowcache`].
+pub fn csr_rowcache_at(lvl: SimdLevel, csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
     assert_eq!(b.len(), csr.n_cols * f);
     assert_eq!(out.len(), csr.n_rows * f);
     out.fill(0.0);
-    let mut tile_val = [0.0f32; TILE];
-    let mut tile_col = [0usize; TILE];
+    let tile = simd::edge_tile();
+    let mut tile_val = vec![0.0f32; tile];
+    let mut tile_col = vec![0usize; tile];
     for i in 0..csr.n_rows {
         let range = csr.row_range(i);
         let row_out = &mut out[i * f..(i + 1) * f];
         let mut lo = range.start;
         while lo < range.end {
-            let len = (range.end - lo).min(TILE);
+            let len = (range.end - lo).min(tile);
             // CRC: stage the segment.
             for t in 0..len {
                 tile_val[t] = csr.val[lo + t];
                 tile_col[t] = csr.col_ind[lo + t] as usize;
             }
-            // CWM: feature blocks in registers.
-            let mut k = 0;
-            while k + FBLOCK <= f {
-                let mut acc = [0.0f32; FBLOCK];
-                for t in 0..len {
-                    let brow = &b[tile_col[t] * f + k..tile_col[t] * f + k + FBLOCK];
-                    let v = tile_val[t];
-                    for (a, &x) in acc.iter_mut().zip(brow.iter()) {
-                        *a += v * x;
-                    }
-                }
-                for (o, a) in row_out[k..k + FBLOCK].iter_mut().zip(acc.iter()) {
-                    *o += a;
-                }
-                k += FBLOCK;
-            }
-            // Remainder columns.
-            while k < f {
-                let mut acc = 0.0f32;
-                for t in 0..len {
-                    acc += tile_val[t] * b[tile_col[t] * f + k];
-                }
-                row_out[k] += acc;
-                k += 1;
-            }
+            // CWM: register-blocked feature accumulation.
+            simd::tile_axpy(lvl, &tile_val[..len], &tile_col[..len], b, f, row_out);
             lo += len;
         }
     }
@@ -131,5 +135,43 @@ mod tests {
         csr_naive(&g, &b, 1, &mut a);
         csr_rowcache(&g, &b, 1, &mut c);
         assert_close(&a, &c, 1e-5);
+    }
+
+    #[test]
+    fn rowcache_simd_matches_scalar_bitwise() {
+        // Remainder lanes (f off the 8-lane width), empty rows (sparse
+        // graph), and single-tile rows.
+        for f in [1usize, 7, 8, 9, 33] {
+            let (g, b) = random_graph_and_features(150, 6.0, f, 11 + f as u64);
+            let mut scalar = vec![0.0; g.n_rows * f];
+            let mut vector = vec![0.0; g.n_rows * f];
+            csr_rowcache_at(SimdLevel::Scalar, &g, &b, f, &mut scalar);
+            csr_rowcache_at(simd::level(), &g, &b, f, &mut vector);
+            assert_eq!(scalar, vector, "f={f}");
+        }
+    }
+
+    #[test]
+    fn rowcache_mega_row_simd_matches_scalar_bitwise() {
+        // One row denser than the staging tile: partial-sum boundaries
+        // come from the tuned tile, which is level-independent, so the
+        // arms must still agree bitwise (and stay close to naive).
+        let n = simd::edge_tile() + 500;
+        let col_ind: Vec<i32> = (0..n as i32).collect();
+        let val: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut row_ptr = vec![0i32; 2];
+        row_ptr[1] = n as i32;
+        row_ptr.extend(std::iter::repeat(n as i32).take(n - 1));
+        let g = Csr::new(n, n, row_ptr, col_ind, val).unwrap();
+        let f = 9usize;
+        let b: Vec<f32> = (0..n * f).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut scalar = vec![0.0; n * f];
+        let mut vector = vec![0.0; n * f];
+        csr_rowcache_at(SimdLevel::Scalar, &g, &b, f, &mut scalar);
+        csr_rowcache_at(simd::level(), &g, &b, f, &mut vector);
+        assert_eq!(scalar, vector);
+        let mut naive = vec![0.0; n * f];
+        csr_naive(&g, &b, f, &mut naive);
+        assert_close(&scalar, &naive, 1e-4);
     }
 }

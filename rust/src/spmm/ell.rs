@@ -3,23 +3,58 @@
 //! (0.0, col 0), so no masking is needed in the inner loop.
 
 use crate::graph::Ell;
+use crate::spmm::simd::{self, SimdLevel};
 
-/// `C[i,:] = Σ_k ell.val[i,k] * B[ell.col[i,k],:]` (GCN aggregation).
+/// `C[i,:] = Σ_k ell.val[i,k] * B[ell.col[i,k],:]` (GCN aggregation),
+/// dispatched at the detected SIMD level.
 pub fn ell_spmm(ell: &Ell, b: &[f32], f: usize, out: &mut [f32]) {
+    ell_spmm_at(simd::level(), ell, b, f, out)
+}
+
+/// [`ell_spmm`] pinned to an explicit SIMD level — the bitwise
+/// cross-checks in tests and the scalar-vs-SIMD bench cases use this;
+/// serving code should call [`ell_spmm`].
+pub fn ell_spmm_at(lvl: SimdLevel, ell: &Ell, b: &[f32], f: usize, out: &mut [f32]) {
     assert_eq!(b.len(), ell.n_cols * f);
     assert_eq!(out.len(), ell.n_rows * f);
     out.fill(0.0);
+    ell_spmm_rows(lvl, ell, b, f, 0..ell.n_rows, out);
+}
+
+/// Row-range worker shared by the serial entry and the threaded
+/// wrapper: computes rows `rows` into the chunk-local `out`
+/// (`rows.len() * f`, pre-zeroed by the caller).
+///
+/// Feature columns are processed in LLC-sized blocks
+/// ([`simd::feat_block`]) so the B rows a pass touches stay
+/// cache-resident — the paper's shared-memory-fit argument. Blocking
+/// only reorders *independent* output elements; per element the edge
+/// accumulation order is unchanged, so the result is bitwise-identical
+/// to the unblocked scalar loop at every level.
+pub(crate) fn ell_spmm_rows(
+    lvl: SimdLevel,
+    ell: &Ell,
+    b: &[f32],
+    f: usize,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
     let w = ell.width;
-    for i in 0..ell.n_rows {
-        let row_out = &mut out[i * f..(i + 1) * f];
-        let vals = &ell.val[i * w..i * w + ell.slots[i] as usize];
-        let cols = &ell.col[i * w..i * w + ell.slots[i] as usize];
-        for (v, &c) in vals.iter().zip(cols.iter()) {
-            let brow = &b[c as usize * f..c as usize * f + f];
-            for (o, &x) in row_out.iter_mut().zip(brow.iter()) {
-                *o += v * x;
-            }
+    let blk = simd::feat_block(ell.n_cols, f);
+    let mut k0 = 0usize;
+    while k0 < f {
+        let k1 = (k0 + blk).min(f);
+        for (oi, i) in rows.clone().enumerate() {
+            // Pull the next row's staged (col, val) segment into cache
+            // while this row computes.
+            simd::prefetch_read(&ell.val, (i + 1) * w);
+            simd::prefetch_read(&ell.col, (i + 1) * w);
+            let n = ell.slots[i] as usize;
+            let vals = &ell.val[i * w..i * w + n];
+            let cols = &ell.col[i * w..i * w + n];
+            simd::ell_row(lvl, vals, cols, b, f, k0, &mut out[oi * f + k0..oi * f + k1]);
         }
+        k0 = k1;
     }
 }
 
@@ -73,6 +108,20 @@ mod tests {
             }
         }
         assert_close(&out, &want, 1e-6);
+    }
+
+    #[test]
+    fn ell_simd_matches_scalar_bitwise() {
+        // Remainder lanes, empty rows (width-0 slots), ragged widths.
+        for (w, f) in [(4usize, 1usize), (8, 7), (16, 9), (16, 33), (32, 64)] {
+            let (g, b) = random_graph_and_features(120, 12.0, f, 21 + f as u64);
+            let ell = sample_ell(&g, w, Strategy::Aes);
+            let mut scalar = vec![0.0; g.n_rows * f];
+            let mut vector = vec![0.0; g.n_rows * f];
+            ell_spmm_at(crate::spmm::simd::SimdLevel::Scalar, &ell, &b, f, &mut scalar);
+            ell_spmm_at(crate::spmm::simd::level(), &ell, &b, f, &mut vector);
+            assert_eq!(scalar, vector, "w={w} f={f}");
+        }
     }
 
     #[test]

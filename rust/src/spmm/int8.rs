@@ -1,0 +1,603 @@
+//! True INT8 compute — `i8×u8→i32` accumulating SpMM kernels that run
+//! AES-SpMM's Eq. 1/2 *in the quantized domain* instead of
+//! dequantizing features to fp32 first.
+//!
+//! # The math
+//!
+//! With features stored as u8 codes `q[c,k]` under per-row-chunk ranges
+//! (Eq. 2: `x̂[c,k] = q[c,k]·s(c) + m(c)`, `s = span/255`, `m = x_min`),
+//! the aggregation row is
+//!
+//! ```text
+//! C[i,k] = Σ_e v_e · x̂[c_e,k]
+//!        = Σ_e (v_e·s(c_e)) · q[c_e,k]  +  Σ_e v_e·m(c_e)
+//! ```
+//!
+//! The fp32 edge coefficients `a_e = v_e·s(c_e)` (the per-chunk rescale,
+//! folded in at build time) are re-quantized **per row** with a
+//! symmetric 7-bit scheme: `a_e ≈ qa_e · row_scale_i`. That turns the
+//! first sum into a pure integer MAC loop, with exactly one rescale at
+//! the end of the row:
+//!
+//! ```text
+//! C[i,k] ≈ row_scale_i · (Σ_e qa_e · q[c_e,k])_i32 + row_base_i
+//! ```
+//!
+//! # Overflow and determinism
+//!
+//! `|qa·q| ≤ 127·255 = 32 385`, so an i32 accumulator is exact for up to
+//! ~66 k edges; rows longer than [`I8_FLUSH_EDGES`] flush into an f32
+//! partial at fixed, row-local boundaries. Integer accumulation is
+//! associative and the flush boundaries depend only on the row's edge
+//! count, so every dispatch arm, thread count, and shard cut produces
+//! bitwise-identical output — the same composition contract the fp32
+//! kernels obey.
+
+use crate::graph::{Csr, Ell};
+use crate::quant::ChunkedParams;
+
+use super::simd::{self, SimdLevel};
+use super::threaded::{balance_rows, split_output};
+
+/// Eq. 1/2's code range (255 levels), as f32.
+const LEVELS: f32 = 255.0;
+
+/// Symmetric 7-bit target for the per-row edge-coefficient requant.
+const QA_MAX: f32 = 127.0;
+
+/// Edges per exact-i32 segment: `2^31 / 32 385 ≈ 66 296`; 32 768 leaves
+/// 2x headroom. Boundaries are row-local, so sharding and threading
+/// (which cut between rows) can never move them.
+pub const I8_FLUSH_EDGES: usize = 32_768;
+
+/// Per-row requantized adjacency — the integer-domain operand the
+/// [`ell_spmm_i8`] / [`csr_spmm_i8`] kernels consume. Built once per
+/// plan (it depends only on the adjacency and the feature chunk
+/// ranges), reused across batches.
+#[derive(Clone, Debug)]
+pub struct AdjQuant {
+    /// `row_scale[i]`: the symmetric step `max_e |a_e| / 127` (1.0 for
+    /// empty/all-zero rows).
+    pub row_scale: Vec<f32>,
+    /// `row_base[i] = Σ_e v_e · x_min(chunk(c_e))` — the k-independent
+    /// offset added to every output column of row `i`.
+    pub row_base: Vec<f32>,
+    /// Quantized edge coefficients in the source layout (ELL:
+    /// `n_rows × width` including zeroed padding slots; CSR: nnz order).
+    pub qa: Vec<i8>,
+}
+
+impl AdjQuant {
+    /// Requantize a sampled (ELL) adjacency against the feature matrix's
+    /// chunk ranges. `params` must cover `ell.n_cols` feature rows.
+    pub fn from_ell(ell: &Ell, params: &ChunkedParams) -> AdjQuant {
+        assert!(
+            params.n_rows() >= ell.n_cols,
+            "chunk params cover {} rows, ELL references {}",
+            params.n_rows(),
+            ell.n_cols
+        );
+        let w = ell.width;
+        let mut aq = AdjQuant {
+            row_scale: vec![1.0; ell.n_rows],
+            row_base: vec![0.0; ell.n_rows],
+            qa: vec![0i8; ell.n_rows * w],
+        };
+        let mut coeff = vec![0.0f32; w];
+        for i in 0..ell.n_rows {
+            let n = ell.slots[i] as usize;
+            let vals = &ell.val[i * w..i * w + n];
+            let cols = &ell.col[i * w..i * w + n];
+            let (scale, base) =
+                quantize_row(vals, cols, params, &mut coeff[..n], &mut aq.qa[i * w..i * w + n]);
+            aq.row_scale[i] = scale;
+            aq.row_base[i] = base;
+        }
+        aq
+    }
+
+    /// Requantize an exact (CSR) adjacency against the feature matrix's
+    /// chunk ranges. `params` must cover `csr.n_cols` feature rows.
+    pub fn from_csr(csr: &Csr, params: &ChunkedParams) -> AdjQuant {
+        assert!(
+            params.n_rows() >= csr.n_cols,
+            "chunk params cover {} rows, CSR references {}",
+            params.n_rows(),
+            csr.n_cols
+        );
+        let nnz = csr.val.len();
+        let mut aq = AdjQuant {
+            row_scale: vec![1.0; csr.n_rows],
+            row_base: vec![0.0; csr.n_rows],
+            qa: vec![0i8; nnz],
+        };
+        let mut coeff = Vec::new();
+        for i in 0..csr.n_rows {
+            let r = csr.row_range(i);
+            coeff.resize(r.len(), 0.0);
+            let (scale, base) = quantize_row(
+                &csr.val[r.clone()],
+                &csr.col_ind[r.clone()],
+                params,
+                &mut coeff,
+                &mut aq.qa[r],
+            );
+            aq.row_scale[i] = scale;
+            aq.row_base[i] = base;
+        }
+        aq
+    }
+}
+
+/// Fold the per-chunk rescale into fp32 edge coefficients, then
+/// symmetric-quantize them to i8. Returns `(row_scale, row_base)`.
+fn quantize_row(
+    vals: &[f32],
+    cols: &[i32],
+    params: &ChunkedParams,
+    coeff: &mut [f32],
+    qa: &mut [i8],
+) -> (f32, f32) {
+    let mut base = 0.0f32;
+    let mut amax = 0.0f32;
+    for ((a, v), &c) in coeff.iter_mut().zip(vals.iter()).zip(cols.iter()) {
+        let p = params.for_row(c as usize);
+        *a = v * (p.scale() / LEVELS);
+        base += v * p.x_min;
+        amax = amax.max(a.abs());
+    }
+    let scale = if amax == 0.0 { 1.0 } else { amax / QA_MAX };
+    for (q, a) in qa.iter_mut().zip(coeff.iter()) {
+        *q = (a / scale).round().clamp(-QA_MAX, QA_MAX) as i8;
+    }
+    (scale, base)
+}
+
+/// Sampled (ELL) SpMM in the quantized domain:
+/// `out[i,k] = row_scale[i] · Σ_e qa[i,e] · qb[col[i,e], k] + row_base[i]`.
+///
+/// `qb` is the row-major `[n_cols, f]` u8 feature codes — typically a
+/// zero-copy borrow of the memory-mapped `featq` payload, so no fp32
+/// feature block ever materializes.
+pub fn ell_spmm_i8(ell: &Ell, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32]) {
+    ell_spmm_i8_at(simd::level(), ell, aq, qb, f, out)
+}
+
+/// [`ell_spmm_i8`] pinned to an explicit SIMD level (tests/benches).
+pub fn ell_spmm_i8_at(lvl: SimdLevel, ell: &Ell, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32]) {
+    assert_eq!(qb.len(), ell.n_cols * f);
+    assert_eq!(out.len(), ell.n_rows * f);
+    assert_eq!(aq.qa.len(), ell.n_rows * ell.width);
+    ell_spmm_i8_rows(lvl, ell, aq, qb, f, 0..ell.n_rows, out);
+}
+
+/// Row-range worker shared by the serial entry and the threaded wrapper.
+fn ell_spmm_i8_rows(
+    lvl: SimdLevel,
+    ell: &Ell,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let w = ell.width;
+    let mut acc = vec![0i32; f];
+    for (oi, i) in rows.enumerate() {
+        simd::prefetch_read(&aq.qa, (i + 1) * w);
+        simd::prefetch_read(&ell.col, (i + 1) * w);
+        let n = ell.slots[i] as usize;
+        i8_row_rescale(
+            lvl,
+            &aq.qa[i * w..i * w + n],
+            &ell.col[i * w..i * w + n],
+            qb,
+            f,
+            aq.row_scale[i],
+            aq.row_base[i],
+            &mut acc,
+            &mut out[oi * f..(oi + 1) * f],
+        );
+    }
+}
+
+/// Exact (CSR) SpMM in the quantized domain — same contract as
+/// [`ell_spmm_i8`] with `aq.qa` in nnz order.
+pub fn csr_spmm_i8(csr: &Csr, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32]) {
+    csr_spmm_i8_at(simd::level(), csr, aq, qb, f, out)
+}
+
+/// [`csr_spmm_i8`] pinned to an explicit SIMD level (tests/benches).
+pub fn csr_spmm_i8_at(lvl: SimdLevel, csr: &Csr, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32]) {
+    assert_eq!(qb.len(), csr.n_cols * f);
+    assert_eq!(out.len(), csr.n_rows * f);
+    assert_eq!(aq.qa.len(), csr.val.len());
+    csr_spmm_i8_rows(lvl, csr, aq, qb, f, 0..csr.n_rows, out);
+}
+
+fn csr_spmm_i8_rows(
+    lvl: SimdLevel,
+    csr: &Csr,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let mut acc = vec![0i32; f];
+    for (oi, i) in rows.enumerate() {
+        let r = csr.row_range(i);
+        i8_row_rescale(
+            lvl,
+            &aq.qa[r.clone()],
+            &csr.col_ind[r],
+            qb,
+            f,
+            aq.row_scale[i],
+            aq.row_base[i],
+            &mut acc,
+            &mut out[oi * f..(oi + 1) * f],
+        );
+    }
+}
+
+/// Parallel [`ell_spmm_i8`] — row chunks on the shared exec pool, same
+/// per-row worker as the serial kernel (bitwise-identical).
+pub fn ell_spmm_i8_par(
+    ell: &Ell,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(qb.len(), ell.n_cols * f);
+    assert_eq!(out.len(), ell.n_rows * f);
+    assert_eq!(aq.qa.len(), ell.n_rows * ell.width);
+    let lvl = simd::level();
+    let chunks = balance_rows(|i| ell.slots[i] as usize, ell.n_rows, threads.max(1));
+    let slices = split_output(out, &chunks, f);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
+                ell_spmm_i8_rows(lvl, ell, aq, qb, f, range, slice);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::exec::global_pool().run(tasks);
+}
+
+/// Parallel [`csr_spmm_i8`].
+pub fn csr_spmm_i8_par(
+    csr: &Csr,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(qb.len(), csr.n_cols * f);
+    assert_eq!(out.len(), csr.n_rows * f);
+    assert_eq!(aq.qa.len(), csr.val.len());
+    let lvl = simd::level();
+    let chunks = balance_rows(|i| csr.row_nnz(i), csr.n_rows, threads.max(1));
+    let slices = split_output(out, &chunks, f);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
+                csr_spmm_i8_rows(lvl, csr, aq, qb, f, range, slice);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::exec::global_pool().run(tasks);
+}
+
+/// One output row: integer-accumulate `Σ_e qa_e · qb[c_e,·]` in
+/// [`I8_FLUSH_EDGES`]-long exact segments, then apply the single
+/// per-row rescale `out = scale·acc + base`.
+#[allow(clippy::too_many_arguments)]
+fn i8_row_rescale(
+    lvl: SimdLevel,
+    qa: &[i8],
+    cols: &[i32],
+    qb: &[u8],
+    f: usize,
+    scale: f32,
+    base: f32,
+    acc: &mut [i32],
+    row_out: &mut [f32],
+) {
+    let n = qa.len();
+    if n <= I8_FLUSH_EDGES {
+        acc.fill(0);
+        i8_row(lvl, qa, cols, qb, f, acc);
+        for (o, &a) in row_out.iter_mut().zip(acc.iter()) {
+            *o = scale * a as f32 + base;
+        }
+    } else {
+        row_out.fill(0.0);
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + I8_FLUSH_EDGES).min(n);
+            acc.fill(0);
+            i8_row(lvl, &qa[lo..hi], &cols[lo..hi], qb, f, acc);
+            for (o, &a) in row_out.iter_mut().zip(acc.iter()) {
+                *o += a as f32;
+            }
+            lo = hi;
+        }
+        for o in row_out.iter_mut() {
+            *o = scale * *o + base;
+        }
+    }
+}
+
+/// The integer MAC inner loop: `acc[k] += qa[e] · qb[cols[e]·f + k]`.
+/// Exact in every arm (i32 adds commute), so dispatch is bitwise-free.
+#[inline]
+fn i8_row(lvl: SimdLevel, qa: &[i8], cols: &[i32], qb: &[u8], f: usize, acc: &mut [i32]) {
+    debug_assert_eq!(qa.len(), cols.len());
+    debug_assert_eq!(acc.len(), f);
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `simd::level()` only reports Avx2 after runtime detection.
+        SimdLevel::Avx2 => unsafe { i8_row_avx2(qa, cols, qb, f, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `simd::level()` only reports Neon after runtime detection.
+        SimdLevel::Neon => unsafe { i8_row_neon(qa, cols, qb, f, acc) },
+        _ => i8_row_scalar(qa, cols, qb, f, acc),
+    }
+}
+
+fn i8_row_scalar(qa: &[i8], cols: &[i32], qb: &[u8], f: usize, acc: &mut [i32]) {
+    for (q, &c) in qa.iter().zip(cols.iter()) {
+        let a = *q as i32;
+        // Padding slots and rounded-to-zero coefficients contribute
+        // nothing; skipping them is exact.
+        if a == 0 {
+            continue;
+        }
+        let qrow = &qb[c as usize * f..c as usize * f + f];
+        for (s, &x) in acc.iter_mut().zip(qrow.iter()) {
+            *s += a * x as i32;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn i8_row_avx2(qa: &[i8], cols: &[i32], qb: &[u8], f: usize, acc: &mut [i32]) {
+    use core::arch::x86_64::*;
+    for (q, &c) in qa.iter().zip(cols.iter()) {
+        let a = *q as i32;
+        if a == 0 {
+            continue;
+        }
+        let av = _mm256_set1_epi32(a);
+        let base = qb.as_ptr().add(c as usize * f);
+        let mut k = 0usize;
+        while k + 8 <= f {
+            // 8 u8 codes → 8 i32 lanes, 32-bit multiply, accumulate.
+            // (Not maddubs: that saturates at i16 and folds lane pairs.)
+            let x8 = _mm_loadl_epi64(base.add(k) as *const __m128i);
+            let x = _mm256_cvtepu8_epi32(x8);
+            let prod = _mm256_mullo_epi32(av, x);
+            let prev = _mm256_loadu_si256(acc.as_ptr().add(k) as *const __m256i);
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(k) as *mut __m256i,
+                _mm256_add_epi32(prev, prod),
+            );
+            k += 8;
+        }
+        while k < f {
+            *acc.get_unchecked_mut(k) += a * *base.add(k) as i32;
+            k += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn i8_row_neon(qa: &[i8], cols: &[i32], qb: &[u8], f: usize, acc: &mut [i32]) {
+    use core::arch::aarch64::*;
+    for (q, &c) in qa.iter().zip(cols.iter()) {
+        let a = *q as i32;
+        if a == 0 {
+            continue;
+        }
+        let a16 = vdup_n_s16(a as i16);
+        let base = qb.as_ptr().add(c as usize * f);
+        let mut k = 0usize;
+        while k + 8 <= f {
+            // 8 u8 codes widened to s16 (≤ 255 fits), then a widening
+            // multiply-accumulate into the s32 lanes: |q·x| ≤ 32 385.
+            let x16 = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(base.add(k))));
+            let acc0 = vld1q_s32(acc.as_ptr().add(k));
+            let acc1 = vld1q_s32(acc.as_ptr().add(k + 4));
+            vst1q_s32(acc.as_mut_ptr().add(k), vmlal_s16(acc0, vget_low_s16(x16), a16));
+            vst1q_s32(acc.as_mut_ptr().add(k + 4), vmlal_s16(acc1, vget_high_s16(x16), a16));
+            k += 8;
+        }
+        while k < f {
+            *acc.get_unchecked_mut(k) += a * *base.add(k) as i32;
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantParams;
+    use crate::sampling::{sample_ell, Strategy};
+    use crate::spmm::testutil::random_graph_and_features;
+    use crate::spmm::{csr_naive, ell_spmm};
+
+    /// Quantize features with per-chunk ranges and return
+    /// `(codes, params, dequantized fp32 view)`.
+    fn quantized_features(
+        b: &[f32],
+        n: usize,
+        f: usize,
+        rows_per_chunk: usize,
+    ) -> (Vec<u8>, ChunkedParams, Vec<f32>) {
+        let params = ChunkedParams::of_rows(b, n, f, rows_per_chunk);
+        let qb = params.quantize_rows(b, f);
+        let mut deq = vec![0.0f32; qb.len()];
+        params.dequantize_rows_into(&qb, 0, f, &mut deq);
+        (qb, params, deq)
+    }
+
+    /// Per-element bound on the i8-compute vs dequant-reference gap:
+    /// only the qa rounding differs, so |err| ≤ ½·row_scale·Σ_e q[c_e,k]
+    /// plus fp32 accumulation noise.
+    fn assert_within_requant_bound(
+        got: &[f32],
+        want: &[f32],
+        aq: &AdjQuant,
+        row_edge_codesum: impl Fn(usize, usize) -> f32,
+        f: usize,
+    ) {
+        for (idx, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            let (i, k) = (idx / f, idx % f);
+            let bound = 0.5 * aq.row_scale[i] * row_edge_codesum(i, k)
+                + 1e-4 * (1.0 + w.abs());
+            assert!(
+                (g - w).abs() <= bound,
+                "row {i} col {k}: {g} vs {w} (bound {bound})"
+            );
+        }
+    }
+
+    #[test]
+    fn ell_i8_tracks_dequant_reference_with_chunked_scales() {
+        let (n, f, width) = (180usize, 24usize, 12usize);
+        let (g, b) = random_graph_and_features(n, 14.0, f, 31);
+        // 5 chunks of very different magnitude (seeded features are
+        // uniform, so scale rows to force distinct per-chunk ranges).
+        let mut scaled = b.clone();
+        for (i, x) in scaled.iter_mut().enumerate() {
+            *x *= 1.0 + (i / (f * 40)) as f32 * 3.0;
+        }
+        let (qb, params, deq) = quantized_features(&scaled, n, f, 40);
+        assert!(params.n_chunks() > 1);
+        let ell = sample_ell(&g, width, Strategy::Aes);
+        let aq = AdjQuant::from_ell(&ell, &params);
+
+        // Reference: dequantize-then-fp32 over the same sampled plan.
+        let mut want = vec![0.0f32; n * f];
+        ell_spmm(&ell, &deq, f, &mut want);
+        let mut got = vec![0.0f32; n * f];
+        ell_spmm_i8(&ell, &aq, &qb, f, &mut got);
+
+        let w = ell.width;
+        assert_within_requant_bound(
+            &got,
+            &want,
+            &aq,
+            |i, k| {
+                let nsl = ell.slots[i] as usize;
+                (0..nsl)
+                    .map(|e| qb[ell.col[i * w + e] as usize * f + k] as f32)
+                    .sum()
+            },
+            f,
+        );
+    }
+
+    #[test]
+    fn csr_i8_tracks_dequant_reference() {
+        let (n, f) = (150usize, 17usize);
+        let (g, b) = random_graph_and_features(n, 9.0, f, 57);
+        let (qb, params, deq) = quantized_features(&b, n, f, 50);
+        let aq = AdjQuant::from_csr(&g, &params);
+        let mut want = vec![0.0f32; n * f];
+        csr_naive(&g, &deq, f, &mut want);
+        let mut got = vec![0.0f32; n * f];
+        csr_spmm_i8(&g, &aq, &qb, f, &mut got);
+        assert_within_requant_bound(
+            &got,
+            &want,
+            &aq,
+            |i, k| {
+                g.row_range(i)
+                    .map(|e| qb[g.col_ind[e] as usize * f + k] as f32)
+                    .sum()
+            },
+            f,
+        );
+    }
+
+    #[test]
+    fn i8_simd_matches_scalar_bitwise() {
+        for f in [1usize, 7, 8, 9, 33] {
+            let (g, b) = random_graph_and_features(90, 11.0, f, 77 + f as u64);
+            let (qb, params, _) = quantized_features(&b, 90, f, 16);
+            let ell = sample_ell(&g, 8, Strategy::Aes);
+            let aq = AdjQuant::from_ell(&ell, &params);
+            let mut scalar = vec![0.0f32; 90 * f];
+            let mut vector = vec![0.0f32; 90 * f];
+            ell_spmm_i8_at(SimdLevel::Scalar, &ell, &aq, &qb, f, &mut scalar);
+            ell_spmm_i8_at(simd::level(), &ell, &aq, &qb, f, &mut vector);
+            assert_eq!(scalar, vector, "f={f}");
+        }
+    }
+
+    #[test]
+    fn i8_par_matches_serial_bitwise() {
+        let (n, f) = (300usize, 13usize);
+        let (g, b) = random_graph_and_features(n, 20.0, f, 5);
+        let (qb, params, _) = quantized_features(&b, n, f, 64);
+        let ell = sample_ell(&g, 16, Strategy::Aes);
+        let aq = AdjQuant::from_ell(&ell, &params);
+        let mut serial = vec![0.0f32; n * f];
+        ell_spmm_i8(&ell, &aq, &qb, f, &mut serial);
+        for threads in [2usize, 3, 8] {
+            let mut par = vec![0.0f32; n * f];
+            ell_spmm_i8_par(&ell, &aq, &qb, f, &mut par, threads);
+            assert_eq!(serial, par, "threads={threads}");
+        }
+        let caq = AdjQuant::from_csr(&g, &params);
+        let mut cs = vec![0.0f32; n * f];
+        csr_spmm_i8(&g, &caq, &qb, f, &mut cs);
+        let mut cp = vec![0.0f32; n * f];
+        csr_spmm_i8_par(&g, &caq, &qb, f, &mut cp, 4);
+        assert_eq!(cs, cp);
+    }
+
+    #[test]
+    fn empty_rows_yield_their_base_term() {
+        // A graph with an isolated row: scale defaults to 1, base to 0,
+        // so the output row is exactly zero.
+        let g = crate::graph::Csr::new(3, 3, vec![0, 1, 1, 2], vec![2, 0], vec![0.5, -2.0]).unwrap();
+        let b = vec![0.25f32; 6];
+        let params = ChunkedParams::uniform(3, QuantParams { x_min: 0.0, x_max: 1.0 });
+        let qb = params.quantize_rows(&b, 2);
+        let aq = AdjQuant::from_csr(&g, &params);
+        let mut out = vec![9.0f32; 6];
+        csr_spmm_i8(&g, &aq, &qb, 2, &mut out);
+        assert_eq!(&out[2..4], &[0.0, 0.0]);
+        // Non-empty rows land near v · 0.25.
+        assert!((out[0] - 0.125).abs() < 0.01, "{}", out[0]);
+        assert!((out[4] + 0.5).abs() < 0.02, "{}", out[4]);
+    }
+
+    #[test]
+    fn flush_segmentation_is_exactly_additive() {
+        // A row longer than the flush segment still matches the direct
+        // integer sum (values chosen so all partials are exact in f32).
+        let n_edges = I8_FLUSH_EDGES + 10;
+        let qa = vec![1i8; n_edges];
+        let cols = vec![0i32; n_edges];
+        let qb = vec![1u8; 4];
+        let mut acc = vec![0i32; 4];
+        let mut row = vec![0.0f32; 4];
+        i8_row_rescale(simd::level(), &qa, &cols, &qb, 4, 1.0, 0.0, &mut acc, &mut row);
+        // Σ over edges of 1·1, accumulated in two segments.
+        assert_eq!(row, vec![n_edges as f32; 4]);
+    }
+}

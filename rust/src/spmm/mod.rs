@@ -9,22 +9,44 @@
 //!   register blocks).
 //! * [`ell_spmm`]     — the sampled-matrix multiply (AES/AFS/SFS plans),
 //!   Alg. 1 lines 16–19 on the host.
+//! * [`ell_spmm_i8`] / [`csr_spmm_i8`] — true INT8 compute: `i8×u8→i32`
+//!   accumulation over an [`AdjQuant`] requantized adjacency, one
+//!   rescale per row (Eq. 1/2 in the quantized domain).
+//! * `simd`           — runtime AVX2/NEON dispatch, cache-profile tile
+//!   tuning, and the bitwise-equality contract every arm obeys
+//!   (docs/simd.md).
 //! * `threaded`       — row-partitioned multi-thread wrappers over any of
 //!   the above (std::thread scoped; the offline registry has no rayon).
 //!
-//! All kernels compute `C = A × B` with `B` row-major `[n, f]`.
+//! All kernels compute `C = A × B` with `B` row-major `[n, f]` (fp32, or
+//! u8 codes for the INT8-compute kernels).
 
 mod csr;
 mod ell;
+mod int8;
+pub mod simd;
 mod threaded;
 
-pub use csr::{csr_naive, csr_rowcache, TILE as ROWCACHE_TILE};
-pub use ell::{ell_spmm, ell_spmm_mean};
+pub use csr::{csr_naive, csr_rowcache, csr_rowcache_at, TILE as ROWCACHE_TILE};
+pub use ell::{ell_spmm, ell_spmm_at, ell_spmm_mean};
+pub use int8::{
+    csr_spmm_i8, csr_spmm_i8_at, csr_spmm_i8_par, ell_spmm_i8, ell_spmm_i8_at, ell_spmm_i8_par,
+    AdjQuant, I8_FLUSH_EDGES,
+};
 pub use threaded::{csr_naive_par, ell_spmm_par};
 
-/// Flop count of an exact SpMM (2 flops per nnz per feature column).
+/// Flop count of an exact fp32 SpMM (2 flops per nnz per feature column).
 pub fn spmm_flops(nnz: usize, feat_dim: usize) -> usize {
     2 * nnz * feat_dim
+}
+
+/// Fp32-flop *equivalents* of an `i8×u8→i32` SpMM over the same nnz —
+/// integer MACs retire roughly twice as cheap per element on the vector
+/// units (wider lanes, no FP latency chains), so cost-based dispatch
+/// thresholds ([`crate::exec::PAR_MIN_FLOPS`]) must compare like units
+/// rather than assume fp32 cost per nnz.
+pub fn spmm_i8_flops(nnz: usize, feat_dim: usize) -> usize {
+    spmm_flops(nnz, feat_dim) / 2
 }
 
 #[cfg(test)]

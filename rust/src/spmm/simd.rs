@@ -1,0 +1,512 @@
+//! Runtime-dispatched SIMD layer for the SpMM hot loops.
+//!
+//! # Detection and dispatch contract
+//!
+//! [`level`] probes the CPU once per process (AVX2 via
+//! `is_x86_feature_detected!`, NEON via the aarch64 equivalent) and
+//! caches the answer; exporting `AES_SPMM_FORCE_SCALAR=1` before first
+//! use pins the scalar arm (the CI matrix runs the whole suite that
+//! way). Kernels dispatch at row or tile granularity, so the `match`
+//! cost amortizes over `edges × f` of inner work and the
+//! `#[target_feature]` bodies inline their intrinsics fully.
+//!
+//! # Why dispatch never changes a bit
+//!
+//! Vector lanes map to *independent output feature columns*; each
+//! column accumulates over edges in the kernel's canonical order, and
+//! multiply/add stay separate instructions (no FMA — rustc never
+//! contracts scalar `a + b * c` either). Per output element every arm
+//! performs the identical ordered sequence of fp32 operations, so the
+//! scalar path is not a fallback with different numerics: it is the
+//! *same* numerics, and the eval oracle's bitwise guarantees hold under
+//! any dispatch decision (docs/simd.md).
+//!
+//! # Cache model (the shared-memory-fit analog)
+//!
+//! The paper sizes sampled tiles so the multiply fits GPU shared
+//! memory. On CPU, [`cache_profile`] reads L1d/LLC sizes from
+//! `/sys/devices/system/cpu/cpu0/cache` (fallbacks 32 KiB / 8 MiB),
+//! [`edge_tile`] sizes the rowcache staging tile from the L1d budget,
+//! and [`feat_block`] sizes feature-column passes so the touched B rows
+//! stay LLC-resident.
+
+use std::sync::OnceLock;
+
+/// Environment variable that pins dispatch to the scalar arm when set
+/// to `1` (read once, before the first kernel call).
+pub const FORCE_SCALAR_ENV: &str = "AES_SPMM_FORCE_SCALAR";
+
+/// The instruction-set arm a kernel call executes with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar loops — the canonical FP order.
+    Scalar,
+    /// x86-64 AVX2 (8 × f32 / 8 × i32 lanes).
+    Avx2,
+    /// aarch64 NEON (dual 4 × f32 / 4 × i32 lanes, blocked to 8).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable label for logs and bench case names.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+/// The process-wide detected dispatch level (cached after first call).
+pub fn level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+fn detect() -> SimdLevel {
+    if std::env::var(FORCE_SCALAR_ENV).map(|v| v == "1").unwrap_or(false) {
+        return SimdLevel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return SimdLevel::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return SimdLevel::Neon;
+    }
+    SimdLevel::Scalar
+}
+
+/// Detected cache sizes used to tune tile shapes. Tuning only moves
+/// *performance* knobs (tile lengths, block widths); it never changes
+/// which FP operations run per output element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheProfile {
+    /// Per-core L1 data cache in bytes.
+    pub l1d_bytes: usize,
+    /// Last-level cache in bytes (the largest Data/Unified level seen).
+    pub llc_bytes: usize,
+}
+
+/// L1d assumed when sysfs is absent (containers, non-Linux).
+pub const L1D_FALLBACK_BYTES: usize = 32 * 1024;
+/// LLC assumed when sysfs is absent.
+pub const LLC_FALLBACK_BYTES: usize = 8 * 1024 * 1024;
+
+/// The machine's cache profile (detected once, sysfs or fallbacks).
+pub fn cache_profile() -> CacheProfile {
+    static PROFILE: OnceLock<CacheProfile> = OnceLock::new();
+    *PROFILE.get_or_init(|| detect_caches("/sys/devices/system/cpu/cpu0/cache"))
+}
+
+/// Parse a sysfs cache size string like `32K`, `1024K` or `8M`.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let t = s.trim();
+    let (digits, mult) = match t.as_bytes().last()? {
+        b'K' | b'k' => (&t[..t.len() - 1], 1024),
+        b'M' | b'm' => (&t[..t.len() - 1], 1024 * 1024),
+        _ => (t, 1),
+    };
+    digits.parse::<usize>().ok().map(|n| n.saturating_mul(mult))
+}
+
+fn detect_caches(base: &str) -> CacheProfile {
+    let mut l1d = None;
+    // (level, bytes) of the deepest Data/Unified cache seen so far.
+    let mut llc: Option<(u32, usize)> = None;
+    for idx in 0..16 {
+        let dir = format!("{base}/index{idx}");
+        let Ok(ty) = std::fs::read_to_string(format!("{dir}/type")) else {
+            break;
+        };
+        let (Ok(level_s), Ok(size_s)) = (
+            std::fs::read_to_string(format!("{dir}/level")),
+            std::fs::read_to_string(format!("{dir}/size")),
+        ) else {
+            continue;
+        };
+        let Ok(lv) = level_s.trim().parse::<u32>() else {
+            continue;
+        };
+        let Some(bytes) = parse_cache_size(&size_s) else {
+            continue;
+        };
+        let ty = ty.trim();
+        if ty == "Instruction" {
+            continue;
+        }
+        if lv == 1 && ty == "Data" {
+            l1d = Some(bytes);
+        }
+        if llc.map_or(true, |(deepest, _)| lv >= deepest) {
+            llc = Some((lv, bytes));
+        }
+    }
+    CacheProfile {
+        l1d_bytes: l1d.unwrap_or(L1D_FALLBACK_BYTES),
+        llc_bytes: llc.map(|(_, b)| b).unwrap_or(LLC_FALLBACK_BYTES),
+    }
+}
+
+/// Bytes one staged edge occupies in the rowcache tile: an `f32` value
+/// plus a `usize` column index.
+const STAGED_EDGE_BYTES: usize = std::mem::size_of::<f32>() + std::mem::size_of::<usize>();
+
+/// Floor of the tuned staging tile — equal to
+/// [`crate::spmm::ROWCACHE_TILE`], the dispatch gate's row-size cap, so
+/// a dispatched row always fits one tile and accumulates in plain edge
+/// order on every machine (the bitwise contract is tile-size-proof).
+pub const EDGE_TILE_MIN: usize = 256;
+/// Staging past this stops paying: the tile would spill L1 anyway.
+pub const EDGE_TILE_MAX: usize = 4096;
+
+/// Rowcache staging-tile length, tuned to a quarter of the detected L1d
+/// (the rest stays available for the feature rows streaming through).
+pub fn edge_tile() -> usize {
+    static TILE: OnceLock<usize> = OnceLock::new();
+    *TILE.get_or_init(|| {
+        (cache_profile().l1d_bytes / 4 / STAGED_EDGE_BYTES).clamp(EDGE_TILE_MIN, EDGE_TILE_MAX)
+    })
+}
+
+/// Feature-column block width for LLC tiling: the widest multiple of 8
+/// such that one pass's working set (`n_b_rows` feature rows of the
+/// block) fits half the LLC; `f` itself when everything fits. The
+/// paper's shared-memory-fit argument, restated for the cache that
+/// actually bounds CPU SpMM.
+pub fn feat_block(n_b_rows: usize, f: usize) -> usize {
+    let budget = cache_profile().llc_bytes / 2;
+    let per_col = n_b_rows.max(1) * std::mem::size_of::<f32>();
+    let cols = budget / per_col;
+    if cols >= f {
+        f
+    } else {
+        (cols & !7).max(8)
+    }
+}
+
+/// Best-effort prefetch of `data[idx..]` into L1 (x86-64 only: the
+/// aarch64 `prfm` intrinsic is unstable and hardware stride prefetchers
+/// already cover the sequential ELL walk there). No-op out of bounds.
+#[inline(always)]
+pub fn prefetch_read<T>(data: &[T], idx: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if idx < data.len() {
+        // SAFETY: the pointer is in bounds and prefetch has no
+        // architectural effect — it can neither fault nor write.
+        unsafe {
+            use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            _mm_prefetch::<_MM_HINT_T0>(data.as_ptr().add(idx) as *const i8);
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (data, idx);
+}
+
+/// One sampled (ELL) or staged row over feature columns
+/// `k0 .. k0 + out.len()`:
+/// `out[j] += Σ_e vals[e] * b[cols[e] * f + k0 + j]`.
+///
+/// `out` is the row's column sub-slice; `cols` entries must index valid
+/// `b` rows. Bitwise-identical across levels: per output element every
+/// arm runs the same ordered load–mul–add sequence.
+#[inline]
+pub fn ell_row(
+    lvl: SimdLevel,
+    vals: &[f32],
+    cols: &[i32],
+    b: &[f32],
+    f: usize,
+    k0: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(vals.len(), cols.len());
+    debug_assert!(k0 + out.len() <= f);
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` only reports Avx2 after runtime detection.
+        SimdLevel::Avx2 => unsafe { ell_row_avx2(vals, cols, b, f, k0, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` only reports Neon after runtime detection.
+        SimdLevel::Neon => unsafe { ell_row_neon(vals, cols, b, f, k0, out) },
+        _ => ell_row_scalar(vals, cols, b, f, k0, out),
+    }
+}
+
+fn ell_row_scalar(vals: &[f32], cols: &[i32], b: &[f32], f: usize, k0: usize, out: &mut [f32]) {
+    for (v, &c) in vals.iter().zip(cols.iter()) {
+        let lo = c as usize * f + k0;
+        let brow = &b[lo..lo + out.len()];
+        for (o, &x) in out.iter_mut().zip(brow.iter()) {
+            *o += *v * x;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn ell_row_avx2(vals: &[f32], cols: &[i32], b: &[f32], f: usize, k0: usize, out: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let width = out.len();
+    let mut k = 0usize;
+    while k + 8 <= width {
+        // Start from the current output block so the per-lane operation
+        // sequence is exactly the scalar one (out += v1*x1 += v2*x2 …).
+        let mut acc = _mm256_loadu_ps(out.as_ptr().add(k));
+        for (v, &c) in vals.iter().zip(cols.iter()) {
+            let x = _mm256_loadu_ps(b.as_ptr().add(c as usize * f + k0 + k));
+            // mul then add, kept separate: no FMA contraction.
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*v), x));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), acc);
+        k += 8;
+    }
+    while k < width {
+        let mut acc = *out.get_unchecked(k);
+        for (v, &c) in vals.iter().zip(cols.iter()) {
+            acc += *v * *b.get_unchecked(c as usize * f + k0 + k);
+        }
+        *out.get_unchecked_mut(k) = acc;
+        k += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn ell_row_neon(vals: &[f32], cols: &[i32], b: &[f32], f: usize, k0: usize, out: &mut [f32]) {
+    use core::arch::aarch64::*;
+    let width = out.len();
+    let mut k = 0usize;
+    while k + 8 <= width {
+        let mut acc0 = vld1q_f32(out.as_ptr().add(k));
+        let mut acc1 = vld1q_f32(out.as_ptr().add(k + 4));
+        for (v, &c) in vals.iter().zip(cols.iter()) {
+            let base = b.as_ptr().add(c as usize * f + k0 + k);
+            let vv = vdupq_n_f32(*v);
+            // vmul + vadd (never vfma): scalar parity.
+            acc0 = vaddq_f32(acc0, vmulq_f32(vv, vld1q_f32(base)));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vv, vld1q_f32(base.add(4))));
+        }
+        vst1q_f32(out.as_mut_ptr().add(k), acc0);
+        vst1q_f32(out.as_mut_ptr().add(k + 4), acc1);
+        k += 8;
+    }
+    while k < width {
+        let mut acc = *out.get_unchecked(k);
+        for (v, &c) in vals.iter().zip(cols.iter()) {
+            acc += *v * *b.get_unchecked(c as usize * f + k0 + k);
+        }
+        *out.get_unchecked_mut(k) = acc;
+        k += 1;
+    }
+}
+
+/// One staged rowcache tile (CWM analog):
+/// `out[k] += Σ_t tile_val[t] * b[tile_col[t] * f + k]`, each 8-column
+/// block accumulated in registers before touching `out`, exactly like
+/// the scalar reference order.
+#[inline]
+pub fn tile_axpy(
+    lvl: SimdLevel,
+    tile_val: &[f32],
+    tile_col: &[usize],
+    b: &[f32],
+    f: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(tile_val.len(), tile_col.len());
+    debug_assert_eq!(out.len(), f);
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` only reports Avx2 after runtime detection.
+        SimdLevel::Avx2 => unsafe { tile_axpy_avx2(tile_val, tile_col, b, f, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` only reports Neon after runtime detection.
+        SimdLevel::Neon => unsafe { tile_axpy_neon(tile_val, tile_col, b, f, out) },
+        _ => tile_axpy_scalar(tile_val, tile_col, b, f, out),
+    }
+}
+
+fn tile_axpy_scalar(tile_val: &[f32], tile_col: &[usize], b: &[f32], f: usize, out: &mut [f32]) {
+    let mut k = 0usize;
+    while k + 8 <= f {
+        let mut acc = [0.0f32; 8];
+        for (v, &c) in tile_val.iter().zip(tile_col.iter()) {
+            let brow = &b[c * f + k..c * f + k + 8];
+            for (a, &x) in acc.iter_mut().zip(brow.iter()) {
+                *a += *v * x;
+            }
+        }
+        for (o, a) in out[k..k + 8].iter_mut().zip(acc.iter()) {
+            *o += a;
+        }
+        k += 8;
+    }
+    while k < f {
+        let mut acc = 0.0f32;
+        for (v, &c) in tile_val.iter().zip(tile_col.iter()) {
+            acc += *v * b[c * f + k];
+        }
+        out[k] += acc;
+        k += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_axpy_avx2(tile_val: &[f32], tile_col: &[usize], b: &[f32], f: usize, out: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let mut k = 0usize;
+    while k + 8 <= f {
+        let mut acc = _mm256_setzero_ps();
+        for (v, &c) in tile_val.iter().zip(tile_col.iter()) {
+            let x = _mm256_loadu_ps(b.as_ptr().add(c * f + k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*v), x));
+        }
+        let prev = _mm256_loadu_ps(out.as_ptr().add(k));
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), _mm256_add_ps(prev, acc));
+        k += 8;
+    }
+    while k < f {
+        let mut acc = 0.0f32;
+        for (v, &c) in tile_val.iter().zip(tile_col.iter()) {
+            acc += *v * *b.get_unchecked(c * f + k);
+        }
+        *out.get_unchecked_mut(k) += acc;
+        k += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn tile_axpy_neon(tile_val: &[f32], tile_col: &[usize], b: &[f32], f: usize, out: &mut [f32]) {
+    use core::arch::aarch64::*;
+    let mut k = 0usize;
+    while k + 8 <= f {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for (v, &c) in tile_val.iter().zip(tile_col.iter()) {
+            let base = b.as_ptr().add(c * f + k);
+            let vv = vdupq_n_f32(*v);
+            acc0 = vaddq_f32(acc0, vmulq_f32(vv, vld1q_f32(base)));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vv, vld1q_f32(base.add(4))));
+        }
+        let prev0 = vld1q_f32(out.as_ptr().add(k));
+        let prev1 = vld1q_f32(out.as_ptr().add(k + 4));
+        vst1q_f32(out.as_mut_ptr().add(k), vaddq_f32(prev0, acc0));
+        vst1q_f32(out.as_mut_ptr().add(k + 4), vaddq_f32(prev1, acc1));
+        k += 8;
+    }
+    while k < f {
+        let mut acc = 0.0f32;
+        for (v, &c) in tile_val.iter().zip(tile_col.iter()) {
+            acc += *v * *b.get_unchecked(c * f + k);
+        }
+        *out.get_unchecked_mut(k) += acc;
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn rand_case(n_b: usize, edges: usize, f: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed);
+        let vals: Vec<f32> = (0..edges).map(|_| rng.f32() - 0.5).collect();
+        let cols: Vec<i32> = (0..edges).map(|_| rng.usize_below(n_b) as i32).collect();
+        let b: Vec<f32> = (0..n_b * f).map(|_| rng.f32() - 0.5).collect();
+        (vals, cols, b)
+    }
+
+    #[test]
+    fn detected_level_matches_scalar_bitwise_ell_row() {
+        // Remainder lanes on purpose: below, at, and off the 8-lane width.
+        for f in [1usize, 3, 7, 8, 9, 16, 33, 64] {
+            let (vals, cols, b) = rand_case(40, 90, f, 7 + f as u64);
+            let mut scalar = vec![0.1f32; f];
+            let mut vector = vec![0.1f32; f];
+            ell_row(SimdLevel::Scalar, &vals, &cols, &b, f, 0, &mut scalar);
+            ell_row(level(), &vals, &cols, &b, f, 0, &mut vector);
+            assert_eq!(scalar, vector, "f={f} lvl={}", level().name());
+        }
+    }
+
+    #[test]
+    fn detected_level_matches_scalar_bitwise_tile_axpy() {
+        for f in [1usize, 5, 8, 11, 24, 31] {
+            let (vals, cols, b) = rand_case(30, 70, f, 19 + f as u64);
+            let ucols: Vec<usize> = cols.iter().map(|&c| c as usize).collect();
+            let mut scalar = vec![0.2f32; f];
+            let mut vector = vec![0.2f32; f];
+            tile_axpy(SimdLevel::Scalar, &vals, &ucols, &b, f, &mut scalar);
+            tile_axpy(level(), &vals, &ucols, &b, f, &mut vector);
+            assert_eq!(scalar, vector, "f={f}");
+        }
+    }
+
+    #[test]
+    fn empty_edge_list_is_identity() {
+        let b = vec![1.0f32; 8];
+        let mut out = vec![3.5f32; 8];
+        ell_row(level(), &[], &[], &b, 8, 0, &mut out);
+        assert_eq!(out, vec![3.5f32; 8]);
+        tile_axpy(level(), &[], &[], &b, 8, &mut out);
+        assert_eq!(out, vec![3.5f32; 8]);
+    }
+
+    #[test]
+    fn column_offset_addresses_the_right_block() {
+        let f = 12usize;
+        let (vals, cols, b) = rand_case(10, 25, f, 3);
+        let mut full = vec![0.0f32; f];
+        ell_row(level(), &vals, &cols, &b, f, 0, &mut full);
+        // Same row computed in two blocked passes must agree bitwise.
+        let mut blocked = vec![0.0f32; f];
+        ell_row(level(), &vals, &cols, &b, f, 0, &mut blocked[..5]);
+        ell_row(level(), &vals, &cols, &b, f, 5, &mut blocked[5..]);
+        assert_eq!(full, blocked);
+    }
+
+    #[test]
+    fn cache_size_parsing() {
+        assert_eq!(parse_cache_size("32K\n"), Some(32 * 1024));
+        assert_eq!(parse_cache_size("8192K"), Some(8192 * 1024));
+        assert_eq!(parse_cache_size("12M"), Some(12 * 1024 * 1024));
+        assert_eq!(parse_cache_size("65536"), Some(65536));
+        assert_eq!(parse_cache_size("weird"), None);
+    }
+
+    #[test]
+    fn missing_sysfs_falls_back() {
+        let p = detect_caches("/definitely/not/a/sysfs/path");
+        assert_eq!(p.l1d_bytes, L1D_FALLBACK_BYTES);
+        assert_eq!(p.llc_bytes, LLC_FALLBACK_BYTES);
+    }
+
+    #[test]
+    fn tile_and_block_bounds() {
+        let t = edge_tile();
+        assert!((EDGE_TILE_MIN..=EDGE_TILE_MAX).contains(&t));
+        // The dispatch gate's cap always fits one tile.
+        assert!(t >= crate::spmm::ROWCACHE_TILE);
+        // feat_block: multiples of 8 under pressure, f when it fits.
+        assert_eq!(feat_block(16, 64), 64);
+        let under_pressure = feat_block(usize::MAX / 8, 640);
+        assert_eq!(under_pressure, 8);
+        let mid = feat_block(LLC_FALLBACK_BYTES, 1 << 20);
+        assert_eq!(mid % 8, 0);
+    }
+
+    #[test]
+    fn prefetch_is_safe_at_any_index() {
+        let data = [1u8, 2, 3];
+        prefetch_read(&data, 0);
+        prefetch_read(&data, 2);
+        prefetch_read(&data, 3); // out of bounds: must be a no-op
+        prefetch_read::<u8>(&[], 0);
+    }
+}

@@ -14,7 +14,7 @@ use crate::graph::{Csr, Ell};
 /// Degenerate inputs are clamped rather than mis-split: `parts` is capped
 /// at `n_rows` (never more chunks than rows), zero/tiny total nnz falls
 /// back to even row counts, and `n_rows == 0` yields one empty chunk.
-fn balance_rows(
+pub(crate) fn balance_rows(
     row_nnz: impl Fn(usize) -> usize,
     n_rows: usize,
     parts: usize,
@@ -38,7 +38,7 @@ fn balance_rows(
 }
 
 /// Split `out` into row-aligned mutable slices matching `chunks`.
-fn split_output<'a>(
+pub(crate) fn split_output<'a>(
     out: &'a mut [f32],
     chunks: &[std::ops::Range<usize>],
     f: usize,
@@ -70,27 +70,21 @@ pub fn csr_naive_par(csr: &Csr, b: &[f32], f: usize, out: &mut [f32], threads: u
         .map(|(range, slice)| {
             Box::new(move || {
                 slice.fill(0.0);
-                for i in range.clone() {
-                    let local = &mut slice[(i - range.start) * f..(i - range.start + 1) * f];
-                    for e in csr.row_range(i) {
-                        let v = csr.val[e];
-                        let col = csr.col_ind[e] as usize;
-                        let brow = &b[col * f..col * f + f];
-                        for (o, &x) in local.iter_mut().zip(brow.iter()) {
-                            *o += v * x;
-                        }
-                    }
-                }
+                // Same per-row worker as the serial kernel — chunk cuts
+                // land on row boundaries, so rows reduce identically.
+                super::csr::csr_naive_rows(csr, b, f, range, slice);
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
     exec::global_pool().run(tasks);
 }
 
-/// Parallel sampled (ELL) SpMM.
+/// Parallel sampled (ELL) SpMM, dispatched at the detected SIMD level
+/// (each chunk runs the same [`super::ell`] row worker as the serial
+/// kernel, so threading and SIMD compose without changing a bit).
 pub fn ell_spmm_par(ell: &Ell, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
     assert_eq!(out.len(), ell.n_rows * f);
-    let w = ell.width;
+    let lvl = crate::spmm::simd::level();
     let chunks = balance_rows(|i| ell.slots[i] as usize, ell.n_rows, threads.max(1));
     let slices = split_output(out, &chunks, f);
     let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
@@ -99,17 +93,7 @@ pub fn ell_spmm_par(ell: &Ell, b: &[f32], f: usize, out: &mut [f32], threads: us
         .map(|(range, slice)| {
             Box::new(move || {
                 slice.fill(0.0);
-                for i in range.clone() {
-                    let local = &mut slice[(i - range.start) * f..(i - range.start + 1) * f];
-                    let vals = &ell.val[i * w..i * w + ell.slots[i] as usize];
-                    let cols = &ell.col[i * w..i * w + ell.slots[i] as usize];
-                    for (v, &c) in vals.iter().zip(cols.iter()) {
-                        let brow = &b[c as usize * f..c as usize * f + f];
-                        for (o, &x) in local.iter_mut().zip(brow.iter()) {
-                            *o += v * x;
-                        }
-                    }
-                }
+                super::ell::ell_spmm_rows(lvl, ell, b, f, range, slice);
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();

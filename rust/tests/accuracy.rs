@@ -136,7 +136,7 @@ fn sharded_equals_unsharded_bitwise_through_the_coordinator() {
     let shapes =
         [(None, Strategy::Aes), (Some(8), Strategy::Aes), (Some(32), Strategy::Afs)];
     for name in &names {
-        for precision in [Precision::F32, Precision::U8Device] {
+        for precision in [Precision::F32, Precision::U8Device, Precision::I8Compute] {
             for (width, strategy) in shapes {
                 let k = key(name, width, strategy, precision);
                 let a = unsharded.route_logits(&k).unwrap();

@@ -1,0 +1,238 @@
+//! SIMD dispatch and INT8-compute conformance at the public kernel
+//! API — the docs/simd.md contracts checked from outside the crate:
+//!
+//! * every vector arm is **bitwise-identical** to the scalar arm
+//!   (remainder lanes, empty rows, mega-rows included), so runtime
+//!   dispatch can never move a logit bit;
+//! * the `i8×u8→i32` kernels agree with dequantize-then-fp32 within
+//!   the per-row requant error bound, under per-chunk feature scales;
+//! * threading composes bitwise on the integer kernels exactly like it
+//!   does on the fp32 ones.
+//!
+//! The grid-level counterpart (forced-scalar runs of the whole suite)
+//! is CI's `scalar` job: `AES_SPMM_FORCE_SCALAR=1` pins `simd::level()`
+//! process-wide, and the oracle's golden fixtures plus the bitwise
+//! grid rows prove the scalar configuration serves identical logits.
+
+use aes_spmm::gen;
+use aes_spmm::graph::Csr;
+use aes_spmm::quant::ChunkedParams;
+use aes_spmm::rng::Pcg32;
+use aes_spmm::sampling::{sample_ell, Strategy};
+use aes_spmm::spmm::{
+    csr_naive, csr_rowcache_at, csr_spmm_i8, csr_spmm_i8_at, csr_spmm_i8_par, ell_spmm_at,
+    ell_spmm_i8, ell_spmm_i8_at, ell_spmm_i8_par, simd, AdjQuant,
+};
+
+fn graph_and_features(n: usize, deg: f64, f: usize, seed: u64) -> (Csr, Vec<f32>) {
+    let mut rng = Pcg32::new(seed);
+    let mut g = gen::with_self_loops(&gen::chung_lu(n, deg, 1.9, &mut rng));
+    for v in g.val.iter_mut() {
+        *v = rng.f32() - 0.5;
+    }
+    let b: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+    (g, b)
+}
+
+/// One row holding `nnz` edges — drives the tile/flush remainder paths
+/// that graph generators rarely hit.
+fn mega_row(nnz: usize, n_cols: usize, f: usize, seed: u64) -> (Csr, Vec<f32>) {
+    let mut rng = Pcg32::new(seed);
+    let col_ind: Vec<i32> = (0..nnz).map(|_| rng.usize_below(n_cols) as i32).collect();
+    let val: Vec<f32> = (0..nnz).map(|_| rng.f32() - 0.5).collect();
+    let g = Csr::new(1, n_cols, vec![0, nnz as i32], col_ind, val).unwrap();
+    let b: Vec<f32> = (0..n_cols * f).map(|_| rng.f32() - 0.5).collect();
+    (g, b)
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} differs ({x} vs {y})");
+    }
+}
+
+/// The detected arm equals the scalar arm bit-for-bit on the fp32
+/// kernels — across feature widths that exercise full vector blocks,
+/// remainder lanes, and the width-1 degenerate case.
+#[test]
+fn fp32_kernels_dispatch_bitwise_across_widths() {
+    let lvl = simd::level();
+    for f in [1usize, 3, 7, 8, 9, 16, 33, 64] {
+        let (g, b) = graph_and_features(120, 9.0, f, 40 + f as u64);
+        let n = g.n_rows;
+
+        let mut scalar = vec![0.0f32; n * f];
+        let mut vector = vec![0.0f32; n * f];
+        csr_rowcache_at(simd::SimdLevel::Scalar, &g, &b, f, &mut scalar);
+        csr_rowcache_at(lvl, &g, &b, f, &mut vector);
+        assert_bitwise(&scalar, &vector, &format!("rowcache f={f} {}", lvl.name()));
+        // And both equal the naive edge-order kernel: every row here
+        // fits one staging tile (max degree < EDGE_TILE_MIN), where
+        // the tile cannot change the accumulation order.
+        let mut naive = vec![0.0f32; n * f];
+        csr_naive(&g, &b, f, &mut naive);
+        assert_bitwise(&naive, &scalar, &format!("rowcache vs naive f={f}"));
+
+        for w in [4usize, 16] {
+            let ell = sample_ell(&g, w, Strategy::Aes);
+            let mut scalar = vec![0.0f32; n * f];
+            let mut vector = vec![0.0f32; n * f];
+            ell_spmm_at(simd::SimdLevel::Scalar, &ell, &b, f, &mut scalar);
+            ell_spmm_at(lvl, &ell, &b, f, &mut vector);
+            assert_bitwise(&scalar, &vector, &format!("ell f={f} w={w} {}", lvl.name()));
+        }
+    }
+}
+
+/// Empty rows (isolated nodes) and a mega-row crossing many staging
+/// tiles dispatch bitwise too — the remainder machinery has no hidden
+/// reorder.
+#[test]
+fn fp32_kernels_dispatch_bitwise_on_degenerate_shapes() {
+    let lvl = simd::level();
+    let f = 24usize;
+    // chung_lu leaves low-weight nodes isolated: empty rows exist.
+    let (g, b) = graph_and_features(300, 1.2, f, 77);
+    assert!((0..g.n_rows).any(|i| g.row_nnz(i) == 0), "fixture lost its empty rows");
+    let mut scalar = vec![0.0f32; g.n_rows * f];
+    let mut vector = vec![0.0f32; g.n_rows * f];
+    csr_rowcache_at(simd::SimdLevel::Scalar, &g, &b, f, &mut scalar);
+    csr_rowcache_at(lvl, &g, &b, f, &mut vector);
+    assert_bitwise(&scalar, &vector, "rowcache with empty rows");
+
+    // One row of 10_000 edges: dozens of staging tiles plus a tail.
+    // Tile boundaries are level-independent, so the arms still agree
+    // bitwise; vs naive only closeness holds (per-tile partial sums
+    // reassociate the row reduction — the dispatch gate keeps rows
+    // this long on csr_naive for exactly that reason).
+    let (g, b) = mega_row(10_000, 64, f, 78);
+    let mut scalar = vec![0.0f32; f];
+    let mut vector = vec![0.0f32; f];
+    csr_rowcache_at(simd::SimdLevel::Scalar, &g, &b, f, &mut scalar);
+    csr_rowcache_at(lvl, &g, &b, f, &mut vector);
+    assert_bitwise(&scalar, &vector, "rowcache mega-row");
+    let mut naive = vec![0.0f32; f];
+    csr_naive(&g, &b, f, &mut naive);
+    for k in 0..f {
+        let d = (naive[k] - scalar[k]).abs();
+        assert!(d <= 1e-2 * naive[k].abs().max(1.0), "mega-row col {k} drifted: {d}");
+    }
+}
+
+/// Quantize features with per-chunk ranges; return the codes, the
+/// params, and the exact dequantized fp32 view the dequant route sees.
+fn quantized(
+    b: &[f32],
+    n: usize,
+    f: usize,
+    rows_per_chunk: usize,
+) -> (Vec<u8>, ChunkedParams, Vec<f32>) {
+    let params = ChunkedParams::of_rows(b, n, f, rows_per_chunk);
+    let qb = params.quantize_rows(b, f);
+    let mut deq = vec![0.0f32; n * f];
+    params.dequantize_rows_into(&qb, 0, f, &mut deq);
+    (qb, params, deq)
+}
+
+/// Integer kernels dispatch bitwise: scalar vs detected arm, ELL and
+/// CSR, remainder widths included. Integer lanes are exact, so this
+/// holds by construction — the test pins it against regressions.
+#[test]
+fn i8_kernels_dispatch_bitwise_across_widths() {
+    let lvl = simd::level();
+    for f in [1usize, 5, 8, 13, 32] {
+        let (g, b) = graph_and_features(150, 12.0, f, 90 + f as u64);
+        let n = g.n_rows;
+        let (qb, params, _) = quantized(&b, n, f, 40);
+
+        let aq = AdjQuant::from_csr(&g, &params);
+        let mut scalar = vec![0.0f32; n * f];
+        let mut vector = vec![0.0f32; n * f];
+        csr_spmm_i8_at(simd::SimdLevel::Scalar, &g, &aq, &qb, f, &mut scalar);
+        csr_spmm_i8_at(lvl, &g, &aq, &qb, f, &mut vector);
+        assert_bitwise(&scalar, &vector, &format!("csr i8 f={f} {}", lvl.name()));
+
+        let ell = sample_ell(&g, 8, Strategy::Aes);
+        let aq = AdjQuant::from_ell(&ell, &params);
+        let mut scalar = vec![0.0f32; n * f];
+        let mut vector = vec![0.0f32; n * f];
+        ell_spmm_i8_at(simd::SimdLevel::Scalar, &ell, &aq, &qb, f, &mut scalar);
+        ell_spmm_i8_at(lvl, &ell, &aq, &qb, f, &mut vector);
+        assert_bitwise(&scalar, &vector, &format!("ell i8 f={f} {}", lvl.name()));
+    }
+}
+
+/// The quantized-domain kernels agree with dequantize-then-fp32 within
+/// the per-row requant bound: the only error source past the shared
+/// feature quantization is `|a_e - qa_e·row_scale| ≤ row_scale/2` per
+/// edge, amplified by the u8 code magnitude (≤ 255).
+#[test]
+fn i8_compute_matches_dequant_route_within_requant_bound() {
+    let f = 16usize;
+    for (n, deg, chunk, seed) in [(200usize, 8.0, 50usize, 5u64), (300, 25.0, 37, 6)] {
+        let (g, b) = graph_and_features(n, deg, f, seed);
+        let (qb, params, deq) = quantized(&b, n, f, chunk);
+
+        // The dequant route's exact aggregation over x̂.
+        let mut want = vec![0.0f32; n * f];
+        csr_naive(&g, &deq, f, &mut want);
+        let aq = AdjQuant::from_csr(&g, &params);
+        let mut got = vec![0.0f32; n * f];
+        csr_spmm_i8(&g, &aq, &qb, f, &mut got);
+        for i in 0..n {
+            // Worst case: every edge's coefficient off by half a step,
+            // every code at full scale (255), plus fp32 noise.
+            let bound = aq.row_scale[i] * 0.5 * 255.0 * g.row_nnz(i) as f32 + 1e-3;
+            for k in 0..f {
+                let d = (want[i * f + k] - got[i * f + k]).abs();
+                assert!(d <= bound, "row {i} col {k}: |{d}| > bound {bound}");
+            }
+        }
+
+        // Same contract on a sampled plan.
+        let ell = sample_ell(&g, 8, Strategy::Aes);
+        let mut want = vec![0.0f32; n * f];
+        aes_spmm::spmm::ell_spmm(&ell, &deq, f, &mut want);
+        let aq = AdjQuant::from_ell(&ell, &params);
+        let mut got = vec![0.0f32; n * f];
+        ell_spmm_i8(&ell, &aq, &qb, f, &mut got);
+        for i in 0..n {
+            let bound = aq.row_scale[i] * 0.5 * 255.0 * ell.slots[i] as f32 + 1e-3;
+            for k in 0..f {
+                let d = (want[i * f + k] - got[i * f + k]).abs();
+                assert!(d <= bound, "sampled row {i} col {k}: |{d}| > bound {bound}");
+            }
+        }
+    }
+}
+
+/// Threaded INT8 kernels are bitwise-equal to serial at every thread
+/// count — row partitioning cannot move a flush boundary (they are
+/// row-local) or reorder an integer accumulation.
+#[test]
+fn i8_parallel_composes_bitwise() {
+    let f = 12usize;
+    let (g, b) = graph_and_features(400, 18.0, f, 101);
+    let n = g.n_rows;
+    let (qb, params, _) = quantized(&b, n, f, 64);
+
+    let aq = AdjQuant::from_csr(&g, &params);
+    let mut serial = vec![0.0f32; n * f];
+    csr_spmm_i8(&g, &aq, &qb, f, &mut serial);
+    for threads in [1usize, 2, 5, 8] {
+        let mut par = vec![7.0f32; n * f];
+        csr_spmm_i8_par(&g, &aq, &qb, f, &mut par, threads);
+        assert_bitwise(&serial, &par, &format!("csr i8 par t={threads}"));
+    }
+
+    let ell = sample_ell(&g, 16, Strategy::Aes);
+    let aq = AdjQuant::from_ell(&ell, &params);
+    let mut serial = vec![0.0f32; n * f];
+    ell_spmm_i8(&ell, &aq, &qb, f, &mut serial);
+    for threads in [2usize, 7] {
+        let mut par = vec![7.0f32; n * f];
+        ell_spmm_i8_par(&ell, &aq, &qb, f, &mut par, threads);
+        assert_bitwise(&serial, &par, &format!("ell i8 par t={threads}"));
+    }
+}
