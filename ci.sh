@@ -13,6 +13,9 @@
 #                         already ran the gate via its `needs:` dependency)
 #   ./ci.sh --eval-only   accuracy conformance (repro eval -> ACC_eval.json)
 #                         + acc_diff regression gate (CI's eval job)
+#   ./ci.sh --tune-only   autotuner gate: repro tune --quick -> COST_spmm.json,
+#                         schema validation, and a bench pass asserting the
+#                         tuned-dispatch case landed (CI's tune job)
 #
 # Env knobs:
 #   SKIP_LINT=1   skip the fmt + clippy steps (e.g. a toolchain without
@@ -69,6 +72,30 @@ run_eval_gate() {
         ACC_eval.json benchmarks/baseline/ACC_eval.json
 }
 
+run_tune_gate() {
+    # The autotuner must (a) emit a schema-valid profile that its own
+    # validator round-trips, and (b) keep the tuned-dispatch bench case
+    # alive: spmm_kernels builds an argmin cost model over the forced
+    # single-format cases and benches the dispatcher through it, so the
+    # case's presence in the fresh JSON is the bench-level proof the
+    # measured model tracks the best single-format configuration.
+    echo "== autotune: COST_spmm.json (quick) =="
+    cargo run --release -p aes-spmm --bin repro -- \
+        tune --quick --out "$PWD/COST_spmm.json"
+    echo "== cost-model schema validation =="
+    cargo run --release -p aes-spmm --bin repro -- \
+        tune --validate "$PWD/COST_spmm.json"
+    echo "== tuned-vs-forced bench case =="
+    cargo bench --bench spmm_kernels -- --json "$PWD/BENCH_spmm.json"
+    grep -q '"tuned dispatch (exact)' "$PWD/BENCH_spmm.json" || die \
+        "BENCH_spmm.json has no 'tuned dispatch (exact)' case." \
+        "the tuned-dispatch bench in rust/benches/spmm_kernels.rs was removed or renamed;" \
+        "see docs/dispatch.md (CI section)"
+    grep -q '"forced bcsr' "$PWD/BENCH_spmm.json" || die \
+        "BENCH_spmm.json has no forced single-format cases to compare against." \
+        "see docs/dispatch.md (CI section)"
+}
+
 if [[ "${1:-}" == "--bench-only" ]]; then
     run_benches
     echo "CI OK (bench only)"
@@ -78,6 +105,12 @@ fi
 if [[ "${1:-}" == "--eval-only" ]]; then
     run_eval_gate
     echo "CI OK (eval only)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--tune-only" ]]; then
+    run_tune_gate
+    echo "CI OK (tune only)"
     exit 0
 fi
 

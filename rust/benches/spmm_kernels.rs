@@ -10,6 +10,7 @@
 //! perf trajectory.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use aes_spmm::bench::{print_header, print_result, BenchResult, Bencher};
 use aes_spmm::exec::{self, ExecEnv, GraphProfile};
@@ -19,8 +20,9 @@ use aes_spmm::quant::ChunkedParams;
 use aes_spmm::rng::Pcg32;
 use aes_spmm::sampling::{sample_ell, Strategy};
 use aes_spmm::spmm::{
-    csr_naive, csr_naive_par, csr_rowcache, csr_rowcache_at, csr_spmm_i8, ell_spmm_at,
-    ell_spmm_i8, ell_spmm_par, simd, spmm_flops, spmm_i8_flops, AdjQuant,
+    bcsr_spmm_par, csr_naive, csr_naive_par, csr_rowcache, csr_rowcache_at, csr_spmm_i8,
+    dense_spmm_par, dense_tile_viable, ell_spmm_at, ell_spmm_i8, ell_spmm_par, simd, spmm_flops,
+    spmm_i8_flops, AdjQuant, BlockedCsr, DenseTile, BCSR_BLOCK_ROWS,
 };
 use aes_spmm::util::JsonValue;
 
@@ -102,6 +104,7 @@ fn main() {
         });
         print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
         rec.push(&r, Some(r.throughput(flops) / 1e9));
+        let forced_csr_ns = r.median.as_nanos() as f64;
 
         let r = b.run("rowcache csr (GE-SpMM analog)", || {
             csr_rowcache(&g, &feats, f, &mut out)
@@ -141,6 +144,63 @@ fn main() {
         });
         print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
         rec.push(&r, Some(r.throughput(flops) / 1e9));
+
+        // --- Format zoo: the same exact operand forced through each
+        // re-layout at the full thread budget ("exact csr (N threads)"
+        // above is the forced-CSR bar), then the tuned dispatcher on
+        // top. The in-memory cost model is the argmin of the forced
+        // medians — built with the same `set_cell`/install path
+        // `repro tune --out` + serving use — so by construction the
+        // tuned case tracks the best single-format configuration on
+        // every workload (`ci.sh --tune-only` asserts the case lands
+        // in the JSON baseline).
+        let mut forced = vec![(exec::KernelKind::CsrNaivePar, forced_csr_ns)];
+        let bcsr = BlockedCsr::from_csr(&g, BCSR_BLOCK_ROWS);
+        let r = b.run(format!("forced bcsr ({threads} threads)"), || {
+            bcsr_spmm_par(&bcsr, &feats, f, &mut out, threads)
+        });
+        print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+        rec.push(&r, Some(r.throughput(flops) / 1e9));
+        forced.push((exec::KernelKind::CsrBlockedPar, r.median.as_nanos() as f64));
+
+        let dense =
+            dense_tile_viable(&g, exec::DENSE_TILE_SLACK).then(|| DenseTile::from_csr(&g));
+        if let Some(t) = &dense {
+            let r = b.run(format!("forced dense ({threads} threads)"), || {
+                dense_spmm_par(t, &feats, f, &mut out, threads)
+            });
+            print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+            rec.push(&r, Some(r.throughput(flops) / 1e9));
+            forced.push((exec::KernelKind::ExactDensePar, r.median.as_nanos() as f64));
+        }
+
+        let profile = GraphProfile::of(&g);
+        let best = forced
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|&(k, _)| k)
+            .expect("at least one forced case");
+        let mut model = exec::CostModel::default();
+        let bucket = exec::ProfileBucket::of(&profile, f);
+        model.set_cell(&bucket, exec::Family::Exact, exec::KernelDomain::F32, best);
+        let prev = exec::install_cost_model(Some(Arc::new(model)));
+        let mask = exec::FormatMask { blocked: true, dense: dense.is_some() };
+        let tuned =
+            exec::select_kernel_tuned(&profile, f, None, &env, exec::KernelDomain::F32, mask);
+        let run_tuned = |out: &mut [f32]| match tuned.format() {
+            exec::FormatKind::Blocked => exec::run_blocked(tuned, &bcsr, &feats, f, out, threads),
+            exec::FormatKind::Dense => {
+                let t = dense.as_ref().expect("dense pick without a tile");
+                exec::run_dense(tuned, t, &feats, f, out, threads)
+            }
+            _ => exec::run_exact(tuned, &g, &feats, f, out, threads),
+        };
+        let r = b.run(format!("tuned dispatch (exact) → {}", tuned.name()), || {
+            run_tuned(&mut out)
+        });
+        print_result(&r, Some(("GFLOP/s", r.throughput(flops) / 1e9)));
+        rec.push(&r, Some(r.throughput(flops) / 1e9));
+        exec::install_cost_model(prev);
 
         for w in [16usize, 64, 256] {
             for strat in Strategy::ALL {

@@ -372,6 +372,13 @@ type BankKey = (String, Strategy, Option<usize>, PrecisionMode, usize);
 /// Run the conformance grid under `dir` (datasets are (re)written there
 /// deterministically). `quick` trims the width axis for smoke runs.
 pub fn run_eval(dir: &Path, quick: bool) -> Result<EvalReport> {
+    // Record which dispatch regime scored this grid: a tuned run must
+    // satisfy the same budgets as the heuristic run (the format zoo is
+    // bitwise-equal to CSR, and this grid is what checks that claim).
+    match crate::exec::installed_fingerprint() {
+        0 => println!("dispatch: heuristics (no cost model installed)"),
+        fp => println!("dispatch: tuned (cost model fingerprint {fp:#018x})"),
+    }
     let names = write_eval_datasets(dir)?;
     let store = Arc::new(ModelStore::load(dir, &names, &["gcn".to_string()])?);
 

@@ -10,8 +10,21 @@
 //! * long rows with a wide feature dim favor the GE-SpMM-analog row
 //!   cache (tile staging + register blocks), short rows do not repay the
 //!   staging and keep the naive kernel.
+//!
+//! When a measured cost model is installed (`repro tune`, `exec::tune`),
+//! [`select_kernel_tuned`] consults it first — per shard, keyed by the
+//! profile's bucket — and the heuristics above become the fallback for
+//! unmeasured buckets or inadmissible picks. The classic entry points
+//! [`select_kernel`] / [`select_kernel_i8`] are thin wrappers over the
+//! same selector restricted to the classic CSR/ELL families, so callers
+//! that execute through [`run_exact`] / [`run_ell`] can never receive a
+//! format-zoo kernel they cannot run. Every format choice is a pure
+//! performance decision: all admissible kernels for a cell are
+//! bitwise-identical (`tests/format_equiv.rs`), so a model can only make
+//! serving faster or slower — never different (docs/dispatch.md).
 
 use crate::graph::{Csr, Ell};
+use crate::spmm::{AdjQuant, BlockedCsr, DenseTile};
 
 use super::pool;
 
@@ -67,10 +80,105 @@ pub enum KernelKind {
     /// Sampled fixed-width multiply in the quantized domain,
     /// row-chunked across the pool.
     EllSampledI8Par,
+    /// Exact blocked-CSR (fixed-height row blocks), single thread.
+    CsrBlocked,
+    /// Exact blocked-CSR, row-chunked across the pool.
+    CsrBlockedPar,
+    /// Exact dense-tile (fixed-pitch row slabs), single thread.
+    ExactDense,
+    /// Exact dense-tile, row-chunked across the pool.
+    ExactDensePar,
+    /// Exact blocked-CSR in the quantized domain, single thread.
+    CsrBlockedI8,
+    /// Exact blocked-CSR in the quantized domain, row-chunked.
+    CsrBlockedI8Par,
+    /// Exact dense-tile in the quantized domain, single thread.
+    ExactDenseI8,
+    /// Exact dense-tile in the quantized domain, row-chunked.
+    ExactDenseI8Par,
+}
+
+/// The operand layout a [`KernelKind`] consumes — what dispatch must
+/// have materialized before it can run the kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FormatKind {
+    /// Plain CSR (always available; the canonical layout).
+    Csr,
+    /// Blocked-CSR ([`crate::spmm::BlockedCsr`]).
+    Blocked,
+    /// Dense tile ([`crate::spmm::DenseTile`]).
+    Dense,
+    /// Sampled fixed-width ELL.
+    Ell,
+}
+
+/// Which optional operand layouts the caller has materialized for this
+/// input. The selector only returns a format-zoo kernel when its layout
+/// is available; CSR and ELL are implied by the call family.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FormatMask {
+    /// A [`crate::spmm::BlockedCsr`] of the operand exists.
+    pub blocked: bool,
+    /// A [`crate::spmm::DenseTile`] of the operand exists.
+    pub dense: bool,
+}
+
+impl FormatMask {
+    /// Classic CSR/ELL only — what [`select_kernel`] /
+    /// [`select_kernel_i8`] pass, so legacy callers never receive a
+    /// kernel they cannot execute.
+    pub const CLASSIC: FormatMask = FormatMask { blocked: false, dense: false };
+    /// Every format materialized (the autotuner's configuration).
+    pub const ALL: FormatMask = FormatMask { blocked: true, dense: true };
+}
+
+/// The accumulation domain a kernel is selected for — fp32 or the
+/// quantized `i8×u8→i32` path. Folding the two selectors over one
+/// domain-parameterized core is what keeps their thresholds from
+/// drifting apart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelDomain {
+    /// fp32 accumulation.
+    F32,
+    /// Quantized `i8×u8→i32` accumulation.
+    I8,
+}
+
+impl KernelDomain {
+    /// Stable label used in cost-model cell keys.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelDomain::F32 => "f32",
+            KernelDomain::I8 => "i8",
+        }
+    }
 }
 
 impl KernelKind {
-    /// Stable label used in benches, logs, and reports.
+    /// Every dispatch target, for enumeration (autotuner candidates,
+    /// name round-trip tests).
+    pub const ALL: [KernelKind; 17] = [
+        KernelKind::CsrNaive,
+        KernelKind::CsrNaivePar,
+        KernelKind::CsrRowCache,
+        KernelKind::EllSampled,
+        KernelKind::EllSampledPar,
+        KernelKind::CsrI8,
+        KernelKind::CsrI8Par,
+        KernelKind::EllSampledI8,
+        KernelKind::EllSampledI8Par,
+        KernelKind::CsrBlocked,
+        KernelKind::CsrBlockedPar,
+        KernelKind::ExactDense,
+        KernelKind::ExactDensePar,
+        KernelKind::CsrBlockedI8,
+        KernelKind::CsrBlockedI8Par,
+        KernelKind::ExactDenseI8,
+        KernelKind::ExactDenseI8Par,
+    ];
+
+    /// Stable label used in benches, logs, reports, and cost-model
+    /// cells.
     pub fn name(self) -> &'static str {
         match self {
             KernelKind::CsrNaive => "csr_naive",
@@ -82,7 +190,22 @@ impl KernelKind {
             KernelKind::CsrI8Par => "csr_spmm_i8_par",
             KernelKind::EllSampledI8 => "ell_spmm_i8",
             KernelKind::EllSampledI8Par => "ell_spmm_i8_par",
+            KernelKind::CsrBlocked => "bcsr_spmm",
+            KernelKind::CsrBlockedPar => "bcsr_spmm_par",
+            KernelKind::ExactDense => "dense_spmm",
+            KernelKind::ExactDensePar => "dense_spmm_par",
+            KernelKind::CsrBlockedI8 => "bcsr_spmm_i8",
+            KernelKind::CsrBlockedI8Par => "bcsr_spmm_i8_par",
+            KernelKind::ExactDenseI8 => "dense_spmm_i8",
+            KernelKind::ExactDenseI8Par => "dense_spmm_i8_par",
         }
+    }
+
+    /// Inverse of [`KernelKind::name`] — how cost-model JSON cells come
+    /// back to dispatch targets. Unknown names are `None` (a stale or
+    /// corrupt model must degrade, never panic).
+    pub fn parse(name: &str) -> Option<KernelKind> {
+        KernelKind::ALL.into_iter().find(|k| k.name() == name)
     }
 
     /// Whether the kernel row-chunks across the pool.
@@ -93,6 +216,10 @@ impl KernelKind {
                 | KernelKind::EllSampledPar
                 | KernelKind::CsrI8Par
                 | KernelKind::EllSampledI8Par
+                | KernelKind::CsrBlockedPar
+                | KernelKind::ExactDensePar
+                | KernelKind::CsrBlockedI8Par
+                | KernelKind::ExactDenseI8Par
         )
     }
 
@@ -116,7 +243,34 @@ impl KernelKind {
                 | KernelKind::CsrI8Par
                 | KernelKind::EllSampledI8
                 | KernelKind::EllSampledI8Par
+                | KernelKind::CsrBlockedI8
+                | KernelKind::CsrBlockedI8Par
+                | KernelKind::ExactDenseI8
+                | KernelKind::ExactDenseI8Par
         )
+    }
+
+    /// The operand layout this kernel consumes.
+    pub fn format(self) -> FormatKind {
+        match self {
+            KernelKind::CsrNaive
+            | KernelKind::CsrNaivePar
+            | KernelKind::CsrRowCache
+            | KernelKind::CsrI8
+            | KernelKind::CsrI8Par => FormatKind::Csr,
+            KernelKind::EllSampled
+            | KernelKind::EllSampledPar
+            | KernelKind::EllSampledI8
+            | KernelKind::EllSampledI8Par => FormatKind::Ell,
+            KernelKind::CsrBlocked
+            | KernelKind::CsrBlockedPar
+            | KernelKind::CsrBlockedI8
+            | KernelKind::CsrBlockedI8Par => FormatKind::Blocked,
+            KernelKind::ExactDense
+            | KernelKind::ExactDensePar
+            | KernelKind::ExactDenseI8
+            | KernelKind::ExactDenseI8Par => FormatKind::Dense,
+        }
     }
 }
 
@@ -179,28 +333,85 @@ pub const ROWCACHE_MAX_ROW_NNZ: usize = crate::spmm::ROWCACHE_TILE;
 /// (~tens of µs of multiply per chunk at CPU rates).
 pub const PAR_MIN_FLOPS: usize = 2_000_000;
 
-/// Pick a kernel for one SpMM. `width = None` means exact aggregation;
-/// `Some(w)` means the route is sampled to ELL width `w`.
-pub fn select_kernel(
+/// Whether `kind` may be returned for this selection: right family for
+/// the route, right domain, a thread budget that supports it, its
+/// operand layout materialized, and — for the row-cache kernel — the
+/// bitwise gate intact. Cost-model picks that fail this check degrade
+/// to the heuristics; it is the contract that a tuned model can only
+/// change *speed*, never executability or numerics.
+pub(crate) fn admissible(
+    kind: KernelKind,
     profile: &GraphProfile,
     feat_dim: usize,
     width: Option<usize>,
     env: &ExecEnv,
+    domain: KernelDomain,
+    mask: FormatMask,
+) -> bool {
+    if kind.is_sampled() != width.is_some() {
+        return false;
+    }
+    if kind.is_i8() != (domain == KernelDomain::I8) {
+        return false;
+    }
+    if kind.is_parallel() && env.threads <= 1 {
+        return false;
+    }
+    match kind.format() {
+        FormatKind::Blocked if !mask.blocked => return false,
+        FormatKind::Dense if !mask.dense => return false,
+        _ => {}
+    }
+    // Bitwise gate, not a perf gate: multi-tile rowcache rows change the
+    // per-row FP accumulation order, which would break the exact-family
+    // bitwise-equality contract every other admissible kernel obeys.
+    if kind == KernelKind::CsrRowCache && profile.max_nnz > ROWCACHE_MAX_ROW_NNZ {
+        return false;
+    }
+    true
+}
+
+/// The hand-tuned fallback: one selector parameterized by domain, so
+/// the fp32 and i8 thresholds are literally the same code path (the
+/// flop estimate is scaled to like units via
+/// [`crate::spmm::spmm_i8_flops`] — integer MACs are ~2x cheaper, so an
+/// i8 workload must be twice as large before the pool fork-join
+/// amortizes). The rowcache arm only exists in the fp32 domain: the i8
+/// kernels have no fp32 staging tile.
+fn select_heuristic(
+    profile: &GraphProfile,
+    feat_dim: usize,
+    width: Option<usize>,
+    env: &ExecEnv,
+    domain: KernelDomain,
 ) -> KernelKind {
-    match width {
-        Some(w) => {
-            // Sampling keeps at most `w` edges per row.
-            let kept = profile.nnz.min(profile.n_rows.saturating_mul(w));
-            let flops = 2usize.saturating_mul(kept).saturating_mul(feat_dim);
-            if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+    let kept = match width {
+        // Sampling keeps at most `w` edges per row.
+        Some(w) => profile.nnz.min(profile.n_rows.saturating_mul(w)),
+        None => profile.nnz,
+    };
+    let flops = match domain {
+        KernelDomain::F32 => crate::spmm::spmm_flops(kept, feat_dim),
+        KernelDomain::I8 => crate::spmm::spmm_i8_flops(kept, feat_dim),
+    };
+    let par = env.threads > 1 && flops >= PAR_MIN_FLOPS;
+    match (width, domain) {
+        (Some(_), KernelDomain::F32) => {
+            if par {
                 KernelKind::EllSampledPar
             } else {
                 KernelKind::EllSampled
             }
         }
-        None => {
-            let flops = 2usize.saturating_mul(profile.nnz).saturating_mul(feat_dim);
-            if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+        (Some(_), KernelDomain::I8) => {
+            if par {
+                KernelKind::EllSampledI8Par
+            } else {
+                KernelKind::EllSampledI8
+            }
+        }
+        (None, KernelDomain::F32) => {
+            if par {
                 KernelKind::CsrNaivePar
             } else if profile.mean_nnz >= ROWCACHE_MIN_MEAN_NNZ
                 && feat_dim >= ROWCACHE_MIN_FEAT
@@ -211,40 +422,66 @@ pub fn select_kernel(
                 KernelKind::CsrNaive
             }
         }
-    }
-}
-
-/// Pick a kernel for one SpMM executed in the quantized domain. Mirrors
-/// [`select_kernel`] with the flop estimate scaled by
-/// [`crate::spmm::spmm_i8_flops`]: integer MACs are ~2x cheaper per
-/// nnz, so a workload must be twice as large before the pool fork-join
-/// amortizes — [`PAR_MIN_FLOPS`] compares like units. The rowcache gate
-/// does not apply: the i8 kernels have no fp32 staging tile.
-pub fn select_kernel_i8(
-    profile: &GraphProfile,
-    feat_dim: usize,
-    width: Option<usize>,
-    env: &ExecEnv,
-) -> KernelKind {
-    match width {
-        Some(w) => {
-            let kept = profile.nnz.min(profile.n_rows.saturating_mul(w));
-            let flops = crate::spmm::spmm_i8_flops(kept, feat_dim);
-            if env.threads > 1 && flops >= PAR_MIN_FLOPS {
-                KernelKind::EllSampledI8Par
-            } else {
-                KernelKind::EllSampledI8
-            }
-        }
-        None => {
-            let flops = crate::spmm::spmm_i8_flops(profile.nnz, feat_dim);
-            if env.threads > 1 && flops >= PAR_MIN_FLOPS {
+        (None, KernelDomain::I8) => {
+            if par {
                 KernelKind::CsrI8Par
             } else {
                 KernelKind::CsrI8
             }
         }
     }
+}
+
+/// Pick a kernel for one SpMM with the full selector: the installed
+/// cost model first (per-shard, keyed by the profile's bucket — see
+/// [`super::tune`]), the hand-tuned heuristics when no model is
+/// installed, the bucket is unmeasured, or the model's pick is not
+/// [`admissible`] for this call (wrong family, thread budget of 1, an
+/// operand layout the caller did not materialize, a violated bitwise
+/// gate). `mask` declares which format-zoo layouts the caller can
+/// execute.
+pub fn select_kernel_tuned(
+    profile: &GraphProfile,
+    feat_dim: usize,
+    width: Option<usize>,
+    env: &ExecEnv,
+    domain: KernelDomain,
+    mask: FormatMask,
+) -> KernelKind {
+    if let Some(kind) = super::tune::consult(profile, feat_dim, width, domain) {
+        if admissible(kind, profile, feat_dim, width, env, domain, mask) {
+            return kind;
+        }
+    }
+    select_heuristic(profile, feat_dim, width, env, domain)
+}
+
+/// Pick a kernel for one SpMM. `width = None` means exact aggregation;
+/// `Some(w)` means the route is sampled to ELL width `w`.
+///
+/// Classic-family entry point: restricted to CSR/ELL kernels (mask
+/// [`FormatMask::CLASSIC`]) so callers that execute through
+/// [`run_exact`] / [`run_ell`] always receive a kernel those executors
+/// accept. An installed cost model still steers the classic choices
+/// (serial vs parallel vs rowcache).
+pub fn select_kernel(
+    profile: &GraphProfile,
+    feat_dim: usize,
+    width: Option<usize>,
+    env: &ExecEnv,
+) -> KernelKind {
+    select_kernel_tuned(profile, feat_dim, width, env, KernelDomain::F32, FormatMask::CLASSIC)
+}
+
+/// [`select_kernel`] for the quantized domain — same selector core, so
+/// the i8 thresholds can never drift from fp32.
+pub fn select_kernel_i8(
+    profile: &GraphProfile,
+    feat_dim: usize,
+    width: Option<usize>,
+    env: &ExecEnv,
+) -> KernelKind {
+    select_kernel_tuned(profile, feat_dim, width, env, KernelDomain::I8, FormatMask::CLASSIC)
 }
 
 /// Execute an exact SpMM through an explicit kernel choice.
@@ -312,6 +549,83 @@ pub fn run_ell_i8(
         KernelKind::EllSampledI8 => crate::spmm::ell_spmm_i8(ell, aq, qb, f, out),
         KernelKind::EllSampledI8Par => crate::spmm::ell_spmm_i8_par(ell, aq, qb, f, out, threads),
         other => panic!("{} is not a sampled i8 kernel", other.name()),
+    }
+}
+
+/// Execute an exact SpMM over a blocked-CSR operand.
+///
+/// Panics if `kind` is not a blocked-CSR fp32 kernel.
+pub fn run_blocked(
+    kind: KernelKind,
+    m: &BlockedCsr,
+    b: &[f32],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match kind {
+        KernelKind::CsrBlocked => crate::spmm::bcsr_spmm(m, b, f, out),
+        KernelKind::CsrBlockedPar => crate::spmm::bcsr_spmm_par(m, b, f, out, threads),
+        other => panic!("{} is not a blocked-CSR fp32 kernel", other.name()),
+    }
+}
+
+/// Execute an exact SpMM over a dense-tile operand.
+///
+/// Panics if `kind` is not a dense-tile fp32 kernel.
+pub fn run_dense(
+    kind: KernelKind,
+    t: &DenseTile,
+    b: &[f32],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match kind {
+        KernelKind::ExactDense => crate::spmm::dense_spmm(t, b, f, out),
+        KernelKind::ExactDensePar => crate::spmm::dense_spmm_par(t, b, f, out, threads),
+        other => panic!("{} is not a dense-tile fp32 kernel", other.name()),
+    }
+}
+
+/// Execute a quantized-domain SpMM over a blocked-CSR operand (`aq` in
+/// CSR nnz order, exactly as [`run_exact_i8`] consumes it).
+///
+/// Panics if `kind` is not a blocked-CSR i8 kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn run_blocked_i8(
+    kind: KernelKind,
+    m: &BlockedCsr,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match kind {
+        KernelKind::CsrBlockedI8 => crate::spmm::bcsr_spmm_i8(m, aq, qb, f, out),
+        KernelKind::CsrBlockedI8Par => crate::spmm::bcsr_spmm_i8_par(m, aq, qb, f, out, threads),
+        other => panic!("{} is not a blocked-CSR i8 kernel", other.name()),
+    }
+}
+
+/// Execute a quantized-domain SpMM over a dense-tile operand.
+///
+/// Panics if `kind` is not a dense-tile i8 kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn run_dense_i8(
+    kind: KernelKind,
+    t: &DenseTile,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match kind {
+        KernelKind::ExactDenseI8 => crate::spmm::dense_spmm_i8(t, aq, qb, f, out),
+        KernelKind::ExactDenseI8Par => crate::spmm::dense_spmm_i8_par(t, aq, qb, f, out, threads),
+        other => panic!("{} is not a dense-tile i8 kernel", other.name()),
     }
 }
 
@@ -428,7 +742,10 @@ mod tests {
         assert_eq!(select_kernel_i8(&p2, 64, None, &multi), KernelKind::CsrI8Par);
 
         // Sampled routes always land on an ELL i8 kernel, same width cap.
-        assert_eq!(select_kernel_i8(&profile(100, 400), 8, Some(32), &multi), KernelKind::EllSampledI8);
+        assert_eq!(
+            select_kernel_i8(&profile(100, 400), 8, Some(32), &multi),
+            KernelKind::EllSampledI8
+        );
         assert_eq!(
             select_kernel_i8(&profile(200_000, 8_000_000), 128, Some(32), &multi),
             KernelKind::EllSampledI8Par
@@ -502,6 +819,101 @@ mod tests {
             assert!(!kind.is_sampled());
             assert_close(&want, &got, 1e-6);
         }
+    }
+
+    #[test]
+    fn kernel_names_round_trip() {
+        for kind in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind), "{kind:?}");
+        }
+        assert_eq!(KernelKind::parse("no_such_kernel"), None);
+        // Format classification is consistent with the executor families.
+        for kind in KernelKind::ALL {
+            match kind.format() {
+                FormatKind::Ell => assert!(kind.is_sampled()),
+                _ => assert!(!kind.is_sampled()),
+            }
+        }
+    }
+
+    #[test]
+    fn admissibility_gates_family_domain_threads_and_formats() {
+        use KernelDomain::{F32, I8};
+        let multi = ExecEnv::with_threads(8);
+        let single = ExecEnv::with_threads(1);
+        let all = FormatMask::ALL;
+        let classic = FormatMask::CLASSIC;
+        let p = profile(100, 5_000);
+        let adm = |k: KernelKind, p: &GraphProfile, w: Option<usize>, e: &ExecEnv, d, m| {
+            admissible(k, p, 16, w, e, d, m)
+        };
+
+        // Family: sampled kernels need a width, exact kernels reject one.
+        assert!(!adm(KernelKind::EllSampled, &p, None, &multi, F32, all));
+        assert!(!adm(KernelKind::CsrNaive, &p, Some(8), &multi, F32, all));
+        // Domain: an i8 kernel never serves an fp32 selection.
+        assert!(!adm(KernelKind::CsrI8, &p, None, &multi, F32, all));
+        assert!(adm(KernelKind::CsrI8, &p, None, &multi, I8, all));
+        // Threads: parallel kernels need a budget > 1.
+        assert!(!adm(KernelKind::CsrBlockedPar, &p, None, &single, F32, all));
+        // Formats: the mask gates the zoo, never plain CSR.
+        assert!(adm(KernelKind::CsrBlocked, &p, None, &multi, F32, all));
+        assert!(!adm(KernelKind::CsrBlocked, &p, None, &multi, F32, classic));
+        assert!(!adm(KernelKind::ExactDense, &p, None, &multi, F32, classic));
+        assert!(adm(KernelKind::CsrNaive, &p, None, &multi, F32, classic));
+        // The rowcache bitwise gate survives tuned selection.
+        let over = GraphProfile {
+            n_rows: 100,
+            nnz: 5_000,
+            mean_nnz: 50.0,
+            max_nnz: ROWCACHE_MAX_ROW_NNZ + 1,
+        };
+        assert!(!adm(KernelKind::CsrRowCache, &over, None, &multi, F32, all));
+    }
+
+    #[test]
+    fn tuned_selector_without_model_is_the_heuristic() {
+        use KernelDomain::{F32, I8};
+        // No model installed in lib unit tests, so the tuned selector
+        // (with any mask) must reproduce the heuristics exactly — the
+        // fallback path the golden-fixture tests rely on.
+        let all = FormatMask::ALL;
+        let envs = [ExecEnv::with_threads(1), ExecEnv::with_threads(8)];
+        for env in &envs {
+            for (n, nnz) in [(100usize, 500usize), (100, 5_000), (100_000, 2_000_000)] {
+                for f in [4usize, 64] {
+                    for width in [None, Some(16)] {
+                        let p = profile(n, nnz);
+                        assert_eq!(
+                            select_kernel_tuned(&p, f, width, env, F32, all),
+                            select_kernel(&p, f, width, env)
+                        );
+                        assert_eq!(
+                            select_kernel_tuned(&p, f, width, env, I8, all),
+                            select_kernel_i8(&p, f, width, env)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn format_executors_match_csr_bitwise() {
+        let (g, b) = random_graph_and_features(250, 20.0, 12, 9);
+        let mut want = vec![0.0f32; g.n_rows * 12];
+        crate::spmm::csr_naive(&g, &b, 12, &mut want);
+        let m = crate::spmm::BlockedCsr::from_csr(&g, crate::spmm::BCSR_BLOCK_ROWS);
+        let t = crate::spmm::DenseTile::from_csr(&g);
+        let mut got = vec![1.0f32; g.n_rows * 12];
+        run_blocked(KernelKind::CsrBlocked, &m, &b, 12, &mut got, 1);
+        assert_eq!(want, got);
+        run_blocked(KernelKind::CsrBlockedPar, &m, &b, 12, &mut got, 4);
+        assert_eq!(want, got);
+        run_dense(KernelKind::ExactDense, &t, &b, 12, &mut got, 1);
+        assert_eq!(want, got);
+        run_dense(KernelKind::ExactDensePar, &t, &b, 12, &mut got, 4);
+        assert_eq!(want, got);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! | `plan_cache` | [`PlanCache`] + [`ExecPlan`]: per-route staged features (zero-copy row-block handles on the streaming path), sampled ELL, kernel choice — behind an LRU with generation-fenced invalidation and epoch-versioned entries (live-graph mutation, `docs/mutation.md`) |
 //! | `sharded`    | [`ShardedPlan`] + [`ShardUnit`]: working-set-budgeted row shards with per-shard sampling + dispatch, executed as independent pool tasks and merged by row concatenation; units cached per [`ShardKey`] so warm routes rebuild only cold shards; [`ShardLayout`] freezes the cuts across epochs so deltas re-sample only touched shards |
 //! | `prefetch`   | [`Prefetcher`]: build the next route's plan on a private pool so feature staging overlaps the current batch's SpMM |
+//! | `tune`       | [`CostModel`] + [`run_tune`]: measured kernel×format×precision selection table over quantized shard profiles (`repro tune`), installed process-wide and consulted by [`select_kernel_tuned`] with heuristic fallback (`docs/dispatch.md`) |
 //!
 //! # Rules
 //!
@@ -34,11 +35,18 @@ mod plan_cache;
 mod pool;
 mod prefetch;
 mod sharded;
+mod tune;
 
 pub use dispatch::{
-    run_ell, run_ell_i8, run_exact, run_exact_i8, select_kernel, select_kernel_i8, spmm_ell,
-    spmm_exact, warm_pool, ExecEnv, GraphProfile, KernelKind, PAR_MIN_FLOPS, ROWCACHE_MAX_ROW_NNZ,
-    ROWCACHE_MIN_FEAT, ROWCACHE_MIN_MEAN_NNZ,
+    run_blocked, run_blocked_i8, run_dense, run_dense_i8, run_ell, run_ell_i8, run_exact,
+    run_exact_i8, select_kernel, select_kernel_i8, select_kernel_tuned, spmm_ell, spmm_exact,
+    warm_pool, ExecEnv, FormatKind, FormatMask, GraphProfile, KernelDomain, KernelKind,
+    PAR_MIN_FLOPS, ROWCACHE_MAX_ROW_NNZ, ROWCACHE_MIN_FEAT, ROWCACHE_MIN_MEAN_NNZ,
+};
+pub use tune::{
+    cell_key, install_cost_model, install_cost_model_from, installed_cost_model,
+    installed_fingerprint, run_tune, CostModel, Density, Family, FeatBand, ProfileBucket, Skew,
+    TuneOptions, COST_MODEL_SCHEMA, COST_MODEL_VERSION, DENSE_TILE_SLACK,
 };
 pub use plan_cache::{prepare_plan, AdjQuantPlan, ExecPlan, PlanCache, PlanSpec};
 pub use pool::{global as global_pool, Pool};

@@ -41,13 +41,16 @@ use std::sync::Arc;
 
 use crate::graph::{working_set_bytes, Csr, Ell, GraphShard, ShardPlan, ShardSpec};
 use crate::sampling::{sample_ell, shard_width, Strategy, FP32_EDGE_BYTES};
+use crate::spmm::{dense_tile_viable, AdjQuant, BlockedCsr, DenseTile, BCSR_BLOCK_ROWS};
 
 use super::dispatch::{
-    run_ell, run_ell_i8, run_exact, run_exact_i8, select_kernel, select_kernel_i8, ExecEnv,
-    GraphProfile, KernelKind,
+    run_blocked, run_blocked_i8, run_dense, run_dense_i8, run_ell, run_ell_i8, run_exact,
+    run_exact_i8, select_kernel_tuned, ExecEnv, FormatKind, FormatMask, GraphProfile, KernelDomain,
+    KernelKind,
 };
 use super::plan_cache::{AdjQuantPlan, PlanCache};
 use super::pool;
+use super::tune;
 
 /// Borrowed handle to the shared shard-unit cache, plus the identity of
 /// the graph the units are for: the dataset `tag` and the graph `epoch`
@@ -180,10 +183,16 @@ pub struct ShardKey {
     pub strategy: Option<Strategy>,
     /// Global row range `[start, end)` the unit covers.
     pub rows: (usize, usize),
+    /// Fingerprint of the cost model installed when the key was made
+    /// (0 = heuristics). Units record which selection table shaped
+    /// their materialized formats, so swapping in a new model (or
+    /// uninstalling one) can never serve a unit tuned for the old one.
+    pub model: u64,
 }
 
 impl ShardKey {
-    /// Normalized constructor (drops the strategy for exact units).
+    /// Normalized constructor (drops the strategy for exact units);
+    /// stamps the currently installed cost-model fingerprint.
     pub fn new(
         tag: &str,
         width: Option<usize>,
@@ -195,6 +204,7 @@ impl ShardKey {
             width,
             strategy: width.map(|_| strategy),
             rows: (rows.start, rows.end),
+            model: tune::installed_fingerprint(),
         }
     }
 }
@@ -256,6 +266,14 @@ pub struct ShardUnit {
     /// Statistics of the unit's aggregation operand (the ELL when
     /// sampled, else the CSR slice) — per-layer dispatch reads this.
     pub profile: GraphProfile,
+    /// Blocked-CSR re-layout of the shard, materialized at build time
+    /// when the (cost-model-aware) selector wants it for either
+    /// precision domain. `None` for sampled units.
+    pub bcsr: Option<BlockedCsr>,
+    /// Dense-tile re-layout of the shard, materialized when viable
+    /// ([`crate::exec::DENSE_TILE_SLACK`]) *and* selected. `None` for
+    /// sampled units.
+    pub dense: Option<DenseTile>,
     /// Kernel dispatched from the shard's profile at the plan's input
     /// feature dim (observability; execution re-selects per layer, an
     /// O(1) decision). Always a serial kernel — shards *are* the
@@ -263,8 +281,18 @@ pub struct ShardUnit {
     pub kernel: KernelKind,
 }
 
+impl ShardUnit {
+    /// Which re-layouts this unit materialized — the per-shard format
+    /// mask execution passes back into [`select_kernel_tuned`], so a
+    /// cost model installed *after* the unit was built can never pick a
+    /// layout the unit doesn't have.
+    pub fn format_mask(&self) -> FormatMask {
+        FormatMask { blocked: self.bcsr.is_some(), dense: self.dense.is_some() }
+    }
+}
+
 /// Build one unit: per-shard tile width, per-shard sampling, per-shard
-/// dispatch.
+/// format materialization, per-shard dispatch.
 fn build_unit(
     shard: GraphShard,
     width: Option<usize>,
@@ -292,8 +320,91 @@ fn build_unit(
         Some(e) => GraphProfile::of_ell(e),
         None => GraphProfile::of(&shard.csr),
     };
-    let kernel = select_kernel(&profile, feat_dim, sampling.width(), &serial);
-    ShardUnit { rows: shard.rows, csr: shard.csr, ell, sampling, profile, kernel }
+    // Materialize alternative layouts only when the cost-model-aware
+    // selector would actually run them for some precision domain —
+    // units are shared across precision siblings, so probe both. With
+    // no model installed the heuristics never pick a format kernel and
+    // exact units stay plain CSR, bit-identical to the pre-tuned build.
+    let (bcsr, dense) = match &ell {
+        Some(_) => (None, None),
+        None => {
+            let probe = FormatMask {
+                blocked: true,
+                dense: dense_tile_viable(&shard.csr, tune::DENSE_TILE_SLACK),
+            };
+            let picks = [
+                select_kernel_tuned(&profile, feat_dim, None, &serial, KernelDomain::F32, probe),
+                select_kernel_tuned(&profile, feat_dim, None, &serial, KernelDomain::I8, probe),
+            ];
+            let want = |fk: FormatKind| picks.iter().any(|k| k.format() == fk);
+            let bcsr = want(FormatKind::Blocked)
+                .then(|| BlockedCsr::from_csr(&shard.csr, BCSR_BLOCK_ROWS));
+            let dense = want(FormatKind::Dense).then(|| DenseTile::from_csr(&shard.csr));
+            (bcsr, dense)
+        }
+    };
+    let mask = FormatMask { blocked: bcsr.is_some(), dense: dense.is_some() };
+    let kernel =
+        select_kernel_tuned(&profile, feat_dim, sampling.width(), &serial, KernelDomain::F32, mask);
+    ShardUnit { rows: shard.rows, csr: shard.csr, ell, sampling, profile, bcsr, dense, kernel }
+}
+
+/// Execute one unit's fp32 aggregation, routing on the chosen kernel's
+/// operand format. The selector only returns format kernels inside the
+/// unit's [`ShardUnit::format_mask`], so the `expect`s are structural.
+fn run_unit(
+    unit: &ShardUnit,
+    kind: KernelKind,
+    b: &[f32],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match kind.format() {
+        FormatKind::Ell => {
+            let e = unit.ell.as_ref().expect("sampled kernel on an exact unit");
+            run_ell(kind, e, b, f, out, threads)
+        }
+        FormatKind::Csr => run_exact(kind, &unit.csr, b, f, out, threads),
+        FormatKind::Blocked => {
+            let m = unit.bcsr.as_ref().expect("blocked layout not materialized");
+            run_blocked(kind, m, b, f, out, threads)
+        }
+        FormatKind::Dense => {
+            let t = unit.dense.as_ref().expect("dense layout not materialized");
+            run_dense(kind, t, b, f, out, threads)
+        }
+    }
+}
+
+/// [`run_unit`] in the quantized domain. `aq` is the unit's CSR- (or
+/// ELL-) ordered requantized adjacency; the blocked and dense layouts
+/// preserve canonical CSR edge order, so the same CSR-order `aq`
+/// addresses them too.
+fn run_unit_i8(
+    unit: &ShardUnit,
+    kind: KernelKind,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match kind.format() {
+        FormatKind::Ell => {
+            let e = unit.ell.as_ref().expect("sampled kernel on an exact unit");
+            run_ell_i8(kind, e, aq, qb, f, out, threads)
+        }
+        FormatKind::Csr => run_exact_i8(kind, &unit.csr, aq, qb, f, out, threads),
+        FormatKind::Blocked => {
+            let m = unit.bcsr.as_ref().expect("blocked layout not materialized");
+            run_blocked_i8(kind, m, aq, qb, f, out, threads)
+        }
+        FormatKind::Dense => {
+            let t = unit.dense.as_ref().expect("dense layout not materialized");
+            run_dense_i8(kind, t, aq, qb, f, out, threads)
+        }
+    }
 }
 
 /// Resolve one shard's unit: through the shared cache when one is
@@ -444,11 +555,11 @@ impl ShardedPlan {
         assert_eq!(out.len(), self.n_rows * f);
         if let [unit] = self.units.as_slice() {
             // The shard is the whole graph — use the thread budget.
-            let kind = select_kernel(&unit.profile, f, unit.sampling.width(), env);
-            match &unit.ell {
-                Some(e) => run_ell(kind, e, b, f, out, env.threads),
-                None => run_exact(kind, &unit.csr, b, f, out, env.threads),
-            }
+            let width = unit.sampling.width();
+            let mask = unit.format_mask();
+            let kind =
+                select_kernel_tuned(&unit.profile, f, width, env, KernelDomain::F32, mask);
+            run_unit(unit, kind, b, f, out, env.threads);
             return;
         }
         let serial = ExecEnv::with_threads(1);
@@ -458,11 +569,11 @@ impl ShardedPlan {
             let (chunk, tail) = rest.split_at_mut(unit.rows.len() * f);
             rest = tail;
             tasks.push(Box::new(move || {
-                let kind = select_kernel(&unit.profile, f, unit.sampling.width(), &serial);
-                match &unit.ell {
-                    Some(e) => run_ell(kind, e, b, f, chunk, 1),
-                    None => run_exact(kind, &unit.csr, b, f, chunk, 1),
-                }
+                let width = unit.sampling.width();
+                let mask = unit.format_mask();
+                let kind =
+                    select_kernel_tuned(&unit.profile, f, width, &serial, KernelDomain::F32, mask);
+                run_unit(unit, kind, b, f, chunk, 1);
             }));
         }
         pool::global().run(tasks);
@@ -489,11 +600,10 @@ impl ShardedPlan {
             "AdjQuantPlan must carry one operand per shard unit"
         );
         if let ([unit], [aq]) = (self.units.as_slice(), adj.units.as_slice()) {
-            let kind = select_kernel_i8(&unit.profile, f, unit.sampling.width(), env);
-            match &unit.ell {
-                Some(e) => run_ell_i8(kind, e, aq, qb, f, out, env.threads),
-                None => run_exact_i8(kind, &unit.csr, aq, qb, f, out, env.threads),
-            }
+            let width = unit.sampling.width();
+            let mask = unit.format_mask();
+            let kind = select_kernel_tuned(&unit.profile, f, width, env, KernelDomain::I8, mask);
+            run_unit_i8(unit, kind, aq, qb, f, out, env.threads);
             return;
         }
         let serial = ExecEnv::with_threads(1);
@@ -503,11 +613,11 @@ impl ShardedPlan {
             let (chunk, tail) = rest.split_at_mut(unit.rows.len() * f);
             rest = tail;
             tasks.push(Box::new(move || {
-                let kind = select_kernel_i8(&unit.profile, f, unit.sampling.width(), &serial);
-                match &unit.ell {
-                    Some(e) => run_ell_i8(kind, e, aq, qb, f, chunk, 1),
-                    None => run_exact_i8(kind, &unit.csr, aq, qb, f, chunk, 1),
-                }
+                let width = unit.sampling.width();
+                let mask = unit.format_mask();
+                let kind =
+                    select_kernel_tuned(&unit.profile, f, width, &serial, KernelDomain::I8, mask);
+                run_unit_i8(unit, kind, aq, qb, f, chunk, 1);
             }));
         }
         pool::global().run(tasks);

@@ -10,6 +10,8 @@
 //! repro mutate    --dataset D --edges FILE                  apply a live edge delta, re-serve
 //! repro experiment <fig2|fig3|fig5|fig6|fig7|tab1|tab3|all> [--quick]
 //! repro eval      [--json [PATH]] [--dir DIR] [--quick]     accuracy conformance grid
+//! repro tune      [--quick] [--out PATH]                    bench + write the dispatch cost model
+//! repro tune      --validate PATH                           load-check an existing cost model
 //! repro gen-data  --nodes N --avg-deg D [--gamma G]         rust-side synthetic graph stats
 //! ```
 //!
@@ -102,6 +104,8 @@ USAGE:
                    [--shards N] [--shard-budget MIB] [--artifacts DIR]
   repro experiment fig2|fig3|fig5|fig6|fig7|tab1|tab3|all [--quick] [--artifacts DIR]
   repro eval       [--json [PATH]] [--dir DIR] [--quick]
+  repro tune       [--quick] [--out PATH]
+  repro tune       --validate PATH
   repro gen-data   [--nodes N] [--avg-deg D] [--gamma G] [--seed S]
 
 Serving precision defaults to INT8 (--fp32 opts into the baseline;
@@ -117,6 +121,14 @@ budget violation.
 --host serves on the rust substrate (no PJRT); --shards/--shard-budget
 row-shard host aggregation into working-set-budgeted GraphShards with
 per-shard sampling + kernel dispatch (see docs/sharding.md).
+`tune` benches every admissible kernel x format x precision cell over a
+grid of synthetic shard profiles on this machine and writes a
+schema-versioned cost model (default COST_spmm.json). `infer`, `serve`,
+`mutate`, and `eval` install one via --cost-model PATH (or the
+AES_SPMM_COST_MODEL env var): per-shard dispatch then follows the
+measured table, falling back to the built-in heuristics for unmeasured
+profiles — and entirely, with a warning, when the file is missing,
+corrupt, or schema-stale (docs/dispatch.md).
 `mutate` applies a live edge delta (insert/delete/reweight lines, see
 docs/mutation.md for the file format) through the serving coordinator:
 the graph advances one epoch, only the shard units of touched shards
@@ -140,6 +152,7 @@ fn run() -> Result<()> {
         "mutate" => cmd_mutate(&artifacts, &args),
         "experiment" => cmd_experiment(&artifacts, &args),
         "eval" => cmd_eval(&args),
+        "tune" => cmd_tune(&args),
         "gen-data" => cmd_gen_data(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -147,6 +160,50 @@ fn run() -> Result<()> {
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// Install a learned dispatch cost model for this process when asked
+/// via `--cost-model PATH` or the `AES_SPMM_COST_MODEL` env var (flag
+/// wins). An invalid, stale, or missing profile warns and leaves the
+/// heuristics in charge — it never fails the command.
+fn maybe_install_cost_model(args: &Args) {
+    let path = args
+        .get("cost-model")
+        .map(str::to_string)
+        .or_else(|| std::env::var("AES_SPMM_COST_MODEL").ok());
+    if let Some(p) = path {
+        if aes_spmm::exec::install_cost_model_from(std::path::Path::new(&p)) {
+            let fp = aes_spmm::exec::installed_fingerprint();
+            println!("cost model: {p} installed (fingerprint {fp:#018x})");
+        }
+    }
+}
+
+/// `repro tune` — bench every admissible kernel×format×precision cell
+/// over synthetic shard profiles on this machine and write the
+/// schema-versioned cost model; `--validate PATH` load-checks an
+/// existing profile instead (nonzero exit on a stale/corrupt one).
+fn cmd_tune(args: &Args) -> Result<()> {
+    use aes_spmm::exec::{run_tune, CostModel, TuneOptions};
+    if let Some(path) = args.get("validate") {
+        let model = CostModel::load(std::path::Path::new(path))?;
+        println!(
+            "{path}: valid cost model (version {}, {} cells, fingerprint {:#018x})",
+            aes_spmm::exec::COST_MODEL_VERSION,
+            model.len(),
+            model.fingerprint()
+        );
+        return Ok(());
+    }
+    let out = args.get_or("out", "COST_spmm.json");
+    let opts = TuneOptions { quick: args.has("quick") };
+    let grid = if opts.quick { "quick" } else { "full" };
+    println!("tuning kernel/format/precision dispatch on this machine ({grid} grid)");
+    let model = run_tune(&opts);
+    std::fs::write(&out, model.to_json().to_string())
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out} (fingerprint {:#018x})", model.fingerprint());
+    Ok(())
 }
 
 fn cmd_inspect(artifacts: &str) -> Result<()> {
@@ -193,6 +250,7 @@ fn cmd_inspect(artifacts: &str) -> Result<()> {
 }
 
 fn cmd_infer(artifacts: &str, args: &Args) -> Result<()> {
+    maybe_install_cost_model(args);
     let model = args.get("model").context("--model required")?.to_string();
     let dataset = args.get("dataset").context("--dataset required")?.to_string();
     let width = args.get("width").map(|w| w.parse::<usize>()).transpose()?;
@@ -239,6 +297,7 @@ fn cmd_infer(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
+    maybe_install_cost_model(args);
     let n_requests = args.usize_or("requests", 200)?;
     let workers = args.usize_or("workers", 2)?;
     let queue = args.usize_or("queue", 1024)?;
@@ -382,6 +441,7 @@ fn cmd_mutate(artifacts: &str, args: &Args) -> Result<()> {
     use aes_spmm::graph::GraphDelta;
     use aes_spmm::runtime::Backend;
 
+    maybe_install_cost_model(args);
     let dataset = args.get("dataset").context("--dataset required")?.to_string();
     let edges = args.get("edges").context("--edges FILE required")?;
     let delta = GraphDelta::from_file(edges)?;
@@ -491,6 +551,7 @@ fn cmd_experiment(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    maybe_install_cost_model(args);
     let dir = args.get_or("dir", "target/acc-eval");
     let quick = args.has("quick");
     let report = aes_spmm::eval::run_eval(std::path::Path::new(&dir), quick)?;

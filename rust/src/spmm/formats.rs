@@ -1,0 +1,613 @@
+//! Alternative exact sparse formats — the per-shard format zoo behind
+//! the tuned dispatcher (`docs/dispatch.md`).
+//!
+//! Two layouts join CSR and ELL:
+//!
+//! * [`BlockedCsr`] — CSR with **fixed-height row blocks**: the edge
+//!   arrays are the CSR arrays verbatim (so conversion is exact and the
+//!   round trip is the identity), plus a per-block edge index. The
+//!   kernel walks one block of rows at a time and column-blocks the
+//!   feature dim inside the block ([`crate::spmm::simd::feat_block`]),
+//!   so the B rows a block touches stay LLC-resident across its rows —
+//!   the locality CSR-naive leaves on the table.
+//! * [`DenseTile`] — a fixed-pitch row slab for **near-dense** shards:
+//!   every row owns `pitch` (val, col) slots (pitch = the longest row,
+//!   rounded up to the 8-lane SIMD width), padding zeroed. No `row_ptr`
+//!   indirection in the hot loop, unit-stride prefetchable rows, and —
+//!   unlike the row-cache kernel — no row-length cap: the whole row
+//!   accumulates in one pass, so even mega-rows keep the canonical FP
+//!   order. Use [`dense_tile_viable`] to bound the padding blow-up
+//!   before building one.
+//!
+//! # Bitwise contract
+//!
+//! Both formats keep every edge in **canonical CSR order** and both
+//! kernels accumulate each output row per-element in that order via
+//! [`crate::spmm::simd::ell_row`] (multiply and add separate, lanes =
+//! independent feature columns). Per output element the operation
+//! sequence is exactly [`crate::spmm::csr_naive`]'s, so every
+//! (format × SIMD arm × thread count) cell is bitwise-identical to the
+//! canonical scalar CSR path — `tests/format_equiv.rs` asserts the full
+//! grid. The i8 entry points reuse the per-row requantized kernel
+//! ([`crate::spmm::AdjQuant`], row-local [`crate::spmm::I8_FLUSH_EDGES`]
+//! flush boundaries), which is exact in integer arithmetic, so the same
+//! grid holds there by construction.
+
+use crate::graph::Csr;
+
+use super::int8::{i8_row_rescale, AdjQuant};
+use super::simd::{self, SimdLevel};
+use super::threaded::{balance_rows, split_output};
+
+/// Default fixed block height for [`BlockedCsr`]: enough rows that the
+/// per-block feature pass amortizes, small enough that a block's B-row
+/// working set stays cache-sized on typical shard profiles.
+pub const BCSR_BLOCK_ROWS: usize = 64;
+
+/// CSR with fixed-height row blocks. The edge arrays are the source
+/// CSR's arrays verbatim — `block_ptr` only adds a per-block edge
+/// index — so [`BlockedCsr::to_csr`] is an exact inverse of
+/// [`BlockedCsr::from_csr`] (nnz, values, and canonical edge order all
+/// preserved, by construction).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockedCsr {
+    /// Rows of the matrix.
+    pub n_rows: usize,
+    /// Columns of the matrix.
+    pub n_cols: usize,
+    /// Fixed block height (≥ 1); the last block may be shorter.
+    pub block_rows: usize,
+    /// Edge offset of each block start: `block_ptr[k]` is the first
+    /// edge of block `k`, `block_ptr[n_blocks]` is nnz.
+    pub block_ptr: Vec<usize>,
+    /// CSR row pointer (verbatim from the source).
+    pub row_ptr: Vec<i32>,
+    /// CSR column indices (verbatim from the source).
+    pub col_ind: Vec<i32>,
+    /// CSR values (verbatim from the source).
+    pub val: Vec<f32>,
+}
+
+impl BlockedCsr {
+    /// Build from a CSR with the given block height (clamped to ≥ 1).
+    pub fn from_csr(csr: &Csr, block_rows: usize) -> BlockedCsr {
+        let h = block_rows.max(1);
+        let n_blocks = csr.n_rows.div_ceil(h);
+        let block_ptr = (0..=n_blocks)
+            .map(|k| csr.row_ptr[(k * h).min(csr.n_rows)] as usize)
+            .collect();
+        BlockedCsr {
+            n_rows: csr.n_rows,
+            n_cols: csr.n_cols,
+            block_rows: h,
+            block_ptr,
+            row_ptr: csr.row_ptr.clone(),
+            col_ind: csr.col_ind.clone(),
+            val: csr.val.clone(),
+        }
+    }
+
+    /// Exact inverse of [`BlockedCsr::from_csr`].
+    pub fn to_csr(&self) -> Csr {
+        Csr::new(
+            self.n_rows,
+            self.n_cols,
+            self.row_ptr.clone(),
+            self.col_ind.clone(),
+            self.val.clone(),
+        )
+        .expect("a BlockedCsr built from a valid CSR round-trips")
+    }
+
+    /// Blocks in the layout.
+    pub fn n_blocks(&self) -> usize {
+        self.block_ptr.len() - 1
+    }
+
+    /// Stored entries.
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Edge range of row `i`.
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize
+    }
+}
+
+/// Fixed-pitch row slab for near-dense shards: every row owns `pitch`
+/// (val, col) slots in canonical CSR edge order, padding zeroed.
+/// `edge_off` is the source CSR's row pointer verbatim, so the round
+/// trip back to CSR is exact and per-edge side data in nnz order (an
+/// [`AdjQuant`] built from the CSR) addresses rows directly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseTile {
+    /// Rows of the matrix.
+    pub n_rows: usize,
+    /// Columns of the matrix.
+    pub n_cols: usize,
+    /// Slots per row: the longest row rounded up to the 8-lane SIMD
+    /// width (≥ 8).
+    pub pitch: usize,
+    /// Row-major `[n_rows * pitch]` values; padding = 0.0.
+    pub val: Vec<f32>,
+    /// Row-major `[n_rows * pitch]` column indices; padding = 0.
+    pub col: Vec<i32>,
+    /// CSR row pointer (verbatim from the source), so
+    /// `edge_off[i+1] - edge_off[i]` is row `i`'s valid slot count.
+    pub edge_off: Vec<i32>,
+}
+
+/// Pitch a dense tile would use for a matrix whose longest row holds
+/// `max_deg` entries.
+fn dense_pitch(max_deg: usize) -> usize {
+    max_deg.max(1).next_multiple_of(8)
+}
+
+/// Whether a dense tile of `csr` keeps its padding blow-up within
+/// `slack`× the stored entries (per-row floors included) — the guard
+/// dispatch uses before materializing one for a shard.
+pub fn dense_tile_viable(csr: &Csr, slack: usize) -> bool {
+    let padded = dense_pitch(csr.max_degree()).saturating_mul(csr.n_rows);
+    padded <= slack.saturating_mul(csr.nnz().max(csr.n_rows))
+}
+
+impl DenseTile {
+    /// Build from a CSR, keeping every edge in canonical order.
+    pub fn from_csr(csr: &Csr) -> DenseTile {
+        let pitch = dense_pitch(csr.max_degree());
+        let mut t = DenseTile {
+            n_rows: csr.n_rows,
+            n_cols: csr.n_cols,
+            pitch,
+            val: vec![0.0; csr.n_rows * pitch],
+            col: vec![0; csr.n_rows * pitch],
+            edge_off: csr.row_ptr.clone(),
+        };
+        for i in 0..csr.n_rows {
+            let r = csr.row_range(i);
+            let n = r.len();
+            t.val[i * pitch..i * pitch + n].copy_from_slice(&csr.val[r.clone()]);
+            t.col[i * pitch..i * pitch + n].copy_from_slice(&csr.col_ind[r]);
+        }
+        t
+    }
+
+    /// Exact inverse of [`DenseTile::from_csr`].
+    pub fn to_csr(&self) -> Csr {
+        let nnz = self.nnz();
+        let mut col_ind = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        for i in 0..self.n_rows {
+            let n = self.row_nnz(i);
+            val.extend_from_slice(&self.val[i * self.pitch..i * self.pitch + n]);
+            col_ind.extend_from_slice(&self.col[i * self.pitch..i * self.pitch + n]);
+        }
+        Csr::new(self.n_rows, self.n_cols, self.edge_off.clone(), col_ind, val)
+            .expect("a DenseTile built from a valid CSR round-trips")
+    }
+
+    /// Valid slots in row `i`.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        (self.edge_off[i + 1] - self.edge_off[i]) as usize
+    }
+
+    /// Stored entries (excluding padding).
+    pub fn nnz(&self) -> usize {
+        self.edge_off.last().map(|&e| e as usize).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fp32 kernels
+// ---------------------------------------------------------------------------
+
+/// Blocked-CSR SpMM at the detected SIMD level.
+pub fn bcsr_spmm(m: &BlockedCsr, b: &[f32], f: usize, out: &mut [f32]) {
+    bcsr_spmm_at(simd::level(), m, b, f, out)
+}
+
+/// [`bcsr_spmm`] pinned to an explicit SIMD level (tests/benches).
+pub fn bcsr_spmm_at(lvl: SimdLevel, m: &BlockedCsr, b: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), m.n_cols * f);
+    assert_eq!(out.len(), m.n_rows * f);
+    out.fill(0.0);
+    bcsr_rows(lvl, m, b, f, 0..m.n_rows, out);
+}
+
+/// Row-range worker shared by the serial entry and the threaded
+/// wrapper: per block, per feature block, per row — each row's edges in
+/// canonical order via [`simd::ell_row`], so the per-element FP
+/// sequence is exactly the naive kernel's.
+fn bcsr_rows(
+    lvl: SimdLevel,
+    m: &BlockedCsr,
+    b: &[f32],
+    f: usize,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    if rows.is_empty() {
+        return;
+    }
+    let kb = simd::feat_block(m.n_cols, f).max(1);
+    let h = m.block_rows;
+    let first = rows.start / h;
+    let last = (rows.end - 1) / h;
+    for blk in first..=last {
+        if m.block_ptr[blk] == m.block_ptr[blk + 1] {
+            continue; // whole block empty; out is pre-zeroed
+        }
+        let blo = (blk * h).max(rows.start);
+        let bhi = ((blk + 1) * h).min(rows.end);
+        let mut k0 = 0usize;
+        while k0 < f {
+            let kw = kb.min(f - k0);
+            for i in blo..bhi {
+                let r = m.row_range(i);
+                if r.is_empty() {
+                    continue;
+                }
+                simd::prefetch_read(&m.col_ind, r.end);
+                let oi = i - rows.start;
+                simd::ell_row(
+                    lvl,
+                    &m.val[r.clone()],
+                    &m.col_ind[r],
+                    b,
+                    f,
+                    k0,
+                    &mut out[oi * f + k0..oi * f + k0 + kw],
+                );
+            }
+            k0 += kw;
+        }
+    }
+}
+
+/// Parallel [`bcsr_spmm`] — row chunks on the shared exec pool, same
+/// per-row worker as the serial kernel (bitwise-identical).
+pub fn bcsr_spmm_par(m: &BlockedCsr, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(b.len(), m.n_cols * f);
+    assert_eq!(out.len(), m.n_rows * f);
+    let lvl = simd::level();
+    let chunks = balance_rows(|i| m.row_range(i).len(), m.n_rows, threads.max(1));
+    let slices = split_output(out, &chunks, f);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
+                slice.fill(0.0);
+                bcsr_rows(lvl, m, b, f, range, slice);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::exec::global_pool().run(tasks);
+}
+
+/// Dense-tile SpMM at the detected SIMD level.
+pub fn dense_spmm(t: &DenseTile, b: &[f32], f: usize, out: &mut [f32]) {
+    dense_spmm_at(simd::level(), t, b, f, out)
+}
+
+/// [`dense_spmm`] pinned to an explicit SIMD level (tests/benches).
+pub fn dense_spmm_at(lvl: SimdLevel, t: &DenseTile, b: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), t.n_cols * f);
+    assert_eq!(out.len(), t.n_rows * f);
+    out.fill(0.0);
+    dense_rows(lvl, t, b, f, 0..t.n_rows, out);
+}
+
+/// Row-range worker: fixed-pitch unit-stride rows, feature-blocked like
+/// the ELL kernel, each row's full edge list in canonical order.
+fn dense_rows(
+    lvl: SimdLevel,
+    t: &DenseTile,
+    b: &[f32],
+    f: usize,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let kb = simd::feat_block(t.n_cols, f).max(1);
+    let p = t.pitch;
+    let mut k0 = 0usize;
+    while k0 < f {
+        let kw = kb.min(f - k0);
+        for i in rows.clone() {
+            let n = t.row_nnz(i);
+            if n == 0 {
+                continue;
+            }
+            simd::prefetch_read(&t.val, (i + 1) * p);
+            simd::prefetch_read(&t.col, (i + 1) * p);
+            let oi = i - rows.start;
+            simd::ell_row(
+                lvl,
+                &t.val[i * p..i * p + n],
+                &t.col[i * p..i * p + n],
+                b,
+                f,
+                k0,
+                &mut out[oi * f + k0..oi * f + k0 + kw],
+            );
+        }
+        k0 += kw;
+    }
+}
+
+/// Parallel [`dense_spmm`].
+pub fn dense_spmm_par(t: &DenseTile, b: &[f32], f: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(b.len(), t.n_cols * f);
+    assert_eq!(out.len(), t.n_rows * f);
+    let lvl = simd::level();
+    let chunks = balance_rows(|i| t.row_nnz(i), t.n_rows, threads.max(1));
+    let slices = split_output(out, &chunks, f);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
+                slice.fill(0.0);
+                dense_rows(lvl, t, b, f, range, slice);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::exec::global_pool().run(tasks);
+}
+
+// ---------------------------------------------------------------------------
+// INT8-compute kernels
+// ---------------------------------------------------------------------------
+
+/// Blocked-CSR SpMM in the quantized domain. `aq.qa` is in CSR nnz
+/// order (an [`AdjQuant::from_csr`] of the source graph), exactly as
+/// the CSR i8 kernel consumes it — blocked grouping never reorders
+/// edges.
+pub fn bcsr_spmm_i8(m: &BlockedCsr, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32]) {
+    bcsr_spmm_i8_at(simd::level(), m, aq, qb, f, out)
+}
+
+/// [`bcsr_spmm_i8`] pinned to an explicit SIMD level.
+pub fn bcsr_spmm_i8_at(
+    lvl: SimdLevel,
+    m: &BlockedCsr,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(qb.len(), m.n_cols * f);
+    assert_eq!(out.len(), m.n_rows * f);
+    assert_eq!(aq.qa.len(), m.val.len());
+    bcsr_i8_rows(lvl, m, aq, qb, f, 0..m.n_rows, out);
+}
+
+fn bcsr_i8_rows(
+    lvl: SimdLevel,
+    m: &BlockedCsr,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let mut acc = vec![0i32; f];
+    for (oi, i) in rows.enumerate() {
+        let r = m.row_range(i);
+        i8_row_rescale(
+            lvl,
+            &aq.qa[r.clone()],
+            &m.col_ind[r],
+            qb,
+            f,
+            aq.row_scale[i],
+            aq.row_base[i],
+            &mut acc,
+            &mut out[oi * f..(oi + 1) * f],
+        );
+    }
+}
+
+/// Parallel [`bcsr_spmm_i8`].
+pub fn bcsr_spmm_i8_par(
+    m: &BlockedCsr,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(qb.len(), m.n_cols * f);
+    assert_eq!(out.len(), m.n_rows * f);
+    assert_eq!(aq.qa.len(), m.val.len());
+    let lvl = simd::level();
+    let chunks = balance_rows(|i| m.row_range(i).len(), m.n_rows, threads.max(1));
+    let slices = split_output(out, &chunks, f);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
+                bcsr_i8_rows(lvl, m, aq, qb, f, range, slice);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::exec::global_pool().run(tasks);
+}
+
+/// Dense-tile SpMM in the quantized domain. `aq.qa` is in CSR nnz
+/// order; the tile's `edge_off` (the CSR row pointer) addresses each
+/// row's coefficient run, so the same [`AdjQuant`] serves CSR, blocked,
+/// and dense execution of one shard.
+pub fn dense_spmm_i8(t: &DenseTile, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32]) {
+    dense_spmm_i8_at(simd::level(), t, aq, qb, f, out)
+}
+
+/// [`dense_spmm_i8`] pinned to an explicit SIMD level.
+pub fn dense_spmm_i8_at(
+    lvl: SimdLevel,
+    t: &DenseTile,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(qb.len(), t.n_cols * f);
+    assert_eq!(out.len(), t.n_rows * f);
+    assert_eq!(aq.qa.len(), t.nnz());
+    dense_i8_rows(lvl, t, aq, qb, f, 0..t.n_rows, out);
+}
+
+fn dense_i8_rows(
+    lvl: SimdLevel,
+    t: &DenseTile,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let p = t.pitch;
+    let mut acc = vec![0i32; f];
+    for (oi, i) in rows.enumerate() {
+        let lo = t.edge_off[i] as usize;
+        let n = t.row_nnz(i);
+        simd::prefetch_read(&t.col, (i + 1) * p);
+        i8_row_rescale(
+            lvl,
+            &aq.qa[lo..lo + n],
+            &t.col[i * p..i * p + n],
+            qb,
+            f,
+            aq.row_scale[i],
+            aq.row_base[i],
+            &mut acc,
+            &mut out[oi * f..(oi + 1) * f],
+        );
+    }
+}
+
+/// Parallel [`dense_spmm_i8`].
+pub fn dense_spmm_i8_par(
+    t: &DenseTile,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(qb.len(), t.n_cols * f);
+    assert_eq!(out.len(), t.n_rows * f);
+    assert_eq!(aq.qa.len(), t.nnz());
+    let lvl = simd::level();
+    let chunks = balance_rows(|i| t.row_nnz(i), t.n_rows, threads.max(1));
+    let slices = split_output(out, &chunks, f);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .into_iter()
+        .zip(slices)
+        .map(|(range, slice)| {
+            Box::new(move || {
+                dense_i8_rows(lvl, t, aq, qb, f, range, slice);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    crate::exec::global_pool().run(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::testutil::random_graph_and_features;
+    use crate::spmm::{csr_naive, csr_spmm_i8};
+
+    #[test]
+    fn bcsr_matches_naive_bitwise_across_block_heights() {
+        let (g, b) = random_graph_and_features(220, 18.0, 17, 41);
+        let mut want = vec![0.0f32; g.n_rows * 17];
+        csr_naive(&g, &b, 17, &mut want);
+        for h in [1usize, 3, 64, 1000] {
+            let m = BlockedCsr::from_csr(&g, h);
+            let mut got = vec![9.0f32; g.n_rows * 17];
+            bcsr_spmm(&m, &b, 17, &mut got);
+            assert_eq!(want, got, "block_rows={h}");
+            let mut par = vec![0.0f32; g.n_rows * 17];
+            bcsr_spmm_par(&m, &b, 17, &mut par, 4);
+            assert_eq!(want, par, "block_rows={h} (par)");
+        }
+    }
+
+    #[test]
+    fn dense_matches_naive_bitwise() {
+        let (g, b) = random_graph_and_features(150, 30.0, 9, 42);
+        let mut want = vec![0.0f32; g.n_rows * 9];
+        csr_naive(&g, &b, 9, &mut want);
+        let t = DenseTile::from_csr(&g);
+        let mut got = vec![5.0f32; g.n_rows * 9];
+        dense_spmm(&t, &b, 9, &mut got);
+        assert_eq!(want, got);
+        let mut par = vec![0.0f32; g.n_rows * 9];
+        dense_spmm_par(&t, &b, 9, &mut par, 3);
+        assert_eq!(want, par);
+    }
+
+    #[test]
+    fn i8_formats_match_csr_i8_bitwise() {
+        use crate::quant::ChunkedParams;
+        let (g, b) = random_graph_and_features(160, 12.0, 11, 43);
+        let params = ChunkedParams::of_rows(&b, 160, 11, 40);
+        let qb = params.quantize_rows(&b, 11);
+        let aq = AdjQuant::from_csr(&g, &params);
+        let mut want = vec![0.0f32; g.n_rows * 11];
+        csr_spmm_i8(&g, &aq, &qb, 11, &mut want);
+
+        let m = BlockedCsr::from_csr(&g, 16);
+        let mut got = vec![0.0f32; g.n_rows * 11];
+        bcsr_spmm_i8(&m, &aq, &qb, 11, &mut got);
+        assert_eq!(want, got);
+        bcsr_spmm_i8_par(&m, &aq, &qb, 11, &mut got, 5);
+        assert_eq!(want, got);
+
+        let t = DenseTile::from_csr(&g);
+        dense_spmm_i8(&t, &aq, &qb, 11, &mut got);
+        assert_eq!(want, got);
+        dense_spmm_i8_par(&t, &aq, &qb, 11, &mut got, 3);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn empty_graph_and_empty_rows() {
+        let g = Csr::new(0, 4, vec![0], vec![], vec![]).unwrap();
+        let b = vec![1.0f32; 4 * 3];
+        let m = BlockedCsr::from_csr(&g, 8);
+        let t = DenseTile::from_csr(&g);
+        let mut out = Vec::new();
+        bcsr_spmm(&m, &b, 3, &mut out);
+        dense_spmm(&t, &b, 3, &mut out);
+        assert_eq!(m.to_csr(), g);
+        assert_eq!(t.to_csr(), g);
+
+        let g = Csr::new(3, 3, vec![0, 0, 1, 1], vec![2], vec![5.0]).unwrap();
+        let b = vec![1.0f32; 9];
+        let mut want = vec![0.0f32; 9];
+        csr_naive(&g, &b, 3, &mut want);
+        let mut got = vec![7.0f32; 9];
+        bcsr_spmm(&BlockedCsr::from_csr(&g, 2), &b, 3, &mut got);
+        assert_eq!(want, got);
+        let mut got = vec![7.0f32; 9];
+        dense_spmm(&DenseTile::from_csr(&g), &b, 3, &mut got);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn viability_guard_tracks_padding() {
+        let (g, _) = random_graph_and_features(100, 8.0, 4, 44);
+        // Power-law graphs have long tails: generous slack passes,
+        // slack 0 never does (padding is at least the stored entries).
+        assert!(dense_tile_viable(&g, 1000));
+        assert!(!dense_tile_viable(&g, 0));
+        let t = DenseTile::from_csr(&g);
+        assert_eq!(t.pitch % 8, 0);
+        assert!(t.pitch >= g.max_degree().max(1));
+    }
+}

@@ -164,7 +164,14 @@ pub fn ell_spmm_i8(ell: &Ell, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32
 }
 
 /// [`ell_spmm_i8`] pinned to an explicit SIMD level (tests/benches).
-pub fn ell_spmm_i8_at(lvl: SimdLevel, ell: &Ell, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32]) {
+pub fn ell_spmm_i8_at(
+    lvl: SimdLevel,
+    ell: &Ell,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+) {
     assert_eq!(qb.len(), ell.n_cols * f);
     assert_eq!(out.len(), ell.n_rows * f);
     assert_eq!(aq.qa.len(), ell.n_rows * ell.width);
@@ -208,7 +215,14 @@ pub fn csr_spmm_i8(csr: &Csr, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32
 }
 
 /// [`csr_spmm_i8`] pinned to an explicit SIMD level (tests/benches).
-pub fn csr_spmm_i8_at(lvl: SimdLevel, csr: &Csr, aq: &AdjQuant, qb: &[u8], f: usize, out: &mut [f32]) {
+pub fn csr_spmm_i8_at(
+    lvl: SimdLevel,
+    csr: &Csr,
+    aq: &AdjQuant,
+    qb: &[u8],
+    f: usize,
+    out: &mut [f32],
+) {
     assert_eq!(qb.len(), csr.n_cols * f);
     assert_eq!(out.len(), csr.n_rows * f);
     assert_eq!(aq.qa.len(), csr.val.len());
@@ -298,9 +312,11 @@ pub fn csr_spmm_i8_par(
 
 /// One output row: integer-accumulate `Σ_e qa_e · qb[c_e,·]` in
 /// [`I8_FLUSH_EDGES`]-long exact segments, then apply the single
-/// per-row rescale `out = scale·acc + base`.
+/// per-row rescale `out = scale·acc + base`. Shared with the format
+/// zoo's i8 kernels (`formats.rs`) so every layout keeps the identical
+/// row-local flush boundaries.
 #[allow(clippy::too_many_arguments)]
-fn i8_row_rescale(
+pub(crate) fn i8_row_rescale(
     lvl: SimdLevel,
     qa: &[i8],
     cols: &[i32],
@@ -573,7 +589,8 @@ mod tests {
     fn empty_rows_yield_their_base_term() {
         // A graph with an isolated row: scale defaults to 1, base to 0,
         // so the output row is exactly zero.
-        let g = crate::graph::Csr::new(3, 3, vec![0, 1, 1, 2], vec![2, 0], vec![0.5, -2.0]).unwrap();
+        let g = crate::graph::Csr::new(3, 3, vec![0, 1, 1, 2], vec![2, 0], vec![0.5, -2.0])
+            .unwrap();
         let b = vec![0.25f32; 6];
         let params = ChunkedParams::uniform(3, QuantParams { x_min: 0.0, x_max: 1.0 });
         let qb = params.quantize_rows(&b, 2);

@@ -12,6 +12,11 @@
 //! * [`ell_spmm_i8`] / [`csr_spmm_i8`] — true INT8 compute: `i8×u8→i32`
 //!   accumulation over an [`AdjQuant`] requantized adjacency, one
 //!   rescale per row (Eq. 1/2 in the quantized domain).
+//! * `formats`        — the tuned dispatcher's format zoo:
+//!   [`BlockedCsr`] (fixed-height row blocks over verbatim CSR arrays)
+//!   and [`DenseTile`] (fixed-pitch row slabs for near-dense shards),
+//!   each with fp32 + i8 entry points bitwise-equal to the CSR path
+//!   (docs/dispatch.md).
 //! * `simd`           — runtime AVX2/NEON dispatch, cache-profile tile
 //!   tuning, and the bitwise-equality contract every arm obeys
 //!   (docs/simd.md).
@@ -23,12 +28,18 @@
 
 mod csr;
 mod ell;
+mod formats;
 mod int8;
 pub mod simd;
 mod threaded;
 
 pub use csr::{csr_naive, csr_rowcache, csr_rowcache_at, TILE as ROWCACHE_TILE};
 pub use ell::{ell_spmm, ell_spmm_at, ell_spmm_mean};
+pub use formats::{
+    bcsr_spmm, bcsr_spmm_at, bcsr_spmm_i8, bcsr_spmm_i8_at, bcsr_spmm_i8_par, bcsr_spmm_par,
+    dense_spmm, dense_spmm_at, dense_spmm_i8, dense_spmm_i8_at, dense_spmm_i8_par, dense_spmm_par,
+    dense_tile_viable, BlockedCsr, DenseTile, BCSR_BLOCK_ROWS,
+};
 pub use int8::{
     csr_spmm_i8, csr_spmm_i8_at, csr_spmm_i8_par, ell_spmm_i8, ell_spmm_i8_at, ell_spmm_i8_par,
     AdjQuant, I8_FLUSH_EDGES,

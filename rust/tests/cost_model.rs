@@ -1,0 +1,196 @@
+//! Cost-model lifecycle tests: the golden fixture drives the documented
+//! per-cell kernel choices, degraded documents fall back to heuristics
+//! with a warning (never a panic), and the full accuracy-conformance
+//! grid holds its budgets when scored through a tuned dispatcher.
+//!
+//! Every test that installs a model into the process-wide slot takes
+//! `GLOBAL`, saves the previous installation, and restores it — tests in
+//! this binary run concurrently and the slot is shared.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use aes_spmm::exec::{
+    install_cost_model, install_cost_model_from, installed_fingerprint, CostModel, Density,
+    ExecEnv, Family, FeatBand, FormatMask, GraphProfile, KernelDomain, KernelKind, ProfileBucket,
+    Skew,
+};
+
+/// Serializes every test that touches the process-wide installed model.
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+fn fixture_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/cost_model_v1.json")
+}
+
+fn profile(n_rows: usize, nnz: usize, max_nnz: usize) -> GraphProfile {
+    GraphProfile { n_rows, nnz, mean_nnz: nnz as f64 / n_rows.max(1) as f64, max_nnz }
+}
+
+/// Buckets to `dense/uniform/wide` at feat 64: mean 100, max within 8×.
+fn dense_uniform() -> GraphProfile {
+    profile(1000, 100_000, 150)
+}
+
+/// Buckets to `sparse/uniform/narrow` at feat 16: mean 4, max within 8×.
+fn sparse_uniform() -> GraphProfile {
+    profile(1000, 4_000, 20)
+}
+
+/// Buckets to `mid/skewed/narrow` at feat 16: mean 16, max beyond 8×.
+fn mid_skewed() -> GraphProfile {
+    profile(1000, 16_000, 200)
+}
+
+#[test]
+fn golden_fixture_loads_with_the_expected_cells() {
+    let m = CostModel::load(&fixture_path()).unwrap();
+    assert_eq!(m.len(), 5);
+    assert_ne!(m.fingerprint(), 0);
+    let expected = [
+        ("dense/uniform/wide/exact/f32", KernelKind::CsrBlockedPar),
+        ("dense/uniform/wide/exact/i8", KernelKind::ExactDenseI8Par),
+        ("sparse/uniform/narrow/exact/f32", KernelKind::CsrRowCache),
+        ("mid/skewed/narrow/sampled/f32", KernelKind::EllSampledPar),
+        ("mid/skewed/narrow/sampled/i8", KernelKind::EllSampledI8),
+    ];
+    for (key, kind) in expected {
+        assert_eq!(m.cell(key), Some(kind), "cell {key}");
+    }
+    // Measurements in the document are advisory and dropped on load;
+    // the cells alone define the fingerprint.
+    let choose = m.choose(&dense_uniform(), 64, None, KernelDomain::F32);
+    assert_eq!(choose, Some(KernelKind::CsrBlockedPar));
+}
+
+#[test]
+fn installed_fixture_steers_selection_per_cell() {
+    let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let model = Arc::new(CostModel::load(&fixture_path()).unwrap());
+    let prev = install_cost_model(Some(model.clone()));
+    let env = ExecEnv::with_threads(8);
+    use aes_spmm::exec::select_kernel_tuned as tuned;
+
+    // Measured buckets answer the fixture's picks when the layout is
+    // materialized (mask ALL)...
+    let got = tuned(&dense_uniform(), 64, None, &env, KernelDomain::F32, FormatMask::ALL);
+    assert_eq!(got, KernelKind::CsrBlockedPar);
+    let got = tuned(&dense_uniform(), 64, None, &env, KernelDomain::I8, FormatMask::ALL);
+    assert_eq!(got, KernelKind::ExactDenseI8Par);
+    let got = tuned(&mid_skewed(), 16, Some(16), &env, KernelDomain::F32, FormatMask::ALL);
+    assert_eq!(got, KernelKind::EllSampledPar);
+    let got = tuned(&mid_skewed(), 16, Some(16), &env, KernelDomain::I8, FormatMask::ALL);
+    assert_eq!(got, KernelKind::EllSampledI8);
+    // ...including classic-format picks the heuristics would not make
+    // (mean 4 is far below the rowcache staging threshold).
+    let got = tuned(&sparse_uniform(), 16, None, &env, KernelDomain::F32, FormatMask::CLASSIC);
+    assert_eq!(got, KernelKind::CsrRowCache);
+
+    // Unmeasured buckets fall back to the heuristics.
+    let got = tuned(&dense_uniform(), 16, None, &env, KernelDomain::F32, FormatMask::ALL);
+    assert_eq!(got, KernelKind::CsrNaivePar);
+
+    install_cost_model(prev);
+}
+
+#[test]
+fn inadmissible_picks_degrade_to_heuristics_not_panics() {
+    let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let model = Arc::new(CostModel::load(&fixture_path()).unwrap());
+    let prev = install_cost_model(Some(model));
+    use aes_spmm::exec::select_kernel_tuned as tuned;
+
+    // The model's pick is blocked-format parallel; without the layout
+    // (mask CLASSIC) and without threads it must degrade, not panic.
+    let par = ExecEnv::with_threads(8);
+    let got = tuned(&dense_uniform(), 64, None, &par, KernelDomain::F32, FormatMask::CLASSIC);
+    assert_eq!(got, KernelKind::CsrNaivePar, "layout not materialized");
+    let serial = ExecEnv::with_threads(1);
+    let got = tuned(&dense_uniform(), 64, None, &serial, KernelDomain::F32, FormatMask::ALL);
+    assert_eq!(got, KernelKind::CsrRowCache, "thread budget of 1");
+
+    // The classic wrappers never return a format-zoo kernel, installed
+    // model or not — their executors would panic on one.
+    let got = aes_spmm::exec::select_kernel(&dense_uniform(), 64, None, &par);
+    assert!(
+        got.format() == aes_spmm::exec::FormatKind::Csr,
+        "select_kernel returned format kernel {got:?}"
+    );
+
+    install_cost_model(prev);
+}
+
+#[test]
+fn corrupt_or_stale_documents_warn_and_leave_heuristics_in_charge() {
+    let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = install_cost_model(None);
+    assert_eq!(installed_fingerprint(), 0);
+
+    let dir = std::env::temp_dir().join(format!("cost_model_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Missing file.
+    assert!(!install_cost_model_from(&dir.join("absent.json")));
+    assert_eq!(installed_fingerprint(), 0, "missing file must not install");
+    // Unparseable garbage.
+    let garbage = dir.join("garbage.json");
+    std::fs::write(&garbage, "][ not json").unwrap();
+    assert!(!install_cost_model_from(&garbage));
+    assert_eq!(installed_fingerprint(), 0, "garbage must not install");
+    // Stale schema version.
+    let stale = dir.join("stale.json");
+    std::fs::write(&stale, r#"{"schema":"aes-spmm-cost-model","version":999,"cells":{}}"#)
+        .unwrap();
+    assert!(!install_cost_model_from(&stale));
+    assert_eq!(installed_fingerprint(), 0, "stale version must not install");
+
+    // A failed install also leaves a previous *good* installation
+    // untouched.
+    assert!(install_cost_model_from(&fixture_path()));
+    let good = installed_fingerprint();
+    assert_ne!(good, 0);
+    assert!(!install_cost_model_from(&stale));
+    assert_eq!(installed_fingerprint(), good, "failed reload clobbered the model");
+
+    install_cost_model(prev);
+}
+
+/// A model covering every bucket×family×domain cell with format-zoo (or
+/// sampled) kernels, to force tuned dispatch through the new layouts.
+fn zoo_everywhere() -> CostModel {
+    let mut m = CostModel::default();
+    for density in [Density::Sparse, Density::Mid, Density::Dense] {
+        for skew in [Skew::Uniform, Skew::Skewed] {
+            for feat in [FeatBand::Narrow, FeatBand::Wide] {
+                let b = ProfileBucket { density, skew, feat };
+                m.set_cell(&b, Family::Exact, KernelDomain::F32, KernelKind::CsrBlocked);
+                m.set_cell(&b, Family::Exact, KernelDomain::I8, KernelKind::CsrBlockedI8);
+                m.set_cell(&b, Family::Sampled, KernelDomain::F32, KernelKind::EllSampled);
+                m.set_cell(&b, Family::Sampled, KernelDomain::I8, KernelKind::EllSampledI8);
+            }
+        }
+    }
+    m
+}
+
+/// The headline degradation-free guarantee: the accuracy-conformance
+/// grid (real coordinator, budgets vs the exact oracle) passes with a
+/// cost model that routes every exact shard through blocked-CSR — the
+/// format zoo is bitwise-equal to canonical CSR, so a tuned dispatcher
+/// can only change speed.
+#[test]
+fn eval_grid_holds_its_budgets_under_a_tuned_dispatcher() {
+    let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = install_cost_model(Some(Arc::new(zoo_everywhere())));
+    assert_ne!(installed_fingerprint(), 0);
+
+    let dir = std::env::temp_dir().join(format!("tuned_eval_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let report = aes_spmm::eval::run_eval(&dir, true);
+
+    // Restore before asserting so a failure cannot leak the install.
+    install_cost_model(prev);
+    let report = report.unwrap();
+    let failures = report.failures();
+    assert!(failures.is_empty(), "tuned-dispatch budget violations:\n{}", failures.join("\n"));
+}

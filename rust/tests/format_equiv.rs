@@ -1,0 +1,189 @@
+//! Format-zoo conformance: every (format × precision × SIMD level ×
+//! threading) cell must be **bitwise-identical** to the canonical CSR
+//! scalar path. The tuned dispatcher (docs/dispatch.md) is free to pick
+//! any admissible kernel per shard precisely because of this grid — a
+//! cost model can cost speed, never bits.
+//!
+//! Shapes are adversarial on purpose: the empty graph, interspersed
+//! empty rows, a mega-row far above `ROWCACHE_MAX_ROW_NNZ`, and feature
+//! widths straddling every SIMD lane boundary (1/7/8/9/33).
+
+use aes_spmm::exec::ROWCACHE_MAX_ROW_NNZ;
+use aes_spmm::graph::{coo_to_csr, Csr};
+use aes_spmm::quant::ChunkedParams;
+use aes_spmm::rng::Pcg32;
+use aes_spmm::spmm::simd::{self, SimdLevel};
+use aes_spmm::spmm::{
+    bcsr_spmm_at, bcsr_spmm_i8_at, bcsr_spmm_i8_par, bcsr_spmm_par, csr_naive, csr_spmm_i8_at,
+    dense_spmm_at, dense_spmm_i8_at, dense_spmm_i8_par, dense_spmm_par, AdjQuant, BlockedCsr,
+    DenseTile, BCSR_BLOCK_ROWS,
+};
+
+/// Feature widths straddling the 8-lane fp32 blocks (and the i8
+/// gather's lane remainders): below, at, and just past a lane, plus the
+/// single-column degenerate case and a 33-wide two-block remainder.
+const FEATS: [usize; 5] = [1, 7, 8, 9, 33];
+
+/// Block heights exercising degenerate (1), misaligned (5), and the
+/// production height.
+const HEIGHTS: [usize; 3] = [1, 5, BCSR_BLOCK_ROWS];
+
+const THREADS: [usize; 2] = [2, 5];
+
+fn assert_bitwise(want: &[f32], got: &[f32], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: length mismatch");
+    for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+        assert!(w.to_bits() == g.to_bits(), "{what}: idx {i}: {w} vs {g} differ in bits");
+    }
+}
+
+/// The adversarial graph family, with a label for failure messages.
+fn adversarial_graphs() -> Vec<(&'static str, Csr)> {
+    let mut rng = Pcg32::new(0xF0_0001);
+    let mut out: Vec<(&'static str, Csr)> = Vec::new();
+
+    // 0 rows, 0 edges — every loop bound degenerates.
+    out.push(("empty graph", Csr::new(0, 4, vec![0], vec![], vec![]).unwrap()));
+
+    // Every third row empty, the rest light — block/pitch bookkeeping
+    // must skip holes without drifting its edge cursor.
+    let mut triples = Vec::new();
+    for i in 0..97usize {
+        if i % 3 == 0 {
+            continue;
+        }
+        for _ in 0..(1 + rng.usize_below(12)) {
+            triples.push((i as i32, rng.usize_below(97) as i32, rng.f32() - 0.5));
+        }
+    }
+    out.push(("empty rows", coo_to_csr(97, 97, triples).unwrap()));
+
+    // One mega-row far above the rowcache bitwise gate, over a tail of
+    // sparse rows — a worst case for both the blocked edge walk and the
+    // dense pitch.
+    let mega = 2 * ROWCACHE_MAX_ROW_NNZ + 88; // 600 for the 256 gate
+    let mut triples = Vec::new();
+    for c in 0..mega {
+        triples.push((0i32, c as i32, rng.f32() - 0.5));
+    }
+    for i in 1..64usize {
+        for _ in 0..3 {
+            triples.push((i as i32, rng.usize_below(mega) as i32, rng.f32() - 0.5));
+        }
+    }
+    out.push(("mega-row", coo_to_csr(64, mega, triples).unwrap()));
+
+    // A plain random graph as the non-degenerate control.
+    let mut triples = Vec::new();
+    for i in 0..160usize {
+        for _ in 0..(1 + rng.usize_below(24)) {
+            triples.push((i as i32, rng.usize_below(160) as i32, rng.f32() - 0.5));
+        }
+    }
+    out.push(("random", coo_to_csr(160, 160, triples).unwrap()));
+    out
+}
+
+fn features(g: &Csr, f: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..g.n_cols * f).map(|_| rng.f32() - 0.5).collect()
+}
+
+#[test]
+fn fp32_formats_bitwise_equal_to_csr_naive_everywhere() {
+    let levels = [SimdLevel::Scalar, simd::level()];
+    for (name, g) in adversarial_graphs() {
+        for f in FEATS {
+            let b = features(&g, f, 0xB17_0000 + f as u64);
+            let mut want = vec![7.0f32; g.n_rows * f];
+            csr_naive(&g, &b, f, &mut want);
+
+            for h in HEIGHTS {
+                let m = BlockedCsr::from_csr(&g, h);
+                for lvl in levels {
+                    let mut got = vec![7.0f32; g.n_rows * f];
+                    bcsr_spmm_at(lvl, &m, &b, f, &mut got);
+                    assert_bitwise(&want, &got, &format!("{name}: bcsr h={h} {lvl:?} f={f}"));
+                }
+                for t in THREADS {
+                    let mut got = vec![7.0f32; g.n_rows * f];
+                    bcsr_spmm_par(&m, &b, f, &mut got, t);
+                    assert_bitwise(&want, &got, &format!("{name}: bcsr h={h} par{t} f={f}"));
+                }
+            }
+
+            let tile = DenseTile::from_csr(&g);
+            for lvl in levels {
+                let mut got = vec![7.0f32; g.n_rows * f];
+                dense_spmm_at(lvl, &tile, &b, f, &mut got);
+                assert_bitwise(&want, &got, &format!("{name}: dense {lvl:?} f={f}"));
+            }
+            for t in THREADS {
+                let mut got = vec![7.0f32; g.n_rows * f];
+                dense_spmm_par(&tile, &b, f, &mut got, t);
+                assert_bitwise(&want, &got, &format!("{name}: dense par{t} f={f}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn i8_formats_bitwise_equal_to_csr_i8_scalar_everywhere() {
+    let levels = [SimdLevel::Scalar, simd::level()];
+    for (name, g) in adversarial_graphs() {
+        for f in FEATS {
+            let b = features(&g, f, 0xB17_8000 + f as u64);
+            let chunk = (g.n_cols / 4).max(1);
+            let params = ChunkedParams::of_rows(&b, g.n_cols, f, chunk);
+            let qb = params.quantize_rows(&b, f);
+            let aq = AdjQuant::from_csr(&g, &params);
+
+            // Scalar CSR is the canon; the detected-SIMD CSR arm must
+            // already match it bitwise (integer accumulation).
+            let mut want = vec![7.0f32; g.n_rows * f];
+            csr_spmm_i8_at(SimdLevel::Scalar, &g, &aq, &qb, f, &mut want);
+            let mut got = vec![7.0f32; g.n_rows * f];
+            csr_spmm_i8_at(simd::level(), &g, &aq, &qb, f, &mut got);
+            assert_bitwise(&want, &got, &format!("{name}: csr i8 simd f={f}"));
+
+            for h in HEIGHTS {
+                let m = BlockedCsr::from_csr(&g, h);
+                for lvl in levels {
+                    let mut got = vec![7.0f32; g.n_rows * f];
+                    bcsr_spmm_i8_at(lvl, &m, &aq, &qb, f, &mut got);
+                    assert_bitwise(&want, &got, &format!("{name}: bcsr i8 h={h} {lvl:?} f={f}"));
+                }
+                for t in THREADS {
+                    let mut got = vec![7.0f32; g.n_rows * f];
+                    bcsr_spmm_i8_par(&m, &aq, &qb, f, &mut got, t);
+                    assert_bitwise(&want, &got, &format!("{name}: bcsr i8 h={h} par{t} f={f}"));
+                }
+            }
+
+            let tile = DenseTile::from_csr(&g);
+            for lvl in levels {
+                let mut got = vec![7.0f32; g.n_rows * f];
+                dense_spmm_i8_at(lvl, &tile, &aq, &qb, f, &mut got);
+                assert_bitwise(&want, &got, &format!("{name}: dense i8 {lvl:?} f={f}"));
+            }
+            for t in THREADS {
+                let mut got = vec![7.0f32; g.n_rows * f];
+                dense_spmm_i8_par(&tile, &aq, &qb, f, &mut got, t);
+                assert_bitwise(&want, &got, &format!("{name}: dense i8 par{t} f={f}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn mega_row_really_exceeds_the_rowcache_gate() {
+    // Guard the fixture itself: if the adversarial family stops
+    // covering the > ROWCACHE_MAX_ROW_NNZ regime, this fails before the
+    // equivalence tests silently weaken.
+    let g = adversarial_graphs()
+        .into_iter()
+        .find(|(n, _)| *n == "mega-row")
+        .map(|(_, g)| g)
+        .unwrap();
+    assert!(g.max_degree() > ROWCACHE_MAX_ROW_NNZ);
+}

@@ -1,0 +1,127 @@
+//! Property tests for the sparse-format zoo (docs/dispatch.md).
+//!
+//! The dispatcher may rebuild any shard as blocked-CSR or a dense tile;
+//! these properties pin the structural invariants that make that safe:
+//! conversions are lossless round-trips preserving nnz, values, and the
+//! canonical per-row edge order, and the layout bookkeeping (block
+//! pointers, pitch) is internally consistent.
+
+use aes_spmm::graph::{coo_to_csr, Csr};
+use aes_spmm::rng::Pcg32;
+use aes_spmm::spmm::{dense_tile_viable, BlockedCsr, DenseTile, BCSR_BLOCK_ROWS};
+
+/// Run `f` over a family of seeded cases, tagging failures by seed.
+fn forall(cases: u64, mut f: impl FnMut(u64, &mut Pcg32)) {
+    for seed in 0..cases {
+        let mut rng = Pcg32::new(0xF0_4000 + seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// A random graph with duplicate-free rows is not guaranteed here —
+/// `coo_to_csr` already canonicalises (sorts + merges), matching what
+/// every production graph goes through before it reaches a format.
+fn random_csr(rng: &mut Pcg32, n: usize, max_deg: usize) -> Csr {
+    let mut triples = Vec::new();
+    for i in 0..n {
+        for _ in 0..rng.usize_below(max_deg + 1) {
+            triples.push((i as i32, rng.usize_below(n) as i32, rng.f32() - 0.5));
+        }
+    }
+    coo_to_csr(n, n, triples).unwrap()
+}
+
+#[test]
+fn blocked_csr_round_trips_exactly() {
+    forall(24, |seed, rng| {
+        let n = 1 + rng.usize_below(200);
+        let g = random_csr(rng, n, 1 + rng.usize_below(30));
+        for h in [1, 3, BCSR_BLOCK_ROWS, n + 7] {
+            let m = BlockedCsr::from_csr(&g, h);
+            assert_eq!(m.nnz(), g.row_ptr[n] as usize, "seed {seed} h={h}: nnz");
+            assert_eq!(m.to_csr(), g, "seed {seed} h={h}: round trip");
+        }
+    });
+}
+
+#[test]
+fn blocked_csr_block_ptr_is_consistent_with_row_ptr() {
+    forall(24, |seed, rng| {
+        let n = 1 + rng.usize_below(200);
+        let g = random_csr(rng, n, 1 + rng.usize_below(30));
+        let h = 1 + rng.usize_below(2 * BCSR_BLOCK_ROWS);
+        let m = BlockedCsr::from_csr(&g, h);
+        assert_eq!(m.block_rows, h, "seed {seed}: height preserved");
+        assert_eq!(m.block_ptr.len(), m.n_blocks() + 1, "seed {seed}: ptr len");
+        for k in 0..=m.n_blocks() {
+            let first_row = (k * h).min(n);
+            assert_eq!(
+                m.block_ptr[k], g.row_ptr[first_row] as usize,
+                "seed {seed} h={h}: block_ptr[{k}] aligns with row_ptr"
+            );
+        }
+        for i in 0..n {
+            let r = m.row_range(i);
+            assert_eq!(
+                (r.start, r.end),
+                (g.row_ptr[i] as usize, g.row_ptr[i + 1] as usize),
+                "seed {seed} h={h}: row_range({i})"
+            );
+        }
+    });
+}
+
+#[test]
+fn dense_tile_round_trips_exactly() {
+    forall(24, |seed, rng| {
+        let n = 1 + rng.usize_below(120);
+        let g = random_csr(rng, n, 1 + rng.usize_below(24));
+        let t = DenseTile::from_csr(&g);
+        assert_eq!(t.nnz(), g.row_ptr[n] as usize, "seed {seed}: nnz");
+        assert_eq!(t.to_csr(), g, "seed {seed}: round trip");
+    });
+}
+
+#[test]
+fn dense_tile_pitch_covers_the_maximum_degree() {
+    forall(24, |seed, rng| {
+        let n = 1 + rng.usize_below(120);
+        let g = random_csr(rng, n, 1 + rng.usize_below(24));
+        let t = DenseTile::from_csr(&g);
+        assert!(t.pitch >= g.max_degree().max(1), "seed {seed}: pitch >= max degree");
+        assert_eq!(t.pitch % 8, 0, "seed {seed}: pitch keeps SIMD alignment");
+        assert_eq!(t.val.len(), n * t.pitch, "seed {seed}: padded storage size");
+        for i in 0..n {
+            let deg = (g.row_ptr[i + 1] - g.row_ptr[i]) as usize;
+            assert_eq!(t.row_nnz(i), deg, "seed {seed}: row_nnz({i})");
+        }
+    });
+}
+
+#[test]
+fn dense_tile_viability_is_monotone_in_slack() {
+    // If a graph fits a padding budget, it fits every looser budget —
+    // the dispatcher relies on this when relaxing DENSE_TILE_SLACK.
+    forall(24, |seed, rng| {
+        let n = 1 + rng.usize_below(120);
+        let g = random_csr(rng, n, 1 + rng.usize_below(24));
+        let mut prev = false;
+        for slack in 1..=16 {
+            let v = dense_tile_viable(&g, slack);
+            assert!(v || !prev, "seed {seed}: viability regressed at slack {slack}");
+            prev = v;
+        }
+    });
+}
+
+#[test]
+fn degenerate_graphs_survive_both_formats() {
+    let empty = Csr::new(0, 4, vec![0], vec![], vec![]).unwrap();
+    let lonely = coo_to_csr(5, 5, vec![(2, 3, 1.5f32)]).unwrap();
+    for g in [&empty, &lonely] {
+        for h in [1, BCSR_BLOCK_ROWS] {
+            assert_eq!(BlockedCsr::from_csr(g, h).to_csr(), *g);
+        }
+        assert_eq!(DenseTile::from_csr(g).to_csr(), *g);
+    }
+}
