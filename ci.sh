@@ -16,6 +16,11 @@
 #   ./ci.sh --tune-only   autotuner gate: repro tune --quick -> COST_spmm.json,
 #                         schema validation, and a bench pass asserting the
 #                         tuned-dispatch case landed (CI's tune job)
+#   ./ci.sh --serve-only  serving gate: boot `repro serve --listen` on a
+#                         loopback ephemeral port, drive it with
+#                         `repro loadgen --quick` -> BENCH_serving.json, and
+#                         diff against the committed baseline (CI's serving
+#                         job; bootstrap-pass while the baseline is unseeded)
 #
 # Env knobs:
 #   SKIP_LINT=1   skip the fmt + clippy steps (e.g. a toolchain without
@@ -96,6 +101,48 @@ run_tune_gate() {
         "see docs/dispatch.md (CI section)"
 }
 
+run_serving_gate() {
+    # End-to-end over real TCP: a live server on an ephemeral loopback
+    # port (eval datasets, host backend — no artifacts), the closed-loop
+    # generator against it, then the bench_diff gate over the latency
+    # quantiles + throughput it measured. The threshold is deliberately
+    # loose (50%, 500µs noise floor): shared-runner serving latency is
+    # far noisier than the in-process microbenches, and the throughput
+    # case diffs direction-aware (a drop regresses, a gain passes).
+    echo "== serving gate: BENCH_serving.json =="
+    cargo build --release -p aes-spmm --bin repro --bin bench_diff
+    local addr_file="$PWD/target/serving-addr.txt"
+    rm -f "$addr_file"
+    ./target/release/repro serve --listen 127.0.0.1:0 \
+        --eval-data "$PWD/target/serve-eval" \
+        --port-file "$addr_file" --max-seconds 600 &
+    local server_pid=$!
+    # The addr file appears once the listener is bound.
+    local waited=0
+    while [[ ! -s "$addr_file" ]]; do
+        kill -0 "$server_pid" 2>/dev/null || die \
+            "the serving process exited before binding its listener." \
+            "re-run './target/release/repro serve --listen 127.0.0.1:0 --eval-data target/serve-eval' by hand to see why"
+        sleep 0.2
+        waited=$((waited + 1))
+        [[ "$waited" -lt 150 ]] || { kill "$server_pid" 2>/dev/null || true; die \
+            "the serving process never wrote $addr_file within 30s."; }
+    done
+    local addr
+    addr="$(cat "$addr_file")"
+    echo "== loadgen --quick against $addr =="
+    local loadgen_rc=0
+    ./target/release/repro loadgen --addr "$addr" --quick \
+        --json "$PWD/BENCH_serving.json" || loadgen_rc=$?
+    kill "$server_pid" 2>/dev/null || true
+    wait "$server_pid" 2>/dev/null || true
+    [[ "$loadgen_rc" -eq 0 ]] || die "repro loadgen failed (exit $loadgen_rc)"
+    echo "== serving regression gate (direction-aware; >50% drift fails) =="
+    cargo run --release -p aes-spmm --bin bench_diff -- \
+        BENCH_serving.json benchmarks/baseline/BENCH_serving.json \
+        --threshold 0.50 --min-median-us 500
+}
+
 if [[ "${1:-}" == "--bench-only" ]]; then
     run_benches
     echo "CI OK (bench only)"
@@ -111,6 +158,12 @@ fi
 if [[ "${1:-}" == "--tune-only" ]]; then
     run_tune_gate
     echo "CI OK (tune only)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve-only" ]]; then
+    run_serving_gate
+    echo "CI OK (serve only)"
     exit 0
 fi
 

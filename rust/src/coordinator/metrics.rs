@@ -1,11 +1,27 @@
-//! Lock-cheap service metrics: counters + log-bucketed latency histograms.
+//! Lock-cheap service metrics: counters + sub-bucketed latency
+//! histograms with per-route quantile tracking.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Log2-bucketed duration histogram: bucket i covers [2^i, 2^(i+1)) µs.
+/// Values below this many µs get unit-width buckets (exact to 1µs).
+const LINEAR_MAX: u64 = 16;
+/// Linear sub-buckets per power-of-two octave above the linear range.
+const SUB_BUCKETS: usize = 16;
+/// log2(LINEAR_MAX): the first sub-bucketed octave.
+const FIRST_OCTAVE: usize = 4;
+/// Octaves 2^4..2^40 µs — the top covers ~12 days, far past any sane
+/// request latency; larger values clamp into the last bucket.
+const OCTAVES: usize = 36;
+const NUM_BUCKETS: usize = LINEAR_MAX as usize + OCTAVES * SUB_BUCKETS;
+
+/// Lock-free duration histogram: unit-width buckets up to 16µs, then
+/// 16 linear sub-buckets per power-of-two octave, so every quantile
+/// estimate carries at most 1/16 ≈ 6% relative error — tight enough to
+/// gate p999 in CI, unlike plain log2 buckets whose upper bound can be
+/// 2× the true value. Recording is a handful of relaxed atomic adds.
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
@@ -14,7 +30,29 @@ pub struct Histogram {
     max_us: AtomicU64,
 }
 
-const NUM_BUCKETS: usize = 40; // up to ~2^40 µs ≈ 12 days
+/// Bucket holding a value of `us` microseconds.
+fn bucket_index(us: u64) -> usize {
+    if us < LINEAR_MAX {
+        return us as usize;
+    }
+    let octave = 63 - us.leading_zeros() as usize;
+    if octave >= FIRST_OCTAVE + OCTAVES {
+        return NUM_BUCKETS - 1;
+    }
+    let sub = ((us >> (octave - FIRST_OCTAVE)) & (SUB_BUCKETS as u64 - 1)) as usize;
+    LINEAR_MAX as usize + (octave - FIRST_OCTAVE) * SUB_BUCKETS + sub
+}
+
+/// Exclusive upper bound (µs) of bucket `idx` — the quantile estimate.
+fn bucket_upper_us(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        return idx as u64 + 1;
+    }
+    let k = idx - LINEAR_MAX as usize;
+    let octave = FIRST_OCTAVE + k / SUB_BUCKETS;
+    let sub = (k % SUB_BUCKETS) as u64;
+    (SUB_BUCKETS as u64 + sub + 1) << (octave - FIRST_OCTAVE)
+}
 
 impl Default for Histogram {
     fn default() -> Self {
@@ -34,8 +72,7 @@ impl Histogram {
 
     pub fn record(&self, d: Duration) {
         let us = d.as_micros() as u64;
-        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(NUM_BUCKETS - 1);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
         self.max_us.fetch_max(us, Ordering::Relaxed);
@@ -57,22 +94,34 @@ impl Histogram {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
 
-    /// Upper-bound estimate of percentile `p` from the bucket boundaries.
+    /// Upper-bound estimate of percentile `p` (nearest-rank over the
+    /// bucket counts). `p` is in percent: `percentile(99.9)` is p999.
     pub fn percentile(&self, p: f64) -> Duration {
         let total = self.count();
         if total == 0 {
             return Duration::ZERO;
         }
-        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let target = (((p / 100.0) * total as f64).ceil() as u64).max(1);
         let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+                return Duration::from_micros(bucket_upper_us(i));
             }
         }
         self.max()
     }
+}
+
+/// Per-route latency digest inside a [`MetricsSnapshot`].
+#[derive(Clone, Debug)]
+pub struct RouteLatencySnapshot {
+    /// Requests answered on this route.
+    pub requests: u64,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub p999: Duration,
+    pub mean: Duration,
 }
 
 /// Service-wide metrics.
@@ -99,12 +148,21 @@ pub struct Metrics {
     /// Shard units a delta re-tagged to the new epoch without
     /// rebuilding (the scoped-invalidation win — untouched shards).
     pub shards_retained: AtomicU64,
+    /// Wire requests refused by admission control — the in-flight
+    /// high-water mark or a full intake queue — and answered with an
+    /// explicit `shed` response, never silently dropped
+    /// (docs/serving.md).
+    pub shed: AtomicU64,
     pub latency: Histogram,
     pub queue_wait: Histogram,
     pub exec_time: Histogram,
     pub load_time: Histogram,
-    /// Per-route execution counts.
+    /// Per-route execution (batch) counts.
     per_route: Mutex<BTreeMap<String, u64>>,
+    /// Per-route end-to-end request latency histograms. The map lock
+    /// guards only the route→histogram binding; recording itself is
+    /// lock-free on the shared [`Histogram`].
+    route_latency: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -121,13 +179,18 @@ pub struct MetricsSnapshot {
     pub graph_epochs: u64,
     pub shards_resampled: u64,
     pub shards_retained: u64,
+    pub shed: u64,
     pub latency_p50: Duration,
     pub latency_p99: Duration,
+    pub latency_p999: Duration,
     pub latency_mean: Duration,
     pub queue_wait_p50: Duration,
     pub exec_p50: Duration,
     pub load_p50: Duration,
+    /// Per-route execution (batch) counts.
     pub per_route: BTreeMap<String, u64>,
+    /// Per-route request latency quantiles.
+    pub route_latency: BTreeMap<String, RouteLatencySnapshot>,
 }
 
 impl Metrics {
@@ -137,6 +200,22 @@ impl Metrics {
 
     pub fn record_route(&self, label: &str) {
         *self.per_route.lock().unwrap().entry(label.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record one request's end-to-end latency against its route.
+    pub fn record_route_latency(&self, label: &str, d: Duration) {
+        let hist = {
+            let mut map = self.route_latency.lock().unwrap();
+            match map.get(label) {
+                Some(h) => h.clone(),
+                None => {
+                    let h = Arc::new(Histogram::new());
+                    map.insert(label.to_string(), h.clone());
+                    h
+                }
+            }
+        };
+        hist.record(d);
     }
 
     /// Mean requests answered per forward pass (the batching win).
@@ -149,6 +228,24 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let route_latency = self
+            .route_latency
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(label, h)| {
+                (
+                    label.clone(),
+                    RouteLatencySnapshot {
+                        requests: h.count(),
+                        p50: h.percentile(50.0),
+                        p99: h.percentile(99.0),
+                        p999: h.percentile(99.9),
+                        mean: h.mean(),
+                    },
+                )
+            })
+            .collect();
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -161,13 +258,16 @@ impl Metrics {
             graph_epochs: self.graph_epochs.load(Ordering::Relaxed),
             shards_resampled: self.shards_resampled.load(Ordering::Relaxed),
             shards_retained: self.shards_retained.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             latency_p50: self.latency.percentile(50.0),
             latency_p99: self.latency.percentile(99.0),
+            latency_p999: self.latency.percentile(99.9),
             latency_mean: self.latency.mean(),
             queue_wait_p50: self.queue_wait.percentile(50.0),
             exec_p50: self.exec_time.percentile(50.0),
             load_p50: self.load_time.percentile(50.0),
             per_route: self.per_route.lock().unwrap().clone(),
+            route_latency,
         }
     }
 }
@@ -187,7 +287,77 @@ mod tests {
         assert!(h.mean() >= Duration::from_millis(20));
         // p50 upper bound must cover the median value (4ms).
         assert!(h.percentile(50.0) >= Duration::from_millis(4));
-        assert!(h.percentile(100.0) >= Duration::from_millis(64));
+        assert!(h.percentile(100.0) >= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn bucket_layout_is_contiguous_and_monotone() {
+        // Every bucket's upper bound equals the next bucket's lower
+        // bound: index(upper) == idx + 1 for all but the last bucket.
+        for idx in 0..NUM_BUCKETS - 1 {
+            let upper = bucket_upper_us(idx);
+            assert_eq!(bucket_index(upper), idx + 1, "gap above bucket {idx} ({upper}µs)");
+            assert_eq!(bucket_index(upper - 1), idx, "bucket {idx} excludes {upper}-1µs");
+        }
+        // Clamp: beyond the top octave everything lands in the last bucket.
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn sub_buckets_bound_quantile_error() {
+        // One sample at 1000µs: octave [512, 1024) has 32µs-wide
+        // sub-buckets, so the p50 upper bound lands within 32µs — the
+        // plain log2 histogram would have reported 1024µs for 513µs.
+        let h = Histogram::new();
+        h.record(Duration::from_micros(1000));
+        let p50 = h.percentile(50.0).as_micros() as u64;
+        assert!(p50 > 1000 && p50 <= 1024, "p50 {p50}µs out of sub-bucket range");
+
+        // Exact unit-width buckets below 16µs.
+        let h = Histogram::new();
+        h.record(Duration::from_micros(7));
+        assert_eq!(h.percentile(50.0), Duration::from_micros(8));
+    }
+
+    #[test]
+    fn p999_on_small_samples_tracks_the_max() {
+        // With fewer than 1000 samples the p999 nearest-rank is the
+        // last sample: it must land in the max's bucket, never below.
+        let h = Histogram::new();
+        for us in [100u64, 200, 300, 50_000] {
+            h.record(Duration::from_micros(us));
+        }
+        let p999 = h.percentile(99.9);
+        assert!(p999 >= Duration::from_micros(50_000));
+        let idx = bucket_index(50_000);
+        assert_eq!(p999, Duration::from_micros(bucket_upper_us(idx)));
+        // And a single sample: p50 == p99 == p999.
+        let h = Histogram::new();
+        h.record(Duration::from_micros(777));
+        assert_eq!(h.percentile(50.0), h.percentile(99.9));
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(Duration::from_micros(t * 1000 + i % 100));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 80_000);
+        let bucket_total: u64 =
+            h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        assert_eq!(bucket_total, 80_000);
+        assert!(h.max() >= Duration::from_micros(7000));
     }
 
     #[test]
@@ -214,5 +384,21 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap.per_route["a"], 2);
         assert_eq!(snap.per_route["b"], 1);
+    }
+
+    #[test]
+    fn per_route_latency_histograms() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_route_latency("hot", Duration::from_micros(500));
+        }
+        m.record_route_latency("hot", Duration::from_millis(80));
+        m.record_route_latency("cold", Duration::from_millis(5));
+        let snap = m.snapshot();
+        let hot = &snap.route_latency["hot"];
+        assert_eq!(hot.requests, 11);
+        assert!(hot.p50 < Duration::from_millis(1));
+        assert!(hot.p999 >= Duration::from_millis(80));
+        assert_eq!(snap.route_latency["cold"].requests, 1);
     }
 }

@@ -16,11 +16,15 @@
 //! | `batcher` | dynamic batching: group by route, flush on size/delay  |
 //! | `server`  | [`Coordinator`]: intake queue, worker pool, plan cache + prefetcher + shard-unit cache wiring, route execution |
 //! | `store`   | [`ModelStore`]: immutable datasets / weights / feature stores shared lock-free via `Arc` |
-//! | `metrics` | lock-cheap counters + log-bucketed latency histograms  |
+//! | `metrics` | lock-cheap counters + sub-bucketed latency histograms (p50/p99/p999, per route) |
+//! | `wire`    | length-prefixed TCP frame codec, versioned request/response JSON (docs/serving.md) |
+//! | `net`     | [`WireServer`]: accept loop, connection threads, admission control + load shedding, ops requests |
 //!
 //! # Request path (all rust, no python)
 //!
 //! ```text
+//! TCP client → 4-byte-LE framed JSON → connection thread
+//!            → admission control (high-water in-flight gauge → shed)
 //! client → submit (bounded queue, backpressure)
 //!        ├→ async prefetch: cold routes start feature staging + sampling
 //!        │    on a private pool, overlapping the current batches' SpMM
@@ -68,12 +72,15 @@
 
 mod batcher;
 mod metrics;
+mod net;
 mod request;
 mod server;
 mod store;
+pub mod wire;
 
 pub use batcher::{run_batcher, run_batcher_with, Batch, BatcherConfig};
-pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use metrics::{Histogram, Metrics, MetricsSnapshot, RouteLatencySnapshot};
+pub use net::{NetConfig, WireServer};
 pub use request::{InferRequest, InferResponse, Prediction, RouteKey, SubmitError};
 pub use server::{
     oneshot_accuracy, Coordinator, CoordinatorConfig, DeltaOutcome, ShardCacheStats,

@@ -1,0 +1,477 @@
+//! The TCP serving front-end: accept loop, per-connection threads,
+//! admission control, and the ops request surface.
+//!
+//! [`WireServer`] wraps an [`Arc<Coordinator>`]: every connection gets
+//! a thread that reads [`super::wire`] frames and dispatches them.
+//! `infer` frames go through [`Coordinator::submit`] — the same bounded
+//! intake, batcher, plan-cache/prefetcher/sharded path as in-process
+//! callers, so wire requests for the same route coalesce into one
+//! forward pass across connections. The connection thread then blocks
+//! on that request's reply channel; concurrency comes from the number
+//! of connections, exactly like one outstanding request per client.
+//!
+//! # Admission control
+//!
+//! Two gates, both answered with an explicit `"shed"` response (a
+//! distinct status, not an error — the client should back off and
+//! retry), and both counted in [`super::Metrics::shed`]:
+//!
+//! 1. the server-level in-flight gauge against
+//!    [`NetConfig::high_water`] — refusing before touching the
+//!    coordinator, bounding the reply channels and blocked connection
+//!    threads a burst can pin;
+//! 2. [`SubmitError::Busy`] from the coordinator's bounded intake
+//!    queue (backpressure racing the gauge is still never a silent
+//!    drop).
+//!
+//! Responses already in flight when a burst arrives drain oldest-first
+//! per the batcher contract (docs/mutation.md, PR 5): shedding refuses
+//! *new* work, it never abandons admitted work.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::graph::GraphDelta;
+use crate::util::JsonValue;
+
+use super::request::SubmitError;
+use super::server::Coordinator;
+use super::store::ModelStore;
+use super::wire::{self, WireRequest};
+
+/// Front-end knobs.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// In-flight `infer`/`logits` requests (all connections) beyond
+    /// which new ones are shed. 0 sheds everything — useful in tests.
+    pub high_water: usize,
+    /// Per-frame byte cap (see [`wire::MAX_FRAME`]).
+    pub max_frame: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { high_water: 256, max_frame: wire::MAX_FRAME }
+    }
+}
+
+/// Shared state behind the accept loop and every connection thread.
+struct ServerState {
+    coord: Arc<Coordinator>,
+    store: Arc<ModelStore>,
+    cfg: NetConfig,
+    inflight: AtomicUsize,
+    started: Instant,
+    shutdown: AtomicBool,
+    /// Connection threads + stream clones so shutdown can force
+    /// blocked reads to return. Grows with total connections accepted;
+    /// fine at serving scale (one entry per client connection).
+    conns: Mutex<Vec<(JoinHandle<()>, TcpStream)>>,
+}
+
+/// The TCP front-end. Dropping it (or calling [`WireServer::shutdown`])
+/// stops the accept loop, closes every live connection, and joins the
+/// threads; the coordinator itself shuts down when its last `Arc`
+/// drops.
+pub struct WireServer {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving.
+    pub fn bind(
+        coord: Arc<Coordinator>,
+        store: Arc<ModelStore>,
+        addr: &str,
+        cfg: NetConfig,
+    ) -> Result<WireServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Self::start(coord, store, listener, cfg)
+    }
+
+    /// Start serving on an already-bound listener.
+    pub fn start(
+        coord: Arc<Coordinator>,
+        store: Arc<ModelStore>,
+        listener: TcpListener,
+        cfg: NetConfig,
+    ) -> Result<WireServer> {
+        let addr = listener.local_addr().context("reading bound address")?;
+        let state = Arc::new(ServerState {
+            coord,
+            store,
+            cfg,
+            inflight: AtomicUsize::new(0),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let state = state.clone();
+            std::thread::Builder::new()
+                .name("wire-accept".into())
+                .spawn(move || accept_loop(listener, state))
+                .context("spawning accept thread")?
+        };
+        Ok(WireServer { addr, state, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close live connections, join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.state.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // Unblock the accept loop: it checks the flag after every
+        // accept, so one throwaway connection gets it past the block.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // The accept loop is gone — no new entries can race this drain.
+        let conns = std::mem::take(&mut *self.state.conns.lock().unwrap());
+        for (handle, stream) in conns {
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        let Ok(clone) = stream.try_clone() else { continue };
+        let st = state.clone();
+        let handle = std::thread::Builder::new()
+            .name("wire-conn".into())
+            .spawn(move || connection_loop(stream, st));
+        match handle {
+            Ok(h) => state.conns.lock().unwrap().push((h, clone)),
+            Err(_) => {
+                // Out of threads: refuse the connection outright rather
+                // than hanging the client.
+                let _ = clone.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+fn connection_loop(mut stream: TcpStream, state: Arc<ServerState>) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let body = match wire::read_frame(&mut stream, state.cfg.max_frame) {
+            Ok(Some(b)) => b,
+            // Clean EOF, a reset, or an untrustworthy stream (oversize
+            // length, mid-frame EOF): drop the connection.
+            Ok(None) | Err(_) => break,
+        };
+        let reply = handle_frame(&state, &body);
+        if wire::write_frame(&mut stream, reply.to_string().as_bytes()).is_err() {
+            break;
+        }
+    }
+    // The accept loop holds a clone of this stream (so shutdown can
+    // unblock the read above); dropping ours would leave the socket
+    // half-alive until server shutdown. Close it actively so the peer
+    // sees EOF the moment the connection is dead.
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Decode and dispatch one frame; infallible — every failure mode maps
+/// to an `"error"` (or `"shed"`) response frame.
+fn handle_frame(state: &ServerState, body: &[u8]) -> JsonValue {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return wire::error_response(0, "frame is not UTF-8"),
+    };
+    let doc = match crate::util::parse_json(text) {
+        Ok(d) => d,
+        Err(e) => return wire::error_response(0, &format!("frame is not JSON: {e:#}")),
+    };
+    let req = match WireRequest::from_json(&doc) {
+        Ok(r) => r,
+        Err(e) => return wire::error_response(wire::request_id(&doc), &format!("{e:#}")),
+    };
+    match req {
+        WireRequest::Infer { id, route, nodes } => handle_infer(state, id, route, nodes),
+        WireRequest::Logits { id, route } => handle_logits(state, id, route),
+        WireRequest::Mutate { id, dataset, ops } => handle_mutate(state, id, &dataset, &ops),
+        WireRequest::Status { id } => handle_status(state, id),
+        WireRequest::Metrics { id } => handle_metrics(state, id),
+        WireRequest::Routes { id } => handle_routes(state, id),
+    }
+}
+
+/// RAII in-flight slot: decrements the gauge however the handler exits.
+struct Admission<'a>(&'a AtomicUsize);
+
+impl Drop for Admission<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Claim an in-flight slot, or shed: past the high-water mark the
+/// request is refused *before* it touches the coordinator.
+fn admit(state: &ServerState) -> Option<Admission<'_>> {
+    let prev = state.inflight.fetch_add(1, Ordering::AcqRel);
+    if prev >= state.cfg.high_water {
+        state.inflight.fetch_sub(1, Ordering::AcqRel);
+        state.coord.metrics().shed.fetch_add(1, Ordering::Relaxed);
+        return None;
+    }
+    Some(Admission(&state.inflight))
+}
+
+fn num(x: u64) -> JsonValue {
+    JsonValue::Num(x as f64)
+}
+
+fn us(d: std::time::Duration) -> JsonValue {
+    num(d.as_micros() as u64)
+}
+
+fn handle_infer(
+    state: &ServerState,
+    id: u64,
+    route: super::request::RouteKey,
+    nodes: Vec<usize>,
+) -> JsonValue {
+    let Some(_slot) = admit(state) else {
+        return wire::shed_response(id, "in-flight high-water mark reached");
+    };
+    // Bounds-check against the dataset before the request reaches a
+    // worker: an out-of-range node is a client error, not a panic.
+    let ds = match state.store.dataset(&route.dataset) {
+        Ok(d) => d,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    if let Some(&bad) = nodes.iter().find(|&&n| n >= ds.n) {
+        return wire::error_response(
+            id,
+            &format!("node {bad} out of range (dataset {} has {} nodes)", route.dataset, ds.n),
+        );
+    }
+    match state.coord.submit(route, nodes) {
+        Ok((_, rx)) => match rx.recv() {
+            Ok(resp) => {
+                if let Some(err) = resp.error {
+                    return wire::error_response(id, &err);
+                }
+                let predictions = resp
+                    .predictions
+                    .iter()
+                    .map(|p| {
+                        JsonValue::Obj(
+                            [
+                                ("node".to_string(), num(p.node as u64)),
+                                ("class".to_string(), JsonValue::Num(p.class as f64)),
+                            ]
+                            .into_iter()
+                            .collect(),
+                        )
+                    })
+                    .collect();
+                wire::ok_response(
+                    id,
+                    vec![
+                        ("predictions", JsonValue::Arr(predictions)),
+                        ("batch_size", num(resp.batch_size as u64)),
+                        ("latency_us", us(resp.latency)),
+                    ],
+                )
+            }
+            Err(_) => wire::error_response(id, "coordinator dropped the reply channel"),
+        },
+        Err(SubmitError::Busy) => {
+            state.coord.metrics().shed.fetch_add(1, Ordering::Relaxed);
+            wire::shed_response(id, "intake queue full (backpressure)")
+        }
+        Err(SubmitError::Closed) => wire::error_response(id, "coordinator closed"),
+    }
+}
+
+fn handle_logits(state: &ServerState, id: u64, route: super::request::RouteKey) -> JsonValue {
+    let Some(_slot) = admit(state) else {
+        return wire::shed_response(id, "in-flight high-water mark reached");
+    };
+    let ds = match state.store.dataset(&route.dataset) {
+        Ok(d) => d,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    let logits = match state.coord.route_logits(&route) {
+        Ok(l) => l,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    let vals = match logits.as_f32() {
+        Ok(v) => v,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    if vals.len() != ds.n * ds.classes {
+        return wire::error_response(
+            id,
+            &format!("logits shape {} != {}x{}", vals.len(), ds.n, ds.classes),
+        );
+    }
+    let bits = vals.iter().map(|v| num(v.to_bits() as u64)).collect();
+    wire::ok_response(
+        id,
+        vec![
+            ("rows", num(ds.n as u64)),
+            ("classes", num(ds.classes as u64)),
+            ("epoch", num(ds.epoch)),
+            ("logits_bits", JsonValue::Arr(bits)),
+        ],
+    )
+}
+
+fn handle_mutate(state: &ServerState, id: u64, dataset: &str, ops: &[String]) -> JsonValue {
+    let delta = match GraphDelta::parse(&ops.join("\n")) {
+        Ok(d) => d,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    match state.coord.apply_delta(dataset, &delta) {
+        Ok(out) => wire::ok_response(
+            id,
+            vec![
+                ("epoch", num(out.epoch)),
+                ("inserted", num(out.report.inserted as u64)),
+                ("deleted", num(out.report.deleted as u64)),
+                ("reweighted", num(out.report.reweighted as u64)),
+                ("noops", num(out.report.noops as u64)),
+                ("touched_rows", num(out.report.touched_rows.len() as u64)),
+                ("shards_resampled", num(out.shards_resampled as u64)),
+                ("shards_retained", num(out.shards_retained as u64)),
+                ("plans_invalidated", num(out.plans_invalidated as u64)),
+                ("routes_restaged", num(out.routes_restaged as u64)),
+            ],
+        ),
+        Err(e) => wire::error_response(id, &format!("{e:#}")),
+    }
+}
+
+fn handle_status(state: &ServerState, id: u64) -> JsonValue {
+    let datasets = state
+        .store
+        .dataset_names()
+        .into_iter()
+        .filter_map(|name| {
+            let ds = state.store.dataset(&name).ok()?;
+            Some(JsonValue::Obj(
+                [
+                    ("name".to_string(), JsonValue::Str(name)),
+                    ("nodes".to_string(), num(ds.n as u64)),
+                    ("classes".to_string(), num(ds.classes as u64)),
+                    ("epoch".to_string(), num(ds.epoch)),
+                ]
+                .into_iter()
+                .collect(),
+            ))
+        })
+        .collect();
+    wire::ok_response(
+        id,
+        vec![
+            ("uptime_us", us(state.started.elapsed())),
+            ("datasets", JsonValue::Arr(datasets)),
+            ("workers", num(state.coord.pool_workers() as u64)),
+            ("inflight", num(state.inflight.load(Ordering::Acquire) as u64)),
+            ("high_water", num(state.cfg.high_water as u64)),
+            ("plans_resident", num(state.coord.plan_cache_len() as u64)),
+        ],
+    )
+}
+
+fn handle_metrics(state: &ServerState, id: u64) -> JsonValue {
+    let snap = state.coord.metrics().snapshot();
+    let route_latency = snap
+        .route_latency
+        .iter()
+        .map(|(label, r)| {
+            (
+                label.clone(),
+                JsonValue::Obj(
+                    [
+                        ("requests".to_string(), num(r.requests)),
+                        ("p50_us".to_string(), us(r.p50)),
+                        ("p99_us".to_string(), us(r.p99)),
+                        ("p999_us".to_string(), us(r.p999)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                ),
+            )
+        })
+        .collect();
+    wire::ok_response(
+        id,
+        vec![
+            ("submitted", num(snap.submitted)),
+            ("rejected", num(snap.rejected)),
+            ("completed", num(snap.completed)),
+            ("failed", num(snap.failed)),
+            ("shed", num(snap.shed)),
+            ("batches", num(snap.batches)),
+            ("plan_hits", num(snap.plan_hits)),
+            ("plan_misses", num(snap.plan_misses)),
+            ("sharded_batches", num(snap.sharded_batches)),
+            ("graph_epochs", num(snap.graph_epochs)),
+            ("latency_p50_us", us(snap.latency_p50)),
+            ("latency_p99_us", us(snap.latency_p99)),
+            ("latency_p999_us", us(snap.latency_p999)),
+            ("latency_mean_us", us(snap.latency_mean)),
+            ("queue_wait_p50_us", us(snap.queue_wait_p50)),
+            ("route_latency", JsonValue::Obj(route_latency)),
+        ],
+    )
+}
+
+fn handle_routes(state: &ServerState, id: u64) -> JsonValue {
+    let snap = state.coord.metrics().snapshot();
+    let routes = snap
+        .per_route
+        .iter()
+        .map(|(label, &executions)| {
+            let mut map: std::collections::BTreeMap<String, JsonValue> = [
+                ("name".to_string(), JsonValue::Str(label.clone())),
+                ("executions".to_string(), num(executions)),
+            ]
+            .into_iter()
+            .collect();
+            if let Some(r) = snap.route_latency.get(label) {
+                map.insert("requests".to_string(), num(r.requests));
+                map.insert("p50_us".to_string(), us(r.p50));
+                map.insert("p99_us".to_string(), us(r.p99));
+                map.insert("p999_us".to_string(), us(r.p999));
+            }
+            JsonValue::Obj(map)
+        })
+        .collect();
+    wire::ok_response(id, vec![("routes", JsonValue::Arr(routes))])
+}

@@ -715,6 +715,7 @@ fn run_batch(ctx: &WorkerCtx, batch: Batch) {
                 Ok(v) => v,
                 Err(e) => return fail_batch(metrics, batch, &e.to_string()),
             };
+            let route_label = batch.key.label();
             for req in batch.requests {
                 let predictions = req
                     .nodes
@@ -723,6 +724,7 @@ fn run_batch(ctx: &WorkerCtx, batch: Batch) {
                     .collect();
                 let latency = req.enqueued.elapsed();
                 metrics.latency.record(latency);
+                metrics.record_route_latency(&route_label, latency);
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(InferResponse {
                     id: req.id,

@@ -1,0 +1,391 @@
+//! Wire protocol for the serving front-end: length-prefixed frames with
+//! a versioned JSON body (docs/serving.md carries the byte-level spec).
+//!
+//! A frame is a 4-byte little-endian `u32` length followed by that many
+//! bytes of UTF-8 JSON. Both directions use the same framing; a
+//! connection is a sequence of request/response pairs. Requests carry
+//! `"v": 1` ([`PROTOCOL_VERSION`]) and a `"type"` discriminator;
+//! responses echo the request `id` and carry `"status"`: `"ok"`,
+//! `"shed"` (admission control refused the request — retry later), or
+//! `"error"`.
+//!
+//! Logits travel as `f32::to_bits` integers (`logits_bits`): every
+//! `u32` is exactly representable as a JSON `f64` number, so the
+//! bitwise-conformance contract (`tests/serving_wire.rs`) survives the
+//! text encoding — decimal-formatted floats would not round-trip.
+//!
+//! This module owns the codec only; the server loop lives in
+//! [`super::net`], the client side in [`crate::loadgen`].
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::Precision;
+use crate::sampling::Strategy;
+use crate::util::{parse_json, JsonValue};
+
+use super::request::RouteKey;
+
+/// Protocol version stamped into every request (`"v"`). The server
+/// rejects frames from a different major version with an error
+/// response rather than guessing at field semantics.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Frame-length cap: a peer announcing more than this is refused
+/// before any allocation (oversized lengths are how a garbage or
+/// hostile byte stream would otherwise turn into an OOM).
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Read one length-prefixed frame. `Ok(None)` is a clean EOF — the
+/// peer closed between frames; an EOF mid-frame or a length beyond
+/// `max_frame` is an error (the stream can no longer be trusted).
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let mut rest = [0u8; 3];
+    r.read_exact(&mut rest)?;
+    let len = u32::from_le_bytes([first[0], rest[0], rest[1], rest[2]]) as usize;
+    if len > max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {max_frame}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+/// Write one length-prefixed frame and flush it.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(body.len()).map_err(|_| {
+        io::Error::new(io::ErrorKind::InvalidInput, "frame body exceeds u32 length")
+    })?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// One frame each way: encode `req`, read and parse the reply. The
+/// client side of the protocol — loadgen workers and the conformance
+/// tests drive servers through this.
+pub fn roundtrip<S: Read + Write>(stream: &mut S, req: &WireRequest) -> Result<JsonValue> {
+    write_frame(stream, req.to_json().to_string().as_bytes())
+        .context("writing request frame")?;
+    let body = read_frame(stream, MAX_FRAME)
+        .context("reading response frame")?
+        .context("server closed the connection mid-request")?;
+    parse_json(std::str::from_utf8(&body).context("response frame is not UTF-8")?)
+}
+
+/// A decoded wire request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    /// Classify `nodes` under a route; answered with per-node argmax
+    /// predictions through the batched serving path.
+    Infer { id: u64, route: RouteKey, nodes: Vec<usize> },
+    /// Execute a route and return the raw logits as `f32::to_bits`
+    /// integers — the bitwise-conformance entry.
+    Logits { id: u64, route: RouteKey },
+    /// Apply a live edge delta (`ops` are `graph::GraphDelta` text
+    /// lines: `+ row col w` / `- row col` / `= row col w`).
+    Mutate { id: u64, dataset: String, ops: Vec<String> },
+    /// Ops surface: server identity, datasets, admission state.
+    Status { id: u64 },
+    /// Ops surface: full metrics snapshot.
+    Metrics { id: u64 },
+    /// Ops surface: per-route execution counts + latency quantiles.
+    Routes { id: u64 },
+}
+
+fn obj(entries: Vec<(&str, JsonValue)>) -> JsonValue {
+    JsonValue::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(x: u64) -> JsonValue {
+    JsonValue::Num(x as f64)
+}
+
+/// Encode a route as its wire object (`width` is `null` for exact).
+pub fn route_to_json(key: &RouteKey) -> JsonValue {
+    obj(vec![
+        ("model", JsonValue::Str(key.model.clone())),
+        ("dataset", JsonValue::Str(key.dataset.clone())),
+        (
+            "width",
+            key.width.map(|w| num(w as u64)).unwrap_or(JsonValue::Null),
+        ),
+        ("strategy", JsonValue::Str(key.strategy.name().to_string())),
+        ("precision", JsonValue::Str(key.precision.name().to_string())),
+    ])
+}
+
+/// Decode a route from the fields of a request object.
+pub fn route_from_json(v: &JsonValue) -> Result<RouteKey> {
+    let model = v.get("model").context("route: missing model")?.as_str()?.to_string();
+    let dataset = v.get("dataset").context("route: missing dataset")?.as_str()?.to_string();
+    let width = match v.get("width") {
+        Ok(JsonValue::Null) | Err(_) => None,
+        Ok(w) => Some(w.as_usize().context("route: width must be an integer")?),
+    };
+    let strategy_name = v.get("strategy").context("route: missing strategy")?.as_str()?;
+    let strategy = Strategy::from_name(strategy_name)
+        .with_context(|| format!("route: unknown strategy {strategy_name:?}"))?;
+    let precision_name = v.get("precision").context("route: missing precision")?.as_str()?;
+    let precision = Precision::from_name(precision_name)
+        .with_context(|| format!("route: unknown precision {precision_name:?}"))?;
+    Ok(RouteKey { model, dataset, width, strategy, precision })
+}
+
+impl WireRequest {
+    /// Request id (echoed in the response).
+    pub fn id(&self) -> u64 {
+        match self {
+            WireRequest::Infer { id, .. }
+            | WireRequest::Logits { id, .. }
+            | WireRequest::Mutate { id, .. }
+            | WireRequest::Status { id }
+            | WireRequest::Metrics { id }
+            | WireRequest::Routes { id } => *id,
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        let mut map = BTreeMap::new();
+        map.insert("v".to_string(), num(PROTOCOL_VERSION));
+        map.insert("id".to_string(), num(self.id()));
+        let kind = match self {
+            WireRequest::Infer { route, nodes, .. } => {
+                if let JsonValue::Obj(route_map) = route_to_json(route) {
+                    map.extend(route_map);
+                }
+                map.insert(
+                    "nodes".to_string(),
+                    JsonValue::Arr(nodes.iter().map(|&n| num(n as u64)).collect()),
+                );
+                "infer"
+            }
+            WireRequest::Logits { route, .. } => {
+                if let JsonValue::Obj(route_map) = route_to_json(route) {
+                    map.extend(route_map);
+                }
+                "logits"
+            }
+            WireRequest::Mutate { dataset, ops, .. } => {
+                map.insert("dataset".to_string(), JsonValue::Str(dataset.clone()));
+                map.insert(
+                    "ops".to_string(),
+                    JsonValue::Arr(ops.iter().map(|o| JsonValue::Str(o.clone())).collect()),
+                );
+                "mutate"
+            }
+            WireRequest::Status { .. } => "status",
+            WireRequest::Metrics { .. } => "metrics",
+            WireRequest::Routes { .. } => "routes",
+        };
+        map.insert("type".to_string(), JsonValue::Str(kind.to_string()));
+        JsonValue::Obj(map)
+    }
+
+    pub fn from_json(v: &JsonValue) -> Result<WireRequest> {
+        let version = v.get("v").context("request: missing protocol version \"v\"")?.as_f64()?;
+        if version as u64 != PROTOCOL_VERSION {
+            bail!(
+                "request: protocol version {version} unsupported \
+                 (this server speaks {PROTOCOL_VERSION})"
+            );
+        }
+        let id = request_id(v);
+        let kind = v.get("type").context("request: missing type")?.as_str()?;
+        match kind {
+            "infer" => {
+                let route = route_from_json(v)?;
+                let nodes = v
+                    .get("nodes")
+                    .context("infer: missing nodes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|n| n.as_usize())
+                    .collect::<Result<Vec<_>>>()
+                    .context("infer: nodes must be integers")?;
+                Ok(WireRequest::Infer { id, route, nodes })
+            }
+            "logits" => Ok(WireRequest::Logits { id, route: route_from_json(v)? }),
+            "mutate" => {
+                let dataset =
+                    v.get("dataset").context("mutate: missing dataset")?.as_str()?.to_string();
+                let ops = v
+                    .get("ops")
+                    .context("mutate: missing ops")?
+                    .as_arr()?
+                    .iter()
+                    .map(|o| o.as_str().map(str::to_string))
+                    .collect::<Result<Vec<_>>>()
+                    .context("mutate: ops must be strings")?;
+                Ok(WireRequest::Mutate { id, dataset, ops })
+            }
+            "status" => Ok(WireRequest::Status { id }),
+            "metrics" => Ok(WireRequest::Metrics { id }),
+            "routes" => Ok(WireRequest::Routes { id }),
+            other => bail!("request: unknown type {other:?}"),
+        }
+    }
+}
+
+/// Request/response id, 0 when absent or malformed (error responses to
+/// unparseable frames still echo something addressable).
+pub fn request_id(v: &JsonValue) -> u64 {
+    v.get("id").ok().and_then(|n| n.as_f64().ok()).map(|f| f as u64).unwrap_or(0)
+}
+
+/// Response `status` field, `""` when absent.
+pub fn response_status(v: &JsonValue) -> &str {
+    v.get("status").ok().and_then(|s| s.as_str().ok()).unwrap_or("")
+}
+
+/// Start a response object: version, echoed id, status.
+pub fn response_base(id: u64, status: &str) -> BTreeMap<String, JsonValue> {
+    let mut map = BTreeMap::new();
+    map.insert("v".to_string(), num(PROTOCOL_VERSION));
+    map.insert("id".to_string(), num(id));
+    map.insert("status".to_string(), JsonValue::Str(status.to_string()));
+    map
+}
+
+/// An `"ok"` response carrying `fields`.
+pub fn ok_response(id: u64, fields: Vec<(&str, JsonValue)>) -> JsonValue {
+    let mut map = response_base(id, "ok");
+    for (k, v) in fields {
+        map.insert(k.to_string(), v);
+    }
+    JsonValue::Obj(map)
+}
+
+/// The load-shedding refusal: a distinct `"shed"` status (not an
+/// error — the request was well-formed, the server is over its
+/// high-water mark) plus the reason. Never a silent drop.
+pub fn shed_response(id: u64, reason: &str) -> JsonValue {
+    let mut map = response_base(id, "shed");
+    map.insert("reason".to_string(), JsonValue::Str(reason.to_string()));
+    JsonValue::Obj(map)
+}
+
+/// An `"error"` response with a message.
+pub fn error_response(id: u64, msg: &str) -> JsonValue {
+    let mut map = response_base(id, "error");
+    map.insert("error".to_string(), JsonValue::Str(msg.to_string()));
+    JsonValue::Obj(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn route() -> RouteKey {
+        RouteKey {
+            model: "gcn".into(),
+            dataset: "evalpow".into(),
+            width: Some(8),
+            strategy: Strategy::Aes,
+            precision: Precision::U8Device,
+        }
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur, MAX_FRAME).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur, MAX_FRAME).unwrap().unwrap(), b"");
+        // Clean EOF between frames.
+        assert!(read_frame(&mut cur, MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frame_is_refused_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(buf), MAX_FRAME).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.extend_from_slice(b"abc"); // 3 of 10 bytes, then EOF
+        assert!(read_frame(&mut Cursor::new(buf), MAX_FRAME).is_err());
+    }
+
+    #[test]
+    fn requests_round_trip_through_json() {
+        let reqs = [
+            WireRequest::Infer { id: 7, route: route(), nodes: vec![0, 3, 159] },
+            WireRequest::Logits { id: 8, route: RouteKey { width: None, ..route() } },
+            WireRequest::Mutate {
+                id: 9,
+                dataset: "evalpow".into(),
+                ops: vec!["+ 0 159 0.01".into(), "- 1 2".into()],
+            },
+            WireRequest::Status { id: 1 },
+            WireRequest::Metrics { id: 2 },
+            WireRequest::Routes { id: 3 },
+        ];
+        for req in reqs {
+            let text = req.to_json().to_string();
+            let back = WireRequest::from_json(&parse_json(&text).unwrap()).unwrap();
+            assert_eq!(back, req, "round-trip mangled {text}");
+        }
+    }
+
+    #[test]
+    fn version_and_type_are_enforced() {
+        let no_version = parse_json(r#"{"type":"status","id":1}"#).unwrap();
+        assert!(WireRequest::from_json(&no_version).is_err());
+        let bad_version = parse_json(r#"{"v":2,"type":"status","id":1}"#).unwrap();
+        assert!(WireRequest::from_json(&bad_version).is_err());
+        let bad_type = parse_json(r#"{"v":1,"type":"nope","id":1}"#).unwrap();
+        assert!(WireRequest::from_json(&bad_type).is_err());
+    }
+
+    #[test]
+    fn response_builders_carry_distinct_statuses() {
+        let ok = ok_response(4, vec![("x", JsonValue::Num(1.0))]);
+        let shed = shed_response(4, "high-water mark reached");
+        let err = error_response(4, "boom");
+        assert_eq!(response_status(&ok), "ok");
+        assert_eq!(response_status(&shed), "shed");
+        assert_eq!(response_status(&err), "error");
+        for v in [&ok, &shed, &err] {
+            assert_eq!(request_id(v), 4);
+        }
+        // The shed refusal is not an error and carries its reason.
+        assert!(shed.get("error").is_err());
+        assert!(shed.get("reason").unwrap().as_str().unwrap().contains("high-water"));
+    }
+
+    #[test]
+    fn logits_bits_survive_json_exactly() {
+        // The conformance contract: f32 bit patterns as JSON numbers.
+        let vals = [0.1f32, -0.0, f32::MIN_POSITIVE, 123.456e-30];
+        let arr = JsonValue::Arr(vals.iter().map(|v| num(v.to_bits() as u64)).collect());
+        let text = arr.to_string();
+        let back = parse_json(&text).unwrap();
+        for (i, v) in back.as_arr().unwrap().iter().enumerate() {
+            let bits = v.as_f64().unwrap() as u32;
+            assert_eq!(f32::from_bits(bits).to_bits(), vals[i].to_bits());
+        }
+    }
+}

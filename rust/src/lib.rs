@@ -28,7 +28,8 @@
 //! | [`spmm`]      | CPU SpMM kernels (cuSPARSE / GE-SpMM analogs, ELL)    |
 //! | [`exec`]      | kernel dispatch, persistent pool, plan cache, async prefetch, sharded plans |
 //! | [`runtime`]   | PJRT engine: artifact registry, executables, literals |
-//! | [`coordinator`]| request router, dynamic batcher, worker pool, metrics|
+//! | [`coordinator`]| request router, dynamic batcher, worker pool, metrics, TCP wire front-end |
+//! | [`loadgen`]   | closed/open-loop load generation against a wire server (BENCH_serving.json) |
 //! | [`eval`]      | accuracy conformance: exact oracle, budget table, grid harness |
 //! | [`experiments`]| one runner per paper figure/table                    |
 //! | [`bench`]     | micro-bench harness (no criterion offline)            |
@@ -41,6 +42,7 @@ pub mod exec;
 pub mod experiments;
 pub mod gen;
 pub mod graph;
+pub mod loadgen;
 pub mod quant;
 pub mod rng;
 pub mod runtime;

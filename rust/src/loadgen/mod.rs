@@ -1,0 +1,582 @@
+//! Closed/open-loop load generation against a live wire server
+//! (`repro loadgen --addr HOST:PORT`).
+//!
+//! Worker threads (one TCP connection each) offer `infer` traffic with
+//! power-law route popularity, optionally alongside a concurrent
+//! `mutate` stream, through a warmup-then-measure window. Quantiles
+//! are computed client-side from the exact per-request samples (not
+//! the server's bucketed histograms), so BENCH_serving.json gates on
+//! what a client actually observed; shed responses are counted
+//! separately and never pollute the latency distribution.
+//!
+//! The report lands in the same schema family `tools/bench_diff.rs`
+//! diffs: per-workload `cases` carrying `median_ns` (latency, lower is
+//! better) or `value` + `"direction": "higher"` (throughput), so the
+//! CI serving job can gate regressions in either direction
+//! (docs/serving.md).
+
+mod scenario;
+
+pub use scenario::{Arrival, Popularity, Scenario};
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::wire::{self, WireRequest};
+use crate::coordinator::RouteKey;
+use crate::quant::Precision;
+use crate::rng::Pcg32;
+use crate::sampling::Strategy;
+use crate::util::{percentile, JsonValue};
+
+/// One request's outcome, as the client saw it.
+#[derive(Clone, Copy, Debug)]
+struct Sample {
+    route: usize,
+    /// 0 = ok, 1 = shed, 2 = error.
+    status: u8,
+    latency: Duration,
+    /// Whether the request was *scheduled* inside the measure window.
+    measured: bool,
+}
+
+/// Per-route (or aggregate) results over the measured window.
+#[derive(Clone, Debug)]
+pub struct RouteReport {
+    pub name: String,
+    pub completed: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub throughput_rps: f64,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub p999: Duration,
+    pub mean: Duration,
+}
+
+/// The whole run's results, ready for printing and BENCH_serving.json.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub scenario: String,
+    pub connections: usize,
+    pub warmup: Duration,
+    pub duration: Duration,
+    pub arrival: String,
+    pub alpha: f64,
+    pub mutations: u64,
+    pub aggregate: RouteReport,
+    pub routes: Vec<RouteReport>,
+}
+
+fn digest(name: &str, samples: &[(Duration, u8)], window: Duration) -> RouteReport {
+    let ok: Vec<Duration> =
+        samples.iter().filter(|(_, s)| *s == 0).map(|(d, _)| *d).collect();
+    let completed = ok.len() as u64;
+    let mean = if ok.is_empty() {
+        Duration::ZERO
+    } else {
+        ok.iter().sum::<Duration>() / ok.len() as u32
+    };
+    RouteReport {
+        name: name.to_string(),
+        completed,
+        shed: samples.iter().filter(|(_, s)| *s == 1).count() as u64,
+        errors: samples.iter().filter(|(_, s)| *s == 2).count() as u64,
+        throughput_rps: completed as f64 / window.as_secs_f64().max(1e-9),
+        p50: percentile(&ok, 50.0),
+        p99: percentile(&ok, 99.0),
+        p999: percentile(&ok, 99.9),
+        mean,
+    }
+}
+
+impl LoadReport {
+    /// The BENCH_serving.json document (schema: docs/serving.md).
+    pub fn to_json(&self) -> JsonValue {
+        fn case_ns(name: &str, d: Duration) -> JsonValue {
+            JsonValue::Obj(
+                [
+                    ("name".to_string(), JsonValue::Str(name.to_string())),
+                    ("median_ns".to_string(), JsonValue::Num(d.as_nanos() as f64)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        }
+        fn workload(r: &RouteReport, with_throughput_case: bool) -> JsonValue {
+            let mut cases = vec![
+                case_ns("latency p50", r.p50),
+                case_ns("latency p99", r.p99),
+                case_ns("latency p999", r.p999),
+            ];
+            if with_throughput_case {
+                cases.push(JsonValue::Obj(
+                    [
+                        ("name".to_string(), JsonValue::Str("throughput".to_string())),
+                        ("value".to_string(), JsonValue::Num(r.throughput_rps)),
+                        ("direction".to_string(), JsonValue::Str("higher".to_string())),
+                        ("unit".to_string(), JsonValue::Str("req/s".to_string())),
+                    ]
+                    .into_iter()
+                    .collect(),
+                ));
+            }
+            let map: BTreeMap<String, JsonValue> = [
+                ("name".to_string(), JsonValue::Str(r.name.clone())),
+                ("completed".to_string(), JsonValue::Num(r.completed as f64)),
+                ("shed".to_string(), JsonValue::Num(r.shed as f64)),
+                ("errors".to_string(), JsonValue::Num(r.errors as f64)),
+                ("throughput_rps".to_string(), JsonValue::Num(r.throughput_rps)),
+                ("cases".to_string(), JsonValue::Arr(cases)),
+            ]
+            .into_iter()
+            .collect();
+            JsonValue::Obj(map)
+        }
+        let mut workloads = vec![workload(&self.aggregate, true)];
+        workloads.extend(self.routes.iter().map(|r| workload(r, false)));
+        JsonValue::Obj(
+            [
+                ("bench".to_string(), JsonValue::Str("serving".to_string())),
+                ("schema_version".to_string(), JsonValue::Num(1.0)),
+                ("scenario".to_string(), JsonValue::Str(self.scenario.clone())),
+                ("connections".to_string(), JsonValue::Num(self.connections as f64)),
+                ("warmup_s".to_string(), JsonValue::Num(self.warmup.as_secs_f64())),
+                ("duration_s".to_string(), JsonValue::Num(self.duration.as_secs_f64())),
+                ("arrival".to_string(), JsonValue::Str(self.arrival.clone())),
+                ("alpha".to_string(), JsonValue::Num(self.alpha)),
+                ("mutations".to_string(), JsonValue::Num(self.mutations as f64)),
+                ("workloads".to_string(), JsonValue::Arr(workloads)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    /// Human summary.
+    pub fn print(&self) {
+        use crate::util::fmt_duration as fd;
+        println!(
+            "serving load: scenario {} | {} arrival | {} conns | {:.1}s measured \
+             ({:.1}s warmup)",
+            self.scenario,
+            self.arrival,
+            self.connections,
+            self.duration.as_secs_f64(),
+            self.warmup.as_secs_f64(),
+        );
+        let a = &self.aggregate;
+        println!(
+            "aggregate: {} ok ({:.1} req/s) | {} shed | {} errors | p50 {} p99 {} p999 {}",
+            a.completed,
+            a.throughput_rps,
+            a.shed,
+            a.errors,
+            fd(a.p50),
+            fd(a.p99),
+            fd(a.p999),
+        );
+        for r in &self.routes {
+            println!(
+                "  {}: {} ok ({:.1} req/s) | {} shed | p50 {} p99 {} p999 {}",
+                r.name,
+                r.completed,
+                r.throughput_rps,
+                r.shed,
+                fd(r.p50),
+                fd(r.p99),
+                fd(r.p999),
+            );
+        }
+        if self.mutations > 0 {
+            println!("mutations applied: {}", self.mutations);
+        }
+    }
+}
+
+/// Ask the server which datasets it serves (name → node count).
+fn fetch_datasets(stream: &mut TcpStream) -> Result<Vec<(String, usize)>> {
+    let resp = wire::roundtrip(stream, &WireRequest::Status { id: 0 })?;
+    if wire::response_status(&resp) != "ok" {
+        bail!("status request failed: {}", resp.to_string());
+    }
+    let mut out = Vec::new();
+    for ds in resp.get("datasets")?.as_arr()? {
+        out.push((ds.get("name")?.as_str()?.to_string(), ds.get("nodes")?.as_usize()?));
+    }
+    if out.is_empty() {
+        bail!("server reports no datasets");
+    }
+    Ok(out)
+}
+
+/// The default route grid over the server's datasets: model `gcn`,
+/// exact + w8, strategies aes/sfs (sampled routes only — strategy is
+/// moot for exact), precisions u8-device/f32.
+fn default_routes(datasets: &[(String, usize)]) -> Vec<RouteKey> {
+    let mut routes = Vec::new();
+    for (ds, _) in datasets {
+        for precision in [Precision::U8Device, Precision::F32] {
+            routes.push(RouteKey {
+                model: "gcn".into(),
+                dataset: ds.clone(),
+                width: None,
+                strategy: Strategy::Aes,
+                precision,
+            });
+            for strategy in [Strategy::Aes, Strategy::Sfs] {
+                routes.push(RouteKey {
+                    model: "gcn".into(),
+                    dataset: ds.clone(),
+                    width: Some(8),
+                    strategy,
+                    precision,
+                });
+            }
+        }
+    }
+    routes
+}
+
+/// Sleep until `deadline` in small chunks, bailing early on `stop`.
+fn sleep_until(deadline: Instant, stop: &AtomicBool) {
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        std::thread::sleep((deadline - now).min(Duration::from_millis(20)));
+    }
+}
+
+struct WorkerArgs {
+    addr: String,
+    routes: Vec<RouteKey>,
+    node_counts: Vec<usize>,
+    popularity: Popularity,
+    arrival: Arrival,
+    connections: usize,
+    nodes_per_request: usize,
+    seed: u64,
+    t0: Instant,
+    window_start: Duration,
+    window_end: Duration,
+}
+
+fn worker(args: Arc<WorkerArgs>, index: usize, stop: Arc<AtomicBool>) -> Vec<Sample> {
+    let mut samples = Vec::new();
+    let Ok(mut stream) = TcpStream::connect(args.addr.as_str()) else {
+        return samples;
+    };
+    let _ = stream.set_nodelay(true);
+    let mut rng = Pcg32::new(args.seed.wrapping_add(0x9E37_79B9 * (index as u64 + 1)));
+    let per_conn_rate = match args.arrival {
+        Arrival::Open { rate_rps } => rate_rps / args.connections as f64,
+        Arrival::Closed => 0.0,
+    };
+    let mut next = args.t0;
+    let mut id = 0u64;
+    while !stop.load(Ordering::Acquire) {
+        // Open arrival: stick to the schedule; latency includes any
+        // send delay when the server falls behind.
+        let scheduled = match args.arrival {
+            Arrival::Open { .. } => {
+                sleep_until(next, &stop);
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                let sched = next;
+                let draw = (1.0 - rng.f64()).max(1e-12);
+                next += Duration::from_secs_f64(-draw.ln() / per_conn_rate.max(1e-9));
+                sched
+            }
+            Arrival::Closed => Instant::now(),
+        };
+        let route_idx = args.popularity.sample(rng.f64());
+        let n = args.node_counts[route_idx];
+        let nodes =
+            (0..args.nodes_per_request).map(|_| rng.usize_below(n)).collect::<Vec<_>>();
+        id += 1;
+        let req =
+            WireRequest::Infer { id, route: args.routes[route_idx].clone(), nodes };
+        let sent = scheduled.max(args.t0);
+        let resp = match wire::roundtrip(&mut stream, &req) {
+            Ok(r) => r,
+            // Connection torn down (server shutdown/reset): stop this
+            // worker; nothing to record for the aborted request.
+            Err(_) => break,
+        };
+        let latency = sent.elapsed();
+        let offset = sent - args.t0;
+        let measured = offset >= args.window_start && offset < args.window_end;
+        let status = match wire::response_status(&resp) {
+            "ok" => 0,
+            "shed" => 1,
+            _ => 2,
+        };
+        samples.push(Sample { route: route_idx, status, latency, measured });
+        if status == 1 {
+            // Back off briefly after a shed: hammering an overloaded
+            // server just burns both sides' CPU.
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    samples
+}
+
+/// Concurrent mutate stream: alternately insert and delete one edge of
+/// the target dataset every `period`, counting applied deltas.
+fn mutate_stream(
+    addr: String,
+    dataset: String,
+    nodes: usize,
+    period: Duration,
+    stop: Arc<AtomicBool>,
+    applied: Arc<AtomicU64>,
+) {
+    let Ok(mut stream) = TcpStream::connect(addr.as_str()) else {
+        return;
+    };
+    let mut insert = true;
+    let mut id = 0u64;
+    while !stop.load(Ordering::Acquire) {
+        sleep_until(Instant::now() + period, &stop);
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let op = if insert {
+            format!("+ 0 {} 0.01", nodes - 1)
+        } else {
+            format!("- 0 {}", nodes - 1)
+        };
+        insert = !insert;
+        id += 1;
+        let req = WireRequest::Mutate { id, dataset: dataset.clone(), ops: vec![op] };
+        match wire::roundtrip(&mut stream, &req) {
+            Ok(resp) if wire::response_status(&resp) == "ok" => {
+                applied.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(_) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Run a scenario against a live server and aggregate the results.
+pub fn run_loadgen(addr: &str, scenario: &Scenario) -> Result<LoadReport> {
+    let mut control = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr} (is `repro serve --listen` up?)"))?;
+    let datasets = fetch_datasets(&mut control)?;
+    drop(control);
+
+    let routes = if scenario.routes.is_empty() {
+        default_routes(&datasets)
+    } else {
+        scenario.routes.clone()
+    };
+    let node_counts = routes
+        .iter()
+        .map(|r| {
+            datasets
+                .iter()
+                .find(|(name, _)| *name == r.dataset)
+                .map(|(_, n)| *n)
+                .with_context(|| {
+                    format!("route {} targets a dataset the server does not serve", r.label())
+                })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let args = Arc::new(WorkerArgs {
+        addr: addr.to_string(),
+        routes: routes.clone(),
+        node_counts,
+        popularity: Popularity::new(routes.len(), scenario.alpha),
+        arrival: scenario.arrival,
+        connections: scenario.connections,
+        nodes_per_request: scenario.nodes_per_request,
+        seed: scenario.seed,
+        t0,
+        window_start: scenario.warmup,
+        window_end: scenario.warmup + scenario.duration,
+    });
+
+    let workers: Vec<_> = (0..scenario.connections)
+        .map(|i| {
+            let args = args.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name(format!("loadgen-{i}"))
+                .spawn(move || worker(args, i, stop))
+                .context("spawning loadgen worker")
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let mutations = Arc::new(AtomicU64::new(0));
+    let mutator = scenario
+        .mutate_period
+        .map(|period| -> Result<_> {
+            let dataset = scenario
+                .mutate_dataset
+                .clone()
+                .unwrap_or_else(|| datasets[0].0.clone());
+            let nodes = datasets
+                .iter()
+                .find(|(name, _)| *name == dataset)
+                .map(|(_, n)| *n)
+                .with_context(|| format!("mutate dataset {dataset} not served"))?;
+            let (addr, stop, applied) =
+                (addr.to_string(), stop.clone(), mutations.clone());
+            std::thread::Builder::new()
+                .name("loadgen-mutate".into())
+                .spawn(move || mutate_stream(addr, dataset, nodes, period, stop, applied))
+                .context("spawning mutate stream")
+        })
+        .transpose()?;
+
+    sleep_until(t0 + scenario.warmup + scenario.duration, &AtomicBool::new(false));
+    stop.store(true, Ordering::Release);
+    let mut samples: Vec<Sample> = Vec::new();
+    for w in workers {
+        samples.extend(w.join().unwrap_or_default());
+    }
+    if let Some(m) = mutator {
+        let _ = m.join();
+    }
+
+    let measured: Vec<&Sample> = samples.iter().filter(|s| s.measured).collect();
+    let all: Vec<(Duration, u8)> = measured.iter().map(|s| (s.latency, s.status)).collect();
+    let aggregate = digest("aggregate", &all, scenario.duration);
+    let route_reports = routes
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let own: Vec<(Duration, u8)> = measured
+                .iter()
+                .filter(|s| s.route == i)
+                .map(|s| (s.latency, s.status))
+                .collect();
+            digest(&format!("route {}", r.label()), &own, scenario.duration)
+        })
+        .collect();
+
+    if aggregate.completed == 0 && aggregate.shed == 0 {
+        bail!(
+            "no requests completed inside the measure window — the warmup ({:?}) \
+             may be shorter than the first plan build",
+            scenario.warmup
+        );
+    }
+
+    Ok(LoadReport {
+        scenario: scenario.name.clone(),
+        connections: scenario.connections,
+        warmup: scenario.warmup,
+        duration: scenario.duration,
+        arrival: match scenario.arrival {
+            Arrival::Closed => "closed".to_string(),
+            Arrival::Open { rate_rps } => format!("open@{rate_rps}rps"),
+        },
+        alpha: scenario.alpha,
+        mutations: mutations.load(Ordering::Relaxed),
+        aggregate,
+        routes: route_reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> LoadReport {
+        let mk = |name: &str, completed: u64| RouteReport {
+            name: name.into(),
+            completed,
+            shed: 2,
+            errors: 0,
+            throughput_rps: completed as f64 / 2.0,
+            p50: Duration::from_micros(900),
+            p99: Duration::from_millis(4),
+            p999: Duration::from_millis(9),
+            mean: Duration::from_millis(1),
+        };
+        LoadReport {
+            scenario: "default".into(),
+            connections: 4,
+            warmup: Duration::from_millis(300),
+            duration: Duration::from_secs(2),
+            arrival: "closed".into(),
+            alpha: 1.1,
+            mutations: 3,
+            aggregate: mk("aggregate", 100),
+            routes: vec![mk("route gcn/evalpow/w8/aes/u8-device", 60)],
+        }
+    }
+
+    #[test]
+    fn report_json_carries_the_gate_schema() {
+        let doc = sample_report().to_json();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "serving");
+        let workloads = doc.get("workloads").unwrap().as_arr().unwrap();
+        assert_eq!(workloads.len(), 2);
+        let agg = &workloads[0];
+        assert_eq!(agg.get("name").unwrap().as_str().unwrap(), "aggregate");
+        assert_eq!(agg.get("shed").unwrap().as_usize().unwrap(), 2);
+        let cases = agg.get("cases").unwrap().as_arr().unwrap();
+        // p50/p99/p999 latency cases + the direction-tagged throughput.
+        assert_eq!(cases.len(), 4);
+        assert_eq!(cases[0].get("median_ns").unwrap().as_f64().unwrap(), 900_000.0);
+        let tp = &cases[3];
+        assert_eq!(tp.get("direction").unwrap().as_str().unwrap(), "higher");
+        assert_eq!(tp.get("value").unwrap().as_f64().unwrap(), 50.0);
+        // Per-route workloads carry latency cases only (their share of
+        // traffic follows popularity, so throughput would be noise).
+        let route_cases = workloads[1].get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(route_cases.len(), 3);
+        // Round-trips through the JSON codec.
+        let text = doc.to_string();
+        assert!(crate::util::parse_json(&text).is_ok());
+    }
+
+    #[test]
+    fn digest_separates_statuses_and_is_zero_safe() {
+        let samples = vec![
+            (Duration::from_millis(1), 0u8),
+            (Duration::from_millis(3), 0u8),
+            (Duration::from_millis(2), 1u8),
+            (Duration::from_millis(9), 2u8),
+        ];
+        let r = digest("x", &samples, Duration::from_secs(1));
+        assert_eq!((r.completed, r.shed, r.errors), (2, 1, 1));
+        // Quantiles come from ok samples only.
+        assert!(r.p999 <= Duration::from_millis(3));
+        assert!((r.throughput_rps - 2.0).abs() < 1e-9);
+        let empty = digest("y", &[], Duration::from_secs(1));
+        assert_eq!(empty.completed, 0);
+        assert_eq!(empty.p50, Duration::ZERO);
+    }
+
+    #[test]
+    fn default_grid_covers_both_precisions_and_skips_exact_duplicates() {
+        let routes = default_routes(&[("evalpow".into(), 160), ("evaluni".into(), 160)]);
+        assert_eq!(routes.len(), 12);
+        let labels: Vec<String> = routes.iter().map(|r| r.label()).collect();
+        assert!(labels.contains(&"gcn/evalpow/exact/aes/f32".to_string()));
+        assert!(labels.contains(&"gcn/evaluni/w8/sfs/u8-device".to_string()));
+        // No exact/sfs duplicate of exact/aes.
+        assert!(!labels.iter().any(|l| l.contains("exact/sfs")));
+        // All labels unique.
+        let unique: std::collections::BTreeSet<_> = labels.iter().collect();
+        assert_eq!(unique.len(), labels.len());
+    }
+}

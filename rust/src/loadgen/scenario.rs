@@ -1,0 +1,232 @@
+//! Load-generation scenarios: what traffic to offer a wire server.
+//!
+//! A scenario is a small JSON document (`repro loadgen --scenario
+//! FILE`); every field is optional and defaults to the built-in
+//! closed-loop scenario. docs/serving.md carries the schema.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::wire::route_from_json;
+use crate::coordinator::RouteKey;
+use crate::util::{parse_json, JsonValue};
+
+/// How workers offer load.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Each connection keeps exactly one request in flight: the next
+    /// send waits for the previous reply. Measures capacity.
+    Closed,
+    /// Requests are scheduled at `rate_rps` (split across connections,
+    /// exponential inter-arrivals) regardless of completions; latency
+    /// is measured from the *scheduled* send time, so queueing delay
+    /// under overload is visible (no coordinated omission).
+    Open {
+        /// Aggregate offered request rate across all connections.
+        rate_rps: f64,
+    },
+}
+
+/// One load-generation run's shape.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Scenario name, stamped into BENCH_serving.json.
+    pub name: String,
+    /// Concurrent client connections (closed-loop: also the number of
+    /// requests in flight).
+    pub connections: usize,
+    /// Traffic offered before measurement starts (cache/plan warm-up).
+    pub warmup: Duration,
+    /// The measured window.
+    pub duration: Duration,
+    pub arrival: Arrival,
+    /// Power-law (Zipf) exponent over route popularity ranks: route i
+    /// (0-based) gets weight 1/(i+1)^alpha. 0 = uniform.
+    pub alpha: f64,
+    /// Nodes classified per request.
+    pub nodes_per_request: usize,
+    /// Base RNG seed; worker i derives its own stream from it.
+    pub seed: u64,
+    /// Explicit routes. Empty = derive the default grid from the
+    /// server's `status` response (model `gcn`, widths {exact, 8},
+    /// strategies {aes, sfs}, precisions {u8-device, f32}).
+    pub routes: Vec<RouteKey>,
+    /// Optional concurrent mutate stream: period between deltas.
+    pub mutate_period: Option<Duration>,
+    /// Dataset the mutate stream targets (default: the server's first).
+    pub mutate_dataset: Option<String>,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: "default".into(),
+            connections: 8,
+            warmup: Duration::from_millis(1000),
+            duration: Duration::from_millis(4000),
+            arrival: Arrival::Closed,
+            alpha: 1.1,
+            nodes_per_request: 8,
+            seed: 0x5EED_CAFE,
+            routes: Vec::new(),
+            mutate_period: None,
+            mutate_dataset: None,
+        }
+    }
+}
+
+impl Scenario {
+    /// Shrink to the CI-friendly quick shape (~1.5s of traffic).
+    pub fn quick(&mut self) {
+        self.connections = self.connections.min(4);
+        self.warmup = Duration::from_millis(300);
+        self.duration = Duration::from_millis(1200);
+    }
+
+    /// Parse a scenario document; absent fields keep their defaults.
+    pub fn from_json(text: &str) -> Result<Scenario> {
+        let doc = parse_json(text).context("scenario file is not JSON")?;
+        let mut s = Scenario::default();
+        if let Ok(v) = doc.get("name") {
+            s.name = v.as_str()?.to_string();
+        }
+        if let Ok(v) = doc.get("connections") {
+            s.connections = v.as_usize().context("connections must be an integer")?;
+        }
+        if let Ok(v) = doc.get("warmup_ms") {
+            s.warmup = Duration::from_millis(v.as_f64()? as u64);
+        }
+        if let Ok(v) = doc.get("duration_ms") {
+            s.duration = Duration::from_millis(v.as_f64()? as u64);
+        }
+        if let Ok(v) = doc.get("arrival") {
+            s.arrival = match v.as_str()? {
+                "closed" => Arrival::Closed,
+                "open" => Arrival::Open {
+                    rate_rps: doc
+                        .get("rate_rps")
+                        .context("open arrival needs rate_rps")?
+                        .as_f64()?,
+                },
+                other => anyhow::bail!("arrival must be closed|open, got {other:?}"),
+            };
+        }
+        if let Ok(v) = doc.get("alpha") {
+            s.alpha = v.as_f64()?;
+        }
+        if let Ok(v) = doc.get("nodes_per_request") {
+            s.nodes_per_request =
+                v.as_usize().context("nodes_per_request must be an integer")?.max(1);
+        }
+        if let Ok(v) = doc.get("seed") {
+            s.seed = v.as_f64()? as u64;
+        }
+        if let Ok(v) = doc.get("routes") {
+            s.routes = v
+                .as_arr()?
+                .iter()
+                .map(route_from_json)
+                .collect::<Result<Vec<_>>>()
+                .context("routes: each entry needs model/dataset/width/strategy/precision")?;
+        }
+        if let Ok(v) = doc.get("mutate_period_ms") {
+            s.mutate_period = Some(Duration::from_millis(v.as_f64()? as u64));
+        }
+        if let Ok(v) = doc.get("mutate_dataset") {
+            s.mutate_dataset = Some(v.as_str()?.to_string());
+        }
+        if s.connections == 0 {
+            anyhow::bail!("connections must be at least 1");
+        }
+        Ok(s)
+    }
+}
+
+/// Power-law route popularity: rank i gets weight 1/(i+1)^alpha,
+/// sampled by inverse-CDF lookup on a uniform draw.
+#[derive(Clone, Debug)]
+pub struct Popularity {
+    cdf: Vec<f64>,
+}
+
+impl Popularity {
+    pub fn new(k: usize, alpha: f64) -> Popularity {
+        assert!(k > 0, "popularity over zero routes");
+        let weights: Vec<f64> = (0..k).map(|i| 1.0 / ((i + 1) as f64).powf(alpha)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Popularity { cdf }
+    }
+
+    /// Map a uniform draw in [0, 1) to a route rank.
+    pub fn sample(&self, u: f64) -> usize {
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_quick() {
+        let mut s = Scenario::default();
+        assert_eq!(s.arrival, Arrival::Closed);
+        assert!(s.routes.is_empty());
+        s.quick();
+        assert!(s.duration <= Duration::from_millis(1200));
+        assert!(s.connections <= 4);
+    }
+
+    #[test]
+    fn parses_a_full_scenario() {
+        let s = Scenario::from_json(
+            r#"{"name":"spike","connections":16,"warmup_ms":100,"duration_ms":500,
+                "arrival":"open","rate_rps":200.5,"alpha":0.0,"nodes_per_request":4,
+                "seed":42,"mutate_period_ms":50,"mutate_dataset":"evalpow",
+                "routes":[{"model":"gcn","dataset":"evalpow","width":8,
+                           "strategy":"aes","precision":"f32"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.name, "spike");
+        assert_eq!(s.connections, 16);
+        assert_eq!(s.arrival, Arrival::Open { rate_rps: 200.5 });
+        assert_eq!(s.routes.len(), 1);
+        assert_eq!(s.routes[0].label(), "gcn/evalpow/w8/aes/f32");
+        assert_eq!(s.mutate_period, Some(Duration::from_millis(50)));
+        assert_eq!(s.mutate_dataset.as_deref(), Some("evalpow"));
+    }
+
+    #[test]
+    fn rejects_bad_scenarios() {
+        assert!(Scenario::from_json("not json").is_err());
+        assert!(Scenario::from_json(r#"{"arrival":"open"}"#).is_err());
+        assert!(Scenario::from_json(r#"{"connections":0}"#).is_err());
+        assert!(Scenario::from_json(r#"{"arrival":"sideways"}"#).is_err());
+    }
+
+    #[test]
+    fn popularity_is_a_cdf_and_skews_hot() {
+        let p = Popularity::new(8, 1.1);
+        assert!((p.cdf.last().unwrap() - 1.0).abs() < 1e-9);
+        for w in p.cdf.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        // Rank 0 takes the largest share; u=0 maps to it.
+        assert_eq!(p.sample(0.0), 0);
+        assert!(p.cdf[0] > 1.0 / 8.0);
+        // The top of the range maps to the last rank, never out of bounds.
+        assert_eq!(p.sample(0.999_999_999), 7);
+        // Uniform when alpha = 0.
+        let u = Popularity::new(4, 0.0);
+        assert!((u.cdf[0] - 0.25).abs() < 1e-9);
+    }
+}

@@ -7,6 +7,8 @@
 //! repro infer     --model M --dataset D [--width W]
 //!                 [--strategy afs|sfs|aes] [--fp32]         one forward pass + accuracy
 //! repro serve     [--requests N] [--workers K]              run the coordinator demo load
+//! repro serve     --listen ADDR [--eval-data DIR]           TCP wire front-end (docs/serving.md)
+//! repro loadgen   --addr HOST:PORT [--scenario FILE]        closed-loop load harness
 //! repro mutate    --dataset D --edges FILE                  apply a live edge delta, re-serve
 //! repro experiment <fig2|fig3|fig5|fig6|fig7|tab1|tab3|all> [--quick]
 //! repro eval      [--json [PATH]] [--dir DIR] [--quick]     accuracy conformance grid
@@ -100,6 +102,10 @@ USAGE:
   repro infer      --model gcn|sage --dataset NAME [--width W] [--strategy afs|sfs|aes] [--fp32] [--artifacts DIR]
   repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--prefetch P]
                    [--host] [--shards N] [--shard-budget MIB] [--artifacts DIR]
+  repro serve      --listen ADDR [--eval-data DIR] [--port-file PATH] [--high-water H]
+                   [--max-seconds S] [--workers K] [--queue Q] [--batch B] [--prefetch P]
+                   [--host] [--shards N] [--shard-budget MIB] [--artifacts DIR]
+  repro loadgen    --addr HOST:PORT [--scenario FILE] [--quick] [--json [PATH]]
   repro mutate     --dataset NAME --edges FILE [--width W] [--strategy afs|sfs|aes]
                    [--shards N] [--shard-budget MIB] [--artifacts DIR]
   repro experiment fig2|fig3|fig5|fig6|fig7|tab1|tab3|all [--quick] [--artifacts DIR]
@@ -129,6 +135,17 @@ AES_SPMM_COST_MODEL env var): per-shard dispatch then follows the
 measured table, falling back to the built-in heuristics for unmeasured
 profiles — and entirely, with a warning, when the file is missing,
 corrupt, or schema-stale (docs/dispatch.md).
+`serve --listen` speaks the length-prefixed TCP wire protocol
+(docs/serving.md): infer/logits/mutate plus the status/metrics/routes
+ops surface, with load shedding past --high-water in-flight requests.
+--eval-data DIR serves the seeded conformance datasets on the host
+backend (no artifacts needed — what CI does); --port-file writes the
+bound address (bind :0 for an ephemeral port); --max-seconds self-exits
+(0 = run forever). `loadgen` offers power-law route traffic from
+--scenario FILE (or the built-in default; --quick shrinks it), prints
+per-route p50/p99/p999 + throughput + shed counts, and with --json
+writes BENCH_serving.json (default path) for the tools/bench_diff.rs
+serving gate.
 `mutate` applies a live edge delta (insert/delete/reweight lines, see
 docs/mutation.md for the file format) through the serving coordinator:
 the graph advances one epoch, only the shard units of touched shards
@@ -149,6 +166,7 @@ fn run() -> Result<()> {
         "inspect" => cmd_inspect(&artifacts),
         "infer" => cmd_infer(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
+        "loadgen" => cmd_loadgen(&args),
         "mutate" => cmd_mutate(&artifacts, &args),
         "experiment" => cmd_experiment(&artifacts, &args),
         "eval" => cmd_eval(&args),
@@ -297,6 +315,9 @@ fn cmd_infer(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
+    if args.has("listen") {
+        return cmd_serve_listen(artifacts, args);
+    }
     maybe_install_cost_model(args);
     let n_requests = args.usize_or("requests", 200)?;
     let workers = args.usize_or("workers", 2)?;
@@ -429,6 +450,129 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         println!("  {route}: {count}");
     }
     coord.shutdown();
+    Ok(())
+}
+
+/// `repro serve --listen ADDR` — the TCP wire front-end: the
+/// coordinator behind connection threads speaking the length-prefixed
+/// protocol, with admission control and the ops request surface
+/// (docs/serving.md). `--eval-data DIR` generates the seeded
+/// conformance datasets and serves them on the host backend, so CI and
+/// loadgen need no AOT artifacts.
+fn cmd_serve_listen(artifacts: &str, args: &Args) -> Result<()> {
+    use aes_spmm::coordinator::{NetConfig, WireServer};
+    use aes_spmm::runtime::Backend;
+
+    maybe_install_cost_model(args);
+    let listen = args.get("listen").context("--listen needs HOST:PORT")?.to_string();
+    if listen == "true" {
+        bail!("--listen needs HOST:PORT (e.g. 127.0.0.1:0 for an ephemeral port)");
+    }
+    let sharding = if args.has("shards") || args.has("shard-budget") {
+        Some(aes_spmm::graph::ShardSpec {
+            shards: args
+                .get("shards")
+                .map(|s| s.parse().context("--shards must be an integer"))
+                .transpose()?,
+            budget_bytes: args.usize_or("shard-budget", 32)? << 20,
+        })
+    } else {
+        None
+    };
+    let cfg = CoordinatorConfig {
+        workers: args.usize_or("workers", 2)?,
+        queue_depth: args.usize_or("queue", 1024)?,
+        batcher: aes_spmm::coordinator::BatcherConfig {
+            max_batch: args.usize_or("batch", 32)?,
+            max_delay: std::time::Duration::from_millis(2),
+        },
+        prefetch_workers: args.usize_or("prefetch", 1)?,
+        sharding,
+        ..CoordinatorConfig::default()
+    };
+
+    let (store, backend) = if let Some(dir) = args.get("eval-data") {
+        // Self-contained serving over the seeded conformance datasets —
+        // the host substrate implements the gcn forward only.
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let names = aes_spmm::eval::write_eval_datasets(&dir)?;
+        let store = ModelStore::load(&dir, &names, &["gcn".to_string()])?;
+        println!("eval data: {} dataset(s) under {}", names.len(), dir.display());
+        (Arc::new(store), Backend::Host)
+    } else if args.has("host") {
+        let engine = Engine::new(artifacts)?;
+        let datasets = engine.manifest().dataset_names();
+        let store = ModelStore::load(artifacts, &datasets, &["gcn".to_string()])?;
+        (Arc::new(store), Backend::Host)
+    } else {
+        let engine = Arc::new(Engine::new(artifacts)?);
+        let datasets = engine.manifest().dataset_names();
+        let models = vec!["gcn".to_string(), "sage".to_string()];
+        let store = ModelStore::load(artifacts, &datasets, &models)?;
+        (Arc::new(store), Backend::Pjrt(engine))
+    };
+
+    let coord = Arc::new(Coordinator::start_with(backend, store.clone(), cfg));
+    let net = NetConfig {
+        high_water: args.usize_or("high-water", 256)?,
+        ..NetConfig::default()
+    };
+    let server = WireServer::bind(coord, store, &listen, net)?;
+    let addr = server.local_addr();
+    println!("listening on {addr}");
+    if let Some(path) = args.get("port-file") {
+        // Written after the bind succeeds: pollers (ci.sh) read the
+        // resolved ephemeral port from here.
+        std::fs::write(path, addr.to_string())
+            .with_context(|| format!("writing --port-file {path}"))?;
+    }
+    let max_seconds = args.usize_or("max-seconds", 0)?;
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if max_seconds > 0 && t0.elapsed().as_secs() >= max_seconds as u64 {
+            println!("--max-seconds {max_seconds} reached; shutting down");
+            break;
+        }
+    }
+    server.shutdown();
+    Ok(())
+}
+
+/// `repro loadgen` — offer scenario traffic to a live wire server and
+/// report client-observed quantiles (docs/serving.md).
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use aes_spmm::loadgen::{run_loadgen, Scenario};
+
+    let addr = args.get("addr").context("--addr HOST:PORT required")?;
+    let mut scenario = match args.get("scenario") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading scenario {path}"))?;
+            Scenario::from_json(&text).with_context(|| format!("parsing scenario {path}"))?
+        }
+        None => Scenario::default(),
+    };
+    if args.has("quick") {
+        scenario.quick();
+    }
+    if let Some(c) = args.get("connections") {
+        scenario.connections = c.parse().context("--connections must be an integer")?;
+    }
+    let report = run_loadgen(addr, &scenario)?;
+    report.print();
+    if args.has("json") {
+        // Bare `--json` lands as the value "true": use the default path.
+        let path = match args.get("json") {
+            Some("true") | None => "BENCH_serving.json".to_string(),
+            Some(p) => p.to_string(),
+        };
+        std::fs::write(&path, report.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

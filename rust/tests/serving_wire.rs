@@ -1,0 +1,396 @@
+//! Wire-level serving conformance — the ISSUE 8 acceptance suite.
+//! Boots a real [`WireServer`] on a loopback ephemeral port over the
+//! seeded eval datasets ([`Backend::Host`], no artifacts, no PJRT) and
+//! drives it through real TCP connections.
+//!
+//! Covers:
+//! * the correctness anchor: TCP-served logits bitwise-identical to
+//!   `route_logits` on a cold in-process coordinator, across the eval
+//!   grid (dataset × {exact, sampled} × strategy × precision);
+//! * `infer` over the wire agreeing with the argmax of the served
+//!   logits, plus per-route latency histograms surfacing in the ops
+//!   requests;
+//! * admission control: requests past the high-water mark get an
+//!   explicit `"shed"` response (never a silent drop or an error),
+//!   the shed count lands in metrics, and already-admitted work still
+//!   completes;
+//! * `mutate` over the wire advancing the epoch with serving following
+//!   bitwise;
+//! * protocol robustness: malformed frames answered with `"error"`
+//!   responses on a surviving connection, oversize frames dropping
+//!   only that connection.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use aes_spmm::coordinator::wire::{self, WireRequest};
+use aes_spmm::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, NetConfig, RouteKey, WireServer,
+};
+use aes_spmm::eval::write_eval_datasets;
+use aes_spmm::quant::Precision;
+use aes_spmm::runtime::Backend;
+use aes_spmm::sampling::Strategy;
+use aes_spmm::util::{argmax_f32, JsonValue};
+
+struct Served {
+    server: WireServer,
+    dir: PathBuf,
+    names: Vec<String>,
+}
+
+/// Write the eval datasets into a fresh temp dir and boot a host-backend
+/// coordinator behind a wire server on an ephemeral loopback port.
+fn boot(tag: &str, net: NetConfig, batcher: BatcherConfig) -> Served {
+    let dir = std::env::temp_dir().join(format!("serving_wire_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let names = write_eval_datasets(&dir).unwrap();
+    let store = Arc::new(ModelStore::load(&dir, &names, &["gcn".to_string()]).unwrap());
+    let coord = Arc::new(Coordinator::start_with(
+        Backend::Host,
+        store.clone(),
+        CoordinatorConfig { workers: 2, batcher, ..CoordinatorConfig::default() },
+    ));
+    let server = WireServer::bind(coord, store, "127.0.0.1:0", net).unwrap();
+    Served { server, dir, names }
+}
+
+fn connect(s: &Served) -> TcpStream {
+    let stream = TcpStream::connect(s.server.local_addr()).unwrap();
+    // Bugs must time out loudly, not hang the suite.
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    stream
+}
+
+fn ask(conn: &mut TcpStream, req: &WireRequest) -> JsonValue {
+    wire::roundtrip(conn, req).unwrap()
+}
+
+fn route(name: &str, width: Option<usize>, strategy: Strategy, precision: Precision) -> RouteKey {
+    RouteKey {
+        model: "gcn".to_string(),
+        dataset: name.to_string(),
+        width,
+        strategy,
+        precision,
+    }
+}
+
+/// Decode a `logits` response's `logits_bits` array.
+fn wire_bits(resp: &JsonValue) -> Vec<u32> {
+    resp.get("logits_bits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect()
+}
+
+fn in_process_bits(coord: &Coordinator, key: &RouteKey) -> Vec<u32> {
+    coord
+        .route_logits(key)
+        .unwrap()
+        .as_f32()
+        .unwrap()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+/// The acceptance criterion: every eval-grid route served over TCP is
+/// bitwise-identical to `route_logits` on a cold in-process coordinator
+/// over the same files.
+#[test]
+fn wire_logits_are_bitwise_identical_to_in_process() {
+    let s = boot("conformance", NetConfig::default(), BatcherConfig::default());
+    let cold_store =
+        Arc::new(ModelStore::load(&s.dir, &s.names, &["gcn".to_string()]).unwrap());
+    let cold = Coordinator::start_with(
+        Backend::Host,
+        cold_store,
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+    );
+    let mut conn = connect(&s);
+    let shapes = [(None, Strategy::Aes), (Some(8), Strategy::Aes), (Some(8), Strategy::Sfs)];
+    let precisions = [Precision::F32, Precision::U8Device, Precision::I8Compute];
+    let mut id = 0u64;
+    for name in &s.names {
+        for &(width, strategy) in &shapes {
+            for &precision in &precisions {
+                let key = route(name, width, strategy, precision);
+                id += 1;
+                let resp = ask(&mut conn, &WireRequest::Logits { id, route: key.clone() });
+                assert_eq!(
+                    wire::response_status(&resp),
+                    "ok",
+                    "route {}: {}",
+                    key.label(),
+                    resp.to_string()
+                );
+                assert_eq!(wire::request_id(&resp), id);
+                let rows = resp.get("rows").unwrap().as_usize().unwrap();
+                let classes = resp.get("classes").unwrap().as_usize().unwrap();
+                let bits = wire_bits(&resp);
+                assert_eq!(bits.len(), rows * classes);
+                assert_eq!(
+                    bits,
+                    in_process_bits(&cold, &key),
+                    "route {}: TCP-served logits must be bitwise-identical to in-process",
+                    key.label()
+                );
+            }
+        }
+    }
+    cold.shutdown();
+    s.server.shutdown();
+}
+
+/// `infer` over the wire is the argmax of the served logits; per-route
+/// latency histograms surface through the `routes`/`metrics` ops
+/// requests; client mistakes (out-of-range node, unknown dataset) are
+/// error responses, not dropped connections or panics.
+#[test]
+fn wire_infer_matches_argmax_and_reports_route_latency() {
+    let s = boot("infer", NetConfig::default(), BatcherConfig::default());
+    let mut conn = connect(&s);
+    let key = route(&s.names[0], Some(8), Strategy::Aes, Precision::U8Device);
+
+    let resp = ask(&mut conn, &WireRequest::Logits { id: 1, route: key.clone() });
+    assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+    let classes = resp.get("classes").unwrap().as_usize().unwrap();
+    let vals: Vec<f32> = wire_bits(&resp).iter().map(|&b| f32::from_bits(b)).collect();
+
+    let nodes = vec![0usize, 1, 7, 42, 159];
+    let resp =
+        ask(&mut conn, &WireRequest::Infer { id: 2, route: key.clone(), nodes: nodes.clone() });
+    assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+    assert!(resp.get("batch_size").unwrap().as_usize().unwrap() >= 1);
+    let preds = resp.get("predictions").unwrap().as_arr().unwrap();
+    assert_eq!(preds.len(), nodes.len());
+    for (pred, &node) in preds.iter().zip(&nodes) {
+        assert_eq!(pred.get("node").unwrap().as_usize().unwrap(), node);
+        let class = pred.get("class").unwrap().as_usize().unwrap();
+        let row = &vals[node * classes..(node + 1) * classes];
+        assert_eq!(class, argmax_f32(row), "node {node}: infer must be the logits argmax");
+    }
+
+    // Client mistakes are addressed error responses on a live connection.
+    let resp = ask(&mut conn, &WireRequest::Infer { id: 3, route: key.clone(), nodes: vec![9999] });
+    assert_eq!(wire::response_status(&resp), "error");
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("out of range"));
+    let resp = ask(
+        &mut conn,
+        &WireRequest::Logits {
+            id: 4,
+            route: route("nope", Some(8), Strategy::Aes, Precision::F32),
+        },
+    );
+    assert_eq!(wire::response_status(&resp), "error");
+
+    // The batched request shows up in the per-route histograms.
+    let resp = ask(&mut conn, &WireRequest::Routes { id: 5 });
+    assert_eq!(wire::response_status(&resp), "ok");
+    let routes = resp.get("routes").unwrap().as_arr().unwrap();
+    let entry = routes
+        .iter()
+        .find(|r| r.get("name").unwrap().as_str().unwrap() == key.label())
+        .unwrap_or_else(|| panic!("route {} missing from routes response", key.label()));
+    assert!(entry.get("requests").unwrap().as_usize().unwrap() >= 1);
+    let p50 = entry.get("p50_us").unwrap().as_f64().unwrap();
+    let p999 = entry.get("p999_us").unwrap().as_f64().unwrap();
+    assert!(p999 >= p50, "quantiles must be ordered (p50 {p50}, p999 {p999})");
+
+    let resp = ask(&mut conn, &WireRequest::Metrics { id: 6 });
+    assert_eq!(wire::response_status(&resp), "ok");
+    assert!(resp.get("completed").unwrap().as_usize().unwrap() >= 1);
+    let per_route = resp.get("route_latency").unwrap();
+    assert!(per_route.get(&key.label()).is_ok(), "metrics must carry the route histogram");
+    s.server.shutdown();
+}
+
+/// Admission control under burst, made deterministic by a slow batcher
+/// window: while one admitted request holds the single in-flight slot,
+/// a second request is refused with a distinct `"shed"` status, the
+/// refusal is counted in metrics, and the admitted request still
+/// completes (shedding refuses new work, it never abandons admitted
+/// work). Once the slot frees, traffic is admitted again.
+#[test]
+fn burst_past_high_water_sheds_explicitly_and_admitted_work_completes() {
+    // max_delay 300ms + huge max_batch: an admitted infer pins the
+    // in-flight gauge for ~300ms before the batcher flushes it.
+    let s = boot(
+        "burst",
+        NetConfig { high_water: 1, ..NetConfig::default() },
+        BatcherConfig { max_batch: 1000, max_delay: Duration::from_millis(300) },
+    );
+    let key = route(&s.names[0], Some(8), Strategy::Aes, Precision::F32);
+
+    let slow = {
+        let mut conn = connect(&s);
+        let key = key.clone();
+        std::thread::spawn(move || {
+            ask(&mut conn, &WireRequest::Infer { id: 10, route: key, nodes: vec![0, 1] })
+        })
+    };
+    // Well inside the 300ms window the slot is held: this one sheds.
+    std::thread::sleep(Duration::from_millis(120));
+    let mut conn = connect(&s);
+    let resp = ask(&mut conn, &WireRequest::Infer { id: 11, route: key.clone(), nodes: vec![2] });
+    assert_eq!(
+        wire::response_status(&resp),
+        "shed",
+        "past the high-water mark the response must be an explicit shed: {}",
+        resp.to_string()
+    );
+    assert!(resp.get("reason").unwrap().as_str().unwrap().contains("high-water"));
+    assert!(resp.get("error").is_err(), "a shed is not an error");
+
+    // The admitted request completes with real predictions.
+    let resp = slow.join().unwrap();
+    assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+    assert_eq!(resp.get("predictions").unwrap().as_arr().unwrap().len(), 2);
+
+    // The refusal is visible in metrics; the slot is free again.
+    let resp = ask(&mut conn, &WireRequest::Metrics { id: 12 });
+    assert_eq!(resp.get("shed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(resp.get("completed").unwrap().as_usize().unwrap(), 1);
+    let resp = ask(&mut conn, &WireRequest::Infer { id: 13, route: key, nodes: vec![3] });
+    assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+    s.server.shutdown();
+}
+
+/// `high_water = 0` sheds every data-plane request — while the ops
+/// surface (status/metrics/routes) and the control plane (mutate) keep
+/// answering, so an overloaded server stays observable and steerable.
+#[test]
+fn high_water_zero_sheds_data_plane_but_ops_still_answer() {
+    let s = boot(
+        "shed_all",
+        NetConfig { high_water: 0, ..NetConfig::default() },
+        BatcherConfig::default(),
+    );
+    let mut conn = connect(&s);
+    let key = route(&s.names[0], Some(8), Strategy::Aes, Precision::F32);
+    let resp = ask(&mut conn, &WireRequest::Infer { id: 1, route: key.clone(), nodes: vec![0] });
+    assert_eq!(wire::response_status(&resp), "shed");
+    let resp = ask(&mut conn, &WireRequest::Logits { id: 2, route: key });
+    assert_eq!(wire::response_status(&resp), "shed");
+
+    let resp = ask(&mut conn, &WireRequest::Status { id: 3 });
+    assert_eq!(wire::response_status(&resp), "ok");
+    assert_eq!(resp.get("high_water").unwrap().as_usize().unwrap(), 0);
+    let datasets = resp.get("datasets").unwrap().as_arr().unwrap();
+    assert_eq!(datasets.len(), s.names.len());
+    let resp = ask(&mut conn, &WireRequest::Routes { id: 4 });
+    assert_eq!(wire::response_status(&resp), "ok");
+    let resp = ask(
+        &mut conn,
+        &WireRequest::Mutate {
+            id: 5,
+            dataset: s.names[0].clone(),
+            ops: vec!["= 0 0 0.5".to_string()],
+        },
+    );
+    assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+
+    let resp = ask(&mut conn, &WireRequest::Metrics { id: 6 });
+    assert_eq!(resp.get("shed").unwrap().as_usize().unwrap(), 2);
+    s.server.shutdown();
+}
+
+/// Mutation over the wire: the delta lands (epoch advances, the report
+/// comes back), and subsequent wire serving is bitwise-identical to a
+/// cold in-process coordinator with the same delta applied.
+#[test]
+fn mutate_over_the_wire_advances_epoch_and_serving_follows() {
+    let s = boot("mutate", NetConfig::default(), BatcherConfig::default());
+    let name = s.names[0].clone();
+    let key = route(&name, Some(8), Strategy::Aes, Precision::F32);
+    let mut conn = connect(&s);
+    // Warm the route at epoch 0 so the delta invalidates something.
+    let resp = ask(&mut conn, &WireRequest::Logits { id: 1, route: key.clone() });
+    assert_eq!(resp.get("epoch").unwrap().as_usize().unwrap(), 0);
+
+    let ops = vec!["+ 0 159 0.01".to_string(), "- 1 1".to_string(), "# comment".to_string()];
+    let resp = ask(
+        &mut conn,
+        &WireRequest::Mutate { id: 2, dataset: name.clone(), ops: ops.clone() },
+    );
+    assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+    assert_eq!(resp.get("epoch").unwrap().as_usize().unwrap(), 1);
+    // The self-loop delete is certain; the (0, 159) edge counts as an
+    // insert or — if the generator happened to draw it — a reweight.
+    assert_eq!(resp.get("deleted").unwrap().as_usize().unwrap(), 1);
+    let inserted = resp.get("inserted").unwrap().as_usize().unwrap();
+    let reweighted = resp.get("reweighted").unwrap().as_usize().unwrap();
+    assert_eq!(inserted + reweighted, 1);
+    assert_eq!(resp.get("touched_rows").unwrap().as_usize().unwrap(), 2);
+
+    let resp = ask(&mut conn, &WireRequest::Logits { id: 3, route: key.clone() });
+    assert_eq!(resp.get("epoch").unwrap().as_usize().unwrap(), 1, "serving follows the epoch");
+    let warm = wire_bits(&resp);
+
+    let cold_store =
+        Arc::new(ModelStore::load(&s.dir, &s.names, &["gcn".to_string()]).unwrap());
+    let cold = Coordinator::start_with(
+        Backend::Host,
+        cold_store,
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+    );
+    let delta = aes_spmm::graph::GraphDelta::parse(&ops.join("\n")).unwrap();
+    cold.apply_delta(&name, &delta).unwrap();
+    assert_eq!(
+        warm,
+        in_process_bits(&cold, &key),
+        "post-mutation wire serving must match a cold rebuild bitwise"
+    );
+    cold.shutdown();
+    s.server.shutdown();
+}
+
+/// Garbage in, addressed errors out — and only a frame the server
+/// cannot trust (an oversize length announcement) costs the connection.
+#[test]
+fn malformed_frames_get_errors_and_oversize_drops_the_connection() {
+    let s = boot(
+        "garbage",
+        NetConfig { max_frame: 1024, ..NetConfig::default() },
+        BatcherConfig::default(),
+    );
+    let mut conn = connect(&s);
+
+    // Not JSON: error response, connection survives.
+    wire::write_frame(&mut conn, b"not json at all").unwrap();
+    let body = wire::read_frame(&mut conn, wire::MAX_FRAME).unwrap().unwrap();
+    let resp = aes_spmm::util::parse_json(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(wire::response_status(&resp), "error");
+
+    // Wrong protocol version: error echoing the id, connection survives.
+    wire::write_frame(&mut conn, br#"{"v":9,"type":"status","id":5}"#).unwrap();
+    let body = wire::read_frame(&mut conn, wire::MAX_FRAME).unwrap().unwrap();
+    let resp = aes_spmm::util::parse_json(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(wire::response_status(&resp), "error");
+    assert_eq!(wire::request_id(&resp), 5);
+
+    // Still serving on the same connection.
+    let resp = ask(&mut conn, &WireRequest::Status { id: 6 });
+    assert_eq!(wire::response_status(&resp), "ok");
+
+    // A frame announcing more than the server's cap: the stream is no
+    // longer trusted, so the server drops this connection...
+    use std::io::Write;
+    conn.write_all(&(4096u32).to_le_bytes()).unwrap();
+    conn.write_all(&[0u8; 16]).unwrap();
+    conn.flush().unwrap();
+    let dropped = matches!(wire::read_frame(&mut conn, wire::MAX_FRAME), Ok(None) | Err(_));
+    assert!(dropped, "an oversize frame must cost the connection");
+
+    // ...and only that connection: a fresh one is served normally.
+    let mut fresh = connect(&s);
+    let resp = ask(&mut fresh, &WireRequest::Status { id: 7 });
+    assert_eq!(wire::response_status(&resp), "ok");
+    s.server.shutdown();
+}

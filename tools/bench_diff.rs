@@ -1,22 +1,30 @@
 //! `bench_diff` — CI's bench-regression gate.
 //!
 //! Compares a freshly generated bench JSON (`./ci.sh --bench` writes
-//! `BENCH_spmm.json` / `BENCH_loading.json`) against a committed
-//! baseline and fails when any case's median slowed down by more than
-//! the threshold (throughput regression = time increase).
+//! `BENCH_spmm.json` / `BENCH_loading.json`; `./ci.sh --serve-only`
+//! writes `BENCH_serving.json`) against a committed baseline and fails
+//! when any case regressed by more than the threshold.
 //!
 //! ```text
 //! bench_diff <fresh.json> <baseline.json> [--threshold 0.15] [--min-median-us 100]
 //! ```
 //!
-//! * Cases are discovered structurally: any JSON object carrying both
-//!   `name` and `median_ns` is a case; objects carrying `name` +
-//!   `cases` (the per-workload grouping) extend the case's path prefix.
-//!   This makes the tool agnostic to the exact report schema, so both
-//!   bench files — and future ones — diff without changes here.
-//! * Cases whose **baseline** median is under `--min-median-us` are
-//!   reported informationally but never fail the gate: micro-times
-//!   jitter far beyond any sane threshold on shared CI runners.
+//! * Cases are discovered structurally: any JSON object carrying `name`
+//!   plus a metric — `median_ns` (a time) or `value` (a scalar) — is a
+//!   case; objects carrying `name` + `cases` (the per-workload
+//!   grouping) extend the case's path prefix. This makes the tool
+//!   agnostic to the exact report schema, so all bench files — and
+//!   future ones — diff without changes here.
+//! * Each case has a **direction**: the optional `"direction"` field is
+//!   `"lower"` (the `median_ns` default — times regress by going up) or
+//!   `"higher"` (throughput regresses by going *down*). The baseline's
+//!   direction governs the comparison, so a committed baseline defines
+//!   its own gate semantics.
+//! * Time cases (`median_ns`) whose **baseline** median is under
+//!   `--min-median-us` are reported informationally but never fail the
+//!   gate: micro-times jitter far beyond any sane threshold on shared
+//!   CI runners. Scalar `value` cases have no such floor — their units
+//!   are not times.
 //! * A baseline case missing from the fresh run **fails** the gate —
 //!   silent coverage loss (a renamed bench, a bench that crashed after
 //!   partial JSON) must force a deliberate baseline refresh. Fresh-only
@@ -34,18 +42,36 @@ use aes_spmm::util::{
     cli_flag_f64, cli_positionals, cli_require_known_flags, parse_json, JsonValue,
 };
 
-/// Recursively collect `(path-qualified name, median_ns)` cases.
-fn collect_cases(prefix: &str, v: &JsonValue, out: &mut BTreeMap<String, f64>) {
+/// One discovered case: its metric, gate direction, and whether the
+/// metric is a time (subject to the noise floor).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Case {
+    value: f64,
+    higher_is_better: bool,
+    time_like: bool,
+}
+
+/// Recursively collect path-qualified cases.
+fn collect_cases(prefix: &str, v: &JsonValue, out: &mut BTreeMap<String, Case>) {
     match v {
         JsonValue::Obj(map) => {
             let name = map.get("name").and_then(|n| n.as_str().ok());
-            if let (Some(name), Some(JsonValue::Num(median))) = (name, map.get("median_ns")) {
+            let metric = match (map.get("median_ns"), map.get("value")) {
+                (Some(JsonValue::Num(median)), _) => Some((*median, true)),
+                (None, Some(JsonValue::Num(value))) => Some((*value, false)),
+                _ => None,
+            };
+            if let (Some(name), Some((value, time_like))) = (name, metric) {
                 let key = if prefix.is_empty() {
                     name.to_string()
                 } else {
                     format!("{prefix} / {name}")
                 };
-                out.insert(key, *median);
+                let higher_is_better = matches!(
+                    map.get("direction").and_then(|d| d.as_str().ok()),
+                    Some("higher")
+                );
+                out.insert(key, Case { value, higher_is_better, time_like });
                 return;
             }
             // Grouping object: a name plus nested cases extends the path.
@@ -72,16 +98,25 @@ fn collect_cases(prefix: &str, v: &JsonValue, out: &mut BTreeMap<String, f64>) {
     }
 }
 
-fn load_cases(path: &str) -> Result<BTreeMap<String, f64>, String> {
+fn load_cases(path: &str) -> Result<BTreeMap<String, Case>, String> {
     let text =
         std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
     let doc = parse_json(&text).map_err(|e| format!("{path} is not valid JSON: {e}"))?;
     let mut cases = BTreeMap::new();
     collect_cases("", &doc, &mut cases);
     if cases.is_empty() {
-        return Err(format!("{path} holds no cases (objects with name + median_ns)"));
+        return Err(format!("{path} holds no cases (objects with name + median_ns/value)"));
     }
     Ok(cases)
+}
+
+/// Format a case's metric for messages: times in ms, scalars raw.
+fn fmt_metric(c: Case) -> String {
+    if c.time_like {
+        format!("{:.2}ms", c.value / 1e6)
+    } else {
+        format!("{:.2}", c.value)
+    }
 }
 
 fn run() -> Result<bool, String> {
@@ -123,26 +158,34 @@ fn run() -> Result<bool, String> {
             continue;
         };
         compared += 1;
-        let rel = new / base.max(1.0) - 1.0;
-        if base < min_median_ns {
+        // Regression drift, positive = worse, by the baseline's
+        // direction: times get worse by growing, throughput by
+        // shrinking.
+        let drift = if base.higher_is_better {
+            1.0 - new.value / base.value.max(1e-12)
+        } else {
+            new.value / base.value.max(1.0) - 1.0
+        };
+        if base.time_like && base.value < min_median_ns {
             noisy += 1;
-            if rel > threshold {
+            if drift > threshold {
                 println!(
                     "  [noise] {name}: {:.0}ns -> {:.0}ns ({:+.1}%) — under the {}µs floor",
-                    base,
-                    new,
-                    rel * 100.0,
+                    base.value,
+                    new.value,
+                    drift * 100.0,
                     min_median_ns / 1_000.0
                 );
             }
             continue;
         }
-        if rel > threshold {
+        if drift > threshold {
             println!(
-                "  [SLOW]  {name}: {:.2}ms -> {:.2}ms ({:+.1}%)",
-                base / 1e6,
-                new / 1e6,
-                rel * 100.0
+                "  [{}]  {name}: {} -> {} ({:.1}% worse)",
+                if base.higher_is_better { "DROP" } else { "SLOW" },
+                fmt_metric(base),
+                fmt_metric(new),
+                drift * 100.0
             );
             regressions.push(name.clone());
         }
@@ -177,7 +220,7 @@ fn main() -> ExitCode {
 mod tests {
     use super::*;
 
-    fn cases_of(text: &str) -> BTreeMap<String, f64> {
+    fn cases_of(text: &str) -> BTreeMap<String, Case> {
         let mut out = BTreeMap::new();
         collect_cases("", &parse_json(text).unwrap(), &mut out);
         out
@@ -194,8 +237,9 @@ mod tests {
                 {"name":"exact csr","median_ns":9000000,"iters":5}]}]}"#;
         let c = cases_of(spmm);
         assert_eq!(c.len(), 3);
-        assert_eq!(c["cora-like / exact csr"], 1e6);
-        assert_eq!(c["reddit-like / exact csr"], 9e6);
+        assert_eq!(c["cora-like / exact csr"].value, 1e6);
+        assert_eq!(c["reddit-like / exact csr"].value, 9e6);
+        assert!(c.values().all(|v| v.time_like && !v.higher_is_better));
 
         // The loading shape: top-level cases array.
         let loading = r#"{"bench":"loading","cases":[
@@ -203,7 +247,34 @@ mod tests {
             {"name":"cold stage int8","median_ns":1200000,"bytes_staged":1024}]}"#;
         let c = cases_of(loading);
         assert_eq!(c.len(), 2);
-        assert_eq!(c["cold stage int8"], 1.2e6);
+        assert_eq!(c["cold stage int8"].value, 1.2e6);
+    }
+
+    #[test]
+    fn collects_direction_tagged_value_cases() {
+        // The serving shape: latency quantiles (median_ns, default
+        // lower-is-better) next to a higher-is-better throughput value.
+        let serving = r#"{"bench":"serving","workloads":[
+            {"name":"aggregate","shed":3,"cases":[
+                {"name":"latency p999","median_ns":4800000},
+                {"name":"throughput","value":350.5,"direction":"higher","unit":"req/s"}]}]}"#;
+        let c = cases_of(serving);
+        assert_eq!(c.len(), 2);
+        let p999 = c["aggregate / latency p999"];
+        assert!(p999.time_like && !p999.higher_is_better);
+        let tp = c["aggregate / throughput"];
+        assert_eq!(tp.value, 350.5);
+        assert!(tp.higher_is_better && !tp.time_like);
+        // An explicit "lower" direction parses as the default.
+        let lower = cases_of(r#"[{"name":"x","value":5,"direction":"lower"}]"#);
+        assert!(!lower["x"].higher_is_better);
+    }
+
+    #[test]
+    fn median_ns_wins_when_both_metrics_present() {
+        let c = cases_of(r#"[{"name":"x","median_ns":100,"value":9}]"#);
+        assert_eq!(c["x"].value, 100.0);
+        assert!(c["x"].time_like);
     }
 
     #[test]
@@ -217,13 +288,24 @@ mod tests {
     // (`util::cli`); both gate binaries share them.
 
     #[test]
-    fn regression_math() {
+    fn regression_math_lower_is_better() {
         // 15% threshold: +14% passes, +16% fails (sanity on the formula
         // used in run(); kept in lockstep by construction).
         let base = 1_000_000.0f64;
         for (new, slow) in [(1_140_000.0, false), (1_160_000.0, true)] {
-            let rel: f64 = new / base - 1.0;
-            assert_eq!(rel > 0.15, slow);
+            let drift: f64 = new / base - 1.0;
+            assert_eq!(drift > 0.15, slow);
+        }
+    }
+
+    #[test]
+    fn regression_math_higher_is_better() {
+        // Throughput 1000 req/s baseline, 15% threshold: a drop to 860
+        // passes, to 840 fails; any gain passes.
+        let base = 1_000.0f64;
+        for (new, drop) in [(860.0, false), (840.0, true), (1_500.0, false)] {
+            let drift: f64 = 1.0 - new / base;
+            assert_eq!(drift > 0.15, drop);
         }
     }
 }
