@@ -18,9 +18,12 @@
 #                         tuned-dispatch case landed (CI's tune job)
 #   ./ci.sh --serve-only  serving gate: boot `repro serve --listen` on a
 #                         loopback ephemeral port, drive it with
-#                         `repro loadgen --quick` -> BENCH_serving.json, and
-#                         diff against the committed baseline (CI's serving
-#                         job; bootstrap-pass while the baseline is unseeded)
+#                         `repro loadgen --quick` -> BENCH_serving.json; then
+#                         boot the 3-process sharded topology (2x shard-server
+#                         + router) and fold a second loadgen pass in under a
+#                         "sharded-router" prefix; diff the merged report
+#                         against the committed baseline (CI's serving job;
+#                         bootstrap-pass while the baseline is unseeded)
 #
 # Env knobs:
 #   SKIP_LINT=1   skip the fmt + clippy steps (e.g. a toolchain without
@@ -137,6 +140,64 @@ run_serving_gate() {
     kill "$server_pid" 2>/dev/null || true
     wait "$server_pid" 2>/dev/null || true
     [[ "$loadgen_rc" -eq 0 ]] || die "repro loadgen failed (exit $loadgen_rc)"
+
+    # Second pass: the 3-process sharded topology (two shard-server
+    # workers + a router, all on ephemeral loopback ports). The loadgen
+    # workloads fold into the same BENCH_serving.json under a
+    # "sharded-router" prefix so the one baseline file gates both
+    # topologies (docs/serving.md).
+    echo "== sharded topology: 2x shard-server + router =="
+    local w1_file="$PWD/target/serving-worker1.txt"
+    local w2_file="$PWD/target/serving-worker2.txt"
+    local router_file="$PWD/target/serving-router.txt"
+    rm -f "$w1_file" "$w2_file" "$router_file"
+    ./target/release/repro shard-server --listen 127.0.0.1:0 \
+        --eval-data "$PWD/target/serve-eval-w1" \
+        --port-file "$w1_file" --max-seconds 600 &
+    local w1_pid=$!
+    ./target/release/repro shard-server --listen 127.0.0.1:0 \
+        --eval-data "$PWD/target/serve-eval-w2" \
+        --port-file "$w2_file" --max-seconds 600 &
+    local w2_pid=$!
+    kill_fleet() {
+        for pid in "$@"; do
+            kill "$pid" 2>/dev/null || true
+            wait "$pid" 2>/dev/null || true
+        done
+    }
+    waited=0
+    while [[ ! -s "$w1_file" || ! -s "$w2_file" ]]; do
+        if ! kill -0 "$w1_pid" 2>/dev/null || ! kill -0 "$w2_pid" 2>/dev/null; then
+            kill_fleet "$w1_pid" "$w2_pid"
+            die "a shard-server process exited before binding its listener."
+        fi
+        sleep 0.2
+        waited=$((waited + 1))
+        [[ "$waited" -lt 150 ]] || { kill_fleet "$w1_pid" "$w2_pid"; die \
+            "the shard-server processes never wrote their port files within 30s."; }
+    done
+    ./target/release/repro router --listen 127.0.0.1:0 \
+        --workers "$(cat "$w1_file"),$(cat "$w2_file")" \
+        --port-file "$router_file" --max-seconds 600 &
+    local router_pid=$!
+    waited=0
+    while [[ ! -s "$router_file" ]]; do
+        kill -0 "$router_pid" 2>/dev/null || { kill_fleet "$w1_pid" "$w2_pid"; die \
+            "the router process exited before binding its listener."; }
+        sleep 0.2
+        waited=$((waited + 1))
+        [[ "$waited" -lt 150 ]] || { kill_fleet "$router_pid" "$w1_pid" "$w2_pid"; die \
+            "the router never wrote $router_file within 30s."; }
+    done
+    local router_addr
+    router_addr="$(cat "$router_file")"
+    echo "== loadgen --quick against router $router_addr =="
+    loadgen_rc=0
+    ./target/release/repro loadgen --addr "$router_addr" --quick \
+        --prefix sharded-router --append \
+        --json "$PWD/BENCH_serving.json" || loadgen_rc=$?
+    kill_fleet "$router_pid" "$w1_pid" "$w2_pid"
+    [[ "$loadgen_rc" -eq 0 ]] || die "repro loadgen (sharded-router) failed (exit $loadgen_rc)"
     echo "== serving regression gate (direction-aware; >50% drift fails) =="
     cargo run --release -p aes-spmm --bin bench_diff -- \
         BENCH_serving.json benchmarks/baseline/BENCH_serving.json \

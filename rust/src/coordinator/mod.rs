@@ -18,7 +18,8 @@
 //! | `store`   | [`ModelStore`]: immutable datasets / weights / feature stores shared lock-free via `Arc` |
 //! | `metrics` | lock-cheap counters + sub-bucketed latency histograms (p50/p99/p999, per route) |
 //! | `wire`    | length-prefixed TCP frame codec, versioned request/response JSON (docs/serving.md) |
-//! | `net`     | [`WireServer`]: accept loop, connection threads, admission control + load shedding, ops requests |
+//! | `net`     | [`WireServer`]: accept loop, connection threads, admission control + load shedding, ops requests; shard-plane handlers (`shard_logits`/`shard_infer`/`apply_delta`) |
+//! | `router`  | [`ShardRouter`]: multi-process sharded serving — scatter/gather over shard workers, delta-log replication with per-worker epoch watermarks, failover re-placement |
 //!
 //! # Request path (all rust, no python)
 //!
@@ -74,6 +75,7 @@ mod batcher;
 mod metrics;
 mod net;
 mod request;
+mod router;
 mod server;
 mod store;
 pub mod wire;
@@ -81,6 +83,7 @@ pub mod wire;
 pub use batcher::{run_batcher, run_batcher_with, Batch, BatcherConfig};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot, RouteLatencySnapshot};
 pub use net::{NetConfig, WireServer};
+pub use router::{RouterConfig, ShardRouter};
 pub use request::{InferRequest, InferResponse, Prediction, RouteKey, SubmitError};
 pub use server::{
     oneshot_accuracy, Coordinator, CoordinatorConfig, DeltaOutcome, ShardCacheStats,

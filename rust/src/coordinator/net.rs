@@ -1,14 +1,28 @@
 //! The TCP serving front-end: accept loop, per-connection threads,
 //! admission control, and the ops request surface.
 //!
-//! [`WireServer`] wraps an [`Arc<Coordinator>`]: every connection gets
-//! a thread that reads [`super::wire`] frames and dispatches them.
-//! `infer` frames go through [`Coordinator::submit`] — the same bounded
-//! intake, batcher, plan-cache/prefetcher/sharded path as in-process
-//! callers, so wire requests for the same route coalesce into one
-//! forward pass across connections. The connection thread then blocks
-//! on that request's reply channel; concurrency comes from the number
-//! of connections, exactly like one outstanding request per client.
+//! The socket machinery is split from the request semantics so the two
+//! wire-facing processes share one (debugged-once) connection layer:
+//!
+//! * [`WireListener`] + [`FrameHandler`] — the generic accept loop,
+//!   per-connection threads, connection reaping, accept-error backoff,
+//!   and shutdown choreography. The coordinator front-end here and the
+//!   shard router ([`super::router`]) are both `FrameHandler`s behind
+//!   the same listener.
+//! * [`WireServer`] wraps an [`Arc<Coordinator>`]: every connection gets
+//!   a thread that reads [`super::wire`] frames and dispatches them.
+//!   `infer` frames go through [`Coordinator::submit`] — the same
+//!   bounded intake, batcher, plan-cache/prefetcher/sharded path as
+//!   in-process callers, so wire requests for the same route coalesce
+//!   into one forward pass across connections. The connection thread
+//!   then blocks on that request's reply channel; concurrency comes
+//!   from the number of connections, exactly like one outstanding
+//!   request per client.
+//!
+//! Any `WireServer` also answers the shard-serving plane
+//! (`shard_logits` / `shard_infer` / `apply_delta`, docs/serving.md):
+//! a shard worker is just `repro serve` addressed by a router, not a
+//! different binary.
 //!
 //! # Admission control
 //!
@@ -29,17 +43,17 @@
 //! *new* work, it never abandons admitted work.
 
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::graph::GraphDelta;
 use crate::util::JsonValue;
 
-use super::request::SubmitError;
+use super::request::{RouteKey, SubmitError};
 use super::server::Coordinator;
 use super::store::ModelStore;
 use super::wire::{self, WireRequest};
@@ -60,18 +74,224 @@ impl Default for NetConfig {
     }
 }
 
-/// Shared state behind the accept loop and every connection thread.
-struct ServerState {
+/// Request semantics behind a [`WireListener`]: one decoded-frame-in,
+/// response-out call per request. Implementations must be infallible —
+/// every failure mode maps to an `"error"`/`"shed"` response frame.
+pub(crate) trait FrameHandler: Send + Sync + 'static {
+    fn handle(&self, body: &[u8]) -> JsonValue;
+}
+
+/// Listener state shared between the accept loop, the connection
+/// threads, and the handler (which surfaces it through `status`).
+pub(crate) struct ListenerShared {
+    max_frame: usize,
+    shutdown: AtomicBool,
+    /// Total accept-loop errors (failed `accept` or `try_clone`).
+    /// A steadily climbing counter is the observable symptom of fd
+    /// exhaustion — surfaced in `status` so an operator sees it before
+    /// the box does.
+    accept_errors: AtomicU64,
+    /// Live connection threads + stream clones so shutdown can force
+    /// blocked reads to return. Finished connections are reaped on
+    /// every accept (and on [`ListenerShared::open_connections`]), so
+    /// this tracks *live* connections, not total-ever-accepted — the
+    /// bounded-churn regression test in `tests/serving_wire.rs` pins
+    /// that invariant.
+    conns: Mutex<Vec<(JoinHandle<()>, TcpStream)>>,
+}
+
+impl ListenerShared {
+    pub(crate) fn new(max_frame: usize) -> Arc<ListenerShared> {
+        Arc::new(ListenerShared {
+            max_frame,
+            shutdown: AtomicBool::new(false),
+            accept_errors: AtomicU64::new(0),
+            conns: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Accept-loop error count since start.
+    pub(crate) fn accept_errors(&self) -> u64 {
+        self.accept_errors.load(Ordering::Relaxed)
+    }
+
+    /// Live connection count (reaps finished threads first, so the
+    /// number reflects open sockets, not historical churn).
+    pub(crate) fn open_connections(&self) -> usize {
+        let mut conns = self.conns.lock().unwrap();
+        reap_finished(&mut conns);
+        conns.len()
+    }
+}
+
+/// Drop finished connection threads: join them (instant — the thread
+/// already returned) and actively close their stream clones so the fd
+/// is released now, not at server shutdown. Called with the `conns`
+/// lock held.
+fn reap_finished(conns: &mut Vec<(JoinHandle<()>, TcpStream)>) {
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].0.is_finished() {
+            let (handle, stream) = conns.swap_remove(i);
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = handle.join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Backoff before retrying a failed accept: exponential from 1 ms,
+/// capped at 100 ms. Persistent accept errors (EMFILE is the classic —
+/// the listener fd is fine but every accepted socket fails) would
+/// otherwise spin the accept thread at 100 % CPU; one successful accept
+/// resets the streak.
+pub(crate) fn accept_backoff(streak: u32) -> Duration {
+    Duration::from_millis((1u64 << streak.min(7)).min(100))
+}
+
+/// The generic TCP listener: accepts connections, spawns one thread per
+/// connection, frames bytes, and hands decoded bodies to a
+/// [`FrameHandler`]. Dropping it stops the accept loop, closes every
+/// live connection, and joins the threads.
+pub(crate) struct WireListener {
+    addr: SocketAddr,
+    shared: Arc<ListenerShared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl WireListener {
+    pub(crate) fn start(
+        listener: TcpListener,
+        shared: Arc<ListenerShared>,
+        handler: Arc<dyn FrameHandler>,
+    ) -> Result<WireListener> {
+        let addr = listener.local_addr().context("reading bound address")?;
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("wire-accept".into())
+                .spawn(move || accept_loop(listener, shared, handler))
+                .context("spawning accept thread")?
+        };
+        Ok(WireListener { addr, shared, accept: Some(accept) })
+    }
+
+    pub(crate) fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // Unblock the accept loop: it checks the flag after every
+        // accept, so one throwaway connection gets it past the block.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // The accept loop is gone — no new entries can race this drain.
+        let conns = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for (handle, stream) in conns {
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for WireListener {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<ListenerShared>,
+    handler: Arc<dyn FrameHandler>,
+) {
+    let mut error_streak: u32 = 0;
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let stream = match stream {
+            Ok(s) => {
+                error_streak = 0;
+                s
+            }
+            Err(_) => {
+                shared.accept_errors.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(accept_backoff(error_streak));
+                error_streak = error_streak.saturating_add(1);
+                continue;
+            }
+        };
+        let Ok(clone) = stream.try_clone() else {
+            shared.accept_errors.fetch_add(1, Ordering::Relaxed);
+            continue;
+        };
+        let st = shared.clone();
+        let h = handler.clone();
+        let spawned = std::thread::Builder::new()
+            .name("wire-conn".into())
+            .spawn(move || connection_loop(stream, st, h));
+        let mut conns = shared.conns.lock().unwrap();
+        // Reap on every accept: churny clients (connect, one request,
+        // disconnect) must not accumulate dead threads + fd clones.
+        reap_finished(&mut conns);
+        match spawned {
+            Ok(handle) => conns.push((handle, clone)),
+            Err(_) => {
+                // Out of threads: refuse the connection outright rather
+                // than hanging the client.
+                let _ = clone.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+fn connection_loop(
+    mut stream: TcpStream,
+    shared: Arc<ListenerShared>,
+    handler: Arc<dyn FrameHandler>,
+) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let body = match wire::read_frame(&mut stream, shared.max_frame) {
+            Ok(Some(b)) => b,
+            // Clean EOF, a reset, or an untrustworthy stream (oversize
+            // length, mid-frame EOF): drop the connection.
+            Ok(None) | Err(_) => break,
+        };
+        let reply = handler.handle(&body);
+        if wire::write_frame(&mut stream, reply.to_string().as_bytes()).is_err() {
+            break;
+        }
+    }
+    // The accept loop holds a clone of this stream (so shutdown can
+    // unblock the read above); dropping ours would leave the socket
+    // half-alive until the reaper runs. Close it actively so the peer
+    // sees EOF the moment the connection is dead.
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// The coordinator front-end's request semantics (one per server, shared
+/// by every connection thread).
+struct CoordHandler {
     coord: Arc<Coordinator>,
     store: Arc<ModelStore>,
     cfg: NetConfig,
     inflight: AtomicUsize,
     started: Instant,
-    shutdown: AtomicBool,
-    /// Connection threads + stream clones so shutdown can force
-    /// blocked reads to return. Grows with total connections accepted;
-    /// fine at serving scale (one entry per client connection).
-    conns: Mutex<Vec<(JoinHandle<()>, TcpStream)>>,
+    shared: Arc<ListenerShared>,
+}
+
+impl FrameHandler for CoordHandler {
+    fn handle(&self, body: &[u8]) -> JsonValue {
+        handle_frame(self, body)
+    }
 }
 
 /// The TCP front-end. Dropping it (or calling [`WireServer::shutdown`])
@@ -79,9 +299,8 @@ struct ServerState {
 /// threads; the coordinator itself shuts down when its last `Arc`
 /// drops.
 pub struct WireServer {
-    addr: SocketAddr,
-    state: Arc<ServerState>,
-    accept: Option<JoinHandle<()>>,
+    listener: WireListener,
+    handler: Arc<CoordHandler>,
 }
 
 impl WireServer {
@@ -105,107 +324,44 @@ impl WireServer {
         listener: TcpListener,
         cfg: NetConfig,
     ) -> Result<WireServer> {
-        let addr = listener.local_addr().context("reading bound address")?;
-        let state = Arc::new(ServerState {
+        let shared = ListenerShared::new(cfg.max_frame);
+        let handler = Arc::new(CoordHandler {
             coord,
             store,
             cfg,
             inflight: AtomicUsize::new(0),
             started: Instant::now(),
-            shutdown: AtomicBool::new(false),
-            conns: Mutex::new(Vec::new()),
+            shared: shared.clone(),
         });
-        let accept = {
-            let state = state.clone();
-            std::thread::Builder::new()
-                .name("wire-accept".into())
-                .spawn(move || accept_loop(listener, state))
-                .context("spawning accept thread")?
-        };
-        Ok(WireServer { addr, state, accept: Some(accept) })
+        let listener = WireListener::start(listener, shared, handler.clone())?;
+        Ok(WireServer { listener, handler })
     }
 
     /// The bound address (resolves the ephemeral port of `:0` binds).
     pub fn local_addr(&self) -> SocketAddr {
-        self.addr
+        self.listener.local_addr()
+    }
+
+    /// Live connection count (finished connections are reaped first).
+    pub fn open_connections(&self) -> usize {
+        self.handler.shared.open_connections()
+    }
+
+    /// Accept-loop error count since start.
+    pub fn accept_errors(&self) -> u64 {
+        self.handler.shared.accept_errors()
     }
 
     /// Stop accepting, close live connections, join every thread.
-    pub fn shutdown(mut self) {
-        self.shutdown_inner();
+    pub fn shutdown(self) {
+        // Drop order does the work: the listener's Drop joins the
+        // accept loop and every connection thread.
     }
-
-    fn shutdown_inner(&mut self) {
-        if self.state.shutdown.swap(true, Ordering::AcqRel) {
-            return;
-        }
-        // Unblock the accept loop: it checks the flag after every
-        // accept, so one throwaway connection gets it past the block.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        }
-        // The accept loop is gone — no new entries can race this drain.
-        let conns = std::mem::take(&mut *self.state.conns.lock().unwrap());
-        for (handle, stream) in conns {
-            let _ = stream.shutdown(Shutdown::Both);
-            let _ = handle.join();
-        }
-    }
-}
-
-impl Drop for WireServer {
-    fn drop(&mut self) {
-        self.shutdown_inner();
-    }
-}
-
-fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
-    for stream in listener.incoming() {
-        if state.shutdown.load(Ordering::Acquire) {
-            return;
-        }
-        let Ok(stream) = stream else { continue };
-        let Ok(clone) = stream.try_clone() else { continue };
-        let st = state.clone();
-        let handle = std::thread::Builder::new()
-            .name("wire-conn".into())
-            .spawn(move || connection_loop(stream, st));
-        match handle {
-            Ok(h) => state.conns.lock().unwrap().push((h, clone)),
-            Err(_) => {
-                // Out of threads: refuse the connection outright rather
-                // than hanging the client.
-                let _ = clone.shutdown(Shutdown::Both);
-            }
-        }
-    }
-}
-
-fn connection_loop(mut stream: TcpStream, state: Arc<ServerState>) {
-    let _ = stream.set_nodelay(true);
-    loop {
-        let body = match wire::read_frame(&mut stream, state.cfg.max_frame) {
-            Ok(Some(b)) => b,
-            // Clean EOF, a reset, or an untrustworthy stream (oversize
-            // length, mid-frame EOF): drop the connection.
-            Ok(None) | Err(_) => break,
-        };
-        let reply = handle_frame(&state, &body);
-        if wire::write_frame(&mut stream, reply.to_string().as_bytes()).is_err() {
-            break;
-        }
-    }
-    // The accept loop holds a clone of this stream (so shutdown can
-    // unblock the read above); dropping ours would leave the socket
-    // half-alive until server shutdown. Close it actively so the peer
-    // sees EOF the moment the connection is dead.
-    let _ = stream.shutdown(Shutdown::Both);
 }
 
 /// Decode and dispatch one frame; infallible — every failure mode maps
 /// to an `"error"` (or `"shed"`) response frame.
-fn handle_frame(state: &ServerState, body: &[u8]) -> JsonValue {
+fn handle_frame(state: &CoordHandler, body: &[u8]) -> JsonValue {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
         Err(_) => return wire::error_response(0, "frame is not UTF-8"),
@@ -222,6 +378,15 @@ fn handle_frame(state: &ServerState, body: &[u8]) -> JsonValue {
         WireRequest::Infer { id, route, nodes } => handle_infer(state, id, route, nodes),
         WireRequest::Logits { id, route } => handle_logits(state, id, route),
         WireRequest::Mutate { id, dataset, ops } => handle_mutate(state, id, &dataset, &ops),
+        WireRequest::ShardInfer { id, route, nodes } => {
+            handle_shard_infer(state, id, route, nodes)
+        }
+        WireRequest::ShardLogits { id, route, row_start, row_end } => {
+            handle_shard_logits(state, id, route, row_start, row_end)
+        }
+        WireRequest::ApplyDelta { id, dataset, ops, epoch } => {
+            handle_apply_delta(state, id, &dataset, &ops, epoch)
+        }
         WireRequest::Status { id } => handle_status(state, id),
         WireRequest::Metrics { id } => handle_metrics(state, id),
         WireRequest::Routes { id } => handle_routes(state, id),
@@ -239,7 +404,7 @@ impl Drop for Admission<'_> {
 
 /// Claim an in-flight slot, or shed: past the high-water mark the
 /// request is refused *before* it touches the coordinator.
-fn admit(state: &ServerState) -> Option<Admission<'_>> {
+fn admit(state: &CoordHandler) -> Option<Admission<'_>> {
     let prev = state.inflight.fetch_add(1, Ordering::AcqRel);
     if prev >= state.cfg.high_water {
         state.inflight.fetch_sub(1, Ordering::AcqRel);
@@ -257,12 +422,7 @@ fn us(d: std::time::Duration) -> JsonValue {
     num(d.as_micros() as u64)
 }
 
-fn handle_infer(
-    state: &ServerState,
-    id: u64,
-    route: super::request::RouteKey,
-    nodes: Vec<usize>,
-) -> JsonValue {
+fn handle_infer(state: &CoordHandler, id: u64, route: RouteKey, nodes: Vec<usize>) -> JsonValue {
     let Some(_slot) = admit(state) else {
         return wire::shed_response(id, "in-flight high-water mark reached");
     };
@@ -317,41 +477,138 @@ fn handle_infer(
     }
 }
 
-fn handle_logits(state: &ServerState, id: u64, route: super::request::RouteKey) -> JsonValue {
+fn handle_logits(state: &CoordHandler, id: u64, route: RouteKey) -> JsonValue {
     let Some(_slot) = admit(state) else {
         return wire::shed_response(id, "in-flight high-water mark reached");
     };
-    let ds = match state.store.dataset(&route.dataset) {
-        Ok(d) => d,
-        Err(e) => return wire::error_response(id, &format!("{e:#}")),
-    };
-    let logits = match state.coord.route_logits(&route) {
-        Ok(l) => l,
+    // The epoch label comes from the execution itself, never from a
+    // separate `store.dataset` read: a `mutate` racing this request
+    // would otherwise tag epoch-N+1 logits as epoch N (or vice versa),
+    // and the replication log makes that tag load-bearing.
+    let (logits, epoch, classes) = match state.coord.route_logits_versioned(&route) {
+        Ok(t) => t,
         Err(e) => return wire::error_response(id, &format!("{e:#}")),
     };
     let vals = match logits.as_f32() {
         Ok(v) => v,
         Err(e) => return wire::error_response(id, &format!("{e:#}")),
     };
-    if vals.len() != ds.n * ds.classes {
+    if classes == 0 || vals.len() % classes != 0 {
         return wire::error_response(
             id,
-            &format!("logits shape {} != {}x{}", vals.len(), ds.n, ds.classes),
+            &format!("logits shape {} not divisible by {classes} classes", vals.len()),
         );
     }
+    let rows = vals.len() / classes;
     let bits = vals.iter().map(|v| num(v.to_bits() as u64)).collect();
     wire::ok_response(
         id,
         vec![
-            ("rows", num(ds.n as u64)),
-            ("classes", num(ds.classes as u64)),
-            ("epoch", num(ds.epoch)),
+            ("rows", num(rows as u64)),
+            ("classes", num(classes as u64)),
+            ("epoch", num(epoch)),
             ("logits_bits", JsonValue::Arr(bits)),
         ],
     )
 }
 
-fn handle_mutate(state: &ServerState, id: u64, dataset: &str, ops: &[String]) -> JsonValue {
+/// `shard_infer`: classify nodes directly through the versioned route
+/// execution (no batcher — the router already coalesced across its
+/// clients) and report the epoch the served plan bound, so the router
+/// can enforce read-your-writes across workers.
+fn handle_shard_infer(
+    state: &CoordHandler,
+    id: u64,
+    route: RouteKey,
+    nodes: Vec<usize>,
+) -> JsonValue {
+    let Some(_slot) = admit(state) else {
+        return wire::shed_response(id, "in-flight high-water mark reached");
+    };
+    let (logits, epoch, classes) = match state.coord.route_logits_versioned(&route) {
+        Ok(t) => t,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    let vals = match logits.as_f32() {
+        Ok(v) => v,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    let rows = if classes == 0 { 0 } else { vals.len() / classes };
+    if let Some(&bad) = nodes.iter().find(|&&n| n >= rows) {
+        return wire::error_response(
+            id,
+            &format!("node {bad} out of range (dataset {} has {rows} nodes)", route.dataset),
+        );
+    }
+    let predictions = nodes
+        .iter()
+        .map(|&node| {
+            let class = crate::util::argmax_f32(&vals[node * classes..(node + 1) * classes]);
+            JsonValue::Obj(
+                [
+                    ("node".to_string(), num(node as u64)),
+                    ("class".to_string(), num(class as u64)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        })
+        .collect();
+    wire::ok_response(
+        id,
+        vec![("predictions", JsonValue::Arr(predictions)), ("epoch", num(epoch))],
+    )
+}
+
+/// `shard_logits`: the scatter half of the router's row-concatenation
+/// merge — execute the route and ship only the requested row slice.
+/// The forward pass is complete (multi-layer aggregation needs every
+/// row's neighborhood; row-restricted execution would change the
+/// bits); ownership restricts what crosses the wire, not what is
+/// computed.
+fn handle_shard_logits(
+    state: &CoordHandler,
+    id: u64,
+    route: RouteKey,
+    row_start: usize,
+    row_end: usize,
+) -> JsonValue {
+    let Some(_slot) = admit(state) else {
+        return wire::shed_response(id, "in-flight high-water mark reached");
+    };
+    let (logits, epoch, classes) = match state.coord.route_logits_versioned(&route) {
+        Ok(t) => t,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    let vals = match logits.as_f32() {
+        Ok(v) => v,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    let rows = if classes == 0 { 0 } else { vals.len() / classes };
+    if row_start > row_end || row_end > rows {
+        return wire::error_response(
+            id,
+            &format!("row range {row_start}..{row_end} outside 0..{rows}"),
+        );
+    }
+    let bits = vals[row_start * classes..row_end * classes]
+        .iter()
+        .map(|v| num(v.to_bits() as u64))
+        .collect();
+    wire::ok_response(
+        id,
+        vec![
+            ("row_start", num(row_start as u64)),
+            ("row_end", num(row_end as u64)),
+            ("rows", num((row_end - row_start) as u64)),
+            ("classes", num(classes as u64)),
+            ("epoch", num(epoch)),
+            ("logits_bits", JsonValue::Arr(bits)),
+        ],
+    )
+}
+
+fn handle_mutate(state: &CoordHandler, id: u64, dataset: &str, ops: &[String]) -> JsonValue {
     let delta = match GraphDelta::parse(&ops.join("\n")) {
         Ok(d) => d,
         Err(e) => return wire::error_response(id, &format!("{e:#}")),
@@ -376,19 +633,81 @@ fn handle_mutate(state: &ServerState, id: u64, dataset: &str, ops: &[String]) ->
     }
 }
 
-fn handle_status(state: &ServerState, id: u64) -> JsonValue {
+/// `apply_delta`: one replication-log entry. `epoch` is the epoch the
+/// entry is expected to produce; the worker's reply always carries its
+/// resulting epoch so the router can advance its watermark.
+///
+/// * already at (or past) `epoch` → ack without re-applying: replay
+///   after failover is idempotent;
+/// * exactly one behind → apply (the reported epoch may still equal the
+///   old one if every op is a no-op — the store keeps the epoch then,
+///   and the router trusts the worker's answer);
+/// * further behind → "epoch gap" error: the router must replay earlier
+///   log entries first.
+///
+/// Control plane: never shed, like `mutate` — replication must drain
+/// even on an overloaded worker, or the router would stall every
+/// dataset's writes behind one busy box.
+fn handle_apply_delta(
+    state: &CoordHandler,
+    id: u64,
+    dataset: &str,
+    ops: &[String],
+    epoch: u64,
+) -> JsonValue {
+    let current = match state.store.dataset(dataset) {
+        Ok(d) => d.epoch,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    if current >= epoch {
+        return wire::ok_response(
+            id,
+            vec![("epoch", num(current)), ("applied", JsonValue::Bool(false))],
+        );
+    }
+    if current + 1 < epoch {
+        return wire::error_response(
+            id,
+            &format!(
+                "epoch gap: worker at {current}, log entry expects {epoch} — replay earlier entries"
+            ),
+        );
+    }
+    let delta = match GraphDelta::parse(&ops.join("\n")) {
+        Ok(d) => d,
+        Err(e) => return wire::error_response(id, &format!("{e:#}")),
+    };
+    match state.coord.apply_delta(dataset, &delta) {
+        Ok(out) => wire::ok_response(
+            id,
+            vec![("epoch", num(out.epoch)), ("applied", JsonValue::Bool(true))],
+        ),
+        Err(e) => wire::error_response(id, &format!("{e:#}")),
+    }
+}
+
+fn handle_status(state: &CoordHandler, id: u64) -> JsonValue {
     let datasets = state
         .store
         .dataset_names()
         .into_iter()
         .filter_map(|name| {
             let ds = state.store.dataset(&name).ok()?;
+            let bounds = state.coord.shard_bounds(&name).unwrap_or_else(|_| vec![(0, ds.n)]);
+            let bounds_json = bounds
+                .iter()
+                .map(|&(s, e)| JsonValue::Arr(vec![num(s as u64), num(e as u64)]))
+                .collect();
             Some(JsonValue::Obj(
                 [
                     ("name".to_string(), JsonValue::Str(name)),
                     ("nodes".to_string(), num(ds.n as u64)),
                     ("classes".to_string(), num(ds.classes as u64)),
                     ("epoch".to_string(), num(ds.epoch)),
+                    // The shard-layout row cuts — deterministic in
+                    // (graph, spec), which is how a router learns the
+                    // placement universe without shipping the graph.
+                    ("shard_bounds".to_string(), JsonValue::Arr(bounds_json)),
                 ]
                 .into_iter()
                 .collect(),
@@ -404,11 +723,13 @@ fn handle_status(state: &ServerState, id: u64) -> JsonValue {
             ("inflight", num(state.inflight.load(Ordering::Acquire) as u64)),
             ("high_water", num(state.cfg.high_water as u64)),
             ("plans_resident", num(state.coord.plan_cache_len() as u64)),
+            ("connections", num(state.shared.open_connections() as u64)),
+            ("accept_errors", num(state.shared.accept_errors())),
         ],
     )
 }
 
-fn handle_metrics(state: &ServerState, id: u64) -> JsonValue {
+fn handle_metrics(state: &CoordHandler, id: u64) -> JsonValue {
     let snap = state.coord.metrics().snapshot();
     let route_latency = snap
         .route_latency
@@ -452,7 +773,7 @@ fn handle_metrics(state: &ServerState, id: u64) -> JsonValue {
     )
 }
 
-fn handle_routes(state: &ServerState, id: u64) -> JsonValue {
+fn handle_routes(state: &CoordHandler, id: u64) -> JsonValue {
     let snap = state.coord.metrics().snapshot();
     let routes = snap
         .per_route
@@ -474,4 +795,26 @@ fn handle_routes(state: &ServerState, id: u64) -> JsonValue {
         })
         .collect();
     wire::ok_response(id, vec![("routes", JsonValue::Arr(routes))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_backoff_grows_and_caps() {
+        // The hot-accept-loop fix: a persistent error stream must sleep,
+        // and the sleep must neither start large (one transient error
+        // should cost ~1 ms) nor grow without bound.
+        assert_eq!(accept_backoff(0), Duration::from_millis(1));
+        assert_eq!(accept_backoff(1), Duration::from_millis(2));
+        assert_eq!(accept_backoff(3), Duration::from_millis(8));
+        assert_eq!(accept_backoff(7), Duration::from_millis(100));
+        assert_eq!(accept_backoff(30), Duration::from_millis(100));
+        assert_eq!(accept_backoff(u32::MAX), Duration::from_millis(100));
+        // Monotone: a longer streak never sleeps less.
+        for s in 0..20u32 {
+            assert!(accept_backoff(s + 1) >= accept_backoff(s));
+        }
+    }
 }

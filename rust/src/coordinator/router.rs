@@ -1,0 +1,830 @@
+//! The shard router: multi-process sharded serving over the wire
+//! protocol (docs/serving.md).
+//!
+//! A [`ShardRouter`] listens for ordinary client requests (`logits` /
+//! `infer` / `mutate` / ops) and serves them by scatter/gathering
+//! the shard plane (`shard_logits` / `shard_infer` / `apply_delta`)
+//! across a fleet of `repro shard-server` worker processes. Each worker
+//! holds a full replica of the datasets but **owns** only a subset of
+//! the shard-layout row ranges; ownership governs which rows cross the
+//! wire and which worker answers for them, while the forward pass on
+//! each worker stays complete (multi-layer aggregation needs every
+//! row's neighborhood — restricting execution to owned rows would
+//! change the bits, and bitwise conformance with the single-process
+//! coordinator is the contract the eval harness checks).
+//!
+//! # Placement
+//!
+//! The shard universe comes from the workers themselves: `status`
+//! reports each dataset's `shard_bounds`, the deterministic row cuts of
+//! the sticky [`crate::exec::ShardLayout`] — every worker loading the
+//! same data derives the same cuts, so the router learns the partition
+//! without ever shipping a graph. Shards are assigned round-robin over
+//! the workers; on worker death they are re-assigned over the
+//! survivors (any replica can serve any shard, so re-placement is a
+//! routing change plus a catch-up, never a data copy).
+//!
+//! # Replication: the delta log
+//!
+//! A client `mutate` is broadcast to every live worker as an
+//! `apply_delta` log entry tagged with the epoch it must produce
+//! (`head + 1` — epochs are totally ordered and CAS-published, PR 5).
+//! The router answers the client only after **all** live workers ack,
+//! which is what makes reads-after-writes exact: a subsequent read is
+//! labeled `head`, and every worker that can serve it has already
+//! acked `head`. Entries that advanced the epoch are appended to an
+//! in-memory log; per-(worker, dataset) **watermarks** record the last
+//! epoch each worker acked.
+//!
+//! A worker found lagging (a served epoch below `head`, or a survivor
+//! inheriting a dead worker's shards) is caught up by replaying log
+//! entries above its watermark, in order. Replay is idempotent on the
+//! worker side — a worker already at an entry's epoch acks without
+//! re-applying — so the router can always over-replay after a partial
+//! failure.
+//!
+//! # Failover
+//!
+//! A worker is `live` until an I/O failure (EOF, reset, timeout) marks
+//! it dead: reads then heal lazily — the next request re-places the
+//! dead worker's shards onto survivors, replays from their watermarks,
+//! and retries. Workers never rejoin a running router (restart the
+//! router to re-bootstrap). With zero live workers the router stays up
+//! and answers errors — an operator can still reach `status`.
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::JsonValue;
+
+use super::net::{FrameHandler, ListenerShared, WireListener};
+use super::request::RouteKey;
+use super::wire::{self, WireRequest};
+
+/// Router knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// In-flight data-plane requests beyond which new ones are shed
+    /// (same semantics as [`super::NetConfig::high_water`]).
+    pub high_water: usize,
+    /// Per-frame byte cap for client connections.
+    pub max_frame: usize,
+    /// Connect/read timeout for worker calls; a worker silent for this
+    /// long is treated as dead.
+    pub worker_timeout: Duration,
+    /// How long bootstrap keeps retrying the first worker `status`
+    /// (workers may still be binding when the router starts).
+    pub bootstrap_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            high_water: 256,
+            max_frame: wire::MAX_FRAME,
+            worker_timeout: Duration::from_secs(120),
+            bootstrap_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One replication-log entry: the delta text and the epoch it produced.
+struct LogEntry {
+    epoch: u64,
+    ops: Vec<String>,
+}
+
+/// Per-dataset routing + replication state. One mutex per dataset:
+/// reads snapshot under it and scatter without it; mutation and
+/// catch-up (both rare) hold it across their worker I/O, which is what
+/// serializes the log.
+struct DatasetState {
+    nodes: usize,
+    classes: usize,
+    /// Shard-layout row cuts, identical on every worker.
+    bounds: Vec<(usize, usize)>,
+    /// Owning worker index per shard.
+    placement: Vec<usize>,
+    /// Highest epoch the router has served a write for.
+    head: u64,
+    /// Last epoch each worker acked (indexed like `workers`).
+    watermarks: Vec<u64>,
+    log: Vec<LogEntry>,
+}
+
+/// A connection to one shard worker. The stream is created lazily and
+/// re-dialed once per call on failure (a restarted listener or a stale
+/// keep-alive), so transient breakage costs one retry, not a death.
+struct WorkerLink {
+    addr: String,
+    conn: Mutex<Option<TcpStream>>,
+    alive: AtomicBool,
+}
+
+impl WorkerLink {
+    fn dial(addr: &str, timeout: Duration) -> Result<TcpStream> {
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving worker address {addr}"))?
+            .next()
+            .with_context(|| format!("worker address {addr} resolved to nothing"))?;
+        let stream = TcpStream::connect_timeout(&sock, timeout)
+            .with_context(|| format!("connecting to worker {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(timeout));
+        let _ = stream.set_write_timeout(Some(timeout));
+        Ok(stream)
+    }
+
+    /// One request/response round-trip, re-dialing once on failure.
+    fn call(&self, req: &WireRequest, timeout: Duration) -> Result<JsonValue> {
+        let mut guard = self.conn.lock().unwrap();
+        if let Some(stream) = guard.as_mut() {
+            if let Ok(v) = wire::roundtrip(stream, req) {
+                return Ok(v);
+            }
+            *guard = None;
+        }
+        let mut fresh = Self::dial(&self.addr, timeout)?;
+        let v = wire::roundtrip(&mut fresh, req)?;
+        *guard = Some(fresh);
+        Ok(v)
+    }
+}
+
+/// Router counters (surfaced through `status`/`metrics`).
+#[derive(Default)]
+struct RouterCounters {
+    routed: AtomicU64,
+    shed: AtomicU64,
+    errors: AtomicU64,
+    failovers: AtomicU64,
+    replays: AtomicU64,
+}
+
+struct RouterHandler {
+    cfg: RouterConfig,
+    workers: Vec<WorkerLink>,
+    /// Immutable after bootstrap; per-dataset state behind its own lock.
+    datasets: BTreeMap<String, Mutex<DatasetState>>,
+    inflight: AtomicUsize,
+    started: Instant,
+    counters: RouterCounters,
+    shared: Arc<ListenerShared>,
+}
+
+/// The router process's front-end. Client-facing API mirrors
+/// [`super::WireServer`]: bind, serve, drop to shut down.
+pub struct ShardRouter {
+    listener: WireListener,
+    handler: Arc<RouterHandler>,
+}
+
+impl ShardRouter {
+    /// Bind `listen` and serve the shard fleet at `worker_addrs`.
+    /// Bootstraps the dataset/shard universe from the first worker that
+    /// answers `status` (retrying up to
+    /// [`RouterConfig::bootstrap_timeout`]).
+    pub fn bind(worker_addrs: &[String], listen: &str, cfg: RouterConfig) -> Result<ShardRouter> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        Self::start(worker_addrs, listener, cfg)
+    }
+
+    /// Start on an already-bound listener.
+    pub fn start(
+        worker_addrs: &[String],
+        listener: TcpListener,
+        cfg: RouterConfig,
+    ) -> Result<ShardRouter> {
+        if worker_addrs.is_empty() {
+            bail!("router needs at least one worker address");
+        }
+        let workers: Vec<WorkerLink> = worker_addrs
+            .iter()
+            .map(|addr| WorkerLink {
+                addr: addr.clone(),
+                conn: Mutex::new(None),
+                alive: AtomicBool::new(true),
+            })
+            .collect();
+        let datasets = bootstrap(&workers, &cfg)?;
+        let shared = ListenerShared::new(cfg.max_frame);
+        let handler = Arc::new(RouterHandler {
+            cfg,
+            workers,
+            datasets,
+            inflight: AtomicUsize::new(0),
+            started: Instant::now(),
+            counters: RouterCounters::default(),
+            shared: shared.clone(),
+        });
+        let listener = WireListener::start(listener, shared, handler.clone())?;
+        Ok(ShardRouter { listener, handler })
+    }
+
+    /// The bound client-facing address.
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr()
+    }
+
+    /// Live worker count (a health probe for tests and scripts).
+    pub fn workers_live(&self) -> usize {
+        self.handler.live_workers().len()
+    }
+
+    /// Stop accepting, close connections, join threads.
+    pub fn shutdown(self) {
+        // Drop order does the work (see WireListener::Drop).
+    }
+}
+
+/// Learn the dataset/shard universe from the fleet: the first worker to
+/// answer `status` defines it (every worker loads identical data — the
+/// cuts and epochs are deterministic, see module docs). Workers are
+/// assumed epoch-aligned at boot; one that diverged will fail its first
+/// `apply_delta` with an epoch gap and be marked dead.
+fn bootstrap(
+    workers: &[WorkerLink],
+    cfg: &RouterConfig,
+) -> Result<BTreeMap<String, Mutex<DatasetState>>> {
+    let deadline = Instant::now() + cfg.bootstrap_timeout;
+    let status = loop {
+        let mut last_err = None;
+        let mut answered = None;
+        for w in workers {
+            match w.call(&WireRequest::Status { id: 0 }, cfg.worker_timeout) {
+                Ok(v) if wire::response_status(&v) == "ok" => {
+                    answered = Some(v);
+                    break;
+                }
+                Ok(v) => {
+                    last_err = Some(anyhow::anyhow!(
+                        "worker {} status answered {:?}",
+                        w.addr,
+                        wire::response_status(&v)
+                    ))
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if let Some(v) = answered {
+            break v;
+        }
+        if Instant::now() >= deadline {
+            return Err(last_err
+                .unwrap_or_else(|| anyhow::anyhow!("no worker answered status"))
+                .context("router bootstrap timed out"));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    let mut datasets = BTreeMap::new();
+    for d in status.get("datasets").context("worker status: missing datasets")?.as_arr()? {
+        let name = d.get("name").context("status dataset: missing name")?.as_str()?.to_string();
+        let nodes = d.get("nodes").context("status dataset: missing nodes")?.as_usize()?;
+        let classes =
+            d.get("classes").context("status dataset: missing classes")?.as_usize()?;
+        let epoch = d.get("epoch").context("status dataset: missing epoch")?.as_f64()? as u64;
+        let mut bounds = Vec::new();
+        for b in d
+            .get("shard_bounds")
+            .context("status dataset: missing shard_bounds (worker predates shard serving?)")?
+            .as_arr()?
+        {
+            let pair = b.as_arr()?;
+            if pair.len() != 2 {
+                bail!("status dataset {name}: malformed shard bound");
+            }
+            bounds.push((pair[0].as_usize()?, pair[1].as_usize()?));
+        }
+        if bounds.is_empty() {
+            bounds.push((0, nodes));
+        }
+        let placement = (0..bounds.len()).map(|i| i % workers.len()).collect();
+        datasets.insert(
+            name,
+            Mutex::new(DatasetState {
+                nodes,
+                classes,
+                bounds,
+                placement,
+                head: epoch,
+                watermarks: vec![epoch; workers.len()],
+                log: Vec::new(),
+            }),
+        );
+    }
+    if datasets.is_empty() {
+        bail!("worker fleet serves no datasets");
+    }
+    Ok(datasets)
+}
+
+impl FrameHandler for RouterHandler {
+    fn handle(&self, body: &[u8]) -> JsonValue {
+        let text = match std::str::from_utf8(body) {
+            Ok(t) => t,
+            Err(_) => return wire::error_response(0, "frame is not UTF-8"),
+        };
+        let doc = match crate::util::parse_json(text) {
+            Ok(d) => d,
+            Err(e) => return wire::error_response(0, &format!("frame is not JSON: {e:#}")),
+        };
+        let req = match WireRequest::from_json(&doc) {
+            Ok(r) => r,
+            Err(e) => {
+                return wire::error_response(wire::request_id(&doc), &format!("{e:#}"))
+            }
+        };
+        match req {
+            WireRequest::Logits { id, route } => self.route_logits(id, route),
+            WireRequest::Infer { id, route, nodes } => self.route_infer(id, route, nodes),
+            WireRequest::Mutate { id, dataset, ops } => self.route_mutate(id, &dataset, &ops),
+            WireRequest::Status { id } => self.status(id),
+            WireRequest::Metrics { id } => self.metrics(id),
+            WireRequest::Routes { id } => {
+                wire::ok_response(id, vec![("routes", JsonValue::Arr(Vec::new()))])
+            }
+            WireRequest::ShardInfer { id, .. }
+            | WireRequest::ShardLogits { id, .. }
+            | WireRequest::ApplyDelta { id, .. } => wire::error_response(
+                id,
+                "shard-plane requests address workers, not the router",
+            ),
+        }
+    }
+}
+
+/// RAII in-flight slot (same shape as the front-end's admission gate).
+struct Admission<'a>(&'a AtomicUsize);
+
+impl Drop for Admission<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn num(x: u64) -> JsonValue {
+    JsonValue::Num(x as f64)
+}
+
+impl RouterHandler {
+    fn admit(&self) -> Option<Admission<'_>> {
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.cfg.high_water {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.counters.shed.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        Some(Admission(&self.inflight))
+    }
+
+    fn live_workers(&self) -> Vec<usize> {
+        (0..self.workers.len())
+            .filter(|&i| self.workers[i].alive.load(Ordering::Acquire))
+            .collect()
+    }
+
+    /// Mark a worker dead (idempotent; counts a failover once).
+    fn mark_dead(&self, widx: usize) {
+        if self.workers[widx].alive.swap(false, Ordering::AcqRel) {
+            self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Replay log entries above `widx`'s watermark, in order. Holds the
+    /// dataset lock (caller-provided `st`) across the worker I/O —
+    /// replication is serialized per dataset by design.
+    fn catch_up(&self, dataset: &str, st: &mut DatasetState, widx: usize) -> Result<()> {
+        let from = st.watermarks[widx];
+        for entry in &st.log {
+            if entry.epoch <= from {
+                continue;
+            }
+            let req = WireRequest::ApplyDelta {
+                id: 0,
+                dataset: dataset.to_string(),
+                ops: entry.ops.clone(),
+                epoch: entry.epoch,
+            };
+            let resp = self.workers[widx].call(&req, self.cfg.worker_timeout)?;
+            if wire::response_status(&resp) != "ok" {
+                bail!(
+                    "worker {} refused replayed epoch {}: {}",
+                    self.workers[widx].addr,
+                    entry.epoch,
+                    resp.get("error").ok().and_then(|e| e.as_str().ok()).unwrap_or("?")
+                );
+            }
+            st.watermarks[widx] = entry.epoch;
+            self.counters.replays.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Re-place dead workers' shards onto survivors and catch the
+    /// inheritors up to `head`. Loops because a survivor can die during
+    /// its own catch-up; bounded by the worker count.
+    fn heal_placement(&self, dataset: &str, st: &mut DatasetState) -> Result<()> {
+        loop {
+            let live = self.live_workers();
+            if live.is_empty() {
+                bail!("no live shard workers (all {} failed)", self.workers.len());
+            }
+            let mut moved = 0usize;
+            for p in st.placement.iter_mut() {
+                if !self.workers[*p].alive.load(Ordering::Acquire) {
+                    *p = live[moved % live.len()];
+                    moved += 1;
+                }
+            }
+            let mut placed: Vec<usize> = st.placement.clone();
+            placed.sort_unstable();
+            placed.dedup();
+            let mut healthy = true;
+            for widx in placed {
+                if st.watermarks[widx] < st.head && self.catch_up(dataset, st, widx).is_err() {
+                    self.mark_dead(widx);
+                    healthy = false;
+                    break;
+                }
+            }
+            if healthy {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Snapshot a dataset's routing state, healing placement first.
+    fn snapshot(
+        &self,
+        dataset: &str,
+    ) -> Result<(u64, Vec<(usize, usize)>, Vec<usize>, usize, usize)> {
+        let st = self
+            .datasets
+            .get(dataset)
+            .with_context(|| format!("router serves no dataset {dataset:?}"))?;
+        let mut st = st.lock().unwrap();
+        self.heal_placement(dataset, &mut st)?;
+        Ok((st.head, st.bounds.clone(), st.placement.clone(), st.classes, st.nodes))
+    }
+
+    /// A worker served an epoch below the router head: replay it up and
+    /// let the caller retry. An epoch *above* head means something
+    /// mutated a worker behind the router's back — fatal for ordering,
+    /// so the worker is dropped from the fleet.
+    fn reconcile_epoch(&self, dataset: &str, widx: usize, served: u64, head: u64) {
+        if served < head {
+            if let Some(st) = self.datasets.get(dataset) {
+                let mut st = st.lock().unwrap();
+                st.watermarks[widx] = st.watermarks[widx].min(served);
+                if self.catch_up(dataset, &mut st, widx).is_err() {
+                    self.mark_dead(widx);
+                }
+            }
+        } else {
+            self.mark_dead(widx);
+        }
+    }
+
+    /// Scatter `shard_logits` over the placement, gather the row
+    /// slices, and merge by concatenation in row order. Retries after
+    /// healing on worker failure or epoch lag; two healing rounds is
+    /// enough for any single failure plus one racing death.
+    fn route_logits(&self, id: u64, route: RouteKey) -> JsonValue {
+        let Some(_slot) = self.admit() else {
+            return wire::shed_response(id, "router in-flight high-water mark reached");
+        };
+        self.counters.routed.fetch_add(1, Ordering::Relaxed);
+        let mut last_err = String::new();
+        for _attempt in 0..3 {
+            let (head, bounds, placement, classes, nodes) = match self.snapshot(&route.dataset)
+            {
+                Ok(s) => s,
+                Err(e) => return self.fail(id, &format!("{e:#}")),
+            };
+            let mut bits: Vec<JsonValue> = Vec::with_capacity(nodes * classes);
+            let mut ok = true;
+            for (shard, &(row_start, row_end)) in bounds.iter().enumerate() {
+                let widx = placement[shard];
+                let req = WireRequest::ShardLogits {
+                    id,
+                    route: route.clone(),
+                    row_start,
+                    row_end,
+                };
+                let resp = match self.workers[widx].call(&req, self.cfg.worker_timeout) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        last_err = format!("worker {}: {e:#}", self.workers[widx].addr);
+                        self.mark_dead(widx);
+                        ok = false;
+                        break;
+                    }
+                };
+                match wire::response_status(&resp) {
+                    "ok" => {}
+                    "shed" => return wire::shed_response(id, "shard worker shed the slice"),
+                    _ => {
+                        return self.fail(
+                            id,
+                            resp.get("error")
+                                .ok()
+                                .and_then(|e| e.as_str().ok())
+                                .unwrap_or("shard worker error"),
+                        )
+                    }
+                }
+                let served =
+                    resp.get("epoch").ok().and_then(|e| e.as_f64().ok()).unwrap_or(0.0) as u64;
+                if served != head {
+                    last_err = format!(
+                        "worker {} served epoch {served}, router head {head}",
+                        self.workers[widx].addr
+                    );
+                    self.reconcile_epoch(&route.dataset, widx, served, head);
+                    ok = false;
+                    break;
+                }
+                match resp.get("logits_bits").and_then(|b| Ok(b.as_arr()?.to_vec())) {
+                    Ok(slice) => bits.extend(slice),
+                    Err(e) => return self.fail(id, &format!("shard slice: {e:#}")),
+                }
+            }
+            if ok {
+                return wire::ok_response(
+                    id,
+                    vec![
+                        ("rows", num(nodes as u64)),
+                        ("classes", num(classes as u64)),
+                        ("epoch", num(head)),
+                        ("logits_bits", JsonValue::Arr(bits)),
+                    ],
+                );
+            }
+        }
+        self.fail(id, &format!("scatter failed after failover retries: {last_err}"))
+    }
+
+    /// Scatter `infer` nodes to their owning workers, merge predictions
+    /// back into request order.
+    fn route_infer(&self, id: u64, route: RouteKey, nodes: Vec<usize>) -> JsonValue {
+        let Some(_slot) = self.admit() else {
+            return wire::shed_response(id, "router in-flight high-water mark reached");
+        };
+        self.counters.routed.fetch_add(1, Ordering::Relaxed);
+        let started = Instant::now();
+        let mut last_err = String::new();
+        for _attempt in 0..3 {
+            let (head, bounds, placement, _classes, n) = match self.snapshot(&route.dataset) {
+                Ok(s) => s,
+                Err(e) => return self.fail(id, &format!("{e:#}")),
+            };
+            if let Some(&bad) = nodes.iter().find(|&&node| node >= n) {
+                return self.fail(
+                    id,
+                    &format!("node {bad} out of range (dataset {} has {n} nodes)", route.dataset),
+                );
+            }
+            // Group nodes by owning worker (ownership = the shard whose
+            // row range contains the node).
+            let mut by_worker: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for &node in &nodes {
+                let shard = bounds
+                    .iter()
+                    .position(|&(s, e)| node >= s && node < e)
+                    .unwrap_or(bounds.len() - 1);
+                by_worker.entry(placement[shard]).or_default().push(node);
+            }
+            let mut classes_of: BTreeMap<usize, u64> = BTreeMap::new();
+            let mut ok = true;
+            for (&widx, owned) in &by_worker {
+                let req = WireRequest::ShardInfer {
+                    id,
+                    route: route.clone(),
+                    nodes: owned.clone(),
+                };
+                let resp = match self.workers[widx].call(&req, self.cfg.worker_timeout) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        last_err = format!("worker {}: {e:#}", self.workers[widx].addr);
+                        self.mark_dead(widx);
+                        ok = false;
+                        break;
+                    }
+                };
+                match wire::response_status(&resp) {
+                    "ok" => {}
+                    "shed" => return wire::shed_response(id, "shard worker shed the batch"),
+                    _ => {
+                        return self.fail(
+                            id,
+                            resp.get("error")
+                                .ok()
+                                .and_then(|e| e.as_str().ok())
+                                .unwrap_or("shard worker error"),
+                        )
+                    }
+                }
+                let served =
+                    resp.get("epoch").ok().and_then(|e| e.as_f64().ok()).unwrap_or(0.0) as u64;
+                if served != head {
+                    last_err = format!(
+                        "worker {} served epoch {served}, router head {head}",
+                        self.workers[widx].addr
+                    );
+                    self.reconcile_epoch(&route.dataset, widx, served, head);
+                    ok = false;
+                    break;
+                }
+                let preds = match resp.get("predictions").and_then(|p| Ok(p.as_arr()?.to_vec()))
+                {
+                    Ok(p) => p,
+                    Err(e) => return self.fail(id, &format!("shard predictions: {e:#}")),
+                };
+                for p in preds {
+                    let node =
+                        p.get("node").ok().and_then(|x| x.as_usize().ok()).unwrap_or(usize::MAX);
+                    let class =
+                        p.get("class").ok().and_then(|x| x.as_f64().ok()).unwrap_or(-1.0) as u64;
+                    classes_of.insert(node, class);
+                }
+            }
+            if ok {
+                let predictions = nodes
+                    .iter()
+                    .map(|&node| {
+                        JsonValue::Obj(
+                            [
+                                ("node".to_string(), num(node as u64)),
+                                (
+                                    "class".to_string(),
+                                    num(*classes_of.get(&node).unwrap_or(&0)),
+                                ),
+                            ]
+                            .into_iter()
+                            .collect(),
+                        )
+                    })
+                    .collect();
+                return wire::ok_response(
+                    id,
+                    vec![
+                        ("predictions", JsonValue::Arr(predictions)),
+                        ("batch_size", num(by_worker.len() as u64)),
+                        ("latency_us", num(started.elapsed().as_micros() as u64)),
+                        ("epoch", num(head)),
+                    ],
+                );
+            }
+        }
+        self.fail(id, &format!("scatter failed after failover retries: {last_err}"))
+    }
+
+    /// Broadcast a delta to every live worker as an `apply_delta` log
+    /// entry and ack the client only after all live workers acked —
+    /// read-your-writes. Holds the dataset lock across the broadcast:
+    /// writes to one dataset are serialized, exactly like the
+    /// single-process coordinator's delta lock.
+    fn route_mutate(&self, id: u64, dataset: &str, ops: &[String]) -> JsonValue {
+        let Some(st) = self.datasets.get(dataset) else {
+            return self.fail(id, &format!("router serves no dataset {dataset:?}"));
+        };
+        let mut st = st.lock().unwrap();
+        let target = st.head + 1;
+        let mut resulting: Option<u64> = None;
+        let mut acked = 0usize;
+        for widx in 0..self.workers.len() {
+            if !self.workers[widx].alive.load(Ordering::Acquire) {
+                continue;
+            }
+            // A lagging live worker must see older entries first, or
+            // this entry would open a gap on it.
+            if st.watermarks[widx] < st.head && self.catch_up(dataset, &mut st, widx).is_err() {
+                self.mark_dead(widx);
+                continue;
+            }
+            let req = WireRequest::ApplyDelta {
+                id,
+                dataset: dataset.to_string(),
+                ops: ops.to_vec(),
+                epoch: target,
+            };
+            match self.workers[widx].call(&req, self.cfg.worker_timeout) {
+                Ok(resp) if wire::response_status(&resp) == "ok" => {
+                    let e = resp.get("epoch").ok().and_then(|x| x.as_f64().ok()).unwrap_or(0.0)
+                        as u64;
+                    resulting = Some(resulting.map_or(e, |r| r.max(e)));
+                    st.watermarks[widx] = e;
+                    acked += 1;
+                }
+                _ => self.mark_dead(widx),
+            }
+        }
+        let Some(new_head) = resulting else {
+            return self.fail(id, "no live worker acked the delta");
+        };
+        // No-op deltas keep the epoch (the workers' stores decide);
+        // only advancing entries join the replay log.
+        let advanced = new_head > st.head;
+        if advanced {
+            st.log.push(LogEntry { epoch: new_head, ops: ops.to_vec() });
+            st.head = new_head;
+        }
+        wire::ok_response(
+            id,
+            vec![
+                ("epoch", num(new_head)),
+                ("applied", JsonValue::Bool(advanced)),
+                ("workers_acked", num(acked as u64)),
+            ],
+        )
+    }
+
+    fn status(&self, id: u64) -> JsonValue {
+        let datasets = self
+            .datasets
+            .iter()
+            .map(|(name, st)| {
+                let st = st.lock().unwrap();
+                let bounds = st
+                    .bounds
+                    .iter()
+                    .map(|&(s, e)| JsonValue::Arr(vec![num(s as u64), num(e as u64)]))
+                    .collect();
+                let owners = st.placement.iter().map(|&w| num(w as u64)).collect();
+                JsonValue::Obj(
+                    [
+                        ("name".to_string(), JsonValue::Str(name.clone())),
+                        ("nodes".to_string(), num(st.nodes as u64)),
+                        ("classes".to_string(), num(st.classes as u64)),
+                        ("epoch".to_string(), num(st.head)),
+                        ("shard_bounds".to_string(), JsonValue::Arr(bounds)),
+                        ("owners".to_string(), JsonValue::Arr(owners)),
+                        ("log_entries".to_string(), num(st.log.len() as u64)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect();
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| {
+                JsonValue::Obj(
+                    [
+                        ("addr".to_string(), JsonValue::Str(w.addr.clone())),
+                        (
+                            "alive".to_string(),
+                            JsonValue::Bool(w.alive.load(Ordering::Acquire)),
+                        ),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect();
+        wire::ok_response(
+            id,
+            vec![
+                ("role", JsonValue::Str("router".to_string())),
+                ("uptime_us", num(self.started.elapsed().as_micros() as u64)),
+                ("datasets", JsonValue::Arr(datasets)),
+                ("workers", num(self.live_workers().len() as u64)),
+                ("workers_total", num(self.workers.len() as u64)),
+                ("worker_fleet", JsonValue::Arr(workers)),
+                ("inflight", num(self.inflight.load(Ordering::Acquire) as u64)),
+                ("high_water", num(self.cfg.high_water as u64)),
+                ("failovers", num(self.counters.failovers.load(Ordering::Relaxed))),
+                ("replays", num(self.counters.replays.load(Ordering::Relaxed))),
+                ("connections", num(self.shared.open_connections() as u64)),
+                ("accept_errors", num(self.shared.accept_errors())),
+            ],
+        )
+    }
+
+    fn metrics(&self, id: u64) -> JsonValue {
+        wire::ok_response(
+            id,
+            vec![
+                ("routed", num(self.counters.routed.load(Ordering::Relaxed))),
+                ("shed", num(self.counters.shed.load(Ordering::Relaxed))),
+                ("errors", num(self.counters.errors.load(Ordering::Relaxed))),
+                ("failovers", num(self.counters.failovers.load(Ordering::Relaxed))),
+                ("replays", num(self.counters.replays.load(Ordering::Relaxed))),
+                ("workers_live", num(self.live_workers().len() as u64)),
+            ],
+        )
+    }
+
+    fn fail(&self, id: u64, msg: &str) -> JsonValue {
+        self.counters.errors.fetch_add(1, Ordering::Relaxed);
+        wire::error_response(id, msg)
+    }
+}

@@ -409,6 +409,34 @@ impl Coordinator {
         Ok(logits)
     }
 
+    /// [`Coordinator::route_logits`], but also reporting the epoch and
+    /// class count of the dataset snapshot the served plan actually
+    /// bound. This is the **only** truthful way to label logits with an
+    /// epoch: reading `store.dataset(..).epoch` before or after the
+    /// execution races [`Coordinator::apply_delta`] and can tag
+    /// epoch-N+1 logits as epoch N (or vice versa). The wire front-end
+    /// and the shard-server replication path echo this value.
+    pub fn route_logits_versioned(&self, key: &RouteKey) -> Result<(Tensor, u64, usize)> {
+        let (logits, classes, epoch, ..) = execute_route(&self.ctx, key)?;
+        Ok((logits, epoch, classes))
+    }
+
+    /// The dataset's shard-layout row cuts as `(start, end)` pairs —
+    /// `[(0, n)]` when this coordinator is unsharded. Deterministic for
+    /// a given (graph, spec): every process loading the same data
+    /// computes the same cuts, which is what lets a router partition
+    /// shard ownership without shipping the graph (docs/serving.md).
+    pub fn shard_bounds(&self, dataset: &str) -> Result<Vec<(usize, usize)>> {
+        let ds = self.ctx.store.dataset(dataset)?;
+        match &self.ctx.sharding {
+            Some(spec) => {
+                let layout = self.ctx.layout_for(dataset, &ds.csr_gcn, ds.epoch, spec);
+                Ok(layout.bounds().iter().map(|r| (r.start, r.end)).collect())
+            }
+            None => Ok(vec![(0, ds.n)]),
+        }
+    }
+
     pub fn metrics(&self) -> &Metrics {
         &self.ctx.metrics
     }
@@ -701,7 +729,7 @@ fn run_batch(ctx: &WorkerCtx, batch: Batch) {
     }
 
     match execute_route(ctx, &batch.key) {
-        Ok((logits, classes, load_time, exec_time, plan_hit)) => {
+        Ok((logits, classes, _epoch, load_time, exec_time, plan_hit)) => {
             metrics.load_time.record(load_time);
             metrics.exec_time.record(exec_time);
             if plan_hit {
@@ -809,7 +837,9 @@ fn build_plan_current(ctx: &WorkerCtx, key: &PlanKey) -> Result<(ExecPlan, u64)>
 }
 
 /// Forward pass for one route through its (possibly cached) plan.
-/// Returns (logits, classes, load, exec, plan_hit).
+/// Returns (logits, classes, epoch, load, exec, plan_hit) — `epoch` is
+/// the dataset snapshot the whole execution bound, i.e. the only epoch
+/// this result may truthfully be labeled with.
 ///
 /// Cold route: the plan build performs the instrumented feature staging —
 /// the stage the paper's Table 3 measures. With prefetch enabled the
@@ -820,7 +850,7 @@ fn build_plan_current(ctx: &WorkerCtx, key: &PlanKey) -> Result<(ExecPlan, u64)>
 fn execute_route(
     ctx: &WorkerCtx,
     key: &RouteKey,
-) -> Result<(Tensor, usize, Duration, Duration, bool)> {
+) -> Result<(Tensor, usize, u64, Duration, Duration, bool)> {
     // One dataset fetch per execution: the epoch of this snapshot is
     // the epoch the whole batch runs at — plan resolution, shard units,
     // and the forward all read this same `Arc`, so a delta landing
@@ -851,7 +881,7 @@ fn execute_route(
     let fwd = key.to_forward();
     let result = ctx.backend.forward(&ds, &weights, &fwd, feat_tensor, Some(&*plan), &ctx.env)?;
     let load_time = if hit { Duration::ZERO } else { plan.load_stats.total() };
-    Ok((result.logits, ds.classes, load_time, result.stats.total(), hit))
+    Ok((result.logits, ds.classes, ds.epoch, load_time, result.stats.total(), hit))
 }
 
 /// NaN-safe per-node argmax (deterministic: NaN loses, ties break low,

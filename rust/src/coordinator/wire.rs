@@ -99,6 +99,24 @@ pub enum WireRequest {
     /// Apply a live edge delta (`ops` are `graph::GraphDelta` text
     /// lines: `+ row col w` / `- row col` / `= row col w`).
     Mutate { id: u64, dataset: String, ops: Vec<String> },
+    /// Shard-serving data plane: classify `nodes` (all owned by the
+    /// addressed worker's row ranges) and report the epoch the served
+    /// plan bound. Unlike `Infer` this skips the batcher — the router
+    /// already batched across clients; a second coalescing stage would
+    /// only add latency.
+    ShardInfer { id: u64, route: RouteKey, nodes: Vec<usize> },
+    /// Shard-serving data plane: execute a route and return the
+    /// `[row_start, row_end)` slice of the logits matrix as
+    /// `logits_bits`, plus the bound epoch. The router scatter/gathers
+    /// these slices into the row-concatenation merge; only owned rows
+    /// cross the wire.
+    ShardLogits { id: u64, route: RouteKey, row_start: usize, row_end: usize },
+    /// Replication log entry: apply `ops` expected to produce `epoch`.
+    /// A worker already at (or past) `epoch` acks without re-applying
+    /// (idempotent replay); a worker more than one epoch behind
+    /// reports an epoch gap so the router replays earlier entries
+    /// first. Control plane — never shed.
+    ApplyDelta { id: u64, dataset: String, ops: Vec<String>, epoch: u64 },
     /// Ops surface: server identity, datasets, admission state.
     Status { id: u64 },
     /// Ops surface: full metrics snapshot.
@@ -153,6 +171,9 @@ impl WireRequest {
             WireRequest::Infer { id, .. }
             | WireRequest::Logits { id, .. }
             | WireRequest::Mutate { id, .. }
+            | WireRequest::ShardInfer { id, .. }
+            | WireRequest::ShardLogits { id, .. }
+            | WireRequest::ApplyDelta { id, .. }
             | WireRequest::Status { id }
             | WireRequest::Metrics { id }
             | WireRequest::Routes { id } => *id,
@@ -187,6 +208,33 @@ impl WireRequest {
                     JsonValue::Arr(ops.iter().map(|o| JsonValue::Str(o.clone())).collect()),
                 );
                 "mutate"
+            }
+            WireRequest::ShardInfer { route, nodes, .. } => {
+                if let JsonValue::Obj(route_map) = route_to_json(route) {
+                    map.extend(route_map);
+                }
+                map.insert(
+                    "nodes".to_string(),
+                    JsonValue::Arr(nodes.iter().map(|&n| num(n as u64)).collect()),
+                );
+                "shard_infer"
+            }
+            WireRequest::ShardLogits { route, row_start, row_end, .. } => {
+                if let JsonValue::Obj(route_map) = route_to_json(route) {
+                    map.extend(route_map);
+                }
+                map.insert("row_start".to_string(), num(*row_start as u64));
+                map.insert("row_end".to_string(), num(*row_end as u64));
+                "shard_logits"
+            }
+            WireRequest::ApplyDelta { dataset, ops, epoch, .. } => {
+                map.insert("dataset".to_string(), JsonValue::Str(dataset.clone()));
+                map.insert(
+                    "ops".to_string(),
+                    JsonValue::Arr(ops.iter().map(|o| JsonValue::Str(o.clone())).collect()),
+                );
+                map.insert("epoch".to_string(), num(*epoch));
+                "apply_delta"
             }
             WireRequest::Status { .. } => "status",
             WireRequest::Metrics { .. } => "metrics",
@@ -232,6 +280,53 @@ impl WireRequest {
                     .collect::<Result<Vec<_>>>()
                     .context("mutate: ops must be strings")?;
                 Ok(WireRequest::Mutate { id, dataset, ops })
+            }
+            "shard_infer" => {
+                let route = route_from_json(v)?;
+                let nodes = v
+                    .get("nodes")
+                    .context("shard_infer: missing nodes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|n| n.as_usize())
+                    .collect::<Result<Vec<_>>>()
+                    .context("shard_infer: nodes must be integers")?;
+                Ok(WireRequest::ShardInfer { id, route, nodes })
+            }
+            "shard_logits" => {
+                let route = route_from_json(v)?;
+                let row_start = v
+                    .get("row_start")
+                    .context("shard_logits: missing row_start")?
+                    .as_usize()
+                    .context("shard_logits: row_start must be an integer")?;
+                let row_end = v
+                    .get("row_end")
+                    .context("shard_logits: missing row_end")?
+                    .as_usize()
+                    .context("shard_logits: row_end must be an integer")?;
+                Ok(WireRequest::ShardLogits { id, route, row_start, row_end })
+            }
+            "apply_delta" => {
+                let dataset = v
+                    .get("dataset")
+                    .context("apply_delta: missing dataset")?
+                    .as_str()?
+                    .to_string();
+                let ops = v
+                    .get("ops")
+                    .context("apply_delta: missing ops")?
+                    .as_arr()?
+                    .iter()
+                    .map(|o| o.as_str().map(str::to_string))
+                    .collect::<Result<Vec<_>>>()
+                    .context("apply_delta: ops must be strings")?;
+                let epoch = v
+                    .get("epoch")
+                    .context("apply_delta: missing epoch")?
+                    .as_f64()
+                    .context("apply_delta: epoch must be a number")? as u64;
+                Ok(WireRequest::ApplyDelta { id, dataset, ops, epoch })
             }
             "status" => Ok(WireRequest::Status { id }),
             "metrics" => Ok(WireRequest::Metrics { id }),
@@ -338,6 +433,14 @@ mod tests {
                 id: 9,
                 dataset: "evalpow".into(),
                 ops: vec!["+ 0 159 0.01".into(), "- 1 2".into()],
+            },
+            WireRequest::ShardInfer { id: 10, route: route(), nodes: vec![4, 5] },
+            WireRequest::ShardLogits { id: 11, route: route(), row_start: 40, row_end: 80 },
+            WireRequest::ApplyDelta {
+                id: 12,
+                dataset: "evalpow".into(),
+                ops: vec!["= 0 1 0.25".into()],
+                epoch: 3,
             },
             WireRequest::Status { id: 1 },
             WireRequest::Metrics { id: 2 },

@@ -11,12 +11,15 @@
 //! a batch worker does.
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::coordinator::wire::{self, WireRequest};
 use crate::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, ModelStore, RouteKey};
 use crate::exec::{ShardLayout, ShardSampling, ShardedPlan};
 use crate::experiments::Table;
@@ -473,6 +476,12 @@ pub fn run_eval(dir: &Path, quick: bool) -> Result<EvalReport> {
         push_mutation_checks(&mut report, dir, name, quick)?;
     }
 
+    // Multi-process topology: the conformance routes served through a
+    // router + two shard-server processes over loopback, bitwise vs a
+    // single-process coordinator — including after mid-serving deltas
+    // and after a worker death (re-placement + replication-log replay).
+    push_distributed_checks(&mut report, dir, &names, quick)?;
+
     for (_, c) in coords {
         c.shutdown();
     }
@@ -630,6 +639,337 @@ fn push_mutation_checks(
         });
     }
     warm.shutdown();
+    Ok(())
+}
+
+/// Locate the `repro` binary for the multi-process topology checks:
+/// `AES_SPMM_REPRO_BIN` wins, then the current executable when the
+/// harness runs inside `repro eval` itself, then a `repro` sibling of
+/// the current executable (covers `target/<profile>/deps/<test>-<hash>`
+/// integration-test binaries, whose grandparent dir holds the bin).
+fn find_repro_binary() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("AES_SPMM_REPRO_BIN") {
+        let p = PathBuf::from(p);
+        if p.is_file() {
+            return Some(p);
+        }
+    }
+    let exe = std::env::current_exe().ok()?;
+    if exe.file_stem().is_some_and(|s| s == "repro") {
+        return Some(exe);
+    }
+    let mut dir = exe.parent()?;
+    for _ in 0..2 {
+        let cand = dir.join("repro");
+        if cand.is_file() {
+            return Some(cand);
+        }
+        dir = dir.parent()?;
+    }
+    None
+}
+
+/// Child processes of the distributed pass; killed on drop so a failing
+/// check (or any `?` on the way) never leaks servers past the harness.
+struct Fleet {
+    children: Vec<Child>,
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Wait for a serving process to publish its resolved ephemeral port
+/// (`--port-file` is written only after the bind succeeds), failing
+/// fast if the child exits first.
+fn poll_port_file(path: &Path, child: &mut Child) -> Result<String> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let s = s.trim();
+            if !s.is_empty() {
+                return Ok(s.to_string());
+            }
+        }
+        if let Some(status) = child.try_wait().context("polling serving child")? {
+            bail!("serving process exited ({status}) before writing {}", path.display());
+        }
+        if Instant::now() >= deadline {
+            bail!("timed out waiting for port file {}", path.display());
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// A delta's ops in the wire `mutate` line format (`docs/mutation.md`) —
+/// `{}` on `f32` prints the shortest round-tripping decimal, so the
+/// worker-side [`GraphDelta::parse`] recovers the exact weights.
+fn delta_lines(delta: &GraphDelta) -> Vec<String> {
+    delta
+        .ops
+        .iter()
+        .map(|op| match *op {
+            EdgeOp::Insert { row, col, weight } => format!("+ {row} {col} {weight}"),
+            EdgeOp::Delete { row, col } => format!("- {row} {col}"),
+            EdgeOp::Reweight { row, col, weight } => format!("= {row} {col} {weight}"),
+        })
+        .collect()
+}
+
+/// Decode a wire `logits` response's `logits_bits` array.
+fn response_bits(resp: &JsonValue) -> Result<Vec<u32>> {
+    resp.get("logits_bits")?
+        .as_arr()?
+        .iter()
+        .map(|v| Ok(v.as_f64()? as u32))
+        .collect()
+}
+
+/// Bitwise comparison over raw `f32::to_bits` words (the wire carries
+/// bits, not floats — decoding to `f32` first would conflate NaN
+/// payloads).
+fn bits_diff(a: &[u32], b: &[u32]) -> (bool, usize) {
+    if a.len() != b.len() {
+        return (false, a.len().max(b.len()));
+    }
+    let differing = a.iter().zip(b.iter()).filter(|(x, y)| x != y).count();
+    (differing == 0, differing)
+}
+
+/// The tentpole acceptance pass: serve conformance routes through a
+/// **3-process topology** — a router scatter/gathering over two
+/// `shard-server` worker processes on loopback — and hold the result
+/// bitwise-equal to a single-process coordinator over the same files.
+/// Three phases:
+///
+/// 1. cold reads across the route shapes (scatter → row-concat merge);
+/// 2. a mid-serving delta through the router's replication log (every
+///    worker acks before the client does → read-your-writes), reads
+///    re-compared against a cold coordinator with the delta applied;
+/// 3. a worker kill: the router re-places the dead worker's row ranges
+///    on the survivor and replays the delta log from its watermark —
+///    a subsequent mutate and all reads must still be bitwise.
+///
+/// Runs only when the `repro` binary is discoverable
+/// ([`find_repro_binary`]); otherwise records an explicitly-labelled
+/// skip so the report never silently loses the coverage.
+fn push_distributed_checks(
+    report: &mut EvalReport,
+    dir: &Path,
+    names: &[String],
+    quick: bool,
+) -> Result<()> {
+    let Some(bin) = find_repro_binary() else {
+        report.checks.push(EvalCheck {
+            name: "distributed topology (router + 2 shard servers)".to_string(),
+            pass: true,
+            detail: "skipped: repro binary not found (set AES_SPMM_REPRO_BIN to run the \
+                     3-process conformance pass)"
+                .to_string(),
+        });
+        return Ok(());
+    };
+
+    let base = dir.join("dist");
+    std::fs::create_dir_all(&base)
+        .with_context(|| format!("creating {}", base.display()))?;
+    let mut fleet = Fleet { children: Vec::new() };
+
+    // Two shard-server workers, each regenerating the (deterministic)
+    // eval datasets into a private dir — identical bytes to `dir`, no
+    // write races between processes.
+    let mut port_files = Vec::new();
+    for i in 1..=2usize {
+        let port_file = base.join(format!("worker{i}.port"));
+        let _ = std::fs::remove_file(&port_file);
+        let child = Command::new(&bin)
+            .args(["shard-server", "--listen", "127.0.0.1:0", "--max-seconds", "600"])
+            .arg("--eval-data")
+            .arg(base.join(format!("worker{i}-data")))
+            .arg("--port-file")
+            .arg(&port_file)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning shard-server {i} ({})", bin.display()))?;
+        fleet.children.push(child);
+        port_files.push(port_file);
+    }
+    let mut worker_addrs = Vec::new();
+    for (i, pf) in port_files.iter().enumerate() {
+        worker_addrs.push(poll_port_file(pf, &mut fleet.children[i])?);
+    }
+
+    let router_port = base.join("router.port");
+    let _ = std::fs::remove_file(&router_port);
+    let child = Command::new(&bin)
+        .args(["router", "--listen", "127.0.0.1:0", "--max-seconds", "600"])
+        .arg("--workers")
+        .arg(worker_addrs.join(","))
+        .arg("--port-file")
+        .arg(&router_port)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning router ({})", bin.display()))?;
+    fleet.children.push(child);
+    let router_addr = poll_port_file(&router_port, fleet.children.last_mut().unwrap())?;
+
+    let mut conn = TcpStream::connect(&router_addr)
+        .with_context(|| format!("connecting to router at {router_addr}"))?;
+    conn.set_read_timeout(Some(Duration::from_secs(120)))?;
+
+    // The single-process oracle: same files, same serving stack, one
+    // process. The grid's own bitwise invariants (sharded == unsharded,
+    // streamed == eager) make the exact config immaterial.
+    let models = vec!["gcn".to_string()];
+    let cold_store = Arc::new(ModelStore::load(dir, names, &models)?);
+    let cold = Coordinator::start_with(
+        Backend::Host,
+        cold_store.clone(),
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+    );
+    let coord_bits = |key: &RouteKey| -> Result<Vec<u32>> {
+        Ok(cold.route_logits(key)?.as_f32()?.iter().map(|v| v.to_bits()).collect())
+    };
+
+    let check_names: &[String] = if quick { &names[..1] } else { names };
+    let shapes = [
+        (None, Strategy::Aes, Precision::F32),
+        (Some(8), Strategy::Aes, Precision::U8Device),
+    ];
+    let route_key = |name: &str, shape: (Option<usize>, Strategy, Precision)| RouteKey {
+        model: "gcn".to_string(),
+        dataset: name.to_string(),
+        width: shape.0,
+        strategy: shape.1,
+        precision: shape.2,
+    };
+    // Takes `report`/`id` as parameters (not captures) so the phases
+    // between rounds can push their own checks without fighting the
+    // closure's borrows.
+    let compare_round = |conn: &mut TcpStream,
+                         report: &mut EvalReport,
+                         id: &mut u64,
+                         phase: &str,
+                         want_epoch: u64|
+     -> Result<()> {
+        for name in check_names {
+            for &shape in &shapes {
+                let key = route_key(name, shape);
+                *id += 1;
+                let resp =
+                    wire::roundtrip(conn, &WireRequest::Logits { id: *id, route: key.clone() })
+                        .with_context(|| format!("router logits ({phase}, {})", key.label()))?;
+                let (pass, detail) = if wire::response_status(&resp) != "ok" {
+                    (false, format!("router answered {}", resp.to_string()))
+                } else {
+                    let got = response_bits(&resp)?;
+                    let want = coord_bits(&key)?;
+                    let (equal, differing) = bits_diff(&got, &want);
+                    let epoch = resp.get("epoch")?.as_usize()? as u64;
+                    // Non-mutated datasets stay at epoch 0 regardless
+                    // of the phase's head on the mutated one.
+                    let expect = if name == &check_names[0] { want_epoch } else { 0 };
+                    if epoch != expect {
+                        (false, format!("router served epoch {epoch}, expected {expect}"))
+                    } else {
+                        (
+                            equal,
+                            format!(
+                                "{differing} logit(s) differ vs the single-process \
+                                 coordinator (epoch {epoch})"
+                            ),
+                        )
+                    }
+                };
+                report.checks.push(EvalCheck {
+                    name: format!(
+                        "distributed == single-process bitwise ({phase}, {name}/{})",
+                        shape_label(key.width, key.strategy)
+                    ),
+                    pass,
+                    detail,
+                });
+            }
+        }
+        Ok(())
+    };
+
+    // Phase 1: cold reads through scatter/gather.
+    let mut id = 0u64;
+    compare_round(&mut conn, report, &mut id, "boot", 0)?;
+
+    // Phase 2: a mid-serving delta through the replication log. The
+    // router acks only after every live worker acks, so the very next
+    // read must already serve the new epoch (read-your-writes).
+    let target = &check_names[0];
+    let ds = cold_store.dataset(target)?;
+    let deltas = eval_deltas(&ds);
+    id += 1;
+    let resp = wire::roundtrip(
+        &mut conn,
+        &WireRequest::Mutate {
+            id,
+            dataset: target.clone(),
+            ops: delta_lines(&deltas[0]),
+        },
+    )
+    .context("router mutate (delta 1)")?;
+    let mutate_ok = wire::response_status(&resp) == "ok"
+        && resp.get("epoch").and_then(|e| e.as_usize()).unwrap_or(0) == 1;
+    report.checks.push(EvalCheck {
+        name: "distributed mutate replicates (delta 1)".to_string(),
+        pass: mutate_ok,
+        detail: format!("router answered {}", resp.to_string()),
+    });
+    cold.apply_delta(target, &deltas[0])?;
+    compare_round(&mut conn, report, &mut id, "post-delta", 1)?;
+
+    // Phase 3: worker death. Kill worker 1; the router must mark it
+    // dead on the next failed call, re-place its row ranges on the
+    // survivor, and catch the inheritor up from the delta log — then
+    // a further mutate and every read stay bitwise.
+    fleet.children[0].kill().context("killing shard worker 1")?;
+    let _ = fleet.children[0].wait();
+    id += 1;
+    let resp = wire::roundtrip(
+        &mut conn,
+        &WireRequest::Mutate {
+            id,
+            dataset: target.clone(),
+            ops: delta_lines(&deltas[1]),
+        },
+    )
+    .context("router mutate (delta 2, after worker kill)")?;
+    let mutate_ok = wire::response_status(&resp) == "ok"
+        && resp.get("epoch").and_then(|e| e.as_usize()).unwrap_or(0) == 2;
+    report.checks.push(EvalCheck {
+        name: "distributed mutate survives worker death (delta 2)".to_string(),
+        pass: mutate_ok,
+        detail: format!("router answered {}", resp.to_string()),
+    });
+    cold.apply_delta(target, &deltas[1])?;
+    compare_round(&mut conn, report, &mut id, "post-failover", 2)?;
+
+    // The failover is visible in the router's ops surface.
+    id += 1;
+    let resp = wire::roundtrip(&mut conn, &WireRequest::Status { id })
+        .context("router status after failover")?;
+    let live = resp.get("workers").and_then(|w| w.as_usize()).unwrap_or(usize::MAX);
+    report.checks.push(EvalCheck {
+        name: "router reports the dead worker".to_string(),
+        pass: wire::response_status(&resp) == "ok" && live == 1,
+        detail: format!("status reports {live} live worker(s), want 1"),
+    });
+
+    cold.shutdown();
+    drop(fleet);
     Ok(())
 }
 

@@ -98,6 +98,14 @@ fn digest(name: &str, samples: &[(Duration, u8)], window: Duration) -> RouteRepo
 impl LoadReport {
     /// The BENCH_serving.json document (schema: docs/serving.md).
     pub fn to_json(&self) -> JsonValue {
+        self.to_json_prefixed(None)
+    }
+
+    /// [`LoadReport::to_json`] with every workload name prefixed
+    /// (`"sharded-router aggregate"`, …) so two topologies' workloads
+    /// can coexist in one trajectory file without name collisions —
+    /// bench_diff matches workloads by name.
+    pub fn to_json_prefixed(&self, prefix: Option<&str>) -> JsonValue {
         fn case_ns(name: &str, d: Duration) -> JsonValue {
             JsonValue::Obj(
                 [
@@ -108,7 +116,11 @@ impl LoadReport {
                 .collect(),
             )
         }
-        fn workload(r: &RouteReport, with_throughput_case: bool) -> JsonValue {
+        fn workload(r: &RouteReport, prefix: Option<&str>, with_throughput_case: bool) -> JsonValue {
+            let name = match prefix {
+                Some(p) => format!("{p} {}", r.name),
+                None => r.name.clone(),
+            };
             let mut cases = vec![
                 case_ns("latency p50", r.p50),
                 case_ns("latency p99", r.p99),
@@ -127,7 +139,7 @@ impl LoadReport {
                 ));
             }
             let map: BTreeMap<String, JsonValue> = [
-                ("name".to_string(), JsonValue::Str(r.name.clone())),
+                ("name".to_string(), JsonValue::Str(name)),
                 ("completed".to_string(), JsonValue::Num(r.completed as f64)),
                 ("shed".to_string(), JsonValue::Num(r.shed as f64)),
                 ("errors".to_string(), JsonValue::Num(r.errors as f64)),
@@ -138,8 +150,8 @@ impl LoadReport {
             .collect();
             JsonValue::Obj(map)
         }
-        let mut workloads = vec![workload(&self.aggregate, true)];
-        workloads.extend(self.routes.iter().map(|r| workload(r, false)));
+        let mut workloads = vec![workload(&self.aggregate, prefix, true)];
+        workloads.extend(self.routes.iter().map(|r| workload(r, prefix, false)));
         JsonValue::Obj(
             [
                 ("bench".to_string(), JsonValue::Str("serving".to_string())),
@@ -197,6 +209,44 @@ impl LoadReport {
             println!("mutations applied: {}", self.mutations);
         }
     }
+}
+
+/// Merge a fresh BENCH_serving.json document into an existing one:
+/// workloads sharing a name are replaced by the fresh run, new names
+/// are appended, and everything else in `existing` survives. This is
+/// how one trajectory file carries both the single-server and the
+/// sharded-router loadgen passes — bench_diff matches workloads by
+/// name, so each topology gates independently.
+pub fn merge_bench_json(existing: &str, fresh: &JsonValue) -> Result<JsonValue> {
+    let base = crate::util::parse_json(existing).context("parsing existing bench JSON")?;
+    let JsonValue::Obj(mut base_map) = base else {
+        bail!("existing bench JSON is not an object");
+    };
+    let bench = base_map.get("bench").and_then(|b| b.as_str().ok()).unwrap_or("");
+    if bench != "serving" {
+        bail!("existing bench JSON is a {bench:?} bench, not serving");
+    }
+    let mut merged = match base_map.remove("workloads") {
+        Some(JsonValue::Arr(w)) => w,
+        _ => Vec::new(),
+    };
+    let fresh_workloads = fresh
+        .get("workloads")
+        .context("fresh bench JSON: missing workloads")?
+        .as_arr()?
+        .to_vec();
+    for w in fresh_workloads {
+        let name = w.get("name").ok().and_then(|n| n.as_str().ok()).unwrap_or("").to_string();
+        if let Some(slot) = merged.iter_mut().find(|m| {
+            m.get("name").ok().and_then(|n| n.as_str().ok()).unwrap_or("") == name
+        }) {
+            *slot = w;
+        } else {
+            merged.push(w);
+        }
+    }
+    base_map.insert("workloads".to_string(), JsonValue::Arr(merged));
+    Ok(JsonValue::Obj(base_map))
 }
 
 /// Ask the server which datasets it serves (name → node count).
@@ -546,6 +596,43 @@ mod tests {
         // Round-trips through the JSON codec.
         let text = doc.to_string();
         assert!(crate::util::parse_json(&text).is_ok());
+    }
+
+    #[test]
+    fn prefixed_report_renames_every_workload() {
+        let doc = sample_report().to_json_prefixed(Some("sharded-router"));
+        let workloads = doc.get("workloads").unwrap().as_arr().unwrap();
+        assert_eq!(
+            workloads[0].get("name").unwrap().as_str().unwrap(),
+            "sharded-router aggregate"
+        );
+        for w in workloads {
+            assert!(w.get("name").unwrap().as_str().unwrap().starts_with("sharded-router "));
+        }
+    }
+
+    #[test]
+    fn merge_appends_new_workloads_and_replaces_same_name_runs() {
+        let base = sample_report().to_json();
+        let sharded = sample_report().to_json_prefixed(Some("sharded-router"));
+        let merged = merge_bench_json(&base.to_string(), &sharded).unwrap();
+        let names: Vec<String> = merged
+            .get("workloads")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|w| w.get("name").unwrap().as_str().unwrap().to_string())
+            .collect();
+        // Single-server workloads survive, prefixed ones join them.
+        assert_eq!(names.len(), 4);
+        assert!(names.contains(&"aggregate".to_string()));
+        assert!(names.contains(&"sharded-router aggregate".to_string()));
+        // Re-merging the same prefixed run replaces, never duplicates.
+        let again = merge_bench_json(&merged.to_string(), &sharded).unwrap();
+        assert_eq!(again.get("workloads").unwrap().as_arr().unwrap().len(), 4);
+        // A non-serving base is refused rather than silently mangled.
+        assert!(merge_bench_json(r#"{"bench":"spmm","workloads":[]}"#, &sharded).is_err());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //!                 [--strategy afs|sfs|aes] [--fp32]         one forward pass + accuracy
 //! repro serve     [--requests N] [--workers K]              run the coordinator demo load
 //! repro serve     --listen ADDR [--eval-data DIR]           TCP wire front-end (docs/serving.md)
+//! repro shard-server --listen ADDR [--eval-data DIR]        shard worker (serve --listen + sharding on)
+//! repro router    --listen ADDR --workers A1,A2,...         scatter/gather router over shard workers
 //! repro loadgen   --addr HOST:PORT [--scenario FILE]        closed-loop load harness
 //! repro mutate    --dataset D --edges FILE                  apply a live edge delta, re-serve
 //! repro experiment <fig2|fig3|fig5|fig6|fig7|tab1|tab3|all> [--quick]
@@ -105,7 +107,12 @@ USAGE:
   repro serve      --listen ADDR [--eval-data DIR] [--port-file PATH] [--high-water H]
                    [--max-seconds S] [--workers K] [--queue Q] [--batch B] [--prefetch P]
                    [--host] [--shards N] [--shard-budget MIB] [--artifacts DIR]
+  repro shard-server --listen ADDR [--eval-data DIR] [--port-file PATH] [--high-water H]
+                   [--max-seconds S] [--shards N] [--shard-budget MIB] [serve --listen flags]
+  repro router     --listen ADDR --workers HOST:PORT,HOST:PORT,... [--port-file PATH]
+                   [--high-water H] [--max-seconds S]
   repro loadgen    --addr HOST:PORT [--scenario FILE] [--quick] [--json [PATH]]
+                   [--prefix NAME] [--append]
   repro mutate     --dataset NAME --edges FILE [--width W] [--strategy afs|sfs|aes]
                    [--shards N] [--shard-budget MIB] [--artifacts DIR]
   repro experiment fig2|fig3|fig5|fig6|fig7|tab1|tab3|all [--quick] [--artifacts DIR]
@@ -145,7 +152,19 @@ bound address (bind :0 for an ephemeral port); --max-seconds self-exits
 --scenario FILE (or the built-in default; --quick shrinks it), prints
 per-route p50/p99/p999 + throughput + shed counts, and with --json
 writes BENCH_serving.json (default path) for the tools/bench_diff.rs
-serving gate.
+serving gate; --prefix NAME prefixes every workload name and --append
+merges the new workloads into an existing --json file instead of
+overwriting it (how CI lands the sharded-router pass next to the
+single-server one).
+`shard-server` is `serve --listen` with row-sharding on by default
+(3 shards unless --shards/--shard-budget say otherwise): a worker
+process that owns shard row ranges behind a `router`. `router` serves
+the ordinary client protocol by scatter/gathering shard_logits/
+shard_infer over --workers, broadcasts mutations to every worker as an
+epoch-tagged replication log (read-your-writes: the client ack waits
+for every live worker), and on worker death re-places the dead
+worker's shards onto survivors and replays the log from their epoch
+watermarks (docs/serving.md).
 `mutate` applies a live edge delta (insert/delete/reweight lines, see
 docs/mutation.md for the file format) through the serving coordinator:
 the graph advances one epoch, only the shard units of touched shards
@@ -160,12 +179,14 @@ fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..]);
+    let mut args = Args::parse(&argv[1..]);
     let artifacts = args.get_or("artifacts", "artifacts");
     match cmd.as_str() {
         "inspect" => cmd_inspect(&artifacts),
         "infer" => cmd_infer(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
+        "shard-server" => cmd_shard_server(&artifacts, &mut args),
+        "router" => cmd_router(&args),
         "loadgen" => cmd_loadgen(&args),
         "mutate" => cmd_mutate(&artifacts, &args),
         "experiment" => cmd_experiment(&artifacts, &args),
@@ -541,10 +562,67 @@ fn cmd_serve_listen(artifacts: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro shard-server` — a shard worker process: `serve --listen` with
+/// row-sharding on by default, so `status` advertises multiple shard
+/// row ranges for a router to place (docs/serving.md).
+fn cmd_shard_server(artifacts: &str, args: &mut Args) -> Result<()> {
+    if !args.has("listen") {
+        bail!("shard-server requires --listen HOST:PORT");
+    }
+    if !args.has("shards") && !args.has("shard-budget") {
+        args.flags.insert("shards".to_string(), "3".to_string());
+    }
+    cmd_serve_listen(artifacts, args)
+}
+
+/// `repro router` — the scatter/gather front of a shard-server fleet:
+/// clients speak the ordinary wire protocol to it; it serves reads by
+/// row-concatenating shard slices from the owning workers and writes by
+/// broadcasting the epoch-tagged replication log (docs/serving.md).
+fn cmd_router(args: &Args) -> Result<()> {
+    use aes_spmm::coordinator::{RouterConfig, ShardRouter};
+
+    let listen = args.get("listen").context("--listen needs HOST:PORT")?.to_string();
+    if listen == "true" {
+        bail!("--listen needs HOST:PORT (e.g. 127.0.0.1:0 for an ephemeral port)");
+    }
+    let workers_arg = args.get("workers").context("--workers HOST:PORT,... required")?;
+    let worker_addrs: Vec<String> = workers_arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if worker_addrs.is_empty() {
+        bail!("--workers needs at least one HOST:PORT");
+    }
+    let cfg = RouterConfig {
+        high_water: args.usize_or("high-water", 256)?,
+        ..RouterConfig::default()
+    };
+    let router = ShardRouter::bind(&worker_addrs, &listen, cfg)?;
+    let addr = router.local_addr();
+    println!("router listening on {addr} over {} worker(s)", worker_addrs.len());
+    if let Some(path) = args.get("port-file") {
+        std::fs::write(path, addr.to_string())
+            .with_context(|| format!("writing --port-file {path}"))?;
+    }
+    let max_seconds = args.usize_or("max-seconds", 0)?;
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if max_seconds > 0 && t0.elapsed().as_secs() >= max_seconds as u64 {
+            println!("--max-seconds {max_seconds} reached; shutting down");
+            break;
+        }
+    }
+    router.shutdown();
+    Ok(())
+}
+
 /// `repro loadgen` — offer scenario traffic to a live wire server and
 /// report client-observed quantiles (docs/serving.md).
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    use aes_spmm::loadgen::{run_loadgen, Scenario};
+    use aes_spmm::loadgen::{merge_bench_json, run_loadgen, Scenario};
 
     let addr = args.get("addr").context("--addr HOST:PORT required")?;
     let mut scenario = match args.get("scenario") {
@@ -561,6 +639,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if let Some(c) = args.get("connections") {
         scenario.connections = c.parse().context("--connections must be an integer")?;
     }
+    let prefix = args.get("prefix").filter(|p| *p != "true").map(str::to_string);
     let report = run_loadgen(addr, &scenario)?;
     report.print();
     if args.has("json") {
@@ -569,7 +648,20 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             Some("true") | None => "BENCH_serving.json".to_string(),
             Some(p) => p.to_string(),
         };
-        std::fs::write(&path, report.to_json().to_string())
+        let fresh = report.to_json_prefixed(prefix.as_deref());
+        let doc = if args.has("append") {
+            match std::fs::read_to_string(&path) {
+                // Merge into the existing trajectory file (how the
+                // sharded-router pass lands next to the single-server
+                // one in CI) — a missing file degrades to a plain write.
+                Ok(existing) => merge_bench_json(&existing, &fresh)
+                    .with_context(|| format!("appending workloads to {path}"))?,
+                Err(_) => fresh,
+            }
+        } else {
+            fresh
+        };
+        std::fs::write(&path, doc.to_string())
             .with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
     }

@@ -19,9 +19,21 @@
 //! * protocol robustness: malformed frames answered with `"error"`
 //!   responses on a surviving connection, oversize frames dropping
 //!   only that connection.
+//!
+//! ISSUE 9 additions:
+//! * connection churn leaves no accumulated handles (the front-end
+//!   reaps finished connection threads instead of retaining every
+//!   JoinHandle + stream clone forever);
+//! * the epoch label on a logits response always matches the served
+//!   bits, even with a mutate racing the request;
+//! * multi-process sharded serving: a router process scatter/gathering
+//!   over two `shard-server` worker processes answers bitwise-identical
+//!   to a single-process coordinator — including after a replicated
+//!   delta and after a worker is killed (re-placement + replay).
 
 use std::net::TcpStream;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -393,4 +405,293 @@ fn malformed_frames_get_errors_and_oversize_drops_the_connection() {
     let resp = ask(&mut fresh, &WireRequest::Status { id: 7 });
     assert_eq!(wire::response_status(&resp), "ok");
     s.server.shutdown();
+}
+
+/// Connection-lifecycle hygiene: the accept loop used to retain a
+/// JoinHandle plus a cloned TcpStream for every connection ever
+/// accepted — a slow fd/thread leak under churn. Finished connection
+/// threads must be reaped, so sequential connect/request/disconnect
+/// cycles leave the tracked-connection count bounded (and visible in
+/// `status`).
+#[test]
+fn connection_churn_does_not_accumulate_handles() {
+    let s = boot("churn", NetConfig::default(), BatcherConfig::default());
+    for i in 0..40u64 {
+        let mut conn = connect(&s);
+        let resp = ask(&mut conn, &WireRequest::Status { id: i + 1 });
+        assert_eq!(wire::response_status(&resp), "ok");
+        drop(conn);
+    }
+    // Give the closed sockets a beat to EOF their connection threads.
+    std::thread::sleep(Duration::from_millis(300));
+    let open = s.server.open_connections();
+    assert!(
+        open <= 8,
+        "40 sequential connections left {open} tracked on the server — \
+         finished connection threads are not being reaped"
+    );
+    assert_eq!(s.server.accept_errors(), 0, "healthy listener, no accept errors");
+
+    // The same figures surface through the ops plane.
+    let mut conn = connect(&s);
+    let resp = ask(&mut conn, &WireRequest::Status { id: 99 });
+    assert_eq!(wire::response_status(&resp), "ok");
+    assert!(resp.get("connections").unwrap().as_usize().unwrap() <= 8);
+    assert_eq!(resp.get("accept_errors").unwrap().as_usize().unwrap(), 0);
+    s.server.shutdown();
+}
+
+/// The epoch-labeling race: `logits` responses used to read the
+/// dataset epoch *before* executing the route, so a concurrent mutate
+/// could label epoch-N+1 bits as epoch N (or vice versa). The fix
+/// threads the epoch actually bound by the served plan into the
+/// response — so whatever interleaving happens, the labeled epoch's
+/// reference logits must equal the served bits, every time.
+#[test]
+fn logits_epoch_label_matches_served_bits_under_racing_mutates() {
+    let s = boot("epoch_race", NetConfig::default(), BatcherConfig::default());
+    let name = s.names[0].clone();
+    let key = route(&name, Some(8), Strategy::Aes, Precision::F32);
+    let rounds = 12usize;
+
+    // Reference bits per epoch: epoch k = the first k reweights of the
+    // (0, 0) self-loop applied to a cold coordinator. Weights > 1 can
+    // never collide with a normalized-adjacency value (all in (0, 1]),
+    // and are pairwise distinct — so every delta is a real change and
+    // advances the epoch by exactly one.
+    let weight = |k: usize| 1.0 + 0.5 * k as f32;
+    let cold_store =
+        Arc::new(ModelStore::load(&s.dir, &s.names, &["gcn".to_string()]).unwrap());
+    let cold = Coordinator::start_with(
+        Backend::Host,
+        cold_store,
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+    );
+    let mut reference = vec![in_process_bits(&cold, &key)];
+    for k in 1..=rounds {
+        let delta =
+            aes_spmm::graph::GraphDelta::parse(&format!("= 0 0 {}", weight(k))).unwrap();
+        cold.apply_delta(&name, &delta).unwrap();
+        reference.push(in_process_bits(&cold, &key));
+    }
+    cold.shutdown();
+
+    let mut conn = connect(&s);
+    let mut id = 100u64;
+    for k in 1..=rounds {
+        // Race one mutate (on its own connection) against logits reads.
+        let mutate = {
+            let mut mconn = connect(&s);
+            let name = name.clone();
+            let ops = vec![format!("= 0 0 {}", weight(k))];
+            std::thread::spawn(move || {
+                let resp = ask(
+                    &mut mconn,
+                    &WireRequest::Mutate { id: 10_000 + k as u64, dataset: name, ops },
+                );
+                assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+            })
+        };
+        for _ in 0..4 {
+            id += 1;
+            let resp = ask(&mut conn, &WireRequest::Logits { id, route: key.clone() });
+            assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+            let epoch = resp.get("epoch").unwrap().as_usize().unwrap();
+            // Monotone epochs: only k-1 (not yet applied) or k (applied)
+            // are reachable inside round k.
+            assert!(epoch == k - 1 || epoch == k, "round {k} served epoch {epoch}");
+            assert_eq!(
+                wire_bits(&resp),
+                reference[epoch],
+                "round {k}: response labeled epoch {epoch} but the bits do not match \
+                 that epoch's reference logits"
+            );
+        }
+        mutate.join().unwrap();
+    }
+    s.server.shutdown();
+}
+
+/// Kill the child on drop so a failed assertion never leaks server
+/// processes past the test.
+struct Proc(Child);
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Wait for a serving process to publish its bound address (the
+/// `--port-file` is written only after the bind succeeds).
+fn wait_port(path: &Path, child: &mut Proc) -> String {
+    for _ in 0..600 {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let s = s.trim();
+            if !s.is_empty() {
+                return s.to_string();
+            }
+        }
+        if let Some(status) = child.0.try_wait().unwrap() {
+            panic!("serving process exited ({status}) before writing {}", path.display());
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("timed out waiting for port file {}", path.display());
+}
+
+fn spawn_repro(args: &[&str]) -> Proc {
+    Proc(
+        Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning repro"),
+    )
+}
+
+/// The ISSUE 9 tentpole end-to-end: two `shard-server` worker processes
+/// and a `router` process on loopback ephemeral ports. The router's
+/// row-concatenated logits must be bitwise-identical to a cold
+/// in-process coordinator — at boot, after a delta replicated through
+/// the router's epoch-tagged log, and after one worker is killed (the
+/// router re-places its row ranges on the survivor and replays the log
+/// from the survivor's watermark).
+#[test]
+fn router_over_worker_processes_is_bitwise_and_survives_worker_death() {
+    let dir =
+        std::env::temp_dir().join(format!("serving_dist_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut workers = Vec::new();
+    let mut worker_addrs = Vec::new();
+    for i in 1..=2 {
+        let port_file = dir.join(format!("worker{i}.port"));
+        let _ = std::fs::remove_file(&port_file);
+        let mut child = spawn_repro(&[
+            "shard-server",
+            "--listen",
+            "127.0.0.1:0",
+            "--max-seconds",
+            "600",
+            "--eval-data",
+            dir.join(format!("worker{i}-data")).to_str().unwrap(),
+            "--port-file",
+            port_file.to_str().unwrap(),
+        ]);
+        worker_addrs.push(wait_port(&port_file, &mut child));
+        workers.push(child);
+    }
+    let router_port = dir.join("router.port");
+    let _ = std::fs::remove_file(&router_port);
+    let mut router = spawn_repro(&[
+        "router",
+        "--listen",
+        "127.0.0.1:0",
+        "--max-seconds",
+        "600",
+        "--workers",
+        &worker_addrs.join(","),
+        "--port-file",
+        router_port.to_str().unwrap(),
+    ]);
+    let router_addr = wait_port(&router_port, &mut router);
+    let mut conn = TcpStream::connect(&router_addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+
+    // The single-process reference over the same (deterministic) data.
+    let ref_dir = dir.join("reference-data");
+    std::fs::create_dir_all(&ref_dir).unwrap();
+    let names = write_eval_datasets(&ref_dir).unwrap();
+    let store = Arc::new(ModelStore::load(&ref_dir, &names, &["gcn".to_string()]).unwrap());
+    let cold = Coordinator::start_with(
+        Backend::Host,
+        store,
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+    );
+    let name = names[0].clone();
+    let keys = [
+        route(&name, None, Strategy::Aes, Precision::F32),
+        route(&name, Some(8), Strategy::Aes, Precision::U8Device),
+    ];
+
+    let mut id = 0u64;
+    let mut assert_round = |conn: &mut TcpStream, phase: &str, want_epoch: usize| {
+        for key in &keys {
+            id += 1;
+            let resp = ask(conn, &WireRequest::Logits { id, route: key.clone() });
+            assert_eq!(
+                wire::response_status(&resp),
+                "ok",
+                "{phase} {}: {}",
+                key.label(),
+                resp.to_string()
+            );
+            assert_eq!(
+                resp.get("epoch").unwrap().as_usize().unwrap(),
+                want_epoch,
+                "{phase}: router must serve epoch {want_epoch}"
+            );
+            assert_eq!(
+                wire_bits(&resp),
+                in_process_bits(&cold, key),
+                "{phase} {}: router-merged logits must be bitwise-identical to the \
+                 single-process coordinator",
+                key.label()
+            );
+        }
+    };
+
+    // Boot: scatter/gather across both workers.
+    assert_round(&mut conn, "boot", 0);
+
+    // A delta through the router's replication log: every live worker
+    // acks before the client does, so the next read serves epoch 1.
+    // The reweight value sits above 1, outside the normalized-adjacency
+    // range, so the delta can never be a no-op.
+    let ops = vec!["= 0 0 1.5".to_string(), "+ 1 159 0.05".to_string()];
+    let resp = ask(
+        &mut conn,
+        &WireRequest::Mutate { id: 1000, dataset: name.clone(), ops: ops.clone() },
+    );
+    assert_eq!(wire::response_status(&resp), "ok", "{}", resp.to_string());
+    assert_eq!(resp.get("epoch").unwrap().as_usize().unwrap(), 1);
+    let delta = aes_spmm::graph::GraphDelta::parse(&ops.join("\n")).unwrap();
+    cold.apply_delta(&name, &delta).unwrap();
+    assert_round(&mut conn, "post-delta", 1);
+
+    // Kill worker 1. The next mutate marks it dead and still commits on
+    // the survivor; reads re-place the dead worker's row ranges and
+    // stay bitwise.
+    drop(workers.remove(0));
+    let ops = vec!["- 1 159".to_string()];
+    let resp = ask(
+        &mut conn,
+        &WireRequest::Mutate { id: 1001, dataset: name.clone(), ops: ops.clone() },
+    );
+    assert_eq!(
+        wire::response_status(&resp),
+        "ok",
+        "mutate must survive a worker death: {}",
+        resp.to_string()
+    );
+    assert_eq!(resp.get("epoch").unwrap().as_usize().unwrap(), 2);
+    let delta = aes_spmm::graph::GraphDelta::parse(&ops.join("\n")).unwrap();
+    cold.apply_delta(&name, &delta).unwrap();
+    assert_round(&mut conn, "post-failover", 2);
+
+    // The failover shows in the router's ops plane.
+    let resp = ask(&mut conn, &WireRequest::Status { id: 1002 });
+    assert_eq!(wire::response_status(&resp), "ok");
+    assert_eq!(
+        resp.get("workers").unwrap().as_usize().unwrap(),
+        1,
+        "status must report exactly one live worker after the kill"
+    );
+
+    cold.shutdown();
+    drop(router);
+    drop(workers);
 }
