@@ -20,9 +20,11 @@ use aes_spmm::quant::ChunkedParams;
 use aes_spmm::rng::Pcg32;
 use aes_spmm::sampling::{sample_ell, Strategy};
 use aes_spmm::spmm::{
-    bcsr_spmm_par, csr_naive, csr_naive_par, csr_rowcache, csr_rowcache_at, csr_spmm_i8,
-    dense_spmm_par, dense_tile_viable, ell_spmm_at, ell_spmm_i8, ell_spmm_par, simd, spmm_flops,
-    spmm_i8_flops, AdjQuant, BlockedCsr, DenseTile, BCSR_BLOCK_ROWS,
+    attention_scores, attention_scores_par, bcsr_spmm_par, csr_naive, csr_naive_par,
+    csr_rowcache, csr_rowcache_at, csr_spmm_i8, dense_spmm_par, dense_tile_viable, ell_spmm_at,
+    ell_spmm_i8, ell_spmm_par, gat_alpha_csr, gat_alpha_csr_par, gat_alpha_ell,
+    segmented_max_csr_par, simd, spmm_flops, spmm_i8_flops, AdjQuant, BlockedCsr, DenseTile,
+    BCSR_BLOCK_ROWS,
 };
 use aes_spmm::util::JsonValue;
 
@@ -243,6 +245,47 @@ fn main() {
             print_result(&r, None);
             rec.push(&r, None);
         }
+
+        // --- Segmented reductions: the model zoo's attention and
+        // max-pool passes (docs/models.md). The α pipeline (per-node
+        // scores → per-edge LeakyReLU logits → segmented softmax) is
+        // GAT's extra cost over plain SpMM; the max-pool is SAGE's.
+        let a_src: Vec<f32> = (0..f).map(|_| rng.f32() - 0.5).collect();
+        let a_dst: Vec<f32> = (0..f).map(|_| rng.f32() - 0.5).collect();
+        let r = b.run("gat scores (1 thread)", || {
+            let _ = attention_scores(&feats, &a_src, n, f);
+        });
+        print_result(&r, None);
+        rec.push(&r, None);
+        let r = b.run(format!("gat scores ({threads} threads)"), || {
+            let _ = attention_scores_par(&feats, &a_src, n, f, threads);
+        });
+        print_result(&r, None);
+        rec.push(&r, None);
+        let s_src = attention_scores(&feats, &a_src, n, f);
+        let s_dst = attention_scores(&feats, &a_dst, n, f);
+        let lvl = simd::level();
+        let r = b.run("gat alpha csr (1 thread)", || {
+            let _ = gat_alpha_csr(lvl, &g, &s_src, &s_dst);
+        });
+        print_result(&r, None);
+        rec.push(&r, None);
+        let r = b.run(format!("gat alpha csr ({threads} threads)"), || {
+            let _ = gat_alpha_csr_par(lvl, &g, &s_src, &s_dst, threads);
+        });
+        print_result(&r, None);
+        rec.push(&r, None);
+        let ell = sample_ell(&g, 64, Strategy::Aes);
+        let r = b.run("gat alpha aes w64 (sampled renormalize, 1 thread)", || {
+            let _ = gat_alpha_ell(lvl, &ell, &s_src, &s_dst);
+        });
+        print_result(&r, None);
+        rec.push(&r, None);
+        let r = b.run(format!("sage max-pool csr ({threads} threads)"), || {
+            segmented_max_csr_par(lvl, &g, &feats, f, &mut out, threads)
+        });
+        print_result(&r, None);
+        rec.push(&r, None);
 
         let mut wl = BTreeMap::new();
         wl.insert("name".to_string(), JsonValue::Str(name.to_string()));

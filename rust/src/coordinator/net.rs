@@ -719,6 +719,12 @@ fn handle_status(state: &CoordHandler, id: u64) -> JsonValue {
         vec![
             ("uptime_us", us(state.started.elapsed())),
             ("datasets", JsonValue::Arr(datasets)),
+            (
+                "models",
+                JsonValue::Arr(
+                    state.store.model_names().into_iter().map(JsonValue::Str).collect(),
+                ),
+            ),
             ("workers", num(state.coord.pool_workers() as u64)),
             ("inflight", num(state.inflight.load(Ordering::Acquire) as u64)),
             ("high_water", num(state.cfg.high_water as u64)),

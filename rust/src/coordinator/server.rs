@@ -30,9 +30,9 @@ use crate::exec::{
     prepare_plan, ExecEnv, ExecPlan, PlanCache, PlanSpec, Pool, PrefetchStats, Prefetcher,
     ShardCacheRef, ShardKey, ShardLayout, ShardUnit,
 };
-use crate::graph::{DeltaReport, GraphDelta, ShardSpec};
+use crate::graph::{Csr, DeltaReport, GraphDelta, ShardSpec};
 use crate::quant::{Features, Precision};
-use crate::runtime::{accuracy, run_forward, Backend, Dataset, Engine};
+use crate::runtime::{accuracy, run_forward, Backend, Dataset, Engine, ModelVals};
 use crate::sampling::Strategy;
 use crate::tensor::Tensor;
 use crate::util::argmax_f32;
@@ -91,9 +91,11 @@ impl Default for CoordinatorConfig {
 }
 
 /// What a route plan is keyed by. Narrower than [`RouteKey`]: the model
-/// never changes the feature tensor, and on device backends (fused
-/// in-kernel sampling) neither do width/strategy — so e.g. `gcn` and
-/// `sage` routes over one dataset share a single cached feature load.
+/// enters only through its **value family** ([`ModelVals`] — sampling is
+/// structure-only, so `sage` and `gat` share one ones-valued operand),
+/// and on device backends (fused in-kernel sampling) neither the family
+/// nor width/strategy matter — so e.g. `gcn` and `sage` routes over one
+/// dataset share a single cached feature load there.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 struct PlanKey {
     dataset: String,
@@ -101,6 +103,9 @@ struct PlanKey {
     /// Host-aggregating backends key the sampled ELL plan too.
     width: Option<usize>,
     strategy: Option<Strategy>,
+    /// Aggregation value family (`None` for device routes, whose plans
+    /// never carry a host operand).
+    vals: Option<ModelVals>,
 }
 
 impl PlanKey {
@@ -113,6 +118,7 @@ impl PlanKey {
                 // Strategy only matters when something is sampled — exact
                 // host routes share one plan regardless of strategy.
                 strategy: key.width.map(|_| key.strategy),
+                vals: Some(ModelVals::of(&key.model)),
             }
         } else {
             PlanKey {
@@ -120,6 +126,7 @@ impl PlanKey {
                 precision: key.precision,
                 width: None,
                 strategy: None,
+                vals: None,
             }
         }
     }
@@ -800,8 +807,21 @@ fn build_plan(ctx: &WorkerCtx, key: &PlanKey, ds: &Dataset) -> Result<ExecPlan> 
     // sharded use). Mutated epochs reuse them so untouched shard units
     // keep their keys.
     let layout = shard.map(|spec| ctx.layout_for(&key.dataset, &ds.csr_gcn, ds.epoch, &spec));
+    // The plan's operand carries the route's value family: Â entries for
+    // GCN, all-ones for the rest of the zoo (structure identical either
+    // way — GAT substitutes per-edge α at execution time and max-pool
+    // never reads values, so one ones-valued plan serves them all).
+    let vals = key.vals.unwrap_or(ModelVals::Gcn);
+    let ones_csr;
+    let csr: &Csr = match vals {
+        ModelVals::Gcn => &ds.csr_gcn,
+        ModelVals::Ones => {
+            ones_csr = Csr { val: ds.val_ones.clone(), ..ds.csr_gcn.clone() };
+            &ones_csr
+        }
+    };
     let spec = PlanSpec {
-        csr: &ds.csr_gcn,
+        csr,
         // PlanKey width/strategy are pre-normalized for the backend.
         width: key.width,
         strategy: key.strategy.unwrap_or(Strategy::Aes),
@@ -814,13 +834,15 @@ fn build_plan(ctx: &WorkerCtx, key: &PlanKey, ds: &Dataset) -> Result<ExecPlan> 
         stream: host_aggregation && ctx.streaming,
         shard,
         shard_bounds: layout.as_deref().map(|l| l.bounds()),
-        // Units are keyed by dataset + width + strategy + row range (and
-        // epoch-versioned), so a build for one precision warms every
-        // sibling route's shards.
+        // Units are keyed by dataset + value family + width + strategy +
+        // row range (and epoch-versioned), so a build for one precision
+        // warms every sibling route's shards — across the whole model
+        // zoo when the routes share a value family.
         shard_cache: shard.map(|_| ShardCacheRef {
             units: &ctx.shard_units,
             tag: key.dataset.as_str(),
             epoch: ds.epoch,
+            vals,
         }),
     };
     prepare_plan(&fstore, key.precision, &spec, ds.feats, &ctx.env)
@@ -921,26 +943,37 @@ mod tests {
 
     #[test]
     fn plan_key_collapses_device_routes() {
-        let mk = |width, strategy, precision| RouteKey {
-            model: "gcn".into(),
+        let mk = |model: &str, width, strategy, precision| RouteKey {
+            model: model.into(),
             dataset: "cora".into(),
             width,
             strategy,
             precision,
         };
         // Device backends: one plan per (dataset, precision).
-        let a = PlanKey::for_route(&mk(Some(16), Strategy::Aes, Precision::F32), false);
-        let b = PlanKey::for_route(&mk(Some(64), Strategy::Sfs, Precision::F32), false);
+        let a = PlanKey::for_route(&mk("gcn", Some(16), Strategy::Aes, Precision::F32), false);
+        let b = PlanKey::for_route(&mk("gcn", Some(64), Strategy::Sfs, Precision::F32), false);
         assert_eq!(a, b);
-        let c = PlanKey::for_route(&mk(Some(16), Strategy::Aes, Precision::U8Device), false);
+        let c = PlanKey::for_route(&mk("gcn", Some(16), Strategy::Aes, Precision::U8Device), false);
         assert_ne!(a, c);
+        // ...and the model collapses too: device artifacts aggregate
+        // in-kernel, so the plan (a feature load) is model-free.
+        let a2 = PlanKey::for_route(&mk("sage", Some(16), Strategy::Aes, Precision::F32), false);
+        assert_eq!(a, a2);
         // Host backends: the sampled plan differs per width/strategy.
-        let d = PlanKey::for_route(&mk(Some(16), Strategy::Aes, Precision::F32), true);
-        let e = PlanKey::for_route(&mk(Some(64), Strategy::Aes, Precision::F32), true);
+        let d = PlanKey::for_route(&mk("gcn", Some(16), Strategy::Aes, Precision::F32), true);
+        let e = PlanKey::for_route(&mk("gcn", Some(64), Strategy::Aes, Precision::F32), true);
         assert_ne!(d, e);
         // ...but exact host routes ignore the (unused) strategy field.
-        let f = PlanKey::for_route(&mk(None, Strategy::Aes, Precision::F32), true);
-        let g = PlanKey::for_route(&mk(None, Strategy::Sfs, Precision::F32), true);
+        let f = PlanKey::for_route(&mk("gcn", None, Strategy::Aes, Precision::F32), true);
+        let g = PlanKey::for_route(&mk("gcn", None, Strategy::Sfs, Precision::F32), true);
         assert_eq!(f, g);
+        // Host plans key on the value family, not the model name: gcn
+        // (Â operand) differs from sage, but sage and gat share the
+        // ones-valued operand plan.
+        let h = PlanKey::for_route(&mk("sage", None, Strategy::Aes, Precision::F32), true);
+        assert_ne!(f, h);
+        let i = PlanKey::for_route(&mk("gat", None, Strategy::Aes, Precision::F32), true);
+        assert_eq!(h, i);
     }
 }

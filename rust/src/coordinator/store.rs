@@ -15,7 +15,7 @@ use std::sync::{Arc, RwLock};
 use anyhow::{Context, Result};
 
 use crate::quant::FeatureStore;
-use crate::runtime::{Dataset, Weights};
+use crate::runtime::{validate_weights, Dataset, Weights};
 
 /// Registry of loaded datasets + weights for serving. Datasets are
 /// replaceable (epoch-versioned mutation); everything else is fixed at
@@ -43,6 +43,7 @@ impl ModelStore {
         };
         for ds in datasets {
             let data = Dataset::load(&dir, ds).with_context(|| format!("dataset {ds}"))?;
+            let (feats, classes) = (data.feats, data.classes);
             store.datasets.get_mut().unwrap().insert(ds.clone(), Arc::new(data));
             store.features.insert(
                 ds.clone(),
@@ -50,6 +51,12 @@ impl ModelStore {
             );
             for m in models {
                 let w = Weights::load(&dir, m, ds).with_context(|| format!("weights {m}/{ds}"))?;
+                // Publish-time schema check: every tensor's shape must
+                // satisfy the model IR against this dataset's dims, so a
+                // mis-shaped artifact fails here with the tensor named
+                // instead of panicking inside a worker's matmul.
+                validate_weights(m, feats, classes, &w.tensors)
+                    .with_context(|| format!("weights {m}/{ds}"))?;
                 store.weights.insert((m.clone(), ds.clone()), Arc::new(w));
             }
         }
@@ -161,6 +168,15 @@ impl ModelStore {
     pub fn dataset_names(&self) -> Vec<String> {
         let mut v: Vec<_> = self.datasets.read().unwrap().keys().cloned().collect();
         v.sort();
+        v
+    }
+
+    /// Distinct models with loaded weights, sorted — the serving
+    /// roster's model axis (`status` reports it to clients).
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.weights.keys().map(|(m, _)| m.clone()).collect();
+        v.sort();
+        v.dedup();
         v
     }
 }

@@ -147,9 +147,14 @@ pub fn route_to_json(key: &RouteKey) -> JsonValue {
     ])
 }
 
-/// Decode a route from the fields of a request object.
+/// Decode a route from the fields of a request object. `model` is
+/// optional and defaults to `"gcn"` — v1 clients written before the
+/// model zoo never sent one, and they keep meaning the GCN route.
 pub fn route_from_json(v: &JsonValue) -> Result<RouteKey> {
-    let model = v.get("model").context("route: missing model")?.as_str()?.to_string();
+    let model = match v.get("model") {
+        Ok(JsonValue::Null) | Err(_) => "gcn".to_string(),
+        Ok(m) => m.as_str().context("route: model must be a string")?.to_string(),
+    };
     let dataset = v.get("dataset").context("route: missing dataset")?.as_str()?.to_string();
     let width = match v.get("width") {
         Ok(JsonValue::Null) | Err(_) => None,
@@ -451,6 +456,30 @@ mod tests {
             let back = WireRequest::from_json(&parse_json(&text).unwrap()).unwrap();
             assert_eq!(back, req, "round-trip mangled {text}");
         }
+    }
+
+    #[test]
+    fn routes_without_a_model_default_to_gcn() {
+        // The pre-model-zoo wire shape: no "model" field at all.
+        let v1 = parse_json(
+            r#"{"v":1,"type":"logits","id":5,"dataset":"evalpow",
+                "width":null,"strategy":"aes","precision":"f32"}"#,
+        )
+        .unwrap();
+        let WireRequest::Logits { route, .. } = WireRequest::from_json(&v1).unwrap() else {
+            panic!("expected a logits request");
+        };
+        assert_eq!(route.model, "gcn");
+        // An explicit model decodes as sent.
+        let v2 = parse_json(
+            r#"{"v":1,"type":"logits","id":6,"model":"gat","dataset":"evalpow",
+                "width":8,"strategy":"aes","precision":"f32"}"#,
+        )
+        .unwrap();
+        let WireRequest::Logits { route, .. } = WireRequest::from_json(&v2).unwrap() else {
+            panic!("expected a logits request");
+        };
+        assert_eq!(route.model, "gat");
     }
 
     #[test]

@@ -15,6 +15,13 @@
 //! make the paper's percentage thresholds quantization noise at this
 //! scale. The fractions are the contract; the slack only de-flakes the
 //! small-sample regime (see docs/accuracy.md).
+//!
+//! The budgets are **model-independent**: every served model (GCN,
+//! GraphSAGE-mean, GAT — `docs/models.md`) is held to the same rows of
+//! this table. The exact fp32 row in particular means each model's IR
+//! program through the serving stack must be bitwise-equal to its own
+//! oracle, and GAT's sampled routes must renormalize attention over the
+//! surviving edges well enough to stay inside the sampling row.
 
 use super::metrics::AccuracyMetrics;
 

@@ -54,7 +54,7 @@ pub enum DegreeProfile {
 /// One conformance dataset: name, degree profile, generator seed.
 #[derive(Clone, Copy, Debug)]
 pub struct EvalDatasetSpec {
-    /// Dataset name (`data_<name>.nbt` / `weights_gcn_<name>.nbt`).
+    /// Dataset name (`data_<name>.nbt` / `weights_<model>_<name>.nbt`).
     pub name: &'static str,
     /// Degree profile driving the DC-SBM generator.
     pub profile: DegreeProfile,
@@ -68,8 +68,8 @@ pub const EVAL_DATASETS: [EvalDatasetSpec; 2] = [
     EvalDatasetSpec { name: "evaluni", profile: DegreeProfile::Uniform, seed: 0xACC_0002 },
 ];
 
-/// Write one conformance dataset (`data_*.nbt` + `weights_gcn_*.nbt`)
-/// under `dir`. Fully deterministic in `spec.seed`.
+/// Write one conformance dataset (`data_*.nbt` plus one weights file
+/// per served model) under `dir`. Fully deterministic in `spec.seed`.
 pub fn write_eval_dataset(dir: &Path, spec: &EvalDatasetSpec) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let (n, f, h, c) = (EVAL_NODES, EVAL_FEATS, EVAL_HIDDEN, EVAL_CLASSES);
@@ -146,6 +146,73 @@ pub fn write_eval_dataset(dir: &Path, spec: &EvalDatasetSpec) -> Result<()> {
     w.insert("b1", Tensor::from_f32(&[c], &b1));
     w.insert("ideal_acc", Tensor::from_f32(&[1], &[1.0]));
     write_nbt(dir.join(format!("weights_gcn_{}.nbt", spec.name)), &w)?;
+
+    // Model-zoo weights. These draw from *fresh* seeded streams (never
+    // the stream above), so adding a model can never perturb the bytes
+    // of `data_*.nbt` / `weights_gcn_*.nbt` — the golden GCN fixtures in
+    // tests/fixtures/ stay valid verbatim.
+    write_sage_weights(dir, spec, &mut Pcg32::new(spec.seed ^ 0x5A6E_0000))?;
+    write_gat_weights(dir, spec, &mut Pcg32::new(spec.seed ^ 0x6A70_0000))?;
+    Ok(())
+}
+
+/// `[rows, cols]` class-preserving map: `scale` on the leading diagonal
+/// plus ±0.005 noise — the same margin-friendly shape as the GCN
+/// weights, so sampled/quantized runs stay inside the paper budgets.
+fn diag_noise(rng: &mut Pcg32, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
+    let mut w = vec![0.0f32; rows * cols];
+    for slot in w.iter_mut() {
+        *slot = 0.01 * (rng.f32() - 0.5);
+    }
+    for j in 0..rows.min(cols).min(EVAL_CLASSES) {
+        w[j * cols + j] += scale;
+    }
+    w
+}
+
+/// GraphSAGE-mean weights: the self branch carries the node's own
+/// community signal at full strength, the neighbor branch reinforces it
+/// at half strength (homophilous neighbors agree, so the mean over any
+/// sampled subset points the same way — which is what keeps the sampled
+/// top-1 loss inside [`super::SAMPLING_TOP1_LOSS`]).
+fn write_sage_weights(dir: &Path, spec: &EvalDatasetSpec, rng: &mut Pcg32) -> Result<()> {
+    let (f, h, c) = (EVAL_FEATS, EVAL_HIDDEN, EVAL_CLASSES);
+    let mut w = NbtFile::new();
+    w.insert("w0_self", Tensor::from_f32(&[f, h], &diag_noise(rng, f, h, 1.0)));
+    w.insert("w0_neigh", Tensor::from_f32(&[f, h], &diag_noise(rng, f, h, 0.5)));
+    let b0: Vec<f32> = (0..h).map(|_| -0.04 - 0.02 * rng.f32()).collect();
+    w.insert("b0", Tensor::from_f32(&[h], &b0));
+    w.insert("w1_self", Tensor::from_f32(&[h, c], &diag_noise(rng, h, c, 1.0)));
+    w.insert("w1_neigh", Tensor::from_f32(&[h, c], &diag_noise(rng, h, c, 0.5)));
+    let b1: Vec<f32> = (0..c).map(|_| 0.005 * (rng.f32() - 0.5)).collect();
+    w.insert("b1", Tensor::from_f32(&[c], &b1));
+    w.insert("ideal_acc", Tensor::from_f32(&[1], &[1.0]));
+    write_nbt(dir.join(format!("weights_sage_{}.nbt", spec.name)), &w)?;
+    Ok(())
+}
+
+/// GAT weights: GCN-shaped projections, attention vectors of *tiny*
+/// magnitude (±0.02) — logits near zero make α near-uniform, so dropping
+/// sampled edges renormalizes to nearly the same convex combination and
+/// accuracy degrades smoothly rather than hinging on one hot edge.
+fn write_gat_weights(dir: &Path, spec: &EvalDatasetSpec, rng: &mut Pcg32) -> Result<()> {
+    let (f, h, c) = (EVAL_FEATS, EVAL_HIDDEN, EVAL_CLASSES);
+    let att = |rng: &mut Pcg32, d: usize| -> Vec<f32> {
+        (0..d).map(|_| 0.04 * (rng.f32() - 0.5)).collect()
+    };
+    let mut w = NbtFile::new();
+    w.insert("w0", Tensor::from_f32(&[f, h], &diag_noise(rng, f, h, 1.0)));
+    w.insert("a0_src", Tensor::from_f32(&[h], &att(rng, h)));
+    w.insert("a0_dst", Tensor::from_f32(&[h], &att(rng, h)));
+    let b0: Vec<f32> = (0..h).map(|_| -0.04 - 0.02 * rng.f32()).collect();
+    w.insert("b0", Tensor::from_f32(&[h], &b0));
+    w.insert("w1", Tensor::from_f32(&[h, c], &diag_noise(rng, h, c, 1.0)));
+    w.insert("a1_src", Tensor::from_f32(&[c], &att(rng, c)));
+    w.insert("a1_dst", Tensor::from_f32(&[c], &att(rng, c)));
+    let b1: Vec<f32> = (0..c).map(|_| 0.005 * (rng.f32() - 0.5)).collect();
+    w.insert("b1", Tensor::from_f32(&[c], &b1));
+    w.insert("ideal_acc", Tensor::from_f32(&[1], &[1.0]));
+    write_nbt(dir.join(format!("weights_gat_{}.nbt", spec.name)), &w)?;
     Ok(())
 }
 
@@ -184,6 +251,12 @@ mod tests {
         assert_eq!(a.labels, b.labels);
         let w = Weights::load(&dir, "gcn", "evalpow").unwrap();
         assert_eq!(w.tensors.len(), 4);
+        // The whole served zoo loads and passes schema validation.
+        for model in crate::runtime::SERVED_MODELS {
+            let w = Weights::load(&dir, model, "evaluni").unwrap();
+            crate::runtime::validate_weights(model, EVAL_FEATS, EVAL_CLASSES, &w.tensors)
+                .unwrap();
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
-//! The conformance harness: run the {strategy × width × precision ×
-//! shards} grid through the **real serving path** — coordinator plan
-//! cache, prefetcher, sharded execution, host backend — and score every
-//! configuration against the exact oracle.
+//! The conformance harness: run the {model × strategy × width ×
+//! precision × shards} grid through the **real serving path** —
+//! coordinator plan cache, prefetcher, sharded execution, host backend —
+//! and score every configuration against its model's exact oracle.
 //!
 //! Four coordinators serve the grid, one per (streaming, sharding)
 //! corner, so the INT8-eager vs INT8-streamed and sharded vs unsharded
@@ -25,7 +25,7 @@ use crate::exec::{ShardLayout, ShardSampling, ShardedPlan};
 use crate::experiments::Table;
 use crate::graph::{EdgeOp, GraphDelta, ShardSpec};
 use crate::quant::Precision;
-use crate::runtime::{accuracy, Backend, Dataset};
+use crate::runtime::{accuracy, Backend, Dataset, SERVED_MODELS};
 use crate::sampling::Strategy;
 use crate::tensor::Tensor;
 use crate::util::{argmax_f32, JsonValue};
@@ -47,6 +47,18 @@ pub fn width_grid(quick: bool) -> Vec<Option<usize>> {
         vec![None, Some(8)]
     } else {
         vec![None, Some(8), Some(32)]
+    }
+}
+
+/// Models on the grid — the whole served zoo. The quick sweep keeps GCN
+/// plus one non-GCN model (GAT, whose per-edge attention exercises the
+/// segmented-softmax kernels end to end) so IR dispatch never loses
+/// smoke coverage.
+pub fn model_grid(quick: bool) -> Vec<&'static str> {
+    if quick {
+        vec!["gcn", "gat"]
+    } else {
+        SERVED_MODELS.to_vec()
     }
 }
 
@@ -134,6 +146,8 @@ impl PrecisionMode {
 pub struct ConfigResult {
     /// Conformance dataset name.
     pub dataset: String,
+    /// Served model (`gcn` / `sage` / `gat`).
+    pub model: String,
     /// Edge-sampling strategy (ignored by exact routes).
     pub strategy: Strategy,
     /// Sampling width (`None` = exact aggregation).
@@ -158,7 +172,10 @@ impl ConfigResult {
     /// Stable configuration id (the gate keys on it).
     pub fn name(&self) -> String {
         let shape = shape_label(self.width, self.strategy);
-        format!("{}/{}/{}/shards{}", self.dataset, shape, self.mode.name(), self.shards)
+        format!(
+            "{}/{}/{}/{}/shards{}",
+            self.dataset, self.model, shape, self.mode.name(), self.shards
+        )
     }
 }
 
@@ -276,6 +293,7 @@ impl EvalReport {
                         let mut m = BTreeMap::new();
                         m.insert("name".to_string(), JsonValue::Str(c.name()));
                         m.insert("dataset".to_string(), JsonValue::Str(c.dataset.clone()));
+                        m.insert("model".to_string(), JsonValue::Str(c.model.clone()));
                         m.insert(
                             "strategy".to_string(),
                             JsonValue::Str(c.strategy.name().to_string()),
@@ -369,8 +387,9 @@ fn bits_equal(a: &[f32], b: &[f32]) -> (bool, usize) {
     (differing == 0, differing)
 }
 
-/// Bank key: one grid point's logits.
-type BankKey = (String, Strategy, Option<usize>, PrecisionMode, usize);
+/// Bank key: one grid point's logits — (dataset, model, strategy,
+/// width, precision mode, shards).
+type BankKey = (String, String, Strategy, Option<usize>, PrecisionMode, usize);
 
 /// Run the conformance grid under `dir` (datasets are (re)written there
 /// deterministically). `quick` trims the width axis for smoke runs.
@@ -383,7 +402,9 @@ pub fn run_eval(dir: &Path, quick: bool) -> Result<EvalReport> {
         fp => println!("dispatch: tuned (cost model fingerprint {fp:#018x})"),
     }
     let names = write_eval_datasets(dir)?;
-    let store = Arc::new(ModelStore::load(dir, &names, &["gcn".to_string()])?);
+    let models = model_grid(quick);
+    let model_names: Vec<String> = models.iter().map(|m| m.to_string()).collect();
+    let store = Arc::new(ModelStore::load(dir, &names, &model_names)?);
 
     // One coordinator per (streaming, shards) corner of the grid.
     let mut coords: HashMap<(bool, usize), Coordinator> = HashMap::new();
@@ -420,55 +441,71 @@ pub fn run_eval(dir: &Path, quick: bool) -> Result<EvalReport> {
     for spec in &EVAL_DATASETS {
         let name = spec.name;
         let ds = store.dataset(name)?;
-        let weights = store.weights("gcn", name)?;
-        let oracle = oracle_forward(&ds, &weights)?;
-        let oracle_t = Tensor::from_f32(&[ds.n, ds.classes], &oracle);
-        let oracle_acc = accuracy(&ds, &oracle_t)?;
+        // One exact oracle per served model — every grid point scores
+        // against *its* model's unsampled fp32 forward.
+        let mut oracles: HashMap<&str, (Vec<f32>, f64)> = HashMap::new();
+        for &model in &models {
+            let weights = store.weights(model, name)?;
+            let oracle = oracle_forward(&ds, &weights)?;
+            let oracle_t = Tensor::from_f32(&[ds.n, ds.classes], &oracle);
+            let acc = accuracy(&ds, &oracle_t)?;
+            oracles.insert(model, (oracle, acc));
+        }
+        let gcn_oracle_acc = oracles["gcn"].1;
         report.datasets.push(DatasetSummary {
             name: name.to_string(),
             nodes: ds.n,
             classes: ds.classes,
             max_degree: ds.csr_gcn.max_degree(),
-            oracle_accuracy: oracle_acc,
+            oracle_accuracy: gcn_oracle_acc,
         });
 
         // The grid proper.
-        for &(width, strategy) in &shapes {
-            for mode in PrecisionMode::ALL {
-                for &shards in &SHARD_GRID {
-                    let coord = &coords[&(mode.streaming_coordinator(), shards)];
-                    let key = RouteKey {
-                        model: "gcn".to_string(),
-                        dataset: name.to_string(),
-                        width,
-                        strategy,
-                        precision: mode.precision(),
-                    };
-                    let logits_t = coord
-                        .route_logits(&key)
-                        .with_context(|| format!("route {} (shards {shards})", key.label()))?;
-                    let logits = logits_t.as_f32()?.to_vec();
-                    let metrics = compare_logits(&oracle, &logits, ds.n, ds.classes);
-                    let budget = mode.budget(width);
-                    report.configs.push(ConfigResult {
-                        dataset: name.to_string(),
-                        strategy,
-                        width,
-                        mode,
-                        shards,
-                        metrics,
-                        budget,
-                        pass: budget.admits(&metrics),
-                        label_accuracy: accuracy(&ds, &logits_t)?,
-                        oracle_accuracy: oracle_acc,
-                    });
-                    bank.insert((name.to_string(), strategy, width, mode, shards), logits);
+        for &model in &models {
+            let (oracle, oracle_acc) = &oracles[model];
+            for &(width, strategy) in &shapes {
+                for mode in PrecisionMode::ALL {
+                    for &shards in &SHARD_GRID {
+                        let coord = &coords[&(mode.streaming_coordinator(), shards)];
+                        let key = RouteKey {
+                            model: model.to_string(),
+                            dataset: name.to_string(),
+                            width,
+                            strategy,
+                            precision: mode.precision(),
+                        };
+                        let logits_t = coord
+                            .route_logits(&key)
+                            .with_context(|| format!("route {} (shards {shards})", key.label()))?;
+                        let logits = logits_t.as_f32()?.to_vec();
+                        let metrics = compare_logits(oracle, &logits, ds.n, ds.classes);
+                        let budget = mode.budget(width);
+                        report.configs.push(ConfigResult {
+                            dataset: name.to_string(),
+                            model: model.to_string(),
+                            strategy,
+                            width,
+                            mode,
+                            shards,
+                            metrics,
+                            budget,
+                            pass: budget.admits(&metrics),
+                            label_accuracy: accuracy(&ds, &logits_t)?,
+                            oracle_accuracy: *oracle_acc,
+                        });
+                        bank.insert(
+                            (name.to_string(), model.to_string(), strategy, width, mode, shards),
+                            logits,
+                        );
+                    }
                 }
             }
         }
 
-        // Cross-configuration invariants.
-        push_pairwise_checks(&mut report, &bank, name, &shapes, &ds);
+        // Cross-configuration invariants, per model.
+        for &model in &models {
+            push_pairwise_checks(&mut report, &bank, name, model, &shapes, &ds);
+        }
         push_shard_branch_checks(&mut report, spec.profile, name, &ds);
         push_serving_path_checks(&mut report, &coords, &bank, name, &ds)?;
         // Live mutation: dedicated coordinators (apply_delta advances
@@ -974,35 +1011,37 @@ fn push_distributed_checks(
 }
 
 /// Streamed-vs-eager and sharded-vs-unsharded bitwise checks plus the
-/// pairwise quantization budget, for every shape of one dataset.
+/// pairwise quantization budget, for every shape of one (dataset,
+/// model) pair.
 fn push_pairwise_checks(
     report: &mut EvalReport,
     bank: &HashMap<BankKey, Vec<f32>>,
     name: &str,
+    model: &str,
     shapes: &[(Option<usize>, Strategy)],
     ds: &Dataset,
 ) {
+    let bk = |strategy, width, mode, shards| {
+        (name.to_string(), model.to_string(), strategy, width, mode, shards)
+    };
     for &(width, strategy) in shapes {
         let shape = shape_label(width, strategy);
         for &shards in &SHARD_GRID {
             // INT8 streamed ≡ INT8 eager (bitwise, the PR 2 contract).
-            let eager =
-                &bank[&(name.to_string(), strategy, width, PrecisionMode::U8Eager, shards)];
-            let streamed =
-                &bank[&(name.to_string(), strategy, width, PrecisionMode::U8Streamed, shards)];
+            let eager = &bank[&bk(strategy, width, PrecisionMode::U8Eager, shards)];
+            let streamed = &bank[&bk(strategy, width, PrecisionMode::U8Streamed, shards)];
             let (equal, differing) = bits_equal(eager, streamed);
             report.checks.push(EvalCheck {
-                name: format!("int8 streamed == eager ({name}/{shape}/shards{shards})"),
+                name: format!("int8 streamed == eager ({name}/{model}/{shape}/shards{shards})"),
                 pass: equal,
                 detail: format!("{differing} logit(s) differ at the bit level"),
             });
             // Quantization adds ≤ 0.3% vs the fp32 sibling.
-            let f32_logits =
-                &bank[&(name.to_string(), strategy, width, PrecisionMode::F32, shards)];
+            let f32_logits = &bank[&bk(strategy, width, PrecisionMode::F32, shards)];
             let m = compare_logits(f32_logits, eager, ds.n, ds.classes);
             let budget = quant_delta_budget();
             report.checks.push(EvalCheck {
-                name: format!("int8 vs fp32 delta ({name}/{shape}/shards{shards})"),
+                name: format!("int8 vs fp32 delta ({name}/{model}/{shape}/shards{shards})"),
                 pass: budget.admits(&m),
                 detail: format!(
                     "{} of {} rows flip vs fp32 (allowed {})",
@@ -1013,12 +1052,17 @@ fn push_pairwise_checks(
             });
             // True INT8 compute adds ≤ 0.3% on top of the dequant route
             // (the edge-coefficient requant is a second Eq. 1-style
-            // rounding — see docs/simd.md).
-            let i8c = &bank[&(name.to_string(), strategy, width, PrecisionMode::I8Compute, shards)];
+            // rounding — see docs/simd.md). Non-GCN programs are not
+            // flip-eligible and serve I8Compute on the dequant path, so
+            // there the comparison is bitwise in practice — still inside
+            // this looser budget.
+            let i8c = &bank[&bk(strategy, width, PrecisionMode::I8Compute, shards)];
             let m = compare_logits(eager, i8c, ds.n, ds.classes);
             let budget = i8_compute_delta_budget();
             report.checks.push(EvalCheck {
-                name: format!("i8-compute vs int8-dequant delta ({name}/{shape}/shards{shards})"),
+                name: format!(
+                    "i8-compute vs int8-dequant delta ({name}/{model}/{shape}/shards{shards})"
+                ),
                 pass: budget.admits(&m),
                 detail: format!(
                     "{} of {} rows flip vs the dequant sibling (allowed {})",
@@ -1032,11 +1076,11 @@ fn push_pairwise_checks(
         // invariant (`shard_delta_budget`) is bitwise, so the check is a
         // plain bit comparison.
         for mode in PrecisionMode::ALL {
-            let unsharded = &bank[&(name.to_string(), strategy, width, mode, SHARD_GRID[0])];
-            let sharded = &bank[&(name.to_string(), strategy, width, mode, SHARD_GRID[1])];
+            let unsharded = &bank[&bk(strategy, width, mode, SHARD_GRID[0])];
+            let sharded = &bank[&bk(strategy, width, mode, SHARD_GRID[1])];
             let (equal, differing) = bits_equal(unsharded, sharded);
             report.checks.push(EvalCheck {
-                name: format!("sharded == unsharded ({name}/{shape}/{})", mode.name()),
+                name: format!("sharded == unsharded ({name}/{model}/{shape}/{})", mode.name()),
                 pass: equal,
                 detail: format!("{differing} logit(s) differ at the bit level"),
             });
@@ -1112,15 +1156,18 @@ fn push_serving_path_checks(
     name: &str,
     ds: &Dataset,
 ) -> Result<()> {
-    let probes: [(Option<usize>, Strategy, PrecisionMode, usize); 3] = [
-        (None, Strategy::Aes, PrecisionMode::F32, SHARD_GRID[0]),
-        (Some(8), Strategy::Aes, PrecisionMode::U8Streamed, SHARD_GRID[0]),
-        (Some(8), Strategy::Sfs, PrecisionMode::F32, SHARD_GRID[1]),
+    // `gat` is on every model grid (quick included), so its probe's
+    // bank entry always exists.
+    let probes: [(&str, Option<usize>, Strategy, PrecisionMode, usize); 4] = [
+        ("gcn", None, Strategy::Aes, PrecisionMode::F32, SHARD_GRID[0]),
+        ("gcn", Some(8), Strategy::Aes, PrecisionMode::U8Streamed, SHARD_GRID[0]),
+        ("gcn", Some(8), Strategy::Sfs, PrecisionMode::F32, SHARD_GRID[1]),
+        ("gat", Some(8), Strategy::Aes, PrecisionMode::F32, SHARD_GRID[1]),
     ];
-    for (width, strategy, mode, shards) in probes {
+    for (model, width, strategy, mode, shards) in probes {
         let coord = &coords[&(mode.streaming_coordinator(), shards)];
         let key = RouteKey {
-            model: "gcn".to_string(),
+            model: model.to_string(),
             dataset: name.to_string(),
             width,
             strategy,
@@ -1128,7 +1175,8 @@ fn push_serving_path_checks(
         };
         let nodes: Vec<usize> = (0..ds.n).step_by(17).collect();
         let resp = coord.infer(key, nodes.clone())?;
-        let logits = &bank[&(name.to_string(), strategy, width, mode, shards)];
+        let logits =
+            &bank[&(name.to_string(), model.to_string(), strategy, width, mode, shards)];
         let mismatches = match &resp.error {
             Some(_) => nodes.len(),
             None => resp
@@ -1143,7 +1191,8 @@ fn push_serving_path_checks(
         let shape = shape_label(width, strategy);
         report.checks.push(EvalCheck {
             name: format!(
-                "batched predictions == route logits argmax ({name}/{shape}/{}/shards{shards})",
+                "batched predictions == route logits argmax \
+                 ({name}/{model}/{shape}/{}/shards{shards})",
                 mode.name()
             ),
             pass: resp.error.is_none() && mismatches == 0,
@@ -1197,6 +1246,7 @@ mod tests {
     fn config_names_are_stable() {
         let c = ConfigResult {
             dataset: "evalpow".into(),
+            model: "gcn".into(),
             strategy: Strategy::Aes,
             width: Some(8),
             mode: PrecisionMode::U8Streamed,
@@ -1207,9 +1257,15 @@ mod tests {
             label_accuracy: 0.0,
             oracle_accuracy: 0.0,
         };
-        assert_eq!(c.name(), "evalpow/aes-w8/u8-streamed/shards3");
-        let exact = ConfigResult { width: None, mode: PrecisionMode::F32, shards: 1, ..c };
-        assert_eq!(exact.name(), "evalpow/exact/f32/shards1");
+        assert_eq!(c.name(), "evalpow/gcn/aes-w8/u8-streamed/shards3");
+        let exact = ConfigResult {
+            model: "gat".into(),
+            width: None,
+            mode: PrecisionMode::F32,
+            shards: 1,
+            ..c
+        };
+        assert_eq!(exact.name(), "evalpow/gat/exact/f32/shards1");
     }
 
     #[test]
@@ -1220,10 +1276,19 @@ mod tests {
     }
 
     #[test]
+    fn model_grid_covers_the_served_zoo() {
+        assert_eq!(model_grid(false), SERVED_MODELS);
+        let quick = model_grid(true);
+        assert_eq!(quick, ["gcn", "gat"], "quick keeps GCN plus one non-GCN model");
+        assert!(quick.iter().all(|m| SERVED_MODELS.contains(m)));
+    }
+
+    #[test]
     fn report_json_has_the_gate_contract() {
         let mut report = EvalReport::default();
         report.configs.push(ConfigResult {
             dataset: "d".into(),
+            model: "sage".into(),
             strategy: Strategy::Sfs,
             width: None,
             mode: PrecisionMode::F32,
@@ -1240,7 +1305,8 @@ mod tests {
         assert!(matches!(doc.get("pass").unwrap(), JsonValue::Bool(true)));
         let configs = doc.get("configs").unwrap().as_arr().unwrap();
         assert_eq!(configs.len(), 1);
-        assert_eq!(configs[0].get("name").unwrap().as_str().unwrap(), "d/exact/f32/shards1");
+        assert_eq!(configs[0].get("name").unwrap().as_str().unwrap(), "d/sage/exact/f32/shards1");
+        assert_eq!(configs[0].get("model").unwrap().as_str().unwrap(), "sage");
         assert_eq!(configs[0].get("top1_agreement").unwrap().as_f64().unwrap(), 1.0);
         assert!(report.failures().is_empty());
         // A failing config surfaces in failures() and flips pass().

@@ -14,11 +14,11 @@
 //!
 //! | unit      | role                                                    |
 //! |-----------|---------------------------------------------------------|
-//! | `oracle`  | [`oracle_forward`]: the unsampled fp32 forward in one canonical FP reduction order — ground truth for every configuration |
+//! | `oracle`  | [`oracle_forward`]: the unsampled fp32 forward of any IR model in one canonical FP reduction order — ground truth for every configuration |
 //! | `metrics` | [`compare_logits`] → [`AccuracyMetrics`]: top-1 agreement, per-row relative L2, max elementwise delta, bitwise flag |
 //! | `budget`  | [`budget_for`] + the pairwise budgets: the paper's claims as checkable thresholds |
 //! | `dataset` | seeded homophilous DC-SBM conformance datasets (power-law + uniform degree profiles) |
-//! | `harness` | [`run_eval`]: the {strategy × width × precision × shards} grid through the real coordinator, plus cross-config invariants |
+//! | `harness` | [`run_eval`]: the {model × strategy × width × precision × shards} grid through the real coordinator, plus cross-config invariants |
 //!
 //! # Rules
 //!
@@ -51,8 +51,10 @@ pub use dataset::{
     EVAL_CLASSES, EVAL_DATASETS, EVAL_FEATS, EVAL_HIDDEN, EVAL_NODES,
 };
 pub use harness::{
-    run_eval, width_grid, ConfigResult, DatasetSummary, EvalCheck, EvalReport, PrecisionMode,
-    SHARD_GRID,
+    model_grid, run_eval, width_grid, ConfigResult, DatasetSummary, EvalCheck, EvalReport,
+    PrecisionMode, SHARD_GRID,
 };
 pub use metrics::{compare_logits, AccuracyMetrics};
-pub use oracle::{oracle_aggregate, oracle_forward, oracle_matmul};
+pub use oracle::{
+    oracle_aggregate, oracle_forward, oracle_gat_alpha, oracle_matmul, oracle_max_aggregate,
+};

@@ -1,30 +1,38 @@
 //! The exact oracle — ground truth for every serving configuration.
 //!
-//! `oracle_forward` runs the unsampled fp32 GCN forward with one
+//! `oracle_forward` interprets the model's layer-graph IR
+//! ([`crate::runtime::ir`]) with the unsampled fp32 operand and one
 //! **canonical reduction order**, fixed here and nowhere else:
 //!
 //! * dense multiplies accumulate each output element over `k` ascending;
 //! * aggregations accumulate each output row over its CSR edges in
-//!   storage order;
+//!   storage order (sum, max-select, and the GAT α passes alike);
 //! * everything is serial — no dispatch, no pool, no chunking — so the
 //!   oracle cannot drift when the execution layer changes.
 //!
 //! The host substrate's exact fp32 forward is *engineered* to match this
-//! order bit-for-bit (per-row FP order is preserved by every exact
-//! kernel, thread partitioning, and shard cut — see `docs/sharding.md`),
-//! and `tests/accuracy.rs` checks that equality through the coordinator.
-//! The golden fixtures under `tests/fixtures/` pin the oracle itself
-//! against drift (`tests/oracle_regression.rs`).
+//! order bit-for-bit for every model (per-row FP order is preserved by
+//! every exact kernel, thread partitioning, and shard cut — see
+//! `docs/sharding.md` and `docs/models.md`), and `tests/accuracy.rs`
+//! checks that equality through the coordinator. The golden fixtures
+//! under `tests/fixtures/` pin the oracle itself against drift
+//! (`tests/oracle_regression.rs`).
 //!
 //! ReLU is written as `if v > 0.0 { v } else { 0.0 }` rather than
 //! `f32::max`, so a `-0.0` or NaN pre-activation normalizes to `+0.0`
 //! deterministically regardless of how the platform's `maxNum` breaks
-//! the `±0.0` tie.
+//! the `±0.0` tie. The GAT softmax is spelled out inline — scalar max
+//! fold, scalar `exp`, storage-order sum, per-edge divide — as an
+//! independent cross-check of `spmm::segmented`'s arms, not a call into
+//! them.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::graph::Csr;
+use crate::runtime::ir::{model_ir, validate_weights, AggregateKind, LayerOp};
 use crate::runtime::{Dataset, Weights};
+use crate::spmm::{attention_scores, leaky_relu};
+use crate::tensor::Tensor;
 
 /// Canonical dense multiply: row-major `A[m,k] × B[k,n]`, each output
 /// element accumulated strictly over `k` ascending, serially.
@@ -64,49 +72,211 @@ pub fn oracle_aggregate(csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
     }
 }
 
-/// The exact oracle forward:
-/// `logits = Â(relu(Â(X W₀) + b₀) W₁) + b₁` with `Â = ds.csr_gcn`,
-/// fp32 features, no sampling, no quantization, canonical reduction
-/// order throughout. Returns row-major `[n, classes]` logits.
-pub fn oracle_forward(ds: &Dataset, weights: &Weights) -> Result<Vec<f32>> {
-    if weights.model != "gcn" {
-        bail!("the oracle implements the gcn forward only (got {:?})", weights.model);
+/// Canonical max-pool aggregation (GraphSAGE max): start from the first
+/// neighbor's features and select `if x > acc { x }` edge by edge in
+/// storage order — `0.0` for edgeless rows, and all-negative features
+/// pool to their (negative) max. Values are ignored.
+pub fn oracle_max_aggregate(csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), csr.n_cols * f, "B is not [n_cols, f]");
+    assert_eq!(out.len(), csr.n_rows * f, "out is not [n_rows, f]");
+    for i in 0..csr.n_rows {
+        let row_out = &mut out[i * f..(i + 1) * f];
+        let mut edges = csr.row_range(i);
+        let Some(e0) = edges.next() else {
+            row_out.fill(0.0);
+            continue;
+        };
+        let c0 = csr.col_ind[e0] as usize;
+        row_out.copy_from_slice(&b[c0 * f..c0 * f + f]);
+        for e in edges {
+            let col = csr.col_ind[e] as usize;
+            let brow = &b[col * f..col * f + f];
+            for (o, &x) in row_out.iter_mut().zip(brow.iter()) {
+                if x > *o {
+                    *o = x;
+                }
+            }
+        }
     }
+}
+
+/// Canonical GAT attention coefficients: per-edge
+/// `LeakyReLU(s_src[i] + s_dst[col])` logits in storage order, then the
+/// numerically-stable row softmax spelled out scalar — max fold, `exp`,
+/// storage-order denominator, per-edge divide. Single-edge rows get
+/// exactly `1.0` (`exp(0)/exp(0)`); empty rows contribute no entries.
+pub fn oracle_gat_alpha(csr: &Csr, s_src: &[f32], s_dst: &[f32]) -> Vec<f32> {
+    assert_eq!(s_src.len(), csr.n_rows, "s_src is not [n_rows]");
+    assert_eq!(s_dst.len(), csr.n_cols, "s_dst is not [n_cols]");
+    let mut alpha = vec![0.0f32; csr.val.len()];
+    for i in 0..csr.n_rows {
+        let lo = csr.row_ptr[i] as usize;
+        let hi = csr.row_ptr[i + 1] as usize;
+        if lo == hi {
+            continue;
+        }
+        let seg = &mut alpha[lo..hi];
+        for (a, e) in seg.iter_mut().zip(lo..hi) {
+            *a = leaky_relu(s_src[i] + s_dst[csr.col_ind[e] as usize]);
+        }
+        let mut m = f32::NEG_INFINITY;
+        for &e in seg.iter() {
+            if e > m {
+                m = e;
+            }
+        }
+        let mut denom = 0.0f32;
+        for e in seg.iter_mut() {
+            *e = (*e - m).exp();
+            denom += *e;
+        }
+        for e in seg.iter_mut() {
+            *e /= denom;
+        }
+    }
+    alpha
+}
+
+/// The exact oracle forward: interpret `weights.model`'s IR program with
+/// the unsampled operand, fp32 features, no quantization, canonical
+/// reduction order throughout. For `gcn` this is
+/// `logits = Â(relu(Â(X W₀) + b₀) W₁) + b₁` with `Â = ds.csr_gcn` —
+/// exactly the pre-IR oracle, op for op. Returns row-major
+/// `[n, classes]` logits.
+pub fn oracle_forward(ds: &Dataset, weights: &Weights) -> Result<Vec<f32>> {
+    let ops = model_ir(&weights.model)?;
+    validate_weights(&weights.model, ds.feats, ds.classes, &weights.tensors)?;
     let x = ds.feat.as_f32()?;
     if x.len() != ds.n * ds.feats {
         bail!("feature tensor has {} values, dataset needs {}", x.len(), ds.n * ds.feats);
     }
-    // Weights in GCN_PARAM_ORDER: w0 [f,h], b0 [h], w1 [h,c], b1 [c].
-    let w0 = weights.tensors[0].1.as_f32()?;
-    let b0 = weights.tensors[1].1.as_f32()?;
-    let w1 = weights.tensors[2].1.as_f32()?;
-    let b1 = weights.tensors[3].1.as_f32()?;
-    let (n, f, h, c) = (ds.n, ds.feats, b0.len(), ds.classes);
-    if w0.len() != f * h || w1.len() != h * c || b1.len() != c {
-        bail!("weight shapes inconsistent with dataset dims (f={f}, h={h}, c={c})");
-    }
+    let tensor = |name: &str| -> Result<&Tensor> {
+        weights
+            .tensors
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, t)| t)
+            .ok_or_else(|| anyhow!("missing weight tensor {name:?} for model {:?}", weights.model))
+    };
+    let needs_ones = ops
+        .iter()
+        .any(|op| matches!(op, LayerOp::Aggregate { kind: AggregateKind::SageMean }));
+    let ones_csr =
+        needs_ones.then(|| Csr { val: ds.val_ones.clone(), ..ds.csr_gcn.clone() });
+    let n = ds.n;
 
-    // Layer 1: relu(Â (X W0) + b0).
-    let xw = oracle_matmul(x, w0, n, f, h);
-    let mut hidden = vec![0.0f32; n * h];
-    oracle_aggregate(&ds.csr_gcn, &xw, h, &mut hidden);
-    for i in 0..n {
-        for j in 0..h {
-            let v = hidden[i * h + j] + b0[j];
-            hidden[i * h + j] = if v > 0.0 { v } else { 0.0 };
+    let mut cur: (Vec<f32>, usize) = (x.to_vec(), ds.feats);
+    let mut saved: Option<(Vec<f32>, usize)> = None;
+    for op in &ops {
+        match op {
+            LayerOp::Save => saved = Some(cur.clone()),
+            LayerOp::Swap => {
+                let Some(s) = saved.take() else {
+                    bail!("model {:?}: Swap with empty saved register", weights.model);
+                };
+                saved = Some(std::mem::replace(&mut cur, s));
+            }
+            LayerOp::Add => {
+                let Some((sdata, sdim)) = &saved else {
+                    bail!("model {:?}: Add with empty saved register", weights.model);
+                };
+                if *sdim != cur.1 {
+                    bail!(
+                        "model {:?}: Add joins dim {} with saved dim {sdim}",
+                        weights.model,
+                        cur.1
+                    );
+                }
+                for (o, &v) in cur.0.iter_mut().zip(sdata.iter()) {
+                    *o += v;
+                }
+            }
+            LayerOp::Concat => {
+                let Some((sdata, sdim)) = saved.take() else {
+                    bail!("model {:?}: Concat with empty saved register", weights.model);
+                };
+                let (cdata, cdim) = std::mem::replace(&mut cur, (Vec::new(), 0));
+                let dim = sdim + cdim;
+                let mut joined = vec![0.0f32; n * dim];
+                for i in 0..n {
+                    joined[i * dim..i * dim + sdim]
+                        .copy_from_slice(&sdata[i * sdim..(i + 1) * sdim]);
+                    joined[i * dim + sdim..(i + 1) * dim]
+                        .copy_from_slice(&cdata[i * cdim..(i + 1) * cdim]);
+                }
+                cur = (joined, dim);
+            }
+            LayerOp::Linear { weight } => {
+                let wt = tensor(weight)?;
+                let w = wt.as_f32()?;
+                let (k, d_out) = (wt.shape[0], wt.shape[1]);
+                cur = (oracle_matmul(&cur.0, w, n, k, d_out), d_out);
+            }
+            LayerOp::Aggregate { kind } => {
+                let (h, dim) = &cur;
+                let f = *dim;
+                let mut out = vec![0.0f32; n * f];
+                match kind {
+                    AggregateKind::Gcn => oracle_aggregate(&ds.csr_gcn, h, f, &mut out),
+                    AggregateKind::SageMean => {
+                        let ones = ones_csr.as_ref().expect("needs_ones covers SageMean");
+                        oracle_aggregate(ones, h, f, &mut out);
+                        for i in 0..n {
+                            let d = ds.csr_gcn.row_nnz(i).max(1) as f32;
+                            for o in out[i * f..(i + 1) * f].iter_mut() {
+                                *o /= d;
+                            }
+                        }
+                    }
+                    AggregateKind::SageMax => {
+                        oracle_max_aggregate(&ds.csr_gcn, h, f, &mut out)
+                    }
+                    AggregateKind::GatAttention { att_src, att_dst } => {
+                        if ds.csr_gcn.n_cols != n {
+                            bail!("GAT needs a square adjacency (self-attention over nodes)");
+                        }
+                        let a_src = tensor(att_src)?.as_f32()?;
+                        let a_dst = tensor(att_dst)?.as_f32()?;
+                        let s_src = attention_scores(h, a_src, n, f);
+                        let s_dst = attention_scores(h, a_dst, n, f);
+                        let alpha = oracle_gat_alpha(&ds.csr_gcn, &s_src, &s_dst);
+                        let ac = Csr {
+                            n_rows: ds.csr_gcn.n_rows,
+                            n_cols: ds.csr_gcn.n_cols,
+                            row_ptr: ds.csr_gcn.row_ptr.clone(),
+                            col_ind: ds.csr_gcn.col_ind.clone(),
+                            val: alpha,
+                        };
+                        oracle_aggregate(&ac, h, f, &mut out);
+                    }
+                }
+                cur = (out, f);
+            }
+            LayerOp::Bias { name } => {
+                let b = tensor(name)?.as_f32()?;
+                let dim = cur.1;
+                for i in 0..n {
+                    for j in 0..dim {
+                        cur.0[i * dim + j] += b[j];
+                    }
+                }
+            }
+            LayerOp::Relu => {
+                for v in cur.0.iter_mut() {
+                    *v = if *v > 0.0 { *v } else { 0.0 };
+                }
+            }
         }
     }
-
-    // Layer 2: Â (H W1) + b1.
-    let hw = oracle_matmul(&hidden, w1, n, h, c);
-    let mut logits = vec![0.0f32; n * c];
-    oracle_aggregate(&ds.csr_gcn, &hw, c, &mut logits);
-    for i in 0..n {
-        for j in 0..c {
-            logits[i * c + j] += b1[j];
-        }
+    if cur.1 != ds.classes {
+        bail!(
+            "model {:?}: program emitted dim {}, dataset has {} classes",
+            weights.model,
+            cur.1,
+            ds.classes
+        );
     }
-    Ok(logits)
+    Ok(cur.0)
 }
 
 #[cfg(test)]
@@ -116,7 +286,7 @@ mod tests {
     use crate::gen;
     use crate::quant::{quantize, QuantParams};
     use crate::rng::Pcg32;
-    use crate::runtime::host_forward;
+    use crate::runtime::{host_forward, KNOWN_MODELS};
     use crate::sampling::Strategy;
     use crate::tensor::Tensor;
 
@@ -146,15 +316,14 @@ mod tests {
         assert_eq!(want, got, "the canonical order IS csr_naive's order");
     }
 
-    /// Build an in-memory synthetic dataset + weights (no files).
-    fn synthetic(seed: u64, n: usize, f: usize, h: usize, c: usize) -> (Dataset, Weights) {
-        let mut rng = Pcg32::new(seed);
-        let g = gen::with_self_loops(&gen::chung_lu(n, 6.0, 2.0, &mut rng)).gcn_normalized();
+    /// Build an in-memory synthetic dataset (no files).
+    fn synthetic_dataset(rng: &mut Pcg32, n: usize, f: usize, c: usize) -> Dataset {
+        let g = gen::with_self_loops(&gen::chung_lu(n, 6.0, 2.0, rng)).gcn_normalized();
         let nnz = g.nnz();
         let feat: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
         let params = QuantParams::of(&feat);
         let featq = quantize(&feat, params);
-        let ds = Dataset {
+        Dataset {
             name: "synth".to_string(),
             n,
             nnz,
@@ -168,22 +337,38 @@ mod tests {
             qparams: params,
             labels: (0..n).map(|_| rng.usize_below(c) as i32).collect(),
             train_mask: vec![0; n],
-        };
+        }
+    }
+
+    /// Random weights matching `model`'s artifact signature.
+    fn synthetic_weights(rng: &mut Pcg32, model: &str, f: usize, h: usize, c: usize) -> Weights {
         let t = |shape: &[usize], rng: &mut Pcg32| {
             let len: usize = shape.iter().product();
             let vals: Vec<f32> = (0..len).map(|_| rng.f32() - 0.5).collect();
             Tensor::from_f32(shape, &vals)
         };
-        let weights = Weights {
-            model: "gcn".into(),
-            tensors: vec![
-                ("w0".into(), t(&[f, h], &mut rng)),
-                ("b0".into(), t(&[h], &mut rng)),
-                ("w1".into(), t(&[h, c], &mut rng)),
-                ("b1".into(), t(&[c], &mut rng)),
-            ],
-            ideal_acc: 0.5,
+        let shape = |name: &str| -> Vec<usize> {
+            match name {
+                "w0" | "w0_self" | "w0_neigh" => vec![f, h],
+                "w1" | "w1_self" | "w1_neigh" => vec![h, c],
+                "b0" | "a0_src" | "a0_dst" => vec![h],
+                "b1" | "a1_src" | "a1_dst" => vec![c],
+                other => panic!("unknown tensor {other}"),
+            }
         };
+        let tensors = crate::runtime::param_order(model)
+            .unwrap()
+            .iter()
+            .map(|&name| (name.to_string(), t(&shape(name), rng)))
+            .collect();
+        Weights { model: model.to_string(), tensors, ideal_acc: 0.5 }
+    }
+
+    /// Build an in-memory synthetic dataset + GCN weights (no files).
+    fn synthetic(seed: u64, n: usize, f: usize, h: usize, c: usize) -> (Dataset, Weights) {
+        let mut rng = Pcg32::new(seed);
+        let ds = synthetic_dataset(&mut rng, n, f, c);
+        let weights = synthetic_weights(&mut rng, "gcn", f, h, c);
         (ds, weights)
     }
 
@@ -198,37 +383,61 @@ mod tests {
 
     #[test]
     fn host_exact_fp32_forward_is_bitwise_equal_to_the_oracle() {
-        // The dispatch/threading-independence claim: whatever exact
-        // kernel and thread count the host substrate picks, per-row FP
-        // order equals the canonical order.
-        let (ds, w) = synthetic(13, 120, 9, 7, 5);
-        let want = oracle_forward(&ds, &w).unwrap();
-        let req = crate::runtime::ForwardRequest {
-            model: "gcn".into(),
-            dataset: ds.name.clone(),
-            width: None,
-            strategy: Strategy::Aes,
-            precision: crate::quant::Precision::F32,
-        };
-        for threads in [1usize, 4] {
-            let env = ExecEnv::with_threads(threads);
-            let got = host_forward(&ds, &w, &req, None, None, &env).unwrap();
-            let got = got.logits.as_f32().unwrap();
-            assert_eq!(got.len(), want.len());
-            for (i, (g, o)) in got.iter().zip(want.iter()).enumerate() {
-                assert_eq!(
-                    g.to_bits(),
-                    o.to_bits(),
-                    "logit {i} differs from the oracle at {threads} threads ({g} vs {o})"
-                );
+        // The dispatch/threading-independence claim, for every model the
+        // IR can express: whatever exact kernel and thread count the
+        // host substrate picks, per-row FP order equals the canonical
+        // order.
+        let mut rng = Pcg32::new(13);
+        let ds = synthetic_dataset(&mut rng, 120, 9, 5);
+        for &model in KNOWN_MODELS {
+            let w = synthetic_weights(&mut rng, model, 9, 7, 5);
+            let want = oracle_forward(&ds, &w).unwrap();
+            let req = crate::runtime::ForwardRequest {
+                model: model.into(),
+                dataset: ds.name.clone(),
+                width: None,
+                strategy: Strategy::Aes,
+                precision: crate::quant::Precision::F32,
+            };
+            for threads in [1usize, 4] {
+                let env = ExecEnv::with_threads(threads);
+                let got = host_forward(&ds, &w, &req, None, None, &env).unwrap();
+                let got = got.logits.as_f32().unwrap();
+                assert_eq!(got.len(), want.len());
+                for (i, (g, o)) in got.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        o.to_bits(),
+                        "{model}: logit {i} differs from the oracle at {threads} threads \
+                         ({g} vs {o})"
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn oracle_rejects_non_gcn_models() {
+    fn sage_mean_divides_by_the_full_degree_on_the_exact_route() {
+        // One isolated row (self-loop only) and one busy row: the mean
+        // divisor is row_nnz on the exact route, and the all-ones
+        // operand (not Â) feeds the numerator.
+        let mut rng = Pcg32::new(29);
+        let ds = synthetic_dataset(&mut rng, 40, 4, 3);
+        let w = synthetic_weights(&mut rng, "sage", 4, 5, 3);
+        let logits = oracle_forward(&ds, &w).unwrap();
+        assert_eq!(logits.len(), 40 * 3);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn oracle_rejects_unknown_models() {
         let (ds, mut w) = synthetic(3, 20, 4, 3, 2);
-        w.model = "sage".into();
+        w.model = "mlp".into();
+        assert!(oracle_forward(&ds, &w).is_err());
+        // A known model whose weights don't match its schema is rejected
+        // by shape validation, not a panic inside matmul.
+        let (ds, mut w) = synthetic(4, 20, 4, 3, 2);
+        w.model = "sage".into(); // gcn-shaped tensors under a sage name
         assert!(oracle_forward(&ds, &w).is_err());
     }
 }

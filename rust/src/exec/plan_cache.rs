@@ -965,7 +965,12 @@ mod tests {
             stream: false,
             shard: Some(ShardSpec::by_count(3)),
             shard_bounds: None,
-            shard_cache: Some(ShardCacheRef { units: &units, tag: "synth", epoch: 0 }),
+            shard_cache: Some(ShardCacheRef {
+                units: &units,
+                tag: "synth",
+                epoch: 0,
+                vals: crate::runtime::ir::ModelVals::Gcn,
+            }),
         };
         let plan = prepare_plan(&store, Precision::F32, &spec, 8, &env).unwrap();
         let sharded = plan.sharded.as_ref().expect("shard spec must shard the plan");

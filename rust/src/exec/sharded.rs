@@ -23,8 +23,9 @@
 //! coordinator for every strategy/width/precision it serves.
 //!
 //! Units are cached in a [`PlanCache<ShardKey, ShardUnit>`] shared
-//! across routes: units depend only on (graph, width, strategy, row
-//! range) — not on precision or feature representation — so a second
+//! across routes: units depend only on (graph, value family, width,
+//! strategy, row range) — not on precision or feature representation
+//! — so a second
 //! route over the same graph finds every unit warm, and a prefetch of a
 //! partially-warm route builds **only the cold shards**. Under live
 //! mutation the same machinery is the retention lever: resolution is
@@ -40,6 +41,7 @@ use std::ops::Range;
 use std::sync::Arc;
 
 use crate::graph::{working_set_bytes, Csr, Ell, GraphShard, ShardPlan, ShardSpec};
+use crate::runtime::ir::ModelVals;
 use crate::sampling::{sample_ell, shard_width, Strategy, FP32_EDGE_BYTES};
 use crate::spmm::{dense_tile_viable, AdjQuant, BlockedCsr, DenseTile, BCSR_BLOCK_ROWS};
 
@@ -66,6 +68,11 @@ pub struct ShardCacheRef<'a> {
     pub tag: &'a str,
     /// Graph epoch the requesting route's dataset snapshot carries.
     pub epoch: u64,
+    /// Value family of the operand the route aggregates with. Units
+    /// carry their CSR slice's **values**, so a GCN-normalized (Â)
+    /// route and an all-ones (GraphSAGE mean) route over the same graph
+    /// must never share a unit — the family is part of the key.
+    pub vals: ModelVals,
 }
 
 /// The sticky serving partition of one dataset: cut points derived once
@@ -183,6 +190,10 @@ pub struct ShardKey {
     pub strategy: Option<Strategy>,
     /// Global row range `[start, end)` the unit covers.
     pub rows: (usize, usize),
+    /// Value family of the aggregation operand (Â vs all-ones) — the
+    /// unit's CSR/ELL slices carry these values, so families must not
+    /// alias. Not encoded in `tag`, which names the graph *structure*.
+    pub vals: ModelVals,
     /// Fingerprint of the cost model installed when the key was made
     /// (0 = heuristics). Units record which selection table shaped
     /// their materialized formats, so swapping in a new model (or
@@ -198,12 +209,14 @@ impl ShardKey {
         width: Option<usize>,
         strategy: Strategy,
         rows: &Range<usize>,
+        vals: ModelVals,
     ) -> ShardKey {
         ShardKey {
             tag: tag.to_string(),
             width,
             strategy: width.map(|_| strategy),
             rows: (rows.start, rows.end),
+            vals,
             model: tune::installed_fingerprint(),
         }
     }
@@ -423,7 +436,7 @@ fn resolve_unit(
 ) -> (Arc<ShardUnit>, bool) {
     match cache {
         Some(cr) => {
-            let key = ShardKey::new(cr.tag, width, strategy, &shard.rows);
+            let key = ShardKey::new(cr.tag, width, strategy, &shard.rows, cr.vals);
             cr.units
                 .get_or_try_insert_versioned(&key, cr.epoch, || {
                     Ok::<_, Infallible>(build_unit(shard, width, strategy, feat_dim))
@@ -761,7 +774,7 @@ mod tests {
         cache: &'a PlanCache<ShardKey, ShardUnit>,
         epoch: u64,
     ) -> Option<ShardCacheRef<'a>> {
-        Some(ShardCacheRef { units: cache, tag: "ds", epoch })
+        Some(ShardCacheRef { units: cache, tag: "ds", epoch, vals: ModelVals::Gcn })
     }
 
     #[test]
@@ -789,9 +802,14 @@ mod tests {
         assert_eq!(cache.len(), 8);
 
         // Exact units ignore the strategy (normalized key).
-        let a = ShardKey::new("ds", None, Strategy::Aes, &(0..10));
-        let b = ShardKey::new("ds", None, Strategy::Sfs, &(0..10));
+        let a = ShardKey::new("ds", None, Strategy::Aes, &(0..10), ModelVals::Gcn);
+        let b = ShardKey::new("ds", None, Strategy::Sfs, &(0..10), ModelVals::Gcn);
         assert_eq!(a, b);
+
+        // ...but the operand's value family is never collapsed: an
+        // all-ones (SAGE-mean) unit must not alias the Â unit.
+        let ones = ShardKey::new("ds", None, Strategy::Aes, &(0..10), ModelVals::Ones);
+        assert_ne!(a, ones);
     }
 
     #[test]

@@ -249,8 +249,10 @@ pub fn merge_bench_json(existing: &str, fresh: &JsonValue) -> Result<JsonValue> 
     Ok(JsonValue::Obj(base_map))
 }
 
-/// Ask the server which datasets it serves (name → node count).
-fn fetch_datasets(stream: &mut TcpStream) -> Result<Vec<(String, usize)>> {
+/// Ask the server which datasets (name → node count) and models it
+/// serves. A status response without a `models` field (pre-zoo server)
+/// is read as serving GCN only.
+fn fetch_status(stream: &mut TcpStream) -> Result<(Vec<(String, usize)>, Vec<String>)> {
     let resp = wire::roundtrip(stream, &WireRequest::Status { id: 0 })?;
     if wire::response_status(&resp) != "ok" {
         bail!("status request failed: {}", resp.to_string());
@@ -262,31 +264,41 @@ fn fetch_datasets(stream: &mut TcpStream) -> Result<Vec<(String, usize)>> {
     if out.is_empty() {
         bail!("server reports no datasets");
     }
-    Ok(out)
+    let models = match resp.get("models") {
+        Ok(v) => v
+            .as_arr()?
+            .iter()
+            .map(|m| Ok(m.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?,
+        Err(_) => vec!["gcn".to_string()],
+    };
+    Ok((out, models))
 }
 
-/// The default route grid over the server's datasets: model `gcn`,
-/// exact + w8, strategies aes/sfs (sampled routes only — strategy is
-/// moot for exact), precisions u8-device/f32.
-fn default_routes(datasets: &[(String, usize)]) -> Vec<RouteKey> {
+/// The default route grid over the server's datasets: the scenario's
+/// models × {exact + w8} × strategies aes/sfs (sampled routes only —
+/// strategy is moot for exact) × precisions u8-device/f32.
+fn default_routes(datasets: &[(String, usize)], models: &[String]) -> Vec<RouteKey> {
     let mut routes = Vec::new();
-    for (ds, _) in datasets {
-        for precision in [Precision::U8Device, Precision::F32] {
-            routes.push(RouteKey {
-                model: "gcn".into(),
-                dataset: ds.clone(),
-                width: None,
-                strategy: Strategy::Aes,
-                precision,
-            });
-            for strategy in [Strategy::Aes, Strategy::Sfs] {
+    for model in models {
+        for (ds, _) in datasets {
+            for precision in [Precision::U8Device, Precision::F32] {
                 routes.push(RouteKey {
-                    model: "gcn".into(),
+                    model: model.clone(),
                     dataset: ds.clone(),
-                    width: Some(8),
-                    strategy,
+                    width: None,
+                    strategy: Strategy::Aes,
                     precision,
                 });
+                for strategy in [Strategy::Aes, Strategy::Sfs] {
+                    routes.push(RouteKey {
+                        model: model.clone(),
+                        dataset: ds.clone(),
+                        width: Some(8),
+                        strategy,
+                        precision,
+                    });
+                }
             }
         }
     }
@@ -424,11 +436,19 @@ fn mutate_stream(
 pub fn run_loadgen(addr: &str, scenario: &Scenario) -> Result<LoadReport> {
     let mut control = TcpStream::connect(addr)
         .with_context(|| format!("connecting to {addr} (is `repro serve --listen` up?)"))?;
-    let datasets = fetch_datasets(&mut control)?;
+    let (datasets, served_models) = fetch_status(&mut control)?;
     drop(control);
 
     let routes = if scenario.routes.is_empty() {
-        default_routes(&datasets)
+        for m in &scenario.models {
+            if !served_models.iter().any(|s| s == m) {
+                bail!(
+                    "scenario model {m:?} is not in the server's roster \
+                     (serving: {served_models:?})"
+                );
+            }
+        }
+        default_routes(&datasets, &scenario.models)
     } else {
         scenario.routes.clone()
     };
@@ -655,7 +675,8 @@ mod tests {
 
     #[test]
     fn default_grid_covers_both_precisions_and_skips_exact_duplicates() {
-        let routes = default_routes(&[("evalpow".into(), 160), ("evaluni".into(), 160)]);
+        let datasets = [("evalpow".to_string(), 160), ("evaluni".to_string(), 160)];
+        let routes = default_routes(&datasets, &["gcn".to_string()]);
         assert_eq!(routes.len(), 12);
         let labels: Vec<String> = routes.iter().map(|r| r.label()).collect();
         assert!(labels.contains(&"gcn/evalpow/exact/aes/f32".to_string()));
@@ -665,5 +686,12 @@ mod tests {
         // All labels unique.
         let unique: std::collections::BTreeSet<_> = labels.iter().collect();
         assert_eq!(unique.len(), labels.len());
+        // The model axis fans the same grid per model, still collision-free.
+        let zoo = default_routes(&datasets, &["gcn".to_string(), "gat".to_string()]);
+        assert_eq!(zoo.len(), 24);
+        let zoo_labels: Vec<String> = zoo.iter().map(|r| r.label()).collect();
+        assert!(zoo_labels.contains(&"gat/evalpow/w8/aes/f32".to_string()));
+        let unique: std::collections::BTreeSet<_> = zoo_labels.iter().collect();
+        assert_eq!(unique.len(), zoo_labels.len());
     }
 }

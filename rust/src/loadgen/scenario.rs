@@ -48,9 +48,14 @@ pub struct Scenario {
     pub nodes_per_request: usize,
     /// Base RNG seed; worker i derives its own stream from it.
     pub seed: u64,
+    /// Models the derived default grid fans over when `routes` is
+    /// empty. Defaults to `["gcn"]` so old scenario files keep their
+    /// exact traffic mix; add `"sage"`/`"gat"` to offer zoo traffic.
+    /// Every listed model must be in the server's `status` roster.
+    pub models: Vec<String>,
     /// Explicit routes. Empty = derive the default grid from the
-    /// server's `status` response (model `gcn`, widths {exact, 8},
-    /// strategies {aes, sfs}, precisions {u8-device, f32}).
+    /// server's `status` response (`models` above × widths {exact, 8} ×
+    /// strategies {aes, sfs} × precisions {u8-device, f32}).
     pub routes: Vec<RouteKey>,
     /// Optional concurrent mutate stream: period between deltas.
     pub mutate_period: Option<Duration>,
@@ -69,6 +74,7 @@ impl Default for Scenario {
             alpha: 1.1,
             nodes_per_request: 8,
             seed: 0x5EED_CAFE,
+            models: vec!["gcn".into()],
             routes: Vec::new(),
             mutate_period: None,
             mutate_dataset: None,
@@ -121,6 +127,16 @@ impl Scenario {
         }
         if let Ok(v) = doc.get("seed") {
             s.seed = v.as_f64()? as u64;
+        }
+        if let Ok(v) = doc.get("models") {
+            s.models = v
+                .as_arr()?
+                .iter()
+                .map(|m| Ok(m.as_str().context("models: entries must be strings")?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            if s.models.is_empty() {
+                anyhow::bail!("models must name at least one model");
+            }
         }
         if let Ok(v) = doc.get("routes") {
             s.routes = v
@@ -192,6 +208,7 @@ mod tests {
             r#"{"name":"spike","connections":16,"warmup_ms":100,"duration_ms":500,
                 "arrival":"open","rate_rps":200.5,"alpha":0.0,"nodes_per_request":4,
                 "seed":42,"mutate_period_ms":50,"mutate_dataset":"evalpow",
+                "models":["gcn","gat"],
                 "routes":[{"model":"gcn","dataset":"evalpow","width":8,
                            "strategy":"aes","precision":"f32"}]}"#,
         )
@@ -199,6 +216,7 @@ mod tests {
         assert_eq!(s.name, "spike");
         assert_eq!(s.connections, 16);
         assert_eq!(s.arrival, Arrival::Open { rate_rps: 200.5 });
+        assert_eq!(s.models, vec!["gcn".to_string(), "gat".to_string()]);
         assert_eq!(s.routes.len(), 1);
         assert_eq!(s.routes[0].label(), "gcn/evalpow/w8/aes/f32");
         assert_eq!(s.mutate_period, Some(Duration::from_millis(50)));
@@ -211,6 +229,7 @@ mod tests {
         assert!(Scenario::from_json(r#"{"arrival":"open"}"#).is_err());
         assert!(Scenario::from_json(r#"{"connections":0}"#).is_err());
         assert!(Scenario::from_json(r#"{"arrival":"sideways"}"#).is_err());
+        assert!(Scenario::from_json(r#"{"models":[]}"#).is_err());
     }
 
     #[test]

@@ -103,10 +103,10 @@ USAGE:
   repro inspect    [--artifacts DIR]
   repro infer      --model gcn|sage --dataset NAME [--width W] [--strategy afs|sfs|aes] [--fp32] [--artifacts DIR]
   repro serve      [--requests N] [--workers K] [--queue Q] [--batch B] [--prefetch P]
-                   [--host] [--shards N] [--shard-budget MIB] [--artifacts DIR]
+                   [--host] [--models M1,M2] [--shards N] [--shard-budget MIB] [--artifacts DIR]
   repro serve      --listen ADDR [--eval-data DIR] [--port-file PATH] [--high-water H]
                    [--max-seconds S] [--workers K] [--queue Q] [--batch B] [--prefetch P]
-                   [--host] [--shards N] [--shard-budget MIB] [--artifacts DIR]
+                   [--host] [--models M1,M2] [--shards N] [--shard-budget MIB] [--artifacts DIR]
   repro shard-server --listen ADDR [--eval-data DIR] [--port-file PATH] [--high-water H]
                    [--max-seconds S] [--shards N] [--shard-budget MIB] [serve --listen flags]
   repro router     --listen ADDR --workers HOST:PORT,HOST:PORT,... [--port-file PATH]
@@ -145,6 +145,10 @@ corrupt, or schema-stale (docs/dispatch.md).
 `serve --listen` speaks the length-prefixed TCP wire protocol
 (docs/serving.md): infer/logits/mutate plus the status/metrics/routes
 ops surface, with load shedding past --high-water in-flight requests.
+--models picks the served model roster (comma-separated; docs/models.md
+— the host backend runs any model as a layer-graph IR program, so
+--eval-data defaults to the full zoo gcn,sage,gat; artifact-backed
+serving defaults to gcn,sage, the models `make artifacts` compiles).
 --eval-data DIR serves the seeded conformance datasets on the host
 backend (no artifacts needed — what CI does); --port-file writes the
 bound address (bind :0 for an ephemeral port); --max-seconds self-exits
@@ -199,6 +203,32 @@ fn run() -> Result<()> {
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// Parse `--models M1,M2` into the serving roster, defaulting to
+/// `default` when the flag is absent. Every name must be a model the
+/// layer-graph IR knows (`runtime::KNOWN_MODELS`).
+fn models_flag(args: &Args, default: &[&str]) -> Result<Vec<String>> {
+    let models: Vec<String> = match args.get("models") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => default.iter().map(|s| s.to_string()).collect(),
+    };
+    if models.is_empty() {
+        bail!("--models needs at least one model");
+    }
+    for m in &models {
+        if !aes_spmm::runtime::KNOWN_MODELS.contains(&m.as_str()) {
+            bail!(
+                "--models: unknown model {m:?} (known: {})",
+                aes_spmm::runtime::KNOWN_MODELS.join("|")
+            );
+        }
+    }
+    Ok(models)
 }
 
 /// Install a learned dispatch cost model for this process when asked
@@ -360,12 +390,10 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 
     let engine = Arc::new(Engine::new(artifacts)?);
     let datasets = engine.manifest().dataset_names();
-    // The host substrate implements the gcn forward only.
-    let models = if args.has("host") {
-        vec!["gcn".to_string()]
-    } else {
-        vec!["gcn".to_string(), "sage".to_string()]
-    };
+    // Both substrates serve the artifact-compiled models (the host
+    // backend runs them as IR programs); --models narrows or widens the
+    // roster when the artifacts dir carries more.
+    let models = models_flag(args, &["gcn", "sage"])?;
     let store = Arc::new(ModelStore::load(artifacts, &datasets, &models)?);
 
     let cfg = CoordinatorConfig {
@@ -513,24 +541,32 @@ fn cmd_serve_listen(artifacts: &str, args: &Args) -> Result<()> {
     };
 
     let (store, backend) = if let Some(dir) = args.get("eval-data") {
-        // Self-contained serving over the seeded conformance datasets —
-        // the host substrate implements the gcn forward only.
+        // Self-contained serving over the seeded conformance datasets:
+        // the host substrate interprets any IR model, so the default
+        // roster is the whole served zoo (docs/models.md).
+        let models = models_flag(args, aes_spmm::runtime::SERVED_MODELS)?;
         let dir = std::path::PathBuf::from(dir);
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating {}", dir.display()))?;
         let names = aes_spmm::eval::write_eval_datasets(&dir)?;
-        let store = ModelStore::load(&dir, &names, &["gcn".to_string()])?;
-        println!("eval data: {} dataset(s) under {}", names.len(), dir.display());
+        let store = ModelStore::load(&dir, &names, &models)?;
+        println!(
+            "eval data: {} dataset(s), models {} under {}",
+            names.len(),
+            models.join(","),
+            dir.display()
+        );
         (Arc::new(store), Backend::Host)
     } else if args.has("host") {
+        let models = models_flag(args, &["gcn", "sage"])?;
         let engine = Engine::new(artifacts)?;
         let datasets = engine.manifest().dataset_names();
-        let store = ModelStore::load(artifacts, &datasets, &["gcn".to_string()])?;
+        let store = ModelStore::load(artifacts, &datasets, &models)?;
         (Arc::new(store), Backend::Host)
     } else {
+        let models = models_flag(args, &["gcn", "sage"])?;
         let engine = Arc::new(Engine::new(artifacts)?);
         let datasets = engine.manifest().dataset_names();
-        let models = vec!["gcn".to_string(), "sage".to_string()];
         let store = ModelStore::load(artifacts, &datasets, &models)?;
         (Arc::new(store), Backend::Pjrt(engine))
     };

@@ -13,6 +13,10 @@ use crate::tensor::{read_nbt, Tensor};
 pub const GCN_PARAM_ORDER: &[&str] = &["w0", "b0", "w1", "b1"];
 pub const SAGE_PARAM_ORDER: &[&str] =
     &["w0_self", "w0_neigh", "b0", "w1_self", "w1_neigh", "b1"];
+/// GAT: per-layer projection + the two halves of the attention vector
+/// (`e_ij = LeakyReLU(a_srcᵀ h_i + a_dstᵀ h_j)`) + bias.
+pub const GAT_PARAM_ORDER: &[&str] =
+    &["w0", "a0_src", "a0_dst", "b0", "w1", "a1_src", "a1_dst", "b1"];
 
 /// A fully loaded dataset: graph structure (CSR with self-loops), both
 /// value arrays, f32 + INT8 features, labels, and the train/test split.
@@ -102,11 +106,7 @@ impl Weights {
             .as_ref()
             .join(format!("weights_{model}_{dataset}.nbt"));
         let nbt = read_nbt(&path)?;
-        let order: &[&str] = match model {
-            "gcn" => GCN_PARAM_ORDER,
-            "sage" => SAGE_PARAM_ORDER,
-            _ => bail!("unknown model {model:?}"),
-        };
+        let order: &[&str] = super::ir::param_order(model)?;
         let tensors = order
             .iter()
             .map(|&k| Ok((k.to_string(), nbt.get(k)?.clone())))
@@ -134,6 +134,10 @@ mod tests {
         assert_eq!(
             SAGE_PARAM_ORDER,
             &["w0_self", "w0_neigh", "b0", "w1_self", "w1_neigh", "b1"]
+        );
+        assert_eq!(
+            GAT_PARAM_ORDER,
+            &["w0", "a0_src", "a0_dst", "b0", "w1", "a1_src", "a1_dst", "b1"]
         );
     }
 }

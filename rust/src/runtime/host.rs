@@ -2,39 +2,60 @@
 //! + dense MLP) promoted from a test-only cross-check to a first-class
 //! execution backend.
 //!
-//! Aggregations route through [`crate::exec`]'s kernel dispatch, so the
-//! same adaptive choice (naive / row-cache / parallel / ELL) serves the
-//! CPU path that the compiled artifacts' fused kernel serves on device;
-//! dense multiplies row-chunk across the same persistent pool. When the
+//! Since the model-zoo refactor this file is an **interpreter for the
+//! layer-graph IR** ([`crate::runtime::ir`]): a model arrives as a
+//! `Vec<LayerOp>` and every [`LayerOp::Aggregate`] routes through
+//! [`crate::exec`]'s kernel dispatch — plan cache, sharded units, tuned
+//! selection, SIMD/INT8 kernels — so GCN, GraphSAGE and GAT all serve
+//! through the same machinery instead of private code paths. Dense
+//! multiplies row-chunk across the same persistent pool. When the
 //! coordinator passes a cached [`ExecPlan`], both the sampled ELL and
 //! the graph profile come from the cache — no per-batch re-sampling or
-//! re-profiling. This keeps the full serving stack runnable (and
-//! testable end to end) on machines without a PJRT runtime.
+//! re-profiling.
 //!
-//! Numerics contract: on the exact fp32 path this forward is
+//! Two peepholes keep the interpreted GCN bit-identical to (and as fast
+//! as) the pre-IR hard-coded forward:
+//!
+//! * a `Linear` whose operand is the raw input register streams
+//!   row-blocks off the feature handle ([`matmul_streamed`]) or chunks
+//!   along shard bounds, exactly like the old layer 1;
+//! * on the true-INT8 route, `Linear → Aggregate(Gcn)` over the input
+//!   register flips to aggregate-first (`(Â ×_i8 X) W₀`) so the integer
+//!   kernels see the raw codes. The flip requires the *GCN* aggregate —
+//!   SAGE/GAT programs never trigger it and compute in fp32 over
+//!   streamed/dequantized features.
+//!
+//! Numerics contract: on the exact fp32 path this interpreter is
 //! bit-identical to [`crate::eval::oracle_forward`]'s canonical
 //! reduction order at any thread count — every exact kernel, thread
 //! chunk, and shard cut preserves per-row FP order, and the conformance
-//! grid (`crate::eval`) checks the equality through the coordinator.
+//! grid (`crate::eval`) checks the equality through the coordinator,
+//! per model.
 
 use std::ops::Range;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::exec::{
     run_ell, run_ell_i8, run_exact, run_exact_i8, select_kernel, select_kernel_i8, AdjQuantPlan,
     ExecEnv, ExecPlan, GraphProfile, ShardedPlan, PAR_MIN_FLOPS,
 };
-use crate::graph::Ell;
+use crate::graph::{Csr, Ell};
 use crate::quant::{dequantize, ChunkedParams, FeatureHandle, Features, Precision};
-use crate::sampling::sample_ell_par;
+use crate::sampling::{sample_ell_par, strategy_params};
+use crate::spmm::segmented::{
+    attention_scores_par, gat_alpha_csr, gat_alpha_csr_par, gat_alpha_ell, gat_alpha_ell_par,
+    segmented_max_csr, segmented_max_csr_par, segmented_max_ell, segmented_max_ell_par,
+};
+use crate::spmm::simd;
 use crate::spmm::AdjQuant;
 use crate::tensor::{DType, Tensor};
 
 use super::dataset::{Dataset, Weights};
 use super::engine::ExecStats;
 use super::infer::{ForwardRequest, ForwardResult};
+use super::ir::{model_ir, validate_weights, AggregateKind, LayerOp};
 
 /// Multiply rows `row0..row0 + out_chunk.len()/n` of `A` into
 /// `out_chunk`, skipping zero A entries (hidden activations are
@@ -118,16 +139,16 @@ fn matmul_sharded(
     out
 }
 
-/// Layer-1 multiply over a streamed feature handle: each row chunk
-/// dequantizes its own INT8 block into a chunk-local scratch buffer and
-/// multiplies — dequantization is lazy, per row-block, inside the exec
-/// worker, and the fp32 feature matrix never materializes whole. With
-/// `bounds` (a sharded plan's row cuts), chunks align to the shard
-/// boundaries instead of the thread heuristic, so each shard's feature
-/// block stages exactly once per forward. Inner loops mirror [`matmul`]
-/// exactly, so per-row FP order (and therefore the result) is identical
-/// to the eager path given the same dequantized values — chunked either
-/// way.
+/// Input-register multiply over a streamed feature handle: each row
+/// chunk dequantizes its own INT8 block into a chunk-local scratch
+/// buffer and multiplies — dequantization is lazy, per row-block, inside
+/// the exec worker, and the fp32 feature matrix never materializes
+/// whole. With `bounds` (a sharded plan's row cuts), chunks align to the
+/// shard boundaries instead of the thread heuristic, so each shard's
+/// feature block stages exactly once per forward. Inner loops mirror
+/// [`matmul`] exactly, so per-row FP order (and therefore the result) is
+/// identical to the eager path given the same dequantized values —
+/// chunked either way.
 fn matmul_streamed(
     fh: &FeatureHandle,
     b: &[f32],
@@ -187,22 +208,33 @@ fn matmul_streamed(
     out
 }
 
-/// Run one full-graph GCN forward on the host:
-/// `logits = Â(relu(Â(XW₀)+b₀)W₁)+b₁` with Â either exact or the route's
-/// sampled ELL plan. `plan` (from the coordinator's cache) supplies the
-/// sampled ELL and the operand profile; without it, a one-shot caller
-/// pays one sampling + profiling pass here. When the plan carries a
-/// [`ShardedPlan`], both aggregations fan out as per-shard tasks and the
-/// dense multiplies chunk along the same shard row cuts
-/// (`matmul_sharded`) — output bit-identical to the unsharded path.
+/// One value of the IR's two-register machine: the request's raw input
+/// features (kept symbolic so `Linear` can stream/flip), or a
+/// materialized row-major `[n, dim]` matrix.
+enum Value {
+    Input,
+    Dense(Vec<f32>, usize),
+}
+
+/// Run one full-graph forward on the host by interpreting the model's
+/// layer-graph IR, with the aggregation operand either exact or the
+/// route's sampled ELL plan. `plan` (from the coordinator's cache)
+/// supplies the sampled ELL and the operand profile; without it, a
+/// one-shot caller pays one sampling + profiling pass here. When the
+/// plan carries a [`ShardedPlan`], every aggregation fans out as
+/// per-shard tasks and the dense multiplies chunk along the same shard
+/// row cuts (`matmul_sharded`) — output bit-identical to the unsharded
+/// path for every model (the GAT softmax is row-local; see
+/// `docs/models.md`).
 ///
 /// `features` overrides the dataset tensor; a u8 tensor is dequantized
 /// host-side with the dataset's Eq. 2 params (the CPU stand-in for the
 /// on-device Pallas dequant). When the cached plan carries a
 /// [`Features::Streamed`] handle (and no explicit `features` override),
-/// layer 1 streams INT8 row-blocks straight off the mmap instead — the
-/// `transfer` stat is then near-zero and the lazy dequant time lands
-/// inside `execute` (and in the feature store's `LoadTotals`).
+/// input-register multiplies stream INT8 row-blocks straight off the
+/// mmap instead — the `transfer` stat is then near-zero and the lazy
+/// dequant time lands inside `execute` (and in the feature store's
+/// `LoadTotals`).
 pub fn host_forward(
     ds: &Dataset,
     weights: &Weights,
@@ -211,12 +243,34 @@ pub fn host_forward(
     plan: Option<&ExecPlan>,
     env: &ExecEnv,
 ) -> Result<ForwardResult> {
-    if req.model != "gcn" {
-        bail!("host backend implements the gcn forward only (requested {:?})", req.model);
+    let ops = model_ir(&req.model)?;
+    if weights.model != req.model {
+        bail!("weights are for model {:?}, request wants {:?}", weights.model, req.model);
     }
+    // Shape-check the whole program up front: a bad artifact fails here
+    // with the tensor's name instead of panicking inside `matmul`.
+    validate_weights(&req.model, ds.feats, ds.classes, &weights.tensors)?;
+    let tensor = |name: &str| -> Result<&Tensor> {
+        weights
+            .tensors
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, t)| t)
+            .ok_or_else(|| anyhow!("missing weight tensor {name:?} for model {:?}", req.model))
+    };
+    // The i8 aggregate-first flip needs `Linear → Aggregate(Gcn)` over
+    // the input register — resolve that property once.
+    let flip_eligible = matches!(
+        (ops.first(), ops.get(1)),
+        (Some(LayerOp::Linear { .. }), Some(LayerOp::Aggregate { kind: AggregateKind::Gcn }))
+    );
+    let needs_mean = ops
+        .iter()
+        .any(|op| matches!(op, LayerOp::Aggregate { kind: AggregateKind::SageMean }));
 
     // Stage the features (the host analog of the transfer stage). The
-    // streamed path stages nothing here — blocks flow lazily in layer 1.
+    // streamed path stages nothing here — blocks flow lazily inside the
+    // input-register multiplies.
     let t0 = Instant::now();
     let streamed: Option<&FeatureHandle> = match (features, plan) {
         (None, Some(p)) => match &p.features {
@@ -225,14 +279,16 @@ pub fn host_forward(
         },
         _ => None,
     };
-    // True INT8 compute ([`Precision::I8Compute`]): layer 1 feeds the u8
-    // codes straight into the `i8×u8→i32` kernels (aggregate-first:
+    // True INT8 compute ([`Precision::I8Compute`]): the flip feeds the
+    // u8 codes straight into the `i8×u8→i32` kernels (aggregate-first:
     // `Â ×_i8 X`, then the dense W0), so no fp32 feature block is ever
     // staged. Codes come zero-copy from the plan's streamed handle, from
     // the coordinator's u8 override, or from the dataset's own `featq`
     // for plan-less callers; a dense-only representation (no codes, or a
-    // plan without an [`AdjQuantPlan`]) falls back to the fp32 path.
-    let i8_codes: Option<&[u8]> = if matches!(req.precision, Precision::I8Compute) {
+    // plan without an [`AdjQuantPlan`]) — and any program that is not
+    // flip-eligible — falls back to the fp32 path.
+    let i8_codes: Option<&[u8]> = if matches!(req.precision, Precision::I8Compute) && flip_eligible
+    {
         match (plan, streamed, features) {
             (Some(p), Some(h), _) if p.adj.is_some() => Some(h.quantized_rows(0, h.n_rows())),
             (Some(p), None, Some(t)) if p.adj.is_some() && t.dtype == DType::U8 => {
@@ -267,7 +323,7 @@ pub fn host_forward(
             }
             &[]
         }
-        // Codes route: layer 1 never touches fp32 features.
+        // Codes route: the input register never touches fp32 features.
         _ if i8_codes.is_some() => &[],
         (None, None) => ds.feat.as_f32()?,
         (None, Some(t)) if t.dtype == DType::F32 => t.as_f32()?,
@@ -287,6 +343,20 @@ pub fn host_forward(
     // otherwise sampled/profiled once here. A sharded plan supersedes
     // the whole-graph operand — its units carry their own profiles.
     let sharded: Option<&ShardedPlan> = plan.and_then(|p| p.sharded.as_deref());
+    // SageMean multiplies the all-ones value family; sampling is
+    // structure-only, so the ones operand shares the GCN structure with
+    // the values swapped. Built only when a host-local operand will
+    // actually read values (a cached plan's ELL / shard units already
+    // carry family values, and GAT/max ignore them).
+    let ones_csr: Option<Csr> = if needs_mean
+        && sharded.is_none()
+        && !matches!((req.width, plan), (Some(_), Some(p)) if p.ell.is_some())
+    {
+        Some(Csr { val: ds.val_ones.clone(), ..ds.csr_gcn.clone() })
+    } else {
+        None
+    };
+    let base_csr: &Csr = ones_csr.as_ref().unwrap_or(&ds.csr_gcn);
     let sampled;
     let (ell, profile): (Option<&Ell>, GraphProfile) = match (req.width, plan) {
         _ if sharded.is_some() => (None, plan.expect("sharded implies a plan").profile),
@@ -294,8 +364,8 @@ pub fn host_forward(
         (None, None) => (None, GraphProfile::of(&ds.csr_gcn)),
         (Some(_), Some(p)) if p.ell.is_some() => (p.ell.as_deref(), p.profile),
         (Some(w), _) => {
-            let mut e = Ell::zeros(ds.csr_gcn.n_rows, ds.csr_gcn.n_cols, w);
-            sample_ell_par(&ds.csr_gcn, w, req.strategy, &mut e, env.threads);
+            let mut e = Ell::zeros(base_csr.n_rows, base_csr.n_cols, w);
+            sample_ell_par(base_csr, w, req.strategy, &mut e, env.threads);
             sampled = e;
             (Some(&sampled), GraphProfile::of_ell(&sampled))
         }
@@ -319,83 +389,316 @@ pub fn host_forward(
         }
         (None, _) => None,
     };
-    let aggregate = |b: &[f32], f_dim: usize, out: &mut [f32]| {
-        // Sharded route: independent per-shard tasks, per-shard dispatch,
-        // row-concatenation merge.
+    // Weighted-sum aggregation over the route's operand (GCN's Â or
+    // SAGE's ones): sharded fans out per-shard tasks with per-shard
+    // dispatch and the row-concatenation merge; otherwise one O(1)
+    // dispatch from the cached profile.
+    let aggregate_sum = |b: &[f32], f_dim: usize, out: &mut [f32]| {
         if let Some(sp) = sharded {
             sp.run(b, f_dim, out, env);
             return;
         }
-        // O(1) per-layer dispatch from the cached profile.
         let kind = select_kernel(&profile, f_dim, width, env);
         match ell {
             Some(e) => run_ell(kind, e, b, f_dim, out, env.threads),
-            None => run_exact(kind, &ds.csr_gcn, b, f_dim, out, env.threads),
+            None => run_exact(kind, base_csr, b, f_dim, out, env.threads),
+        }
+    };
+    // Edges actually summed into row `i` — the SageMean divisor. Pure
+    // structure: sampled routes count the plan's slots (overlapping
+    // draws included, matching `ell_spmm_mean`), exact routes the row's
+    // nnz. Shard units reproduce the global decision (exhaustive units
+    // keep every edge; sampled units use the global width/strategy), so
+    // the divisor is identical sharded and unsharded.
+    let sum_count = |i: usize| -> usize {
+        let nnz = ds.csr_gcn.row_nnz(i);
+        match req.width {
+            Some(w) => strategy_params(nnz, w, req.strategy).slots,
+            None => nnz,
         }
     };
     // Dense layers chunk along the same row cuts as the shards.
     let shard_bounds = sharded.map(|sp| sp.bounds());
+    let n = ds.n;
+    let lvl = simd::level();
 
-    // Weights in GCN_PARAM_ORDER: w0 [f,h], b0 [h], w1 [h,c], b1 [c].
-    let w0 = weights.tensors[0].1.as_f32()?;
-    let b0 = weights.tensors[1].1.as_f32()?;
-    let w1 = weights.tensors[2].1.as_f32()?;
-    let b1 = weights.tensors[3].1.as_f32()?;
-    let (n, f, h, c) = (ds.n, ds.feats, b0.len(), ds.classes);
-    if w0.len() != f * h || w1.len() != h * c || b1.len() != c {
-        bail!("weight shapes inconsistent with dataset dims (f={f}, h={h}, c={c})");
-    }
-
-    // Layer 1: agg(X W0) + b0, ReLU. Streamed routes dequantize X lazily
-    // per row-block inside the multiply's pool tasks. i8-compute routes
-    // flip the order — `(Â ×_i8 X) W0` — so the integer kernels see the
-    // raw codes; the two orders compute the same `Â X W0` product, and
-    // the flip's FP effect is covered by the mode's accuracy budget
-    // (`crate::eval::i8_compute_budget`).
-    let mut hidden = if let (Some(qb), Some(adj)) = (i8_codes, i8_adj) {
-        let mut agg_x = vec![0.0f32; n * f];
-        if let Some(sp) = sharded {
-            sp.run_i8(adj, qb, f, &mut agg_x, env);
-        } else {
-            // Unsharded plans (and the local fallback) carry one operand.
-            let aq = &adj.units[0];
-            let kind = select_kernel_i8(&profile, f, width, env);
-            match ell {
-                Some(e) => run_ell_i8(kind, e, aq, qb, f, &mut agg_x, env.threads),
-                None => run_exact_i8(kind, &ds.csr_gcn, aq, qb, f, &mut agg_x, env.threads),
+    // Interpret the program.
+    let mut cur = Value::Input;
+    let mut saved: Option<Value> = None;
+    let mut skip_next = false;
+    let materialize_input = || -> Result<(Vec<f32>, usize)> {
+        if let Some(fh) = streamed {
+            let mut buf = vec![0.0f32; n * ds.feats];
+            fh.fill_rows_f32(0, &mut buf);
+            return Ok((buf, ds.feats));
+        }
+        if x.is_empty() && n * ds.feats != 0 {
+            bail!("this op needs materialized input features, but only i8 codes are staged");
+        }
+        Ok((x.to_vec(), ds.feats))
+    };
+    for (idx, op) in ops.iter().enumerate() {
+        if skip_next {
+            skip_next = false;
+            continue;
+        }
+        match op {
+            LayerOp::Save => {
+                saved = Some(match &cur {
+                    Value::Input => Value::Input,
+                    Value::Dense(d, dim) => Value::Dense(d.clone(), *dim),
+                });
+            }
+            LayerOp::Swap => {
+                let Some(s) = saved.take() else {
+                    bail!("model {:?}: Swap with empty saved register", req.model);
+                };
+                saved = Some(std::mem::replace(&mut cur, s));
+            }
+            LayerOp::Add => {
+                let Some(s) = &saved else {
+                    bail!("model {:?}: Add with empty saved register", req.model);
+                };
+                let (sdata, sdim, owned);
+                match s {
+                    Value::Dense(d, dim) => {
+                        sdata = d.as_slice();
+                        sdim = *dim;
+                    }
+                    Value::Input => {
+                        owned = materialize_input()?;
+                        sdata = owned.0.as_slice();
+                        sdim = owned.1;
+                    }
+                }
+                let Value::Dense(c, cdim) = &mut cur else {
+                    bail!("model {:?}: Add over the raw input register", req.model);
+                };
+                if *cdim != sdim {
+                    bail!("model {:?}: Add joins dim {cdim} with saved dim {sdim}", req.model);
+                }
+                for (o, &v) in c.iter_mut().zip(sdata.iter()) {
+                    *o += v;
+                }
+            }
+            LayerOp::Concat => {
+                let Some(s) = saved.take() else {
+                    bail!("model {:?}: Concat with empty saved register", req.model);
+                };
+                let (sdata, sdim) = match s {
+                    Value::Dense(d, dim) => (d, dim),
+                    Value::Input => materialize_input()?,
+                };
+                let (cdata, cdim) = match std::mem::replace(&mut cur, Value::Input) {
+                    Value::Dense(d, dim) => (d, dim),
+                    Value::Input => materialize_input()?,
+                };
+                let dim = sdim + cdim;
+                let mut joined = vec![0.0f32; n * dim];
+                for i in 0..n {
+                    joined[i * dim..i * dim + sdim]
+                        .copy_from_slice(&sdata[i * sdim..(i + 1) * sdim]);
+                    joined[i * dim + sdim..(i + 1) * dim]
+                        .copy_from_slice(&cdata[i * cdim..(i + 1) * cdim]);
+                }
+                cur = Value::Dense(joined, dim);
+            }
+            LayerOp::Linear { weight } => {
+                let wt = tensor(weight)?;
+                let w = wt.as_f32()?;
+                let (k, d_out) = (wt.shape[0], wt.shape[1]);
+                cur = match &cur {
+                    Value::Input => {
+                        debug_assert_eq!(k, ds.feats);
+                        // The i8 aggregate-first flip: `(Â ×_i8 X) W`
+                        // replaces `Â (X W)` when the next op is the GCN
+                        // aggregate and the integer operands are staged.
+                        if let (Some(qb), Some(adj), Some(LayerOp::Aggregate { .. })) =
+                            (i8_codes, i8_adj, ops.get(idx + 1))
+                        {
+                            let mut agg_x = vec![0.0f32; n * k];
+                            if let Some(sp) = sharded {
+                                sp.run_i8(adj, qb, k, &mut agg_x, env);
+                            } else {
+                                // Unsharded plans (and the local
+                                // fallback) carry one operand.
+                                let aq = &adj.units[0];
+                                let kind = select_kernel_i8(&profile, k, width, env);
+                                match ell {
+                                    Some(e) => {
+                                        run_ell_i8(kind, e, aq, qb, k, &mut agg_x, env.threads)
+                                    }
+                                    None => run_exact_i8(
+                                        kind,
+                                        &ds.csr_gcn,
+                                        aq,
+                                        qb,
+                                        k,
+                                        &mut agg_x,
+                                        env.threads,
+                                    ),
+                                }
+                            }
+                            skip_next = true;
+                            let out = match &shard_bounds {
+                                Some(bounds) => matmul_sharded(&agg_x, w, n, k, d_out, bounds, env),
+                                None => matmul(&agg_x, w, n, k, d_out, env),
+                            };
+                            Value::Dense(out, d_out)
+                        } else {
+                            let out = match (streamed, &shard_bounds) {
+                                (Some(fh), bounds) => {
+                                    matmul_streamed(fh, w, n, k, d_out, env, bounds.as_deref())
+                                }
+                                (None, Some(bounds)) => {
+                                    matmul_sharded(x, w, n, k, d_out, bounds, env)
+                                }
+                                (None, None) => matmul(x, w, n, k, d_out, env),
+                            };
+                            Value::Dense(out, d_out)
+                        }
+                    }
+                    Value::Dense(d, dim) => {
+                        debug_assert_eq!(k, *dim);
+                        let out = match &shard_bounds {
+                            Some(bounds) => matmul_sharded(d, w, n, *dim, d_out, bounds, env),
+                            None => matmul(d, w, n, *dim, d_out, env),
+                        };
+                        Value::Dense(out, d_out)
+                    }
+                };
+            }
+            LayerOp::Aggregate { kind } => {
+                let Value::Dense(h, dim) = &cur else {
+                    bail!(
+                        "model {:?}: Aggregate over the raw input register is not supported",
+                        req.model
+                    );
+                };
+                let f_dim = *dim;
+                let mut out = vec![0.0f32; n * f_dim];
+                match kind {
+                    AggregateKind::Gcn => aggregate_sum(h, f_dim, &mut out),
+                    AggregateKind::SageMean => {
+                        aggregate_sum(h, f_dim, &mut out);
+                        for i in 0..n {
+                            let d = sum_count(i).max(1) as f32;
+                            for o in out[i * f_dim..(i + 1) * f_dim].iter_mut() {
+                                *o /= d;
+                            }
+                        }
+                    }
+                    AggregateKind::SageMax => {
+                        if let Some(sp) = sharded {
+                            if let [unit] = sp.units() {
+                                match &unit.ell {
+                                    Some(e) => segmented_max_ell_par(
+                                        lvl, e, h, f_dim, &mut out, env.threads,
+                                    ),
+                                    None => segmented_max_csr_par(
+                                        lvl, &unit.csr, h, f_dim, &mut out, env.threads,
+                                    ),
+                                }
+                            } else {
+                                let mut rest: &mut [f32] = &mut out;
+                                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                                    Vec::with_capacity(sp.units().len());
+                                for unit in sp.units() {
+                                    let (chunk, tail) =
+                                        rest.split_at_mut(unit.rows.len() * f_dim);
+                                    rest = tail;
+                                    tasks.push(Box::new(move || match &unit.ell {
+                                        Some(e) => segmented_max_ell(lvl, e, h, f_dim, chunk),
+                                        None => segmented_max_csr(
+                                            lvl, &unit.csr, h, f_dim, chunk,
+                                        ),
+                                    }));
+                                }
+                                crate::exec::global_pool().run(tasks);
+                            }
+                        } else {
+                            match ell {
+                                Some(e) => {
+                                    segmented_max_ell_par(lvl, e, h, f_dim, &mut out, env.threads)
+                                }
+                                None => segmented_max_csr_par(
+                                    lvl, base_csr, h, f_dim, &mut out, env.threads,
+                                ),
+                            }
+                        }
+                    }
+                    AggregateKind::GatAttention { att_src, att_dst } => {
+                        if ds.csr_gcn.n_cols != n {
+                            bail!("GAT needs a square adjacency (self-attention over nodes)");
+                        }
+                        let a_src = tensor(att_src)?.as_f32()?;
+                        let a_dst = tensor(att_dst)?.as_f32()?;
+                        let s_src = attention_scores_par(h, a_src, n, f_dim, env.threads);
+                        let s_dst = attention_scores_par(h, a_dst, n, f_dim, env.threads);
+                        if let Some(sp) = sharded {
+                            run_gat_sharded(sp, &s_src, &s_dst, h, f_dim, &mut out, env);
+                        } else if let Some(e) = ell {
+                            let alpha = gat_alpha_ell_par(lvl, e, &s_src, &s_dst, env.threads);
+                            // Structural clone with α substituted —
+                            // padding slots stay (0.0, 0), so the
+                            // sampled operand contract holds.
+                            let ae = Ell {
+                                n_rows: e.n_rows,
+                                n_cols: e.n_cols,
+                                width: e.width,
+                                val: alpha,
+                                col: e.col.clone(),
+                                slots: e.slots.clone(),
+                            };
+                            let kind = select_kernel(&profile, f_dim, width, env);
+                            run_ell(kind, &ae, h, f_dim, &mut out, env.threads);
+                        } else {
+                            let alpha =
+                                gat_alpha_csr_par(lvl, base_csr, &s_src, &s_dst, env.threads);
+                            let ac = Csr {
+                                n_rows: base_csr.n_rows,
+                                n_cols: base_csr.n_cols,
+                                row_ptr: base_csr.row_ptr.clone(),
+                                col_ind: base_csr.col_ind.clone(),
+                                val: alpha,
+                            };
+                            let kind = select_kernel(&profile, f_dim, width, env);
+                            run_exact(kind, &ac, h, f_dim, &mut out, env.threads);
+                        }
+                    }
+                }
+                cur = Value::Dense(out, f_dim);
+            }
+            LayerOp::Bias { name } => {
+                let b = tensor(name)?.as_f32()?;
+                let Value::Dense(c, dim) = &mut cur else {
+                    bail!("model {:?}: Bias over the raw input register", req.model);
+                };
+                let dim = *dim;
+                for i in 0..n {
+                    for j in 0..dim {
+                        c[i * dim + j] += b[j];
+                    }
+                }
+            }
+            LayerOp::Relu => {
+                let Value::Dense(c, _) = &mut cur else {
+                    bail!("model {:?}: Relu over the raw input register", req.model);
+                };
+                for v in c.iter_mut() {
+                    // Same expression the fused pre-IR layer used:
+                    // `(h + b).max(0.0)` split into Bias then Relu is
+                    // bitwise-identical.
+                    *v = v.max(0.0);
+                }
             }
         }
-        match &shard_bounds {
-            Some(bounds) => matmul_sharded(&agg_x, w0, n, f, h, bounds, env),
-            None => matmul(&agg_x, w0, n, f, h, env),
-        }
-    } else {
-        let xw = match (streamed, &shard_bounds) {
-            (Some(fh), bounds) => matmul_streamed(fh, w0, n, f, h, env, bounds.as_deref()),
-            (None, Some(bounds)) => matmul_sharded(x, w0, n, f, h, bounds, env),
-            (None, None) => matmul(x, w0, n, f, h, env),
-        };
-        let mut agg = vec![0.0f32; n * h];
-        aggregate(&xw, h, &mut agg);
-        agg
-    };
-    for i in 0..n {
-        for j in 0..h {
-            hidden[i * h + j] = (hidden[i * h + j] + b0[j]).max(0.0);
-        }
     }
-
-    // Layer 2: agg(H W1) + b1.
-    let hw = match &shard_bounds {
-        Some(bounds) => matmul_sharded(&hidden, w1, n, h, c, bounds, env),
-        None => matmul(&hidden, w1, n, h, c, env),
+    let Value::Dense(logits, c) = cur else {
+        bail!("model {:?}: program left the raw input in the output register", req.model);
     };
-    let mut logits = vec![0.0f32; n * c];
-    aggregate(&hw, c, &mut logits);
-    for i in 0..n {
-        for j in 0..c {
-            logits[i * c + j] += b1[j];
-        }
+    if c != ds.classes {
+        bail!("model {:?}: program emitted dim {c}, dataset has {} classes", req.model, ds.classes);
     }
     let execute = t1.elapsed();
 
@@ -405,11 +708,101 @@ pub fn host_forward(
     })
 }
 
-/// Does this request's precision produce a dense-f32-compatible host
-/// path? (All current precisions do: u8 dequantizes host-side, and
-/// i8-compute consumes the codes directly in the integer kernels.)
+/// GAT aggregation over a sharded plan: per-unit α (the softmax is
+/// row-local, so each unit normalizes exactly the rows it owns),
+/// substituted into a structural clone of the unit's operand, executed
+/// with the classic dispatch on the unit's cached profile — independent
+/// tasks, row-concatenation merge, bitwise equal to the unsharded path.
+fn run_gat_sharded(
+    sp: &ShardedPlan,
+    s_src: &[f32],
+    s_dst: &[f32],
+    h: &[f32],
+    f_dim: usize,
+    out: &mut [f32],
+    env: &ExecEnv,
+) {
+    let lvl = simd::level();
+    if let [unit] = sp.units() {
+        // The shard is the whole graph — use the thread budget.
+        let src = &s_src[unit.rows.clone()];
+        match &unit.ell {
+            Some(e) => {
+                let alpha = gat_alpha_ell_par(lvl, e, src, s_dst, env.threads);
+                let ae = Ell {
+                    n_rows: e.n_rows,
+                    n_cols: e.n_cols,
+                    width: e.width,
+                    val: alpha,
+                    col: e.col.clone(),
+                    slots: e.slots.clone(),
+                };
+                let kind = select_kernel(&unit.profile, f_dim, Some(e.width), env);
+                run_ell(kind, &ae, h, f_dim, out, env.threads);
+            }
+            None => {
+                let alpha = gat_alpha_csr_par(lvl, &unit.csr, src, s_dst, env.threads);
+                let ac = Csr {
+                    n_rows: unit.csr.n_rows,
+                    n_cols: unit.csr.n_cols,
+                    row_ptr: unit.csr.row_ptr.clone(),
+                    col_ind: unit.csr.col_ind.clone(),
+                    val: alpha,
+                };
+                let kind = select_kernel(&unit.profile, f_dim, None, env);
+                run_exact(kind, &ac, h, f_dim, out, env.threads);
+            }
+        }
+        return;
+    }
+    let serial = ExecEnv::with_threads(1);
+    let mut rest = out;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(sp.units().len());
+    for unit in sp.units() {
+        let (chunk, tail) = rest.split_at_mut(unit.rows.len() * f_dim);
+        rest = tail;
+        let serial = &serial;
+        tasks.push(Box::new(move || {
+            let src = &s_src[unit.rows.clone()];
+            match &unit.ell {
+                Some(e) => {
+                    let alpha = gat_alpha_ell(lvl, e, src, s_dst);
+                    let ae = Ell {
+                        n_rows: e.n_rows,
+                        n_cols: e.n_cols,
+                        width: e.width,
+                        val: alpha,
+                        col: e.col.clone(),
+                        slots: e.slots.clone(),
+                    };
+                    let kind = select_kernel(&unit.profile, f_dim, Some(e.width), serial);
+                    run_ell(kind, &ae, h, f_dim, chunk, 1);
+                }
+                None => {
+                    let alpha = gat_alpha_csr(lvl, &unit.csr, src, s_dst);
+                    let ac = Csr {
+                        n_rows: unit.csr.n_rows,
+                        n_cols: unit.csr.n_cols,
+                        row_ptr: unit.csr.row_ptr.clone(),
+                        col_ind: unit.csr.col_ind.clone(),
+                        val: alpha,
+                    };
+                    let kind = select_kernel(&unit.profile, f_dim, None, serial);
+                    run_exact(kind, &ac, h, f_dim, chunk, 1);
+                }
+            }
+        }));
+    }
+    crate::exec::global_pool().run(tasks);
+}
+
+/// Can the host substrate serve this request? Any model with an IR
+/// program, at every current precision: u8 dequantizes host-side, and
+/// i8-compute consumes the codes directly in the integer kernels (GCN)
+/// or falls back to fp32 compute over streamed/dequantized features
+/// (models whose programs never trigger the aggregate-first flip).
 pub fn host_supports(req: &ForwardRequest) -> bool {
-    req.model == "gcn"
+    model_ir(&req.model).is_ok()
         && matches!(
             req.precision,
             Precision::F32 | Precision::U8Device | Precision::U8Host | Precision::I8Compute
@@ -537,7 +930,7 @@ mod tests {
         assert_eq!(want, got);
     }
 
-    // Full forward correctness is covered in tests/exec_layer.rs, which
-    // builds a synthetic dataset + weights and cross-checks predictions
-    // through the coordinator.
+    // Full forward correctness is covered in tests/exec_layer.rs (GCN
+    // through the coordinator) and tests/model_zoo.rs (per-model
+    // interpreter vs oracle, sampled budgets, sharded equality).
 }

@@ -1,0 +1,430 @@
+//! The layer-graph IR — models are data, not code paths.
+//!
+//! A model is a flat `Vec<LayerOp>` over a two-register machine:
+//! `cur` (the value every op reads and writes) and `saved` (a scratch
+//! register for skip/self branches). [`crate::runtime::host_forward`]
+//! interprets the program, routing every [`LayerOp::Aggregate`] through
+//! the exec-layer machinery (plan cache, sharded units, tuned dispatch,
+//! SIMD/INT8 kernels); [`crate::eval::oracle_forward`] interprets the
+//! same program with the canonical serial reduction order. One program,
+//! two interpreters, cross-checked bit-for-bit on the exact fp32 route.
+//!
+//! # Programs
+//!
+//! | model     | per layer                                                         |
+//! |-----------|-------------------------------------------------------------------|
+//! | `gcn`     | `Linear(w) → Aggregate(Gcn) → Bias(b) → Relu?`                    |
+//! | `sage`    | `Save → Linear(w_neigh) → Aggregate(SageMean) → Swap → Linear(w_self) → Add → Bias(b) → Relu?` |
+//! | `sagemax` | as `sage` with `Aggregate(SageMax)`                               |
+//! | `gat`     | `Linear(w) → Aggregate(GatAttention) → Bias(b) → Relu?`           |
+//!
+//! The GCN program replays the pre-IR hard-coded forward op for op, so
+//! GCN through the interpreter is bit-identical to the golden fixtures.
+//! The SAGE layer saves the input *before* the neighbor branch so both
+//! `Linear`s run on the raw input — layer 1 streams rows through
+//! [`crate::runtime::host_forward`]'s feature handle exactly like GCN.
+//!
+//! # Aggregation operands
+//!
+//! Sampling is structure-only ([`crate::sampling::strategy_params`] and
+//! the Eq. 3 start index read row lengths, never values), so a sampled
+//! plan depends on the model only through its **value family**
+//! ([`ModelVals`]): GCN aggregates with Â entries (`csr_gcn`), every
+//! other model with all-ones values (`val_ones`). `sage` and `gat`
+//! therefore share plans and shard units; `PlanKey`/`ShardKey` carry the
+//! family, not the model name.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::dataset::{GAT_PARAM_ORDER, GCN_PARAM_ORDER, SAGE_PARAM_ORDER};
+
+/// Which reduction an [`LayerOp::Aggregate`] performs over the graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AggregateKind {
+    /// `out[i] = Σ_e Â[i,j]·x[j]` — GCN-normalized weighted sum.
+    Gcn,
+    /// `out[i] = (Σ_e x[j]) / max(deg_i, 1)` — GraphSAGE mean, where
+    /// `deg_i` counts the edges actually summed (sampled slots on the
+    /// ELL route, `row_nnz` exact).
+    SageMean,
+    /// `out[i] = max_e x[j]` (elementwise), 0.0 for edgeless rows —
+    /// GraphSAGE max-pooling.
+    SageMax,
+    /// GAT: per-edge logits `e_ij = LeakyReLU(a_src·h_i + a_dst·h_j)`,
+    /// numerically-stable segmented row softmax → attention α, then
+    /// `out[i] = Σ_e α_ij·x[j]` (see `docs/models.md`).
+    GatAttention {
+        /// Name of the `[d]` source-side attention vector tensor.
+        att_src: String,
+        /// Name of the `[d]` destination-side attention vector tensor.
+        att_dst: String,
+    },
+}
+
+/// One instruction of the two-register layer machine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerOp {
+    /// `saved = cur` (copy).
+    Save,
+    /// Exchange `cur` and `saved`.
+    Swap,
+    /// `cur += saved` (elementwise; dims must match).
+    Add,
+    /// `cur = [saved ‖ cur]` per row (feature concat).
+    Concat,
+    /// `cur = cur × W` with `W = weights[name]`, shape `[d_in, d_out]`.
+    Linear {
+        /// Weight-tensor name in the model's artifact signature.
+        weight: String,
+    },
+    /// Aggregate `cur` over the graph per [`AggregateKind`].
+    Aggregate {
+        /// Which graph reduction to run.
+        kind: AggregateKind,
+    },
+    /// `cur[i, j] += b[j]` with `b = weights[name]`, shape `[d]`.
+    Bias {
+        /// Bias-tensor name in the model's artifact signature.
+        name: String,
+    },
+    /// `cur = max(cur, 0.0)` elementwise.
+    Relu,
+}
+
+/// Value family of a model's aggregation operand. Sampling is
+/// structure-only, so plans/shard units are shared per family — this is
+/// the `model_kind` component of `PlanKey` / `ShardKey`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelVals {
+    /// Â entries (`Dataset::csr_gcn.val`) — the GCN operand.
+    Gcn,
+    /// All-ones values (`Dataset::val_ones`) — SAGE/GAT structural
+    /// operand (GAT substitutes per-edge α at execution time).
+    Ones,
+}
+
+impl ModelVals {
+    /// Family of a model name (unknown names conservatively map to
+    /// `Ones`; they are rejected earlier by [`model_ir`]).
+    pub fn of(model: &str) -> ModelVals {
+        if model == "gcn" {
+            ModelVals::Gcn
+        } else {
+            ModelVals::Ones
+        }
+    }
+
+    /// Stable lowercase label (cache-key display).
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelVals::Gcn => "gcn",
+            ModelVals::Ones => "ones",
+        }
+    }
+}
+
+/// Every model the IR can express, servable end to end.
+pub const KNOWN_MODELS: &[&str] = &["gcn", "sage", "sagemax", "gat"];
+
+/// The models exposed on the serving/eval surface (`sagemax` is an IR +
+/// oracle capability exercised by unit tests, not an artifact model).
+pub const SERVED_MODELS: &[&str] = &["gcn", "sage", "gat"];
+
+fn lin(w: &str) -> LayerOp {
+    LayerOp::Linear { weight: w.into() }
+}
+
+fn sage_layer(kind: AggregateKind, w_self: &str, w_neigh: &str, b: &str, relu: bool) -> Vec<LayerOp> {
+    let mut ops = vec![
+        LayerOp::Save,
+        lin(w_neigh),
+        LayerOp::Aggregate { kind },
+        LayerOp::Swap,
+        lin(w_self),
+        LayerOp::Add,
+        LayerOp::Bias { name: b.into() },
+    ];
+    if relu {
+        ops.push(LayerOp::Relu);
+    }
+    ops
+}
+
+/// The 2-layer program for `model`, or an error for unknown names.
+pub fn model_ir(model: &str) -> Result<Vec<LayerOp>> {
+    let agg = |kind: AggregateKind| LayerOp::Aggregate { kind };
+    Ok(match model {
+        "gcn" => vec![
+            lin("w0"),
+            agg(AggregateKind::Gcn),
+            LayerOp::Bias { name: "b0".into() },
+            LayerOp::Relu,
+            lin("w1"),
+            agg(AggregateKind::Gcn),
+            LayerOp::Bias { name: "b1".into() },
+        ],
+        "sage" | "sagemax" => {
+            let kind = || {
+                if model == "sage" {
+                    AggregateKind::SageMean
+                } else {
+                    AggregateKind::SageMax
+                }
+            };
+            let mut ops = sage_layer(kind(), "w0_self", "w0_neigh", "b0", true);
+            ops.extend(sage_layer(kind(), "w1_self", "w1_neigh", "b1", false));
+            ops
+        }
+        "gat" => vec![
+            lin("w0"),
+            agg(AggregateKind::GatAttention { att_src: "a0_src".into(), att_dst: "a0_dst".into() }),
+            LayerOp::Bias { name: "b0".into() },
+            LayerOp::Relu,
+            lin("w1"),
+            agg(AggregateKind::GatAttention { att_src: "a1_src".into(), att_dst: "a1_dst".into() }),
+            LayerOp::Bias { name: "b1".into() },
+        ],
+        other => bail!(
+            "unknown model {other:?} (known: {})",
+            KNOWN_MODELS.join(", ")
+        ),
+    })
+}
+
+/// Positional artifact signature of `model` (tensor names in file order).
+pub fn param_order(model: &str) -> Result<&'static [&'static str]> {
+    Ok(match model {
+        "gcn" => GCN_PARAM_ORDER,
+        "sage" | "sagemax" => SAGE_PARAM_ORDER,
+        "gat" => GAT_PARAM_ORDER,
+        other => bail!(
+            "unknown model {other:?} (known: {})",
+            KNOWN_MODELS.join(", ")
+        ),
+    })
+}
+
+/// Validate weight-tensor shapes against the model IR by symbolically
+/// walking the program with a feature dim, exactly as the interpreter
+/// will: `Linear` consumes `[d, d']`, `Bias` and attention vectors
+/// consume `[d]`, `Add` needs the registers to agree, and the final dim
+/// must equal `classes`. Errors name the offending tensor so a bad
+/// artifact fails at publish time instead of panicking inside `matmul`.
+pub fn validate_weights(
+    model: &str,
+    feats: usize,
+    classes: usize,
+    tensors: &[(String, Tensor)],
+) -> Result<()> {
+    let ops = model_ir(model)?;
+    let get = |name: &str| -> Result<&Tensor> {
+        tensors
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, t)| t)
+            .ok_or_else(|| anyhow::anyhow!("model {model:?}: missing weight tensor {name:?}"))
+    };
+    let mut d = feats;
+    let mut saved: Option<usize> = None;
+    for op in &ops {
+        match op {
+            LayerOp::Save => saved = Some(d),
+            LayerOp::Swap => {
+                let Some(s) = saved else {
+                    bail!("model {model:?}: Swap with empty saved register");
+                };
+                saved = Some(d);
+                d = s;
+            }
+            LayerOp::Add => match saved {
+                Some(s) if s == d => {}
+                Some(s) => bail!(
+                    "model {model:?}: Add joins dim {d} with saved dim {s} — branches disagree"
+                ),
+                None => bail!("model {model:?}: Add with empty saved register"),
+            },
+            LayerOp::Concat => {
+                let Some(s) = saved else {
+                    bail!("model {model:?}: Concat with empty saved register");
+                };
+                d += s;
+            }
+            LayerOp::Linear { weight } => {
+                let t = get(weight)?;
+                if t.shape.len() != 2 || t.shape[0] != d {
+                    bail!(
+                        "model {model:?}: weight {weight:?} has shape {:?}, expected [{d}, _]",
+                        t.shape
+                    );
+                }
+                d = t.shape[1];
+            }
+            LayerOp::Aggregate { kind } => {
+                if let AggregateKind::GatAttention { att_src, att_dst } = kind {
+                    for name in [att_src, att_dst] {
+                        let t = get(name)?;
+                        if t.elem_count() != d {
+                            bail!(
+                                "model {model:?}: attention vector {name:?} has shape {:?}, \
+                                 expected [{d}]",
+                                t.shape
+                            );
+                        }
+                    }
+                }
+            }
+            LayerOp::Bias { name } => {
+                let t = get(name)?;
+                if t.elem_count() != d {
+                    bail!(
+                        "model {model:?}: bias {name:?} has shape {:?}, expected [{d}]",
+                        t.shape
+                    );
+                }
+            }
+            LayerOp::Relu => {}
+        }
+    }
+    if d != classes {
+        bail!("model {model:?}: program emits dim {d}, dataset has {classes} classes");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize]) -> Tensor {
+        let len: usize = shape.iter().product();
+        Tensor::from_f32(shape, &vec![0.5; len])
+    }
+
+    fn gcn_weights(f: usize, h: usize, c: usize) -> Vec<(String, Tensor)> {
+        vec![
+            ("w0".into(), t(&[f, h])),
+            ("b0".into(), t(&[h])),
+            ("w1".into(), t(&[h, c])),
+            ("b1".into(), t(&[c])),
+        ]
+    }
+
+    #[test]
+    fn every_known_model_has_a_program_and_signature() {
+        for &m in KNOWN_MODELS {
+            let ops = model_ir(m).unwrap();
+            assert!(!ops.is_empty(), "{m}");
+            assert!(!param_order(m).unwrap().is_empty(), "{m}");
+        }
+        assert!(model_ir("mlp").is_err());
+        assert!(param_order("mlp").is_err());
+    }
+
+    #[test]
+    fn gcn_program_replays_the_hardcoded_forward() {
+        // The exact op order the pre-IR host_forward ran — pinned so the
+        // bit-identity claim against the golden fixtures stays auditable.
+        let ops = model_ir("gcn").unwrap();
+        assert_eq!(
+            ops,
+            vec![
+                LayerOp::Linear { weight: "w0".into() },
+                LayerOp::Aggregate { kind: AggregateKind::Gcn },
+                LayerOp::Bias { name: "b0".into() },
+                LayerOp::Relu,
+                LayerOp::Linear { weight: "w1".into() },
+                LayerOp::Aggregate { kind: AggregateKind::Gcn },
+                LayerOp::Bias { name: "b1".into() },
+            ]
+        );
+    }
+
+    #[test]
+    fn value_families() {
+        assert_eq!(ModelVals::of("gcn"), ModelVals::Gcn);
+        assert_eq!(ModelVals::of("sage"), ModelVals::Ones);
+        assert_eq!(ModelVals::of("gat"), ModelVals::Ones);
+        assert_eq!(ModelVals::of("sagemax"), ModelVals::Ones);
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_weights() {
+        let (f, h, c) = (8, 6, 4);
+        validate_weights("gcn", f, c, &gcn_weights(f, h, c)).unwrap();
+        let sage = vec![
+            ("w0_self".into(), t(&[f, h])),
+            ("w0_neigh".into(), t(&[f, h])),
+            ("b0".into(), t(&[h])),
+            ("w1_self".into(), t(&[h, c])),
+            ("w1_neigh".into(), t(&[h, c])),
+            ("b1".into(), t(&[c])),
+        ];
+        validate_weights("sage", f, c, &sage).unwrap();
+        validate_weights("sagemax", f, c, &sage).unwrap();
+        let gat = vec![
+            ("w0".into(), t(&[f, h])),
+            ("a0_src".into(), t(&[h])),
+            ("a0_dst".into(), t(&[h])),
+            ("b0".into(), t(&[h])),
+            ("w1".into(), t(&[h, c])),
+            ("a1_src".into(), t(&[c])),
+            ("a1_dst".into(), t(&[c])),
+            ("b1".into(), t(&[c])),
+        ];
+        validate_weights("gat", f, c, &gat).unwrap();
+    }
+
+    #[test]
+    fn validate_names_the_offending_tensor() {
+        let (f, h, c) = (8, 6, 4);
+        // Transposed W0.
+        let mut w = gcn_weights(f, h, c);
+        w[0].1 = t(&[h, f]);
+        let err = validate_weights("gcn", f, c, &w).unwrap_err().to_string();
+        assert!(err.contains("w0"), "{err}");
+        // Wrong bias length.
+        let mut w = gcn_weights(f, h, c);
+        w[1].1 = t(&[h + 1]);
+        let err = validate_weights("gcn", f, c, &w).unwrap_err().to_string();
+        assert!(err.contains("b0"), "{err}");
+        // Missing tensor entirely.
+        let mut w = gcn_weights(f, h, c);
+        w.remove(2);
+        let err = validate_weights("gcn", f, c, &w).unwrap_err().to_string();
+        assert!(err.contains("w1"), "{err}");
+        // Output dim disagrees with the dataset's class count.
+        let err = validate_weights("gcn", f, c + 1, &gcn_weights(f, h, c))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("classes"), "{err}");
+        // GAT attention vector at the wrong dim.
+        let mut gat = vec![
+            ("w0".into(), t(&[f, h])),
+            ("a0_src".into(), t(&[h])),
+            ("a0_dst".into(), t(&[h + 2])),
+            ("b0".into(), t(&[h])),
+            ("w1".into(), t(&[h, c])),
+            ("a1_src".into(), t(&[c])),
+            ("a1_dst".into(), t(&[c])),
+            ("b1".into(), t(&[c])),
+        ];
+        let err = validate_weights("gat", f, c, &gat).unwrap_err().to_string();
+        assert!(err.contains("a0_dst"), "{err}");
+        gat[2].1 = t(&[h]);
+        validate_weights("gat", f, c, &gat).unwrap();
+    }
+
+    #[test]
+    fn sage_linears_run_on_the_raw_input() {
+        // Both layer-1 Linears must see the input register so the
+        // streamed-feature fast path applies: the program saves before
+        // the neighbor branch and swaps back before the self branch.
+        let ops = model_ir("sage").unwrap();
+        assert_eq!(ops[0], LayerOp::Save);
+        assert_eq!(ops[3], LayerOp::Swap);
+        assert!(matches!(ops[1], LayerOp::Linear { .. }));
+        assert!(matches!(ops[4], LayerOp::Linear { .. }));
+    }
+}

@@ -17,8 +17,9 @@
 //! | `dataset`   | [`Dataset`] / [`Weights`] loading from the `.nbt` artifacts |
 //! | `engine`    | [`Engine`]: HLO text → `XlaComputation` → compile (cached) → execute |
 //! | `backend`   | [`Backend`]: Pjrt (device) vs Host dispatch           |
-//! | `host`      | [`host_forward`]: dispatched CPU GCN forward, incl. lazy streamed-INT8 layer 1 |
+//! | `host`      | [`host_forward`]: dispatched CPU forward — interprets the model IR, incl. lazy streamed-INT8 layer 1 |
 //! | `infer`     | [`run_forward`] / [`accuracy`] request-level helpers  |
+//! | `ir`        | [`model_ir`]: the layer-graph IR — models as `Vec<LayerOp>` data, plus weight-schema validation |
 //!
 //! # Rules
 //!
@@ -38,10 +39,15 @@ mod dataset;
 mod engine;
 mod host;
 mod infer;
+pub mod ir;
 
 pub use artifacts::{artifact_key, ArtifactKind, ArtifactMeta, DatasetMeta, InputSpec, Manifest};
 pub use backend::Backend;
-pub use dataset::{Dataset, Weights, GCN_PARAM_ORDER, SAGE_PARAM_ORDER};
+pub use dataset::{Dataset, Weights, GAT_PARAM_ORDER, GCN_PARAM_ORDER, SAGE_PARAM_ORDER};
+pub use ir::{
+    model_ir, param_order, validate_weights, AggregateKind, LayerOp, ModelVals, KNOWN_MODELS,
+    SERVED_MODELS,
+};
 pub use engine::{Arg, Engine, ExecStats};
 pub use host::{host_forward, host_supports};
 pub use infer::{accuracy, run_forward, ForwardRequest, ForwardResult};

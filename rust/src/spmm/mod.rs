@@ -20,6 +20,10 @@
 //! * `simd`           — runtime AVX2/NEON dispatch, cache-profile tile
 //!   tuning, and the bitwise-equality contract every arm obeys
 //!   (docs/simd.md).
+//! * `segmented`      — segmented row reductions for the model zoo: the
+//!   GAT attention softmax (per-edge logits → stable row softmax → α)
+//!   and the GraphSAGE max-pool, over CSR and ELL operands
+//!   (docs/models.md).
 //! * `threaded`       — row-partitioned multi-thread wrappers over any of
 //!   the above (std::thread scoped; the offline registry has no rayon).
 //!
@@ -30,11 +34,17 @@ mod csr;
 mod ell;
 mod formats;
 mod int8;
+pub mod segmented;
 pub mod simd;
 mod threaded;
 
 pub use csr::{csr_naive, csr_rowcache, csr_rowcache_at, TILE as ROWCACHE_TILE};
 pub use ell::{ell_spmm, ell_spmm_at, ell_spmm_mean};
+pub use segmented::{
+    attention_scores, attention_scores_par, gat_alpha_csr, gat_alpha_csr_par, gat_alpha_ell,
+    gat_alpha_ell_par, leaky_relu, row_softmax, segmented_max_csr, segmented_max_csr_par,
+    segmented_max_ell, segmented_max_ell_par, LEAKY_RELU_SLOPE,
+};
 pub use formats::{
     bcsr_spmm, bcsr_spmm_at, bcsr_spmm_i8, bcsr_spmm_i8_at, bcsr_spmm_i8_par, bcsr_spmm_par,
     dense_spmm, dense_spmm_at, dense_spmm_i8, dense_spmm_i8_at, dense_spmm_i8_par, dense_spmm_par,

@@ -1,0 +1,736 @@
+//! Segmented row reductions for attention models — the GAT softmax and
+//! the GraphSAGE max-pool, over both CSR (exact) and ELL (sampled)
+//! operands, with scalar/AVX2/NEON arms and `_par` row-partitioned
+//! variants.
+//!
+//! # The GAT pipeline
+//!
+//! GAT turns each layer's aggregation into three segmented passes over
+//! the row's edge list (a "segment"):
+//!
+//! 1. per-edge logits `e = LeakyReLU(s_src[i] + s_dst[col])` in CSR/ELL
+//!    storage order, where `s_src = H·a_src`, `s_dst = H·a_dst` are
+//!    per-node scores ([`attention_scores`], `k` ascending);
+//! 2. a numerically-stable segmented softmax per row
+//!    ([`row_softmax`]): subtract the row max, `exp`, normalize by the
+//!    storage-order sum;
+//! 3. the weighted aggregation itself, which is plain SpMM with α as
+//!    edge values — it reuses the existing dispatched kernels, so this
+//!    module never re-implements the multiply.
+//!
+//! On a *sampled* (ELL) operand only the surviving slots enter the
+//! softmax, so α renormalizes over the kept edges — the attention
+//! analog of the paper's sampled aggregation.
+//!
+//! # Why dispatch never changes a bit
+//!
+//! The same contract as [`crate::spmm::simd`], phase by phase:
+//!
+//! * **max**: an exact selection — every reduction order returns the
+//!   same value for finite non-NaN scores, and a `±0.0` sign flip
+//!   cannot survive `exp(e − m)` (`x − (+0.0)` and `x − (−0.0)` differ
+//!   only in the sign of a zero result, and `exp(±0.0) = 1.0` exactly);
+//! * **exp + denominator**: scalar `f32::exp` and a storage-order
+//!   scalar sum in *every* arm (fp add is order-sensitive, so no arm
+//!   vectorizes it);
+//! * **normalize**: per-element IEEE divide, exact in every arm.
+//!
+//! The max-pool kernels vectorize over feature columns (lanes =
+//! independent outputs) and walk edges in storage order in every arm,
+//! with the select written as `if x > acc { x } else { acc }` semantics
+//! in each instruction set — bitwise parity by construction.
+
+use crate::graph::{Csr, Ell};
+
+use super::simd::SimdLevel;
+
+/// Negative-side slope of the GAT LeakyReLU (the reference value used
+/// by the original GAT and by DGL/PyG defaults).
+pub const LEAKY_RELU_SLOPE: f32 = 0.2;
+
+/// GAT's LeakyReLU: identity for positive logits, [`LEAKY_RELU_SLOPE`]
+/// times the logit otherwise. Written with an explicit branch so
+/// `-0.0` falls through the negative side deterministically.
+#[inline]
+pub fn leaky_relu(e: f32) -> f32 {
+    if e > 0.0 {
+        e
+    } else {
+        LEAKY_RELU_SLOPE * e
+    }
+}
+
+/// Per-node attention scores `s[i] = Σ_k h[i·d + k] · a[k]`, `k`
+/// ascending, rows serial — the canonical order shared with the eval
+/// oracle.
+pub fn attention_scores(h: &[f32], a: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(h.len(), n * d, "H is not [n, d]");
+    assert_eq!(a.len(), d, "attention vector is not [d]");
+    let mut s = vec![0.0f32; n];
+    score_rows(h, a, d, 0..n, &mut s);
+    s
+}
+
+/// Parallel [`attention_scores`] — rows are independent and each keeps
+/// the `k`-ascending order, so the result is bitwise equal to serial.
+pub fn attention_scores_par(h: &[f32], a: &[f32], n: usize, d: usize, threads: usize) -> Vec<f32> {
+    assert_eq!(h.len(), n * d, "H is not [n, d]");
+    assert_eq!(a.len(), d, "attention vector is not [d]");
+    let mut s = vec![0.0f32; n];
+    let parts = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(parts);
+    let mut rest: &mut [f32] = &mut s;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts);
+    for part in 0..parts {
+        let lo = part * chunk;
+        let hi = ((part + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
+        }
+        let (out_chunk, r) = rest.split_at_mut(hi - lo);
+        rest = r;
+        tasks.push(Box::new(move || score_rows(h, a, d, lo..hi, out_chunk)));
+    }
+    crate::exec::global_pool().run(tasks);
+    s
+}
+
+fn score_rows(h: &[f32], a: &[f32], d: usize, rows: std::ops::Range<usize>, out: &mut [f32]) {
+    let lo = rows.start;
+    for i in rows {
+        let mut acc = 0.0f32;
+        for (x, &w) in h[i * d..(i + 1) * d].iter().zip(a.iter()) {
+            acc += *x * w;
+        }
+        out[i - lo] = acc;
+    }
+}
+
+/// In-place segmented softmax over one row's contiguous logit slice:
+/// subtract the row max, `exp` each entry (scalar in every arm),
+/// normalize by the storage-order sum. Empty segments are a no-op.
+#[inline]
+pub fn row_softmax(lvl: SimdLevel, scores: &mut [f32]) {
+    if scores.is_empty() {
+        return;
+    }
+    let m = row_max(lvl, scores);
+    let mut denom = 0.0f32;
+    for e in scores.iter_mut() {
+        *e = (*e - m).exp();
+        denom += *e;
+    }
+    scale_div(lvl, scores, denom);
+}
+
+/// Max of a non-empty score slice. Vector arms tree-reduce full 8-lane
+/// blocks then fold the remainder — safe under the exact-selection
+/// argument in the module docs.
+#[inline]
+fn row_max(lvl: SimdLevel, s: &[f32]) -> f32 {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` only reports Avx2 after runtime detection.
+        SimdLevel::Avx2 => unsafe { row_max_avx2(s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` only reports Neon after runtime detection.
+        SimdLevel::Neon => unsafe { row_max_neon(s) },
+        _ => s.iter().fold(f32::NEG_INFINITY, |m, &e| if e > m { e } else { m }),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn row_max_avx2(s: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    let mut m = f32::NEG_INFINITY;
+    let mut k = 0usize;
+    if s.len() >= 8 {
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        while k + 8 <= s.len() {
+            // max_ps(x, acc) = x > acc ? x : acc — the scalar select.
+            acc = _mm256_max_ps(_mm256_loadu_ps(s.as_ptr().add(k)), acc);
+            k += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for &l in &lanes {
+            if l > m {
+                m = l;
+            }
+        }
+    }
+    for &e in &s[k..] {
+        if e > m {
+            m = e;
+        }
+    }
+    m
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn row_max_neon(s: &[f32]) -> f32 {
+    use core::arch::aarch64::*;
+    let mut m = f32::NEG_INFINITY;
+    let mut k = 0usize;
+    if s.len() >= 4 {
+        let mut acc = vdupq_n_f32(f32::NEG_INFINITY);
+        while k + 4 <= s.len() {
+            let x = vld1q_f32(s.as_ptr().add(k));
+            // compare-select (not fmax): exact scalar `>` semantics.
+            acc = vbslq_f32(vcgtq_f32(x, acc), x, acc);
+            k += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), acc);
+        for &l in &lanes {
+            if l > m {
+                m = l;
+            }
+        }
+    }
+    for &e in &s[k..] {
+        if e > m {
+            m = e;
+        }
+    }
+    m
+}
+
+/// `s[e] /= denom` for every entry — per-element IEEE divide, exact in
+/// every arm.
+#[inline]
+fn scale_div(lvl: SimdLevel, s: &mut [f32], denom: f32) {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` only reports Avx2 after runtime detection.
+        SimdLevel::Avx2 => unsafe { scale_div_avx2(s, denom) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` only reports Neon after runtime detection.
+        SimdLevel::Neon => unsafe { scale_div_neon(s, denom) },
+        _ => {
+            for e in s.iter_mut() {
+                *e /= denom;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_div_avx2(s: &mut [f32], denom: f32) {
+    use core::arch::x86_64::*;
+    let d = _mm256_set1_ps(denom);
+    let mut k = 0usize;
+    while k + 8 <= s.len() {
+        let x = _mm256_loadu_ps(s.as_ptr().add(k));
+        _mm256_storeu_ps(s.as_mut_ptr().add(k), _mm256_div_ps(x, d));
+        k += 8;
+    }
+    for e in &mut s[k..] {
+        *e /= denom;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scale_div_neon(s: &mut [f32], denom: f32) {
+    use core::arch::aarch64::*;
+    let d = vdupq_n_f32(denom);
+    let mut k = 0usize;
+    while k + 4 <= s.len() {
+        let x = vld1q_f32(s.as_ptr().add(k));
+        vst1q_f32(s.as_mut_ptr().add(k), vdivq_f32(x, d));
+        k += 4;
+    }
+    for e in &mut s[k..] {
+        *e /= denom;
+    }
+}
+
+/// GAT attention coefficients over an exact (CSR) operand: per-edge
+/// LeakyReLU logits in storage order, then [`row_softmax`] per row.
+/// Returns a full `val`-length vector (α for every edge).
+pub fn gat_alpha_csr(lvl: SimdLevel, csr: &Csr, s_src: &[f32], s_dst: &[f32]) -> Vec<f32> {
+    assert_eq!(s_src.len(), csr.n_rows, "s_src is not [n_rows]");
+    assert_eq!(s_dst.len(), csr.n_cols, "s_dst is not [n_cols]");
+    let mut alpha = vec![0.0f32; csr.val.len()];
+    alpha_csr_rows(lvl, csr, s_src, s_dst, 0..csr.n_rows, &mut alpha);
+    alpha
+}
+
+/// Row-partitioned [`gat_alpha_csr`] on the global pool — the softmax
+/// is row-local, so the result is bitwise equal to serial.
+pub fn gat_alpha_csr_par(
+    lvl: SimdLevel,
+    csr: &Csr,
+    s_src: &[f32],
+    s_dst: &[f32],
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(s_src.len(), csr.n_rows, "s_src is not [n_rows]");
+    assert_eq!(s_dst.len(), csr.n_cols, "s_dst is not [n_cols]");
+    let n = csr.n_rows;
+    let mut alpha = vec![0.0f32; csr.val.len()];
+    let parts = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(parts);
+    let mut rest: &mut [f32] = &mut alpha;
+    let mut taken = 0usize;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts);
+    for part in 0..parts {
+        let lo = part * chunk;
+        let hi = ((part + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
+        }
+        // Edge ranges follow row boundaries, so chunks split cleanly.
+        let lo_e = csr.row_ptr[lo] as usize;
+        let hi_e = csr.row_ptr[hi] as usize;
+        let (alpha_chunk, r) = rest.split_at_mut(hi_e - lo_e);
+        rest = r;
+        taken = hi_e;
+        tasks.push(Box::new(move || {
+            alpha_csr_rows(lvl, csr, s_src, s_dst, lo..hi, alpha_chunk)
+        }));
+    }
+    debug_assert_eq!(taken, csr.val.len());
+    crate::exec::global_pool().run(tasks);
+    alpha
+}
+
+/// `alpha_out` covers exactly the edges of `rows` (chunk-local base).
+fn alpha_csr_rows(
+    lvl: SimdLevel,
+    csr: &Csr,
+    s_src: &[f32],
+    s_dst: &[f32],
+    rows: std::ops::Range<usize>,
+    alpha_out: &mut [f32],
+) {
+    let base = csr.row_ptr[rows.start] as usize;
+    for i in rows {
+        let si = s_src[i];
+        let lo = csr.row_ptr[i] as usize - base;
+        let hi = csr.row_ptr[i + 1] as usize - base;
+        let seg = &mut alpha_out[lo..hi];
+        for (a, e) in seg.iter_mut().zip(csr.row_range(i)) {
+            *a = leaky_relu(si + s_dst[csr.col_ind[e] as usize]);
+        }
+        row_softmax(lvl, seg);
+    }
+}
+
+/// GAT attention coefficients over a sampled (ELL) operand: the softmax
+/// runs over each row's surviving slots only (sampled renormalization);
+/// padding slots stay `0.0` so [`Ell::validate`]'s contract holds for
+/// the substituted plan.
+pub fn gat_alpha_ell(lvl: SimdLevel, ell: &Ell, s_src: &[f32], s_dst: &[f32]) -> Vec<f32> {
+    assert_eq!(s_src.len(), ell.n_rows, "s_src is not [n_rows]");
+    assert_eq!(s_dst.len(), ell.n_cols, "s_dst is not [n_cols]");
+    let mut alpha = vec![0.0f32; ell.val.len()];
+    alpha_ell_rows(lvl, ell, s_src, s_dst, 0..ell.n_rows, &mut alpha);
+    alpha
+}
+
+/// Row-partitioned [`gat_alpha_ell`] — bitwise equal to serial.
+pub fn gat_alpha_ell_par(
+    lvl: SimdLevel,
+    ell: &Ell,
+    s_src: &[f32],
+    s_dst: &[f32],
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(s_src.len(), ell.n_rows, "s_src is not [n_rows]");
+    assert_eq!(s_dst.len(), ell.n_cols, "s_dst is not [n_cols]");
+    let n = ell.n_rows;
+    let w = ell.width;
+    let mut alpha = vec![0.0f32; ell.val.len()];
+    let parts = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(parts);
+    let mut rest: &mut [f32] = &mut alpha;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts);
+    for part in 0..parts {
+        let lo = part * chunk;
+        let hi = ((part + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
+        }
+        let (alpha_chunk, r) = rest.split_at_mut((hi - lo) * w);
+        rest = r;
+        tasks.push(Box::new(move || {
+            alpha_ell_rows(lvl, ell, s_src, s_dst, lo..hi, alpha_chunk)
+        }));
+    }
+    crate::exec::global_pool().run(tasks);
+    alpha
+}
+
+/// `alpha_out` covers exactly the `width`-strided slots of `rows`.
+fn alpha_ell_rows(
+    lvl: SimdLevel,
+    ell: &Ell,
+    s_src: &[f32],
+    s_dst: &[f32],
+    rows: std::ops::Range<usize>,
+    alpha_out: &mut [f32],
+) {
+    let w = ell.width;
+    let lo_row = rows.start;
+    for i in rows {
+        let si = s_src[i];
+        let slots = ell.slots[i] as usize;
+        let lo = (i - lo_row) * w;
+        let seg = &mut alpha_out[lo..lo + slots];
+        let cols = &ell.col[i * w..i * w + slots];
+        for (a, &c) in seg.iter_mut().zip(cols.iter()) {
+            *a = leaky_relu(si + s_dst[c as usize]);
+        }
+        row_softmax(lvl, seg);
+    }
+}
+
+/// Segmented elementwise max over an exact operand (GraphSAGE
+/// max-pool): `out[i, :] = max_e b[col[e], :]`, `0.0` for edgeless
+/// rows. Values are ignored — the pool reads neighbor features only.
+/// Lanes are feature columns and the edge walk keeps storage order in
+/// every arm, so output is bitwise identical across dispatch levels.
+pub fn segmented_max_csr(lvl: SimdLevel, csr: &Csr, b: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), csr.n_cols * f, "B is not [n_cols, f]");
+    assert_eq!(out.len(), csr.n_rows * f, "out is not [n_rows, f]");
+    for i in 0..csr.n_rows {
+        let cols = &csr.col_ind[csr.row_range(i)];
+        max_row(lvl, cols, b, f, &mut out[i * f..(i + 1) * f]);
+    }
+}
+
+/// Row-partitioned [`segmented_max_csr`] — bitwise equal to serial.
+pub fn segmented_max_csr_par(
+    lvl: SimdLevel,
+    csr: &Csr,
+    b: &[f32],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(b.len(), csr.n_cols * f, "B is not [n_cols, f]");
+    assert_eq!(out.len(), csr.n_rows * f, "out is not [n_rows, f]");
+    let n = csr.n_rows;
+    let parts = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(parts);
+    let mut rest: &mut [f32] = out;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts);
+    for part in 0..parts {
+        let lo = part * chunk;
+        let hi = ((part + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
+        }
+        let (out_chunk, r) = rest.split_at_mut((hi - lo) * f);
+        rest = r;
+        tasks.push(Box::new(move || {
+            for i in lo..hi {
+                let cols = &csr.col_ind[csr.row_range(i)];
+                max_row(lvl, cols, b, f, &mut out_chunk[(i - lo) * f..(i - lo + 1) * f]);
+            }
+        }));
+    }
+    crate::exec::global_pool().run(tasks);
+}
+
+/// Segmented elementwise max over a sampled operand: the pool reads the
+/// surviving slots only.
+pub fn segmented_max_ell(lvl: SimdLevel, ell: &Ell, b: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), ell.n_cols * f, "B is not [n_cols, f]");
+    assert_eq!(out.len(), ell.n_rows * f, "out is not [n_rows, f]");
+    for i in 0..ell.n_rows {
+        let slots = ell.slots[i] as usize;
+        let cols = &ell.col[i * ell.width..i * ell.width + slots];
+        max_row(lvl, cols, b, f, &mut out[i * f..(i + 1) * f]);
+    }
+}
+
+/// Row-partitioned [`segmented_max_ell`] — bitwise equal to serial.
+pub fn segmented_max_ell_par(
+    lvl: SimdLevel,
+    ell: &Ell,
+    b: &[f32],
+    f: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(b.len(), ell.n_cols * f, "B is not [n_cols, f]");
+    assert_eq!(out.len(), ell.n_rows * f, "out is not [n_rows, f]");
+    let n = ell.n_rows;
+    let parts = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(parts);
+    let mut rest: &mut [f32] = out;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts);
+    for part in 0..parts {
+        let lo = part * chunk;
+        let hi = ((part + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
+        }
+        let (out_chunk, r) = rest.split_at_mut((hi - lo) * f);
+        rest = r;
+        tasks.push(Box::new(move || {
+            for i in lo..hi {
+                let slots = ell.slots[i] as usize;
+                let cols = &ell.col[i * ell.width..i * ell.width + slots];
+                max_row(lvl, cols, b, f, &mut out_chunk[(i - lo) * f..(i - lo + 1) * f]);
+            }
+        }));
+    }
+    crate::exec::global_pool().run(tasks);
+}
+
+/// One max-pool row: `out = max over cols of b[col, :]`, starting from
+/// the first neighbor's features (not `0.0`, so all-negative features
+/// pool correctly); edgeless rows emit `0.0`.
+#[inline]
+fn max_row(lvl: SimdLevel, cols: &[i32], b: &[f32], f: usize, out: &mut [f32]) {
+    let Some((&c0, rest)) = cols.split_first() else {
+        out.fill(0.0);
+        return;
+    };
+    out.copy_from_slice(&b[c0 as usize * f..c0 as usize * f + f]);
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `level()` only reports Avx2 after runtime detection.
+        SimdLevel::Avx2 => unsafe { max_row_avx2(rest, b, f, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `level()` only reports Neon after runtime detection.
+        SimdLevel::Neon => unsafe { max_row_neon(rest, b, f, out) },
+        _ => {
+            for &c in rest {
+                let brow = &b[c as usize * f..c as usize * f + f];
+                for (o, &x) in out.iter_mut().zip(brow.iter()) {
+                    if x > *o {
+                        *o = x;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_row_avx2(cols: &[i32], b: &[f32], f: usize, out: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let mut k = 0usize;
+    while k + 8 <= f {
+        let mut acc = _mm256_loadu_ps(out.as_ptr().add(k));
+        for &c in cols {
+            let x = _mm256_loadu_ps(b.as_ptr().add(c as usize * f + k));
+            // max_ps(x, acc) returns acc on ties and NaN inputs — the
+            // exact `if x > acc { x } else { acc }` scalar select.
+            acc = _mm256_max_ps(x, acc);
+        }
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), acc);
+        k += 8;
+    }
+    while k < f {
+        let mut acc = *out.get_unchecked(k);
+        for &c in cols {
+            let x = *b.get_unchecked(c as usize * f + k);
+            if x > acc {
+                acc = x;
+            }
+        }
+        *out.get_unchecked_mut(k) = acc;
+        k += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn max_row_neon(cols: &[i32], b: &[f32], f: usize, out: &mut [f32]) {
+    use core::arch::aarch64::*;
+    let mut k = 0usize;
+    while k + 4 <= f {
+        let mut acc = vld1q_f32(out.as_ptr().add(k));
+        for &c in cols {
+            let x = vld1q_f32(b.as_ptr().add(c as usize * f + k));
+            // compare-select (not fmax): exact scalar `>` semantics.
+            acc = vbslq_f32(vcgtq_f32(x, acc), x, acc);
+        }
+        vst1q_f32(out.as_mut_ptr().add(k), acc);
+        k += 4;
+    }
+    while k < f {
+        let mut acc = *out.get_unchecked(k);
+        for &c in cols {
+            let x = *b.get_unchecked(c as usize * f + k);
+            if x > acc {
+                acc = x;
+            }
+        }
+        *out.get_unchecked_mut(k) = acc;
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::sampling::{sample_ell, Strategy};
+    use crate::spmm::simd::level;
+
+    fn toy_csr() -> Csr {
+        // 4 rows: [0,1], [2], [], [0,1,2,3]
+        Csr {
+            n_rows: 4,
+            n_cols: 4,
+            row_ptr: vec![0, 2, 3, 3, 7],
+            col_ind: vec![0, 1, 2, 0, 1, 2, 3],
+            val: vec![1.0; 7],
+        }
+    }
+
+    #[test]
+    fn leaky_relu_reference_points() {
+        assert_eq!(leaky_relu(2.0), 2.0);
+        assert_eq!(leaky_relu(-1.0), -0.2);
+        assert_eq!(leaky_relu(0.0), 0.0);
+        assert_eq!(leaky_relu(-0.0).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_order_correctly() {
+        let mut s = vec![1.0f32, 2.0, 3.0, -1.0];
+        row_softmax(level(), &mut s);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+        assert!(s[2] > s[1] && s[1] > s[0] && s[0] > s[3]);
+        // Single-entry segment is exactly 1.
+        let mut one = vec![42.0f32];
+        row_softmax(level(), &mut one);
+        assert_eq!(one, vec![1.0]);
+        // Empty segment: no-op.
+        row_softmax(level(), &mut []);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_under_max_subtraction() {
+        // Huge logits that would overflow a naive exp: the max
+        // subtraction keeps every exponent ≤ 0.
+        let mut big = vec![500.0f32, 499.0, 120.0];
+        row_softmax(level(), &mut big);
+        assert!(big.iter().all(|a| a.is_finite()));
+        let sum: f32 = big.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        let mut small = vec![1.0f32, 0.0, -379.0];
+        row_softmax(level(), &mut small);
+        // Shifted inputs produce identical coefficients (e−m equal).
+        assert_eq!(big, small);
+    }
+
+    #[test]
+    fn attention_scores_par_matches_serial_bitwise() {
+        let mut rng = Pcg32::new(77);
+        let (n, d) = (403, 13);
+        let h: Vec<f32> = (0..n * d).map(|_| rng.f32() - 0.5).collect();
+        let a: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        let serial = attention_scores(&h, &a, n, d);
+        for threads in [1, 3, 8] {
+            let par = attention_scores_par(&h, &a, n, d, threads);
+            assert_eq!(serial, par, "t{threads}");
+        }
+    }
+
+    #[test]
+    fn alpha_csr_handles_empty_and_single_edge_rows() {
+        let g = toy_csr();
+        let s_src = vec![0.5f32, -1.0, 2.0, 0.0];
+        let s_dst = vec![0.1f32, 0.2, -0.3, 0.4];
+        let alpha = gat_alpha_csr(level(), &g, &s_src, &s_dst);
+        assert_eq!(alpha.len(), 7);
+        // Row 1 has one edge: α must be exactly 1.
+        assert_eq!(alpha[2], 1.0);
+        // Rows 0 and 3 sum to 1.
+        let r0: f32 = alpha[0..2].iter().sum();
+        let r3: f32 = alpha[3..7].iter().sum();
+        assert!((r0 - 1.0).abs() < 1e-6 && (r3 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alpha_par_and_ell_match_csr_on_unsampled_width() {
+        let mut rng = Pcg32::new(5);
+        let g = crate::gen::with_self_loops(&crate::gen::chung_lu(300, 9.0, 1.8, &mut rng));
+        let s_src: Vec<f32> = (0..g.n_rows).map(|_| rng.f32() - 0.5).collect();
+        let s_dst: Vec<f32> = (0..g.n_cols).map(|_| rng.f32() - 0.5).collect();
+        let serial = gat_alpha_csr(level(), &g, &s_src, &s_dst);
+        for threads in [1, 3, 8] {
+            let par = gat_alpha_csr_par(level(), &g, &s_src, &s_dst, threads);
+            assert_eq!(serial, par, "t{threads}");
+        }
+        // Width ≥ max degree keeps every edge: ELL α equals CSR α
+        // edge for edge.
+        let w = g.max_degree();
+        let ell = sample_ell(&g, w, Strategy::Aes);
+        let ea = gat_alpha_ell(level(), &ell, &s_src, &s_dst);
+        for i in 0..g.n_rows {
+            let s = ell.slots[i] as usize;
+            assert_eq!(s, g.row_nnz(i));
+            let base = g.row_ptr[i] as usize;
+            for k in 0..s {
+                assert_eq!(ea[i * w + k].to_bits(), serial[base + k].to_bits(), "row {i} slot {k}");
+            }
+        }
+        let eap = gat_alpha_ell_par(level(), &ell, &s_src, &s_dst, 5);
+        assert_eq!(ea, eap);
+    }
+
+    #[test]
+    fn max_pool_matches_reference_and_handles_empty_rows() {
+        let g = toy_csr();
+        let f = 3usize;
+        let mut rng = Pcg32::new(11);
+        let b: Vec<f32> = (0..g.n_cols * f).map(|_| rng.f32() - 0.9).collect();
+        let mut got = vec![7.0f32; g.n_rows * f];
+        segmented_max_csr(level(), &g, &b, f, &mut got);
+        // Empty row → 0.0 (not stale, not -inf).
+        assert_eq!(&got[2 * f..3 * f], &[0.0, 0.0, 0.0]);
+        // Reference per element.
+        for i in 0..g.n_rows {
+            for j in 0..f {
+                let want = g.row_range(i).fold(None, |m: Option<f32>, e| {
+                    let x = b[g.col_ind[e] as usize * f + j];
+                    Some(match m {
+                        Some(m) if m >= x => m,
+                        _ => x,
+                    })
+                });
+                assert_eq!(got[i * f + j], want.unwrap_or(0.0), "({i},{j})");
+            }
+        }
+        // Negative features must pool to a negative max, not 0.0.
+        assert!(got[..2 * f].iter().any(|&x| x < 0.0));
+    }
+
+    #[test]
+    fn max_pool_par_and_ell_variants_are_bitwise() {
+        let mut rng = Pcg32::new(23);
+        let g = crate::gen::with_self_loops(&crate::gen::chung_lu(250, 7.0, 1.9, &mut rng));
+        for f in [1usize, 3, 8, 11] {
+            let b: Vec<f32> = (0..g.n_cols * f).map(|_| rng.f32() - 0.5).collect();
+            let mut serial = vec![0.0f32; g.n_rows * f];
+            segmented_max_csr(level(), &g, &b, f, &mut serial);
+            for threads in [1, 4] {
+                let mut par = vec![9.0f32; g.n_rows * f];
+                segmented_max_csr_par(level(), &g, &b, f, &mut par, threads);
+                assert_eq!(serial, par, "f{f} t{threads}");
+            }
+            let ell = sample_ell(&g, g.max_degree(), Strategy::Aes);
+            let mut from_ell = vec![0.0f32; g.n_rows * f];
+            segmented_max_ell(level(), &ell, &b, f, &mut from_ell);
+            assert_eq!(serial, from_ell, "f{f} ell");
+            let mut from_ell_par = vec![0.0f32; g.n_rows * f];
+            segmented_max_ell_par(level(), &ell, &b, f, &mut from_ell_par, 4);
+            assert_eq!(serial, from_ell_par, "f{f} ell par");
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Model-zoo acceptance — the layer-graph IR served end to end.
+//! Runs with **no artifacts and no PJRT**: the seeded eval datasets are
+//! written as `.nbt` (weights for every served model) and coordinators
+//! serve on [`Backend::Host`].
+//!
+//! Covers:
+//! * every served model's exact fp32 route is bitwise-equal to its own
+//!   oracle (`eval::oracle_forward` interpreting the same IR program);
+//! * sharded serving is bitwise-equal to unsharded for every model —
+//!   the PR 3 guarantee extended across the zoo, including the
+//!   attention (ones-family) operand;
+//! * sampled and INT8-compute routes serve finite logits for non-GCN
+//!   models (the i8 staging fast path is GCN-only; other models take
+//!   the dequantized fp32 path);
+//! * publish-time weight validation: a mis-shaped tensor fails
+//!   `ModelStore::load` with the tensor named, instead of panicking
+//!   inside a worker's matmul (regression for the store schema check);
+//! * the store's model roster (what `status` advertises) lists exactly
+//!   the loaded models.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use aes_spmm::coordinator::{Coordinator, CoordinatorConfig, ModelStore, RouteKey};
+use aes_spmm::eval::{
+    oracle_forward, write_eval_datasets, EVAL_CLASSES, EVAL_FEATS, EVAL_HIDDEN,
+};
+use aes_spmm::graph::ShardSpec;
+use aes_spmm::quant::Precision;
+use aes_spmm::rng::Pcg32;
+use aes_spmm::runtime::{Backend, SERVED_MODELS};
+use aes_spmm::sampling::Strategy;
+use aes_spmm::tensor::{write_nbt, NbtFile, Tensor};
+
+fn eval_dir(tag: &str) -> (PathBuf, Vec<String>) {
+    let dir = std::env::temp_dir().join(format!("model_zoo_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let names = write_eval_datasets(&dir).unwrap();
+    (dir, names)
+}
+
+fn zoo_models() -> Vec<String> {
+    SERVED_MODELS.iter().map(|m| m.to_string()).collect()
+}
+
+fn route(model: &str, dataset: &str, width: Option<usize>, precision: Precision) -> RouteKey {
+    RouteKey {
+        model: model.to_string(),
+        dataset: dataset.to_string(),
+        width,
+        strategy: Strategy::Aes,
+        precision,
+    }
+}
+
+fn bits(coord: &Coordinator, key: &RouteKey) -> Vec<u32> {
+    coord
+        .route_logits(key)
+        .unwrap_or_else(|e| panic!("route {}: {e:#}", key.label()))
+        .as_f32()
+        .unwrap()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+/// Every served model's exact fp32 route through the real coordinator
+/// is bitwise-identical to the oracle interpreting the same IR program
+/// — and a sharded coordinator agrees with both, exact and sampled.
+#[test]
+fn every_model_serves_bitwise_against_oracle_and_shards() {
+    let (dir, names) = eval_dir("zoo");
+    let store = Arc::new(ModelStore::load(&dir, &names, &zoo_models()).unwrap());
+    let plain = Coordinator::start_with(
+        Backend::Host,
+        store.clone(),
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+    );
+    let shard_store = Arc::new(ModelStore::load(&dir, &names, &zoo_models()).unwrap());
+    let sharded = Coordinator::start_with(
+        Backend::Host,
+        shard_store,
+        CoordinatorConfig {
+            workers: 2,
+            sharding: Some(ShardSpec { shards: Some(3), budget_bytes: 32 << 20 }),
+            ..CoordinatorConfig::default()
+        },
+    );
+
+    for name in &names {
+        let ds = store.dataset(name).unwrap();
+        for &model in SERVED_MODELS {
+            let weights = store.weights(model, name).unwrap();
+            let oracle: Vec<u32> = oracle_forward(ds.as_ref(), weights.as_ref())
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+
+            let exact = route(model, name, None, Precision::F32);
+            let served = bits(&plain, &exact);
+            assert_eq!(
+                served,
+                oracle,
+                "{}: exact fp32 through the serving stack must equal the oracle",
+                exact.label()
+            );
+            assert_eq!(
+                bits(&sharded, &exact),
+                served,
+                "{}: sharded must be bitwise-equal to unsharded",
+                exact.label()
+            );
+
+            let sampled = route(model, name, Some(8), Precision::F32);
+            assert_eq!(
+                bits(&sharded, &sampled),
+                bits(&plain, &sampled),
+                "{}: sharded must be bitwise-equal to unsharded",
+                sampled.label()
+            );
+        }
+    }
+    plain.shutdown();
+    sharded.shutdown();
+}
+
+/// Quantized routes serve finite logits for every model: non-GCN
+/// i8-compute takes the dequantized fp32 path (the integer staging fast
+/// path applies only to the GCN program shape) rather than erroring.
+#[test]
+fn quantized_routes_serve_the_whole_zoo() {
+    let (dir, names) = eval_dir("quant");
+    let store = Arc::new(ModelStore::load(&dir, &names, &zoo_models()).unwrap());
+    let coord = Coordinator::start_with(
+        Backend::Host,
+        store,
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() },
+    );
+    let name = &names[0];
+    for &model in SERVED_MODELS {
+        for precision in [Precision::U8Device, Precision::I8Compute] {
+            let key = route(model, name, Some(8), precision);
+            let logits = coord
+                .route_logits(&key)
+                .unwrap_or_else(|e| panic!("route {}: {e:#}", key.label()));
+            let vals = logits.as_f32().unwrap();
+            assert!(!vals.is_empty(), "{}", key.label());
+            assert!(
+                vals.iter().all(|v| v.is_finite()),
+                "{}: non-finite logits",
+                key.label()
+            );
+        }
+    }
+    coord.shutdown();
+}
+
+/// A mis-shaped weight tensor fails at publish time (`ModelStore::load`)
+/// with the tensor and model named — never inside a worker.
+#[test]
+fn store_rejects_malformed_weights_naming_the_tensor() {
+    let (dir, names) = eval_dir("malformed");
+    let name = &names[0];
+    let (f, h, c) = (EVAL_FEATS, EVAL_HIDDEN, EVAL_CLASSES);
+    let mut rng = Pcg32::new(0xBAD);
+    let mut t = |shape: &[usize]| {
+        let len: usize = shape.iter().product();
+        let vals: Vec<f32> = (0..len).map(|_| rng.f32() - 0.5).collect();
+        Tensor::from_f32(shape, &vals)
+    };
+
+    // A GAT artifact whose destination attention vector is one entry
+    // too long for the layer's hidden dim.
+    let mut w = NbtFile::new();
+    w.insert("w0", t(&[f, h]));
+    w.insert("a0_src", t(&[h]));
+    w.insert("a0_dst", t(&[h + 1]));
+    w.insert("b0", t(&[h]));
+    w.insert("w1", t(&[h, c]));
+    w.insert("a1_src", t(&[c]));
+    w.insert("a1_dst", t(&[c]));
+    w.insert("b1", t(&[c]));
+    w.insert("ideal_acc", Tensor::from_f32(&[1], &[0.5]));
+    write_nbt(dir.join(format!("weights_gat_{name}.nbt")), &w).unwrap();
+
+    let err = ModelStore::load(&dir, &[name.clone()], &["gat".to_string()])
+        .err()
+        .expect("mis-shaped weights must fail at load time");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("a0_dst"), "error must name the tensor: {msg}");
+    assert!(msg.contains("gat"), "error must name the model: {msg}");
+
+    // The other models' untouched artifacts still load and validate.
+    ModelStore::load(&dir, &names, &["gcn".to_string(), "sage".to_string()]).unwrap();
+}
+
+/// The store's roster (what the wire `status` response advertises as
+/// `models`) lists exactly the loaded models, sorted.
+#[test]
+fn store_roster_reports_the_loaded_zoo() {
+    let (dir, names) = eval_dir("roster");
+    let store = ModelStore::load(&dir, &names, &zoo_models()).unwrap();
+    assert_eq!(store.model_names(), vec!["gat", "gcn", "sage"]);
+    let gcn_only = ModelStore::load(&dir, &names, &["gcn".to_string()]).unwrap();
+    assert_eq!(gcn_only.model_names(), vec!["gcn"]);
+}

@@ -25,7 +25,7 @@ use aes_spmm::exec::{
 use aes_spmm::graph::{coo_to_csr, Csr, EdgeOp, GraphDelta, ShardSpec, VersionedCsr};
 use aes_spmm::quant::{quantize, Precision, QuantParams};
 use aes_spmm::rng::Pcg32;
-use aes_spmm::runtime::Backend;
+use aes_spmm::runtime::{Backend, ModelVals};
 use aes_spmm::sampling::Strategy;
 use aes_spmm::tensor::{write_nbt, NbtFile, Tensor};
 
@@ -390,7 +390,8 @@ fn delta_flips_a_shard_between_width_branches() {
     let spec = ShardSpec::by_count(3);
     let layout = ShardLayout::of(&g, &spec);
     let cache: PlanCache<ShardKey, ShardUnit> = PlanCache::new(64);
-    let cr = |epoch| Some(ShardCacheRef { units: &cache, tag: "live", epoch });
+    let cr =
+        |epoch| Some(ShardCacheRef { units: &cache, tag: "live", epoch, vals: ModelVals::Gcn });
 
     let plan =
         ShardedPlan::prepare_with_bounds(&g, layout.bounds(), Some(8), Strategy::Aes, FEATS, cr(0));

@@ -1,0 +1,194 @@
+//! Segmented-reduction conformance at the public kernel API — the
+//! attention/max-pool counterparts of `tests/simd_kernels.rs`, pinning
+//! the docs/models.md contracts from outside the crate:
+//!
+//! * every vector arm of the GAT softmax pipeline and the SAGE max-pool
+//!   is **bitwise-identical** to the scalar arm (remainder widths,
+//!   empty rows, single-edge rows, mega-rows included), so runtime
+//!   dispatch can never move an attention coefficient;
+//! * the segmented softmax is max-subtracted: saturating logits stay
+//!   finite and shift-invariant;
+//! * row partitioning (`_par`) composes bitwise — the property the
+//!   sharded execution path inherits, since shard units cut on row
+//!   boundaries exactly like the `_par` chunks here.
+//!
+//! The grid-level counterpart (forced-scalar runs of the whole suite)
+//! is CI's `scalar` job: `AES_SPMM_FORCE_SCALAR=1` pins `simd::level()`
+//! process-wide, and the per-model bitwise grid rows prove the scalar
+//! configuration serves identical logits.
+
+use aes_spmm::gen;
+use aes_spmm::graph::Csr;
+use aes_spmm::rng::Pcg32;
+use aes_spmm::sampling::{sample_ell, Strategy};
+use aes_spmm::spmm::{
+    attention_scores, attention_scores_par, gat_alpha_csr, gat_alpha_csr_par, gat_alpha_ell,
+    gat_alpha_ell_par, row_softmax, segmented_max_csr, segmented_max_csr_par, segmented_max_ell,
+    segmented_max_ell_par, simd,
+};
+
+fn graph_and_scores(n: usize, deg: f64, seed: u64) -> (Csr, Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg32::new(seed);
+    let g = gen::with_self_loops(&gen::chung_lu(n, deg, 1.9, &mut rng));
+    let s_src: Vec<f32> = (0..g.n_rows).map(|_| rng.f32() - 0.5).collect();
+    let s_dst: Vec<f32> = (0..g.n_cols).map(|_| rng.f32() - 0.5).collect();
+    (g, s_src, s_dst)
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} differs ({x} vs {y})");
+    }
+}
+
+/// Empty segments are a no-op, single-edge segments are exactly 1.0
+/// (not merely close), and saturating logits survive through the max
+/// subtraction: `exp(e − m) ≤ 1` always, so a row of ±1e4 logits stays
+/// finite and equals its shifted sibling bit for bit.
+#[test]
+fn softmax_segments_are_stable_at_the_edges() {
+    let lvl = simd::level();
+    row_softmax(lvl, &mut []);
+    let mut one = vec![-3.5f32];
+    row_softmax(lvl, &mut one);
+    assert_eq!(one[0].to_bits(), 1.0f32.to_bits());
+
+    // Logits a naive exp would overflow (exp(1e4) = inf in f32).
+    let mut big = vec![1.0e4f32, 9.999e3, 37.0, -1.0e4];
+    row_softmax(lvl, &mut big);
+    assert!(big.iter().all(|a| a.is_finite() && *a >= 0.0), "{big:?}");
+    let sum: f32 = big.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+    // Shift invariance is exact: e − m sees identical differences.
+    let mut shifted = vec![0.0f32, -1.0, -9.963e3, -2.0e4];
+    row_softmax(lvl, &mut shifted);
+    assert_bitwise(&big, &shifted, "shifted logits");
+}
+
+/// Scalar vs the detected arm on the full α pipeline (scores → logits →
+/// softmax), CSR and ELL, plus `_par` at several thread counts — all
+/// bitwise, on a graph that keeps empty and single-edge rows.
+#[test]
+fn alpha_pipeline_dispatches_bitwise_with_degenerate_rows() {
+    let lvl = simd::level();
+    // Low average degree leaves isolated (empty) and degree-1 rows.
+    let (g, s_src, s_dst) = graph_and_scores(350, 1.3, 901);
+    assert!((0..g.n_rows).any(|i| g.row_nnz(i) == 0), "fixture lost its empty rows");
+    assert!((0..g.n_rows).any(|i| g.row_nnz(i) == 1), "fixture lost its single-edge rows");
+
+    let scalar = gat_alpha_csr(simd::SimdLevel::Scalar, &g, &s_src, &s_dst);
+    let vector = gat_alpha_csr(lvl, &g, &s_src, &s_dst);
+    assert_bitwise(&scalar, &vector, "alpha csr");
+    // Single-edge rows renormalize to exactly 1.
+    for i in 0..g.n_rows {
+        if g.row_nnz(i) == 1 {
+            assert_eq!(scalar[g.row_ptr[i] as usize].to_bits(), 1.0f32.to_bits(), "row {i}");
+        }
+    }
+    for threads in [1usize, 3, 8] {
+        let par = gat_alpha_csr_par(lvl, &g, &s_src, &s_dst, threads);
+        assert_bitwise(&scalar, &par, &format!("alpha csr par t={threads}"));
+    }
+
+    for w in [4usize, 16] {
+        let ell = sample_ell(&g, w, Strategy::Aes);
+        let scalar = gat_alpha_ell(simd::SimdLevel::Scalar, &ell, &s_src, &s_dst);
+        let vector = gat_alpha_ell(lvl, &ell, &s_src, &s_dst);
+        assert_bitwise(&scalar, &vector, &format!("alpha ell w={w}"));
+        let par = gat_alpha_ell_par(lvl, &ell, &s_src, &s_dst, 5);
+        assert_bitwise(&scalar, &par, &format!("alpha ell par w={w}"));
+        // Padding slots stay exactly 0.0 (the Ell::validate contract
+        // for the substituted plan).
+        for i in 0..ell.n_rows {
+            for k in ell.slots[i] as usize..w {
+                assert_eq!(scalar[i * w + k].to_bits(), 0.0f32.to_bits(), "pad ({i},{k})");
+            }
+        }
+    }
+}
+
+/// Per-node attention scores dispatch and thread bitwise across feature
+/// widths that exercise full vector blocks, remainder lanes, and the
+/// width-1 degenerate case.
+#[test]
+fn attention_scores_thread_bitwise_across_widths() {
+    let mut rng = Pcg32::new(77);
+    for d in [1usize, 3, 7, 8, 9, 16, 33] {
+        let n = 217;
+        let h: Vec<f32> = (0..n * d).map(|_| rng.f32() - 0.5).collect();
+        let a: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        let serial = attention_scores(&h, &a, n, d);
+        for threads in [1usize, 4, 9] {
+            let par = attention_scores_par(&h, &a, n, d, threads);
+            assert_bitwise(&serial, &par, &format!("scores d={d} t={threads}"));
+        }
+    }
+}
+
+/// The SAGE max-pool dispatches bitwise across remainder feature
+/// widths on CSR, ELL, and both `_par` variants; empty rows emit
+/// exactly 0.0 in every arm.
+#[test]
+fn max_pool_dispatches_bitwise_across_widths() {
+    let lvl = simd::level();
+    let mut rng = Pcg32::new(31);
+    let g = gen::with_self_loops(&gen::chung_lu(200, 7.0, 1.9, &mut rng));
+    for f in [1usize, 3, 7, 8, 9, 16, 33] {
+        let b: Vec<f32> = (0..g.n_cols * f).map(|_| rng.f32() - 0.5).collect();
+        let mut scalar = vec![0.0f32; g.n_rows * f];
+        let mut vector = vec![9.0f32; g.n_rows * f];
+        segmented_max_csr(simd::SimdLevel::Scalar, &g, &b, f, &mut scalar);
+        segmented_max_csr(lvl, &g, &b, f, &mut vector);
+        assert_bitwise(&scalar, &vector, &format!("max csr f={f}"));
+        let mut par = vec![9.0f32; g.n_rows * f];
+        segmented_max_csr_par(lvl, &g, &b, f, &mut par, 5);
+        assert_bitwise(&scalar, &par, &format!("max csr par f={f}"));
+
+        let ell = sample_ell(&g, 8, Strategy::Aes);
+        let mut scalar = vec![0.0f32; g.n_rows * f];
+        let mut vector = vec![9.0f32; g.n_rows * f];
+        segmented_max_ell(simd::SimdLevel::Scalar, &ell, &b, f, &mut scalar);
+        segmented_max_ell(lvl, &ell, &b, f, &mut vector);
+        assert_bitwise(&scalar, &vector, &format!("max ell f={f}"));
+        let mut par = vec![9.0f32; g.n_rows * f];
+        segmented_max_ell_par(lvl, &ell, &b, f, &mut par, 3);
+        assert_bitwise(&scalar, &par, &format!("max ell par f={f}"));
+    }
+}
+
+/// One row holding 40_000 edges — a segment longer than any staging
+/// tile or flush interval in the SpMM core. The softmax stays a single
+/// storage-order pass: scalar and vector arms agree bitwise, the
+/// coefficients are a probability vector despite 40k-term fp32 sums.
+#[test]
+fn mega_row_softmax_is_dispatch_invariant_and_normalized() {
+    let lvl = simd::level();
+    let nnz = 40_000usize;
+    let n_cols = 512usize;
+    let mut rng = Pcg32::new(402);
+    let col_ind: Vec<i32> = (0..nnz).map(|_| rng.usize_below(n_cols) as i32).collect();
+    let g = Csr::new(1, n_cols, vec![0, nnz as i32], col_ind, vec![1.0; nnz]).unwrap();
+    let s_src = vec![0.25f32];
+    let s_dst: Vec<f32> = (0..n_cols).map(|_| 8.0 * (rng.f32() - 0.5)).collect();
+
+    let scalar = gat_alpha_csr(simd::SimdLevel::Scalar, &g, &s_src, &s_dst);
+    let vector = gat_alpha_csr(lvl, &g, &s_src, &s_dst);
+    assert_bitwise(&scalar, &vector, "mega-row alpha");
+    for threads in [2usize, 7] {
+        let par = gat_alpha_csr_par(lvl, &g, &s_src, &s_dst, threads);
+        assert_bitwise(&scalar, &par, &format!("mega-row alpha par t={threads}"));
+    }
+    assert!(scalar.iter().all(|a| a.is_finite() && *a >= 0.0));
+    let sum: f64 = scalar.iter().map(|&a| a as f64).sum();
+    assert!((sum - 1.0).abs() < 1e-2, "mega-row alpha sum {sum}");
+
+    // The max-pool over the same segment dispatches bitwise too.
+    let f = 9usize;
+    let b: Vec<f32> = (0..n_cols * f).map(|_| rng.f32() - 0.5).collect();
+    let mut s = vec![0.0f32; f];
+    let mut v = vec![0.0f32; f];
+    segmented_max_csr(simd::SimdLevel::Scalar, &g, &b, f, &mut s);
+    segmented_max_csr(lvl, &g, &b, f, &mut v);
+    assert_bitwise(&s, &v, "mega-row max pool");
+}
